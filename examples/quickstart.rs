@@ -1,0 +1,95 @@
+//! Quickstart — the end-to-end driver proving all three layers compose:
+//!
+//! 1. the **compiler** lowers the Fig. 6a network onto the Fig. 6d
+//!    cluster (placement -> SPM allocation -> async schedule -> CSR
+//!    programs);
+//! 2. the **cycle-accurate simulator** executes the multi-core program,
+//!    producing both cycle counts and real int8 tensors;
+//! 3. the **PJRT runtime** executes the AOT JAX/Pallas artifact
+//!    (`make artifacts`) of the same network and the outputs are
+//!    compared **bit-for-bit**;
+//! 4. area / energy / power reports are printed from the same run.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::{ensure, Context, Result};
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::energy;
+use snax::metrics::report::{cycles, pct};
+use snax::models;
+use snax::runtime::{ArtifactStore, Tensor};
+use snax::sim::Cluster;
+
+fn main() -> Result<()> {
+    // --- 1. compile ---------------------------------------------------------
+    let cfg = ClusterConfig::fig6d();
+    let graph = models::fig6a_graph();
+    let options = CompileOptions::pipelined().with_inferences(8);
+    let compiled = compile(&graph, &cfg, &options)?;
+    println!(
+        "compiled '{}' for '{}': {} instrs on {} cores, {} KiB SPM used, {:?} weights",
+        graph.name,
+        cfg.name,
+        compiled.program.n_instrs(),
+        compiled.program.n_cores(),
+        compiled.alloc.spm_used / 1024,
+        compiled.alloc.weight_mode,
+    );
+
+    // --- 2. simulate --------------------------------------------------------
+    let report = Cluster::new(&cfg).run(&compiled.program)?;
+    let per_inf = report.total_cycles / options.n_inferences as u64;
+    println!(
+        "pipelined: {} cycles total, {} cycles/inference = {:.1} us @ {} MHz",
+        cycles(report.total_cycles),
+        cycles(per_inf),
+        per_inf as f64 / cfg.freq_mhz as f64,
+        cfg.freq_mhz
+    );
+    for u in &report.units {
+        println!(
+            "  {:>9}: util {:>6} over {} jobs",
+            u.name,
+            pct(u.utilization()),
+            u.jobs
+        );
+    }
+
+    // --- 3. verify against the AOT JAX/Pallas artifact ----------------------
+    let golden = models::evaluate(&graph)?;
+    for inf in 0..options.n_inferences as u64 {
+        ensure!(
+            compiled.read_output(&report, 0, inf) == golden[0],
+            "simulated inference {inf} diverged from the golden evaluator"
+        );
+    }
+    let store = ArtifactStore::open_default()
+        .context("artifacts missing — run `make artifacts` first")?;
+    let x = Tensor::from_i8(
+        &[1, 32, 32, 16],
+        &snax::models::lcg::lcg_i8(1000, 32 * 32 * 16),
+    );
+    let artifact_out = store.execute("fig6a", &[x])?;
+    ensure!(
+        artifact_out[0].data == golden[0][..artifact_out[0].data.len()],
+        "PJRT artifact output diverged"
+    );
+    println!(
+        "functional check: simulator == golden == PJRT artifact ({} logit bytes) ✓",
+        artifact_out[0].data.len()
+    );
+
+    // --- 4. reports ----------------------------------------------------------
+    let area = energy::area(&cfg);
+    let e = energy::energy(&report, &cfg);
+    println!(
+        "area: {:.3} mm^2   energy/inference: {:.3} uJ   avg power: {:.0} mW",
+        area.total(),
+        e.total_uj() / options.n_inferences as f64,
+        e.avg_power_mw()
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Roofline sweep (paper §VI-D / Fig. 10): tiled matrix multiplications
+//! at sweeping arithmetic intensity, SNAX hybrid-coupled schedule vs the
+//! conventional serialized baseline, printed as the Fig. 10 series.
+//!
+//! Run: `cargo run --release --example roofline_sweep`
+
+use anyhow::Result;
+
+use snax::config::ClusterConfig;
+use snax::metrics::report::{pct, table};
+use snax::metrics::roofline::{
+    axi_bytes_per_cycle, peak_ops_per_cycle, ridge_intensity, RooflinePoint,
+};
+use snax::models::matmul::{overlapped_program, serialized_program, MatmulWorkload};
+use snax::sim::Cluster;
+
+fn main() -> Result<()> {
+    let cfg = ClusterConfig::fig6c();
+    println!(
+        "peak = {:.0} int8 ops/cycle, AXI = {:.0} B/cycle, ridge @ {:.0} ops/B",
+        peak_ops_per_cycle(&cfg),
+        axi_bytes_per_cycle(&cfg),
+        ridge_intensity(&cfg)
+    );
+    let mut rows = Vec::new();
+    for tile in [16u64, 24, 32, 48, 64, 80, 96, 104] {
+        let w = MatmulWorkload::square(tile, 8);
+        let snax_r = Cluster::new(&cfg).run(&overlapped_program(&cfg, w)?)?;
+        let base_r = Cluster::new(&cfg).run(&serialized_program(&cfg, w)?)?;
+        let ps = RooflinePoint::from_run(&cfg, &w, &snax_r);
+        let pb = RooflinePoint::from_run(&cfg, &w, &base_r);
+        rows.push(vec![
+            format!("{tile}"),
+            format!("{:.2}", ps.intensity),
+            format!("{:.1}", ps.achieved),
+            pct(ps.utilization()),
+            format!("{:.1}", pb.achieved),
+            pct(pb.utilization()),
+        ]);
+    }
+    println!(
+        "{}",
+        table(
+            &["tile", "ops/B", "SNAX ops/cyc", "SNAX util", "base ops/cyc", "base util"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT compile path: lower every registered entry point to HLO **text**
+and write a manifest the Rust runtime uses to marshal literals.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published ``xla``
+crate) rejects (``proto.id() <= INT_MAX``). The text parser reassigns
+ids and round-trips cleanly — see /opt/xla-example/README.md.
+
+This runs ONCE at build time (``make artifacts``); Python is never on
+the Rust request path.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only name,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text.
+
+    ``as_hlo_text(True)`` sets print_large_constants: the default printer
+    elides big literals as ``constant({...})``, which the HLO text parser
+    silently accepts and zero-fills — corrupting every baked weight
+    tensor. The assertion guards against regressions.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    assert "constant({...})" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_entry(name: str):
+    fn, specs = model.ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_avals = jax.eval_shape(fn, *specs)
+    if not isinstance(out_avals, (list, tuple)):
+        out_avals = (out_avals,)
+    meta = {
+        "name": name,
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in out_avals
+        ],
+        # Lowered with return_tuple=True: rust must unwrap a 1-tuple (or
+        # n-tuple) from the executable's single output literal.
+        "return_tuple": True,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+
+    names = list(model.ENTRIES) if args.only is None else args.only.split(",")
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name in names:
+        text, meta = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest ({len(manifest)} entries) -> {man_path}")
+
+
+if __name__ == "__main__":
+    main()

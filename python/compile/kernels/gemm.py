@@ -1,0 +1,119 @@
+"""Pallas int8 GeMM kernel — the functional model of the SNAX GeMM
+accelerator (OpenGeMM [25]): a 512-PE array that consumes one 8x8x8
+int8 matrix-multiply per cycle with int32 accumulation.
+
+Hardware <-> Pallas mapping (DESIGN.md §Hardware-Adaptation):
+
+  * 8x8x8 PE array step        -> (TM, TN, TK)-tile `dot_general` with
+                                  `preferred_element_type=int32`; the
+                                  default tile is an integer multiple of
+                                  the 8x8x8 hardware step, MXU-aligned.
+  * streamer nested-loop AGU   -> `BlockSpec.index_map` over the
+                                  (m, n, k) grid.
+  * SPM double buffering       -> the sequential Pallas grid pipeline
+                                  (k-innermost revolving accumulator).
+  * accumulator registers      -> VMEM scratch `acc_ref` (int32).
+
+VMEM footprint per grid step (documented for the DESIGN.md §Perf
+estimate): TM*TK + TK*TN bytes of int8 operands + TM*TN*4 bytes of
+int32 accumulator. With the default TM=TN=TK=32 that is 2 KiB + 4 KiB,
+far below the ~16 MiB VMEM budget; larger tiles trade VMEM for fewer
+grid steps.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact runs
+on the Rust PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# The hardware step size of the accelerator's PE array: one 8x8x8
+# matmul per cycle (512 MACs).
+HW_M, HW_N, HW_K = 8, 8, 8
+
+# Default Pallas tile: a 4x4x4 super-tile of hardware steps.
+DEF_TM, DEF_TN, DEF_TK = 32, 32, 32
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """Grid = (M/TM, N/TN, K/TK), K innermost. acc_ref: int32 VMEM scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+def _pick_tile(dim: int, pref: int, hw: int) -> int:
+    """Largest tile <= pref that divides dim and is a multiple of hw."""
+    if dim % hw != 0:
+        raise ValueError(f"dimension {dim} not a multiple of the {hw}-wide PE array")
+    t = min(pref, dim)
+    while dim % t != 0 or t % hw != 0:
+        t -= hw
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    tm: int = DEF_TM,
+    tn: int = DEF_TN,
+    tk: int = DEF_TK,
+) -> jax.Array:
+    """int8[M,K] x int8[K,N] -> int32[M,N] via the Pallas tiled kernel.
+
+    M, N, K must be multiples of 8 (the PE-array step), matching the
+    hardware constraint the SNAX compiler's tiling pass enforces.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+
+    tm = _pick_tile(m, tm, HW_M)
+    tn = _pick_tile(n, tn, HW_N)
+    tk = _pick_tile(k, tk, HW_K)
+    n_k = k // tk
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=(m // tm, n // tn, n_k),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.int32)],
+        interpret=True,
+    )(a, b)
+
+
+def gemm_requant(
+    a: jax.Array, b: jax.Array, shift: int, tm: int = DEF_TM, tn: int = DEF_TN, tk: int = DEF_TK
+) -> jax.Array:
+    """GeMM followed by the accelerator's output requantizer (int8 out)."""
+    acc = gemm(a, b, tm, tn, tk)
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)

@@ -1,0 +1,71 @@
+"""Pallas max-pool kernel — functional model of the SNAX max-pool
+accelerator: 8 parallel max-pool lanes with configurable kernel size and
+512-bit input/output streaming bandwidth.
+
+Hardware <-> Pallas mapping:
+
+  * 8 parallel channel lanes  -> channel-blocked grid (C is tiled in
+                                 multiples of 8, one lane per channel).
+  * streamer window walk      -> unrolled (kh, kw) strided-slice maxes
+                                 inside the kernel; the BlockSpec keeps a
+                                 full input row-tile resident, exactly
+                                 like the accelerator's line FIFO.
+
+VMEM per step: (k + (TH-1)*s) * W * C_TILE input bytes + TH * Wo * C_TILE
+output bytes — for the paper's 2x2 pool on 32x32x16 this is ~2 KiB.
+
+`interpret=True` so the artifact lowers to plain HLO runnable on the
+CPU PJRT client from Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 8  # hardware channel lanes
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k: int, s: int):
+    """One (batch, channel-block) slab: pool full H x W for C_TILE lanes."""
+    x = x_ref[...]  # [1, H, W, CT] int8
+    _, h, w, ct = x.shape
+    ho = (h - k) // s + 1
+    wo = (w - k) // s + 1
+    acc = None
+    # The accelerator walks the k*k window with its nested-loop streamer;
+    # unrolled here (k is a compile-time CSR parameter in HW too).
+    for i in range(k):
+        for j in range(k):
+            sl = jax.lax.slice(
+                x,
+                (0, i, j, 0),
+                (1, i + s * (ho - 1) + 1, j + s * (wo - 1) + 1, ct),
+                (1, s, s, 1),
+            )
+            acc = sl if acc is None else jnp.maximum(acc, sl)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "s"))
+def maxpool2d(x: jax.Array, k: int = 2, s: int | None = None) -> jax.Array:
+    """NHWC int8 max-pool. C must be a multiple of 8 (the lane count)."""
+    s = s or k
+    n, h, w, c = x.shape
+    assert x.dtype == jnp.int8
+    if c % LANES != 0:
+        raise ValueError(f"C={c} not a multiple of the {LANES} pool lanes")
+    ho = (h - k) // s + 1
+    wo = (w - k) // s + 1
+    ct = LANES
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, k=k, s=s),
+        grid=(n, c // ct),
+        in_specs=[pl.BlockSpec((1, h, w, ct), lambda b, cc: (b, 0, 0, cc))],
+        out_specs=pl.BlockSpec((1, ho, wo, ct), lambda b, cc: (b, 0, 0, cc)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), jnp.int8),
+        interpret=True,
+    )(x)

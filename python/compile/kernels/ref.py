@@ -1,0 +1,168 @@
+"""Pure-jnp correctness oracles for the SNAX accelerator datapaths.
+
+These are the golden functional models the Pallas kernels (L1) and the
+Rust simulator datapath (L3, `sim/accel/*`) are checked against.
+
+All arithmetic follows the paper's 8-bit precision setting: int8 inputs,
+int32 accumulation (the GeMM accelerator's 512-PE array accumulates in
+wide registers), and shift-based requantization back to int8 between
+layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """int8[M,K] x int8[K,N] -> int32[M,N], exact accumulation."""
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8, (a.dtype, b.dtype)
+    return jax.lax.dot_general(
+        a,
+        b,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def requantize_ref(acc: jax.Array, shift: int) -> jax.Array:
+    """int32 accumulator -> int8 activation via arithmetic right shift.
+
+    Matches the simulator's requantizer: round-to-nearest (add half) then
+    saturate. `shift` is a compile-time constant per layer.
+    """
+    assert acc.dtype == jnp.int32
+    if shift > 0:
+        rounded = (acc + (1 << (shift - 1))) >> shift
+    else:
+        rounded = acc
+    return jnp.clip(rounded, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def relu_ref(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0)
+
+
+def im2col_ref(
+    x: jax.Array, kh: int, kw: int, stride: int, pad: int
+) -> jax.Array:
+    """NHWC int8 -> [N*Ho*Wo, kh*kw*C] patch matrix (the streamer's view).
+
+    This mirrors how the SNAX data streamers feed the GeMM accelerator:
+    nested-for-loop address generation turns a convolution into a matrix
+    multiplication without an explicit data copy in hardware.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(
+        x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), constant_values=0
+    )
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                jax.lax.slice(
+                    xp,
+                    (0, i, j, 0),
+                    (n, i + stride * (ho - 1) + 1, j + stride * (wo - 1) + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    # [N, Ho, Wo, kh*kw, C] -> [N*Ho*Wo, kh*kw*C]
+    stacked = jnp.stack(patches, axis=3)
+    return stacked.reshape(n * ho * wo, kh * kw * c)
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0
+) -> jax.Array:
+    """NHWC int8 conv, weights HWIO int8, int32 output (no requant)."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def conv2d_im2col_ref(
+    x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0
+) -> jax.Array:
+    """Conv as im2col + GeMM — the path the accelerator actually executes."""
+    kh, kw, cin, cout = w.shape
+    n, h, wi, _ = x.shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wi + 2 * pad - kw) // stride + 1
+    patches = im2col_ref(x, kh, kw, stride, pad)
+    acc = gemm_ref(patches, w.reshape(kh * kw * cin, cout))
+    return acc.reshape(n, ho, wo, cout)
+
+
+def maxpool2d_ref(x: jax.Array, k: int = 2, stride: int | None = None) -> jax.Array:
+    """NHWC int8 max-pooling, kernel k x k."""
+    assert x.dtype == jnp.int8
+    s = stride or k
+    return jax.lax.reduce_window(
+        x,
+        jnp.int8(INT8_MIN),
+        jax.lax.max,
+        window_dimensions=(1, k, k, 1),
+        window_strides=(1, s, s, 1),
+        padding="VALID",
+    )
+
+
+def fc_ref(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """int8[M,K] x int8[K,N] + int32 bias -> int32[M,N]."""
+    acc = gemm_ref(x, w)
+    if b is not None:
+        assert b.dtype == jnp.int32
+        acc = acc + b[None, :]
+    return acc
+
+
+def avgpool_global_ref(x: jax.Array) -> jax.Array:
+    """Global average pool NHWC int8 -> int8[N, C] (ResNet-8 head).
+
+    Integer average: sum in int32, divide by count with round-to-nearest.
+    """
+    n, h, w, c = x.shape
+    s = jnp.sum(x.astype(jnp.int32), axis=(1, 2))
+    cnt = h * w
+    return jnp.clip((s + cnt // 2) // cnt, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def lcg_np(seed: int, n: int):
+    """Deterministic int8 stream shared bit-exactly with the Rust side.
+
+    The Rust twin lives in `rust/src/models/lcg.rs`. Keep both in sync:
+    state' = state * 6364136223846793005 + 1442695040888963407 (u64 wrap),
+    output byte = (state' >> 33) & 0xff as i8, then halve (truncating
+    toward zero) into [-63, 63] to keep deep-net accumulators tame.
+
+    Returns numpy (not jax) so callers may cache results without leaking
+    tracers when invoked under a jit trace.
+    """
+    import numpy as np
+
+    out = np.empty(n, dtype=np.int64)
+    state = seed & 0xFFFFFFFFFFFFFFFF
+    for i in range(n):
+        state = (state * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        byte = (state >> 33) & 0xFF
+        v = byte - 256 if byte >= 128 else byte
+        out[i] = -((-v) // 2) if v < 0 else v // 2  # trunc like Rust i32 `/`
+    return out.astype(np.int8)
+
+
+def lcg_i8(seed: int, n: int) -> jax.Array:
+    """jax-array view of `lcg_np` (see its docstring for the spec)."""
+    return jnp.asarray(lcg_np(seed, n))

@@ -1,0 +1,248 @@
+"""L2 — JAX workload graphs for the SNAX reproduction.
+
+Every tensor op that the SNAX cluster accelerates is expressed through
+the L1 Pallas kernels (`kernels.gemm`, `kernels.maxpool`); everything
+else (im2col view, requantize, relu, residual add) is the lightweight
+glue the RISC-V cores / streamers provide in hardware.
+
+Three workloads, mirroring the paper's evaluation:
+
+  * ``fig6a``   — the paper's artificial network (Fig. 6a): conv ->
+                  max-pool -> fully-connected, all 8-bit.
+  * ``dae``     — MLPerf Tiny v1.0 Deep AutoEncoder (ToyADMOS):
+                  640 -> 128x4 -> 8 -> 128x4 -> 640 dense stack.
+  * ``resnet8`` — MLPerf Tiny v1.0 ResNet-8 (CIFAR-10 class): 3 stacks
+                  of residual blocks at 16/32/64 channels.
+
+Weights are synthetic but **deterministic and shared bit-exactly with
+the Rust side** via the LCG in `kernels.ref.lcg_i8` (Rust twin:
+`rust/src/models/lcg.rs`); layer seeds and requant shifts are part of
+the spec below (Rust twin: `rust/src/models/specs.rs`). The paper's
+claims are latency/energy, not accuracy, so trained weights are not
+required — but functional equivalence between the PJRT artifact and the
+simulator datapath is checked bit-exactly in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as G
+from .kernels import maxpool as MP
+from .kernels import ref as R
+
+# ---------------------------------------------------------------------------
+# Shared spec constants (mirrored in rust/src/models/specs.rs)
+# ---------------------------------------------------------------------------
+
+NET_FIG6A = 1
+NET_DAE = 2
+NET_RESNET8 = 3
+
+
+def layer_seed(net_id: int, layer_idx: int) -> int:
+    return net_id * 1000 + layer_idx
+
+
+def input_seed(net_id: int) -> int:
+    return net_id * 1000
+
+
+def shift_for_k(k: int) -> int:
+    """Requant shift per layer: floor(log2(K))/2 + 5.
+
+    Chosen so int8 activation scale is roughly preserved layer-to-layer
+    (accumulator std grows with sqrt(K) for random int8 operands). The
+    exact value is part of the spec — the Rust datapath twin
+    (`rust/src/models/specs.rs`) uses the same formula, so outputs are
+    bit-exact regardless.
+    """
+    return (k.bit_length() - 1) // 2 + 5
+
+
+@functools.lru_cache(maxsize=None)
+def _w_np(seed: int, *shape: int):
+    n = 1
+    for s in shape:
+        n *= s
+    return R.lcg_np(seed, n).reshape(shape)
+
+
+def _w(seed: int, *shape: int) -> jax.Array:
+    # The cache holds numpy only; the jax conversion happens per call so a
+    # jit trace never leaks tracers into the cache.
+    return jnp.asarray(_w_np(seed, *shape))
+
+
+# ---------------------------------------------------------------------------
+# Layer helpers (all int8 in / int8 out unless noted)
+# ---------------------------------------------------------------------------
+
+
+def dense(x: jax.Array, seed: int, n_out: int, relu: bool = True) -> jax.Array:
+    """int8[M,K] -> int8[M,n_out] through the Pallas GeMM + requant."""
+    k = x.shape[1]
+    w = _w(seed, k, n_out)
+    y = G.gemm_requant(x, w, shift_for_k(k))
+    return jnp.maximum(y, 0) if relu else y
+
+
+def dense_logits(x: jax.Array, seed: int, n_out: int) -> jax.Array:
+    """Final layer: int32 logits, no requant."""
+    k = x.shape[1]
+    w = _w(seed, k, n_out)
+    return G.gemm(x, w)
+
+
+def conv(
+    x: jax.Array,
+    seed: int,
+    cout: int,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    pad: int = 1,
+    relu: bool = True,
+) -> jax.Array:
+    """int8 NHWC conv as im2col + Pallas GeMM (the accelerator path)."""
+    n, h, wdim, cin = x.shape
+    kdim = kh * kw * cin
+    w = _w(seed, kdim, cout)
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wdim + 2 * pad - kw) // stride + 1
+    patches = R.im2col_ref(x, kh, kw, stride, pad)  # [N*Ho*Wo, kdim]
+    y = G.gemm_requant(patches, w, shift_for_k(kdim))
+    y = y.reshape(n, ho, wo, cout)
+    return jnp.maximum(y, 0) if relu else y
+
+
+def residual_add(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Saturating int8 add (ResNet skip connection)."""
+    s = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return jnp.clip(s, -128, 127).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6a network: conv -> max-pool -> FC, 8-bit
+#
+# The paper gives the layer types but not the dimensions; these are chosen
+# so the baseline cycle distribution matches Fig. 8's story (convolution
+# dominates ~99% of RV32I execution, max-pool >> FC among the rest), which
+# is what produces the 152x / 6.9x / 3.18x cascade.
+# ---------------------------------------------------------------------------
+
+FIG6A_IN = (1, 32, 32, 16)  # NHWC int8
+FIG6A_CONV_COUT = 16
+FIG6A_POOL_K = 8  # 8x8 stride-8 pool -> 4x4x16 feature map
+FIG6A_FC_OUT = 8
+
+
+def fig6a(x: jax.Array) -> jax.Array:
+    """Fig. 6a workload. x: int8[1,32,32,16] -> int32[1,8] logits."""
+    y = conv(x, layer_seed(NET_FIG6A, 1), FIG6A_CONV_COUT)  # [1,32,32,16]
+    y = MP.maxpool2d(y, FIG6A_POOL_K, FIG6A_POOL_K)  # [1,4,4,16]
+    y = y.reshape(1, 256)
+    y = jnp.tile(y, (8, 1))  # pad M to the 8-row GeMM tile
+    logits = dense_logits(y, layer_seed(NET_FIG6A, 3), FIG6A_FC_OUT)
+    return logits[:1]
+
+
+# ---------------------------------------------------------------------------
+# MLPerf Tiny Deep AutoEncoder (ToyADMOS)
+# ---------------------------------------------------------------------------
+
+DAE_IN = (8, 640)  # 8-row batch = one GeMM M-tile
+DAE_DIMS = [128, 128, 128, 128, 8, 128, 128, 128, 128, 640]
+
+
+def dae(x: jax.Array) -> jax.Array:
+    """Deep AutoEncoder. x: int8[8,640] -> int32[8,640] reconstruction."""
+    y = x
+    for i, d in enumerate(DAE_DIMS[:-1]):
+        y = dense(y, layer_seed(NET_DAE, i + 1), d, relu=True)
+    return dense_logits(y, layer_seed(NET_DAE, len(DAE_DIMS)), DAE_DIMS[-1])
+
+
+# ---------------------------------------------------------------------------
+# MLPerf Tiny ResNet-8 (CIFAR-10 class), channels padded to multiples of 8
+# ---------------------------------------------------------------------------
+
+RESNET8_IN = (1, 32, 32, 8)  # CIFAR's 3 channels zero-padded to 8
+RESNET8_FC_OUT = 16  # 10 classes padded to 16
+
+
+def _res_stack(
+    y: jax.Array, net: int, base: int, cout: int, stride: int
+) -> jax.Array:
+    """One ResNet-8 stack: conv-conv residual block (+1x1 shortcut when
+    downsampling)."""
+    z = conv(y, layer_seed(net, base), cout, stride=stride, relu=True)
+    z = conv(z, layer_seed(net, base + 1), cout, relu=False)
+    if stride != 1 or y.shape[3] != cout:
+        sc = conv(
+            y, layer_seed(net, base + 2), cout, kh=1, kw=1, stride=stride,
+            pad=0, relu=False,
+        )
+    else:
+        sc = y
+    return jnp.maximum(residual_add(z, sc), 0)
+
+
+def resnet8(x: jax.Array) -> jax.Array:
+    """ResNet-8. x: int8[1,32,32,8] -> int32[1,16] logits (first 10 valid)."""
+    y = conv(x, layer_seed(NET_RESNET8, 1), 16)  # stem, 32x32x16
+    y = _res_stack(y, NET_RESNET8, 2, 16, 1)  # 32x32x16
+    y = _res_stack(y, NET_RESNET8, 5, 32, 2)  # 16x16x32
+    y = _res_stack(y, NET_RESNET8, 8, 64, 2)  # 8x8x64
+    y = R.avgpool_global_ref(y)  # [1, 64]
+    y = jnp.tile(y, (8, 1))  # pad M to the 8-row GeMM tile
+    logits = dense_logits(y, layer_seed(NET_RESNET8, 11), RESNET8_FC_OUT)
+    return logits[:1]
+
+
+# ---------------------------------------------------------------------------
+# Entry-point registry consumed by aot.py and by tests
+# ---------------------------------------------------------------------------
+
+
+def gemm_entry(m: int, k: int, n: int):
+    """Standalone GeMM artifact (used by the runtime for arbitrary tiles)."""
+
+    def f(a, b):
+        return G.gemm(a, b)
+
+    specs = (
+        jax.ShapeDtypeStruct((m, k), jnp.int8),
+        jax.ShapeDtypeStruct((k, n), jnp.int8),
+    )
+    return f, specs
+
+
+def maxpool_entry(n: int, h: int, w: int, c: int, k: int, s: int):
+    def f(x):
+        return MP.maxpool2d(x, k, s)
+
+    return f, (jax.ShapeDtypeStruct((n, h, w, c), jnp.int8),)
+
+
+ENTRIES = {
+    "fig6a": (fig6a, (jax.ShapeDtypeStruct(FIG6A_IN, jnp.int8),)),
+    "dae": (dae, (jax.ShapeDtypeStruct(DAE_IN, jnp.int8),)),
+    "resnet8": (resnet8, (jax.ShapeDtypeStruct(RESNET8_IN, jnp.int8),)),
+    "gemm_64x64x64": gemm_entry(64, 64, 64),
+    "gemm_8x8x8": gemm_entry(8, 8, 8),
+    "maxpool_32x32x16_k2": maxpool_entry(1, 32, 32, 16, 2, 2),
+}
+
+
+def net_input(name: str) -> jax.Array:
+    """The deterministic input tensor for a registered network."""
+    net_id = {"fig6a": NET_FIG6A, "dae": NET_DAE, "resnet8": NET_RESNET8}[name]
+    shape = {"fig6a": FIG6A_IN, "dae": DAE_IN, "resnet8": RESNET8_IN}[name]
+    n = 1
+    for s in shape:
+        n *= s
+    return R.lcg_i8(input_seed(net_id), n).reshape(shape)

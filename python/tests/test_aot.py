@@ -1,0 +1,69 @@
+"""AOT lowering: every registered entry produces parseable HLO text and a
+manifest consistent with its jax-side shapes."""
+
+import json
+import os
+
+import numpy as np
+
+from compile import aot, model
+
+
+def test_lower_all_entries_produce_hlo_text():
+    for name in model.ENTRIES:
+        text, meta = aot.lower_entry(name)
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        assert meta["return_tuple"] is True
+        assert meta["sha256"]
+
+
+def test_manifest_shapes_match_eval_shape():
+    text, meta = aot.lower_entry("gemm_8x8x8")
+    assert meta["inputs"] == [
+        {"shape": [8, 8], "dtype": "int8"},
+        {"shape": [8, 8], "dtype": "int8"},
+    ]
+    assert meta["outputs"] == [{"shape": [8, 8], "dtype": "int32"}]
+
+
+def test_fig6a_manifest():
+    _, meta = aot.lower_entry("fig6a")
+    assert meta["inputs"][0]["shape"] == list(model.FIG6A_IN)
+    assert meta["outputs"][0]["shape"] == [1, model.FIG6A_FC_OUT]
+    assert meta["outputs"][0]["dtype"] == "int32"
+
+
+def test_hlo_text_is_pure_hlo_no_custom_calls():
+    """interpret=True must leave no Mosaic custom-calls behind — the CPU
+    PJRT client in Rust cannot execute them."""
+    for name in model.ENTRIES:
+        text, _ = aot.lower_entry(name)
+        assert "mosaic" not in text.lower(), name
+
+
+def test_artifacts_dir_if_built_matches_manifest():
+    """When `make artifacts` has run, files on disk match the manifest."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man = os.path.join(art, "manifest.json")
+    if not os.path.exists(man):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    with open(man) as f:
+        manifest = json.load(f)
+    for name, meta in manifest.items():
+        path = os.path.join(art, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        import hashlib
+
+        with open(path) as fh:
+            digest = hashlib.sha256(fh.read().encode()).hexdigest()
+        assert digest == meta["sha256"], f"{name} artifact is stale"
+
+
+def test_lowering_is_deterministic():
+    t1, m1 = aot.lower_entry("dae")
+    t2, m2 = aot.lower_entry("dae")
+    assert m1["sha256"] == m2["sha256"]
+    assert t1 == t2

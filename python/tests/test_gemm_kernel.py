@@ -1,0 +1,129 @@
+"""L1 GeMM Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (multiples of the 8-wide PE array), tile
+configurations, and value edge cases; every case must be bit-exact
+(integer arithmetic, no tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm as G
+from compile.kernels import ref as R
+
+dims = st.integers(1, 8).map(lambda v: v * 8)  # multiples of 8, up to 64
+
+
+def _rand_i8(seed, m, n, lo=-128, hi=127):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi + 1, size=(m, n), dtype=np.int8))
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31))
+def test_gemm_matches_ref_random_shapes(m, k, n, seed):
+    a = _rand_i8(seed, m, k)
+    b = _rand_i8(seed + 1, k, n)
+    np.testing.assert_array_equal(
+        np.asarray(G.gemm(a, b)), np.asarray(R.gemm_ref(a, b))
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=dims,
+    k=dims,
+    n=dims,
+    tm=st.sampled_from([8, 16, 32, 64]),
+    tn=st.sampled_from([8, 16, 32, 64]),
+    tk=st.sampled_from([8, 16, 32, 64]),
+)
+def test_gemm_tile_config_invariance(m, k, n, tm, tn, tk):
+    """Result must not depend on the BlockSpec tiling."""
+    a = _rand_i8(3, m, k)
+    b = _rand_i8(4, k, n)
+    np.testing.assert_array_equal(
+        np.asarray(G.gemm(a, b, tm=tm, tn=tn, tk=tk)),
+        np.asarray(R.gemm_ref(a, b)),
+    )
+
+
+def test_gemm_hw_unit_tile():
+    """The accelerator's native 8x8x8 step."""
+    a = R.lcg_i8(11, 64).reshape(8, 8)
+    b = R.lcg_i8(12, 64).reshape(8, 8)
+    np.testing.assert_array_equal(
+        np.asarray(G.gemm(a, b)), np.asarray(R.gemm_ref(a, b))
+    )
+
+
+def test_gemm_extreme_values_no_overflow():
+    """Full-range int8 extremes: int32 accumulation must not wrap.
+
+    Worst case |acc| = K * 128 * 128 = 64 * 16384 = 2^20 << 2^31.
+    """
+    m = k = n = 64
+    a = jnp.full((m, k), -128, jnp.int8)
+    b = jnp.full((k, n), -128, jnp.int8)
+    out = np.asarray(G.gemm(a, b))
+    assert (out == k * 128 * 128).all()
+    b2 = jnp.full((k, n), 127, jnp.int8)
+    out2 = np.asarray(G.gemm(a, b2))
+    assert (out2 == k * (-128) * 127).all()
+
+
+def test_gemm_identity():
+    n = 32
+    eye = jnp.eye(n, dtype=jnp.int8)
+    a = _rand_i8(5, n, n)
+    np.testing.assert_array_equal(
+        np.asarray(G.gemm(a, eye)), np.asarray(a, dtype=np.int32)
+    )
+
+
+def test_gemm_zeros():
+    a = jnp.zeros((16, 24), jnp.int8)
+    b = _rand_i8(6, 24, 16)
+    assert (np.asarray(G.gemm(a, b)) == 0).all()
+
+
+def test_gemm_rejects_non_multiple_of_8():
+    a = jnp.zeros((9, 8), jnp.int8)
+    b = jnp.zeros((8, 8), jnp.int8)
+    with pytest.raises(ValueError, match="PE array"):
+        G.gemm(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shift=st.integers(0, 20), seed=st.integers(0, 2**31))
+def test_gemm_requant_matches_ref(shift, seed):
+    a = _rand_i8(seed, 16, 32)
+    b = _rand_i8(seed + 9, 32, 16)
+    got = np.asarray(G.gemm_requant(a, b, shift))
+    exp = np.asarray(R.requantize_ref(R.gemm_ref(a, b), shift))
+    np.testing.assert_array_equal(got, exp)
+    assert got.dtype == np.int8
+
+
+def test_requant_saturates():
+    acc = jnp.array([[1 << 20, -(1 << 20), 127, -128]], jnp.int32)
+    out = np.asarray(R.requantize_ref(acc, 0))
+    np.testing.assert_array_equal(out, [[127, -128, 127, -128]])
+
+
+def test_requant_rounds_to_nearest():
+    """Round-half-up via +half then arithmetic (flooring) right shift —
+    the exact hardware requantizer semantics the Rust twin must match:
+    (-3+2)>>2 = -1>>2 = -1 (floor), (3+2)>>2 = 1."""
+    acc = jnp.array([[3, 4, 5, -3, -4, -5, -6, -7]], jnp.int32)
+    out = np.asarray(R.requantize_ref(acc, 2))
+    np.testing.assert_array_equal(out, [[1, 1, 1, -1, -1, -1, -1, -2]])
+
+
+def test_pick_tile_respects_divisibility():
+    assert G._pick_tile(64, 32, 8) == 32
+    assert G._pick_tile(40, 32, 8) == 40 // 5  # 8 divides 40, 32 doesn't
+    assert G._pick_tile(8, 32, 8) == 8
+    assert G._pick_tile(48, 32, 8) == 24

@@ -1,0 +1,62 @@
+"""L1 max-pool Pallas kernel vs pure-jnp oracle (bit-exact)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import maxpool as M
+from compile.kernels import ref as R
+
+
+def _rand_i8(seed, shape):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-128, 128, size=shape, dtype=np.int8))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(4, 20),
+    c=st.integers(1, 4).map(lambda v: v * 8),
+    k=st.sampled_from([2, 3]),
+    s=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31),
+)
+def test_maxpool_matches_ref(n, hw, c, k, s, seed):
+    x = _rand_i8(seed, (n, hw, hw, c))
+    got = np.asarray(M.maxpool2d(x, k, s))
+    exp = np.asarray(R.maxpool2d_ref(x, k, s))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_maxpool_all_min_values():
+    """INT8_MIN padding identity must not leak."""
+    x = jnp.full((1, 8, 8, 8), -128, jnp.int8)
+    out = np.asarray(M.maxpool2d(x, 2, 2))
+    assert (out == -128).all()
+
+
+def test_maxpool_single_hot():
+    x = jnp.full((1, 4, 4, 8), -128, jnp.int8)
+    x = x.at[0, 1, 1, 0].set(127)
+    out = np.asarray(M.maxpool2d(x, 2, 2))
+    assert out[0, 0, 0, 0] == 127
+    assert out[0, 1, 1, 0] == -128
+
+
+def test_maxpool_rejects_bad_channel_count():
+    x = jnp.zeros((1, 8, 8, 12), jnp.int8)
+    with pytest.raises(ValueError, match="lanes"):
+        M.maxpool2d(x, 2, 2)
+
+
+def test_maxpool_output_shape_stride1():
+    x = _rand_i8(1, (2, 10, 10, 16))
+    out = M.maxpool2d(x, 3, 1)
+    assert out.shape == (2, 8, 8, 16)
+
+
+def test_maxpool_preserves_dtype():
+    x = _rand_i8(2, (1, 8, 8, 8))
+    assert M.maxpool2d(x, 2).dtype == jnp.int8

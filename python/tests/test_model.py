@@ -1,0 +1,125 @@
+"""L2 model graphs: shapes, conv-as-im2col equivalence, determinism."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref as R
+
+
+def _rand_i8(seed, shape):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-64, 64, size=shape, dtype=np.int8))
+
+
+# --- conv lowering equivalence ---------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    hw=st.integers(4, 12),
+    cin=st.sampled_from([8, 16]),
+    cout=st.sampled_from([8, 16]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31),
+)
+def test_im2col_gemm_equals_direct_conv(hw, cin, cout, stride, seed):
+    """The accelerator path (im2col + GeMM) == lax.conv reference."""
+    x = _rand_i8(seed, (1, hw, hw, cin))
+    w = _rand_i8(seed + 1, (3, 3, cin, cout))
+    got = np.asarray(R.conv2d_im2col_ref(x, w, stride=stride, pad=1))
+    exp = np.asarray(R.conv2d_ref(x, w, stride=stride, pad=1))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_im2col_1x1_conv():
+    x = _rand_i8(7, (1, 8, 8, 16))
+    w = _rand_i8(8, (1, 1, 16, 32))
+    got = np.asarray(R.conv2d_im2col_ref(x, w, stride=2, pad=0))
+    exp = np.asarray(R.conv2d_ref(x, w, stride=2, pad=0))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_im2col_shape():
+    x = _rand_i8(9, (2, 6, 6, 8))
+    patches = R.im2col_ref(x, 3, 3, 1, 1)
+    assert patches.shape == (2 * 6 * 6, 3 * 3 * 8)
+
+
+# --- network-level checks ---------------------------------------------------
+
+
+def test_fig6a_shape_and_dtype():
+    out = M.fig6a(M.net_input("fig6a"))
+    assert out.shape == (1, M.FIG6A_FC_OUT)
+    assert out.dtype == jnp.int32
+
+
+def test_dae_shape_and_dtype():
+    out = M.dae(M.net_input("dae"))
+    assert out.shape == (8, 640)
+    assert out.dtype == jnp.int32
+
+
+def test_resnet8_shape_and_dtype():
+    out = M.resnet8(M.net_input("resnet8"))
+    assert out.shape == (1, M.RESNET8_FC_OUT)
+    assert out.dtype == jnp.int32
+
+
+def test_networks_deterministic():
+    for name in ["fig6a", "dae", "resnet8"]:
+        f, _ = M.ENTRIES[name]
+        a = np.asarray(f(M.net_input(name)))
+        b = np.asarray(f(M.net_input(name)))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_networks_not_degenerate():
+    """Requant shifts must keep activations alive through the full depth."""
+    for name in ["fig6a", "dae", "resnet8"]:
+        f, _ = M.ENTRIES[name]
+        out = np.asarray(f(M.net_input(name)))
+        assert (out != 0).any(), f"{name} output collapsed to zero"
+
+
+def test_residual_add_saturates():
+    a = jnp.full((1, 4), 100, jnp.int8)
+    b = jnp.full((1, 4), 100, jnp.int8)
+    np.testing.assert_array_equal(np.asarray(M.residual_add(a, b)), 127)
+    c = jnp.full((1, 4), -100, jnp.int8)
+    np.testing.assert_array_equal(np.asarray(M.residual_add(c, c)), -128)
+
+
+def test_avgpool_global():
+    x = jnp.ones((1, 4, 4, 8), jnp.int8) * 7
+    out = np.asarray(R.avgpool_global_ref(x))
+    assert out.shape == (1, 8)
+    assert (out == 7).all()
+
+
+# --- shared determinism spec (LCG twin contract) ----------------------------
+
+
+def test_lcg_known_vector():
+    """Golden vector pinned so the Rust twin can assert the same bytes.
+
+    If this test ever changes, rust/src/models/lcg.rs tests must change
+    with it.
+    """
+    v = np.asarray(R.lcg_i8(42, 8))
+    expected = np.array([59, 41, -23, 15, 43, 6, -19, -53], dtype=np.int8)
+    np.testing.assert_array_equal(v, expected)
+
+
+def test_lcg_range():
+    v = np.asarray(R.lcg_i8(7, 4096))
+    assert v.min() >= -64 and v.max() <= 63
+
+
+def test_shift_for_k_spec():
+    assert M.shift_for_k(8) == 6
+    assert M.shift_for_k(128) == 8
+    assert M.shift_for_k(144) == 8
+    assert M.shift_for_k(640) == 9

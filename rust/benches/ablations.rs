@@ -1,0 +1,128 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! * **CSR double buffering** (paper §IV-A "hide register setup time"):
+//!   shadow bank on vs off, per-tile GeMM stream.
+//! * **Streamer FIFO depth** (paper §IV-B design-time customization):
+//!   sweep 1..16 on the Fig. 6a pipelined run.
+//! * **Bank count** (TCDM design-time parameter): 8..64 banks.
+//! * **Weight-slot prefetch**: single vs double rotating weight slot on
+//!   the weight-streamed Deep AutoEncoder.
+//! * **Pipelined vs sequential** at increasing inference counts.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::metrics::report::{cycles, ratio, table};
+use snax::models;
+use snax::models::matmul::{overlapped_program, MatmulWorkload};
+use snax::sim::Cluster;
+
+fn main() {
+    // --- CSR double buffering -------------------------------------------------
+    let w = MatmulWorkload::square(32, 16);
+    let on_cfg = ClusterConfig::fig6c();
+    let off_cfg = snax::baseline::conventional_cluster(&on_cfg);
+    let on = Cluster::new(&on_cfg).run(&overlapped_program(&on_cfg, w).unwrap()).unwrap();
+    let off = Cluster::new(&off_cfg).run(&overlapped_program(&off_cfg, w).unwrap()).unwrap();
+    println!("ablation 1 — CSR double buffering (32^3 GeMM tile stream):");
+    println!(
+        "  shadow regs ON : {} cycles\n  shadow regs OFF: {} cycles  ({} slower)\n",
+        cycles(on.total_cycles),
+        cycles(off.total_cycles),
+        ratio(off.total_cycles as f64 / on.total_cycles as f64)
+    );
+    assert!(off.total_cycles >= on.total_cycles);
+
+    // --- streamer FIFO depth ---------------------------------------------------
+    println!("ablation 2 — streamer FIFO depth (pipelined Fig. 6a):");
+    let g = models::fig6a_graph();
+    let mut rows = Vec::new();
+    let mut depth_cycles = Vec::new();
+    for depth in [1u32, 2, 4, 8, 16] {
+        let mut cfg = ClusterConfig::fig6d();
+        for a in &mut cfg.accelerators {
+            a.fifo_depth = depth;
+        }
+        let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
+        let r = Cluster::new(&cfg).run(&cp.program).unwrap();
+        rows.push(vec![format!("{depth}"), cycles(r.total_cycles)]);
+        depth_cycles.push(r.total_cycles);
+    }
+    println!("{}", table(&["fifo depth", "cycles (8 inferences)"], &rows));
+    assert!(
+        depth_cycles[0] > *depth_cycles.last().unwrap(),
+        "deeper FIFOs should absorb more conflicts"
+    );
+
+    // --- bank count --------------------------------------------------------------
+    println!("ablation 3 — TCDM bank count (pipelined Fig. 6a):");
+    let mut rows = Vec::new();
+    let mut bank_cycles = Vec::new();
+    for banks in [8u32, 16, 32, 64] {
+        let mut cfg = ClusterConfig::fig6d();
+        cfg.banks = banks;
+        let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
+        let r = Cluster::new(&cfg).run(&cp.program).unwrap();
+        rows.push(vec![
+            format!("{banks}"),
+            cycles(r.total_cycles),
+            cycles(r.counters.bank_conflict_cycles),
+        ]);
+        bank_cycles.push(r.total_cycles);
+    }
+    println!("{}", table(&["banks", "cycles", "conflict cycles"], &rows));
+    assert!(bank_cycles[0] >= bank_cycles[2], "8 banks should not beat 32");
+
+    // --- weight-slot prefetch ------------------------------------------------------
+    // A dense chain whose 20 KiB weights stream through the SPM: two
+    // rotating slots let the next layer's weight DMA overlap the current
+    // layer's compute; one slot strictly serializes them.
+    println!("ablation 4 — weight-slot prefetch (streamed dense chain):");
+    let mut chain = snax::compiler::Graph::new("chain");
+    let mut x = chain.add_input("x", &[8, 160], 77);
+    for i in 0..10u64 {
+        x = chain.dense(&format!("fc{i}"), x, 160, true, 8, false, 500 + i).unwrap();
+    }
+    chain.mark_output(x);
+    let mut cfg = ClusterConfig::fig6d();
+    cfg.spm_kb = 64; // force weight streaming (10 x 25 KiB > 64 KiB)
+    let cp2 = compile(&chain, &cfg, &CompileOptions::sequential()).unwrap();
+    let cp1 = compile(&chain, &cfg, &CompileOptions::sequential().single_weight_slot()).unwrap();
+    let slots = |cp: &snax::compiler::CompiledProgram| match &cp.alloc.weight_mode {
+        snax::compiler::alloc::WeightMode::Streamed { slots, .. } => slots.len(),
+        _ => 0,
+    };
+    assert_eq!(slots(&cp2), 2);
+    assert_eq!(slots(&cp1), 1);
+    let r2 = Cluster::new(&cfg).run(&cp2.program).unwrap();
+    let r1 = Cluster::new(&cfg).run(&cp1.program).unwrap();
+    println!(
+        "  1 slot : {} cycles\n  2 slots: {} cycles  (prefetch gain {})\n",
+        cycles(r1.total_cycles),
+        cycles(r2.total_cycles),
+        ratio(r1.total_cycles as f64 / r2.total_cycles as f64)
+    );
+    assert!(r2.total_cycles < r1.total_cycles);
+
+    // --- pipelining depth ---------------------------------------------------------
+    println!("ablation 5 — pipelined vs sequential throughput (Fig. 6a):");
+    let cfg = ClusterConfig::fig6d();
+    let mut rows = Vec::new();
+    for n in [2u32, 4, 8, 16] {
+        let cps = compile(&g, &cfg, &CompileOptions::sequential().with_inferences(n)).unwrap();
+        let cpp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(n)).unwrap();
+        let rs = Cluster::new(&cfg).run(&cps.program).unwrap();
+        let rp = Cluster::new(&cfg).run(&cpp.program).unwrap();
+        rows.push(vec![
+            format!("{n}"),
+            cycles(rs.total_cycles / n as u64),
+            cycles(rp.total_cycles / n as u64),
+            ratio(rs.total_cycles as f64 / rp.total_cycles as f64),
+        ]);
+    }
+    println!(
+        "{}",
+        table(&["inferences", "seq cyc/inf", "pipe cyc/inf", "speedup"], &rows)
+    );
+}

@@ -1,0 +1,66 @@
+//! Fig. 2 (paper §II background) — tightly vs loosely coupled execution.
+//!
+//! The paper motivates hybrid coupling with the execution-time diagrams
+//! of Fig. 2c/2d: a tightly coupled accelerator stalls its host for
+//! every task (sequential), while loosely coupled control lets CPU,
+//! accelerators and DMA overlap (it cites up to 30x from asynchronous
+//! execution [21]). This bench reproduces the comparison on the same
+//! hardware with three execution models:
+//!
+//! * **tight**  — blocking register interface (no CSR shadow bank) and
+//!   strictly serialized transfer -> compute -> writeback phases;
+//! * **loose, sequential** — fire-and-forget CSR control with shadow
+//!   registers, still one phase at a time;
+//! * **loose, overlapped** — the full hybrid-coupling schedule (DMA and
+//!   compute of adjacent tiles overlap).
+//!
+//! Run: `cargo bench --bench fig2_coupling`
+
+use snax::baseline::conventional_cluster;
+use snax::config::ClusterConfig;
+use snax::metrics::report::{cycles, ratio, table};
+use snax::models::matmul::{overlapped_program, serialized_program, MatmulWorkload};
+use snax::sim::Cluster;
+
+fn main() {
+    println!("Fig. 2 — coupling styles on a 16-tile 32^3 GeMM stream\n");
+    let w = MatmulWorkload::square(32, 16);
+    let snax_cfg = ClusterConfig::fig6c();
+    let tight_cfg = conventional_cluster(&snax_cfg);
+
+    let tight = Cluster::new(&tight_cfg)
+        .run(&serialized_program(&tight_cfg, w).unwrap())
+        .unwrap();
+    let loose_seq =
+        Cluster::new(&snax_cfg).run(&serialized_program(&snax_cfg, w).unwrap()).unwrap();
+    let loose_ovl =
+        Cluster::new(&snax_cfg).run(&overlapped_program(&snax_cfg, w).unwrap()).unwrap();
+
+    let rows = vec![
+        vec![
+            "tight (blocking regs, serialized)".to_string(),
+            cycles(tight.total_cycles),
+            "1.00x".into(),
+        ],
+        vec![
+            "loose control, serialized data".to_string(),
+            cycles(loose_seq.total_cycles),
+            ratio(tight.total_cycles as f64 / loose_seq.total_cycles as f64),
+        ],
+        vec![
+            "hybrid (loose control + overlapped data)".to_string(),
+            cycles(loose_ovl.total_cycles),
+            ratio(tight.total_cycles as f64 / loose_ovl.total_cycles as f64),
+        ],
+    ];
+    println!("{}", table(&["execution model", "cycles", "speedup vs tight"], &rows));
+    println!(
+        "paper §II: asynchronous decoupled execution can reach up to 30x over\n\
+         sequential tightly-coupled execution [21] — the magnitude depends on\n\
+         how much work can overlap; on this balanced tile stream the hybrid\n\
+         schedule recovers {} (utilization-bound, not sync-bound).",
+        ratio(tight.total_cycles as f64 / loose_ovl.total_cycles as f64)
+    );
+    assert!(loose_seq.total_cycles <= tight.total_cycles);
+    assert!(loose_ovl.total_cycles < loose_seq.total_cycles);
+}

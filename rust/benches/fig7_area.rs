@@ -1,0 +1,56 @@
+//! Fig. 7 — area breakdown of the three cluster architectures.
+//!
+//! Regenerates the per-component area bars for Fig. 6b/6c/6d and checks
+//! the paper's qualitative claims: the control-core step from 6b to 6c,
+//! the near-zero control cost of sharing a core in 6d, and the TCDM /
+//! streamer growth with accelerator port width.
+//!
+//! Run: `cargo bench --bench fig7_area`
+
+use snax::config::ClusterConfig;
+use snax::energy::area;
+use snax::metrics::report::table;
+
+fn main() {
+    let mut rows = Vec::new();
+    let components =
+        ["control_cores", "spm", "tcdm_interconnect", "streamers", "accelerators", "dma_axi"];
+    let mut totals = Vec::new();
+    for preset in ["fig6b", "fig6c", "fig6d"] {
+        let cfg = ClusterConfig::preset(preset).unwrap();
+        let a = area(&cfg);
+        let mut row = vec![preset.to_string()];
+        for c in components {
+            row.push(format!("{:.4}", a.get(c)));
+        }
+        row.push(format!("{:.4}", a.total()));
+        totals.push(a);
+        rows.push(row);
+    }
+    println!("Fig. 7 — area breakdown (mm^2, TSMC-16nm-calibrated model)\n");
+    println!(
+        "{}",
+        table(
+            &["arch", "cores", "spm", "tcdm", "streamers", "accels", "dma+axi", "total"],
+            &rows
+        )
+    );
+    let (b, c, d) = (&totals[0], &totals[1], &totals[2]);
+    println!("paper anchors:");
+    println!("  fig6d total = {:.3} mm^2 (paper Table I: 0.45)", d.total());
+    println!(
+        "  control 6b->6c: {:.2}x (paper: ~1.17x incl. fabric; ours counts cores+imem only)",
+        c.get("control_cores") / b.get("control_cores")
+    );
+    println!(
+        "  control 6c->6d: {:.2}x (paper: 'minimal impact' from sharing a core)",
+        d.get("control_cores") / c.get("control_cores")
+    );
+    println!(
+        "  tcdm growth 6b->6d: {:.2}x, streamers 0 -> {:.3} mm^2",
+        d.get("tcdm_interconnect") / b.get("tcdm_interconnect"),
+        d.get("streamers")
+    );
+    assert!(d.get("control_cores") == c.get("control_cores"));
+    assert!(d.total() > c.total() && c.total() > b.total());
+}

@@ -1,0 +1,55 @@
+//! Fig. 9 — power breakdown during parallel (pipelined) processing.
+//!
+//! Regenerates the per-component power distribution for the pipelined
+//! Fig. 6a run on the Fig. 6d cluster. Paper: "the majority of power
+//! consumption is consumed by the accelerators and their streamers,
+//! followed by data memory access, peripheral interconnect, and RISC-V
+//! cores."
+//!
+//! Run: `cargo bench --bench fig9_power`
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::energy::energy;
+use snax::metrics::report::{pct, table};
+use snax::models;
+use snax::sim::Cluster;
+
+fn main() {
+    let cfg = ClusterConfig::fig6d();
+    let g = models::fig6a_graph();
+    let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
+    let r = Cluster::new(&cfg).run(&cp.program).unwrap();
+    let e = energy(&r, &cfg);
+    let total = e.total_uj();
+
+    println!("Fig. 9 — power breakdown, pipelined Fig. 6a on Fig. 6d\n");
+    let mut rows: Vec<Vec<String>> = e
+        .items
+        .iter()
+        .map(|i| {
+            vec![
+                i.component.clone(),
+                format!("{:.3}", i.uj),
+                pct(i.uj / total),
+            ]
+        })
+        .collect();
+    rows.push(vec!["TOTAL".into(), format!("{total:.3}"), "100%".into()]);
+    println!("{}", table(&["component", "energy (uJ)", "share"], &rows));
+    println!(
+        "average power: {:.0} mW over {} cycles (paper Table I: 227 mW total)",
+        e.avg_power_mw(),
+        r.total_cycles
+    );
+
+    // Paper's ordering: accelerators + streamers > SPM > cores.
+    let accel_stream = e.get("accelerators") + e.get("streamers");
+    assert!(
+        accel_stream > e.get("spm"),
+        "accel+streamers ({accel_stream}) should dominate SPM ({})",
+        e.get("spm")
+    );
+    assert!(e.get("spm") > e.get("cores"), "SPM should outweigh cores");
+    println!("\nordering check (accel+streamers > spm > cores): OK");
+}

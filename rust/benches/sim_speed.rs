@@ -1,0 +1,64 @@
+//! Simulator performance — the L3 hot path for the §Perf optimization
+//! pass. Measures wall-clock simulation throughput (simulated cycles
+//! per host second) on the two characteristic workload shapes:
+//!
+//! * memory-active: pipelined Fig. 6a (streamers + arbitration ticking
+//!   every cycle);
+//! * fast-forward: the RV32I-only baseline (dominated by Sw spans the
+//!   engine skips over).
+//!
+//! Run: `cargo bench --bench sim_speed`
+
+use std::time::Instant;
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::models;
+use snax::sim::Cluster;
+
+fn bench<F: FnMut() -> u64>(name: &str, reps: u32, mut f: F) {
+    // Warm-up.
+    let cycles = f();
+    let t0 = Instant::now();
+    let mut total_cycles = 0u64;
+    for _ in 0..reps {
+        total_cycles += f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name}: {cycles} sim-cycles/run, {reps} runs in {:.3}s -> {:.2} Mcyc/s, {:.2} ms/run",
+        dt,
+        total_cycles as f64 / dt / 1e6,
+        dt * 1e3 / reps as f64
+    );
+}
+
+fn main() {
+    let g = models::fig6a_graph();
+
+    let cfg = ClusterConfig::fig6d();
+    let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
+    let cluster = Cluster::new(&cfg);
+    bench("pipelined fig6a (memory-active)", 20, || {
+        cluster.run(&cp.program).unwrap().total_cycles
+    });
+
+    let cfg_b = ClusterConfig::fig6b();
+    let cp_b = compile(&g, &cfg_b, &CompileOptions::sequential()).unwrap();
+    let cluster_b = Cluster::new(&cfg_b);
+    bench("cpu-only fig6a (fast-forward)", 20, || {
+        cluster_b.run(&cp_b.program).unwrap().total_cycles
+    });
+
+    let rn = models::resnet8_graph();
+    let cp_r = compile(&rn, &cfg, &CompileOptions::sequential()).unwrap();
+    bench("resnet8 sequential (mixed)", 10, || {
+        cluster.run(&cp_r.program).unwrap().total_cycles
+    });
+
+    let dae = models::dae_graph();
+    let cp_d = compile(&dae, &cfg, &CompileOptions::sequential()).unwrap();
+    bench("dae sequential (dma-heavy)", 20, || {
+        cluster.run(&cp_d.program).unwrap().total_cycles
+    });
+}

@@ -1,0 +1,114 @@
+//! Table I — comparison with state-of-the-art heterogeneous platforms.
+//!
+//! Regenerates the SNAX column from our simulation (area, power, MLPerf
+//! Tiny latencies and energies) and reprints the competitor columns the
+//! paper itself quotes from published sources (ST [30,31], GAP9 [31,32],
+//! DIANA [33,34]). The reproduction targets are the SNAX numbers and the
+//! headline speedups: 7.5x vs GAP9 and 15x vs DIANA on the Deep
+//! AutoEncoder.
+//!
+//! Run: `cargo bench --bench table1_sota`
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::energy::{area, energy};
+use snax::metrics::report::{ratio, table};
+use snax::models;
+use snax::sim::Cluster;
+
+struct Sota {
+    name: &'static str,
+    toyadmos_ms: Option<f64>,
+    resnet8_ms: Option<f64>,
+    toyadmos_uj: Option<f64>,
+    resnet8_uj: Option<f64>,
+}
+
+/// Competitor rows as reported in the paper (Table I).
+const SOTA: &[Sota] = &[
+    Sota {
+        name: "ST (reported)",
+        toyadmos_ms: Some(7.75),
+        resnet8_ms: Some(227.0),
+        toyadmos_uj: Some(230.0),
+        resnet8_uj: Some(6700.0),
+    },
+    Sota {
+        name: "GAP9 (reported)",
+        toyadmos_ms: Some(0.18),
+        resnet8_ms: Some(0.62),
+        toyadmos_uj: Some(9.0),
+        resnet8_uj: Some(31.0),
+    },
+    Sota {
+        name: "DIANA (reported)",
+        toyadmos_ms: Some(0.36),
+        resnet8_ms: Some(1.19),
+        toyadmos_uj: Some(11.0),
+        resnet8_uj: Some(37.0),
+    },
+];
+
+fn main() {
+    let cfg = ClusterConfig::fig6d();
+    let seq = CompileOptions::sequential();
+
+    let mut measure = |graph: snax::compiler::Graph| {
+        let cp = compile(&graph, &cfg, &seq).unwrap();
+        let r = Cluster::new(&cfg).run(&cp.program).unwrap();
+        let ms = r.seconds(cfg.freq_mhz) * 1e3;
+        let uj = energy(&r, &cfg).total_uj();
+        (ms, uj)
+    };
+    let (dae_ms, dae_uj) = measure(models::dae_graph());
+    let (rn_ms, rn_uj) = measure(models::resnet8_graph());
+    let a = area(&cfg).total();
+
+    println!("Table I — SotA comparison (SNAX column measured, others as reported)\n");
+    let mut rows = vec![vec![
+        "SNAX (ours)".to_string(),
+        format!("{a:.3}"),
+        format!("{dae_ms:.3}"),
+        format!("{rn_ms:.3}"),
+        format!("{dae_uj:.2}"),
+        format!("{rn_uj:.1}"),
+    ]];
+    rows.push(vec![
+        "SNAX (paper)".into(),
+        "0.45".into(),
+        "0.024".into(),
+        "0.132".into(),
+        "5.16".into(),
+        "28".into(),
+    ]);
+    for s in SOTA {
+        rows.push(vec![
+            s.name.to_string(),
+            "-".into(),
+            s.toyadmos_ms.map(|v| format!("{v}")).unwrap_or_else(|| "-".into()),
+            s.resnet8_ms.map(|v| format!("{v}")).unwrap_or_else(|| "-".into()),
+            s.toyadmos_uj.map(|v| format!("{v}")).unwrap_or_else(|| "-".into()),
+            s.resnet8_uj.map(|v| format!("{v}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!(
+        "{}",
+        table(
+            &["system", "area mm2", "ToyAdmos ms", "ResNet-8 ms", "ToyAdmos uJ", "ResNet-8 uJ"],
+            &rows
+        )
+    );
+
+    let gap9 = SOTA[1].toyadmos_ms.unwrap() / dae_ms;
+    let diana = SOTA[2].toyadmos_ms.unwrap() / dae_ms;
+    println!("headline speedups (Deep AutoEncoder):");
+    println!("  vs GAP9 : paper 7.5x  measured {}", ratio(gap9));
+    println!("  vs DIANA: paper 15x   measured {}", ratio(diana));
+
+    // Shape: SNAX wins on both workloads against every reported system.
+    for s in SOTA {
+        assert!(dae_ms < s.toyadmos_ms.unwrap());
+        assert!(rn_ms < s.resnet8_ms.unwrap());
+    }
+    assert!(gap9 > 4.0 && diana > 8.0, "speedup shape off: {gap9:.1} / {diana:.1}");
+}

@@ -1,0 +1,58 @@
+//! Conventional-integration baselines the paper compares against.
+//!
+//! * **Fig. 8 baseline**: the whole network on the RV32I core — obtained
+//!   by compiling for the accelerator-less `fig6b` preset (placement
+//!   falls back to CPU for every node), or by `force_cpu` overrides.
+//! * **Fig. 10 baseline**: the "C runtime library" [25] driving the same
+//!   GeMM accelerator through blocking, serialized transfer/compute
+//!   phases — [`crate::models::matmul::serialized_program`] — optionally
+//!   with CSR double-buffering disabled ([`conventional_cluster`]),
+//!   modeling a register interface without shadow banks.
+
+use crate::config::ClusterConfig;
+
+/// A cluster variant stripped of SNAX's hybrid-coupling niceties:
+/// no double-buffered CSR shadow bank (configuration writes block while
+/// the accelerator runs, as in a conventional memory-mapped interface).
+pub fn conventional_cluster(cfg: &ClusterConfig) -> ClusterConfig {
+    let mut c = cfg.clone();
+    c.name = format!("{}-conventional", c.name);
+    c.csr_double_buffer = false;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::matmul::{overlapped_program, serialized_program, MatmulWorkload};
+    use crate::sim::Cluster;
+
+    #[test]
+    fn conventional_flag_propagates() {
+        let c = conventional_cluster(&ClusterConfig::fig6c());
+        assert!(!c.csr_double_buffer);
+        assert!(c.name.contains("conventional"));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn snax_beats_conventional_on_the_same_accelerator() {
+        // The Fig. 10 comparison: same GeMM, same workload, hybrid
+        // coupling on vs off.
+        let w = MatmulWorkload::square(64, 6);
+        let snax_cfg = ClusterConfig::fig6c();
+        let conv_cfg = conventional_cluster(&snax_cfg);
+        let snax = Cluster::new(&snax_cfg)
+            .run(&overlapped_program(&snax_cfg, w).unwrap())
+            .unwrap();
+        let conv = Cluster::new(&conv_cfg)
+            .run(&serialized_program(&conv_cfg, w).unwrap())
+            .unwrap();
+        assert!(
+            (snax.total_cycles as f64) < 0.8 * conv.total_cycles as f64,
+            "snax {} vs conventional {}",
+            snax.total_cycles,
+            conv.total_cycles
+        );
+    }
+}

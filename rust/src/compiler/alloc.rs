@@ -1,0 +1,391 @@
+//! Static memory allocation (SNAX-MLIR pass 2, paper Fig. 5.2).
+//!
+//! Buffers are placed in the shared scratchpad so producer-consumer
+//! chains never round-trip through external memory:
+//!
+//! * **Activations** get liveness-based first-fit placement; in
+//!   pipelined mode every inter-stage tensor is double-buffered
+//!   (odd/even pipeline iterations — paper: "separate buffers designated
+//!   for reading and writing during alternating odd and even pipeline
+//!   cycles").
+//! * **Weights** stay resident when everything fits; otherwise they are
+//!   streamed from external memory into one or two rotating weight
+//!   slots (two slots = next layer's weights DMA-prefetched during the
+//!   current layer's compute — the paper's DMA/compute overlap).
+
+use anyhow::{bail, Result};
+
+use crate::config::ClusterConfig;
+
+use super::ir::{Graph, TensorId, TensorKind};
+
+const ALIGN: u64 = 64;
+
+fn align(v: u64) -> u64 {
+    v.div_ceil(ALIGN) * ALIGN
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WeightMode {
+    /// All weights live in SPM for the whole run.
+    Resident,
+    /// Weights are DMA'd per layer into rotating slots.
+    Streamed { slots: Vec<u64>, slot_bytes: u64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct AllocMap {
+    /// Per tensor: SPM base address for even/odd pipeline iterations
+    /// (equal when not double-buffered). `None` for streamed weights.
+    pub spm_addr: Vec<Option<[u64; 2]>>,
+    pub weight_mode: WeightMode,
+    /// Per tensor: external-memory address (inputs, weights, outputs).
+    pub ext_addr: Vec<Option<u64>>,
+    pub spm_used: u64,
+    pub ext_used: u64,
+    /// Whether activations are double-buffered (pipelined mode).
+    pub double_buffered: bool,
+}
+
+impl AllocMap {
+    pub fn spm(&self, t: TensorId, iter: u64) -> u64 {
+        self.spm_addr[t.0].expect("tensor has SPM address")[(iter % 2) as usize]
+    }
+
+    pub fn ext(&self, t: TensorId) -> u64 {
+        self.ext_addr[t.0].expect("tensor has ext address")
+    }
+
+    /// SPM address of node `i`'s weights (resident or its rotating slot).
+    pub fn weight_spm(&self, t: TensorId, node_idx: usize) -> u64 {
+        match &self.weight_mode {
+            WeightMode::Resident => self.spm(t, 0),
+            WeightMode::Streamed { slots, .. } => slots[node_idx % slots.len()],
+        }
+    }
+}
+
+/// Liveness interval of each tensor over the node order.
+fn liveness(g: &Graph) -> Vec<(i64, i64)> {
+    let n = g.nodes.len() as i64;
+    g.tensors
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| {
+            let tid = TensorId(ti);
+            let start = match t.kind {
+                TensorKind::Input { .. } | TensorKind::Weight { .. } => -1,
+                _ => g.producer(tid).map(|p| p.0 as i64).unwrap_or(-1),
+            };
+            let mut end = match t.kind {
+                TensorKind::Output => n,
+                _ => start,
+            };
+            for (ni, node) in g.nodes.iter().enumerate() {
+                if node.inputs.contains(&tid) {
+                    end = end.max(ni as i64);
+                }
+            }
+            (start, end)
+        })
+        .collect()
+}
+
+/// First-fit placement of intervals: each candidate goes at the lowest
+/// address not overlapping any live-range-intersecting placed tensor.
+struct Placer {
+    placed: Vec<(u64, u64, i64, i64)>, // (addr, bytes, live_start, live_end)
+    capacity: u64,
+    high_water: u64,
+}
+
+impl Placer {
+    fn new(capacity: u64) -> Self {
+        Self { placed: Vec::new(), capacity, high_water: 0 }
+    }
+
+    fn place(&mut self, bytes: u64, live: (i64, i64)) -> Result<u64> {
+        let bytes = align(bytes.max(1));
+        let mut addr = 0u64;
+        loop {
+            let conflict = self.placed.iter().find(|&&(a, b, s, e)| {
+                let overlaps_addr = addr < a + b && a < addr + bytes;
+                let overlaps_live = live.0 <= e && s <= live.1;
+                overlaps_addr && overlaps_live
+            });
+            match conflict {
+                Some(&(a, b, _, _)) => addr = align(a + b),
+                None => break,
+            }
+            if addr + bytes > self.capacity {
+                bail!(
+                    "scratchpad overflow: need {} bytes at {addr}, capacity {}",
+                    bytes,
+                    self.capacity
+                );
+            }
+        }
+        if addr + bytes > self.capacity {
+            bail!("scratchpad overflow: {} bytes do not fit in {}", bytes, self.capacity);
+        }
+        self.placed.push((addr, bytes, live.0, live.1));
+        self.high_water = self.high_water.max(addr + bytes);
+        Ok(addr)
+    }
+}
+
+pub fn allocate(
+    g: &Graph,
+    cfg: &ClusterConfig,
+    double_buffer_activations: bool,
+) -> Result<AllocMap> {
+    allocate_with_slots(g, cfg, double_buffer_activations, 2)
+}
+
+/// Like [`allocate`], with a cap on rotating weight slots (1 disables
+/// the DMA-prefetch overlap — the ablation knob).
+pub fn allocate_with_slots(
+    g: &Graph,
+    cfg: &ClusterConfig,
+    double_buffer_activations: bool,
+    max_weight_slots: usize,
+) -> Result<AllocMap> {
+    let capacity = cfg.spm_bytes();
+    let live = liveness(g);
+    let nt = g.tensors.len();
+
+    let weight_ids: Vec<TensorId> = (0..nt)
+        .map(TensorId)
+        .filter(|&t| matches!(g.tensor(t).kind, TensorKind::Weight { .. }))
+        .collect();
+    let act_ids: Vec<TensorId> = (0..nt)
+        .map(TensorId)
+        .filter(|&t| !matches!(g.tensor(t).kind, TensorKind::Weight { .. }))
+        .collect();
+
+    let weight_total: u64 = weight_ids.iter().map(|&t| align(g.tensor(t).bytes())).sum();
+    let max_weight: u64 = weight_ids.iter().map(|&t| align(g.tensor(t).bytes())).max().unwrap_or(0);
+    // Peak activation demand. Pipelined: everything coexists (x2).
+    // Sequential: the maximum over node steps of concurrently-live
+    // activation bytes.
+    let act_total: u64 = if double_buffer_activations {
+        act_ids.iter().map(|&t| align(g.tensor(t).bytes())).sum::<u64>() * 2
+    } else {
+        (-1..=g.nodes.len() as i64)
+            .map(|step| {
+                act_ids
+                    .iter()
+                    .filter(|&&t| {
+                        let (s, e) = live[t.0];
+                        s <= step && step <= e
+                    })
+                    .map(|&t| align(g.tensor(t).bytes()))
+                    .sum::<u64>()
+            })
+            .max()
+            .unwrap_or(0)
+    };
+
+    // Candidate weight modes in preference order; first-fit
+    // fragmentation can defeat the arithmetic check, so each candidate
+    // attempts a *full* placement and falls through on overflow.
+    let mut candidates: Vec<(usize, bool)> = Vec::new(); // (slots, resident)
+    if weight_total + act_total <= capacity {
+        candidates.push((0, true));
+    }
+    if max_weight > 0 {
+        if max_weight_slots >= 2 && max_weight * 2 + act_total <= capacity {
+            candidates.push((2, false));
+        }
+        candidates.push((1, false));
+    } else if candidates.is_empty() {
+        candidates.push((0, true));
+    }
+
+    let mut last_err = None;
+    let mut placed: Option<(Vec<Option<[u64; 2]>>, WeightMode, Placer)> = None;
+    for (n_slots, resident) in candidates {
+        let attempt = || -> Result<(Vec<Option<[u64; 2]>>, WeightMode, Placer)> {
+            let mut spm_addr: Vec<Option<[u64; 2]>> = vec![None; nt];
+            let mut placer = Placer::new(capacity);
+            let whole = (-1i64, g.nodes.len() as i64);
+            // Weights first (whole-run lifetime keeps them clear of reuse).
+            let mode = if resident {
+                for &t in &weight_ids {
+                    let a = placer.place(g.tensor(t).bytes(), whole)?;
+                    spm_addr[t.0] = Some([a, a]);
+                }
+                WeightMode::Resident
+            } else {
+                let mut slots = Vec::new();
+                for _ in 0..n_slots {
+                    slots.push(placer.place(max_weight, whole)?);
+                }
+                WeightMode::Streamed { slots, slot_bytes: max_weight }
+            };
+            // Activations.
+            for &t in &act_ids {
+                let bytes = g.tensor(t).bytes();
+                if double_buffer_activations {
+                    // Double buffers coexist across the whole pipeline.
+                    let a0 = placer.place(bytes, whole)?;
+                    let a1 = placer.place(bytes, whole)?;
+                    spm_addr[t.0] = Some([a0, a1]);
+                } else {
+                    let a = placer.place(bytes, live[t.0])?;
+                    spm_addr[t.0] = Some([a, a]);
+                }
+            }
+            Ok((spm_addr, mode, placer))
+        };
+        match attempt() {
+            Ok(ok) => {
+                placed = Some(ok);
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let Some((spm_addr, weight_mode, placer)) = placed else {
+        bail!(
+            "workload does not fit: weights max {max_weight}B (total {weight_total}B), \
+             peak activations {act_total}B, SPM {capacity}B — needs finer tiling than \
+             this compiler performs ({})",
+            last_err.map(|e| e.to_string()).unwrap_or_default()
+        );
+    };
+
+    // External memory layout: inputs, then weights, then output region.
+    let mut ext_addr: Vec<Option<u64>> = vec![None; nt];
+    let mut ext_cursor = 0u64;
+    for ti in 0..nt {
+        let t = g.tensor(TensorId(ti));
+        match t.kind {
+            TensorKind::Input { .. } | TensorKind::Weight { .. } | TensorKind::Output => {
+                ext_addr[ti] = Some(ext_cursor);
+                ext_cursor += align(t.bytes());
+            }
+            TensorKind::Intermediate => {}
+        }
+    }
+
+    Ok(AllocMap {
+        spm_addr,
+        weight_mode,
+        ext_addr,
+        spm_used: placer.high_water,
+        ext_used: ext_cursor,
+        double_buffered: double_buffer_activations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::Graph;
+    use crate::config::ClusterConfig;
+
+    fn small_graph() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.add_input("x", &[1, 16, 16, 8], 1);
+        let c = g.conv2d("conv", x, 8, 3, 3, 1, 1, true, 8, 2).unwrap();
+        let p = g.maxpool2d("pool", c, 2, 2).unwrap();
+        let d = g.dense("fc", p, 8, false, 0, true, 3).unwrap();
+        g.mark_output(d);
+        g
+    }
+
+    fn no_overlap(g: &Graph, m: &AllocMap) {
+        // Any two tensors with SPM addresses and intersecting liveness
+        // must not overlap in address range.
+        let live = liveness(g);
+        for i in 0..g.tensors.len() {
+            for j in (i + 1)..g.tensors.len() {
+                let (Some(ai), Some(aj)) = (m.spm_addr[i], m.spm_addr[j]) else { continue };
+                let li = live[i];
+                let lj = live[j];
+                let live_overlap = m.double_buffered || (li.0 <= lj.1 && lj.0 <= li.1);
+                if !live_overlap {
+                    continue;
+                }
+                let (bi, bj) = (g.tensors[i].bytes(), g.tensors[j].bytes());
+                for a in ai {
+                    for b in aj {
+                        assert!(
+                            a + bi <= b || b + bj <= a,
+                            "tensors {i} and {j} overlap: {a}+{bi} vs {b}+{bj}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resident_weights_when_fit() {
+        let g = small_graph();
+        let m = allocate(&g, &ClusterConfig::fig6d(), false).unwrap();
+        assert_eq!(m.weight_mode, WeightMode::Resident);
+        assert!(m.spm_used <= ClusterConfig::fig6d().spm_bytes());
+        no_overlap(&g, &m);
+    }
+
+    #[test]
+    fn double_buffering_doubles_activation_footprint() {
+        let g = small_graph();
+        let single = allocate(&g, &ClusterConfig::fig6d(), false).unwrap();
+        let double = allocate(&g, &ClusterConfig::fig6d(), true).unwrap();
+        assert!(double.spm_used > single.spm_used);
+        no_overlap(&g, &double);
+        // Odd/even buffers must differ.
+        let out = g.outputs()[0];
+        let [a0, a1] = double.spm_addr[out.0].unwrap();
+        assert_ne!(a0, a1);
+    }
+
+    #[test]
+    fn streams_weights_when_too_big() {
+        // DAE-like stack: 640x128 + 8x 128x128 + 128x640 weights
+        // (~260KB) >> 128KB SPM, but the largest layer (80KB) fits.
+        let mut g = Graph::new("big");
+        let mut x = g.add_input("x", &[8, 640], 1);
+        x = g.dense("fc0", x, 128, true, 9, false, 100).unwrap();
+        for i in 1..9 {
+            x = g.dense(&format!("fc{i}"), x, 128, true, 8, false, 100 + i).unwrap();
+        }
+        x = g.dense("fc9", x, 640, false, 0, true, 109).unwrap();
+        g.mark_output(x);
+        let m = allocate(&g, &ClusterConfig::fig6d(), false).unwrap();
+        match &m.weight_mode {
+            WeightMode::Streamed { slots, slot_bytes } => {
+                assert!(!slots.is_empty());
+                assert!(*slot_bytes >= 640 * 128);
+            }
+            other => panic!("expected streamed weights, got {other:?}"),
+        }
+        no_overlap(&g, &m);
+    }
+
+    #[test]
+    fn impossible_workload_rejected() {
+        let mut g = Graph::new("huge");
+        // One activation bigger than the whole SPM.
+        let x = g.add_input("x", &[1, 1024, 1024, 16], 1);
+        let c = g.conv2d("conv", x, 16, 3, 3, 1, 1, true, 8, 2).unwrap();
+        g.mark_output(c);
+        assert!(allocate(&g, &ClusterConfig::fig6d(), false).is_err());
+    }
+
+    #[test]
+    fn ext_layout_covers_io_and_weights() {
+        let g = small_graph();
+        let m = allocate(&g, &ClusterConfig::fig6d(), false).unwrap();
+        for (ti, t) in g.tensors.iter().enumerate() {
+            match t.kind {
+                TensorKind::Intermediate => assert!(m.ext_addr[ti].is_none()),
+                _ => assert!(m.ext_addr[ti].is_some(), "{}", t.name),
+            }
+        }
+        assert!(m.ext_used > 0);
+    }
+}

@@ -1,0 +1,675 @@
+//! Asynchronous scheduling + device programming (SNAX-MLIR passes 3/4,
+//! paper Fig. 5.3–5.4).
+//!
+//! Translates a placed, allocated graph into per-core instruction
+//! streams:
+//!
+//! * **Sequential mode** — layer by layer, barrier-separated, with
+//!   weight-slot DMA prefetch overlapped when two slots exist.
+//! * **Pipelined mode** — the paper's virtual pipeline, unrolled: stage
+//!   `s` processes inference `t - s` in tick `t`; each core launches
+//!   its accelerator jobs fire-and-forget, runs its software kernels
+//!   while they execute, then awaits and barriers. Activations are
+//!   double-buffered by the allocator so adjacent inferences never
+//!   collide.
+//!
+//! Every accelerator interaction is emitted as explicit CSR writes
+//! against the register maps in [`crate::isa`] — the compute kernel
+//! (dims, shift, flags) and the dataflow kernel (streamer loop strides)
+//! of the paper's hybrid-coupling split.
+
+use anyhow::{bail, Result};
+
+use crate::config::{AccelKind, ClusterConfig};
+use crate::isa::{
+    dma_csr, dma_dir, gemm_csr, maxpool_csr, vecadd_csr, BarrierId, Instr, LayerClass,
+    Program, SwKernel, UnitId,
+};
+use crate::models::lcg::lcg_bytes;
+use crate::sim::job::{OpDesc, Region};
+
+use super::alloc::{AllocMap, WeightMode};
+use super::cost::cpu_cycles;
+use super::ir::{Graph, Node, NodeId, OpKind, TensorKind};
+use super::placement::{Device, Placement};
+
+/// Compilation mode (paper §VI-C: "the compiler determines whether to
+/// enable pipelined execution or default to sequential execution based
+/// on explicit configuration flags").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Sequential,
+    Pipelined,
+}
+
+pub struct CodegenInput<'a> {
+    pub graph: &'a Graph,
+    pub cfg: &'a ClusterConfig,
+    pub placement: &'a Placement,
+    pub alloc: &'a AllocMap,
+    pub mode: Mode,
+    /// Inferences to run back-to-back (pipelined throughput needs > 1).
+    pub n_inferences: u32,
+}
+
+struct Ctx<'a> {
+    g: &'a Graph,
+    cfg: &'a ClusterConfig,
+    place: &'a Placement,
+    alloc: &'a AllocMap,
+    streams: Vec<Vec<Instr>>,
+    descs: Vec<OpDesc>,
+    next_barrier: u16,
+}
+
+impl<'a> Ctx<'a> {
+    fn core_idx(&self, core: crate::isa::CoreId) -> usize {
+        self.cfg.core_index(core)
+    }
+
+    fn push(&mut self, core: usize, i: Instr) {
+        self.streams[core].push(i);
+    }
+
+    fn sync(&mut self) {
+        let id = BarrierId(self.next_barrier);
+        self.next_barrier += 1;
+        let participants = self.cfg.cores.len() as u8;
+        if participants == 1 {
+            return; // single core: program order is the barrier
+        }
+        for s in &mut self.streams {
+            s.push(Instr::Barrier { id, participants });
+        }
+    }
+
+    fn desc(&mut self, d: OpDesc) -> u64 {
+        self.descs.push(d);
+        (self.descs.len() - 1) as u64
+    }
+
+    fn layer_class(kind: &OpKind) -> LayerClass {
+        match kind {
+            OpKind::Conv2d { .. } => LayerClass::Conv,
+            OpKind::MaxPool2d { .. } => LayerClass::MaxPool,
+            OpKind::Dense { .. } => LayerClass::Dense,
+            _ => LayerClass::Elementwise,
+        }
+    }
+
+    // -- job emission helpers ------------------------------------------------
+
+    /// Emit a 2-D DMA job on the DMA-controlling core. Does not await.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_dma(
+        &mut self,
+        core: usize,
+        src: u64,
+        dst: u64,
+        rows: u64,
+        row_bytes: u64,
+        src_stride: u64,
+        dst_stride: u64,
+        dir: u64,
+    ) {
+        let unit = self.cfg.dma_unit();
+        let w = |reg, val| Instr::CsrWrite { unit, reg, val };
+        self.push(core, w(dma_csr::SRC, src));
+        self.push(core, w(dma_csr::DST, dst));
+        self.push(core, w(dma_csr::ROW_BYTES, row_bytes));
+        self.push(core, w(dma_csr::ROWS, rows));
+        self.push(core, w(dma_csr::SRC_STRIDE, src_stride));
+        self.push(core, w(dma_csr::DST_STRIDE, dst_stride));
+        self.push(core, w(dma_csr::DIR, dir));
+        self.push(core, Instr::Launch { unit });
+    }
+
+    /// GeMM-accelerator job for a dense/conv node. Does not await.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_gemm_job(
+        &mut self,
+        core: usize,
+        unit: UnitId,
+        m: u64,
+        k: u64,
+        n: u64,
+        a_addr: u64,
+        b_addr: u64,
+        c_addr: u64,
+        a_row: u64,
+        a_strides: [u64; 3],
+        shift: u32,
+        relu: bool,
+        i32_out: bool,
+        desc: u64,
+    ) {
+        let w = |reg, val| Instr::CsrWrite { unit, reg, val };
+        let c_elt = if i32_out { 4u64 } else { 1 };
+        self.push(core, w(gemm_csr::M, m));
+        self.push(core, w(gemm_csr::K, k));
+        self.push(core, w(gemm_csr::N, n));
+        self.push(core, w(gemm_csr::PTR_A, a_addr));
+        self.push(core, w(gemm_csr::PTR_B, b_addr));
+        self.push(core, w(gemm_csr::PTR_C, c_addr));
+        self.push(core, w(gemm_csr::ROW_A, a_row));
+        self.push(core, w(gemm_csr::ROW_B, n));
+        self.push(core, w(gemm_csr::ROW_C, c_elt * n));
+        self.push(core, w(gemm_csr::STRIDE_A0, a_strides[0]));
+        self.push(core, w(gemm_csr::STRIDE_A1, a_strides[1]));
+        self.push(core, w(gemm_csr::STRIDE_A2, a_strides[2]));
+        self.push(core, w(gemm_csr::STRIDE_B0, 8 * n));
+        self.push(core, w(gemm_csr::STRIDE_B1, 8));
+        self.push(core, w(gemm_csr::STRIDE_B2, 0));
+        self.push(core, w(gemm_csr::STRIDE_C0, 8 * c_elt));
+        self.push(core, w(gemm_csr::STRIDE_C1, 8 * c_elt * n));
+        self.push(core, w(gemm_csr::SHIFT, shift as u64));
+        let flags = u64::from(relu) | (u64::from(i32_out) << 1);
+        self.push(core, w(gemm_csr::FLAGS, flags));
+        self.push(core, w(gemm_csr::DESC, desc));
+        self.push(core, Instr::Launch { unit });
+    }
+
+    /// Emit the launch (not await) of one graph node for pipeline
+    /// iteration `iter`. Returns the executing core index.
+    fn emit_node_launch(&mut self, ni: NodeId, iter: u64) -> Result<usize> {
+        let node = &self.g.nodes[ni.0];
+        let device = self.place.devices[ni.0];
+        let class = Self::layer_class(&node.kind);
+        match device {
+            Device::Accel(unit) => {
+                let core = self.core_idx(self.cfg.controlling_core(unit));
+                self.push(core, Instr::SpanBegin { layer: ni.0 as u16, class });
+                self.emit_accel_node(core, unit, node, ni, iter)?;
+                Ok(core)
+            }
+            Device::Cpu(c) => {
+                let core = self.core_idx(c);
+                self.push(core, Instr::SpanBegin { layer: ni.0 as u16, class });
+                let op = self.node_op_desc(node, ni, iter);
+                let cycles = cpu_cycles(self.g, node);
+                self.push(core, Instr::Sw { kernel: SwKernel { cycles, class, op: Some(op) } });
+                self.push(core, Instr::SpanEnd { layer: ni.0 as u16 });
+                Ok(core)
+            }
+        }
+    }
+
+    /// Await + span end for an accelerator node.
+    fn emit_node_await(&mut self, ni: NodeId, core: usize, unit: UnitId) {
+        self.push(core, Instr::AwaitIdle { unit });
+        self.push(core, Instr::SpanEnd { layer: ni.0 as u16 });
+    }
+
+    fn weight_addr(&self, node: &Node, ni: NodeId) -> u64 {
+        self.alloc.weight_spm(node.inputs[1], ni.0)
+    }
+
+    fn emit_accel_node(
+        &mut self,
+        core: usize,
+        unit: UnitId,
+        node: &Node,
+        ni: NodeId,
+        iter: u64,
+    ) -> Result<()> {
+        let a = self.alloc.spm(node.inputs[0], iter);
+        let out = self.alloc.spm(node.output, iter);
+        let kind = self.cfg.accelerators[unit.0 as usize].kind;
+        match (kind, &node.kind) {
+            (AccelKind::Gemm, OpKind::Dense { relu, shift, logits }) => {
+                let wd = self.g.tensor(node.inputs[1]);
+                let (k, n) = (wd.dims[0] as u64, wd.dims[1] as u64);
+                let m = self.g.tensor(node.output).dims[0] as u64;
+                if m % 8 != 0 || k % 8 != 0 || n % 8 != 0 {
+                    bail!("dense '{}' dims {m}x{k}x{n} not 8-aligned", node.name);
+                }
+                let b = self.weight_addr(node, ni);
+                let desc = self.desc(OpDesc::Gemm {
+                    a: Region(a),
+                    b: Region(b),
+                    c: Region(out),
+                    m: m as u32,
+                    k: k as u32,
+                    n: n as u32,
+                    shift: if *logits { 0 } else { *shift },
+                    relu: *relu,
+                    i32_out: *logits,
+                });
+                self.emit_gemm_job(
+                    core, unit, m, k, n, a, b, out,
+                    k,                    // A row pitch
+                    [8, 0, 8 * k],        // k-walk, reuse across n, next 8 rows
+                    if *logits { 0 } else { *shift },
+                    *relu,
+                    *logits,
+                    desc,
+                );
+                Ok(())
+            }
+            (AccelKind::Gemm, OpKind::Conv2d { kh, kw, stride, pad, relu, shift }) => {
+                let xd = self.g.tensor(node.inputs[0]);
+                let od = self.g.tensor(node.output);
+                let (n_b, h, w_dim, cin) = (xd.dims[0], xd.dims[1], xd.dims[2], xd.dims[3]);
+                let (ho, wo, cout) = (od.dims[1], od.dims[2], od.dims[3]);
+                let m = (n_b * ho * wo) as u64;
+                let k = (kh * kw * cin) as u64;
+                let n = cout as u64;
+                if m % 8 != 0 || k % 8 != 0 || n % 8 != 0 {
+                    bail!("conv '{}' im2col dims {m}x{k}x{n} not 8-aligned", node.name);
+                }
+                let b = self.weight_addr(node, ni);
+                let desc = self.desc(OpDesc::Conv2d {
+                    input: Region(a),
+                    weights: Region(b),
+                    out: Region(out),
+                    n: n_b,
+                    h,
+                    w: w_dim,
+                    cin,
+                    cout,
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    pad: *pad,
+                    shift: *shift,
+                    relu: *relu,
+                });
+                // im2col streamer approximation: adjacent patches start
+                // stride*cin bytes apart; the k-walk advances through
+                // the patch row.
+                let patch_pitch = (*stride * cin) as u64;
+                self.emit_gemm_job(
+                    core, unit, m, k, n, a, b, out,
+                    patch_pitch.max(8),
+                    [8, 0, 8 * patch_pitch.max(8)],
+                    *shift,
+                    *relu,
+                    false,
+                    desc,
+                );
+                Ok(())
+            }
+            (AccelKind::MaxPool, OpKind::MaxPool2d { k, s }) => {
+                let xd = self.g.tensor(node.inputs[0]);
+                let (h, w_dim, c) = (xd.dims[1], xd.dims[2], xd.dims[3]);
+                let desc = self.desc(OpDesc::MaxPool {
+                    input: Region(a),
+                    out: Region(out),
+                    n: xd.dims[0],
+                    h,
+                    w: w_dim,
+                    c,
+                    k: *k,
+                    s: *s,
+                });
+                let w = |reg, val| Instr::CsrWrite { unit, reg, val };
+                self.push(core, w(maxpool_csr::H, h as u64));
+                self.push(core, w(maxpool_csr::W, w_dim as u64));
+                self.push(core, w(maxpool_csr::C, c as u64));
+                self.push(core, w(maxpool_csr::KERNEL, *k as u64));
+                self.push(core, w(maxpool_csr::STRIDE, *s as u64));
+                self.push(core, w(maxpool_csr::PTR_IN, a));
+                self.push(core, w(maxpool_csr::PTR_OUT, out));
+                self.push(core, w(maxpool_csr::STRIDE_IN0, 64));
+                self.push(core, w(maxpool_csr::STRIDE_IN1, 0));
+                self.push(core, w(maxpool_csr::STRIDE_OUT0, 64));
+                self.push(core, w(maxpool_csr::DESC, desc));
+                self.push(core, Instr::Launch { unit });
+                Ok(())
+            }
+            (AccelKind::VecAdd, OpKind::ResidualAdd { relu }) => {
+                let b_in = self.alloc.spm(node.inputs[1], iter);
+                let len = self.g.tensor(node.output).elems() as u64;
+                let desc = self.desc(OpDesc::VecAdd {
+                    a: Region(a),
+                    b: Region(b_in),
+                    out: Region(out),
+                    len: len as u32,
+                    relu: *relu,
+                });
+                let w = |reg, val| Instr::CsrWrite { unit, reg, val };
+                self.push(core, w(vecadd_csr::LEN, len));
+                self.push(core, w(vecadd_csr::PTR_A, a));
+                self.push(core, w(vecadd_csr::PTR_B, b_in));
+                self.push(core, w(vecadd_csr::PTR_OUT, out));
+                self.push(core, w(vecadd_csr::DESC, desc));
+                self.push(core, Instr::Launch { unit });
+                Ok(())
+            }
+            (k, op) => bail!(
+                "placement bug: node '{}' ({op:?}) mapped to {k:?} accelerator",
+                node.name
+            ),
+        }
+    }
+
+    /// Functional descriptor for a CPU-executed node.
+    fn node_op_desc(&mut self, node: &Node, ni: NodeId, iter: u64) -> OpDesc {
+        let a = self.alloc.spm(node.inputs[0], iter);
+        let out = self.alloc.spm(node.output, iter);
+        match &node.kind {
+            OpKind::Conv2d { kh, kw, stride, pad, relu, shift } => {
+                let xd = self.g.tensor(node.inputs[0]);
+                let od = self.g.tensor(node.output);
+                OpDesc::Conv2d {
+                    input: Region(a),
+                    weights: Region(self.weight_addr(node, ni)),
+                    out: Region(out),
+                    n: xd.dims[0],
+                    h: xd.dims[1],
+                    w: xd.dims[2],
+                    cin: xd.dims[3],
+                    cout: od.dims[3],
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    pad: *pad,
+                    shift: *shift,
+                    relu: *relu,
+                }
+            }
+            OpKind::Dense { relu, shift, logits } => {
+                let wd = self.g.tensor(node.inputs[1]);
+                OpDesc::Gemm {
+                    a: Region(a),
+                    b: Region(self.weight_addr(node, ni)),
+                    c: Region(out),
+                    m: self.g.tensor(node.output).dims[0],
+                    k: wd.dims[0],
+                    n: wd.dims[1],
+                    shift: if *logits { 0 } else { *shift },
+                    relu: *relu,
+                    i32_out: *logits,
+                }
+            }
+            OpKind::MaxPool2d { k, s } => {
+                let xd = self.g.tensor(node.inputs[0]);
+                OpDesc::MaxPool {
+                    input: Region(a),
+                    out: Region(out),
+                    n: xd.dims[0],
+                    h: xd.dims[1],
+                    w: xd.dims[2],
+                    c: xd.dims[3],
+                    k: *k,
+                    s: *s,
+                }
+            }
+            OpKind::GlobalAvgPool => {
+                let xd = self.g.tensor(node.inputs[0]);
+                OpDesc::GlobalAvgPool {
+                    input: Region(a),
+                    out: Region(out),
+                    n: xd.dims[0],
+                    h: xd.dims[1],
+                    w: xd.dims[2],
+                    c: xd.dims[3],
+                }
+            }
+            OpKind::ResidualAdd { relu } => OpDesc::VecAdd {
+                a: Region(a),
+                b: Region(self.alloc.spm(node.inputs[1], iter)),
+                out: Region(out),
+                len: self.g.tensor(node.output).elems() as u32,
+                relu: *relu,
+            },
+            OpKind::TileRows { rows } => {
+                let xd = self.g.tensor(node.inputs[0]);
+                OpDesc::TileRows {
+                    input: Region(a),
+                    out: Region(out),
+                    len: xd.elems() as u32,
+                    rows: *rows,
+                }
+            }
+        }
+    }
+
+    // -- data movement ---------------------------------------------------------
+
+    /// DMA a network input from ext memory into its SPM buffer.
+    fn emit_input_load(&mut self, iter: u64) -> usize {
+        let dma_core = self.core_idx(crate::isa::CoreId(self.cfg.dma_core));
+        let n_layers = self.g.nodes.len() as u16;
+        self.push(dma_core, Instr::SpanBegin { layer: n_layers, class: LayerClass::DataMove });
+        for t in self.g.inputs() {
+            let td = self.g.tensor(t);
+            let src = self.alloc.ext(t);
+            let dst = self.alloc.spm(t, iter);
+            self.emit_dma(dma_core, src, dst, 1, td.bytes(), 0, 0, dma_dir::EXT_TO_SPM);
+        }
+        dma_core
+    }
+
+    /// DMA network outputs back to ext memory (region per inference).
+    fn emit_output_store(&mut self, iter: u64) -> usize {
+        let dma_core = self.core_idx(crate::isa::CoreId(self.cfg.dma_core));
+        let n_layers = self.g.nodes.len() as u16;
+        self.push(
+            dma_core,
+            Instr::SpanBegin { layer: n_layers + 1, class: LayerClass::DataMove },
+        );
+        for t in self.g.outputs() {
+            let td = self.g.tensor(t);
+            let bytes = td.bytes();
+            let src = self.alloc.spm(t, iter);
+            let dst = self.alloc.ext(t) + iter * bytes.div_ceil(64) * 64;
+            self.emit_dma(dma_core, src, dst, 1, bytes, 0, 0, dma_dir::SPM_TO_EXT);
+        }
+        dma_core
+    }
+
+    fn emit_weight_load(&mut self, ni: NodeId) {
+        let node = &self.g.nodes[ni.0];
+        let Some(&wt) = node.inputs.get(1) else { return };
+        if !matches!(self.g.tensor(wt).kind, TensorKind::Weight { .. }) {
+            return;
+        }
+        let dma_core = self.core_idx(crate::isa::CoreId(self.cfg.dma_core));
+        let src = self.alloc.ext(wt);
+        let dst = self.alloc.weight_spm(wt, ni.0);
+        let bytes = self.g.tensor(wt).bytes();
+        self.emit_dma(dma_core, src, dst, 1, bytes, 0, 0, dma_dir::EXT_TO_SPM);
+    }
+
+    fn await_dma(&mut self, core: usize) {
+        self.push(core, Instr::AwaitIdle { unit: self.cfg.dma_unit() });
+    }
+
+    fn end_dma_span(&mut self, core: usize, out: bool) {
+        let n_layers = self.g.nodes.len() as u16;
+        let layer = if out { n_layers + 1 } else { n_layers };
+        self.push(core, Instr::SpanEnd { layer });
+    }
+}
+
+/// Build the external-memory image: inputs and weights from their seeds.
+fn ext_image(g: &Graph, alloc: &AllocMap) -> Vec<(u64, Vec<u8>)> {
+    let mut init = Vec::new();
+    for (ti, t) in g.tensors.iter().enumerate() {
+        let seed = match t.kind {
+            TensorKind::Input { seed } | TensorKind::Weight { seed } => seed,
+            _ => continue,
+        };
+        let addr = alloc.ext_addr[ti].expect("io tensor has ext address");
+        init.push((addr, lcg_bytes(seed, t.bytes() as usize)));
+    }
+    init
+}
+
+pub fn generate(input: &CodegenInput) -> Result<Program> {
+    let g = input.graph;
+    g.validate()?;
+    let mut ctx = Ctx {
+        g,
+        cfg: input.cfg,
+        place: input.placement,
+        alloc: input.alloc,
+        streams: vec![Vec::new(); input.cfg.cores.len()],
+        descs: Vec::new(),
+        next_barrier: 0,
+    };
+    match input.mode {
+        Mode::Sequential => sequential(&mut ctx, input.n_inferences)?,
+        Mode::Pipelined => pipelined(&mut ctx, input.n_inferences)?,
+    }
+    let mut layer_names: Vec<String> = g.nodes.iter().map(|n| n.name.clone()).collect();
+    layer_names.push("dma_in".into());
+    layer_names.push("dma_out".into());
+    Ok(Program {
+        streams: ctx.streams,
+        ext_mem_init: ext_image(g, input.alloc),
+        layer_names,
+        descs: ctx.descs,
+    })
+}
+
+/// Layer-by-layer execution with barrier separation. Weight streaming
+/// overlaps the *next* layer's weight DMA with the current layer's
+/// compute when two slots exist.
+fn sequential(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
+    let streamed = matches!(ctx.alloc.weight_mode, WeightMode::Streamed { .. });
+    let two_slots = matches!(&ctx.alloc.weight_mode,
+        WeightMode::Streamed { slots, .. } if slots.len() == 2);
+    let n_nodes = ctx.g.nodes.len();
+    for _inf in 0..n_inferences {
+        // Inputs in. (Sequential mode uses buffer 0 everywhere.)
+        let dma_core = ctx.emit_input_load(0);
+        // Preload first layer's weights behind the input transfer.
+        if streamed {
+            ctx.emit_weight_load(NodeId(0));
+        } else {
+            // Resident weights: load them all once up-front (cheap to
+            // re-issue per inference; the data is identical).
+            for ni in 0..n_nodes {
+                let node = &ctx.g.nodes[ni];
+                if node.inputs.len() > 1
+                    && matches!(ctx.g.tensor(node.inputs[1]).kind, TensorKind::Weight { .. })
+                {
+                    ctx.emit_weight_load(NodeId(ni));
+                }
+            }
+        }
+        ctx.await_dma(dma_core);
+        ctx.end_dma_span(dma_core, false);
+        ctx.sync();
+
+        for ni in 0..n_nodes {
+            let node_id = NodeId(ni);
+            let device = ctx.place.devices[ni];
+            let exec_core = ctx.emit_node_launch(node_id, 0)?;
+            // Overlap: prefetch next streamed weights while this layer
+            // runs (two slots), or serialize (one slot handled below).
+            if streamed && two_slots && ni + 1 < n_nodes {
+                ctx.emit_weight_load(NodeId(ni + 1));
+            }
+            if let Device::Accel(unit) = device {
+                ctx.emit_node_await(node_id, exec_core, unit);
+            }
+            if streamed {
+                let dc = ctx.core_idx(crate::isa::CoreId(ctx.cfg.dma_core));
+                ctx.await_dma(dc);
+                if !two_slots && ni + 1 < n_nodes {
+                    // Single slot: next weights can only load after this
+                    // layer finished (it reads the slot).
+                    ctx.sync();
+                    ctx.emit_weight_load(NodeId(ni + 1));
+                    ctx.await_dma(dc);
+                }
+            }
+            ctx.sync();
+        }
+
+        let dma_core = ctx.emit_output_store(0);
+        ctx.await_dma(dma_core);
+        ctx.end_dma_span(dma_core, true);
+        ctx.sync();
+    }
+    Ok(())
+}
+
+/// The unrolled virtual pipeline (paper Fig. 5): stages = [input DMA,
+/// node 0, ..., node N-1, output DMA]; stage `s` handles inference
+/// `t - s` in tick `t`; all cores barrier between ticks.
+fn pipelined(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
+    if matches!(ctx.alloc.weight_mode, WeightMode::Streamed { .. }) {
+        bail!(
+            "pipelined mode requires resident weights (per-layer weight \
+             streaming would serialize the pipeline); graph '{}' overflows SPM",
+            ctx.g.name
+        );
+    }
+    if !ctx.alloc.double_buffered {
+        bail!("pipelined mode requires double-buffered activations");
+    }
+    let n_nodes = ctx.g.nodes.len();
+    let n_stages = n_nodes + 2;
+    let dma_core = ctx.core_idx(crate::isa::CoreId(ctx.cfg.dma_core));
+
+    // Load all weights once.
+    for ni in 0..n_nodes {
+        let node = &ctx.g.nodes[ni];
+        if node.inputs.len() > 1
+            && matches!(ctx.g.tensor(node.inputs[1]).kind, TensorKind::Weight { .. })
+        {
+            ctx.emit_weight_load(NodeId(ni));
+        }
+    }
+    ctx.await_dma(dma_core);
+    ctx.sync();
+
+    let ticks = n_inferences as u64 + n_stages as u64 - 1;
+    for t in 0..ticks {
+        // Phase A: launches + CPU kernels. Accel launches first so the
+        // units run while CPU stages execute (asynchronous control).
+        let mut awaits: Vec<(NodeId, usize, UnitId)> = Vec::new();
+        let mut dma_busy = false;
+        // Input DMA stage (s = 0) handles inference t.
+        if t < n_inferences as u64 {
+            ctx.emit_input_load(t);
+            dma_busy = true;
+        }
+        // Node stages s = 1..=n_nodes handle inference t - s.
+        for ni in 0..n_nodes {
+            let s = ni as u64 + 1;
+            if t < s {
+                continue;
+            }
+            let inf = t - s;
+            if inf >= n_inferences as u64 {
+                continue;
+            }
+            let node_id = NodeId(ni);
+            let device = ctx.place.devices[ni];
+            match device {
+                Device::Accel(unit) => {
+                    let core = ctx.emit_node_launch(node_id, inf)?;
+                    awaits.push((node_id, core, unit));
+                }
+                Device::Cpu(_) => {
+                    // CPU kernels are emitted in phase A too — the core
+                    // blocks on them after issuing its launches; that is
+                    // exactly the paper's "FC on the RISC-V core while
+                    // accelerators run" overlap.
+                    ctx.emit_node_launch(node_id, inf)?;
+                }
+            }
+        }
+        // Output DMA stage (s = n_stages-1) handles inference t-s.
+        let s_out = n_stages as u64 - 1;
+        if t >= s_out && t - s_out < n_inferences as u64 {
+            ctx.emit_output_store(t - s_out);
+            dma_busy = true;
+        }
+        // Phase B: awaits, then the tick barrier.
+        for (node_id, core, unit) in awaits {
+            ctx.emit_node_await(node_id, core, unit);
+        }
+        if dma_busy {
+            ctx.await_dma(dma_core);
+            ctx.end_dma_span(dma_core, t >= s_out);
+        }
+        ctx.sync();
+    }
+    Ok(())
+}

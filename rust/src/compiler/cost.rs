@@ -1,0 +1,54 @@
+//! RV32I software cost model — cycle estimates for workload sections
+//! that fall back to a management core (the paper's CPU path).
+//!
+//! Constants live in [`crate::energy::calib`] with their anchors.
+
+use crate::energy::calib::*;
+
+use super::ir::{Graph, Node, OpKind};
+
+/// Cycles for node `n` executed in software on a management core.
+pub fn cpu_cycles(g: &Graph, n: &Node) -> u64 {
+    let out = g.tensor(n.output);
+    let base = match n.kind {
+        OpKind::Conv2d { kh, kw, .. } => {
+            let wd = g.tensor(n.inputs[1]);
+            let cin = (wd.dims[0] / (kh * kw)) as u64;
+            out.elems() * kh as u64 * kw as u64 * cin * CPU_MAC_CONV
+        }
+        OpKind::Dense { .. } => {
+            let wd = g.tensor(n.inputs[1]);
+            out.elems() * wd.dims[0] as u64 * CPU_MAC_FC
+        }
+        OpKind::MaxPool2d { k, .. } => out.elems() * (k as u64 * k as u64) * CPU_POOL_OP,
+        OpKind::GlobalAvgPool => {
+            let xd = g.tensor(n.inputs[0]);
+            xd.elems() * CPU_AVG
+        }
+        OpKind::ResidualAdd { .. } => out.elems() * CPU_ELEM,
+        OpKind::TileRows { .. } => out.elems() * CPU_ELEM,
+    };
+    base + CPU_KERNEL_OVERHEAD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::Graph;
+
+    #[test]
+    fn conv_dominates_fig6a_baseline() {
+        // The Fig. 8 story requires conv ~99% of CPU time on the
+        // Fig. 6a net.
+        let mut g = Graph::new("fig6a-ish");
+        let x = g.add_input("x", &[1, 32, 32, 16], 1);
+        let c = g.conv2d("conv", x, 16, 3, 3, 1, 1, true, 8, 2).unwrap();
+        let p = g.maxpool2d("pool", c, 8, 8).unwrap();
+        let d = g.dense("fc", p, 8, false, 0, true, 3).unwrap();
+        g.mark_output(d);
+        let cycles: Vec<u64> = g.nodes.iter().map(|n| cpu_cycles(&g, n)).collect();
+        let total: u64 = cycles.iter().sum();
+        assert!(cycles[0] as f64 / total as f64 > 0.98, "conv share {:?}", cycles);
+        assert!(cycles[1] > cycles[2], "pool should outweigh fc: {cycles:?}");
+    }
+}

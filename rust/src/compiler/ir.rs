@@ -1,0 +1,398 @@
+//! Tensor-workload IR — the compiler's input, playing the role of the
+//! MLIR func/linalg level in SNAX-MLIR.
+//!
+//! A [`Graph`] is a DAG of quantized-int8 tensor ops over named tensors.
+//! Builders perform shape inference and validity checks, so every graph
+//! reaching the passes is well-formed.
+
+use anyhow::{bail, ensure, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 => 4,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Where a tensor's bytes come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Network input, materialized from the shared deterministic LCG.
+    Input { seed: u64 },
+    /// Layer weights, materialized from the LCG (bit-exact with the JAX
+    /// side, see `python/compile/model.py`).
+    Weight { seed: u64 },
+    /// Produced by a node.
+    Intermediate,
+    /// Produced by a node and DMA'd back to external memory at the end.
+    Output,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorDesc {
+    pub name: String,
+    /// Row-major dims; activations NHWC, matmul operands [M,K]/[K,N].
+    pub dims: Vec<u32>,
+    pub dtype: DType,
+    pub kind: TensorKind,
+}
+
+impl TensorDesc {
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.elems() * self.dtype.bytes() as u64
+    }
+}
+
+/// Operation kinds. `shift` is the requantization shift; ops with
+/// `logits` (or no requant) produce int32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// NHWC conv; inputs: [activation, weight]. Weight stored
+    /// `[kh*kw*cin, cout]` (im2col layout).
+    Conv2d { kh: u32, kw: u32, stride: u32, pad: u32, relu: bool, shift: u32 },
+    /// NHWC max-pool, kernel `k` stride `s`.
+    MaxPool2d { k: u32, s: u32 },
+    /// `[M,K] x [K,N]`; inputs: [activation, weight]. `logits` keeps
+    /// int32 output (no requant).
+    Dense { relu: bool, shift: u32, logits: bool },
+    /// NHWC -> [N, C] int8.
+    GlobalAvgPool,
+    /// Saturating int8 add of two equal-shape tensors.
+    ResidualAdd { relu: bool },
+    /// Replicate a [1, len] row into [rows, len] (GeMM M-tile padding).
+    TileRows { rows: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub kind: OpKind,
+    /// Activation inputs first, then weights.
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+}
+
+/// A complete workload graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<TensorDesc>,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.into(), ..Default::default() }
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &TensorDesc {
+        &self.tensors[id.0]
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    fn add_tensor(&mut self, desc: TensorDesc) -> TensorId {
+        self.tensors.push(desc);
+        TensorId(self.tensors.len() - 1)
+    }
+
+    pub fn add_input(&mut self, name: &str, dims: &[u32], seed: u64) -> TensorId {
+        self.add_tensor(TensorDesc {
+            name: name.into(),
+            dims: dims.to_vec(),
+            dtype: DType::I8,
+            kind: TensorKind::Input { seed },
+        })
+    }
+
+    fn add_weight(&mut self, name: &str, dims: &[u32], seed: u64) -> TensorId {
+        self.add_tensor(TensorDesc {
+            name: name.into(),
+            dims: dims.to_vec(),
+            dtype: DType::I8,
+            kind: TensorKind::Weight { seed },
+        })
+    }
+
+    fn add_node(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        out_dims: Vec<u32>,
+        out_dtype: DType,
+    ) -> (NodeId, TensorId) {
+        let out = self.add_tensor(TensorDesc {
+            name: format!("{name}.out"),
+            dims: out_dims,
+            dtype: out_dtype,
+            kind: TensorKind::Intermediate,
+        });
+        self.nodes.push(Node { name: name.into(), kind, inputs, output: out });
+        (NodeId(self.nodes.len() - 1), out)
+    }
+
+    /// NHWC conv + fused requant/relu. Returns the output tensor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        cout: u32,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        pad: u32,
+        relu: bool,
+        shift: u32,
+        w_seed: u64,
+    ) -> Result<TensorId> {
+        let xd = self.tensor(x);
+        ensure!(xd.dims.len() == 4, "{name}: conv input must be NHWC");
+        ensure!(xd.dtype == DType::I8, "{name}: conv input must be int8");
+        let (n, h, w, cin) = (xd.dims[0], xd.dims[1], xd.dims[2], xd.dims[3]);
+        ensure!(h + 2 * pad >= kh && w + 2 * pad >= kw, "{name}: kernel exceeds input");
+        let ho = (h + 2 * pad - kh) / stride + 1;
+        let wo = (w + 2 * pad - kw) / stride + 1;
+        let wt = self.add_weight(&format!("{name}.w"), &[kh * kw * cin, cout], w_seed);
+        let (_, out) = self.add_node(
+            name,
+            OpKind::Conv2d { kh, kw, stride, pad, relu, shift },
+            vec![x, wt],
+            vec![n, ho, wo, cout],
+            DType::I8,
+        );
+        Ok(out)
+    }
+
+    pub fn maxpool2d(&mut self, name: &str, x: TensorId, k: u32, s: u32) -> Result<TensorId> {
+        let xd = self.tensor(x);
+        ensure!(xd.dims.len() == 4, "{name}: pool input must be NHWC");
+        let (n, h, w, c) = (xd.dims[0], xd.dims[1], xd.dims[2], xd.dims[3]);
+        ensure!(h >= k && w >= k, "{name}: pool kernel exceeds input");
+        let ho = (h - k) / s + 1;
+        let wo = (w - k) / s + 1;
+        let (_, out) = self.add_node(
+            name,
+            OpKind::MaxPool2d { k, s },
+            vec![x],
+            vec![n, ho, wo, c],
+            DType::I8,
+        );
+        Ok(out)
+    }
+
+    /// Dense layer over `[M, K]` input (input is viewed as 2-D by
+    /// flattening trailing dims).
+    pub fn dense(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        n_out: u32,
+        relu: bool,
+        shift: u32,
+        logits: bool,
+        w_seed: u64,
+    ) -> Result<TensorId> {
+        let xd = self.tensor(x);
+        let m = xd.dims[0];
+        let k: u32 = xd.dims[1..].iter().product();
+        ensure!(k > 0, "{name}: empty dense input");
+        let wt = self.add_weight(&format!("{name}.w"), &[k, n_out], w_seed);
+        let (_, out) = self.add_node(
+            name,
+            OpKind::Dense { relu, shift, logits },
+            vec![x, wt],
+            vec![m, n_out],
+            if logits { DType::I32 } else { DType::I8 },
+        );
+        Ok(out)
+    }
+
+    pub fn global_avgpool(&mut self, name: &str, x: TensorId) -> Result<TensorId> {
+        let xd = self.tensor(x);
+        ensure!(xd.dims.len() == 4, "{name}: avgpool input must be NHWC");
+        let (n, c) = (xd.dims[0], xd.dims[3]);
+        let (_, out) =
+            self.add_node(name, OpKind::GlobalAvgPool, vec![x], vec![n, c], DType::I8);
+        Ok(out)
+    }
+
+    pub fn residual_add(
+        &mut self,
+        name: &str,
+        a: TensorId,
+        b: TensorId,
+        relu: bool,
+    ) -> Result<TensorId> {
+        let (ad, bd) = (self.tensor(a), self.tensor(b));
+        ensure!(ad.dims == bd.dims, "{name}: shape mismatch {:?} vs {:?}", ad.dims, bd.dims);
+        let dims = ad.dims.clone();
+        let (_, out) =
+            self.add_node(name, OpKind::ResidualAdd { relu }, vec![a, b], dims, DType::I8);
+        Ok(out)
+    }
+
+    pub fn tile_rows(&mut self, name: &str, x: TensorId, rows: u32) -> Result<TensorId> {
+        let xd = self.tensor(x);
+        let len: u32 = xd.dims.iter().product();
+        let (_, out) = self.add_node(
+            name,
+            OpKind::TileRows { rows },
+            vec![x],
+            vec![rows, len],
+            DType::I8,
+        );
+        Ok(out)
+    }
+
+    /// Mark a tensor as a network output (DMA'd to external memory).
+    pub fn mark_output(&mut self, t: TensorId) {
+        self.tensors[t.0].kind = TensorKind::Output;
+    }
+
+    /// Network inputs in declaration order.
+    pub fn inputs(&self) -> Vec<TensorId> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t.kind, TensorKind::Input { .. }))
+            .map(|(i, _)| TensorId(i))
+            .collect()
+    }
+
+    pub fn outputs(&self) -> Vec<TensorId> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t.kind, TensorKind::Output))
+            .map(|(i, _)| TensorId(i))
+            .collect()
+    }
+
+    /// The node producing tensor `t`, if any.
+    pub fn producer(&self, t: TensorId) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.output == t).map(NodeId)
+    }
+
+    /// Total MACs across the graph (roofline / reporting).
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| self.node_macs(n)).sum()
+    }
+
+    fn node_macs(&self, n: &Node) -> u64 {
+        match n.kind {
+            OpKind::Conv2d { kh, kw, .. } => {
+                let od = self.tensor(n.output);
+                let wd = self.tensor(n.inputs[1]);
+                let cin = wd.dims[0] / (kh * kw);
+                od.elems() * (kh * kw * cin) as u64
+            }
+            OpKind::Dense { .. } => {
+                let od = self.tensor(n.output);
+                let wd = self.tensor(n.inputs[1]);
+                od.elems() * wd.dims[0] as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Structural sanity: every node's inputs exist and were produced
+    /// before use (nodes are stored in topological order by builders).
+    pub fn validate(&self) -> Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &inp in &n.inputs {
+                if inp.0 >= self.tensors.len() {
+                    bail!("node '{}' references missing tensor", n.name);
+                }
+                if let Some(p) = self.producer(inp) {
+                    if p.0 >= i {
+                        bail!("node '{}' uses tensor produced later", n.name);
+                    }
+                }
+            }
+            let od = self.tensor(n.output);
+            if od.elems() == 0 {
+                bail!("node '{}' has empty output", n.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.add_input("x", &[1, 8, 8, 8], 1);
+        let c = g.conv2d("conv", x, 8, 3, 3, 1, 1, true, 8, 2).unwrap();
+        let p = g.maxpool2d("pool", c, 2, 2).unwrap();
+        let d = g.dense("fc", p, 8, false, 0, true, 3).unwrap();
+        g.mark_output(d);
+        g
+    }
+
+    #[test]
+    fn shape_inference() {
+        let g = tiny_graph();
+        assert_eq!(g.tensor(g.nodes[0].output).dims, vec![1, 8, 8, 8]);
+        assert_eq!(g.tensor(g.nodes[1].output).dims, vec![1, 4, 4, 8]);
+        assert_eq!(g.tensor(g.nodes[2].output).dims, vec![1, 8]);
+        assert_eq!(g.tensor(g.nodes[2].output).dtype, DType::I32);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dense_flattens_trailing_dims() {
+        let g = tiny_graph();
+        // fc weight: [4*4*8, 8]
+        let w = g.tensor(g.nodes[2].inputs[1]);
+        assert_eq!(w.dims, vec![128, 8]);
+    }
+
+    #[test]
+    fn macs_accounting() {
+        let g = tiny_graph();
+        // conv: 64 out px * 8 cout * 72 K + fc: 8 * 128
+        assert_eq!(g.total_macs(), 64 * 8 * 72 + 8 * 128);
+    }
+
+    #[test]
+    fn io_queries() {
+        let g = tiny_graph();
+        assert_eq!(g.inputs().len(), 1);
+        assert_eq!(g.outputs().len(), 1);
+        assert!(g.producer(g.inputs()[0]).is_none());
+        assert_eq!(g.producer(g.outputs()[0]), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut g = Graph::new("bad");
+        let x = g.add_input("x", &[1, 2, 2, 8], 1);
+        assert!(g.maxpool2d("pool", x, 4, 4).is_err());
+        assert!(g.conv2d("c", x, 8, 5, 5, 1, 1, true, 8, 2).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Device placement (SNAX-MLIR pass 1, paper Fig. 5.1).
+//!
+//! Each workload node is assigned to the most suited device based on
+//! the cluster's accelerator descriptions: GeMM-shaped ops (conv/dense)
+//! to a GeMM accelerator, pooling to a pool unit, elementwise adds to a
+//! vector unit — each falling back to a management core when no
+//! matching accelerator exists ("minimizing off-cluster data movement").
+
+use crate::config::{AccelKind, ClusterConfig};
+use crate::isa::{CoreId, UnitId};
+
+use super::ir::{Graph, OpKind};
+
+/// Where a node runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    Accel(UnitId),
+    Cpu(CoreId),
+}
+
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Indexed by node id.
+    pub devices: Vec<Device>,
+    /// The core chosen for software fallback kernels.
+    pub cpu_core: CoreId,
+}
+
+impl Placement {
+    pub fn device(&self, node: super::ir::NodeId) -> Device {
+        self.devices[node.0]
+    }
+
+    pub fn n_accel_nodes(&self) -> usize {
+        self.devices.iter().filter(|d| matches!(d, Device::Accel(_))).count()
+    }
+}
+
+/// Pick the fallback core: the one managing the fewest units has the
+/// most spare issue slots for software kernels.
+fn pick_cpu_core(cfg: &ClusterConfig) -> CoreId {
+    let mut load: Vec<(usize, u8)> = cfg
+        .cores
+        .iter()
+        .map(|c| {
+            let n = cfg.accelerators.iter().filter(|a| a.core == c.id).count()
+                + usize::from(cfg.dma_core == c.id);
+            (n, c.id)
+        })
+        .collect();
+    load.sort();
+    CoreId(load[0].1)
+}
+
+/// Per-op overrides (used by ablation benches to force CPU execution).
+#[derive(Debug, Clone, Default)]
+pub struct PlacementOverrides {
+    /// Node names forced onto the CPU.
+    pub force_cpu: Vec<String>,
+}
+
+/// Can this node actually run on the accelerator kind? The GeMM array
+/// steps in 8x8x8 tiles and the pool unit has 8 lanes; incompatible
+/// sections fall back to the core (paper: "for workload sections that
+/// are incompatible with the available accelerators, the accompanying
+/// RISC-V core handles execution").
+fn compatible(g: &Graph, n: &super::ir::Node, kind: AccelKind) -> bool {
+    let aligned = |v: u32| v % 8 == 0;
+    match (kind, &n.kind) {
+        (AccelKind::Gemm, OpKind::Dense { .. }) => {
+            let wd = g.tensor(n.inputs[1]);
+            let m = g.tensor(n.output).dims[0];
+            aligned(m) && aligned(wd.dims[0]) && aligned(wd.dims[1])
+        }
+        (AccelKind::Gemm, OpKind::Conv2d { kh, kw, .. }) => {
+            let xd = g.tensor(n.inputs[0]);
+            let od = g.tensor(n.output);
+            let m = od.dims[0] * od.dims[1] * od.dims[2];
+            let k = kh * kw * xd.dims[3];
+            aligned(m) && aligned(k) && aligned(od.dims[3])
+        }
+        (AccelKind::MaxPool, OpKind::MaxPool2d { .. }) => {
+            aligned(g.tensor(n.inputs[0]).dims[3])
+        }
+        (AccelKind::VecAdd, OpKind::ResidualAdd { .. }) => true,
+        _ => false,
+    }
+}
+
+pub fn place(g: &Graph, cfg: &ClusterConfig, ov: &PlacementOverrides) -> Placement {
+    let cpu_core = pick_cpu_core(cfg);
+    // Round-robin counters per accelerator kind: when a cluster carries
+    // several instances of one kind, compatible nodes are distributed
+    // across them so pipeline stages can execute concurrently.
+    let mut rr: std::collections::HashMap<AccelKind, usize> = Default::default();
+    let devices = g
+        .nodes
+        .iter()
+        .map(|n| {
+            if ov.force_cpu.iter().any(|f| f == &n.name) {
+                return Device::Cpu(cpu_core);
+            }
+            let kind = match n.kind {
+                OpKind::Conv2d { .. } | OpKind::Dense { .. } => Some(AccelKind::Gemm),
+                OpKind::MaxPool2d { .. } => Some(AccelKind::MaxPool),
+                OpKind::ResidualAdd { .. } => Some(AccelKind::VecAdd),
+                OpKind::GlobalAvgPool | OpKind::TileRows { .. } => None,
+            };
+            let Some(k) = kind else { return Device::Cpu(cpu_core) };
+            let instances = cfg.find_accels(k);
+            if instances.is_empty() || !compatible(g, n, k) {
+                return Device::Cpu(cpu_core);
+            }
+            let slot = rr.entry(k).or_insert(0);
+            let unit = instances[*slot % instances.len()].0;
+            *slot += 1;
+            Device::Accel(unit)
+        })
+        .collect();
+    Placement { devices, cpu_core }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::compiler::ir::Graph;
+
+    #[test]
+    fn misaligned_dense_falls_back_to_cpu() {
+        // M=1 dense cannot run on the 8x8x8 PE array.
+        let mut g = Graph::new("m1");
+        let x = g.add_input("x", &[1, 128], 1);
+        let d = g.dense("fc", x, 8, false, 0, true, 2).unwrap();
+        g.mark_output(d);
+        let p = place(&g, &ClusterConfig::fig6c(), &Default::default());
+        assert!(matches!(p.devices[0], Device::Cpu(_)));
+    }
+
+    fn g() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.add_input("x", &[1, 16, 16, 8], 1);
+        let c = g.conv2d("conv", x, 8, 3, 3, 1, 1, true, 8, 2).unwrap();
+        let p = g.maxpool2d("pool", c, 2, 2).unwrap();
+        let a = g.residual_add("add", p, p, false).unwrap();
+        let t = g.tile_rows("tile", a, 8).unwrap(); // make fc 8-row aligned
+        let d = g.dense("fc", t, 8, false, 0, true, 3).unwrap();
+        g.mark_output(d);
+        g
+    }
+
+    #[test]
+    fn fig6b_everything_on_cpu() {
+        let p = place(&g(), &ClusterConfig::fig6b(), &Default::default());
+        assert_eq!(p.n_accel_nodes(), 0);
+        assert_eq!(p.cpu_core, CoreId(0));
+    }
+
+    #[test]
+    fn fig6c_gemm_ops_offloaded() {
+        let cfg = ClusterConfig::fig6c();
+        let p = place(&g(), &cfg, &Default::default());
+        // conv + dense on gemm, pool/add/tile on cpu
+        assert_eq!(p.devices[0], Device::Accel(cfg.unit_id("gemm0").unwrap()));
+        assert_eq!(p.devices[4], Device::Accel(cfg.unit_id("gemm0").unwrap()));
+        assert!(matches!(p.devices[1], Device::Cpu(_)));
+        assert!(matches!(p.devices[2], Device::Cpu(_)));
+        assert!(matches!(p.devices[3], Device::Cpu(_)));
+        // Core 1 controls only the gemm; core 0 controls the DMA — both
+        // have one unit, tie broken to lowest id.
+        assert_eq!(p.cpu_core, CoreId(0));
+    }
+
+    #[test]
+    fn fig6d_pool_offloaded_and_cpu_is_least_loaded() {
+        let cfg = ClusterConfig::fig6d();
+        let p = place(&g(), &cfg, &Default::default());
+        assert_eq!(p.devices[1], Device::Accel(cfg.unit_id("maxpool0").unwrap()));
+        // core0 manages dma+maxpool (2), core1 manages gemm (1).
+        assert_eq!(p.cpu_core, CoreId(1));
+    }
+
+    #[test]
+    fn overrides_force_cpu() {
+        let cfg = ClusterConfig::fig6d();
+        let ov = PlacementOverrides { force_cpu: vec!["conv".into()] };
+        let p = place(&g(), &cfg, &ov);
+        assert!(matches!(p.devices[0], Device::Cpu(_)));
+        assert!(matches!(p.devices[4], Device::Accel(_)));
+    }
+}

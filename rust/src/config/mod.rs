@@ -1,0 +1,563 @@
+//! Cluster configuration — the paper's "single configuration file"
+//! (§VI-B): every design-time customization of the SNAX cluster lives
+//! here, serializable to/from TOML.
+//!
+//! Control side: which accelerators exist and which management core each
+//! is attached to (dedicated or shared). Data side: scratchpad size and
+//! banking, TCDM port widths per streamer, streamer FIFO depths and loop
+//! depth, AXI/DMA width. The three evaluation platforms of Fig. 6
+//! (`fig6b`, `fig6c`, `fig6d`) ship as presets.
+
+use anyhow::{bail, Context, Result};
+
+use crate::isa::{CoreId, UnitId};
+
+/// Kind of accelerator datapath. New kinds are added by implementing
+/// [`crate::sim::accel::AccelModel`] and extending this enum — the rest
+/// of the stack (compiler placement, codegen, area/power) picks them up
+/// through the registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccelKind {
+    /// OpenGeMM-style 512-PE int8 matrix unit (8x8x8 per cycle).
+    Gemm,
+    /// 8-lane max-pool unit with configurable kernel size.
+    MaxPool,
+    /// Element-wise int8 saturating vector adder (custom-integration
+    /// example).
+    VecAdd,
+}
+
+/// One accelerator instance.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    pub name: String,
+    pub kind: AccelKind,
+    /// Management core this accelerator's CSR port is wired to.
+    pub core: u8,
+    /// Read-streamer port widths in bits (one entry per input stream).
+    pub read_ports_bits: Vec<u32>,
+    /// Write-streamer port widths in bits.
+    pub write_ports_bits: Vec<u32>,
+    /// Streamer FIFO depth in beats (per stream).
+    pub fifo_depth: u32,
+    /// Depth of the nested-for-loop address generator.
+    pub agu_loop_depth: u32,
+}
+
+
+/// One RISC-V management core (RV32I, single-issue, single-cycle).
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    pub id: u8,
+    /// Instruction memory size (area model input).
+    pub imem_kb: u32,
+}
+
+
+/// The complete design-time description of a SNAX cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub name: String,
+    /// Shared scratchpad size in KiB (paper: 128).
+    pub spm_kb: u32,
+    /// Number of SPM banks (single-cycle, 64-bit words).
+    pub banks: u32,
+    /// Width of one bank word in bits.
+    pub bank_width_bits: u32,
+    /// AXI data width in bits (paper: 512).
+    pub axi_bits: u32,
+    /// DMA port width in bits (paper: 512).
+    pub dma_bits: u32,
+    /// Core that controls the DMA engine.
+    pub dma_core: u8,
+    /// Clock frequency (for latency/power reporting; paper: 800 MHz).
+    pub freq_mhz: u32,
+    /// Enable double-buffered (shadow) CSR banks (paper §IV-A; ablation
+    /// switch).
+    pub csr_double_buffer: bool,
+    pub cores: Vec<CoreConfig>,
+    pub accelerators: Vec<AccelConfig>,
+}
+
+
+impl ClusterConfig {
+    // -- presets: the three platforms of Fig. 6 ---------------------------
+
+    /// Fig. 6b: a single RV32I core, no accelerators (baseline platform).
+    pub fn fig6b() -> Self {
+        Self {
+            name: "fig6b".into(),
+            spm_kb: 128,
+            banks: 32,
+            bank_width_bits: 64,
+            axi_bits: 512,
+            dma_bits: 512,
+            dma_core: 0,
+            freq_mhz: 800,
+            csr_double_buffer: true,
+            cores: vec![CoreConfig { id: 0, imem_kb: 8 }],
+            accelerators: vec![],
+        }
+    }
+
+    /// Fig. 6c: adds a GeMM accelerator on its own management core.
+    ///
+    /// GeMM ports per the paper: two 512-bit read streams (A, B) and one
+    /// 2048-bit write stream (C, an 8x8 int32 tile per cycle).
+    pub fn fig6c() -> Self {
+        let mut c = Self::fig6b();
+        c.name = "fig6c".into();
+        c.cores.push(CoreConfig { id: 1, imem_kb: 8 });
+        c.accelerators.push(AccelConfig {
+            name: "gemm0".into(),
+            kind: AccelKind::Gemm,
+            core: 1,
+            read_ports_bits: vec![512, 512],
+            write_ports_bits: vec![2048],
+            fifo_depth: 4,
+            agu_loop_depth: 4,
+        });
+        c
+    }
+
+    /// Fig. 6d: adds the max-pool accelerator, sharing core 0 with the
+    /// DMA engine (the paper's shared-control configuration).
+    pub fn fig6d() -> Self {
+        let mut c = Self::fig6c();
+        c.name = "fig6d".into();
+        c.accelerators.push(AccelConfig {
+            name: "maxpool0".into(),
+            kind: AccelKind::MaxPool,
+            core: 0,
+            read_ports_bits: vec![512],
+            write_ports_bits: vec![512],
+            fifo_depth: 4,
+            agu_loop_depth: 4,
+        });
+        c
+    }
+
+    /// Preset lookup by name (CLI convenience).
+    pub fn preset(name: &str) -> Result<Self> {
+        match name {
+            "fig6b" => Ok(Self::fig6b()),
+            "fig6c" => Ok(Self::fig6c()),
+            "fig6d" => Ok(Self::fig6d()),
+            other => bail!("unknown preset '{other}' (expected fig6b/fig6c/fig6d)"),
+        }
+    }
+
+    // -- serialization -----------------------------------------------------
+    //
+    // Hand-rolled TOML-subset codec (this environment vendors no TOML
+    // crate): top-level `key = value` pairs, `[[cores]]` and
+    // `[[accelerators]]` tables, integer arrays. Exactly the format
+    // `to_toml` emits.
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let cfg = minitoml::parse(text).context("parsing cluster config TOML")?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        use std::fmt::Write;
+        let _ = writeln!(s, "name = \"{}\"", self.name);
+        let _ = writeln!(s, "spm_kb = {}", self.spm_kb);
+        let _ = writeln!(s, "banks = {}", self.banks);
+        let _ = writeln!(s, "bank_width_bits = {}", self.bank_width_bits);
+        let _ = writeln!(s, "axi_bits = {}", self.axi_bits);
+        let _ = writeln!(s, "dma_bits = {}", self.dma_bits);
+        let _ = writeln!(s, "dma_core = {}", self.dma_core);
+        let _ = writeln!(s, "freq_mhz = {}", self.freq_mhz);
+        let _ = writeln!(s, "csr_double_buffer = {}", self.csr_double_buffer);
+        for c in &self.cores {
+            let _ = writeln!(s, "\n[[cores]]\nid = {}\nimem_kb = {}", c.id, c.imem_kb);
+        }
+        for a in &self.accelerators {
+            let _ = writeln!(s, "\n[[accelerators]]");
+            let _ = writeln!(s, "name = \"{}\"", a.name);
+            let kind = match a.kind {
+                AccelKind::Gemm => "gemm",
+                AccelKind::MaxPool => "max_pool",
+                AccelKind::VecAdd => "vec_add",
+            };
+            let _ = writeln!(s, "kind = \"{kind}\"");
+            let _ = writeln!(s, "core = {}", a.core);
+            let fmt_arr = |v: &[u32]| {
+                let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+                format!("[{}]", items.join(", "))
+            };
+            let _ = writeln!(s, "read_ports_bits = {}", fmt_arr(&a.read_ports_bits));
+            let _ = writeln!(s, "write_ports_bits = {}", fmt_arr(&a.write_ports_bits));
+            let _ = writeln!(s, "fifo_depth = {}", a.fifo_depth);
+            let _ = writeln!(s, "agu_loop_depth = {}", a.agu_loop_depth);
+        }
+        s
+    }
+
+    pub fn from_path(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    // -- derived views -------------------------------------------------------
+
+    pub fn spm_bytes(&self) -> u64 {
+        self.spm_kb as u64 * 1024
+    }
+
+    /// Unit table order: accelerators in declaration order, then the DMA
+    /// engine as the last unit.
+    pub fn n_units(&self) -> usize {
+        self.accelerators.len() + 1
+    }
+
+    pub fn dma_unit(&self) -> UnitId {
+        UnitId(self.accelerators.len() as u8)
+    }
+
+    /// Resolve an accelerator name ("gemm0") or "dma" to its unit id.
+    pub fn unit_id(&self, name: &str) -> Result<UnitId> {
+        if name == "dma" {
+            return Ok(self.dma_unit());
+        }
+        self.accelerators
+            .iter()
+            .position(|a| a.name == name)
+            .map(|i| UnitId(i as u8))
+            .with_context(|| format!("no accelerator named '{name}'"))
+    }
+
+    /// First accelerator of `kind`, if any (placement pass helper).
+    pub fn find_accel(&self, kind: AccelKind) -> Option<(UnitId, &AccelConfig)> {
+        self.accelerators
+            .iter()
+            .enumerate()
+            .find(|(_, a)| a.kind == kind)
+            .map(|(i, a)| (UnitId(i as u8), a))
+    }
+
+    /// All accelerator instances of `kind`, in declaration order
+    /// (multi-instance placement distributes compatible nodes across
+    /// them round-robin).
+    pub fn find_accels(&self, kind: AccelKind) -> Vec<(UnitId, &AccelConfig)> {
+        self.accelerators
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.kind == kind)
+            .map(|(i, a)| (UnitId(i as u8), a))
+            .collect()
+    }
+
+    /// Core controlling `unit` (DMA or accelerator).
+    pub fn controlling_core(&self, unit: UnitId) -> CoreId {
+        if unit == self.dma_unit() {
+            CoreId(self.dma_core)
+        } else {
+            CoreId(self.accelerators[unit.0 as usize].core)
+        }
+    }
+
+    pub fn core_index(&self, core: CoreId) -> usize {
+        self.cores
+            .iter()
+            .position(|c| c.id == core.0)
+            .expect("core id exists")
+    }
+
+    /// Bank word size in bytes.
+    pub fn bank_word_bytes(&self) -> u64 {
+        (self.bank_width_bits / 8) as u64
+    }
+
+    /// Total TCDM read+write port bits across all streamers + cores + DMA
+    /// (area model input; each core has a 64-bit port, DMA has its port).
+    pub fn total_tcdm_port_bits(&self) -> u64 {
+        let accel: u64 = self
+            .accelerators
+            .iter()
+            .map(|a| {
+                a.read_ports_bits.iter().map(|&b| b as u64).sum::<u64>()
+                    + a.write_ports_bits.iter().map(|&b| b as u64).sum::<u64>()
+            })
+            .sum();
+        accel + self.cores.len() as u64 * 64 + self.dma_bits as u64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cores.is_empty() {
+            bail!("cluster needs at least one management core");
+        }
+        if !self.banks.is_power_of_two() {
+            bail!("bank count must be a power of two (got {})", self.banks);
+        }
+        if self.spm_bytes() % (self.banks as u64 * self.bank_word_bytes()) != 0 {
+            bail!("SPM size must be divisible by banks * bank word");
+        }
+        for a in &self.accelerators {
+            if !self.cores.iter().any(|c| c.id == a.core) {
+                bail!("accelerator '{}' wired to nonexistent core {}", a.name, a.core);
+            }
+            for &b in a.read_ports_bits.iter().chain(&a.write_ports_bits) {
+                if b % self.bank_width_bits != 0 {
+                    bail!(
+                        "accelerator '{}' port width {b} not a multiple of bank width {}",
+                        a.name,
+                        self.bank_width_bits
+                    );
+                }
+            }
+        }
+        if !self.cores.iter().any(|c| c.id == self.dma_core) {
+            bail!("dma_core {} does not exist", self.dma_core);
+        }
+        let mut names: Vec<&str> = self.accelerators.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.accelerators.len() {
+            bail!("duplicate accelerator names");
+        }
+        Ok(())
+    }
+}
+
+/// Minimal TOML-subset parser for [`ClusterConfig`] (see `from_toml`).
+mod minitoml {
+    use anyhow::{bail, Context, Result};
+
+    use super::{AccelConfig, AccelKind, ClusterConfig, CoreConfig};
+
+    #[derive(PartialEq)]
+    enum Section {
+        Top,
+        Core,
+        Accel,
+    }
+
+    fn unquote(v: &str) -> Result<String> {
+        let v = v.trim();
+        if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+            Ok(v[1..v.len() - 1].to_string())
+        } else {
+            bail!("expected quoted string, got {v}")
+        }
+    }
+
+    fn int(v: &str) -> Result<u64> {
+        v.trim().parse::<u64>().with_context(|| format!("expected integer, got {v}"))
+    }
+
+    fn int_array(v: &str) -> Result<Vec<u32>> {
+        let v = v.trim();
+        if !v.starts_with('[') || !v.ends_with(']') {
+            bail!("expected array, got {v}");
+        }
+        let inner = &v[1..v.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(vec![]);
+        }
+        inner
+            .split(',')
+            .map(|x| x.trim().parse::<u32>().with_context(|| format!("bad array item {x}")))
+            .collect()
+    }
+
+    pub fn parse(text: &str) -> Result<ClusterConfig> {
+        let mut cfg = ClusterConfig {
+            name: String::new(),
+            spm_kb: 128,
+            banks: 32,
+            bank_width_bits: 64,
+            axi_bits: 512,
+            dma_bits: 512,
+            dma_core: 0,
+            freq_mhz: 800,
+            csr_double_buffer: true,
+            cores: vec![],
+            accelerators: vec![],
+        };
+        let mut section = Section::Top;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err_at = || format!("config line {}: '{}'", ln + 1, raw.trim());
+            if line == "[[cores]]" {
+                cfg.cores.push(CoreConfig { id: 0, imem_kb: 8 });
+                section = Section::Core;
+                continue;
+            }
+            if line == "[[accelerators]]" {
+                cfg.accelerators.push(AccelConfig {
+                    name: String::new(),
+                    kind: AccelKind::Gemm,
+                    core: 0,
+                    read_ports_bits: vec![],
+                    write_ports_bits: vec![],
+                    fifo_depth: 4,
+                    agu_loop_depth: 4,
+                });
+                section = Section::Accel;
+                continue;
+            }
+            if line.starts_with('[') {
+                bail!("unknown section at {}", err_at());
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("expected key = value at {}", err_at());
+            };
+            let (key, val) = (key.trim(), val.trim());
+            match section {
+                Section::Top => match key {
+                    "name" => cfg.name = unquote(val).with_context(err_at)?,
+                    "spm_kb" => cfg.spm_kb = int(val).with_context(err_at)? as u32,
+                    "banks" => cfg.banks = int(val).with_context(err_at)? as u32,
+                    "bank_width_bits" => {
+                        cfg.bank_width_bits = int(val).with_context(err_at)? as u32
+                    }
+                    "axi_bits" => cfg.axi_bits = int(val).with_context(err_at)? as u32,
+                    "dma_bits" => cfg.dma_bits = int(val).with_context(err_at)? as u32,
+                    "dma_core" => cfg.dma_core = int(val).with_context(err_at)? as u8,
+                    "freq_mhz" => cfg.freq_mhz = int(val).with_context(err_at)? as u32,
+                    "csr_double_buffer" => {
+                        cfg.csr_double_buffer = match val {
+                            "true" => true,
+                            "false" => false,
+                            _ => bail!("expected bool at {}", err_at()),
+                        }
+                    }
+                    _ => bail!("unknown key at {}", err_at()),
+                },
+                Section::Core => {
+                    let core = cfg.cores.last_mut().unwrap();
+                    match key {
+                        "id" => core.id = int(val).with_context(err_at)? as u8,
+                        "imem_kb" => core.imem_kb = int(val).with_context(err_at)? as u32,
+                        _ => bail!("unknown core key at {}", err_at()),
+                    }
+                }
+                Section::Accel => {
+                    let a = cfg.accelerators.last_mut().unwrap();
+                    match key {
+                        "name" => a.name = unquote(val).with_context(err_at)?,
+                        "kind" => {
+                            a.kind = match unquote(val).with_context(err_at)?.as_str() {
+                                "gemm" => AccelKind::Gemm,
+                                "max_pool" | "maxpool" => AccelKind::MaxPool,
+                                "vec_add" | "vecadd" => AccelKind::VecAdd,
+                                other => bail!("unknown accelerator kind '{other}'"),
+                            }
+                        }
+                        "core" => a.core = int(val).with_context(err_at)? as u8,
+                        "read_ports_bits" => {
+                            a.read_ports_bits = int_array(val).with_context(err_at)?
+                        }
+                        "write_ports_bits" => {
+                            a.write_ports_bits = int_array(val).with_context(err_at)?
+                        }
+                        "fifo_depth" => a.fifo_depth = int(val).with_context(err_at)? as u32,
+                        "agu_loop_depth" => {
+                            a.agu_loop_depth = int(val).with_context(err_at)? as u32
+                        }
+                        _ => bail!("unknown accelerator key at {}", err_at()),
+                    }
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for p in ["fig6b", "fig6c", "fig6d"] {
+            ClusterConfig::preset(p).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn fig6_progression_matches_paper() {
+        // 6b: 1 core 0 accels; 6c: +1 core +gemm; 6d: same cores +maxpool
+        // sharing core 0 (the DMA core).
+        let b = ClusterConfig::fig6b();
+        let c = ClusterConfig::fig6c();
+        let d = ClusterConfig::fig6d();
+        assert_eq!((b.cores.len(), b.accelerators.len()), (1, 0));
+        assert_eq!((c.cores.len(), c.accelerators.len()), (2, 1));
+        assert_eq!((d.cores.len(), d.accelerators.len()), (2, 2));
+        assert_eq!(d.accelerators[1].core, d.dma_core);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let d = ClusterConfig::fig6d();
+        let text = d.to_toml();
+        let back = ClusterConfig::from_toml(&text).unwrap();
+        assert_eq!(back.name, "fig6d");
+        assert_eq!(back.accelerators.len(), 2);
+        assert_eq!(back.accelerators[0].read_ports_bits, vec![512, 512]);
+    }
+
+    #[test]
+    fn unit_ids() {
+        let d = ClusterConfig::fig6d();
+        assert_eq!(d.unit_id("gemm0").unwrap(), UnitId(0));
+        assert_eq!(d.unit_id("maxpool0").unwrap(), UnitId(1));
+        assert_eq!(d.unit_id("dma").unwrap(), UnitId(2));
+        assert_eq!(d.dma_unit(), UnitId(2));
+        assert!(d.unit_id("nope").is_err());
+        assert_eq!(d.controlling_core(UnitId(0)), CoreId(1));
+        assert_eq!(d.controlling_core(UnitId(1)), CoreId(0));
+    }
+
+    #[test]
+    fn gemm_port_bits_match_paper() {
+        // "the GeMM adds additional 2 512-bit read ports and one
+        // 2,048-bit write port, and the maxpool only adds 2 512-bit
+        // ports" (§VI-B).
+        let d = ClusterConfig::fig6d();
+        let g = &d.accelerators[0];
+        assert_eq!(g.read_ports_bits, vec![512, 512]);
+        assert_eq!(g.write_ports_bits, vec![2048]);
+        let m = &d.accelerators[1];
+        assert_eq!(m.read_ports_bits, vec![512]);
+        assert_eq!(m.write_ports_bits, vec![512]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = ClusterConfig::fig6c();
+        c.accelerators[0].core = 9;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::fig6b();
+        c.banks = 24;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::fig6b();
+        c.cores.clear();
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::fig6c();
+        c.accelerators[0].read_ports_bits = vec![100];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn tcdm_port_accounting() {
+        let b = ClusterConfig::fig6b();
+        // 1 core x 64 + DMA 512
+        assert_eq!(b.total_tcdm_port_bits(), 64 + 512);
+        let d = ClusterConfig::fig6d();
+        // + core 64 + gemm (512+512+2048) + maxpool (512+512)
+        assert_eq!(d.total_tcdm_port_bits(), 2 * 64 + 512 + 3072 + 1024);
+    }
+}

@@ -1,0 +1,131 @@
+//! Calibration constants for the timing, area, and energy models.
+//!
+//! Every number here is anchored to a figure the paper (or its cited
+//! sources) reports; the anchors are documented inline. The models built
+//! on these constants reproduce the *relative* behaviour of the paper's
+//! TSMC-16 nm measurements — component scaling (Fig. 7), cycle
+//! distributions (Fig. 8), power breakdown (Fig. 9), and the Table I
+//! workload numbers — not absolute silicon truth.
+
+// ---------------------------------------------------------------------------
+// RV32I(M) software-kernel cost model (cycles per elementary operation)
+//
+// Anchor: a single-issue in-order RV32IM core executing int8 kernels.
+// A naive conv inner loop costs ~9 cycles/MAC (2 loads with address
+// arithmetic, mul, add, loop bookkeeping); a unit-stride dot product
+// with word loads and unrolling reaches ~3 cycles/MAC; pooling pays a
+// load+compare+select per window element plus indexing. These land the
+// baseline cycle distribution of Fig. 8 (convolution dominating ~99%).
+// ---------------------------------------------------------------------------
+
+/// Cycles per int8 MAC of a convolution on the management core.
+pub const CPU_MAC_CONV: u64 = 9;
+/// Cycles per int8 MAC of a dense/FC layer (unit-stride, unrolled).
+pub const CPU_MAC_FC: u64 = 3;
+/// Cycles per window element of max-pooling.
+pub const CPU_POOL_OP: u64 = 8;
+/// Cycles per element of int8 elementwise ops (relu, residual add —
+/// word-packed, ~4 lanes per load/store pair).
+pub const CPU_ELEM: u64 = 2;
+/// Cycles per element of global average pooling (load + add).
+pub const CPU_AVG: u64 = 3;
+/// Fixed per-kernel software overhead (prologue, loop setup, pointers).
+pub const CPU_KERNEL_OVERHEAD: u64 = 150;
+
+// ---------------------------------------------------------------------------
+// Area model (mm^2, TSMC 16 nm @ 800 MHz)
+//
+// Anchor: Fig. 7 / Table I — the full Fig. 6d cluster is 0.45 mm^2 with
+// 128 KiB SPM, two RV32I cores, GeMM (512 PEs) + max-pool accelerators,
+// their streamers, the TCDM interconnect, and peripherals. Components
+// are sized so (a) the Fig. 6d total lands at ~0.45 mm^2, (b) the
+// control-area step from Fig. 6b to 6c is ~1.17x, and (c) interconnect
+// area scales with total port width as Fig. 7 shows.
+// ---------------------------------------------------------------------------
+
+/// SRAM macro area per KiB (dense 16 nm single-port SRAM).
+pub const AREA_SPM_PER_KB: f64 = 0.0012;
+/// One RV32I management core (logic only).
+pub const AREA_CORE: f64 = 0.009;
+/// Instruction memory per KiB.
+pub const AREA_IMEM_PER_KB: f64 = 0.0011;
+/// TCDM interconnect per 64-bit port-to-bank crossbar lane.
+pub const AREA_TCDM_PER_PORT_WORD: f64 = 0.0011;
+/// Data streamer per 64-bit lane (AGU + FIFO slice).
+pub const AREA_STREAMER_PER_PORT_WORD: f64 = 0.0016;
+/// GeMM PE (int8 MAC + accumulator slice).
+pub const AREA_GEMM_PER_PE: f64 = 0.00014;
+/// Max-pool lane.
+pub const AREA_POOL_PER_LANE: f64 = 0.0008;
+/// Vector-add lane (custom accelerator example).
+pub const AREA_VECADD_PER_LANE: f64 = 0.00012;
+/// DMA engine + AXI port per 64 bits of width.
+pub const AREA_DMA_PER_PORT_WORD: f64 = 0.0012;
+/// Fixed peripherals (AXI network, barrier unit, CSR fabric).
+pub const AREA_PERIPHERAL: f64 = 0.018;
+
+// ---------------------------------------------------------------------------
+// Energy model (pJ per event, 0.8 V 16 nm)
+//
+// Anchors: Table I — ToyADMOS (Deep AutoEncoder) at ~5.16 uJ and
+// ResNet-8 at ~28 uJ on the Fig. 6d cluster; Fig. 9 — accelerators +
+// streamers consume the majority of parallel-execution power, followed
+// by data memory (SPM banks), peripherals/interconnect, then cores.
+// ResNet-8's ~12.5M MACs at ~28 uJ imply ~2.2 pJ of *system* energy per
+// MAC, split across PE datapath, SPM traffic, and streaming as below.
+// ---------------------------------------------------------------------------
+
+/// One GeMM PE-array cycle (512 int8 MACs): datapath + local registers.
+pub const PJ_GEMM_CYCLE: f64 = 320.0;
+/// One max-pool unit cycle (8 lanes).
+pub const PJ_POOL_CYCLE: f64 = 18.0;
+/// One custom-accel (vec-add) cycle.
+pub const PJ_OTHER_ACCEL_CYCLE: f64 = 20.0;
+/// One 64-bit SPM bank read.
+pub const PJ_BANK_READ: f64 = 8.5;
+/// One 64-bit SPM bank write.
+pub const PJ_BANK_WRITE: f64 = 9.5;
+/// One streamer beat (AGU + FIFO push/pop), per 64-bit word moved.
+pub const PJ_STREAMER_WORD: f64 = 3.0;
+/// One 64-byte AXI beat (off-cluster wires + protocol).
+pub const PJ_AXI_BEAT: f64 = 95.0;
+/// One management-core active cycle.
+pub const PJ_CORE_CYCLE: f64 = 11.0;
+/// One CSR write (control fabric).
+pub const PJ_CSR_WRITE: f64 = 2.0;
+/// Cluster leakage + clock tree per cycle (everything powered).
+pub const PJ_IDLE_CYCLE: f64 = 24.0;
+
+/// Clock frequency anchor (Table I: 800 MHz).
+pub const FREQ_MHZ_DEFAULT: u32 = 800;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6d_area_lands_near_paper() {
+        // Coarse sanity: the component sum for the Fig. 6d configuration
+        // must land near the paper's 0.45 mm^2 (checked precisely in
+        // energy::area tests).
+        let spm = 128.0 * AREA_SPM_PER_KB;
+        let cores = 2.0 * (AREA_CORE + 8.0 * AREA_IMEM_PER_KB);
+        let gemm = 512.0 * AREA_GEMM_PER_PE;
+        let pool = 8.0 * AREA_POOL_PER_LANE;
+        let streamers = ((512 + 512 + 2048 + 512 + 512) / 64) as f64
+            * AREA_STREAMER_PER_PORT_WORD;
+        let tcdm = ((512 + 512 + 2048 + 512 + 512 + 64 + 64 + 512) / 64) as f64
+            * AREA_TCDM_PER_PORT_WORD;
+        let dma = (512 / 64) as f64 * AREA_DMA_PER_PORT_WORD;
+        let total = spm + cores + gemm + pool + streamers + tcdm + dma + AREA_PERIPHERAL;
+        assert!((0.35..0.55).contains(&total), "total={total}");
+    }
+
+    #[test]
+    fn resnet8_energy_scale_sane() {
+        // ~12.5M MACs => ~24.4k GeMM cycles; datapath energy alone
+        // should be a fraction of the ~28 uJ Table I total.
+        let datapath_uj = 24_400.0 * PJ_GEMM_CYCLE * 1e-6;
+        assert!(datapath_uj > 2.0 && datapath_uj < 20.0, "{datapath_uj}");
+    }
+}

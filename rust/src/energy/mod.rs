@@ -1,0 +1,9 @@
+//! Area and energy models (substitutes for the paper's TSMC-16 nm
+//! synthesis + PrimeTime flow, calibrated to its reported numbers).
+
+pub mod area;
+pub mod calib;
+pub mod power;
+
+pub use area::{area, AreaBreakdown};
+pub use power::{energy, EnergyBreakdown};

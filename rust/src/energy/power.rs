@@ -1,0 +1,144 @@
+//! Activity-based energy/power model (Fig. 9 / Table I substitution for
+//! PrimeTime switching-annotated power analysis — see DESIGN.md §1).
+//!
+//! Event counts from the simulator ([`crate::sim::Counters`]) are
+//! weighted by the per-event energies in [`super::calib`]; power is
+//! energy over the run's wall-clock at the configured frequency.
+
+use crate::config::ClusterConfig;
+use crate::sim::SimReport;
+
+use super::calib::*;
+
+/// Energy attributed to one component over a run, in uJ.
+#[derive(Debug, Clone)]
+pub struct EnergyItem {
+    pub component: String,
+    pub uj: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EnergyBreakdown {
+    pub items: Vec<EnergyItem>,
+    pub total_cycles: u64,
+    pub freq_mhz: u32,
+}
+
+impl EnergyBreakdown {
+    pub fn total_uj(&self) -> f64 {
+        self.items.iter().map(|i| i.uj).sum()
+    }
+
+    /// Average power over the run, in mW.
+    pub fn avg_power_mw(&self) -> f64 {
+        let seconds = self.total_cycles as f64 / (self.freq_mhz as f64 * 1e6);
+        if seconds == 0.0 {
+            0.0
+        } else {
+            self.total_uj() * 1e-6 / seconds * 1e3
+        }
+    }
+
+    pub fn get(&self, component: &str) -> f64 {
+        self.items
+            .iter()
+            .filter(|i| i.component == component)
+            .map(|i| i.uj)
+            .sum()
+    }
+}
+
+/// Compute the energy breakdown of a finished run.
+pub fn energy(report: &SimReport, cfg: &ClusterConfig) -> EnergyBreakdown {
+    let c = &report.counters;
+    let pj = |v: f64| v * 1e-6; // pJ -> uJ
+
+    let accel = c.gemm_compute_cycles as f64 * PJ_GEMM_CYCLE
+        + c.pool_compute_cycles as f64 * PJ_POOL_CYCLE
+        + c.other_accel_cycles as f64 * PJ_OTHER_ACCEL_CYCLE;
+
+    // Streamer energy: every bank word moved passed through an AGU+FIFO.
+    let streamers = (c.bank_reads + c.bank_writes) as f64 * PJ_STREAMER_WORD;
+
+    let spm = c.bank_reads as f64 * PJ_BANK_READ + c.bank_writes as f64 * PJ_BANK_WRITE;
+
+    let axi = c.axi_beats as f64 * PJ_AXI_BEAT;
+
+    let cores: u64 = c.core_busy_cycles.iter().sum();
+    let cores = cores as f64 * PJ_CORE_CYCLE + c.csr_writes as f64 * PJ_CSR_WRITE;
+
+    let idle = report.total_cycles as f64 * PJ_IDLE_CYCLE;
+
+    EnergyBreakdown {
+        items: vec![
+            EnergyItem { component: "accelerators".into(), uj: pj(accel) },
+            EnergyItem { component: "streamers".into(), uj: pj(streamers) },
+            EnergyItem { component: "spm".into(), uj: pj(spm) },
+            EnergyItem { component: "axi_dma".into(), uj: pj(axi) },
+            EnergyItem { component: "cores".into(), uj: pj(cores) },
+            EnergyItem { component: "clock_leakage".into(), uj: pj(idle) },
+        ],
+        total_cycles: report.total_cycles,
+        freq_mhz: cfg.freq_mhz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Counters;
+
+    fn fake_report(cycles: u64, counters: Counters) -> SimReport {
+        SimReport { total_cycles: cycles, counters, ..Default::default() }
+    }
+
+    #[test]
+    fn busy_gemm_run_is_accel_dominated() {
+        // A run resembling pipelined Fig. 6a: accelerator-heavy.
+        let c = Counters {
+            gemm_compute_cycles: 40_000,
+            pool_compute_cycles: 2_000,
+            bank_reads: 700_000,
+            bank_writes: 100_000,
+            axi_beats: 3_000,
+            csr_writes: 2_000,
+            core_busy_cycles: vec![30_000, 30_000],
+            ..Default::default()
+        };
+        let e = energy(&fake_report(60_000, c), &ClusterConfig::fig6d());
+        // Fig. 9 ordering: accelerators+streamers majority, then SPM,
+        // then cores.
+        let accel_stream = e.get("accelerators") + e.get("streamers");
+        assert!(accel_stream > e.get("spm"), "{e:?}");
+        assert!(e.get("spm") > e.get("cores"), "{e:?}");
+        assert!(e.avg_power_mw() > 0.0);
+    }
+
+    #[test]
+    fn power_scale_near_table1() {
+        // Table I: ~227 mW during active operation. A fully-busy
+        // pipelined run should land in the same regime (0.5x-2x).
+        let c = Counters {
+            gemm_compute_cycles: 50_000,
+            pool_compute_cycles: 8_000,
+            bank_reads: 900_000,
+            bank_writes: 150_000,
+            axi_beats: 5_000,
+            csr_writes: 3_000,
+            core_busy_cycles: vec![50_000, 50_000],
+            ..Default::default()
+        };
+        let e = energy(&fake_report(60_000, c), &ClusterConfig::fig6d());
+        let mw = e.avg_power_mw();
+        assert!((100.0..500.0).contains(&mw), "power = {mw} mW");
+    }
+
+    #[test]
+    fn idle_run_is_leakage_only() {
+        let e = energy(
+            &fake_report(1000, Counters { core_busy_cycles: vec![0], ..Default::default() }),
+            &ClusterConfig::fig6b(),
+        );
+        assert_eq!(e.total_uj(), e.get("clock_leakage"));
+    }
+}

@@ -1,0 +1,249 @@
+//! The control ISA of the SNAX cluster.
+//!
+//! The paper's key software-visible contract is that *all* accelerators
+//! are programmed the same way: RISC-V management cores issue CSR
+//! read/write instructions over a generic valid/ready register interface
+//! ("uniform control"), launch jobs fire-and-forget, and synchronize
+//! through hardware barriers. This module defines that contract as the
+//! instruction stream executed by the simulated cores — it is the *only*
+//! interface between compiler output ([`crate::compiler::codegen`]) and
+//! the simulator ([`crate::sim`]), enforcing the paper's abstraction
+//! structurally.
+
+
+/// Identifies a control-interface endpoint (accelerator or DMA engine).
+///
+/// Index into [`crate::sim::Cluster`]'s unit table; assigned by
+/// [`crate::config::ClusterConfig::unit_id`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct UnitId(pub u8);
+
+/// Identifies a management core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CoreId(pub u8);
+
+/// Identifies a hardware barrier register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BarrierId(pub u16);
+
+/// Layer classes used for per-layer cycle attribution (Fig. 8) and for
+/// the CPU cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    Conv,
+    MaxPool,
+    Dense,
+    Elementwise,
+    DataMove,
+    Other,
+}
+
+/// A software kernel executed on a management core itself (for workload
+/// sections with no matching accelerator — the paper's fallback path).
+///
+/// Timing comes from the RV32I cost model in [`crate::energy::calib`];
+/// the functional effect (`op`) is applied to scratchpad memory when the
+/// kernel retires.
+#[derive(Debug, Clone)]
+pub struct SwKernel {
+    pub cycles: u64,
+    pub class: LayerClass,
+    /// Functional op applied at retire time (job-level functional /
+    /// beat-level timing split, see DESIGN.md §5.2). `None` for pure
+    /// busy-loops (cost-model-only benchmarks).
+    pub op: Option<crate::sim::job::OpDesc>,
+}
+
+/// One instruction of a management core's compiled stream.
+///
+/// `CsrWrite` / `Launch` / `AwaitIdle` are the paper's loosely-coupled
+/// control interface; `Barrier` is the hardware register fence; `Span*`
+/// are zero-cost markers used by the report to attribute cycles to
+/// layers (they model nothing and cost nothing).
+#[derive(Debug, Clone)]
+pub enum Instr {
+    /// Write one staged (shadow) CSR of `unit`. Single cycle when the
+    /// unit's shadow bank has space; stalls on valid/ready otherwise
+    /// (shadow full = a launch is still pending).
+    CsrWrite { unit: UnitId, reg: u16, val: u64 },
+    /// Commit the staged CSR bank as a new job ("fire-and-forget"):
+    /// 1 cycle, never waits for the job to finish.
+    Launch { unit: UnitId },
+    /// Spin until `unit` has no running or pending job. Each poll is a
+    /// CSR status read costing [`POLL_INTERVAL`] cycles.
+    AwaitIdle { unit: UnitId },
+    /// Arrive at barrier `id` and block until all `participants` cores
+    /// have arrived.
+    Barrier { id: BarrierId, participants: u8 },
+    /// Run a software kernel on this core (busy for `kernel.cycles`).
+    Sw { kernel: SwKernel },
+    /// Begin attributing this core's time to `layer`.
+    SpanBegin { layer: u16, class: LayerClass },
+    /// Stop attributing.
+    SpanEnd { layer: u16 },
+}
+
+/// Cycles between consecutive status polls in [`Instr::AwaitIdle`]
+/// (a CSR read plus branch on the RV32I core).
+pub const POLL_INTERVAL: u64 = 4;
+
+/// A compiled multi-core program: one instruction stream per management
+/// core plus the external-memory image referenced by DMA descriptors.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub streams: Vec<Vec<Instr>>,
+    /// Bytes preloaded into external (AXI-side) memory before cycle 0 —
+    /// network inputs and weights, as laid out by the compiler.
+    pub ext_mem_init: Vec<(u64, Vec<u8>)>,
+    /// Human-readable layer names, indexed by the `layer` field of
+    /// span markers.
+    pub layer_names: Vec<String>,
+    /// Functional job descriptors referenced by `DESC` CSR writes
+    /// (opaque to the modeled hardware; see [`crate::sim::job`]).
+    pub descs: Vec<crate::sim::job::OpDesc>,
+}
+
+impl Program {
+    pub fn n_cores(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Total static instruction count (diagnostics / tests).
+    pub fn n_instrs(&self) -> usize {
+        self.streams.iter().map(|s| s.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSR register maps (per accelerator kind)
+// ---------------------------------------------------------------------------
+
+/// CSR register offsets for the GeMM accelerator (OpenGeMM-style).
+///
+/// The uniform CSR scheme means these are plain `u16` offsets within the
+/// unit's register window; only the *addresses* differ between
+/// accelerators (paper §IV-A).
+pub mod gemm_csr {
+    pub const M: u16 = 0; // rows / 8 (in hardware tiles)
+    pub const K: u16 = 1;
+    pub const N: u16 = 2;
+    pub const PTR_A: u16 = 3;
+    pub const PTR_B: u16 = 4;
+    pub const PTR_C: u16 = 5;
+    /// Streamer loop strides for A (3 nested loops).
+    pub const STRIDE_A0: u16 = 6;
+    pub const STRIDE_A1: u16 = 7;
+    pub const STRIDE_A2: u16 = 8;
+    pub const STRIDE_B0: u16 = 9;
+    pub const STRIDE_B1: u16 = 10;
+    pub const STRIDE_B2: u16 = 11;
+    pub const STRIDE_C0: u16 = 12;
+    pub const STRIDE_C1: u16 = 13;
+    /// Requantization shift (0 = raw int32 output).
+    pub const SHIFT: u16 = 14;
+    /// Fused options bitmask (bit0 = relu).
+    pub const FLAGS: u16 = 15;
+    /// Within-beat row strides of the streamers (tile row pitch, bytes).
+    pub const ROW_A: u16 = 16;
+    pub const ROW_B: u16 = 17;
+    pub const ROW_C: u16 = 18;
+    /// Opaque descriptor handle (simulator-functional channel; carries
+    /// the `OpDesc` index, not part of the modeled hardware cost).
+    pub const DESC: u16 = 19;
+    pub const N_CONFIG_REGS: u16 = 20;
+}
+
+/// CSR register offsets for the max-pool accelerator.
+pub mod maxpool_csr {
+    pub const H: u16 = 0;
+    pub const W: u16 = 1;
+    pub const C: u16 = 2;
+    pub const KERNEL: u16 = 3;
+    pub const STRIDE: u16 = 4;
+    pub const PTR_IN: u16 = 5;
+    pub const PTR_OUT: u16 = 6;
+    pub const STRIDE_IN0: u16 = 7;
+    pub const STRIDE_IN1: u16 = 8;
+    pub const STRIDE_OUT0: u16 = 9;
+    pub const DESC: u16 = 10;
+    pub const N_CONFIG_REGS: u16 = 11;
+}
+
+/// CSR register offsets for the DMA engine (2-D strided transfers,
+/// paper §IV-C).
+pub mod dma_csr {
+    pub const SRC: u16 = 0;
+    pub const DST: u16 = 1;
+    /// Bytes per contiguous row.
+    pub const ROW_BYTES: u16 = 2;
+    /// Number of rows.
+    pub const ROWS: u16 = 3;
+    /// Source stride between rows (bytes).
+    pub const SRC_STRIDE: u16 = 4;
+    /// Destination stride between rows (bytes).
+    pub const DST_STRIDE: u16 = 5;
+    /// Direction: 0 = ext->SPM, 1 = SPM->ext, 2 = SPM->SPM.
+    pub const DIR: u16 = 6;
+    pub const N_CONFIG_REGS: u16 = 7;
+}
+
+pub mod dma_dir {
+    pub const EXT_TO_SPM: u64 = 0;
+    pub const SPM_TO_EXT: u64 = 1;
+    pub const SPM_TO_SPM: u64 = 2;
+}
+
+/// CSR register offsets for the vector-add accelerator used by the
+/// `custom_accelerator` example (demonstrates third-party integration).
+pub mod vecadd_csr {
+    pub const LEN: u16 = 0;
+    pub const PTR_A: u16 = 1;
+    pub const PTR_B: u16 = 2;
+    pub const PTR_OUT: u16 = 3;
+    pub const DESC: u16 = 4;
+    pub const N_CONFIG_REGS: u16 = 5;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_counts() {
+        let p = Program {
+            streams: vec![
+                vec![Instr::Launch { unit: UnitId(0) }],
+                vec![
+                    Instr::CsrWrite { unit: UnitId(1), reg: 0, val: 1 },
+                    Instr::Launch { unit: UnitId(1) },
+                ],
+            ],
+            ..Default::default()
+        };
+        assert_eq!(p.n_cores(), 2);
+        assert_eq!(p.n_instrs(), 3);
+    }
+
+    #[test]
+    fn csr_maps_have_distinct_offsets() {
+        // Register maps are dense 0..N ranges; N_CONFIG_REGS bounds them.
+        assert!(gemm_csr::DESC < gemm_csr::N_CONFIG_REGS);
+        assert!(maxpool_csr::DESC < maxpool_csr::N_CONFIG_REGS);
+        assert!(dma_csr::DIR < dma_csr::N_CONFIG_REGS);
+    }
+
+    #[test]
+    fn instr_clones_and_debug_formats() {
+        let i = Instr::CsrWrite { unit: UnitId(3), reg: 7, val: 0xdead };
+        let c = i.clone();
+        match c {
+            Instr::CsrWrite { unit, reg, val } => {
+                assert_eq!(unit, UnitId(3));
+                assert_eq!(reg, 7);
+                assert_eq!(val, 0xdead);
+            }
+            _ => panic!(),
+        }
+        assert!(format!("{i:?}").contains("CsrWrite"));
+    }
+}

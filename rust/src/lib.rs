@@ -1,0 +1,56 @@
+//! # SNAX reproduction
+//!
+//! A full-stack reproduction of *"An Open-Source HW-SW Co-Development
+//! Framework Enabling Efficient Multi-Accelerator Systems"* (SNAX,
+//! KU Leuven MICAS, 2025) built as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * [`sim`] — a cycle-accurate micro-architectural simulator of the
+//!   SNAX multi-accelerator compute cluster: multi-banked scratchpad
+//!   behind a round-robin TCDM interconnect, double-buffered CSR control,
+//!   nested-loop data streamers with FIFOs, a 512-bit 2-D DMA, hardware
+//!   barriers, RV32I-class management cores, and the GeMM / max-pool
+//!   accelerators of the paper's evaluation. This substitutes for the
+//!   paper's Verilator/Questasim RTL simulation (see DESIGN.md).
+//! * [`compiler`] — the SNAX-MLIR analogue: a tensor-workload IR and the
+//!   paper's four automated passes (device placement, static memory
+//!   allocation with double buffering, asynchronous scheduling with
+//!   barrier insertion, and CSR/dataflow device programming).
+//! * [`runtime`] — the PJRT bridge: loads the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`, built once by `make artifacts`)
+//!   and executes them on the XLA CPU client. Python is never on the
+//!   run path.
+//! * [`models`] — the evaluation workload zoo (Fig. 6a network, MLPerf
+//!   Tiny Deep AutoEncoder and ResNet-8, tiled matmuls) plus the
+//!   bit-exact int8 datapath twin of the JAX reference.
+//! * [`energy`] — area and activity-based energy models calibrated to
+//!   the paper's TSMC-16 nm numbers (Fig. 7, Fig. 9, Table I).
+//! * [`metrics`] — roofline analysis and report/table generation.
+//! * [`baseline`] — the "conventional integration" sequential runtime
+//!   used as the comparison point in Fig. 8 and Fig. 10.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use snax::config::ClusterConfig;
+//! use snax::compiler::{compile, CompileOptions};
+//! use snax::models;
+//!
+//! let cfg = ClusterConfig::fig6d();
+//! let graph = models::fig6a_graph();
+//! let compiled = compile(&graph, &cfg, &CompileOptions::pipelined()).unwrap();
+//! let report = snax::sim::Cluster::new(&cfg).run(&compiled.program).unwrap();
+//! println!("total cycles: {}", report.total_cycles);
+//! ```
+
+pub mod baseline;
+pub mod compiler;
+pub mod config;
+pub mod energy;
+pub mod isa;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+
+pub use config::ClusterConfig;

@@ -1,0 +1,315 @@
+//! `snax` — the leader binary: compile + simulate workloads on SNAX
+//! cluster configurations, verify against the AOT PJRT artifacts, and
+//! print evaluation reports.
+//!
+//! Hand-rolled argument parsing (no clap in this vendored environment).
+//!
+//! ```text
+//! snax simulate --net fig6a --cluster fig6d [--pipelined] [--inferences N]
+//! snax fig8     (the heterogeneous-acceleration cascade)
+//! snax roofline --tiles 16,32,64,96,128 [--baseline]
+//! snax report   (area summary for all presets)
+//! snax verify   --net fig6a (sim vs golden vs PJRT artifact)
+//! snax config   --preset fig6d (dump the TOML config)
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::energy;
+use snax::metrics::report::{cycles, pct, ratio, table};
+use snax::metrics::roofline::RooflinePoint;
+use snax::models;
+use snax::models::matmul::{overlapped_program, serialized_program, MatmulWorkload};
+use snax::runtime::{ArtifactStore, Tensor};
+use snax::sim::Cluster;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::BTreeMap::new();
+        let mut key: Option<String> = None;
+        for a in it {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(k) = key.take() {
+                    flags.insert(k, "true".into()); // boolean flag
+                }
+                key = Some(stripped.to_string());
+            } else if let Some(k) = key.take() {
+                flags.insert(k, a);
+            } else {
+                bail!("unexpected positional argument '{a}'");
+            }
+        }
+        if let Some(k) = key.take() {
+            flags.insert(k, "true".into());
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    fn get(&self, k: &str, default: &str) -> String {
+        self.flags.get(k).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn graph_for(name: &str) -> Result<snax::compiler::Graph> {
+    match name {
+        "fig6a" => Ok(models::fig6a_graph()),
+        "dae" => Ok(models::dae_graph()),
+        "resnet8" => Ok(models::resnet8_graph()),
+        other => bail!("unknown net '{other}' (fig6a/dae/resnet8)"),
+    }
+}
+
+fn cluster_for(args: &Args) -> Result<ClusterConfig> {
+    let spec = args.get("cluster", "fig6d");
+    if spec.ends_with(".toml") {
+        ClusterConfig::from_path(std::path::Path::new(&spec))
+    } else {
+        ClusterConfig::preset(&spec)
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = cluster_for(args)?;
+    let g = graph_for(&args.get("net", "fig6a"))?;
+    let n: u32 = args.get("inferences", "1").parse()?;
+    let opts = if args.has("pipelined") {
+        CompileOptions::pipelined().with_inferences(n.max(2))
+    } else {
+        CompileOptions::sequential().with_inferences(n)
+    };
+    let cp = compile(&g, &cfg, &opts)?;
+    let trace_path = args.flags.get("trace").cloned();
+    let report = if let Some(path) = &trace_path {
+        let (report, trace) = Cluster::new(&cfg).run_traced(&cp.program)?;
+        std::fs::write(path, trace.to_chrome_json())
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!("wrote chrome trace ({} events) to {path}", trace.events.len());
+        report
+    } else {
+        Cluster::new(&cfg).run(&cp.program)?
+    };
+
+    println!(
+        "net={} cluster={} mode={:?} inferences={}",
+        g.name, cfg.name, opts.mode, opts.n_inferences
+    );
+    println!(
+        "total: {} cycles = {:.3} ms @ {} MHz",
+        cycles(report.total_cycles),
+        report.seconds(cfg.freq_mhz) * 1e3,
+        cfg.freq_mhz
+    );
+    let mut rows = Vec::new();
+    for (id, stat) in &report.layers {
+        rows.push(vec![
+            format!("{id}"),
+            stat.name.clone(),
+            cycles(stat.busy_cycles),
+            cycles(stat.span()),
+        ]);
+    }
+    println!("{}", table(&["layer", "name", "busy cycles", "span"], &rows));
+    let mut rows = Vec::new();
+    for u in &report.units {
+        rows.push(vec![
+            u.name.clone(),
+            cycles(u.active_cycles),
+            cycles(u.compute_cycles),
+            pct(u.utilization()),
+            format!("{}", u.jobs),
+        ]);
+    }
+    println!("{}", table(&["unit", "active", "compute", "util", "jobs"], &rows));
+    let e = energy::energy(&report, &cfg);
+    println!("energy: {:.2} uJ  avg power: {:.1} mW", e.total_uj(), e.avg_power_mw());
+    Ok(())
+}
+
+fn cmd_roofline(args: &Args) -> Result<()> {
+    let cfg = ClusterConfig::fig6c();
+    let tiles: Vec<u64> = args
+        .get("tiles", "16,24,32,48,64,96,128")
+        .split(',')
+        .map(|t| t.trim().parse().context("bad tile"))
+        .collect::<Result<_>>()?;
+    let baseline = args.has("baseline");
+    let mut rows = Vec::new();
+    for t in tiles {
+        let w = MatmulWorkload::square(t, 8);
+        let prog = if baseline {
+            serialized_program(&cfg, w)?
+        } else {
+            overlapped_program(&cfg, w)?
+        };
+        let report = Cluster::new(&cfg).run(&prog)?;
+        let p = RooflinePoint::from_run(&cfg, &w, &report);
+        rows.push(vec![
+            format!("{t}"),
+            format!("{:.2}", p.intensity),
+            format!("{:.1}", p.achieved),
+            format!("{:.1}", p.bound),
+            pct(p.utilization()),
+        ]);
+    }
+    println!(
+        "roofline ({}) — peak {:.0} ops/cyc, AXI {:.0} B/cyc",
+        if baseline { "serialized baseline" } else { "SNAX overlapped" },
+        snax::metrics::roofline::peak_ops_per_cycle(&cfg),
+        snax::metrics::roofline::axi_bytes_per_cycle(&cfg),
+    );
+    println!(
+        "{}",
+        table(&["tile", "ops/B", "achieved ops/cyc", "bound", "util"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_report(_args: &Args) -> Result<()> {
+    let mut rows = Vec::new();
+    for preset in ["fig6b", "fig6c", "fig6d"] {
+        let cfg = ClusterConfig::preset(preset)?;
+        let a = energy::area(&cfg);
+        let mut row = vec![preset.to_string()];
+        for comp in
+            ["control_cores", "spm", "tcdm_interconnect", "streamers", "accelerators", "dma_axi"]
+        {
+            row.push(format!("{:.4}", a.get(comp)));
+        }
+        row.push(format!("{:.4}", a.total()));
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        table(
+            &["config", "cores", "spm", "tcdm", "streamers", "accels", "dma+axi", "total mm2"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let net = args.get("net", "fig6a");
+    let g = graph_for(&net)?;
+    let cfg = cluster_for(args)?;
+    // 1. Golden functional evaluation.
+    let golden = models::evaluate(&g)?;
+    // 2. Cycle-accurate simulation.
+    let cp = compile(&g, &cfg, &CompileOptions::sequential())?;
+    let report = Cluster::new(&cfg).run(&cp.program)?;
+    let sim_out = cp.read_output(&report, 0, 0);
+    if sim_out != golden[0] {
+        bail!("simulator output != golden evaluator for '{net}'");
+    }
+    println!("sim == golden: OK ({} bytes)", sim_out.len());
+    // 3. PJRT artifact.
+    let store = ArtifactStore::open_default()?;
+    let meta = store
+        .meta(&net)
+        .with_context(|| format!("artifact '{net}' missing — run `make artifacts`"))?
+        .clone();
+    let in_shape = meta.inputs[0].0.clone();
+    let n_in: usize = in_shape.iter().product();
+    let seed = match net.as_str() {
+        "fig6a" => 1000,
+        "dae" => 2000,
+        "resnet8" => 3000,
+        _ => bail!("no input seed for '{net}'"),
+    };
+    let x = Tensor::from_i8(&in_shape, &snax::models::lcg::lcg_i8(seed, n_in));
+    let outs = store.execute(&net, &[x])?;
+    // The artifact returns the first valid row; the graph output is the
+    // 8-row GeMM-padded tensor (all rows identical for tiled nets).
+    let artifact_bytes = &outs[0].data;
+    let n_cmp = artifact_bytes.len().min(sim_out.len());
+    if sim_out[..n_cmp] != artifact_bytes[..n_cmp] {
+        bail!("PJRT artifact output != simulator output for '{net}'");
+    }
+    println!("sim == PJRT artifact: OK ({n_cmp} bytes)");
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let cfg = ClusterConfig::preset(&args.get("preset", "fig6d"))?;
+    print!("{}", cfg.to_toml());
+    Ok(())
+}
+
+fn cmd_fig8(_args: &Args) -> Result<()> {
+    let g = models::fig6a_graph();
+    let seq = CompileOptions::sequential();
+    let mut rows = Vec::new();
+    let mut prev: Option<u64> = None;
+    for preset in ["fig6b", "fig6c", "fig6d"] {
+        let cfg = ClusterConfig::preset(preset)?;
+        let cp = compile(&g, &cfg, &seq)?;
+        let r = Cluster::new(&cfg).run(&cp.program)?;
+        let speedup = prev.map(|p| ratio(p as f64 / r.total_cycles as f64));
+        rows.push(vec![
+            preset.into(),
+            cycles(r.total_cycles),
+            speedup.unwrap_or_else(|| "-".into()),
+        ]);
+        prev = Some(r.total_cycles);
+    }
+    // Pipelined on fig6d.
+    let cfg = ClusterConfig::fig6d();
+    let n = 8;
+    let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(n))?;
+    let r = Cluster::new(&cfg).run(&cp.program)?;
+    let per_inf = r.total_cycles / n as u64;
+    rows.push(vec![
+        "fig6d pipelined".into(),
+        format!("{} /inf", cycles(per_inf)),
+        ratio(prev.unwrap() as f64 / per_inf as f64),
+    ]);
+    println!("{}", table(&["platform", "cycles", "step speedup"], &rows));
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "snax — SNAX multi-accelerator cluster reproduction\n\n\
+         commands:\n\
+         \u{20}  simulate --net fig6a|dae|resnet8 --cluster fig6b|fig6c|fig6d|file.toml\n\
+         \u{20}           [--pipelined] [--inferences N] [--trace out.json]\n\
+         \u{20}  fig8      (the heterogeneous-acceleration cascade)\n\
+         \u{20}  roofline  [--tiles 16,32,64] [--baseline]\n\
+         \u{20}  report    (area breakdown per preset)\n\
+         \u{20}  verify    --net fig6a (sim vs golden vs PJRT artifact)\n\
+         \u{20}  config    --preset fig6d (dump TOML)"
+    );
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "roofline" => cmd_roofline(&args),
+        "report" => cmd_report(&args),
+        "verify" => cmd_verify(&args),
+        "config" => cmd_config(&args),
+        "fig8" => cmd_fig8(&args),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            help();
+            bail!("unknown command '{other}'")
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Metrics and reporting: roofline analysis (Fig. 10) and the
+//! table/series formatting shared by the benches and the CLI.
+
+pub mod report;
+pub mod roofline;
+
+pub use roofline::{roofline_bound, RooflinePoint};

@@ -1,0 +1,89 @@
+//! Plain-text table/series rendering shared by the benches and CLI —
+//! every paper figure/table is regenerated as one of these.
+
+use std::fmt::Write;
+
+/// Render an aligned ASCII table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, cell) in r.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            let _ = write!(s, " {:<w$} |", c, w = widths[i]);
+        }
+        out.push_str(&s);
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    let mut sep = String::from("|");
+    for w in &widths {
+        let _ = write!(sep, "{}|", "-".repeat(w + 2));
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    for r in rows {
+        line(&mut out, r);
+    }
+    out
+}
+
+/// Format a cycle count with thousands separators.
+pub fn cycles(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format a ratio like "152.3x".
+pub fn ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+/// Format a percentage.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["name", "cycles"],
+            &[
+                vec!["conv".into(), "123".into()],
+                vec!["maxpool".into(), "4".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[2].contains("conv"));
+        // All rows same width.
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(cycles(1234567), "1,234,567");
+        assert_eq!(cycles(42), "42");
+        assert_eq!(ratio(152.34), "152.34x");
+        assert_eq!(pct(0.923), "92.3%");
+    }
+}

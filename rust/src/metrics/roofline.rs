@@ -1,0 +1,91 @@
+//! Roofline analysis (paper Fig. 10, after Williams et al. [26]).
+//!
+//! Peak compute = the GeMM array's 512 MACs/cycle = 1024 int8 ops/cycle;
+//! the memory roof is the AXI bandwidth (64 B/cycle at 512 bits). The
+//! ridge point sits at `peak_ops / bw` ops/byte; the paper reports 92%
+//! of peak at high intensity, 79% of bandwidth at low intensity, and
+//! 78% at the ridge for SNAX.
+
+use crate::config::ClusterConfig;
+use crate::models::matmul::MatmulWorkload;
+use crate::sim::SimReport;
+
+/// Ops per cycle at peak (1 MAC = 2 ops).
+pub fn peak_ops_per_cycle(_cfg: &ClusterConfig) -> f64 {
+    2.0 * crate::sim::accel::gemm::MACS_PER_CYCLE as f64
+}
+
+/// AXI bytes per cycle.
+pub fn axi_bytes_per_cycle(cfg: &ClusterConfig) -> f64 {
+    cfg.axi_bits as f64 / 8.0
+}
+
+/// The roofline bound (ops/cycle) at arithmetic intensity `ai`.
+pub fn roofline_bound(cfg: &ClusterConfig, ai: f64) -> f64 {
+    let peak = peak_ops_per_cycle(cfg);
+    let mem = ai * axi_bytes_per_cycle(cfg);
+    peak.min(mem)
+}
+
+/// Intensity of the ridge point (ops/byte).
+pub fn ridge_intensity(cfg: &ClusterConfig) -> f64 {
+    peak_ops_per_cycle(cfg) / axi_bytes_per_cycle(cfg)
+}
+
+/// One measured point of the Fig. 10 sweep.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub tile: u64,
+    pub intensity: f64,
+    /// Achieved ops/cycle over the whole run.
+    pub achieved: f64,
+    /// Roofline bound at this intensity.
+    pub bound: f64,
+}
+
+impl RooflinePoint {
+    /// Fraction of the roofline achieved (the paper's utilization).
+    pub fn utilization(&self) -> f64 {
+        if self.bound == 0.0 {
+            0.0
+        } else {
+            self.achieved / self.bound
+        }
+    }
+
+    pub fn from_run(cfg: &ClusterConfig, w: &MatmulWorkload, report: &SimReport) -> Self {
+        let ai = w.intensity();
+        let achieved = w.total_ops() as f64 / report.total_cycles.max(1) as f64;
+        Self {
+            tile: w.m,
+            intensity: ai,
+            achieved,
+            bound: roofline_bound(cfg, ai),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ridge_at_16_ops_per_byte() {
+        // 1024 ops/cycle over 64 B/cycle.
+        let cfg = ClusterConfig::fig6c();
+        assert!((ridge_intensity(&cfg) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bound_is_min_of_roofs() {
+        let cfg = ClusterConfig::fig6c();
+        assert!((roofline_bound(&cfg, 1.0) - 64.0).abs() < 1e-9); // memory
+        assert!((roofline_bound(&cfg, 100.0) - 1024.0).abs() < 1e-9); // compute
+    }
+
+    #[test]
+    fn utilization_of_perfect_point_is_one() {
+        let p = RooflinePoint { tile: 64, intensity: 32.0, achieved: 1024.0, bound: 1024.0 };
+        assert!((p.utilization() - 1.0).abs() < 1e-12);
+    }
+}

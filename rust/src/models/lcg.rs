@@ -1,0 +1,60 @@
+//! Deterministic int8 data generator — the bit-exact Rust twin of
+//! `python/compile/kernels/ref.py::lcg_np`.
+//!
+//! Both sides generate identical weight/input bytes from the same seed,
+//! which is what lets the simulator's functional outputs be compared
+//! bit-for-bit against the AOT JAX/Pallas artifacts without shipping
+//! tensors between the languages.
+//!
+//! Spec (keep in sync with the Python twin):
+//! `state' = state * 6364136223846793005 + 1442695040888963407 (mod 2^64)`;
+//! output byte `(state' >> 33) & 0xff` as i8, then halved truncating
+//! toward zero into `[-63, 63]`.
+
+const MUL: u64 = 6364136223846793005;
+const INC: u64 = 1442695040888963407;
+
+/// `n` int8 values from `seed`.
+pub fn lcg_i8(seed: u64, n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    let mut state = seed;
+    for _ in 0..n {
+        state = state.wrapping_mul(MUL).wrapping_add(INC);
+        let byte = ((state >> 33) & 0xff) as u8;
+        let v = byte as i8 as i32; // sign via two's complement
+        out.push((v / 2) as i8); // Rust `/` truncates toward zero
+    }
+    out
+}
+
+/// Same stream as raw bytes (for memory images).
+pub fn lcg_bytes(seed: u64, n: usize) -> Vec<u8> {
+    lcg_i8(seed, n).into_iter().map(|v| v as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_golden_vector() {
+        // Pinned in python/tests/test_model.py::test_lcg_known_vector —
+        // if one side changes, both tests must change together.
+        assert_eq!(lcg_i8(42, 8), vec![59, 41, -23, 15, 43, 6, -19, -53]);
+    }
+
+    #[test]
+    fn range_is_halved_int8() {
+        let v = lcg_i8(7, 4096);
+        assert!(v.iter().all(|&x| (-64..=63).contains(&x)));
+        // Not degenerate.
+        assert!(v.iter().any(|&x| x > 50));
+        assert!(v.iter().any(|&x| x < -50));
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        assert_eq!(lcg_i8(1, 64), lcg_i8(1, 64));
+        assert_ne!(lcg_i8(1, 64), lcg_i8(2, 64));
+    }
+}

@@ -1,0 +1,16 @@
+//! Evaluation workload zoo + shared deterministic data generation.
+//!
+//! * [`specs`] — graph builders for the paper's workloads (Fig. 6a net,
+//!   MLPerf Tiny Deep AutoEncoder and ResNet-8), spec-twinned with
+//!   `python/compile/model.py`.
+//! * [`matmul`] — the tiled-matmul roofline workload (Fig. 10).
+//! * [`golden`] — functional graph evaluator (the cross-language oracle).
+//! * [`lcg`] — the bit-exact data-generation twin.
+
+pub mod golden;
+pub mod lcg;
+pub mod matmul;
+pub mod specs;
+
+pub use golden::evaluate;
+pub use specs::{dae_graph, fig6a_graph, resnet8_graph};

@@ -1,0 +1,191 @@
+//! Workload graph builders — the Rust twins of the JAX networks in
+//! `python/compile/model.py`. Layer dimensions, LCG seeds, and requant
+//! shifts are spec'd identically on both sides, so the simulator's
+//! functional outputs match the AOT PJRT artifacts bit-for-bit.
+
+use crate::compiler::ir::Graph;
+
+pub const NET_FIG6A: u64 = 1;
+pub const NET_DAE: u64 = 2;
+pub const NET_RESNET8: u64 = 3;
+
+pub fn layer_seed(net: u64, layer: u64) -> u64 {
+    net * 1000 + layer
+}
+
+pub fn input_seed(net: u64) -> u64 {
+    net * 1000
+}
+
+/// Requant shift: floor(log2(K))/2 + 5 (twin of python `shift_for_k`).
+pub fn shift_for_k(k: u32) -> u32 {
+    (31 - k.leading_zeros()) / 2 + 5
+}
+
+/// Fig. 6a artificial workload: conv(3x3,16ch) -> maxpool(8x8) -> FC,
+/// int8, on a 32x32x16 input. See python/compile/model.py for the
+/// dimension rationale (baseline cycle split matching Fig. 8).
+pub fn fig6a_graph() -> Graph {
+    let mut g = Graph::new("fig6a");
+    let x = g.add_input("input", &[1, 32, 32, 16], input_seed(NET_FIG6A));
+    let c = g
+        .conv2d(
+            "conv", x, 16, 3, 3, 1, 1, true,
+            shift_for_k(3 * 3 * 16),
+            layer_seed(NET_FIG6A, 1),
+        )
+        .unwrap();
+    let p = g.maxpool2d("pool", c, 8, 8).unwrap(); // [1,4,4,16]
+    let t = g.tile_rows("tile", p, 8).unwrap(); // [8,256]
+    let d = g
+        .dense("fc", t, 8, false, 0, true, layer_seed(NET_FIG6A, 3))
+        .unwrap();
+    g.mark_output(d);
+    g
+}
+
+/// MLPerf Tiny Deep AutoEncoder (ToyADMOS): 640 -> 128x4 -> 8 ->
+/// 128x4 -> 640 dense stack, 8-row GeMM batch.
+pub fn dae_graph() -> Graph {
+    let dims: [u32; 10] = [128, 128, 128, 128, 8, 128, 128, 128, 128, 640];
+    let mut g = Graph::new("dae");
+    let mut x = g.add_input("input", &[8, 640], input_seed(NET_DAE));
+    let mut k = 640u32;
+    for (i, &d) in dims.iter().enumerate() {
+        let last = i == dims.len() - 1;
+        x = g
+            .dense(
+                &format!("fc{}", i + 1),
+                x,
+                d,
+                !last,
+                if last { 0 } else { shift_for_k(k) },
+                last,
+                layer_seed(NET_DAE, i as u64 + 1),
+            )
+            .unwrap();
+        k = d;
+    }
+    g.mark_output(x);
+    g
+}
+
+/// MLPerf Tiny ResNet-8 (CIFAR-10 class), channels padded to multiples
+/// of 8 for the GeMM array, 10 classes padded to 16.
+pub fn resnet8_graph() -> Graph {
+    let mut g = Graph::new("resnet8");
+    let x = g.add_input("input", &[1, 32, 32, 8], input_seed(NET_RESNET8));
+    let stem = g
+        .conv2d(
+            "stem", x, 16, 3, 3, 1, 1, true,
+            shift_for_k(3 * 3 * 8),
+            layer_seed(NET_RESNET8, 1),
+        )
+        .unwrap();
+
+    let stack = |g: &mut Graph, y, base: u64, cin: u32, cout: u32, stride: u32| {
+        let z = g
+            .conv2d(
+                &format!("s{base}.conv1"),
+                y,
+                cout,
+                3,
+                3,
+                stride,
+                1,
+                true,
+                shift_for_k(3 * 3 * cin),
+                layer_seed(NET_RESNET8, base),
+            )
+            .unwrap();
+        let z = g
+            .conv2d(
+                &format!("s{base}.conv2"),
+                z,
+                cout,
+                3,
+                3,
+                1,
+                1,
+                false,
+                shift_for_k(3 * 3 * cout),
+                layer_seed(NET_RESNET8, base + 1),
+            )
+            .unwrap();
+        let sc = if stride != 1 || cin != cout {
+            g.conv2d(
+                &format!("s{base}.sc"),
+                y,
+                cout,
+                1,
+                1,
+                stride,
+                0,
+                false,
+                shift_for_k(cin),
+                layer_seed(NET_RESNET8, base + 2),
+            )
+            .unwrap()
+        } else {
+            y
+        };
+        g.residual_add(&format!("s{base}.add"), z, sc, true).unwrap()
+    };
+
+    let y = stack(&mut g, stem, 2, 16, 16, 1); // 32x32x16
+    let y = stack(&mut g, y, 5, 16, 32, 2); // 16x16x32
+    let y = stack(&mut g, y, 8, 32, 64, 2); // 8x8x64
+    let y = g.global_avgpool("avgpool", y).unwrap(); // [1,64]
+    let y = g.tile_rows("tile", y, 8).unwrap(); // [8,64]
+    let d = g
+        .dense("fc", y, 16, false, 0, true, layer_seed(NET_RESNET8, 11))
+        .unwrap();
+    g.mark_output(d);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_matches_python_spec() {
+        // Twin of python test_shift_for_k_spec.
+        assert_eq!(shift_for_k(8), 6);
+        assert_eq!(shift_for_k(128), 8);
+        assert_eq!(shift_for_k(144), 8);
+        assert_eq!(shift_for_k(640), 9);
+    }
+
+    #[test]
+    fn fig6a_shapes() {
+        let g = fig6a_graph();
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 4);
+        let out = g.tensor(g.outputs()[0]);
+        assert_eq!(out.dims, vec![8, 8]);
+        // conv MACs = 1024 px * 144 K * 16 cout
+        assert_eq!(g.total_macs(), 1024 * 144 * 16 + 8 * 256 * 8);
+    }
+
+    #[test]
+    fn dae_shapes() {
+        let g = dae_graph();
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 10);
+        assert_eq!(g.tensor(g.outputs()[0]).dims, vec![8, 640]);
+        // ~264k MACs per row x 8 rows
+        let macs = g.total_macs();
+        assert!(macs > 2_000_000 && macs < 2_300_000, "{macs}");
+    }
+
+    #[test]
+    fn resnet8_shapes() {
+        let g = resnet8_graph();
+        g.validate().unwrap();
+        assert_eq!(g.tensor(g.outputs()[0]).dims, vec![8, 16]);
+        // ~12.8M MACs (stem + 3 stacks + fc), channel-padded variant.
+        let macs = g.total_macs();
+        assert!(macs > 9_000_000 && macs < 16_000_000, "{macs}");
+    }
+}

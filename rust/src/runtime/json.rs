@@ -1,0 +1,267 @@
+//! Minimal JSON parser — just enough for `artifacts/manifest.json`
+//! (objects, arrays, strings, integers, booleans). This environment
+//! vendors no serde_json; the grammar we consume is fixed and produced
+//! by our own `aot.py`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse(text: &str) -> Result<Value> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing characters at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos >= b.len() || b[*pos] != c {
+        bail!("expected '{}' at byte {pos}", c as char);
+    }
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Value::Str(parse_string(b, pos)?)),
+        b't' => lit(b, pos, "true", Value::Bool(true)),
+        b'f' => lit(b, pos, "false", Value::Bool(false)),
+        b'n' => lit(b, pos, "null", Value::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, s: &str, v: Value) -> Result<Value> {
+    if b.len() - *pos >= s.len() && &b[*pos..*pos + s.len()] == s.as_bytes() {
+        *pos += s.len();
+        Ok(v)
+    } else {
+        bail!("bad literal at byte {pos}")
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Value> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Value::Num(s.parse::<f64>()?))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    bail!("bad escape at end");
+                }
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'u' => {
+                        // \uXXXX (BMP only — fine for our manifests).
+                        if *pos + 4 >= b.len() {
+                            bail!("bad unicode escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let cp = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    other => bail!("unknown escape \\{}", other as char),
+                }
+                *pos += 1;
+            }
+            c => {
+                // Raw UTF-8 passthrough.
+                let ch_len = match c {
+                    0..=0x7f => 1,
+                    0xc0..=0xdf => 2,
+                    0xe0..=0xef => 3,
+                    _ => 4,
+                };
+                out.push_str(std::str::from_utf8(&b[*pos..*pos + ch_len])?);
+                *pos += ch_len;
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Value> {
+    expect(b, pos, b'[')?;
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Value::Arr(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            bail!("unterminated array");
+        }
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Value::Arr(out));
+            }
+            c => bail!("expected ',' or ']', got '{}'", c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Value> {
+    expect(b, pos, b'{')?;
+    let mut out = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Value::Obj(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        out.insert(key, val);
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            bail!("unterminated object");
+        }
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Value::Obj(out));
+            }
+            c => bail!("expected ',' or '}}', got '{}'", c as char),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let v = parse(
+            r#"{"gemm_8x8x8": {"inputs": [{"shape": [8, 8], "dtype": "int8"}],
+                "outputs": [{"shape": [8, 8], "dtype": "int32"}],
+                "return_tuple": true, "sha256": "abc"}}"#,
+        )
+        .unwrap();
+        let e = v.get("gemm_8x8x8").unwrap();
+        assert_eq!(e.get("return_tuple").unwrap().as_bool(), Some(true));
+        let ins = e.get("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(ins[0].get("dtype").unwrap().as_str(), Some("int8"));
+        let dims = ins[0].get("shape").unwrap().as_arr().unwrap();
+        assert_eq!(dims[0].as_u64(), Some(8));
+    }
+
+    #[test]
+    fn parses_scalars_and_rejects_garbage() {
+        assert_eq!(parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(parse("\"a\\nb\"").unwrap().as_str(), Some("a\nb"));
+        assert_eq!(parse("true").unwrap().as_bool(), Some(true));
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{}x").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("[[1,2],[3]]").unwrap();
+        let a = v.as_arr().unwrap();
+        assert_eq!(a[0].as_arr().unwrap().len(), 2);
+        assert_eq!(a[1].as_arr().unwrap()[0].as_u64(), Some(3));
+    }
+}

@@ -1,0 +1,304 @@
+//! PJRT runtime — the AOT bridge from the build-time JAX/Pallas world
+//! into the Rust request path.
+//!
+//! `make artifacts` (Python, build-time only) lowers every entry point
+//! in `python/compile/model.py` to **HLO text** plus a JSON manifest of
+//! input/output shapes. This module loads those artifacts, compiles
+//! them on the PJRT CPU client, and executes them with int8/int32
+//! tensors — no Python anywhere at run time.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange
+//! format: jax >= 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and `python/compile/aot.py`).
+
+pub mod json;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Tensor dtype at the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I8,
+    I32,
+}
+
+impl DType {
+    fn from_manifest(s: &str) -> Result<Self> {
+        match s {
+            "int8" => Ok(DType::I8),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported artifact dtype '{other}'"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 => 4,
+        }
+    }
+
+    fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::I8 => xla::ElementType::S8,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Raw little-endian bytes, row-major.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_i8(shape: &[usize], values: &[i8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Self {
+            dtype: DType::I8,
+            shape: shape.to_vec(),
+            data: values.iter().map(|&v| v as u8).collect(),
+        }
+    }
+
+    pub fn from_bytes_i8(shape: &[usize], data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { dtype: DType::I8, shape: shape.to_vec(), data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_i8(&self) -> Vec<i8> {
+        assert_eq!(self.dtype, DType::I8);
+        self.data.iter().map(|&b| b as i8).collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )?;
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Self> {
+        let data = match dtype {
+            DType::I8 => lit.to_vec::<i8>()?.into_iter().map(|v| v as u8).collect(),
+            DType::I32 => lit
+                .to_vec::<i32>()?
+                .into_iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect(),
+        };
+        Ok(Self { dtype, shape: shape.to_vec(), data })
+    }
+}
+
+/// Shape/dtype signature of one artifact entry.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub inputs: Vec<(Vec<usize>, DType)>,
+    pub outputs: Vec<(Vec<usize>, DType)>,
+    pub sha256: String,
+}
+
+struct Entry {
+    meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Loads `artifacts/` once, compiles each HLO module on the PJRT CPU
+/// client, and serves executions (lazily compiled on first use).
+pub struct ArtifactStore {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    metas: BTreeMap<String, EntryMeta>,
+    compiled: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Entry>>>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (reads `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} — run `make artifacts`", manifest_path.display()))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let obj = root.as_obj().context("manifest root must be an object")?;
+        let mut metas = BTreeMap::new();
+        for (name, entry) in obj {
+            let sig = |key: &str| -> Result<Vec<(Vec<usize>, DType)>> {
+                entry
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .with_context(|| format!("{name}: missing {key}"))?
+                    .iter()
+                    .map(|io| {
+                        let shape = io
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .context("shape")?
+                            .iter()
+                            .map(|d| d.as_u64().map(|v| v as usize).context("dim"))
+                            .collect::<Result<Vec<_>>>()?;
+                        let dtype = DType::from_manifest(
+                            io.get("dtype").and_then(|v| v.as_str()).context("dtype")?,
+                        )?;
+                        Ok((shape, dtype))
+                    })
+                    .collect()
+            };
+            metas.insert(
+                name.clone(),
+                EntryMeta {
+                    name: name.clone(),
+                    inputs: sig("inputs")?,
+                    outputs: sig("outputs")?,
+                    sha256: entry
+                        .get("sha256")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            client,
+            metas,
+            compiled: Default::default(),
+        })
+    }
+
+    /// Default location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        let candidates = ["artifacts", "../artifacts", "../../artifacts"];
+        for c in candidates {
+            let p = Path::new(c);
+            if p.join("manifest.json").exists() {
+                return Self::open(p);
+            }
+        }
+        bail!("artifacts/manifest.json not found — run `make artifacts`")
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.metas.keys().cloned().collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
+        self.metas.get(name)
+    }
+
+    fn entry(&self, name: &str) -> Result<std::rc::Rc<Entry>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .metas
+            .get(name)
+            .with_context(|| format!("no artifact '{name}' in manifest"))?
+            .clone();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT-compiling artifact '{name}'"))?;
+        let e = std::rc::Rc::new(Entry { meta, exe });
+        self.compiled.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Execute artifact `name` with host tensors, returning host tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.entry(name)?;
+        let meta = &entry.meta;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, (shape, dtype))) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if &t.shape != shape || t.dtype != *dtype {
+                bail!(
+                    "artifact '{name}' input {i}: expected {shape:?}/{dtype:?}, got {:?}/{:?}",
+                    t.shape,
+                    t.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = entry.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: unwrap the tuple.
+        let mut parts = result.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact '{name}': expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .drain(..)
+            .zip(&meta.outputs)
+            .map(|(lit, (shape, dtype))| Tensor::from_literal(&lit, *dtype, shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full artifact-backed tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts` to have run). Here: pure host logic.
+
+    #[test]
+    fn tensor_roundtrips() {
+        let t = Tensor::from_i8(&[2, 2], &[1, -2, 3, -4]);
+        assert_eq!(t.as_i8(), vec![1, -2, 3, -4]);
+        assert_eq!(t.elems(), 4);
+        let t32 = Tensor {
+            dtype: DType::I32,
+            shape: vec![2],
+            data: vec![1, 0, 0, 0, 254, 255, 255, 255],
+        };
+        assert_eq!(t32.as_i32(), vec![1, -2]);
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(DType::from_manifest("int8").unwrap(), DType::I8);
+        assert_eq!(DType::from_manifest("int32").unwrap(), DType::I32);
+        assert!(DType::from_manifest("float32").is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Timing model of the GeMM accelerator (OpenGeMM [25]): 512 PEs
+//! consuming one 8x8x8 int8 matrix-multiply step per cycle, fed by two
+//! 512-bit read streamers (A, B tiles) and drained by one 2048-bit
+//! write streamer (an 8x8 int32 C tile after each K-reduction).
+
+use anyhow::{bail, Result};
+
+use crate::config::AccelKind;
+use crate::isa::gemm_csr as csr;
+
+use super::super::streamer::{AguLoop, BeatPattern, StreamPlan, MAX_LOOPS};
+use super::{AccelModel, CounterClass, EmitRule, JobPlan, ReaderPlan};
+
+/// Hardware tile edge (the PE array computes TILE x TILE x TILE MACs
+/// per cycle).
+pub const TILE: u64 = 8;
+/// MACs retired per compute cycle.
+pub const MACS_PER_CYCLE: u64 = TILE * TILE * TILE;
+
+pub struct GemmModel;
+
+fn loops3(l0: (u64, i64), l1: (u64, i64), l2: (u64, i64)) -> [AguLoop; MAX_LOOPS] {
+    [
+        AguLoop { count: l0.0, stride: l0.1 },
+        AguLoop { count: l1.0, stride: l1.1 },
+        AguLoop { count: l2.0, stride: l2.1 },
+        AguLoop::default(),
+    ]
+}
+
+impl AccelModel for GemmModel {
+    fn kind(&self) -> AccelKind {
+        AccelKind::Gemm
+    }
+
+    fn n_csrs(&self) -> u16 {
+        csr::N_CONFIG_REGS
+    }
+
+    fn plan(&self, regs: &[u64]) -> Result<JobPlan> {
+        let (m, k, n) = (regs[csr::M as usize], regs[csr::K as usize], regs[csr::N as usize]);
+        if m == 0 || k == 0 || n == 0 {
+            bail!("gemm: zero dimension (m={m} k={k} n={n})");
+        }
+        if m % TILE != 0 || k % TILE != 0 || n % TILE != 0 {
+            bail!("gemm: dims not multiples of the {TILE}-wide PE array (m={m} k={k} n={n})");
+        }
+        let (mt, kt, nt) = (m / TILE, k / TILE, n / TILE);
+        let steps = mt * kt * nt;
+
+        // Dataflow kernels. Loop strides are CSR-programmed by the
+        // compiler's codegen (the "dataflow kernel"); the within-beat
+        // row pitch rides in ROW_A/B/C.
+        let a = ReaderPlan {
+            plan: StreamPlan {
+                base: regs[csr::PTR_A as usize],
+                pattern: BeatPattern {
+                    rows: TILE as u32,
+                    row_stride: regs[csr::ROW_A as usize] as i64,
+                    words_per_row: 1,
+                },
+                // innermost k, then n (A reused across n), then m
+                loops: loops3(
+                    (kt, regs[csr::STRIDE_A0 as usize] as i64),
+                    (nt, regs[csr::STRIDE_A1 as usize] as i64),
+                    (mt, regs[csr::STRIDE_A2 as usize] as i64),
+                ),
+            },
+            consume_every: 1,
+        };
+        let b = ReaderPlan {
+            plan: StreamPlan {
+                base: regs[csr::PTR_B as usize],
+                pattern: BeatPattern {
+                    rows: TILE as u32,
+                    row_stride: regs[csr::ROW_B as usize] as i64,
+                    words_per_row: 1,
+                },
+                loops: loops3(
+                    (kt, regs[csr::STRIDE_B0 as usize] as i64),
+                    (nt, regs[csr::STRIDE_B1 as usize] as i64),
+                    (mt, regs[csr::STRIDE_B2 as usize] as i64),
+                ),
+            },
+            consume_every: 1,
+        };
+        // C beat: 8 rows x 4 words (8x8 int32 = 256 B on the 2048-bit
+        // port) per completed K-reduction.
+        let i32_out = regs[csr::SHIFT as usize] == 0 && regs[csr::FLAGS as usize] & 0b10 != 0;
+        let c_words_per_row = if i32_out { 4 } else { 1 };
+        let c = StreamPlan {
+            base: regs[csr::PTR_C as usize],
+            pattern: BeatPattern {
+                rows: TILE as u32,
+                row_stride: regs[csr::ROW_C as usize] as i64,
+                words_per_row: c_words_per_row,
+            },
+            loops: loops3(
+                (nt, regs[csr::STRIDE_C0 as usize] as i64),
+                (mt, regs[csr::STRIDE_C1 as usize] as i64),
+                (1, 0),
+            ),
+        };
+
+        Ok(JobPlan {
+            steps,
+            emit: EmitRule::EveryK(kt),
+            readers: vec![a, b],
+            writers: vec![c],
+            desc_idx: Some(regs[csr::DESC as usize]),
+            class: CounterClass::Gemm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn regs(m: u64, k: u64, n: u64) -> Vec<u64> {
+        let mut r = vec![0u64; csr::N_CONFIG_REGS as usize];
+        r[csr::M as usize] = m;
+        r[csr::K as usize] = k;
+        r[csr::N as usize] = n;
+        r[csr::PTR_A as usize] = 0;
+        r[csr::PTR_B as usize] = 4096;
+        r[csr::PTR_C as usize] = 8192;
+        r[csr::ROW_A as usize] = k;
+        r[csr::ROW_B as usize] = n;
+        r[csr::ROW_C as usize] = n; // int8 out
+        r[csr::STRIDE_A0 as usize] = 8;
+        r[csr::STRIDE_A2 as usize] = 8 * k;
+        r[csr::STRIDE_B0 as usize] = 8 * n;
+        r[csr::STRIDE_B1 as usize] = 8;
+        r[csr::STRIDE_C0 as usize] = 8;
+        r[csr::STRIDE_C1 as usize] = 8 * n;
+        r[csr::SHIFT as usize] = 6;
+        r
+    }
+
+    #[test]
+    fn step_count_matches_tile_math() {
+        let p = GemmModel.plan(&regs(64, 144, 16)).unwrap();
+        assert_eq!(p.steps, 8 * 18 * 2);
+        assert_eq!(p.emit, EmitRule::EveryK(18));
+        assert_eq!(p.readers.len(), 2);
+        assert_eq!(p.writers.len(), 1);
+        // A stream: one beat per compute step.
+        assert_eq!(p.readers[0].plan.total_beats(), p.steps);
+        // C stream: one beat per (m, n) tile.
+        assert_eq!(p.writers[0].total_beats(), 8 * 2);
+    }
+
+    #[test]
+    fn rejects_unaligned_dims() {
+        assert!(GemmModel.plan(&regs(60, 144, 16)).is_err());
+        assert!(GemmModel.plan(&regs(64, 0, 16)).is_err());
+    }
+
+    #[test]
+    fn a_stream_walks_k_then_reuses_across_n() {
+        let p = GemmModel.plan(&regs(16, 16, 16)).unwrap();
+        let a = &p.readers[0].plan;
+        assert_eq!(a.beat_base(0), 0);
+        assert_eq!(a.beat_base(1), 8); // k step
+        assert_eq!(a.beat_base(2), 0); // n step: stride 0 (reuse)
+        assert_eq!(a.beat_base(4), 8 * 16); // m step: next 8 rows
+    }
+
+    #[test]
+    fn macs_per_cycle_is_512() {
+        assert_eq!(MACS_PER_CYCLE, 512);
+    }
+}

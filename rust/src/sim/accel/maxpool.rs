@@ -1,0 +1,132 @@
+//! Timing model of the max-pool accelerator: 8 parallel pooling lanes
+//! (one int8 element per lane per cycle) with configurable kernel size,
+//! fed and drained by 512-bit streamers.
+
+use anyhow::{bail, Result};
+
+use crate::config::AccelKind;
+use crate::isa::maxpool_csr as csr;
+
+use super::super::streamer::{AguLoop, BeatPattern, StreamPlan};
+use super::{AccelModel, CounterClass, EmitRule, JobPlan, ReaderPlan};
+
+/// Window elements processed per cycle (8 lanes x 1 element).
+pub const LANES: u64 = 8;
+/// int8 elements per 512-bit beat.
+const BEAT_ELEMS: u64 = 64;
+
+pub struct MaxPoolModel;
+
+impl AccelModel for MaxPoolModel {
+    fn kind(&self) -> AccelKind {
+        AccelKind::MaxPool
+    }
+
+    fn n_csrs(&self) -> u16 {
+        csr::N_CONFIG_REGS
+    }
+
+    fn plan(&self, regs: &[u64]) -> Result<JobPlan> {
+        let (h, w, c) = (regs[csr::H as usize], regs[csr::W as usize], regs[csr::C as usize]);
+        let (k, s) = (regs[csr::KERNEL as usize], regs[csr::STRIDE as usize]);
+        if h == 0 || w == 0 || c == 0 || k == 0 || s == 0 {
+            bail!("maxpool: zero parameter (h={h} w={w} c={c} k={k} s={s})");
+        }
+        if c % LANES != 0 {
+            bail!("maxpool: C={c} not a multiple of the {LANES} lanes");
+        }
+        if k > h || k > w {
+            bail!("maxpool: kernel {k} exceeds input {h}x{w}");
+        }
+        let ho = (h - k) / s + 1;
+        let wo = (w - k) / s + 1;
+        let out_elems = ho * wo * c;
+        let window_ops = out_elems * k * k;
+        let steps = window_ops.div_ceil(LANES);
+
+        let in_beats = window_ops.div_ceil(BEAT_ELEMS);
+        let out_beats = out_elems.div_ceil(BEAT_ELEMS);
+        // One input beat feeds BEAT_ELEMS window elements = 8 compute
+        // steps at 8 lanes.
+        let consume_every = (BEAT_ELEMS / LANES).max(1);
+
+        let reader = ReaderPlan {
+            plan: StreamPlan {
+                base: regs[csr::PTR_IN as usize],
+                pattern: BeatPattern::contiguous(8),
+                // Contiguous sweep; exact for s == k (every input read
+                // once), an approximation of the overlapping-window walk
+                // otherwise (beat count is exact either way).
+                loops: [
+                    AguLoop { count: in_beats, stride: regs[csr::STRIDE_IN0 as usize] as i64 },
+                    AguLoop { count: 1, stride: regs[csr::STRIDE_IN1 as usize] as i64 },
+                    AguLoop::default(),
+                    AguLoop::default(),
+                ],
+            },
+            consume_every,
+        };
+        let writer = StreamPlan {
+            base: regs[csr::PTR_OUT as usize],
+            pattern: BeatPattern::contiguous(8),
+            loops: [
+                AguLoop { count: out_beats, stride: regs[csr::STRIDE_OUT0 as usize] as i64 },
+                AguLoop::default(),
+                AguLoop::default(),
+                AguLoop::default(),
+            ],
+        };
+
+        Ok(JobPlan {
+            steps,
+            emit: EmitRule::Prorated { total: out_beats },
+            readers: vec![reader],
+            writers: vec![writer],
+            desc_idx: Some(regs[csr::DESC as usize]),
+            class: CounterClass::Pool,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn regs(h: u64, w: u64, c: u64, k: u64, s: u64) -> Vec<u64> {
+        let mut r = vec![0u64; csr::N_CONFIG_REGS as usize];
+        r[csr::H as usize] = h;
+        r[csr::W as usize] = w;
+        r[csr::C as usize] = c;
+        r[csr::KERNEL as usize] = k;
+        r[csr::STRIDE as usize] = s;
+        r[csr::PTR_OUT as usize] = 65536;
+        r[csr::STRIDE_IN0 as usize] = 64;
+        r[csr::STRIDE_OUT0 as usize] = 64;
+        r
+    }
+
+    #[test]
+    fn fig6a_pool_cycle_count() {
+        // 64x64x16, k=s=8 -> 8x8x16 outputs, window ops = input elems.
+        let p = MaxPoolModel.plan(&regs(64, 64, 16, 8, 8)).unwrap();
+        assert_eq!(p.steps, 64 * 64 * 16 / 8);
+        assert_eq!(p.readers[0].plan.total_beats(), 64 * 64 * 16 / 64);
+        assert_eq!(p.writers[0].total_beats(), (8 * 8 * 16u64).div_ceil(64));
+    }
+
+    #[test]
+    fn overlapping_windows_reread_input() {
+        // k=3 s=1 on 10x10x8: 8x8x8 outputs x 9 window elems.
+        let p = MaxPoolModel.plan(&regs(10, 10, 8, 3, 1)).unwrap();
+        let window_ops = 8 * 8 * 8 * 9u64;
+        assert_eq!(p.steps, window_ops.div_ceil(8));
+        assert_eq!(p.readers[0].plan.total_beats(), window_ops.div_ceil(64));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(MaxPoolModel.plan(&regs(8, 8, 12, 2, 2)).is_err()); // C%8
+        assert!(MaxPoolModel.plan(&regs(8, 8, 8, 0, 2)).is_err());
+        assert!(MaxPoolModel.plan(&regs(4, 4, 8, 8, 2)).is_err()); // k>h
+    }
+}

@@ -1,0 +1,92 @@
+//! Accelerator timing models.
+//!
+//! Integrating a new accelerator into the simulated cluster mirrors the
+//! paper's integration story: implement [`AccelModel`] (how CSR configs
+//! map to compute steps and streamer dataflow), add a variant to
+//! [`AccelKind`], and the rest of the stack — compiler placement,
+//! codegen, area/energy models — picks it up. See
+//! [`vecadd`](super::accel::vecadd) and `examples/custom_accelerator.rs`
+//! for the complete walkthrough.
+
+pub mod gemm;
+pub mod maxpool;
+pub mod vecadd;
+
+use anyhow::Result;
+
+use crate::config::AccelKind;
+
+use super::streamer::StreamPlan;
+
+/// When a writer beat is emitted relative to compute steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmitRule {
+    /// One output beat after every `k` compute steps (GeMM emits a C
+    /// tile after the K-reduction completes).
+    EveryK(u64),
+    /// `total` beats spread evenly across all steps (bandwidth-matched
+    /// units like the pooler).
+    Prorated { total: u64 },
+}
+
+/// One input stream: its dataflow plan plus how often the datapath pops
+/// a beat (every `consume_every` compute steps).
+#[derive(Debug, Clone)]
+pub struct ReaderPlan {
+    pub plan: StreamPlan,
+    pub consume_every: u64,
+}
+
+/// Which activity counter a compute step bumps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterClass {
+    Gemm,
+    Pool,
+    Other,
+}
+
+/// A planned job: compute steps + dataflow kernels, derived purely from
+/// the committed CSR bank (the hardware would do the same decoding).
+#[derive(Debug, Clone)]
+pub struct JobPlan {
+    pub steps: u64,
+    pub emit: EmitRule,
+    pub readers: Vec<ReaderPlan>,
+    pub writers: Vec<StreamPlan>,
+    /// Index into the program's `OpDesc` table (functional channel).
+    pub desc_idx: Option<u64>,
+    pub class: CounterClass,
+}
+
+/// Timing model of one accelerator kind.
+pub trait AccelModel: Send + Sync {
+    fn kind(&self) -> AccelKind;
+    /// Size of the CSR window.
+    fn n_csrs(&self) -> u16;
+    /// Decode a committed CSR bank into a job plan. Errors model
+    /// hardware config faults (misaligned sizes etc.) and surface as
+    /// simulation failures — exercised by the failure-injection tests.
+    fn plan(&self, regs: &[u64]) -> Result<JobPlan>;
+}
+
+/// Registry: the timing model for each accelerator kind.
+pub fn model_for(kind: AccelKind) -> &'static dyn AccelModel {
+    match kind {
+        AccelKind::Gemm => &gemm::GemmModel,
+        AccelKind::MaxPool => &maxpool::MaxPoolModel,
+        AccelKind::VecAdd => &vecadd::VecAddModel,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_kinds() {
+        for kind in [AccelKind::Gemm, AccelKind::MaxPool, AccelKind::VecAdd] {
+            assert_eq!(model_for(kind).kind(), kind);
+            assert!(model_for(kind).n_csrs() > 0);
+        }
+    }
+}

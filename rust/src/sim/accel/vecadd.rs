@@ -1,0 +1,81 @@
+//! A minimal third-party accelerator: saturating int8 vector add
+//! (64 elements/cycle over two 512-bit read streams and one 512-bit
+//! write stream).
+//!
+//! This is the "ease of integration" demonstrator (paper §VI-B, our
+//! `examples/custom_accelerator.rs`): a user integrating their own
+//! datapath writes exactly this file plus an `AccelKind` variant and a
+//! CSR map — the streamers, TCDM, CSR shadowing, compiler placement and
+//! codegen are reused from the framework.
+
+use anyhow::{bail, Result};
+
+use crate::config::AccelKind;
+use crate::isa::vecadd_csr as csr;
+
+use super::super::streamer::{AguLoop, BeatPattern, StreamPlan};
+use super::{AccelModel, CounterClass, EmitRule, JobPlan, ReaderPlan};
+
+const BEAT_ELEMS: u64 = 64;
+
+pub struct VecAddModel;
+
+impl AccelModel for VecAddModel {
+    fn kind(&self) -> AccelKind {
+        AccelKind::VecAdd
+    }
+
+    fn n_csrs(&self) -> u16 {
+        csr::N_CONFIG_REGS
+    }
+
+    fn plan(&self, regs: &[u64]) -> Result<JobPlan> {
+        let len = regs[csr::LEN as usize];
+        if len == 0 {
+            bail!("vecadd: zero length");
+        }
+        let beats = len.div_ceil(BEAT_ELEMS);
+        let stream = |base: u64| StreamPlan {
+            base,
+            pattern: BeatPattern::contiguous(8),
+            loops: [
+                AguLoop { count: beats, stride: 64 },
+                AguLoop::default(),
+                AguLoop::default(),
+                AguLoop::default(),
+            ],
+        };
+        Ok(JobPlan {
+            steps: beats,
+            emit: EmitRule::Prorated { total: beats },
+            readers: vec![
+                ReaderPlan { plan: stream(regs[csr::PTR_A as usize]), consume_every: 1 },
+                ReaderPlan { plan: stream(regs[csr::PTR_B as usize]), consume_every: 1 },
+            ],
+            writers: vec![stream(regs[csr::PTR_OUT as usize])],
+            desc_idx: Some(regs[csr::DESC as usize]),
+            class: CounterClass::Other,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beat_math() {
+        let mut regs = vec![0u64; csr::N_CONFIG_REGS as usize];
+        regs[csr::LEN as usize] = 1000;
+        let p = VecAddModel.plan(&regs).unwrap();
+        assert_eq!(p.steps, 16); // ceil(1000/64)
+        assert_eq!(p.readers.len(), 2);
+        assert_eq!(p.writers[0].total_beats(), 16);
+    }
+
+    #[test]
+    fn rejects_zero_len() {
+        let regs = vec![0u64; csr::N_CONFIG_REGS as usize];
+        assert!(VecAddModel.plan(&regs).is_err());
+    }
+}

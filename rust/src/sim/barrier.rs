@@ -1,0 +1,75 @@
+//! Hardware barriers (paper §IV-C): "simple register fences set using
+//! CSR instructions" synchronizing cores (and through them, the
+//! accelerators and DMA they control).
+
+use std::collections::HashMap;
+
+use crate::isa::BarrierId;
+
+#[derive(Debug, Default)]
+pub struct BarrierFile {
+    /// id -> (arrived bitmask of core indices, expected participant count)
+    state: HashMap<u16, (u64, u8)>,
+    pub events: u64,
+}
+
+impl BarrierFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Core `core_idx` arrives at `id` expecting `participants` cores in
+    /// total. Returns true if the barrier released this cycle (all
+    /// arrived), in which case its state resets for reuse.
+    pub fn arrive(&mut self, id: BarrierId, core_idx: usize, participants: u8) -> bool {
+        let entry = self.state.entry(id.0).or_insert((0, participants));
+        entry.0 |= 1 << core_idx;
+        entry.1 = participants;
+        if entry.0.count_ones() as u8 >= participants {
+            self.state.remove(&id.0);
+            self.events += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Has `core_idx` already arrived at a still-blocked barrier?
+    pub fn is_waiting(&self, id: BarrierId, core_idx: usize) -> bool {
+        self.state
+            .get(&id.0)
+            .map(|(mask, _)| mask & (1 << core_idx) != 0)
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_when_all_arrive() {
+        let mut b = BarrierFile::new();
+        assert!(!b.arrive(BarrierId(1), 0, 2));
+        assert!(b.is_waiting(BarrierId(1), 0));
+        assert!(!b.is_waiting(BarrierId(1), 1));
+        assert!(b.arrive(BarrierId(1), 1, 2));
+        // Reset for reuse.
+        assert!(!b.is_waiting(BarrierId(1), 0));
+        assert_eq!(b.events, 1);
+    }
+
+    #[test]
+    fn single_participant_releases_immediately() {
+        let mut b = BarrierFile::new();
+        assert!(b.arrive(BarrierId(9), 0, 1));
+    }
+
+    #[test]
+    fn double_arrival_is_idempotent() {
+        let mut b = BarrierFile::new();
+        assert!(!b.arrive(BarrierId(2), 0, 2));
+        assert!(!b.arrive(BarrierId(2), 0, 2));
+        assert!(b.arrive(BarrierId(2), 1, 2));
+    }
+}

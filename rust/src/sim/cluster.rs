@@ -1,0 +1,1146 @@
+//! The SNAX cluster simulator: composition of cores, accelerators,
+//! streamers, TCDM-banked scratchpad, DMA, and barriers, advanced with
+//! cycle accuracy.
+//!
+//! ## Execution model (paper Fig. 3/4)
+//!
+//! * Management cores interpret their compiled instruction streams:
+//!   CSR writes stage accelerator configs (double-buffered), `Launch`
+//!   is fire-and-forget, `AwaitIdle` polls, `Barrier` synchronizes.
+//! * A launched unit decodes its CSR bank into compute steps plus
+//!   streamer dataflow; each cycle streamers contend for scratchpad
+//!   banks under round-robin arbitration with wide-port priority, and
+//!   the datapath advances when its FIFOs allow.
+//! * Functional results are applied to scratchpad bytes when a job
+//!   retires (job-level functional / beat-level timing split).
+//!
+//! The main loop fast-forwards through memory-idle spans (e.g. long
+//! CPU-only software kernels), preserving cycle accuracy: nothing
+//! observable happens in the skipped cycles.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ClusterConfig;
+use crate::isa::{Instr, LayerClass, Program, SwKernel, POLL_INTERVAL};
+
+use super::accel::{model_for, AccelModel, CounterClass, EmitRule};
+use super::barrier::BarrierFile;
+use super::csr::CsrFile;
+use super::dma::{DmaDir, DmaJob};
+use super::functional::apply_op;
+use super::job::OpDesc;
+use super::mem::{ExtMem, Spm};
+use super::streamer::Streamer;
+use super::trace::{Counters, LayerStat, SimReport, Trace, TraceEvent, UnitStats};
+
+/// Hard stop for runaway simulations.
+const CYCLE_LIMIT: u64 = 4_000_000_000;
+
+enum UnitKind {
+    Accel(&'static dyn AccelModel),
+    Dma,
+}
+
+struct RunningJob {
+    steps: u64,
+    steps_done: u64,
+    emit: EmitRule,
+    emitted: u64,
+    consume_every: Vec<u64>,
+    class: CounterClass,
+    desc: Option<OpDesc>,
+    layer: u16,
+    start: u64,
+    dma: Option<DmaJob>,
+    /// DMA: beats still to cross the AXI boundary (or the internal
+    /// FIFO-to-FIFO path for SPM-to-SPM).
+    axi_remaining: u64,
+}
+
+struct Unit {
+    name: String,
+    kind: UnitKind,
+    csr: CsrFile,
+    readers: Vec<Streamer>,
+    writers: Vec<Streamer>,
+    job: Option<RunningJob>,
+    stats: UnitStats,
+}
+
+impl Unit {
+    fn idle(&self) -> bool {
+        self.job.is_none() && !self.csr.has_pending()
+    }
+}
+
+struct Core {
+    pc: usize,
+    wake_at: u64,
+    pending_sw: Option<SwKernel>,
+    barrier_arrived: bool,
+    done: bool,
+    layer: Option<(u16, LayerClass)>,
+    busy: u64,
+}
+
+/// Streamer addressing key for the arbitration tables.
+#[derive(Clone, Copy)]
+struct SKey {
+    unit: usize,
+    is_writer: bool,
+    idx: usize,
+}
+
+/// The cluster: construct once per configuration, [`run`](Cluster::run)
+/// any number of programs.
+pub struct Cluster {
+    cfg: ClusterConfig,
+}
+
+impl Cluster {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Self { cfg: cfg.clone() }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Execute a compiled program to completion.
+    pub fn run(&self, program: &Program) -> Result<SimReport> {
+        self.state(program)?.run()
+    }
+
+    /// Execute with execution-trace recording: unit jobs and software
+    /// kernels become chrome://tracing-exportable intervals
+    /// ([`Trace::to_chrome_json`]).
+    pub fn run_traced(&self, program: &Program) -> Result<(SimReport, Trace)> {
+        let mut st = self.state(program)?;
+        st.trace = Some(Trace::default());
+        let mut report = st.run()?;
+        let trace = report.trace.take().unwrap_or_default();
+        Ok((report, trace))
+    }
+
+    fn state<'p2>(&'p2 self, program: &'p2 Program) -> Result<SimState<'p2>> {
+        if program.streams.len() != self.cfg.cores.len() {
+            bail!(
+                "program has {} core streams but cluster has {} cores",
+                program.streams.len(),
+                self.cfg.cores.len()
+            );
+        }
+        SimState::new(&self.cfg, program)
+    }
+}
+
+struct SimState<'p> {
+    cfg: &'p ClusterConfig,
+    program: &'p Program,
+    spm: Spm,
+    ext: ExtMem,
+    units: Vec<Unit>,
+    cores: Vec<Core>,
+    barriers: BarrierFile,
+    counters: Counters,
+    /// Indexed by layer id (dense — layer ids come from the compiler's
+    /// node numbering); folded into the report's BTreeMap at the end.
+    layers: Vec<Option<LayerStat>>,
+    /// Streamer arbitration priority groups (desc port width), built once.
+    groups: Vec<Vec<SKey>>,
+    grants: Vec<u32>,
+    flat_keys: Vec<SKey>,
+    /// Flat index of each group's first member (static).
+    group_base: Vec<usize>,
+    /// Reused per-cycle scratch: which streamers were mid-beat.
+    was_busy: Vec<bool>,
+    /// Opt-in execution trace (unit jobs + core kernels).
+    trace: Option<Trace>,
+    cycle: u64,
+}
+
+impl<'p> SimState<'p> {
+    fn new(cfg: &'p ClusterConfig, program: &'p Program) -> Result<Self> {
+        let word = cfg.bank_word_bytes();
+        let banks = cfg.banks;
+        let mut units = Vec::new();
+        for a in &cfg.accelerators {
+            let model = model_for(a.kind);
+            units.push(Unit {
+                name: a.name.clone(),
+                kind: UnitKind::Accel(model),
+                csr: CsrFile::new(model.n_csrs(), cfg.csr_double_buffer),
+                readers: a
+                    .read_ports_bits
+                    .iter()
+                    .map(|&b| Streamer::new(b, a.fifo_depth, false, banks))
+                    .collect(),
+                writers: a
+                    .write_ports_bits
+                    .iter()
+                    .map(|&b| Streamer::new(b, a.fifo_depth, true, banks))
+                    .collect(),
+                job: None,
+                stats: UnitStats { name: a.name.clone(), ..Default::default() },
+            });
+        }
+        // The DMA engine is always the last unit.
+        units.push(Unit {
+            name: "dma".into(),
+            kind: UnitKind::Dma,
+            csr: CsrFile::new(crate::isa::dma_csr::N_CONFIG_REGS, cfg.csr_double_buffer),
+            readers: vec![Streamer::new(cfg.dma_bits, 4, false, banks)],
+            writers: vec![Streamer::new(cfg.dma_bits, 4, true, banks)],
+            job: None,
+            stats: UnitStats { name: "dma".into(), ..Default::default() },
+        });
+
+        // Arbitration priority: wider ports first (paper §IV-B), groups
+        // of equal width round-robin.
+        let mut keyed: Vec<(u32, SKey)> = Vec::new();
+        for (u, unit) in units.iter().enumerate() {
+            for (i, s) in unit.readers.iter().enumerate() {
+                keyed.push((s.port_bits, SKey { unit: u, is_writer: false, idx: i }));
+            }
+            for (i, s) in unit.writers.iter().enumerate() {
+                keyed.push((s.port_bits, SKey { unit: u, is_writer: true, idx: i }));
+            }
+        }
+        keyed.sort_by(|a, b| b.0.cmp(&a.0));
+        let mut groups: Vec<Vec<SKey>> = Vec::new();
+        let mut cur_width = 0;
+        for (w, k) in keyed {
+            if groups.is_empty() || w != cur_width {
+                groups.push(Vec::new());
+                cur_width = w;
+            }
+            groups.last_mut().unwrap().push(k);
+        }
+        let flat_keys: Vec<SKey> = groups.iter().flatten().copied().collect();
+        let group_base: Vec<usize> = {
+            let mut v = Vec::with_capacity(groups.len());
+            let mut acc = 0;
+            for g in &groups {
+                v.push(acc);
+                acc += g.len();
+            }
+            v
+        };
+
+        let mut ext = ExtMem::new();
+        for (addr, bytes) in &program.ext_mem_init {
+            ext.write(*addr, bytes);
+        }
+
+        Ok(Self {
+            cfg,
+            program,
+            spm: Spm::new(cfg.spm_bytes(), banks, word),
+            ext,
+            units,
+            cores: (0..cfg.cores.len())
+                .map(|_| Core {
+                    pc: 0,
+                    wake_at: 0,
+                    pending_sw: None,
+                    barrier_arrived: false,
+                    done: false,
+                    layer: None,
+                    busy: 0,
+                })
+                .collect(),
+            barriers: BarrierFile::new(),
+            counters: Counters {
+                core_busy_cycles: vec![0; cfg.cores.len()],
+                ..Default::default()
+            },
+            layers: vec![None; program.layer_names.len().max(1)],
+            was_busy: vec![false; flat_keys.len()],
+            trace: None,
+            group_base,
+            groups,
+            grants: vec![0; flat_keys.len()],
+            flat_keys,
+            cycle: 0,
+        })
+    }
+
+    fn run(mut self) -> Result<SimReport> {
+        self.grants = vec![0; self.flat_keys.len()];
+        loop {
+            let units_idle = self.units.iter().all(|u| u.idle());
+            let cores_done = self.cores.iter().all(|c| c.done);
+            if cores_done && units_idle {
+                break;
+            }
+            if self.cycle > CYCLE_LIMIT {
+                bail!("simulation exceeded {CYCLE_LIMIT} cycles — livelock?");
+            }
+            // Fast-forward across memory-idle spans: nothing ticks until
+            // the earliest core wake-up.
+            if units_idle {
+                let mut min_wake = u64::MAX;
+                let mut any_ready = false;
+                for c in &self.cores {
+                    if c.done {
+                        continue;
+                    }
+                    if c.wake_at > self.cycle {
+                        min_wake = min_wake.min(c.wake_at);
+                    } else if !c.barrier_arrived {
+                        any_ready = true;
+                    }
+                }
+                if !any_ready {
+                    if min_wake == u64::MAX {
+                        bail!(
+                            "deadlock at cycle {}: all cores blocked on barriers, no unit active",
+                            self.cycle
+                        );
+                    }
+                    self.cycle = min_wake;
+                    continue;
+                }
+            }
+            self.tick()?;
+            self.cycle += 1;
+        }
+        Ok(self.into_report())
+    }
+
+    fn tick(&mut self) -> Result<()> {
+        self.step_cores()?;
+        self.start_jobs()?;
+        self.issue_beats();
+        self.arbitrate();
+        self.step_accels();
+        self.step_dma();
+        self.retire_jobs()?;
+        Ok(())
+    }
+
+    // -- cores ---------------------------------------------------------------
+
+    fn core_busy(&mut self, ci: usize, cycles: u64) {
+        self.cores[ci].busy += cycles;
+        self.counters.core_busy_cycles[ci] += cycles;
+        if let Some((layer, class)) = self.cores[ci].layer {
+            let cycle = self.cycle;
+            let stat = self.layer_stat(layer);
+            if stat.busy_cycles == 0 {
+                stat.first_start = cycle;
+            }
+            stat.busy_cycles += cycles;
+            stat.last_end = stat.last_end.max(cycle + cycles);
+            stat.class.get_or_insert(class);
+        }
+    }
+
+    fn layer_stat(&mut self, layer: u16) -> &mut LayerStat {
+        let idx = layer as usize;
+        if idx >= self.layers.len() {
+            self.layers.resize(idx + 1, None);
+        }
+        let names = &self.program.layer_names;
+        self.layers[idx].get_or_insert_with(|| LayerStat {
+            name: names.get(idx).cloned().unwrap_or_else(|| format!("layer{layer}")),
+            ..Default::default()
+        })
+    }
+
+    fn step_cores(&mut self) -> Result<()> {
+        for ci in 0..self.cores.len() {
+            if self.cores[ci].done || self.cores[ci].wake_at > self.cycle {
+                continue;
+            }
+            // Retire a completed software kernel (functional effect).
+            if let Some(sw) = self.cores[ci].pending_sw.take() {
+                if let Some(op) = &sw.op {
+                    apply_op(op, &mut self.spm)
+                        .with_context(|| format!("sw kernel on core {ci}"))?;
+                    self.counters.macs_retired += op.macs();
+                    self.counters.elem_ops_retired += op.elem_ops();
+                }
+            }
+            loop {
+                let Some(instr) = self.program.streams[ci].get(self.cores[ci].pc) else {
+                    self.cores[ci].done = true;
+                    break;
+                };
+                match instr.clone() {
+                    Instr::SpanBegin { layer, class } => {
+                        self.cores[ci].layer = Some((layer, class));
+                        self.layer_stat(layer).class.get_or_insert(class);
+                        self.cores[ci].pc += 1;
+                        continue;
+                    }
+                    Instr::SpanEnd { .. } => {
+                        self.cores[ci].layer = None;
+                        self.cores[ci].pc += 1;
+                        continue;
+                    }
+                    Instr::CsrWrite { unit, reg, val } => {
+                        let u = &mut self.units[unit.0 as usize];
+                        let busy = u.job.is_some();
+                        if u.csr.try_write(reg, val, busy) {
+                            self.cores[ci].pc += 1;
+                            self.counters.csr_writes += 1;
+                        }
+                        self.core_busy(ci, 1);
+                        break;
+                    }
+                    Instr::Launch { unit } => {
+                        let layer = self.cores[ci].layer.map(|(l, _)| l).unwrap_or(u16::MAX);
+                        let u = &mut self.units[unit.0 as usize];
+                        let busy = u.job.is_some();
+                        if u.csr.try_launch(layer, busy) {
+                            self.cores[ci].pc += 1;
+                        }
+                        self.core_busy(ci, 1);
+                        break;
+                    }
+                    Instr::AwaitIdle { unit } => {
+                        if self.units[unit.0 as usize].idle() {
+                            self.cores[ci].pc += 1;
+                            self.core_busy(ci, 1);
+                        } else {
+                            self.cores[ci].wake_at = self.cycle + POLL_INTERVAL;
+                            self.core_busy(ci, POLL_INTERVAL);
+                        }
+                        break;
+                    }
+                    Instr::Barrier { id, participants } => {
+                        if self.cores[ci].barrier_arrived {
+                            if self.barriers.is_waiting(id, ci) {
+                                break; // still blocked (stall, not busy)
+                            }
+                            self.cores[ci].barrier_arrived = false;
+                            self.cores[ci].pc += 1;
+                            self.core_busy(ci, 1);
+                            break;
+                        }
+                        let released = self.barriers.arrive(id, ci, participants);
+                        if released {
+                            self.counters.barrier_events += 1;
+                            self.cores[ci].pc += 1;
+                        } else {
+                            self.cores[ci].barrier_arrived = true;
+                        }
+                        self.core_busy(ci, 1);
+                        break;
+                    }
+                    Instr::Sw { kernel } => {
+                        self.cores[ci].wake_at = self.cycle + kernel.cycles.max(1);
+                        self.core_busy(ci, kernel.cycles.max(1));
+                        if let Some(trace) = &mut self.trace {
+                            let name = self.cores[ci]
+                                .layer
+                                .and_then(|(l, _)| {
+                                    self.program.layer_names.get(l as usize).cloned()
+                                })
+                                .unwrap_or_else(|| "sw".into());
+                            trace.events.push(TraceEvent {
+                                track: format!("core{ci}"),
+                                name,
+                                start_cycle: self.cycle,
+                                end_cycle: self.cycle + kernel.cycles.max(1),
+                            });
+                        }
+                        self.cores[ci].pending_sw = Some(kernel);
+                        self.cores[ci].pc += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- units ---------------------------------------------------------------
+
+    fn start_jobs(&mut self) -> Result<()> {
+        let word = self.spm.word_bytes();
+        for u in &mut self.units {
+            if u.job.is_some() {
+                continue;
+            }
+            let Some(pending) = u.csr.take_pending() else { continue };
+            match &u.kind {
+                UnitKind::Accel(model) => {
+                    let plan = model
+                        .plan(&pending.regs)
+                        .with_context(|| format!("planning job on '{}'", u.name))?;
+                    if plan.readers.len() > u.readers.len()
+                        || plan.writers.len() > u.writers.len()
+                    {
+                        bail!(
+                            "'{}' plan wants {}r/{}w streams, unit has {}r/{}w",
+                            u.name,
+                            plan.readers.len(),
+                            plan.writers.len(),
+                            u.readers.len(),
+                            u.writers.len()
+                        );
+                    }
+                    for (i, rp) in plan.readers.iter().enumerate() {
+                        u.readers[i].configure(rp.plan.clone());
+                    }
+                    for (i, wp) in plan.writers.iter().enumerate() {
+                        u.writers[i].configure(wp.clone());
+                    }
+                    let desc = plan
+                        .desc_idx
+                        .and_then(|i| self.program.descs.get(i as usize))
+                        .cloned();
+                    u.job = Some(RunningJob {
+                        steps: plan.steps,
+                        steps_done: 0,
+                        emit: plan.emit,
+                        emitted: 0,
+                        consume_every: plan.readers.iter().map(|r| r.consume_every).collect(),
+                        class: plan.class,
+                        desc,
+                        layer: pending.layer,
+                        start: self.cycle,
+                        dma: None,
+                        axi_remaining: 0,
+                    });
+                }
+                UnitKind::Dma => {
+                    let dj = DmaJob::from_csrs(&pending.regs).context("decoding DMA job")?;
+                    let port_bytes = (self.cfg.dma_bits / 8) as u64;
+                    let beats = dj.beats(port_bytes);
+                    match dj.dir {
+                        DmaDir::ExtToSpm => {
+                            u.writers[0].configure(dj.spm_plan(port_bytes, word));
+                        }
+                        DmaDir::SpmToExt => {
+                            u.readers[0].configure(dj.spm_plan(port_bytes, word));
+                        }
+                        DmaDir::SpmToSpm => {
+                            u.readers[0].configure(dj.spm_plan(port_bytes, word));
+                            u.writers[0].configure(dj.spm_write_plan(port_bytes, word));
+                        }
+                    }
+                    u.job = Some(RunningJob {
+                        steps: beats,
+                        steps_done: 0,
+                        emit: EmitRule::Prorated { total: beats },
+                        emitted: 0,
+                        consume_every: vec![],
+                        class: CounterClass::Other,
+                        desc: None,
+                        layer: pending.layer,
+                        start: self.cycle,
+                        dma: Some(dj),
+                        axi_remaining: beats,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn issue_beats(&mut self) {
+        let word = self.spm.word_bytes();
+        let banks = self.spm.banks();
+        for u in &mut self.units {
+            if u.job.is_none() {
+                continue;
+            }
+            for s in u.readers.iter_mut().chain(u.writers.iter_mut()) {
+                if s.active() {
+                    s.try_issue_beat(word, banks);
+                }
+            }
+        }
+    }
+
+    fn streamer(&self, k: SKey) -> &Streamer {
+        let u = &self.units[k.unit];
+        if k.is_writer {
+            &u.writers[k.idx]
+        } else {
+            &u.readers[k.idx]
+        }
+    }
+
+    fn streamer_mut(&mut self, k: SKey) -> &mut Streamer {
+        let u = &mut self.units[k.unit];
+        if k.is_writer {
+            &mut u.writers[k.idx]
+        } else {
+            &mut u.readers[k.idx]
+        }
+    }
+
+    /// Per-bank round-robin arbitration with wide-port priority
+    /// (paper §IV-B: "round-robin scheduling to handle bank contention,
+    /// prioritizing higher-bandwidth ports").
+    fn arbitrate(&mut self) {
+        // Fast path: nothing mid-beat, nothing to arbitrate.
+        let mut any_busy = false;
+        for (ki, &key) in self.flat_keys.iter().enumerate() {
+            let busy = self.streamer(key).busy();
+            self.was_busy[ki] = busy;
+            any_busy |= busy;
+        }
+        if !any_busy {
+            return;
+        }
+        self.grants.iter_mut().for_each(|g| *g = 0);
+        let banks = self.spm.banks() as usize;
+        let cyc = self.cycle as usize;
+        let mut any_deferred = false;
+        // Temporarily detach the priority tables to sidestep aliasing
+        // with the streamer lookups.
+        let groups = std::mem::take(&mut self.groups);
+        for b in 0..banks {
+            let mut granted = false;
+            let mut requesters = 0u32;
+            for (gi, g) in groups.iter().enumerate() {
+                let n = g.len();
+                let base = self.group_base[gi];
+                for i in 0..n {
+                    let rot = (i + cyc + b) % n;
+                    if !self.was_busy[base + rot] {
+                        continue;
+                    }
+                    let key = g[rot];
+                    let has_req = self.streamer(key).pending[b] > 0;
+                    if has_req {
+                        requesters += 1;
+                        if !granted {
+                            granted = true;
+                            self.streamer_mut(key).pending[b] -= 1;
+                            self.grants[base + rot] += 1;
+                        }
+                    }
+                }
+            }
+            if requesters > 1 {
+                any_deferred = true;
+            }
+        }
+        self.groups = groups;
+        if any_deferred {
+            self.counters.bank_conflict_cycles += 1;
+        }
+        // Apply grant totals: complete beats, bump word counters.
+        for ki in 0..self.flat_keys.len() {
+            let g = self.grants[ki];
+            let key = self.flat_keys[ki];
+            if g > 0 {
+                if key.is_writer {
+                    self.counters.bank_writes += g as u64;
+                } else {
+                    self.counters.bank_reads += g as u64;
+                }
+                self.streamer_mut(key).complete_words(g);
+            }
+            if self.was_busy[ki] {
+                let s = self.streamer_mut(key);
+                if s.pending_words > 0 {
+                    // Outstanding words remain: self- or cross-streamer
+                    // bank conflict this cycle.
+                    s.stats.conflict_cycles += 1;
+                }
+            }
+        }
+    }
+
+    fn step_accels(&mut self) {
+        for u in &mut self.units {
+            let Some(job) = u.job.as_mut() else { continue };
+            if job.dma.is_some() {
+                continue;
+            }
+            u.stats.active_cycles += 1;
+            if job.steps_done >= job.steps {
+                continue; // draining writers
+            }
+            let will_emit = match job.emit {
+                EmitRule::EveryK(k) => (job.steps_done + 1) % k == 0,
+                EmitRule::Prorated { total } => {
+                    job.emitted < ((job.steps_done + 1) * total) / job.steps.max(1)
+                }
+            };
+            let mut inputs_ready = true;
+            for (i, r) in u.readers.iter().enumerate() {
+                if i >= job.consume_every.len() {
+                    break;
+                }
+                if job.steps_done % job.consume_every[i] == 0 && r.fifo == 0 && !r.exhausted()
+                {
+                    inputs_ready = false;
+                }
+            }
+            let out_ok =
+                !will_emit || u.writers[0].fifo < u.writers[0].fifo_depth;
+            if inputs_ready && out_ok {
+                for (i, r) in u.readers.iter_mut().enumerate() {
+                    if i >= job.consume_every.len() {
+                        break;
+                    }
+                    if job.steps_done % job.consume_every[i] == 0 && r.fifo > 0 {
+                        r.fifo -= 1;
+                    }
+                }
+                job.steps_done += 1;
+                if will_emit {
+                    u.writers[0].fifo += 1;
+                    job.emitted += 1;
+                }
+                u.stats.compute_cycles += 1;
+                match job.class {
+                    CounterClass::Gemm => self.counters.gemm_compute_cycles += 1,
+                    CounterClass::Pool => self.counters.pool_compute_cycles += 1,
+                    CounterClass::Other => self.counters.other_accel_cycles += 1,
+                }
+            } else if !inputs_ready {
+                u.stats.stall_input_cycles += 1;
+            } else {
+                u.stats.stall_output_cycles += 1;
+            }
+        }
+    }
+
+    fn step_dma(&mut self) {
+        for u in &mut self.units {
+            let Some(job) = u.job.as_mut() else { continue };
+            let Some(dj) = &job.dma else { continue };
+            u.stats.active_cycles += 1;
+            match dj.dir {
+                DmaDir::ExtToSpm => {
+                    // AXI delivers one beat/cycle into the write FIFO.
+                    let w = &mut u.writers[0];
+                    if job.axi_remaining > 0 && w.fifo < w.fifo_depth {
+                        w.fifo += 1;
+                        job.axi_remaining -= 1;
+                        self.counters.axi_beats += 1;
+                        u.stats.compute_cycles += 1;
+                    }
+                }
+                DmaDir::SpmToExt => {
+                    let r = &mut u.readers[0];
+                    if job.axi_remaining > 0 && r.fifo > 0 {
+                        r.fifo -= 1;
+                        job.axi_remaining -= 1;
+                        self.counters.axi_beats += 1;
+                        u.stats.compute_cycles += 1;
+                    }
+                }
+                DmaDir::SpmToSpm => {
+                    // Internal FIFO-to-FIFO move, one beat/cycle.
+                    if job.axi_remaining > 0
+                        && u.readers[0].fifo > 0
+                        && u.writers[0].fifo < u.writers[0].fifo_depth
+                    {
+                        u.readers[0].fifo -= 1;
+                        u.writers[0].fifo += 1;
+                        job.axi_remaining -= 1;
+                        u.stats.compute_cycles += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn retire_jobs(&mut self) -> Result<()> {
+        let cycle = self.cycle;
+        for ui in 0..self.units.len() {
+            let Some(job) = &self.units[ui].job else { continue };
+            let done = if job.dma.is_some() {
+                job.axi_remaining == 0
+                    && self.units[ui].readers[0].job_done()
+                    && self.units[ui].writers[0].job_done()
+            } else {
+                job.steps_done >= job.steps
+                    && self.units[ui].writers.iter().all(|w| w.job_done())
+            };
+            if !done {
+                continue;
+            }
+            let job = self.units[ui].job.take().unwrap();
+            if let Some(trace) = &mut self.trace {
+                let name = if job.layer != u16::MAX {
+                    self.program
+                        .layer_names
+                        .get(job.layer as usize)
+                        .cloned()
+                        .unwrap_or_else(|| format!("layer{}", job.layer))
+                } else {
+                    "job".to_string()
+                };
+                trace.events.push(TraceEvent {
+                    track: self.units[ui].name.clone(),
+                    name,
+                    start_cycle: job.start,
+                    end_cycle: cycle + 1,
+                });
+            }
+            // Functional effect.
+            if let Some(dj) = &job.dma {
+                self.dma_copy(dj)?;
+            } else if let Some(desc) = &job.desc {
+                apply_op(desc, &mut self.spm)
+                    .with_context(|| format!("retiring job on '{}'", self.units[ui].name))?;
+                self.counters.macs_retired += desc.macs();
+                self.counters.elem_ops_retired += desc.elem_ops();
+            }
+            // Attribution.
+            let span = cycle.saturating_sub(job.start) + 1;
+            if job.layer != u16::MAX {
+                let stat = self.layer_stat(job.layer);
+                if stat.busy_cycles == 0 {
+                    stat.first_start = job.start;
+                } else {
+                    stat.first_start = stat.first_start.min(job.start);
+                }
+                stat.busy_cycles += span;
+                stat.last_end = stat.last_end.max(cycle + 1);
+            }
+            let u = &mut self.units[ui];
+            u.stats.jobs += 1;
+            u.stats.streamer_conflict_cycles = u
+                .readers
+                .iter()
+                .chain(u.writers.iter())
+                .map(|s| s.stats.conflict_cycles)
+                .sum();
+        }
+        Ok(())
+    }
+
+    fn dma_copy(&mut self, dj: &DmaJob) -> Result<()> {
+        for r in 0..dj.rows {
+            let src = (dj.src as i64 + r as i64 * dj.src_stride) as u64;
+            let dst = (dj.dst as i64 + r as i64 * dj.dst_stride) as u64;
+            let len = dj.row_bytes as usize;
+            match dj.dir {
+                DmaDir::ExtToSpm => {
+                    let bytes = self.ext.read(src, len).to_vec();
+                    self.spm.write(super::job::Region(dst), &bytes)?;
+                }
+                DmaDir::SpmToExt => {
+                    let bytes = self.spm.read(super::job::Region(src), len)?.to_vec();
+                    self.ext.write(dst, &bytes);
+                }
+                DmaDir::SpmToSpm => {
+                    let bytes = self.spm.read(super::job::Region(src), len)?.to_vec();
+                    self.spm.write(super::job::Region(dst), &bytes)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn into_report(mut self) -> SimReport {
+        for u in &mut self.units {
+            u.stats.streamer_conflict_cycles = u
+                .readers
+                .iter()
+                .chain(u.writers.iter())
+                .map(|s| s.stats.conflict_cycles)
+                .sum();
+        }
+        SimReport {
+            trace: self.trace,
+            total_cycles: self.cycle,
+            counters: self.counters,
+            units: self.units.into_iter().map(|u| u.stats).collect(),
+            layers: self
+                .layers
+                .into_iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.map(|s| (i as u16, s)))
+                .collect(),
+            spm: self.spm.raw().to_vec(),
+            ext_mem: self.ext.into_raw(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{dma_csr, dma_dir, gemm_csr, BarrierId, UnitId};
+    use crate::sim::job::Region;
+
+    fn dma_program(rows: u64, row_bytes: u64) -> Program {
+        let dma = UnitId(0); // fig6b: no accels, dma is unit 0
+        let mut stream = vec![];
+        let w = |reg, val| Instr::CsrWrite { unit: dma, reg, val };
+        stream.push(w(dma_csr::SRC, 0));
+        stream.push(w(dma_csr::DST, 64));
+        stream.push(w(dma_csr::ROW_BYTES, row_bytes));
+        stream.push(w(dma_csr::ROWS, rows));
+        stream.push(w(dma_csr::SRC_STRIDE, row_bytes));
+        stream.push(w(dma_csr::DST_STRIDE, row_bytes));
+        stream.push(w(dma_csr::DIR, dma_dir::EXT_TO_SPM));
+        stream.push(Instr::Launch { unit: dma });
+        stream.push(Instr::AwaitIdle { unit: dma });
+        Program {
+            streams: vec![stream],
+            ext_mem_init: vec![(0, (0..(rows * row_bytes) as usize).map(|i| i as u8).collect())],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn dma_moves_bytes_and_costs_cycles() {
+        let cfg = ClusterConfig::fig6b();
+        let report = Cluster::new(&cfg).run(&dma_program(4, 256)).unwrap();
+        // Functional: bytes landed at SPM offset 64.
+        assert_eq!(report.read_spm(64, 4), &[0, 1, 2, 3]);
+        assert_eq!(report.read_spm(64 + 1023, 1), &[255]);
+        // Timing: 16 beats of 64B, plus CSR setup (~8 cycles) and sync.
+        assert!(report.total_cycles >= 16, "cycles={}", report.total_cycles);
+        assert!(report.total_cycles < 120, "cycles={}", report.total_cycles);
+        assert_eq!(report.counters.axi_beats, 16);
+        assert_eq!(report.counters.csr_writes, 7);
+    }
+
+    #[test]
+    fn sw_kernel_fast_forwards() {
+        let cfg = ClusterConfig::fig6b();
+        let program = Program {
+            streams: vec![vec![Instr::Sw {
+                kernel: SwKernel { cycles: 10_000_000, class: LayerClass::Conv, op: None },
+            }]],
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let report = Cluster::new(&cfg).run(&program).unwrap();
+        assert!(report.total_cycles >= 10_000_000);
+        assert!(t0.elapsed().as_millis() < 500, "fast-forward failed");
+        assert_eq!(report.counters.core_busy_cycles[0], 10_000_000);
+    }
+
+    #[test]
+    fn gemm_job_runs_and_computes() {
+        let cfg = ClusterConfig::fig6c();
+        let gemm = UnitId(0);
+        let (m, k, n) = (16u64, 16u64, 16u64);
+        // A at 0, B at 1024, C at 2048
+        let mut descs = Vec::new();
+        descs.push(OpDesc::Gemm {
+            a: Region(0),
+            b: Region(1024),
+            c: Region(2048),
+            m: m as u32,
+            k: k as u32,
+            n: n as u32,
+            shift: 0,
+            relu: false,
+            i32_out: true,
+        });
+        let w = |reg, val| Instr::CsrWrite { unit: gemm, reg, val };
+        let core1 = vec![
+            w(gemm_csr::M, m),
+            w(gemm_csr::K, k),
+            w(gemm_csr::N, n),
+            w(gemm_csr::PTR_A, 0),
+            w(gemm_csr::PTR_B, 1024),
+            w(gemm_csr::PTR_C, 2048),
+            w(gemm_csr::ROW_A, k),
+            w(gemm_csr::ROW_B, n),
+            w(gemm_csr::ROW_C, 4 * n),
+            w(gemm_csr::STRIDE_A0, 8),
+            w(gemm_csr::STRIDE_A1, 0),
+            w(gemm_csr::STRIDE_A2, 8 * k),
+            w(gemm_csr::STRIDE_B0, 8 * n),
+            w(gemm_csr::STRIDE_B1, 8),
+            w(gemm_csr::STRIDE_B2, 0),
+            w(gemm_csr::STRIDE_C0, 8 * 4),
+            w(gemm_csr::STRIDE_C1, 8 * 4 * n),
+            w(gemm_csr::SHIFT, 0),
+            w(gemm_csr::FLAGS, 0b10),
+            w(gemm_csr::DESC, 0),
+            Instr::Launch { unit: gemm },
+            Instr::AwaitIdle { unit: gemm },
+        ];
+        // DMA preloads A and B from ext mem on core 0, then barrier.
+        let dma = UnitId(1);
+        let dw = |reg, val| Instr::CsrWrite { unit: dma, reg, val };
+        let core0 = vec![
+            dw(dma_csr::SRC, 0),
+            dw(dma_csr::DST, 0),
+            dw(dma_csr::ROW_BYTES, 2048 + 1024), // A(256)+pad... actually contiguous 2KB? keep simple: 1280
+            dw(dma_csr::ROWS, 1),
+            dw(dma_csr::DIR, dma_dir::EXT_TO_SPM),
+            Instr::Launch { unit: dma },
+            Instr::AwaitIdle { unit: dma },
+            Instr::Barrier { id: BarrierId(0), participants: 2 },
+        ];
+        let mut core1_sync = vec![Instr::Barrier { id: BarrierId(0), participants: 2 }];
+        core1_sync.extend(core1);
+
+        // ext mem: A = all 2s (256B at 0), B = all 3s (256B at 1024).
+        let mut ext = vec![0u8; 1280];
+        ext[..256].iter_mut().for_each(|b| *b = 2);
+        ext[1024..1280].iter_mut().for_each(|b| *b = 3);
+
+        let program = Program {
+            streams: vec![core0, core1_sync],
+            ext_mem_init: vec![(0, ext)],
+            descs,
+            ..Default::default()
+        };
+        let report = Cluster::new(&cfg).run(&program).unwrap();
+        // C[0,0] = 16 * 2 * 3 = 96 (int32 LE at 2048).
+        let c0 = i32::from_le_bytes(report.read_spm(2048, 4).try_into().unwrap());
+        assert_eq!(c0, 96);
+        // Compute cycles = (16/8)^3 = 8 steps.
+        assert_eq!(report.counters.gemm_compute_cycles, 8);
+        let g = report.unit("gemm0").unwrap();
+        assert_eq!(g.jobs, 1);
+        assert!(g.compute_cycles == 8);
+        // MACs retired functionally.
+        assert_eq!(report.counters.macs_retired, 16 * 16 * 16);
+    }
+
+    #[test]
+    fn deadlock_detection() {
+        let cfg = ClusterConfig::fig6c();
+        // Two cores, each waiting on a different barrier -> deadlock.
+        let program = Program {
+            streams: vec![
+                vec![Instr::Barrier { id: BarrierId(0), participants: 2 }],
+                vec![Instr::Barrier { id: BarrierId(1), participants: 2 }],
+            ],
+            ..Default::default()
+        };
+        let err = Cluster::new(&cfg).run(&program).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn wrong_core_count_rejected() {
+        let cfg = ClusterConfig::fig6b();
+        let program = Program { streams: vec![vec![], vec![]], ..Default::default() };
+        assert!(Cluster::new(&cfg).run(&program).is_err());
+    }
+
+    #[test]
+    fn bad_accel_config_fails_at_launch() {
+        // Failure injection: GeMM with M not a multiple of 8.
+        let cfg = ClusterConfig::fig6c();
+        let gemm = UnitId(0);
+        let program = Program {
+            streams: vec![
+                vec![],
+                vec![
+                    Instr::CsrWrite { unit: gemm, reg: gemm_csr::M, val: 12 },
+                    Instr::CsrWrite { unit: gemm, reg: gemm_csr::K, val: 8 },
+                    Instr::CsrWrite { unit: gemm, reg: gemm_csr::N, val: 8 },
+                    Instr::Launch { unit: gemm },
+                    Instr::AwaitIdle { unit: gemm },
+                ],
+            ],
+            ..Default::default()
+        };
+        let err = Cluster::new(&cfg).run(&program).unwrap_err();
+        assert!(format!("{err:#}").contains("PE array"), "{err:#}");
+    }
+}
+
+#[cfg(test)]
+mod spm_to_spm_tests {
+    use super::*;
+    use crate::isa::{dma_csr, dma_dir, UnitId};
+
+    #[test]
+    fn dma_spm_to_spm_moves_within_scratchpad() {
+        // Inter-accelerator handoff without touching AXI (the paper's
+        // "eliminates costly DMA transfers from accelerator to
+        // accelerator" applies to direct sharing; this tests the
+        // explicit SPM-to-SPM copy path).
+        let cfg = ClusterConfig::fig6b();
+        let dma = UnitId(0);
+        let w = |reg, val| Instr::CsrWrite { unit: dma, reg, val };
+        let program = Program {
+            streams: vec![vec![
+                // Preload SPM 0..128 from ext first.
+                w(dma_csr::SRC, 0),
+                w(dma_csr::DST, 0),
+                w(dma_csr::ROW_BYTES, 128),
+                w(dma_csr::ROWS, 1),
+                w(dma_csr::DIR, dma_dir::EXT_TO_SPM),
+                Instr::Launch { unit: dma },
+                Instr::AwaitIdle { unit: dma },
+                // Now SPM -> SPM, 2 strided rows.
+                w(dma_csr::SRC, 0),
+                w(dma_csr::DST, 4096),
+                w(dma_csr::ROW_BYTES, 64),
+                w(dma_csr::ROWS, 2),
+                w(dma_csr::SRC_STRIDE, 64),
+                w(dma_csr::DST_STRIDE, 128),
+                w(dma_csr::DIR, dma_dir::SPM_TO_SPM),
+                Instr::Launch { unit: dma },
+                Instr::AwaitIdle { unit: dma },
+            ]],
+            ext_mem_init: vec![(0, (0..128u8).collect())],
+            ..Default::default()
+        };
+        let r = Cluster::new(&cfg).run(&program).unwrap();
+        assert_eq!(r.read_spm(4096, 4), &[0, 1, 2, 3]);
+        // Second row landed at dst + 128 (strided), sourced from 64...
+        assert_eq!(r.read_spm(4096 + 128, 4), &[64, 65, 66, 67]);
+        // SPM-to-SPM must not touch AXI beyond the preload.
+        assert_eq!(r.counters.axi_beats, 2);
+    }
+
+    #[test]
+    fn functional_op_out_of_spm_range_fails_cleanly() {
+        // Failure injection: a descriptor pointing past the scratchpad
+        // must error out (not wrap or corrupt).
+        let cfg = ClusterConfig::fig6b();
+        let program = Program {
+            streams: vec![vec![Instr::Sw {
+                kernel: SwKernel {
+                    cycles: 10,
+                    class: LayerClass::Other,
+                    op: Some(OpDesc::Relu {
+                        buf: super::super::job::Region(cfg.spm_bytes() - 4),
+                        len: 64,
+                    }),
+                },
+            }]],
+            ..Default::default()
+        };
+        let err = Cluster::new(&cfg).run(&program).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn desc_index_out_of_table_is_ignored_gracefully() {
+        // A DESC CSR pointing outside the descriptor table simply has
+        // no functional effect (timing still modeled) — hardware would
+        // compute on whatever bytes are there; the simulator must not
+        // panic.
+        let cfg = ClusterConfig::fig6c();
+        let gemm = UnitId(0);
+        let w = |reg, val| Instr::CsrWrite { unit: gemm, reg, val };
+        let program = Program {
+            streams: vec![
+                vec![],
+                vec![
+                    w(crate::isa::gemm_csr::M, 8),
+                    w(crate::isa::gemm_csr::K, 8),
+                    w(crate::isa::gemm_csr::N, 8),
+                    w(crate::isa::gemm_csr::ROW_A, 8),
+                    w(crate::isa::gemm_csr::ROW_B, 8),
+                    w(crate::isa::gemm_csr::ROW_C, 8),
+                    w(crate::isa::gemm_csr::DESC, 999),
+                    Instr::Launch { unit: gemm },
+                    Instr::AwaitIdle { unit: gemm },
+                ],
+            ],
+            ..Default::default()
+        };
+        let r = Cluster::new(&cfg).run(&program).unwrap();
+        assert_eq!(r.counters.gemm_compute_cycles, 1);
+        assert_eq!(r.counters.macs_retired, 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! The cluster DMA engine (paper §IV-C): 512-bit, programmable 2-D
+//! strided transfers between external (AXI) memory and the scratchpad,
+//! or scratchpad-to-scratchpad.
+//!
+//! Like any accelerator it is CSR-programmed with a double-buffered
+//! shadow bank, so the compiler can pre-stage the next transfer while
+//! one is in flight (the DMA/compute overlap of Fig. 5).
+
+use anyhow::{bail, Result};
+
+use crate::isa::{dma_csr as csr, dma_dir};
+
+use super::streamer::{AguLoop, BeatPattern, StreamPlan};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaDir {
+    ExtToSpm,
+    SpmToExt,
+    SpmToSpm,
+}
+
+/// A decoded 2-D DMA descriptor.
+#[derive(Debug, Clone)]
+pub struct DmaJob {
+    pub dir: DmaDir,
+    pub src: u64,
+    pub dst: u64,
+    pub rows: u64,
+    pub row_bytes: u64,
+    pub src_stride: i64,
+    pub dst_stride: i64,
+}
+
+impl DmaJob {
+    pub fn from_csrs(regs: &[u64]) -> Result<Self> {
+        let dir = match regs[csr::DIR as usize] {
+            dma_dir::EXT_TO_SPM => DmaDir::ExtToSpm,
+            dma_dir::SPM_TO_EXT => DmaDir::SpmToExt,
+            dma_dir::SPM_TO_SPM => DmaDir::SpmToSpm,
+            other => bail!("dma: bad direction {other}"),
+        };
+        let rows = regs[csr::ROWS as usize];
+        let row_bytes = regs[csr::ROW_BYTES as usize];
+        if rows == 0 || row_bytes == 0 {
+            bail!("dma: empty transfer (rows={rows} row_bytes={row_bytes})");
+        }
+        Ok(Self {
+            dir,
+            src: regs[csr::SRC as usize],
+            dst: regs[csr::DST as usize],
+            rows,
+            row_bytes,
+            src_stride: regs[csr::SRC_STRIDE as usize] as i64,
+            dst_stride: regs[csr::DST_STRIDE as usize] as i64,
+        })
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.rows * self.row_bytes
+    }
+
+    /// Beats on the DMA port (`port_bytes` per beat, per-row rounding —
+    /// rows are independent bursts).
+    pub fn beats(&self, port_bytes: u64) -> u64 {
+        self.rows * self.row_bytes.div_ceil(port_bytes)
+    }
+
+    /// SPM-side streamer plan (walking whichever end lives in SPM).
+    /// For SpmToSpm this is the *read* side; `spm_write_plan` gives the
+    /// write side.
+    pub fn spm_plan(&self, port_bytes: u64, word_bytes: u64) -> StreamPlan {
+        let (base, stride) = match self.dir {
+            DmaDir::ExtToSpm => (self.dst, self.dst_stride),
+            DmaDir::SpmToExt | DmaDir::SpmToSpm => (self.src, self.src_stride),
+        };
+        self.make_plan(base, stride, port_bytes, word_bytes)
+    }
+
+    pub fn spm_write_plan(&self, port_bytes: u64, word_bytes: u64) -> StreamPlan {
+        debug_assert_eq!(self.dir, DmaDir::SpmToSpm);
+        self.make_plan(self.dst, self.dst_stride, port_bytes, word_bytes)
+    }
+
+    fn make_plan(&self, base: u64, stride: i64, port_bytes: u64, word_bytes: u64) -> StreamPlan {
+        let beats_per_row = self.row_bytes.div_ceil(port_bytes);
+        StreamPlan {
+            base,
+            pattern: BeatPattern::contiguous((port_bytes / word_bytes) as u32),
+            loops: [
+                AguLoop { count: beats_per_row, stride: port_bytes as i64 },
+                AguLoop { count: self.rows, stride },
+                AguLoop::default(),
+                AguLoop::default(),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn regs(dir: u64, rows: u64, row_bytes: u64) -> Vec<u64> {
+        let mut r = vec![0u64; csr::N_CONFIG_REGS as usize];
+        r[csr::SRC as usize] = 0x1000;
+        r[csr::DST as usize] = 0x100;
+        r[csr::ROWS as usize] = rows;
+        r[csr::ROW_BYTES as usize] = row_bytes;
+        r[csr::SRC_STRIDE as usize] = 4096;
+        r[csr::DST_STRIDE as usize] = 256;
+        r[csr::DIR as usize] = dir;
+        r
+    }
+
+    #[test]
+    fn decode_and_beats() {
+        let j = DmaJob::from_csrs(&regs(dma_dir::EXT_TO_SPM, 4, 200)).unwrap();
+        assert_eq!(j.dir, DmaDir::ExtToSpm);
+        assert_eq!(j.total_bytes(), 800);
+        // ceil(200/64)=4 beats per row x 4 rows
+        assert_eq!(j.beats(64), 16);
+    }
+
+    #[test]
+    fn spm_plan_walks_destination_rows() {
+        let j = DmaJob::from_csrs(&regs(dma_dir::EXT_TO_SPM, 4, 128)).unwrap();
+        let p = j.spm_plan(64, 8);
+        assert_eq!(p.base, 0x100);
+        assert_eq!(p.total_beats(), 8); // 2 per row
+        assert_eq!(p.beat_base(0), 0x100);
+        assert_eq!(p.beat_base(1), 0x140);
+        assert_eq!(p.beat_base(2), 0x100 + 256); // next row (dst stride)
+    }
+
+    #[test]
+    fn rejects_bad_descriptors() {
+        assert!(DmaJob::from_csrs(&regs(7, 4, 128)).is_err());
+        assert!(DmaJob::from_csrs(&regs(0, 0, 128)).is_err());
+    }
+}

@@ -1,0 +1,353 @@
+//! Functional datapath twin — bit-exact Rust implementations of the
+//! accelerator / CPU kernels, matching `python/compile/kernels/ref.py`
+//! exactly (int8 operands, int32 accumulation, +half-then-arithmetic-
+//! shift requantization, saturation).
+//!
+//! Applied to scratchpad memory when a simulated job retires; verified
+//! against the AOT PJRT artifacts in the integration tests.
+
+use anyhow::Result;
+
+use super::job::{OpDesc, Region};
+use super::mem::Spm;
+
+#[inline]
+pub fn requantize(acc: i32, shift: u32) -> i8 {
+    let r = if shift > 0 { (acc + (1 << (shift - 1))) >> shift } else { acc };
+    r.clamp(-128, 127) as i8
+}
+
+/// `C[M,N] = A[M,K] @ B[K,N]` over int8 with int32 accumulation.
+/// Output is int8 (requantized, optional relu) or raw int32.
+pub fn gemm(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    shift: u32,
+    relu: bool,
+    i32_out: bool,
+) -> Vec<u8> {
+    let mut out = vec![0u8; m * n * if i32_out { 4 } else { 1 }];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for p in 0..k {
+                acc += a[i * k + p] as i32 * b[p * n + j] as i32;
+            }
+            if i32_out {
+                out[(i * n + j) * 4..(i * n + j) * 4 + 4].copy_from_slice(&acc.to_le_bytes());
+            } else {
+                let mut v = requantize(acc, shift);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out[i * n + j] = v as u8;
+            }
+        }
+    }
+    out
+}
+
+/// NHWC int8 conv (weights `[kh*kw*cin, cout]` row-major, i.e. the
+/// im2col layout the streamers feed the GeMM array).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    input: &[i8],
+    weights: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    shift: u32,
+    relu: bool,
+) -> Vec<u8> {
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let mut out = vec![0u8; n * ho * wo * cout];
+    // Accumulate per output pixel with `oc` innermost: the weight row
+    // `[.., ic, 0..cout]` is contiguous, so the inner loop vectorizes
+    // (this function is ~25% of simulation wall-clock — see
+    // EXPERIMENTS.md §Perf).
+    let mut acc = vec![0i32; cout];
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                acc.iter_mut().for_each(|a| *a = 0);
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as i64 - pad as i64;
+                    if iy < 0 || iy >= h as i64 {
+                        continue; // zero padding
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as i64 - pad as i64;
+                        if ix < 0 || ix >= w as i64 {
+                            continue;
+                        }
+                        let ibase = ((b * h + iy as usize) * w + ix as usize) * cin;
+                        let wbase = (ky * kw + kx) * cin * cout;
+                        for ic in 0..cin {
+                            let x = input[ibase + ic] as i32;
+                            if x == 0 {
+                                continue; // relu'd activations are often sparse
+                            }
+                            let wrow = &weights[wbase + ic * cout..wbase + (ic + 1) * cout];
+                            for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                *a += x * wv as i32;
+                            }
+                        }
+                    }
+                }
+                let obase = ((b * ho + oy) * wo + ox) * cout;
+                for (oc, &a) in acc.iter().enumerate() {
+                    let mut v = requantize(a, shift);
+                    if relu && v < 0 {
+                        v = 0;
+                    }
+                    out[obase + oc] = v as u8;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// NHWC int8 max-pool.
+pub fn maxpool(
+    input: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    s: usize,
+) -> Vec<u8> {
+    let ho = (h - k) / s + 1;
+    let wo = (w - k) / s + 1;
+    let mut out = vec![0u8; n * ho * wo * c];
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut m = i8::MIN;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let v =
+                                input[((b * h + oy * s + ky) * w + ox * s + kx) * c + ch];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    out[((b * ho + oy) * wo + ox) * c + ch] = m as u8;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Saturating int8 add with optional relu.
+pub fn vecadd(a: &[i8], b: &[i8], relu: bool) -> Vec<u8> {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let mut v = (x as i32 + y as i32).clamp(-128, 127) as i8;
+            if relu && v < 0 {
+                v = 0;
+            }
+            v as u8
+        })
+        .collect()
+}
+
+/// Global average pool NHWC -> [n, c], round-to-nearest integer mean.
+pub fn global_avgpool(input: &[i8], n: usize, h: usize, w: usize, c: usize) -> Vec<u8> {
+    let cnt = (h * w) as i32;
+    let mut out = vec![0u8; n * c];
+    for b in 0..n {
+        for ch in 0..c {
+            let mut s: i32 = 0;
+            for y in 0..h {
+                for x in 0..w {
+                    s += input[((b * h + y) * w + x) * c + ch] as i32;
+                }
+            }
+            out[b * c + ch] = (((s + cnt / 2).div_euclid(cnt)).clamp(-128, 127)) as i8 as u8;
+        }
+    }
+    out
+}
+
+fn as_i8(bytes: &[u8]) -> &[i8] {
+    // Safety: i8 and u8 have identical layout.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+}
+
+/// Apply a retired job's functional effect to scratchpad memory.
+pub fn apply_op(desc: &OpDesc, spm: &mut Spm) -> Result<()> {
+    match *desc {
+        OpDesc::Gemm { a, b, c, m, k, n, shift, relu, i32_out } => {
+            let (m, k, n) = (m as usize, k as usize, n as usize);
+            let av = as_i8(spm.read(a, m * k)?).to_vec();
+            let bv = as_i8(spm.read(b, k * n)?).to_vec();
+            let out = gemm(&av, &bv, m, k, n, shift, relu, i32_out);
+            spm.write(c, &out)
+        }
+        OpDesc::Conv2d {
+            input, weights, out, n, h, w, cin, cout, kh, kw, stride, pad, shift, relu,
+        } => {
+            let (n, h, w) = (n as usize, h as usize, w as usize);
+            let (cin, cout, kh, kw) = (cin as usize, cout as usize, kh as usize, kw as usize);
+            let iv = as_i8(spm.read(input, n * h * w * cin)?).to_vec();
+            let wv = as_i8(spm.read(weights, kh * kw * cin * cout)?).to_vec();
+            let o = conv2d(
+                &iv, &wv, n, h, w, cin, cout, kh, kw, stride as usize, pad as usize, shift,
+                relu,
+            );
+            spm.write(out, &o)
+        }
+        OpDesc::MaxPool { input, out, n, h, w, c, k, s } => {
+            let (n, h, w, c) = (n as usize, h as usize, w as usize, c as usize);
+            let iv = as_i8(spm.read(input, n * h * w * c)?).to_vec();
+            let o = maxpool(&iv, n, h, w, c, k as usize, s as usize);
+            spm.write(out, &o)
+        }
+        OpDesc::VecAdd { a, b, out, len, relu } => {
+            let av = as_i8(spm.read(a, len as usize)?).to_vec();
+            let bv = as_i8(spm.read(b, len as usize)?).to_vec();
+            let o = vecadd(&av, &bv, relu);
+            spm.write(out, &o)
+        }
+        OpDesc::Relu { buf, len } => {
+            let v: Vec<u8> = as_i8(spm.read(buf, len as usize)?)
+                .iter()
+                .map(|&x| if x < 0 { 0 } else { x as u8 })
+                .collect();
+            spm.write(buf, &v)
+        }
+        OpDesc::GlobalAvgPool { input, out, n, h, w, c } => {
+            let (n, h, w, c) = (n as usize, h as usize, w as usize, c as usize);
+            let iv = as_i8(spm.read(input, n * h * w * c)?).to_vec();
+            let o = global_avgpool(&iv, n, h, w, c);
+            spm.write(out, &o)
+        }
+        OpDesc::TileRows { input, out, len, rows } => {
+            let row = spm.read(input, len as usize)?.to_vec();
+            for r in 0..rows as u64 {
+                spm.write(Region(out.0 + r * len as u64), &row)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requantize_matches_python_spec() {
+        // Mirror of python test_requant_rounds_to_nearest:
+        // shift=2 on [3,4,5,-3,-4,-5,-6,-7] -> [1,1,1,-1,-1,-1,-1,-2]
+        let acc = [3, 4, 5, -3, -4, -5, -6, -7];
+        let exp = [1, 1, 1, -1, -1, -1, -1, -2];
+        for (a, e) in acc.iter().zip(exp) {
+            assert_eq!(requantize(*a, 2), e, "acc={a}");
+        }
+        assert_eq!(requantize(1 << 20, 0), 127);
+        assert_eq!(requantize(-(1 << 20), 0), -128);
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let n = 4;
+        let a: Vec<i8> = (0..16).map(|v| v as i8 - 8).collect();
+        let mut eye = vec![0i8; 16];
+        for i in 0..n {
+            eye[i * n + i] = 1;
+        }
+        let out = gemm(&a, &eye, n, n, n, 0, false, true);
+        for (i, &v) in a.iter().enumerate() {
+            let got = i32::from_le_bytes(out[i * 4..i * 4 + 4].try_into().unwrap());
+            assert_eq!(got, v as i32);
+        }
+    }
+
+    #[test]
+    fn gemm_extremes_saturate_only_at_requant() {
+        let a = vec![-128i8; 8];
+        let b = vec![-128i8; 8];
+        // 1x8 @ 8x1 = 8*16384 = 131072
+        let out = gemm(&a, &b, 1, 8, 1, 0, false, true);
+        assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 131072);
+        let out8 = gemm(&a, &b, 1, 8, 1, 6, false, false);
+        assert_eq!(out8[0] as i8, 127); // saturated
+    }
+
+    #[test]
+    fn conv_zero_padding() {
+        // 1x1x1 input through 3x3 kernel pad 1: only center tap fires.
+        let input = [5i8];
+        let mut weights = vec![0i8; 9];
+        weights[4] = 3; // center tap, cin=cout=1
+        let out = conv2d(&input, &weights, 1, 1, 1, 1, 1, 3, 3, 1, 1, 0, false);
+        assert_eq!(out[0] as i8, 15);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        // 2x2 pool over 2x2x1 -> max
+        let input = [1i8, -3, 7, 2];
+        let out = maxpool(&input, 1, 2, 2, 1, 2, 2);
+        assert_eq!(out[0] as i8, 7);
+    }
+
+    #[test]
+    fn vecadd_saturates() {
+        let out = vecadd(&[100, -100], &[100, -100], false);
+        assert_eq!(out[0] as i8, 127);
+        assert_eq!(out[1] as i8, -128);
+        let out = vecadd(&[-5], &[2], true);
+        assert_eq!(out[0] as i8, 0);
+    }
+
+    #[test]
+    fn global_avgpool_rounds() {
+        let input = [7i8; 2 * 2];
+        let out = global_avgpool(&input, 1, 2, 2, 1);
+        assert_eq!(out[0] as i8, 7);
+    }
+
+    #[test]
+    fn apply_op_roundtrip_spm() {
+        let mut spm = Spm::new(4096, 8, 8);
+        let a: Vec<u8> = vec![2u8; 64];
+        let b: Vec<u8> = vec![3u8; 64];
+        spm.write(Region(0), &a).unwrap();
+        spm.write(Region(64), &b).unwrap();
+        apply_op(
+            &OpDesc::Gemm {
+                a: Region(0),
+                b: Region(64),
+                c: Region(128),
+                m: 8,
+                k: 8,
+                n: 8,
+                shift: 0,
+                relu: false,
+                i32_out: true,
+            },
+            &mut spm,
+        )
+        .unwrap();
+        let out = spm.read(Region(128), 4).unwrap();
+        assert_eq!(i32::from_le_bytes(out.try_into().unwrap()), 8 * 6);
+    }
+}

@@ -1,0 +1,170 @@
+//! Functional job descriptors.
+//!
+//! SNAX splits every kernel into a *compute* part (what the accelerator
+//! calculates) and a *dataflow* part (how streamers walk memory). The
+//! simulator mirrors that split: timing is modeled beat-by-beat from the
+//! CSR-programmed streamer loops, while the functional result is applied
+//! to scratchpad memory when a job retires, described by an [`OpDesc`].
+//!
+//! `OpDesc`s ride along the CSR `DESC` register as an opaque index into
+//! the program's descriptor table; they model no hardware cost.
+
+
+/// A region of scratchpad memory (byte offset from SPM base).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region(pub u64);
+
+/// Functional description of one accelerator / CPU job over SPM.
+///
+/// All tensors are row-major; activations NHWC int8, matmul operands
+/// `[M,K] x [K,N]` int8 with int32 accumulation — bit-exact with the
+/// JAX reference (`python/compile/kernels/ref.py`) via the datapath twin
+/// in [`crate::models::datapath`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpDesc {
+    /// `C[M,N] = requant(A[M,K] @ B[K,N])`. `shift == 0 && !relu && i32_out`
+    /// leaves raw int32 in C; otherwise int8.
+    Gemm {
+        a: Region,
+        b: Region,
+        c: Region,
+        m: u32,
+        k: u32,
+        n: u32,
+        shift: u32,
+        relu: bool,
+        i32_out: bool,
+    },
+    /// NHWC conv executed by the GeMM accelerator with im2col streamer
+    /// addressing. Weights stored `[kh*kw*cin, cout]` row-major.
+    Conv2d {
+        input: Region,
+        weights: Region,
+        out: Region,
+        n: u32,
+        h: u32,
+        w: u32,
+        cin: u32,
+        cout: u32,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        pad: u32,
+        shift: u32,
+        relu: bool,
+    },
+    /// NHWC max-pool (kernel `k`, stride `s`).
+    MaxPool {
+        input: Region,
+        out: Region,
+        n: u32,
+        h: u32,
+        w: u32,
+        c: u32,
+        k: u32,
+        s: u32,
+    },
+    /// Saturating int8 elementwise add (ResNet skip / custom accel).
+    VecAdd {
+        a: Region,
+        b: Region,
+        out: Region,
+        len: u32,
+        relu: bool,
+    },
+    /// int8 ReLU in place.
+    Relu { buf: Region, len: u32 },
+    /// Global average pool NHWC int8 -> [n, c] int8.
+    GlobalAvgPool {
+        input: Region,
+        out: Region,
+        n: u32,
+        h: u32,
+        w: u32,
+        c: u32,
+    },
+    /// Replicate a `[1, len]` int8 row `rows` times (M-tile padding for
+    /// the 8-row GeMM step).
+    TileRows {
+        input: Region,
+        out: Region,
+        len: u32,
+        rows: u32,
+    },
+}
+
+impl OpDesc {
+    /// Multiply-accumulate count (roofline / energy accounting).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            OpDesc::Gemm { m, k, n, .. } => m as u64 * k as u64 * n as u64,
+            OpDesc::Conv2d { h, w, n, cin, cout, kh, kw, stride, pad, .. } => {
+                let ho = (h + 2 * pad - kh) / stride + 1;
+                let wo = (w + 2 * pad - kw) / stride + 1;
+                n as u64 * ho as u64 * wo as u64 * kh as u64 * kw as u64 * cin as u64
+                    * cout as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Elementary non-MAC ops (pool compares, adds...).
+    pub fn elem_ops(&self) -> u64 {
+        match *self {
+            OpDesc::MaxPool { n, h, w, c, k, s, .. } => {
+                let ho = (h - k) / s + 1;
+                let wo = (w - k) / s + 1;
+                n as u64 * ho as u64 * wo as u64 * c as u64 * (k as u64 * k as u64)
+            }
+            OpDesc::VecAdd { len, .. } | OpDesc::Relu { len, .. } => len as u64,
+            OpDesc::GlobalAvgPool { n, h, w, c, .. } => {
+                n as u64 * h as u64 * w as u64 * c as u64
+            }
+            OpDesc::TileRows { len, rows, .. } => len as u64 * rows as u64,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs() {
+        let d = OpDesc::Conv2d {
+            input: Region(0),
+            weights: Region(0),
+            out: Region(0),
+            n: 1,
+            h: 64,
+            w: 64,
+            cin: 16,
+            cout: 16,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            shift: 8,
+            relu: true,
+        };
+        // 64*64 spatial * 3*3*16 K * 16 Cout
+        assert_eq!(d.macs(), 64 * 64 * 9 * 16 * 16);
+    }
+
+    #[test]
+    fn maxpool_ops() {
+        let d = OpDesc::MaxPool {
+            input: Region(0),
+            out: Region(0),
+            n: 1,
+            h: 64,
+            w: 64,
+            c: 16,
+            k: 16,
+            s: 16,
+        };
+        // 4*4 outputs * 16 ch * 256 window
+        assert_eq!(d.elem_ops(), 16 * 16 * 256);
+    }
+}

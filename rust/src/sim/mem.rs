@@ -1,0 +1,179 @@
+//! Memory substrates: the multi-banked shared scratchpad (SPM) and the
+//! external AXI-side memory.
+//!
+//! The SPM holds *real bytes* — accelerator jobs functionally read and
+//! write it at retire time, so a simulation run produces the actual
+//! network outputs alongside cycle counts. Banking is word-interleaved:
+//! word `i` lives in bank `i % banks` (the standard TCDM layout [23]).
+
+use anyhow::{bail, Result};
+
+use super::job::Region;
+
+/// Bank index for a word index under XOR-folded interleaving.
+///
+/// Plain modulo interleaving aliases power-of-two strides (an 8-row
+/// GeMM tile with a 64-byte row pitch would hit only 4 of 32 banks,
+/// halving streamer throughput). SNAX's compiler-managed data layout
+/// avoids this in software; we model the equivalent standard hardware
+/// measure — XOR-folding the upper word-index bits into the bank
+/// select — which spreads constant-stride walks across all banks while
+/// keeping unit-stride walks conflict-free.
+#[inline]
+pub fn bank_of_word(word: u64, n_banks: u32) -> u32 {
+    debug_assert!(n_banks.is_power_of_two());
+    let shift = n_banks.trailing_zeros();
+    ((word ^ (word >> shift)) % n_banks as u64) as u32
+}
+
+/// The shared L1 scratchpad.
+pub struct Spm {
+    data: Vec<u8>,
+    banks: u32,
+    word_bytes: u64,
+}
+
+impl Spm {
+    pub fn new(bytes: u64, banks: u32, word_bytes: u64) -> Self {
+        Self { data: vec![0; bytes as usize], banks, word_bytes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn banks(&self) -> u32 {
+        self.banks
+    }
+
+    pub fn word_bytes(&self) -> u64 {
+        self.word_bytes
+    }
+
+    /// Bank index holding byte address `addr` (XOR-folded interleaving,
+    /// see [`bank_of_word`]).
+    #[inline]
+    pub fn bank_of(&self, addr: u64) -> u32 {
+        bank_of_word(addr / self.word_bytes, self.banks)
+    }
+
+    pub fn read(&self, r: Region, len: usize) -> Result<&[u8]> {
+        let start = r.0 as usize;
+        if start + len > self.data.len() {
+            bail!("SPM read out of range: {start}+{len} > {}", self.data.len());
+        }
+        Ok(&self.data[start..start + len])
+    }
+
+    pub fn write(&mut self, r: Region, bytes: &[u8]) -> Result<()> {
+        let start = r.0 as usize;
+        if start + bytes.len() > self.data.len() {
+            bail!("SPM write out of range: {start}+{} > {}", bytes.len(), self.data.len());
+        }
+        self.data[start..start + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+/// External (off-cluster, AXI-side) memory. Sparse-ish flat model: a
+/// single address space sized on demand.
+pub struct ExtMem {
+    data: Vec<u8>,
+}
+
+impl ExtMem {
+    pub fn new() -> Self {
+        Self { data: Vec::new() }
+    }
+
+    fn ensure(&mut self, end: usize) {
+        if self.data.len() < end {
+            self.data.resize(end.next_power_of_two().max(4096), 0);
+        }
+    }
+
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) {
+        let start = addr as usize;
+        self.ensure(start + bytes.len());
+        self.data[start..start + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn read(&mut self, addr: u64, len: usize) -> &[u8] {
+        let start = addr as usize;
+        self.ensure(start + len);
+        &self.data[start..start + len]
+    }
+
+    pub fn into_raw(self) -> Vec<u8> {
+        self.data
+    }
+}
+
+impl Default for ExtMem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_interleaving() {
+        let spm = Spm::new(128 * 1024, 32, 8);
+        assert_eq!(spm.bank_of(0), 0);
+        assert_eq!(spm.bank_of(7), 0); // same 64-bit word
+        assert_eq!(spm.bank_of(8), 1);
+        // XOR fold: word 32 -> 32 ^ 1 = 33 -> bank 1 (not 0).
+        assert_eq!(spm.bank_of(8 * 32), 1);
+    }
+
+    #[test]
+    fn unit_stride_hits_all_banks_once() {
+        for w in 0u64..32 {
+            let b = bank_of_word(w, 32);
+            for w2 in 0u64..32 {
+                if w != w2 {
+                    assert_ne!(b, bank_of_word(w2, 32), "{w} vs {w2}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn power_of_two_strides_spread_across_banks() {
+        // The aliasing case that motivated XOR folding: 8 rows at a
+        // 64-byte (8-word) pitch must hit 8 distinct banks.
+        for &stride_words in &[8u64, 16, 32, 64] {
+            let banks: std::collections::HashSet<u32> =
+                (0..8).map(|r| bank_of_word(r * stride_words, 32)).collect();
+            assert_eq!(banks.len(), 8, "stride {stride_words} aliases: {banks:?}");
+        }
+    }
+
+    #[test]
+    fn spm_rw_roundtrip() {
+        let mut spm = Spm::new(1024, 8, 8);
+        spm.write(Region(100), &[1, 2, 3]).unwrap();
+        assert_eq!(spm.read(Region(100), 3).unwrap(), &[1, 2, 3]);
+        assert!(spm.write(Region(1023), &[0, 0]).is_err());
+        assert!(spm.read(Region(1020), 8).is_err());
+    }
+
+    #[test]
+    fn ext_mem_grows() {
+        let mut ext = ExtMem::new();
+        ext.write(1_000_000, &[42]);
+        assert_eq!(ext.read(1_000_000, 1), &[42]);
+        assert_eq!(ext.read(500, 1), &[0]);
+    }
+}

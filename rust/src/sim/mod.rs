@@ -1,0 +1,32 @@
+//! Cycle-accurate simulator of the SNAX multi-accelerator compute
+//! cluster — the substrate standing in for the paper's RTL +
+//! Verilator/Questasim flow (see DESIGN.md §1 for the substitution
+//! argument).
+//!
+//! Module map (one per micro-architectural block of paper Fig. 4):
+//!
+//! * [`mem`] — multi-banked scratchpad + external AXI memory
+//! * [`streamer`] — nested-loop AGU + FIFO data streamers
+//! * [`csr`] — uniform CSR control with double-buffered shadow regs
+//! * [`barrier`] — hardware barrier registers
+//! * [`dma`] — 512-bit 2-D strided DMA engine
+//! * [`accel`] — accelerator timing models (GeMM, max-pool, vec-add)
+//! * [`job`] / [`functional`] — functional job descriptors + the
+//!   bit-exact int8 datapath twin
+//! * [`cluster`] — composition and the cycle loop
+//! * [`trace`] — counters, per-layer attribution, the [`SimReport`]
+
+pub mod accel;
+pub mod barrier;
+pub mod cluster;
+pub mod csr;
+pub mod dma;
+pub mod functional;
+pub mod job;
+pub mod mem;
+pub mod streamer;
+pub mod trace;
+
+pub use cluster::Cluster;
+pub use job::{OpDesc, Region};
+pub use trace::{Counters, LayerStat, SimReport, UnitStats};

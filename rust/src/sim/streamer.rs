@@ -1,0 +1,385 @@
+//! Parametrizable data streamers (paper §IV-B).
+//!
+//! A streamer sits between one accelerator port and the TCDM
+//! interconnect. It has:
+//!
+//! * an autonomous address generator: a *beat pattern* (the word layout
+//!   of one port-wide transfer) advanced by up to four nested for-loops
+//!   (CSR-configured counts and strides — the paper's "hardware loop
+//!   support for optimized nested for-loop data access patterns" [24]);
+//! * a FIFO decoupling the accelerator from bank conflicts;
+//! * per-beat bank request tracking: a beat completes once every bank
+//!   word it touches has been granted by the interconnect arbiter.
+//!
+//! One beat may be in flight per cycle (the port is `port_bits` wide),
+//! so a conflict-free streamer sustains one beat per cycle.
+
+
+pub const MAX_LOOPS: usize = 4;
+
+/// Word-level layout of one beat: `rows` rows starting `row_stride`
+/// bytes apart, each `words_per_row` consecutive bank words.
+///
+/// Examples (64-bit banks): a GeMM A-tile beat is 8 rows x 1 word with
+/// `row_stride = K`; a GeMM C-tile beat (2048-bit port) is 8 rows x 4
+/// words with `row_stride = 4*N`; a DMA/maxpool beat is 1 row x 8 words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BeatPattern {
+    pub rows: u32,
+    pub row_stride: i64,
+    pub words_per_row: u32,
+}
+
+impl BeatPattern {
+    pub fn contiguous(words: u32) -> Self {
+        Self { rows: 1, row_stride: 0, words_per_row: words }
+    }
+
+    pub fn words_per_beat(&self) -> u32 {
+        self.rows * self.words_per_row
+    }
+}
+
+/// One nested loop of the AGU.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AguLoop {
+    pub count: u64,
+    pub stride: i64,
+}
+
+/// A fully configured streaming job (the "dataflow kernel" the compiler
+/// programs into the streamer via CSRs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamPlan {
+    pub base: u64,
+    pub pattern: BeatPattern,
+    /// Innermost loop first. Total beats = product of counts (count 0 is
+    /// treated as 1).
+    pub loops: [AguLoop; MAX_LOOPS],
+}
+
+impl StreamPlan {
+    pub fn total_beats(&self) -> u64 {
+        self.loops.iter().map(|l| l.count.max(1)).product()
+    }
+
+    /// Base byte address of beat `idx` (decomposing `idx` over the
+    /// nested loop counts, innermost first).
+    pub fn beat_base(&self, idx: u64) -> u64 {
+        let mut rem = idx;
+        let mut addr = self.base as i64;
+        for l in &self.loops {
+            let c = l.count.max(1);
+            let i = rem % c;
+            rem /= c;
+            addr += i as i64 * l.stride;
+        }
+        addr as u64
+    }
+
+    /// Total bytes touched (word granularity) over the whole job.
+    pub fn total_words(&self) -> u64 {
+        self.total_beats() * self.pattern.words_per_beat() as u64
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StreamerStats {
+    pub beats_done: u64,
+    /// Cycles an in-flight beat spent waiting on bank conflicts beyond
+    /// its minimum (words-per-bank) service time.
+    pub conflict_cycles: u64,
+    /// Cycles the streamer was stalled because its FIFO was full
+    /// (reader) or empty (writer).
+    pub fifo_stall_cycles: u64,
+}
+
+/// Runtime state of one streamer.
+///
+/// Up to `fifo_depth` beats may be outstanding at once: the FIFO that
+/// decouples the accelerator also buffers bank requests, so transient
+/// bank conflicts are absorbed instead of serializing the stream
+/// (memory-level parallelism — without it, two interleaved readers
+/// would halve each other's throughput on every overlapping beat).
+#[derive(Debug)]
+pub struct Streamer {
+    pub port_bits: u32,
+    pub fifo_depth: u32,
+    pub is_writer: bool,
+    /// FIFO occupancy in beats. Readers fill it from memory; writers are
+    /// filled by the accelerator and drain to memory.
+    pub fifo: u32,
+    pub plan: Option<StreamPlan>,
+    /// Next beat index to issue.
+    pub beat_idx: u64,
+    pub beats_total: u64,
+    /// Outstanding bank-word requests, aggregated per bank.
+    pub pending: Vec<u8>,
+    pub pending_words: u32,
+    /// Words remaining per in-flight beat, oldest first.
+    inflight: std::collections::VecDeque<u32>,
+    pub stats: StreamerStats,
+}
+
+impl Streamer {
+    pub fn new(port_bits: u32, fifo_depth: u32, is_writer: bool, n_banks: u32) -> Self {
+        Self {
+            port_bits,
+            fifo_depth,
+            is_writer,
+            fifo: 0,
+            plan: None,
+            beat_idx: 0,
+            beats_total: 0,
+            pending: vec![0; n_banks as usize],
+            pending_words: 0,
+            inflight: Default::default(),
+            stats: StreamerStats::default(),
+        }
+    }
+
+    pub fn configure(&mut self, plan: StreamPlan) {
+        self.beats_total = plan.total_beats();
+        self.plan = Some(plan);
+        self.beat_idx = 0;
+        self.fifo = 0;
+        self.inflight.clear();
+        self.pending.iter_mut().for_each(|p| *p = 0);
+        self.pending_words = 0;
+    }
+
+    /// Any beat mid-flight toward the banks?
+    pub fn busy(&self) -> bool {
+        !self.inflight.is_empty()
+    }
+
+    /// All beats issued and landed?
+    pub fn job_done(&self) -> bool {
+        match &self.plan {
+            None => true,
+            Some(_) => {
+                self.beat_idx >= self.beats_total
+                    && self.inflight.is_empty()
+                    && (!self.is_writer || self.fifo == 0)
+            }
+        }
+    }
+
+    /// Beats remaining to fetch (reader) or drain (writer).
+    pub fn active(&self) -> bool {
+        self.plan.is_some() && !self.job_done()
+    }
+
+    /// No more beats will ever arrive (stream fully fetched). Consumers
+    /// treat an exhausted empty FIFO as "ready" so rounding mismatches
+    /// between beat and step counts cannot deadlock the datapath.
+    pub fn exhausted(&self) -> bool {
+        self.beat_idx >= self.beats_total && self.inflight.is_empty()
+    }
+
+    /// Try to start the next beat this cycle (at most one per cycle —
+    /// the port is `port_bits` wide). Readers reserve FIFO space;
+    /// writers need a FIFO entry that is not already being written out.
+    pub fn try_issue_beat(&mut self, word_bytes: u64, n_banks: u32) {
+        if self.beat_idx >= self.beats_total {
+            return;
+        }
+        let outstanding = self.inflight.len() as u32;
+        let ready = if self.is_writer {
+            outstanding < self.fifo
+        } else {
+            self.fifo + outstanding < self.fifo_depth
+        };
+        if !ready {
+            if self.plan.is_some() {
+                self.stats.fifo_stall_cycles += 1;
+            }
+            return;
+        }
+        let plan = self.plan.as_ref().expect("issue with no plan");
+        let base = plan.beat_base(self.beat_idx);
+        let mut words = 0u32;
+        // word_bytes is a power of two (config-validated); shift instead
+        // of dividing in this hot loop.
+        let word_shift = word_bytes.trailing_zeros();
+        for r in 0..plan.pattern.rows {
+            let row_addr = base as i64 + r as i64 * plan.pattern.row_stride;
+            let row_word = (row_addr as u64) >> word_shift;
+            for w in 0..plan.pattern.words_per_row as u64 {
+                let bank = super::mem::bank_of_word(row_word + w, n_banks) as usize;
+                self.pending[bank] += 1;
+                words += 1;
+            }
+        }
+        self.pending_words += words;
+        self.inflight.push_back(words);
+        self.beat_idx += 1;
+    }
+
+    /// Called by the arbiter when `granted` bank-word requests completed
+    /// this cycle. Beats retire oldest-first; returns how many finished.
+    pub fn complete_words(&mut self, granted: u32) -> u32 {
+        debug_assert!(granted <= self.pending_words);
+        self.pending_words -= granted;
+        let mut left = granted;
+        let mut finished = 0;
+        while left > 0 {
+            let Some(front) = self.inflight.front_mut() else { break };
+            let take = left.min(*front);
+            *front -= take;
+            left -= take;
+            if *front == 0 {
+                self.inflight.pop_front();
+                finished += 1;
+                self.stats.beats_done += 1;
+                if self.is_writer {
+                    self.fifo -= 1;
+                } else {
+                    self.fifo += 1;
+                }
+            }
+        }
+        finished
+    }
+
+    /// Minimum cycles the outstanding work needs given only
+    /// self-conflicts (max words mapped to a single bank).
+    pub fn beat_min_cycles(&self) -> u32 {
+        self.pending.iter().copied().max().unwrap_or(0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(base: u64, pattern: BeatPattern, loops: &[(u64, i64)]) -> StreamPlan {
+        let mut ls = [AguLoop::default(); MAX_LOOPS];
+        for (i, &(count, stride)) in loops.iter().enumerate() {
+            ls[i] = AguLoop { count, stride };
+        }
+        StreamPlan { base, pattern, loops: ls }
+    }
+
+    #[test]
+    fn beat_base_nested_loops() {
+        // k-loop (4, 8), n-loop (2, 0), m-loop (3, 100)
+        let p = plan(1000, BeatPattern::contiguous(8), &[(4, 8), (2, 0), (3, 100)]);
+        assert_eq!(p.total_beats(), 24);
+        assert_eq!(p.beat_base(0), 1000);
+        assert_eq!(p.beat_base(1), 1008); // k=1
+        assert_eq!(p.beat_base(4), 1000); // k wraps, n=1 stride 0
+        assert_eq!(p.beat_base(8), 1100); // m=1
+        assert_eq!(p.beat_base(23), 1000 + 3 * 8 + 2 * 100);
+    }
+
+    #[test]
+    fn gemm_a_tile_beat_spreads_over_banks() {
+        // A tile: 8 rows, row_stride = K = 144 bytes, 1 word each.
+        let mut s = Streamer::new(512, 4, false, 32);
+        s.configure(plan(
+            0,
+            BeatPattern { rows: 8, row_stride: 144, words_per_row: 1 },
+            &[(1, 0)],
+        ));
+        s.try_issue_beat(8, 32);
+        assert!(s.busy());
+        assert_eq!(s.pending_words, 8);
+        // XOR-folded interleaving: no self-conflict.
+        assert_eq!(s.beat_min_cycles(), 1);
+    }
+
+    #[test]
+    fn pipelines_multiple_beats() {
+        // Reader with depth 4 keeps up to 4 beats outstanding.
+        let mut s = Streamer::new(512, 4, false, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(10, 64)]));
+        for _ in 0..4 {
+            s.try_issue_beat(8, 32);
+        }
+        assert_eq!(s.beat_idx, 4);
+        assert_eq!(s.pending_words, 32);
+        // 5th must wait for FIFO space.
+        s.try_issue_beat(8, 32);
+        assert_eq!(s.beat_idx, 4);
+        assert_eq!(s.stats.fifo_stall_cycles, 1);
+    }
+
+    #[test]
+    fn reader_fifo_gates_issue() {
+        let mut s = Streamer::new(512, 2, false, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(10, 64)]));
+        s.fifo = 2; // full
+        s.try_issue_beat(8, 32);
+        assert!(!s.busy());
+        assert_eq!(s.stats.fifo_stall_cycles, 1);
+        s.fifo = 1;
+        s.try_issue_beat(8, 32);
+        assert!(s.busy());
+    }
+
+    #[test]
+    fn complete_words_advances_fifo_in_order() {
+        let mut s = Streamer::new(512, 4, false, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(2, 64)]));
+        s.try_issue_beat(8, 32);
+        s.try_issue_beat(8, 32);
+        assert_eq!(s.pending_words, 16);
+        // Partial grants retire the oldest beat first.
+        assert_eq!(s.complete_words(4), 0);
+        assert_eq!(s.complete_words(4), 1);
+        assert_eq!(s.fifo, 1);
+        assert_eq!(s.complete_words(8), 1);
+        assert_eq!(s.fifo, 2);
+        assert!(s.job_done());
+    }
+
+    #[test]
+    fn grants_spanning_beats_retire_both() {
+        let mut s = Streamer::new(512, 4, false, 32);
+        s.configure(plan(0, BeatPattern::contiguous(4), &[(2, 32)]));
+        s.try_issue_beat(8, 32);
+        s.try_issue_beat(8, 32);
+        assert_eq!(s.complete_words(8), 2);
+        assert_eq!(s.fifo, 2);
+    }
+
+    #[test]
+    fn writer_done_requires_drained_fifo() {
+        let mut s = Streamer::new(512, 4, true, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(1, 0)]));
+        s.fifo = 1;
+        assert!(!s.job_done());
+        s.try_issue_beat(8, 32);
+        s.complete_words(8);
+        assert!(s.job_done());
+        assert_eq!(s.fifo, 0);
+    }
+
+    #[test]
+    fn writer_needs_fifo_data_to_issue() {
+        let mut s = Streamer::new(512, 4, true, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(4, 64)]));
+        s.try_issue_beat(8, 32); // no data yet
+        assert!(!s.busy());
+        s.fifo = 2;
+        s.try_issue_beat(8, 32);
+        s.try_issue_beat(8, 32);
+        assert_eq!(s.inflight.len(), 2);
+        // Third blocked: only 2 FIFO entries.
+        s.try_issue_beat(8, 32);
+        assert_eq!(s.inflight.len(), 2);
+    }
+
+    #[test]
+    fn exhausted_semantics() {
+        let mut s = Streamer::new(512, 4, false, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(1, 0)]));
+        assert!(!s.exhausted());
+        s.try_issue_beat(8, 32);
+        assert!(!s.exhausted());
+        s.complete_words(8);
+        assert!(s.exhausted());
+        assert_eq!(s.fifo, 1); // data still in FIFO
+    }
+}

@@ -1,0 +1,239 @@
+//! Integration: compiler -> cycle-accurate simulator, functional
+//! correctness against the golden evaluator, and the paper's headline
+//! behaviours.
+
+use snax::compiler::{compile, CompileOptions, Mode};
+use snax::config::ClusterConfig;
+use snax::models;
+use snax::sim::Cluster;
+
+fn run_and_check(
+    graph: &snax::compiler::Graph,
+    cfg: &ClusterConfig,
+    opts: &CompileOptions,
+) -> snax::sim::SimReport {
+    let golden = models::evaluate(graph).unwrap();
+    let cp = compile(graph, cfg, opts).unwrap();
+    let report = Cluster::new(cfg).run(&cp.program).unwrap();
+    for inf in 0..opts.n_inferences as u64 {
+        assert_eq!(
+            cp.read_output(&report, 0, inf),
+            golden[0],
+            "{} on {} ({:?}) inference {inf} diverged",
+            graph.name,
+            cfg.name,
+            opts.mode
+        );
+    }
+    report
+}
+
+#[test]
+fn fig6a_functional_on_all_presets() {
+    let g = models::fig6a_graph();
+    for preset in ["fig6b", "fig6c", "fig6d"] {
+        run_and_check(&g, &ClusterConfig::preset(preset).unwrap(), &CompileOptions::sequential());
+    }
+}
+
+#[test]
+fn dae_functional_sequential() {
+    run_and_check(&models::dae_graph(), &ClusterConfig::fig6d(), &CompileOptions::sequential());
+}
+
+#[test]
+fn resnet8_functional_sequential() {
+    run_and_check(
+        &models::resnet8_graph(),
+        &ClusterConfig::fig6d(),
+        &CompileOptions::sequential(),
+    );
+}
+
+#[test]
+fn fig6a_pipelined_all_inferences_correct() {
+    let g = models::fig6a_graph();
+    run_and_check(
+        &g,
+        &ClusterConfig::fig6d(),
+        &CompileOptions::pipelined().with_inferences(5),
+    );
+}
+
+#[test]
+fn cascade_shape_holds() {
+    // Fig. 8's qualitative claims, as a regression test.
+    let g = models::fig6a_graph();
+    let seq = CompileOptions::sequential();
+    let t_b = run_and_check(&g, &ClusterConfig::fig6b(), &seq).total_cycles;
+    let t_c = run_and_check(&g, &ClusterConfig::fig6c(), &seq).total_cycles;
+    let t_d = run_and_check(&g, &ClusterConfig::fig6d(), &seq).total_cycles;
+    let s1 = t_b as f64 / t_c as f64;
+    let s2 = t_c as f64 / t_d as f64;
+    assert!(s1 > 100.0 && s1 < 250.0, "GeMM step {s1}");
+    assert!(s2 > 4.0 && s2 < 25.0, "pool step {s2}");
+
+    let n = 6u32;
+    let cp = compile(&g, &ClusterConfig::fig6d(), &CompileOptions::pipelined().with_inferences(n))
+        .unwrap();
+    let r = Cluster::new(&ClusterConfig::fig6d()).run(&cp.program).unwrap();
+    let s3 = (t_d * n as u64) as f64 / r.total_cycles as f64;
+    assert!(s3 > 1.5, "pipelining step {s3}");
+}
+
+#[test]
+fn pipelined_utilization_over_90pct() {
+    let g = models::fig6a_graph();
+    let cfg = ClusterConfig::fig6d();
+    let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
+    let r = Cluster::new(&cfg).run(&cp.program).unwrap();
+    let u = r.unit("gemm0").unwrap().utilization();
+    assert!(u > 0.9, "gemm utilization {u}");
+}
+
+#[test]
+fn conv_dominates_cpu_baseline_layers() {
+    // Fig. 8 baseline distribution: conv ~99% of busy cycles.
+    let g = models::fig6a_graph();
+    let cfg = ClusterConfig::fig6b();
+    let cp = compile(&g, &cfg, &CompileOptions::sequential()).unwrap();
+    let r = Cluster::new(&cfg).run(&cp.program).unwrap();
+    let conv = r.layers.values().find(|l| l.name == "conv").unwrap().busy_cycles;
+    let total: u64 = r.layers.values().map(|l| l.busy_cycles).sum();
+    assert!(conv as f64 / total as f64 > 0.98);
+}
+
+#[test]
+fn custom_toml_cluster_runs_end_to_end() {
+    // The §VI-B single-config-file flow: parse config, compile, run.
+    let toml = ClusterConfig::fig6d().to_toml();
+    let cfg = ClusterConfig::from_toml(&toml).unwrap();
+    run_and_check(&models::fig6a_graph(), &cfg, &CompileOptions::sequential());
+}
+
+#[test]
+fn vecadd_extension_offloads_and_matches() {
+    let mut cfg = ClusterConfig::fig6d();
+    cfg.accelerators.push(snax::config::AccelConfig {
+        name: "vecadd0".into(),
+        kind: snax::config::AccelKind::VecAdd,
+        core: 1,
+        read_ports_bits: vec![512, 512],
+        write_ports_bits: vec![512],
+        fifo_depth: 4,
+        agu_loop_depth: 4,
+    });
+    cfg.validate().unwrap();
+    let g = models::resnet8_graph();
+    let r_ext = run_and_check(&g, &cfg, &CompileOptions::sequential());
+    let r_base =
+        run_and_check(&g, &ClusterConfig::fig6d(), &CompileOptions::sequential());
+    assert!(r_ext.total_cycles < r_base.total_cycles);
+    assert!(r_ext.counters.other_accel_cycles > 0);
+}
+
+#[test]
+fn pipelined_requires_resident_weights() {
+    // DAE weights overflow the SPM -> pipelined mode must refuse.
+    let res = compile(
+        &models::dae_graph(),
+        &ClusterConfig::fig6d(),
+        &CompileOptions {
+            mode: Mode::Pipelined,
+            n_inferences: 4,
+            overrides: Default::default(),
+            max_weight_slots: 2,
+        },
+    );
+    let msg = match res {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("pipelined DAE should not compile"),
+    };
+    assert!(msg.contains("scratchpad") || msg.contains("resident") || msg.contains("fit"), "{msg}");
+}
+
+#[test]
+fn sequential_multi_inference_scales_linearly() {
+    let g = models::fig6a_graph();
+    let cfg = ClusterConfig::fig6d();
+    let one = compile(&g, &cfg, &CompileOptions::sequential()).unwrap();
+    let four = compile(&g, &cfg, &CompileOptions::sequential().with_inferences(4)).unwrap();
+    let t1 = Cluster::new(&cfg).run(&one.program).unwrap().total_cycles;
+    let t4 = Cluster::new(&cfg).run(&four.program).unwrap().total_cycles;
+    let ratio = t4 as f64 / t1 as f64;
+    assert!((3.5..=4.5).contains(&ratio), "expected ~4x, got {ratio}");
+}
+
+#[test]
+fn weight_streaming_used_for_dae() {
+    let cp = compile(&models::dae_graph(), &ClusterConfig::fig6d(), &CompileOptions::sequential())
+        .unwrap();
+    assert!(matches!(
+        cp.alloc.weight_mode,
+        snax::compiler::alloc::WeightMode::Streamed { .. }
+    ));
+}
+
+#[test]
+fn macs_retired_matches_graph() {
+    let g = models::resnet8_graph();
+    let cfg = ClusterConfig::fig6d();
+    let cp = compile(&g, &cfg, &CompileOptions::sequential()).unwrap();
+    let r = Cluster::new(&cfg).run(&cp.program).unwrap();
+    assert_eq!(r.counters.macs_retired, g.total_macs());
+}
+
+#[test]
+fn force_cpu_override_changes_timing_not_result() {
+    let g = models::fig6a_graph();
+    let cfg = ClusterConfig::fig6d();
+    let normal = run_and_check(&g, &cfg, &CompileOptions::sequential());
+    let forced = run_and_check(&g, &cfg, &CompileOptions::sequential().force_cpu(&["conv"]));
+    assert!(forced.total_cycles > 10 * normal.total_cycles);
+}
+
+#[test]
+fn dual_gemm_instances_balance_and_speed_up_pipeline() {
+    // Scalability: a second GeMM instance lets the conv and FC pipeline
+    // stages run on different units concurrently. Placement must
+    // round-robin across instances; outputs stay bit-identical.
+    let mut cfg = ClusterConfig::fig6d();
+    cfg.cores.push(snax::config::CoreConfig { id: 2, imem_kb: 8 });
+    cfg.accelerators.push(snax::config::AccelConfig {
+        name: "gemm1".into(),
+        kind: snax::config::AccelKind::Gemm,
+        core: 2,
+        read_ports_bits: vec![512, 512],
+        write_ports_bits: vec![2048],
+        fifo_depth: 4,
+        agu_loop_depth: 4,
+    });
+    cfg.validate().unwrap();
+    let g = models::fig6a_graph();
+    let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
+    // conv -> gemm0, fc -> gemm1 (round-robin)
+    let gemm_units: Vec<_> = cp
+        .placement
+        .devices
+        .iter()
+        .filter_map(|d| match d {
+            snax::compiler::Device::Accel(u) => Some(u.0),
+            _ => None,
+        })
+        .collect();
+    let distinct: std::collections::HashSet<u8> = gemm_units.iter().copied().collect();
+    assert!(distinct.len() >= 3, "expected spread over gemm0/gemm1/maxpool: {gemm_units:?}");
+
+    let r_dual = run_and_check(&g, &cfg, &CompileOptions::pipelined().with_inferences(8));
+    let r_single = run_and_check(
+        &g,
+        &ClusterConfig::fig6d(),
+        &CompileOptions::pipelined().with_inferences(8),
+    );
+    assert!(
+        r_dual.total_cycles <= r_single.total_cycles,
+        "dual {} vs single {}",
+        r_dual.total_cycles,
+        r_single.total_cycles
+    );
+}

@@ -1,0 +1,132 @@
+//! Integration: the PJRT runtime against `artifacts/` (requires
+//! `make artifacts`). Verifies the cross-language contract: the AOT
+//! JAX/Pallas artifacts compute bit-identically to the Rust datapath
+//! twin for every entry point.
+
+use snax::models::lcg::lcg_i8;
+use snax::runtime::{ArtifactStore, DType, Tensor};
+use snax::sim::functional;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let s = store();
+    let names = s.names();
+    for expected in ["fig6a", "dae", "resnet8", "gemm_8x8x8", "gemm_64x64x64", "maxpool_32x32x16_k2"]
+    {
+        assert!(names.iter().any(|n| n == expected), "missing {expected}");
+    }
+}
+
+#[test]
+fn gemm_artifacts_match_datapath_twin() {
+    let s = store();
+    for (name, dim) in [("gemm_8x8x8", 8usize), ("gemm_64x64x64", 64)] {
+        let a = lcg_i8(11, dim * dim);
+        let b = lcg_i8(12, dim * dim);
+        let out = s
+            .execute(name, &[Tensor::from_i8(&[dim, dim], &a), Tensor::from_i8(&[dim, dim], &b)])
+            .unwrap();
+        assert_eq!(out[0].dtype, DType::I32);
+        let exp = functional::gemm(&a, &b, dim, dim, dim, 0, false, true);
+        assert_eq!(out[0].data, exp, "{name}");
+    }
+}
+
+#[test]
+fn gemm_artifact_edge_values() {
+    // int8 extremes through the Pallas kernel on the PJRT path.
+    let s = store();
+    let a = vec![-128i8; 64];
+    let b = vec![127i8; 64];
+    let out = s
+        .execute("gemm_8x8x8", &[Tensor::from_i8(&[8, 8], &a), Tensor::from_i8(&[8, 8], &b)])
+        .unwrap();
+    let got = out[0].as_i32();
+    assert!(got.iter().all(|&v| v == 8 * -128 * 127));
+}
+
+#[test]
+fn maxpool_artifact_matches_datapath_twin() {
+    let s = store();
+    let x = lcg_i8(13, 32 * 32 * 16);
+    let out = s
+        .execute("maxpool_32x32x16_k2", &[Tensor::from_i8(&[1, 32, 32, 16], &x)])
+        .unwrap();
+    let exp = functional::maxpool(&x, 1, 32, 32, 16, 2, 2);
+    assert_eq!(out[0].data, exp);
+}
+
+#[test]
+fn network_artifacts_match_golden_evaluator() {
+    let s = store();
+    for (name, graph, seed) in [
+        ("fig6a", snax::models::fig6a_graph(), 1000u64),
+        ("dae", snax::models::dae_graph(), 2000),
+        ("resnet8", snax::models::resnet8_graph(), 3000),
+    ] {
+        let golden = snax::models::evaluate(&graph).unwrap();
+        let meta = s.meta(name).unwrap().clone();
+        let shape = meta.inputs[0].0.clone();
+        let n: usize = shape.iter().product();
+        let x = Tensor::from_i8(&shape, &lcg_i8(seed, n));
+        let out = s.execute(name, &[x]).unwrap();
+        // Artifacts return the valid rows; graph outputs may be 8-row
+        // padded (identical rows).
+        let nb = out[0].data.len();
+        assert_eq!(out[0].data, golden[0][..nb], "{name} diverged");
+    }
+}
+
+#[test]
+fn artifact_execution_is_deterministic() {
+    let s = store();
+    let x = || Tensor::from_i8(&[8, 640], &lcg_i8(2000, 8 * 640));
+    let a = s.execute("dae", &[x()]).unwrap();
+    let b = s.execute("dae", &[x()]).unwrap();
+    assert_eq!(a[0].data, b[0].data);
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let s = store();
+    // Wrong shape.
+    let bad = Tensor::from_i8(&[4, 4], &lcg_i8(1, 16));
+    assert!(s.execute("gemm_8x8x8", &[bad.clone(), bad.clone()]).is_err());
+    // Wrong arity.
+    let good = Tensor::from_i8(&[8, 8], &lcg_i8(1, 64));
+    assert!(s.execute("gemm_8x8x8", &[good]).is_err());
+    // Unknown artifact.
+    let g2 = Tensor::from_i8(&[8, 8], &lcg_i8(1, 64));
+    assert!(s.execute("nonexistent", &[g2]).is_err());
+}
+
+#[test]
+fn gemm_artifact_random_sweep_vs_twin() {
+    // A hypothesis-style sweep: many random operand pairs through the
+    // same compiled executable, each checked bit-exactly.
+    let s = store();
+    for seed in 0..20u64 {
+        let a = lcg_i8(100 + seed, 64);
+        let b = lcg_i8(200 + seed, 64);
+        let out = s
+            .execute("gemm_8x8x8", &[Tensor::from_i8(&[8, 8], &a), Tensor::from_i8(&[8, 8], &b)])
+            .unwrap();
+        let exp = functional::gemm(&a, &b, 8, 8, 8, 0, false, true);
+        assert_eq!(out[0].data, exp, "seed {seed}");
+    }
+}
+
+#[test]
+fn manifest_metadata_is_consistent() {
+    let s = store();
+    let meta = s.meta("fig6a").unwrap();
+    assert_eq!(meta.inputs.len(), 1);
+    assert_eq!(meta.inputs[0].0, vec![1, 32, 32, 16]);
+    assert_eq!(meta.inputs[0].1, DType::I8);
+    assert_eq!(meta.outputs[0].1, DType::I32);
+    assert!(!meta.sha256.is_empty());
+}
