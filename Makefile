@@ -1,0 +1,34 @@
+# SNAX reproduction — build/test entry points.
+#
+# The Rust workspace root is this directory (members: rust/). The
+# `artifacts` target needs the Python toolchain (JAX/Pallas) and is
+# only required for `--features pjrt` builds.
+
+.PHONY: build test fmt serve serve-smoke bench artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --check
+
+# Run the compile-and-simulate service (ctrl-c / SIGTERM for graceful
+# shutdown).
+serve: build
+	./target/release/snax serve
+
+# Build and run the loopback integration test: ephemeral-port server,
+# concurrent POST /simulate, byte-identical-report + cache-hit checks.
+serve-smoke:
+	cargo test -q --test integration_server
+
+bench:
+	cargo bench
+
+# AOT-lower the JAX/Pallas entry points to artifacts/ (build-time only;
+# see python/compile/aot.py). Needed for `--features pjrt`.
+artifacts:
+	python3 python/compile/aot.py

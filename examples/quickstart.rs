@@ -65,21 +65,25 @@ fn main() -> Result<()> {
             "simulated inference {inf} diverged from the golden evaluator"
         );
     }
-    let store = ArtifactStore::open_default()
-        .context("artifacts missing — run `make artifacts` first")?;
-    let x = Tensor::from_i8(
-        &[1, 32, 32, 16],
-        &snax::models::lcg::lcg_i8(1000, 32 * 32 * 16),
-    );
-    let artifact_out = store.execute("fig6a", &[x])?;
-    ensure!(
-        artifact_out[0].data == golden[0][..artifact_out[0].data.len()],
-        "PJRT artifact output diverged"
-    );
-    println!(
-        "functional check: simulator == golden == PJRT artifact ({} logit bytes) ✓",
-        artifact_out[0].data.len()
-    );
+    if snax::runtime::PJRT_ENABLED {
+        let store = ArtifactStore::open_default()
+            .context("artifacts missing — run `make artifacts` first")?;
+        let x = Tensor::from_i8(
+            &[1, 32, 32, 16],
+            &snax::models::lcg::lcg_i8(1000, 32 * 32 * 16),
+        );
+        let artifact_out = store.execute("fig6a", &[x])?;
+        ensure!(
+            artifact_out[0].data == golden[0][..artifact_out[0].data.len()],
+            "PJRT artifact output diverged"
+        );
+        println!(
+            "functional check: simulator == golden == PJRT artifact ({} logit bytes) ✓",
+            artifact_out[0].data.len()
+        );
+    } else {
+        println!("functional check: simulator == golden ✓ (PJRT leg skipped: no `pjrt` feature)");
+    }
 
     // --- 4. reports ----------------------------------------------------------
     let area = energy::area(&cfg);

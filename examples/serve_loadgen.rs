@@ -1,0 +1,140 @@
+//! Load generator for `snax serve` — the repo's first scale/throughput
+//! scenario: start the service in-process on an ephemeral port, hammer
+//! `POST /simulate` from N concurrent client threads over keep-alive
+//! connections, and report end-to-end throughput plus the program-cache
+//! hit rate scraped from `GET /metrics`.
+//!
+//! The payload mix rotates through a few distinct `(net, options)`
+//! triples so the content-addressed cache sees both misses (first
+//! touch) and a high hit rate (steady state) — the service's whole
+//! point: compile once, simulate many.
+//!
+//! Run: `cargo run --release --example serve_loadgen [-- --clients 8 --requests 16]`
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use snax::config::ServerConfig;
+use snax::server::{http, Server};
+
+fn main() -> Result<()> {
+    let mut clients = 8usize;
+    let mut requests = 16usize;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--clients" => {
+                clients = args.get(i + 1).context("--clients needs a value")?.parse()?;
+                i += 2;
+            }
+            "--requests" => {
+                requests = args.get(i + 1).context("--requests needs a value")?.parse()?;
+                i += 2;
+            }
+            other => anyhow::bail!("unknown flag '{other}' (--clients N, --requests N)"),
+        }
+    }
+
+    let server = Server::start(ServerConfig { port: 0, ..Default::default() })?;
+    let addr = server.addr();
+    println!(
+        "serve_loadgen: {clients} clients x {requests} requests -> http://{addr} ({} workers)",
+        server.state().server_cfg.workers
+    );
+
+    // Three distinct compilations; everything after the first touch of
+    // each should be a cache hit.
+    let payloads: [&str; 3] = [
+        r#"{"net":"fig6a"}"#,
+        r#"{"net":"fig6a","pipelined":true,"inferences":4}"#,
+        r#"{"net":"dae"}"#,
+    ];
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let ok = ok.clone();
+            let failed = failed.clone();
+            std::thread::spawn(move || {
+                // One keep-alive connection per client.
+                let Ok(stream) = TcpStream::connect(addr) else {
+                    failed.fetch_add(requests as u64, Ordering::Relaxed);
+                    return;
+                };
+                let Ok(read_half) = stream.try_clone() else { return };
+                let mut reader = BufReader::new(read_half);
+                let mut writer = stream;
+                for r in 0..requests {
+                    let body = payloads[(c + r) % payloads.len()];
+                    let sent = http::write_request(
+                        &mut writer,
+                        "POST",
+                        "/simulate",
+                        body.as_bytes(),
+                        true,
+                    );
+                    if sent.is_err() {
+                        failed.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    match http::read_response(&mut reader) {
+                        Ok((200, _, _)) => {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        let _ = t.join();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    // Scrape the service's own metrics for the cache story.
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    http::write_request(&mut writer, "GET", "/metrics", b"", false)?;
+    let (_status, _headers, body) = http::read_response(&mut reader)
+        .map_err(|e| anyhow::anyhow!("metrics scrape failed: {e}"))?;
+    let text = String::from_utf8_lossy(&body);
+    let scrape = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.split_whitespace().next() == Some(name))
+            .and_then(|l| l.split_whitespace().last())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0)
+    };
+    let hits = scrape("snax_cache_hits_total");
+    let misses = scrape("snax_cache_misses_total");
+    let lookups = hits + misses;
+
+    let total_ok = ok.load(Ordering::Relaxed);
+    let total_failed = failed.load(Ordering::Relaxed);
+    println!(
+        "{total_ok} ok, {total_failed} failed in {dt:.2}s -> {:.1} simulate req/s",
+        total_ok as f64 / dt
+    );
+    println!(
+        "program cache: {hits:.0} hits / {misses:.0} misses ({:.0}% hit rate)",
+        if lookups > 0.0 { 100.0 * hits / lookups } else { 0.0 }
+    );
+
+    server.shutdown();
+    anyhow::ensure!(total_failed == 0, "{total_failed} requests failed");
+    anyhow::ensure!(hits > 0.0, "expected cache hits under repeat load");
+    println!("serve_loadgen OK");
+    Ok(())
+}

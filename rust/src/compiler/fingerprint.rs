@@ -1,0 +1,282 @@
+//! Stable content fingerprints over compilation inputs.
+//!
+//! The `snax serve` program cache ([`crate::server::cache`]) is
+//! content-addressed: two requests that compile the same `(workload
+//! graph, cluster config, compile options)` triple must map to the same
+//! key, across threads and across identical processes. `DefaultHasher`
+//! gives no such guarantee, so this module hand-rolls 64-bit FNV-1a and
+//! feeds it every semantically relevant field in a fixed order
+//! (length-prefixed strings and sequences, one tag byte per enum
+//! variant) — a change to any field that can alter compiler output
+//! changes the key.
+
+use crate::config::{AccelKind, ClusterConfig};
+
+use super::codegen::Mode;
+use super::ir::{DType, Graph, OpKind, TensorKind};
+use super::CompileOptions;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental 64-bit FNV-1a hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub const fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write_bytes(&[v]);
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_u8(v as u8);
+    }
+
+    /// Length-prefixed so `("ab", "c")` and `("a", "bc")` differ.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn feed_dtype(h: &mut Fnv1a, d: DType) {
+    h.write_u8(match d {
+        DType::I8 => 0,
+        DType::I32 => 1,
+    });
+}
+
+fn feed_graph(h: &mut Fnv1a, g: &Graph) {
+    // Names matter: they flow into `Program::layer_names` and therefore
+    // into every report a cached program produces.
+    h.write_str(&g.name);
+    h.write_u64(g.tensors.len() as u64);
+    for t in &g.tensors {
+        h.write_str(&t.name);
+        h.write_u64(t.dims.len() as u64);
+        for &d in &t.dims {
+            h.write_u32(d);
+        }
+        feed_dtype(h, t.dtype);
+        match t.kind {
+            TensorKind::Input { seed } => {
+                h.write_u8(0);
+                h.write_u64(seed);
+            }
+            TensorKind::Weight { seed } => {
+                h.write_u8(1);
+                h.write_u64(seed);
+            }
+            TensorKind::Intermediate => h.write_u8(2),
+            TensorKind::Output => h.write_u8(3),
+        }
+    }
+    h.write_u64(g.nodes.len() as u64);
+    for n in &g.nodes {
+        h.write_str(&n.name);
+        match n.kind {
+            OpKind::Conv2d { kh, kw, stride, pad, relu, shift } => {
+                h.write_u8(0);
+                h.write_u32(kh);
+                h.write_u32(kw);
+                h.write_u32(stride);
+                h.write_u32(pad);
+                h.write_bool(relu);
+                h.write_u32(shift);
+            }
+            OpKind::MaxPool2d { k, s } => {
+                h.write_u8(1);
+                h.write_u32(k);
+                h.write_u32(s);
+            }
+            OpKind::Dense { relu, shift, logits } => {
+                h.write_u8(2);
+                h.write_bool(relu);
+                h.write_u32(shift);
+                h.write_bool(logits);
+            }
+            OpKind::GlobalAvgPool => h.write_u8(3),
+            OpKind::ResidualAdd { relu } => {
+                h.write_u8(4);
+                h.write_bool(relu);
+            }
+            OpKind::TileRows { rows } => {
+                h.write_u8(5);
+                h.write_u32(rows);
+            }
+        }
+        h.write_u64(n.inputs.len() as u64);
+        for t in &n.inputs {
+            h.write_u64(t.0 as u64);
+        }
+        h.write_u64(n.output.0 as u64);
+    }
+}
+
+fn feed_config(h: &mut Fnv1a, c: &ClusterConfig) {
+    h.write_str(&c.name);
+    h.write_u32(c.spm_kb);
+    h.write_u32(c.banks);
+    h.write_u32(c.bank_width_bits);
+    h.write_u32(c.axi_bits);
+    h.write_u32(c.dma_bits);
+    h.write_u8(c.dma_core);
+    h.write_u32(c.freq_mhz);
+    h.write_bool(c.csr_double_buffer);
+    h.write_u64(c.cores.len() as u64);
+    for core in &c.cores {
+        h.write_u8(core.id);
+        h.write_u32(core.imem_kb);
+    }
+    h.write_u64(c.accelerators.len() as u64);
+    for a in &c.accelerators {
+        h.write_str(&a.name);
+        h.write_u8(match a.kind {
+            AccelKind::Gemm => 0,
+            AccelKind::MaxPool => 1,
+            AccelKind::VecAdd => 2,
+        });
+        h.write_u8(a.core);
+        h.write_u64(a.read_ports_bits.len() as u64);
+        for &b in &a.read_ports_bits {
+            h.write_u32(b);
+        }
+        h.write_u64(a.write_ports_bits.len() as u64);
+        for &b in &a.write_ports_bits {
+            h.write_u32(b);
+        }
+        h.write_u32(a.fifo_depth);
+        h.write_u32(a.agu_loop_depth);
+    }
+}
+
+fn feed_options(h: &mut Fnv1a, o: &CompileOptions) {
+    h.write_u8(match o.mode {
+        Mode::Sequential => 0,
+        Mode::Pipelined => 1,
+    });
+    h.write_u32(o.n_inferences);
+    h.write_u64(o.max_weight_slots as u64);
+    h.write_u64(o.overrides.force_cpu.len() as u64);
+    for name in &o.overrides.force_cpu {
+        h.write_str(name);
+    }
+}
+
+/// Content-addressed cache key for one compilation: stable across
+/// clones, threads, and identical processes. The leading version tag
+/// deliberately invalidates every cached program when the fingerprint
+/// schema itself changes.
+pub fn program_key(g: &Graph, cfg: &ClusterConfig, opts: &CompileOptions) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_str("snax-program-v1");
+    feed_graph(&mut h, g);
+    feed_config(&mut h, cfg);
+    feed_options(&mut h, opts);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Reference values for the standard 64-bit FNV-1a parameters.
+        assert_eq!(Fnv1a::new().finish(), 0xcbf29ce484222325);
+        let mut h = Fnv1a::new();
+        h.write_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h = Fnv1a::new();
+        h.write_bytes(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn key_is_stable_across_clones() {
+        let g = models::fig6a_graph();
+        let cfg = ClusterConfig::fig6d();
+        let opts = CompileOptions::pipelined();
+        let k1 = program_key(&g, &cfg, &opts);
+        let k2 = program_key(&g.clone(), &cfg.clone(), &opts.clone());
+        assert_eq!(k1, k2);
+    }
+
+    #[test]
+    fn key_separates_graphs_configs_and_options() {
+        let g = models::fig6a_graph();
+        let cfg = ClusterConfig::fig6d();
+        let opts = CompileOptions::sequential();
+        let base = program_key(&g, &cfg, &opts);
+        assert_ne!(base, program_key(&models::dae_graph(), &cfg, &opts));
+        assert_ne!(base, program_key(&g, &ClusterConfig::fig6c(), &opts));
+        assert_ne!(base, program_key(&g, &cfg, &CompileOptions::pipelined()));
+        assert_ne!(
+            base,
+            program_key(&g, &cfg, &CompileOptions::sequential().with_inferences(2))
+        );
+        assert_ne!(
+            base,
+            program_key(&g, &cfg, &CompileOptions::sequential().single_weight_slot())
+        );
+        assert_ne!(
+            base,
+            program_key(&g, &cfg, &CompileOptions::sequential().force_cpu(&["conv1"]))
+        );
+    }
+
+    #[test]
+    fn key_sees_config_field_tweaks() {
+        let g = models::fig6a_graph();
+        let opts = CompileOptions::sequential();
+        let cfg = ClusterConfig::fig6d();
+        let base = program_key(&g, &cfg, &opts);
+        let mut tweaked = cfg.clone();
+        tweaked.banks = 64;
+        assert_ne!(base, program_key(&g, &tweaked, &opts));
+        let mut tweaked = cfg.clone();
+        tweaked.accelerators[0].fifo_depth = 8;
+        assert_ne!(base, program_key(&g, &tweaked, &opts));
+    }
+
+    #[test]
+    fn length_prefixing_prevents_concatenation_collisions() {
+        let mut a = Fnv1a::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv1a::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -13,6 +13,7 @@
 pub mod alloc;
 pub mod codegen;
 pub mod cost;
+pub mod fingerprint;
 pub mod ir;
 pub mod placement;
 
@@ -23,8 +24,14 @@ use crate::isa::Program;
 use crate::sim::SimReport;
 
 pub use codegen::Mode;
+pub use fingerprint::{program_key, Fnv1a};
 pub use ir::{Graph, NodeId, TensorId};
 pub use placement::{Device, Placement, PlacementOverrides};
+
+/// A compiled program shared across threads (the `snax serve` cache
+/// hands the same compilation to many concurrent simulations; all
+/// [`CompiledProgram`] fields are immutable after [`compile`]).
+pub type SharedProgram = std::sync::Arc<CompiledProgram>;
 
 /// Compilation options (the paper's "explicit configuration flags and
 /// target descriptions provided during compilation").

@@ -324,6 +324,47 @@ impl ClusterConfig {
     }
 }
 
+/// Deployment-time configuration of the `snax serve` service layer
+/// ([`crate::server`]) — not part of the hardware description, but kept
+/// here so every user-tunable knob in the system shares one home.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// TCP port bound on 127.0.0.1 (`0` = OS-assigned ephemeral port,
+    /// useful for tests and the loopback load generator).
+    pub port: u16,
+    /// Worker threads executing compile+simulate jobs (defaults to the
+    /// host's available parallelism).
+    pub workers: usize,
+    /// Compiled-program cache capacity in entries, spread across the
+    /// cache's shards.
+    pub cache_capacity: usize,
+    /// Maximum queued jobs before the service sheds load with 503s
+    /// (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self { port: 8080, workers, cache_capacity: 64, queue_depth: workers * 4 }
+    }
+}
+
+impl ServerConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("server needs at least one worker thread");
+        }
+        if self.queue_depth == 0 {
+            bail!("queue depth must be at least 1");
+        }
+        if self.cache_capacity == 0 {
+            bail!("cache capacity must be at least 1 entry");
+        }
+        Ok(())
+    }
+}
+
 /// Minimal TOML-subset parser for [`ClusterConfig`] (see `from_toml`).
 mod minitoml {
     use anyhow::{bail, Context, Result};
@@ -549,6 +590,20 @@ mod tests {
         let mut c = ClusterConfig::fig6c();
         c.accelerators[0].read_ports_bits = vec![100];
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn server_config_defaults_and_validation() {
+        let s = ServerConfig::default();
+        assert!(s.workers >= 1);
+        assert!(s.queue_depth >= s.workers);
+        s.validate().unwrap();
+        let bad = ServerConfig { workers: 0, ..ServerConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = ServerConfig { queue_depth: 0, ..ServerConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = ServerConfig { cache_capacity: 0, ..ServerConfig::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -28,6 +28,11 @@
 //! * [`metrics`] — roofline analysis and report/table generation.
 //! * [`baseline`] — the "conventional integration" sequential runtime
 //!   used as the comparison point in Fig. 8 and Fig. 10.
+//! * [`server`] — `snax serve`: a concurrent compile-and-simulate
+//!   HTTP service with a content-addressed program cache, bounded
+//!   worker pool, health/metrics endpoints, and graceful shutdown
+//!   (DESIGN.md §6). The repo's scale-out path: many clients share one
+//!   resident compiler+simulator instead of forking the CLI per run.
 //!
 //! ## Quickstart
 //!
@@ -51,6 +56,7 @@ pub mod isa;
 pub mod metrics;
 pub mod models;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 
 pub use config::ClusterConfig;

@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! snax simulate --net fig6a --cluster fig6d [--pipelined] [--inferences N]
+//! snax serve    [--port P] [--workers N] [--cache N] [--queue N]
 //! snax fig8     (the heterogeneous-acceleration cascade)
 //! snax roofline --tiles 16,32,64,96,128 [--baseline]
 //! snax report   (area summary for all presets)
@@ -64,12 +65,7 @@ impl Args {
 }
 
 fn graph_for(name: &str) -> Result<snax::compiler::Graph> {
-    match name {
-        "fig6a" => Ok(models::fig6a_graph()),
-        "dae" => Ok(models::dae_graph()),
-        "resnet8" => Ok(models::resnet8_graph()),
-        other => bail!("unknown net '{other}' (fig6a/dae/resnet8)"),
-    }
+    models::graph_by_name(name)
 }
 
 fn cluster_for(args: &Args) -> Result<ClusterConfig> {
@@ -201,6 +197,21 @@ fn cmd_report(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = snax::config::ServerConfig::default();
+    cfg.port = args.get("port", &cfg.port.to_string()).parse().context("bad --port")?;
+    if args.has("workers") {
+        cfg.workers = args.get("workers", "1").parse().context("bad --workers")?;
+    }
+    if args.has("cache") {
+        cfg.cache_capacity = args.get("cache", "64").parse().context("bad --cache")?;
+    }
+    if args.has("queue") {
+        cfg.queue_depth = args.get("queue", "1").parse().context("bad --queue")?;
+    }
+    snax::server::run_blocking(cfg)
+}
+
 fn cmd_verify(args: &Args) -> Result<()> {
     let net = args.get("net", "fig6a");
     let g = graph_for(&net)?;
@@ -216,6 +227,10 @@ fn cmd_verify(args: &Args) -> Result<()> {
     }
     println!("sim == golden: OK ({} bytes)", sim_out.len());
     // 3. PJRT artifact.
+    if !snax::runtime::PJRT_ENABLED {
+        println!("PJRT artifact check skipped (built without the `pjrt` feature)");
+        return Ok(());
+    }
     let store = ArtifactStore::open_default()?;
     let meta = store
         .meta(&net)
@@ -286,6 +301,8 @@ fn help() {
          commands:\n\
          \u{20}  simulate --net fig6a|dae|resnet8 --cluster fig6b|fig6c|fig6d|file.toml\n\
          \u{20}           [--pipelined] [--inferences N] [--trace out.json]\n\
+         \u{20}  serve     [--port 8080] [--workers N] [--cache entries] [--queue depth]\n\
+         \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6)\n\
          \u{20}  fig8      (the heterogeneous-acceleration cascade)\n\
          \u{20}  roofline  [--tiles 16,32,64] [--baseline]\n\
          \u{20}  report    (area breakdown per preset)\n\
@@ -298,6 +315,7 @@ fn main() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
         "roofline" => cmd_roofline(&args),
         "report" => cmd_report(&args),
         "verify" => cmd_verify(&args),

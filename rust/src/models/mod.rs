@@ -14,3 +14,14 @@ pub mod specs;
 
 pub use golden::evaluate;
 pub use specs::{dae_graph, fig6a_graph, resnet8_graph};
+
+/// Look up an evaluation workload by its CLI/API name (shared by the
+/// `snax` binary and the `snax serve` endpoints).
+pub fn graph_by_name(name: &str) -> anyhow::Result<crate::compiler::Graph> {
+    match name {
+        "fig6a" => Ok(fig6a_graph()),
+        "dae" => Ok(dae_graph()),
+        "resnet8" => Ok(resnet8_graph()),
+        other => anyhow::bail!("unknown net '{other}' (expected fig6a/dae/resnet8)"),
+    }
+}

@@ -1,9 +1,13 @@
-//! Minimal JSON parser — just enough for `artifacts/manifest.json`
-//! (objects, arrays, strings, integers, booleans). This environment
-//! vendors no serde_json; the grammar we consume is fixed and produced
-//! by our own `aot.py`.
+//! Minimal JSON codec — no serde in this vendored environment.
+//!
+//! The parser originally existed for `artifacts/manifest.json`; the
+//! `snax serve` service layer ([`crate::server`]) now uses it for every
+//! request body and pairs it with the [`Value::to_json`] serializer for
+//! responses. The grammar is full JSON (objects, arrays, strings with
+//! `\uXXXX` escapes incl. surrogate pairs, numbers, booleans, null),
+//! with trailing-garbage rejection at the top level.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -52,12 +56,146 @@ impl Value {
         }
     }
 
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+
+    /// Build an object from `(key, value)` pairs (server response
+    /// convenience; `Obj` is a BTreeMap, so key order — and therefore
+    /// the serialized byte stream — is deterministic).
+    pub fn object<'a>(pairs: impl IntoIterator<Item = (&'a str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// Serialize to a compact JSON string. Integral floats print without
+    /// a fraction part, non-finite floats degrade to `null` (JSON has no
+    /// NaN/inf), and strings escape quotes, backslashes, and control
+    /// characters.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    fn write_json(&self, out: &mut String) {
+        use std::fmt::Write;
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => write_json_string(s, out),
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_json(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write_json(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Num(v)
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Num(v as f64)
+    }
+}
+
+impl From<u32> for Value {
+    fn from(v: u32) -> Self {
+        Value::Num(v as f64)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Num(v as f64)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Self {
+        Value::Arr(v)
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    use std::fmt::Write;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 pub fn parse(text: &str) -> Result<Value> {
@@ -118,8 +256,29 @@ fn parse_num(b: &[u8], pos: &mut usize) -> Result<Value> {
     {
         *pos += 1;
     }
+    if *pos == start {
+        bail!("expected a value at byte {start}");
+    }
     let s = std::str::from_utf8(&b[start..*pos])?;
-    Ok(Value::Num(s.parse::<f64>()?))
+    let n = s.parse::<f64>().with_context(|| format!("bad number '{s}' at byte {start}"))?;
+    if !n.is_finite() {
+        bail!("non-finite number '{s}' at byte {start}");
+    }
+    Ok(Value::Num(n))
+}
+
+/// Read exactly four hex digits (the payload of a `\u` escape).
+fn hex4(b: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > b.len() {
+        bail!("truncated \\u escape at byte {pos}");
+    }
+    let hex = &b[*pos..*pos + 4];
+    if !hex.iter().all(|c| c.is_ascii_hexdigit()) {
+        bail!("bad \\u escape at byte {pos}");
+    }
+    let v = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+    *pos += 4;
+    Ok(v)
 }
 
 fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
@@ -136,26 +295,40 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                 if *pos >= b.len() {
                     bail!("bad escape at end");
                 }
-                match b[*pos] {
+                let esc = b[*pos];
+                *pos += 1;
+                match esc {
                     b'"' => out.push('"'),
                     b'\\' => out.push('\\'),
                     b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
                     b'n' => out.push('\n'),
                     b't' => out.push('\t'),
                     b'r' => out.push('\r'),
                     b'u' => {
-                        // \uXXXX (BMP only — fine for our manifests).
-                        if *pos + 4 >= b.len() {
-                            bail!("bad unicode escape");
+                        let cp = hex4(b, pos)?;
+                        if (0xD800..0xDC00).contains(&cp) {
+                            // High surrogate: must pair with \uDC00..DFFF.
+                            if *pos + 2 > b.len() || b[*pos] != b'\\' || b[*pos + 1] != b'u' {
+                                bail!("unpaired high surrogate at byte {pos}");
+                            }
+                            *pos += 2;
+                            let lo = hex4(b, pos)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                bail!("invalid low surrogate at byte {pos}");
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            out.push(char::from_u32(c).context("surrogate pair out of range")?);
+                        } else if (0xDC00..0xE000).contains(&cp) {
+                            bail!("unpaired low surrogate at byte {pos}");
+                        } else {
+                            // Non-surrogate BMP scalar: always a valid char.
+                            out.push(char::from_u32(cp).unwrap());
                         }
-                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
-                        let cp = u32::from_str_radix(hex, 16)?;
-                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                        *pos += 4;
                     }
                     other => bail!("unknown escape \\{}", other as char),
                 }
-                *pos += 1;
             }
             c => {
                 // Raw UTF-8 passthrough.
@@ -165,6 +338,9 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                     0xe0..=0xef => 3,
                     _ => 4,
                 };
+                if *pos + ch_len > b.len() {
+                    bail!("truncated UTF-8 sequence at byte {pos}");
+                }
                 out.push_str(std::str::from_utf8(&b[*pos..*pos + ch_len])?);
                 *pos += ch_len;
             }
@@ -255,6 +431,11 @@ mod tests {
         assert!(parse("{").is_err());
         assert!(parse("[1,]").is_err());
         assert!(parse("{}x").is_err());
+        assert!(parse("[1,2] tail").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("").is_err());
+        assert!(parse("--5").is_err());
+        assert!(parse("@").is_err());
     }
 
     #[test]
@@ -263,5 +444,67 @@ mod tests {
         let a = v.as_arr().unwrap();
         assert_eq!(a[0].as_arr().unwrap().len(), 2);
         assert_eq!(a[1].as_arr().unwrap()[0].as_u64(), Some(3));
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        // BMP escape: \u0041 -> 'A'.
+        assert_eq!(parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
+        // Surrogate pair \ud83d\ude00 -> one astral scalar (U+1F600).
+        assert_eq!(
+            parse("\"\\ud83d\\ude00\"").unwrap().as_str(),
+            Some("\u{1f600}")
+        );
+        // Unpaired surrogates are rejected, not replaced.
+        assert!(parse(r#""\ud83d""#).is_err());
+        assert!(parse(r#""\ud83dx""#).is_err());
+        assert!(parse(r#""\ude00""#).is_err());
+        // Truncated / non-hex escapes.
+        assert!(parse(r#""\u00""#).is_err());
+        assert!(parse(r#""\u00zz""#).is_err());
+        // Raw UTF-8 passthrough still works.
+        assert_eq!(parse("\"héllo\"").unwrap().as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn serializes_all_value_kinds() {
+        let v = Value::object([
+            ("b", Value::Bool(true)),
+            ("n", Value::Num(42.0)),
+            ("f", Value::Num(1.5)),
+            ("s", Value::from("a\"b\\c\nd")),
+            ("arr", Value::Arr(vec![Value::Null, Value::Num(-3.0)])),
+            ("obj", Value::object([("k", Value::from("v"))])),
+        ]);
+        let j = v.to_json();
+        assert_eq!(
+            j,
+            r#"{"arr":[null,-3],"b":true,"f":1.5,"n":42,"obj":{"k":"v"},"s":"a\"b\\c\nd"}"#
+        );
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip() {
+        let v = Value::object([
+            ("nested", Value::Arr(vec![Value::object([("x", Value::Num(8.0))])])),
+            ("text", Value::from("tab\there — ünïcode")),
+            ("flag", Value::Bool(false)),
+            ("nothing", Value::Null),
+            ("ratio", Value::Num(0.921875)),
+        ]);
+        assert_eq!(parse(&v.to_json()).unwrap(), v);
+    }
+
+    #[test]
+    fn control_chars_escape_as_u_sequences() {
+        let j = Value::from("\u{1}bell\u{7}").to_json();
+        assert_eq!(j, "\"\\u0001bell\\u0007\"");
+        assert_eq!(parse(&j).unwrap().as_str(), Some("\u{1}bell\u{7}"));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_json(), "null");
     }
 }

@@ -11,13 +11,24 @@
 //! format: jax >= 0.5 emits 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and `python/compile/aot.py`).
+//!
+//! The XLA bindings are only available in environments that vendor the
+//! `xla` crate, so everything touching it is gated behind the
+//! off-by-default `pjrt` cargo feature. Enabling the feature requires
+//! *also* adding the vendored crate to `rust/Cargo.toml` (e.g.
+//! `xla = { path = "<vendored-xla>" }`) — it is deliberately not
+//! declared there because it cannot be resolved offline. Non-`pjrt`
+//! builds get the same [`ArtifactStore`] API as a stub whose
+//! `open`/`execute` fail with a clear error, keeping every caller
+//! compiling (and letting callers branch on [`PJRT_ENABLED`]).
 
 pub mod json;
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use anyhow::{bail, Result};
 
-use anyhow::{bail, Context, Result};
+/// True when this binary was built with the `pjrt` feature (i.e.
+/// [`ArtifactStore`] is real, not the offline stub).
+pub const PJRT_ENABLED: bool = cfg!(feature = "pjrt");
 
 /// Tensor dtype at the artifact boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,7 +38,7 @@ pub enum DType {
 }
 
 impl DType {
-    fn from_manifest(s: &str) -> Result<Self> {
+    pub fn from_manifest(s: &str) -> Result<Self> {
         match s {
             "int8" => Ok(DType::I8),
             "int32" => Ok(DType::I32),
@@ -39,13 +50,6 @@ impl DType {
         match self {
             DType::I8 => 1,
             DType::I32 => 4,
-        }
-    }
-
-    fn element_type(self) -> xla::ElementType {
-        match self {
-            DType::I8 => xla::ElementType::S8,
-            DType::I32 => xla::ElementType::S32,
         }
     }
 }
@@ -90,27 +94,6 @@ impl Tensor {
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect()
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::create_from_shape_and_untyped_data(
-            self.dtype.element_type(),
-            &self.shape,
-            &self.data,
-        )?;
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Self> {
-        let data = match dtype {
-            DType::I8 => lit.to_vec::<i8>()?.into_iter().map(|v| v as u8).collect(),
-            DType::I32 => lit
-                .to_vec::<i32>()?
-                .into_iter()
-                .flat_map(|v| v.to_le_bytes())
-                .collect(),
-        };
-        Ok(Self { dtype, shape: shape.to_vec(), data })
-    }
 }
 
 /// Shape/dtype signature of one artifact entry.
@@ -122,156 +105,238 @@ pub struct EntryMeta {
     pub sha256: String,
 }
 
-struct Entry {
-    meta: EntryMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
+pub use store::ArtifactStore;
 
-/// Loads `artifacts/` once, compiles each HLO module on the PJRT CPU
-/// client, and serves executions (lazily compiled on first use).
-pub struct ArtifactStore {
-    dir: PathBuf,
-    client: xla::PjRtClient,
-    metas: BTreeMap<String, EntryMeta>,
-    compiled: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Entry>>>,
-}
+#[cfg(feature = "pjrt")]
+mod store {
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
 
-impl ArtifactStore {
-    /// Open an artifact directory (reads `manifest.json`).
-    pub fn open(dir: &Path) -> Result<Self> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {} — run `make artifacts`", manifest_path.display()))?;
-        let root = json::parse(&text).context("parsing manifest.json")?;
-        let obj = root.as_obj().context("manifest root must be an object")?;
-        let mut metas = BTreeMap::new();
-        for (name, entry) in obj {
-            let sig = |key: &str| -> Result<Vec<(Vec<usize>, DType)>> {
-                entry
-                    .get(key)
-                    .and_then(|v| v.as_arr())
-                    .with_context(|| format!("{name}: missing {key}"))?
-                    .iter()
-                    .map(|io| {
-                        let shape = io
-                            .get("shape")
-                            .and_then(|v| v.as_arr())
-                            .context("shape")?
-                            .iter()
-                            .map(|d| d.as_u64().map(|v| v as usize).context("dim"))
-                            .collect::<Result<Vec<_>>>()?;
-                        let dtype = DType::from_manifest(
-                            io.get("dtype").and_then(|v| v.as_str()).context("dtype")?,
-                        )?;
-                        Ok((shape, dtype))
-                    })
-                    .collect()
-            };
-            metas.insert(
-                name.clone(),
-                EntryMeta {
-                    name: name.clone(),
-                    inputs: sig("inputs")?,
-                    outputs: sig("outputs")?,
-                    sha256: entry
-                        .get("sha256")
-                        .and_then(|v| v.as_str())
-                        .unwrap_or_default()
-                        .to_string(),
-                },
-            );
-        }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            dir: dir.to_path_buf(),
-            client,
-            metas,
-            compiled: Default::default(),
-        })
-    }
+    use anyhow::{bail, Context, Result};
 
-    /// Default location relative to the repo root.
-    pub fn open_default() -> Result<Self> {
-        let candidates = ["artifacts", "../artifacts", "../../artifacts"];
-        for c in candidates {
-            let p = Path::new(c);
-            if p.join("manifest.json").exists() {
-                return Self::open(p);
+    use super::{json, DType, EntryMeta, Tensor};
+
+    impl DType {
+        fn element_type(self) -> xla::ElementType {
+            match self {
+                DType::I8 => xla::ElementType::S8,
+                DType::I32 => xla::ElementType::S32,
             }
         }
-        bail!("artifacts/manifest.json not found — run `make artifacts`")
     }
 
-    pub fn names(&self) -> Vec<String> {
-        self.metas.keys().cloned().collect()
-    }
-
-    pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
-        self.metas.get(name)
-    }
-
-    fn entry(&self, name: &str) -> Result<std::rc::Rc<Entry>> {
-        if let Some(e) = self.compiled.borrow().get(name) {
-            return Ok(e.clone());
+    impl Tensor {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                self.dtype.element_type(),
+                &self.shape,
+                &self.data,
+            )?;
+            Ok(lit)
         }
-        let meta = self
-            .metas
-            .get(name)
-            .with_context(|| format!("no artifact '{name}' in manifest"))?
-            .clone();
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("PJRT-compiling artifact '{name}'"))?;
-        let e = std::rc::Rc::new(Entry { meta, exe });
-        self.compiled.borrow_mut().insert(name.to_string(), e.clone());
-        Ok(e)
+
+        fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Self> {
+            let data = match dtype {
+                DType::I8 => lit.to_vec::<i8>()?.into_iter().map(|v| v as u8).collect(),
+                DType::I32 => lit
+                    .to_vec::<i32>()?
+                    .into_iter()
+                    .flat_map(|v| v.to_le_bytes())
+                    .collect(),
+            };
+            Ok(Self { dtype, shape: shape.to_vec(), data })
+        }
     }
 
-    /// Execute artifact `name` with host tensors, returning host tensors.
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let entry = self.entry(name)?;
-        let meta = &entry.meta;
-        if inputs.len() != meta.inputs.len() {
-            bail!(
-                "artifact '{name}' wants {} inputs, got {}",
-                meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, (shape, dtype))) in inputs.iter().zip(&meta.inputs).enumerate() {
-            if &t.shape != shape || t.dtype != *dtype {
-                bail!(
-                    "artifact '{name}' input {i}: expected {shape:?}/{dtype:?}, got {:?}/{:?}",
-                    t.shape,
-                    t.dtype
+    struct Entry {
+        meta: EntryMeta,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// Loads `artifacts/` once, compiles each HLO module on the PJRT CPU
+    /// client, and serves executions (lazily compiled on first use).
+    pub struct ArtifactStore {
+        dir: PathBuf,
+        client: xla::PjRtClient,
+        metas: BTreeMap<String, EntryMeta>,
+        compiled: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Entry>>>,
+    }
+
+    impl ArtifactStore {
+        /// Open an artifact directory (reads `manifest.json`).
+        pub fn open(dir: &Path) -> Result<Self> {
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!("reading {} — run `make artifacts`", manifest_path.display())
+            })?;
+            let root = json::parse(&text).context("parsing manifest.json")?;
+            let obj = root.as_obj().context("manifest root must be an object")?;
+            let mut metas = BTreeMap::new();
+            for (name, entry) in obj {
+                let sig = |key: &str| -> Result<Vec<(Vec<usize>, DType)>> {
+                    entry
+                        .get(key)
+                        .and_then(|v| v.as_arr())
+                        .with_context(|| format!("{name}: missing {key}"))?
+                        .iter()
+                        .map(|io| {
+                            let shape = io
+                                .get("shape")
+                                .and_then(|v| v.as_arr())
+                                .context("shape")?
+                                .iter()
+                                .map(|d| d.as_u64().map(|v| v as usize).context("dim"))
+                                .collect::<Result<Vec<_>>>()?;
+                            let dtype = DType::from_manifest(
+                                io.get("dtype").and_then(|v| v.as_str()).context("dtype")?,
+                            )?;
+                            Ok((shape, dtype))
+                        })
+                        .collect()
+                };
+                metas.insert(
+                    name.clone(),
+                    EntryMeta {
+                        name: name.clone(),
+                        inputs: sig("inputs")?,
+                        outputs: sig("outputs")?,
+                        sha256: entry
+                            .get("sha256")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or_default()
+                            .to_string(),
+                    },
                 );
             }
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { dir: dir.to_path_buf(), client, metas, compiled: Default::default() })
         }
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = entry.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // Lowered with return_tuple=True: unwrap the tuple.
-        let mut parts = result.to_tuple()?;
-        if parts.len() != meta.outputs.len() {
+
+        /// Default location relative to the repo root.
+        pub fn open_default() -> Result<Self> {
+            let candidates = ["artifacts", "../artifacts", "../../artifacts"];
+            for c in candidates {
+                let p = Path::new(c);
+                if p.join("manifest.json").exists() {
+                    return Self::open(p);
+                }
+            }
+            bail!("artifacts/manifest.json not found — run `make artifacts`")
+        }
+
+        pub fn names(&self) -> Vec<String> {
+            self.metas.keys().cloned().collect()
+        }
+
+        pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
+            self.metas.get(name)
+        }
+
+        fn entry(&self, name: &str) -> Result<std::rc::Rc<Entry>> {
+            if let Some(e) = self.compiled.borrow().get(name) {
+                return Ok(e.clone());
+            }
+            let meta = self
+                .metas
+                .get(name)
+                .with_context(|| format!("no artifact '{name}' in manifest"))?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("PJRT-compiling artifact '{name}'"))?;
+            let e = std::rc::Rc::new(Entry { meta, exe });
+            self.compiled.borrow_mut().insert(name.to_string(), e.clone());
+            Ok(e)
+        }
+
+        /// Execute artifact `name` with host tensors, returning host tensors.
+        pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let entry = self.entry(name)?;
+            let meta = &entry.meta;
+            if inputs.len() != meta.inputs.len() {
+                bail!(
+                    "artifact '{name}' wants {} inputs, got {}",
+                    meta.inputs.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (t, (shape, dtype))) in inputs.iter().zip(&meta.inputs).enumerate() {
+                if &t.shape != shape || t.dtype != *dtype {
+                    bail!(
+                        "artifact '{name}' input {i}: expected {shape:?}/{dtype:?}, got {:?}/{:?}",
+                        t.shape,
+                        t.dtype
+                    );
+                }
+            }
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            let result = entry.exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            // Lowered with return_tuple=True: unwrap the tuple.
+            let mut parts = result.to_tuple()?;
+            if parts.len() != meta.outputs.len() {
+                bail!(
+                    "artifact '{name}': expected {} outputs, got {}",
+                    meta.outputs.len(),
+                    parts.len()
+                );
+            }
+            parts
+                .drain(..)
+                .zip(&meta.outputs)
+                .map(|(lit, (shape, dtype))| Tensor::from_literal(&lit, *dtype, shape))
+                .collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod store {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{EntryMeta, Tensor};
+
+    /// Offline stub: keeps every `ArtifactStore` caller compiling when
+    /// the `pjrt` feature (and the vendored `xla` crate) is absent.
+    /// `open`/`open_default` always fail, so no instance ever exists at
+    /// run time; the accessors exist purely for type-checking.
+    pub struct ArtifactStore {
+        _unconstructible: std::convert::Infallible,
+    }
+
+    impl ArtifactStore {
+        pub fn open(_dir: &Path) -> Result<Self> {
             bail!(
-                "artifact '{name}': expected {} outputs, got {}",
-                meta.outputs.len(),
-                parts.len()
-            );
+                "snax was built without the `pjrt` feature — rebuild with \
+                 `--features pjrt` (needs the vendored xla crate) to load artifacts"
+            )
         }
-        parts
-            .drain(..)
-            .zip(&meta.outputs)
-            .map(|(lit, (shape, dtype))| Tensor::from_literal(&lit, *dtype, shape))
-            .collect()
+
+        pub fn open_default() -> Result<Self> {
+            Self::open(Path::new("artifacts"))
+        }
+
+        pub fn names(&self) -> Vec<String> {
+            Vec::new()
+        }
+
+        pub fn meta(&self, _name: &str) -> Option<&EntryMeta> {
+            None
+        }
+
+        pub fn execute(&self, _name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            bail!("snax was built without the `pjrt` feature")
+        }
     }
 }
 
@@ -280,7 +345,8 @@ mod tests {
     use super::*;
 
     // Full artifact-backed tests live in rust/tests/integration_runtime.rs
-    // (they need `make artifacts` to have run). Here: pure host logic.
+    // (they need `make artifacts` and a `pjrt` build). Here: pure host
+    // logic.
 
     #[test]
     fn tensor_roundtrips() {
@@ -300,5 +366,13 @@ mod tests {
         assert_eq!(DType::from_manifest("int8").unwrap(), DType::I8);
         assert_eq!(DType::from_manifest("int32").unwrap(), DType::I32);
         assert!(DType::from_manifest("float32").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_store_fails_with_guidance() {
+        assert!(!PJRT_ENABLED);
+        let err = ArtifactStore::open_default().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,817 @@
+//! REST endpoints of the compile-and-simulate service.
+//!
+//! * `POST /compile`  — compile a workload (through the program cache),
+//!   return the cache key + program shape.
+//! * `POST /simulate` — compile (cached) + cycle-accurate simulation;
+//!   synchronous by default, `"detach": true` returns a job id for
+//!   `GET /jobs/:id` polling.
+//! * `GET /jobs/:id`  — state/result of a detached job.
+//! * `GET /healthz`   — liveness + basic load info.
+//! * `GET /metrics`   — Prometheus text: per-endpoint request counters
+//!   and latency histograms, cache hit/miss/eviction counters, queue
+//!   and worker gauges.
+//!
+//! Request body (both POST endpoints):
+//!
+//! ```json
+//! {
+//!   "net": "fig6a" | "dae" | "resnet8",
+//!   "cluster": "fig6b" | "fig6c" | "fig6d" | "<inline TOML>",
+//!   "pipelined": false,
+//!   "inferences": 1,
+//!   "max_weight_slots": 2,
+//!   "detach": false
+//! }
+//! ```
+//!
+//! Simulation responses are **deterministic**: the same `(net, cluster,
+//! options)` triple always yields byte-identical JSON (cache status
+//! travels in the `X-Snax-Cache` header, never the body), which the
+//! loopback integration test exploits to diff the service against the
+//! direct library path.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::{compile, program_key, CompileOptions, CompiledProgram, Graph};
+use crate::config::{ClusterConfig, ServerConfig};
+use crate::energy;
+use crate::models;
+use crate::runtime::json::{self, Value};
+use crate::sim::{Cluster, SimReport};
+
+use super::cache::ProgramCache;
+use super::http::{Request, Response};
+use super::pool::{SubmitError, WorkerPool};
+
+// ---------------------------------------------------------------------------
+// Request parsing
+// ---------------------------------------------------------------------------
+
+struct SimRequest {
+    graph: Graph,
+    cfg: ClusterConfig,
+    opts: CompileOptions,
+    detach: bool,
+}
+
+fn parse_sim_request(body: &[u8]) -> Result<SimRequest> {
+    let text = std::str::from_utf8(body).context("body must be UTF-8")?;
+    let v = json::parse(text).context("body must be valid JSON")?;
+    let net = v
+        .get("net")
+        .and_then(|x| x.as_str())
+        .context("missing string field 'net' (fig6a/dae/resnet8)")?;
+    let graph = models::graph_by_name(net)?;
+    let cfg = match v.get("cluster") {
+        None => ClusterConfig::fig6d(),
+        Some(c) => {
+            let spec = c.as_str().context("'cluster' must be a preset name or TOML text")?;
+            // Inline TOML contains key=value lines; presets are bare names.
+            if spec.contains('=') || spec.contains('\n') {
+                ClusterConfig::from_toml(spec).context("parsing inline cluster TOML")?
+            } else {
+                ClusterConfig::preset(spec)?
+            }
+        }
+    };
+    let pipelined = v.get("pipelined").and_then(|x| x.as_bool()).unwrap_or(false);
+    let inferences = match v.get("inferences") {
+        None => None,
+        Some(x) => {
+            let n = x.as_u64().context("'inferences' must be a positive integer")?;
+            if !(1..=4096).contains(&n) {
+                bail!("'inferences' must be in 1..=4096, got {n}");
+            }
+            Some(n as u32)
+        }
+    };
+    let mut opts = if pipelined {
+        // Pipelined throughput needs at least 2 in-flight inferences
+        // (mirrors the `snax simulate --pipelined` CLI path).
+        CompileOptions::pipelined().with_inferences(inferences.unwrap_or(8).max(2))
+    } else {
+        CompileOptions::sequential().with_inferences(inferences.unwrap_or(1))
+    };
+    if let Some(x) = v.get("max_weight_slots") {
+        let slots = x.as_u64().context("'max_weight_slots' must be a positive integer")?;
+        if !(1..=8).contains(&slots) {
+            bail!("'max_weight_slots' must be in 1..=8, got {slots}");
+        }
+        opts.max_weight_slots = slots as usize;
+    }
+    let detach = v.get("detach").and_then(|x| x.as_bool()).unwrap_or(false);
+    Ok(SimRequest { graph, cfg, opts, detach })
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    Compile = 0,
+    Simulate = 1,
+    Jobs = 2,
+    Healthz = 3,
+    Metrics = 4,
+    Other = 5,
+}
+
+const N_ENDPOINTS: usize = 6;
+const ENDPOINT_NAMES: [&str; N_ENDPOINTS] =
+    ["compile", "simulate", "jobs", "healthz", "metrics", "other"];
+/// Histogram upper bounds in microseconds (+Inf bucket appended).
+const LATENCY_BUCKETS_US: [u64; 6] = [100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000];
+
+#[derive(Default)]
+struct EndpointStats {
+    requests: AtomicU64,
+    class_2xx: AtomicU64,
+    class_4xx: AtomicU64,
+    class_5xx: AtomicU64,
+    latency_sum_us: AtomicU64,
+    buckets: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
+}
+
+/// Per-endpoint request counters and latency histograms, lock-free.
+#[derive(Default)]
+pub struct Metrics {
+    endpoints: [EndpointStats; N_ENDPOINTS],
+}
+
+impl Metrics {
+    pub fn record(&self, endpoint: Endpoint, status: u16, latency_us: u64) {
+        let s = &self.endpoints[endpoint as usize];
+        s.requests.fetch_add(1, Ordering::Relaxed);
+        match status {
+            200..=299 => s.class_2xx.fetch_add(1, Ordering::Relaxed),
+            400..=499 => s.class_4xx.fetch_add(1, Ordering::Relaxed),
+            _ => s.class_5xx.fetch_add(1, Ordering::Relaxed),
+        };
+        s.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        let bucket = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&le| latency_us <= le)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        s.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self, endpoint: Endpoint) -> u64 {
+        self.endpoints[endpoint as usize].requests.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Detached jobs
+// ---------------------------------------------------------------------------
+
+enum JobState {
+    Queued,
+    Running,
+    Done(String),
+    Failed(String),
+}
+
+/// Finished jobs retained for polling before being pruned FIFO.
+const MAX_FINISHED_JOBS: usize = 1024;
+
+#[derive(Default)]
+struct JobsInner {
+    map: HashMap<u64, JobState>,
+    finished: VecDeque<u64>,
+}
+
+#[derive(Default)]
+struct JobTable {
+    inner: Mutex<JobsInner>,
+    next_id: AtomicU64,
+}
+
+impl JobTable {
+    fn create(&self) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inner.lock().unwrap().map.insert(id, JobState::Queued);
+        id
+    }
+
+    fn set(&self, id: u64, state: JobState) {
+        let finished = matches!(state, JobState::Done(_) | JobState::Failed(_));
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.insert(id, state);
+        if finished {
+            inner.finished.push_back(id);
+            while inner.finished.len() > MAX_FINISHED_JOBS {
+                if let Some(old) = inner.finished.pop_front() {
+                    inner.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn remove(&self, id: u64) {
+        self.inner.lock().unwrap().map.remove(&id);
+    }
+
+    /// Render the status body for a job, or `None` if unknown/expired.
+    fn status_body(&self, id: u64) -> Option<String> {
+        let inner = self.inner.lock().unwrap();
+        inner.map.get(&id).map(|state| match state {
+            JobState::Queued => {
+                Value::object([("id", Value::from(id)), ("state", Value::from("queued"))])
+                    .to_json()
+            }
+            JobState::Running => {
+                Value::object([("id", Value::from(id)), ("state", Value::from("running"))])
+                    .to_json()
+            }
+            // The report is already JSON — splice it in verbatim.
+            JobState::Done(report) => {
+                format!("{{\"id\":{id},\"report\":{report},\"state\":\"done\"}}")
+            }
+            JobState::Failed(error) => Value::object([
+                ("error", Value::from(error.as_str())),
+                ("id", Value::from(id)),
+                ("state", Value::from("failed")),
+            ])
+            .to_json(),
+        })
+    }
+
+    fn pending(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .map
+            .values()
+            .filter(|s| matches!(s, JobState::Queued | JobState::Running))
+            .count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Application state + routing
+// ---------------------------------------------------------------------------
+
+pub struct AppState {
+    pub server_cfg: ServerConfig,
+    pub cache: ProgramCache,
+    pub pool: WorkerPool,
+    pub metrics: Metrics,
+    jobs: JobTable,
+    draining: AtomicBool,
+    started: Instant,
+}
+
+impl AppState {
+    pub fn new(cfg: &ServerConfig) -> Self {
+        Self {
+            server_cfg: cfg.clone(),
+            cache: ProgramCache::new(cfg.cache_capacity),
+            pool: WorkerPool::new(cfg.workers, cfg.queue_depth),
+            metrics: Metrics::default(),
+            jobs: JobTable::default(),
+            draining: AtomicBool::new(false),
+            started: Instant::now(),
+        }
+    }
+
+    /// Flag new keep-alive turns to stop (set before draining the pool).
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn shutting_down(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+/// Dispatch one request and record endpoint metrics.
+pub fn route(state: &Arc<AppState>, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let (endpoint, response) = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/compile") => (Endpoint::Compile, handle_compile(state, req)),
+        ("POST", "/simulate") => (Endpoint::Simulate, handle_simulate(state, req)),
+        ("GET", "/healthz") => (Endpoint::Healthz, handle_healthz(state)),
+        ("GET", "/metrics") => (Endpoint::Metrics, handle_metrics(state)),
+        ("GET", path) if path.starts_with("/jobs/") => {
+            (Endpoint::Jobs, handle_job(state, path))
+        }
+        ("GET", "/") => (Endpoint::Other, index()),
+        (_, "/compile" | "/simulate" | "/healthz" | "/metrics") => {
+            (Endpoint::Other, Response::text(405, "method not allowed\n"))
+        }
+        _ => (Endpoint::Other, Response::text(404, "not found\n")),
+    };
+    let latency_us = u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX);
+    state.metrics.record(endpoint, response.status, latency_us);
+    response
+}
+
+fn index() -> Response {
+    Response::text(
+        200,
+        "snax serve — compile-and-simulate service\n\
+         POST /compile    {\"net\":\"fig6a\",\"cluster\":\"fig6d\",...}\n\
+         POST /simulate   same body; add \"detach\":true for async jobs\n\
+         GET  /jobs/:id   detached job status/result\n\
+         GET  /healthz    liveness\n\
+         GET  /metrics    Prometheus metrics\n",
+    )
+}
+
+fn err_body(msg: &str) -> String {
+    Value::object([("error", Value::from(msg))]).to_json()
+}
+
+/// Run a closure on the worker pool and wait for its result.
+/// Backpressure and shutdown map to ready-made 503 responses.
+fn run_on_pool<T: Send + 'static>(
+    state: &Arc<AppState>,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> Result<T, Response> {
+    let (tx, rx) = mpsc::sync_channel::<T>(1);
+    match state.pool.submit(Box::new(move || {
+        let _ = tx.send(f());
+    })) {
+        Ok(()) => rx.recv().map_err(|_| {
+            Response::json(500, err_body("worker dropped the job (panicked?)"))
+        }),
+        Err(SubmitError::Full) => {
+            Err(Response::json(503, err_body("job queue is full — retry later")))
+        }
+        Err(SubmitError::ShuttingDown) => {
+            Err(Response::json(503, err_body("server is shutting down")))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handlers
+// ---------------------------------------------------------------------------
+
+fn handle_compile(state: &Arc<AppState>, req: &Request) -> Response {
+    let parsed = match parse_sim_request(&req.body) {
+        Ok(p) => p,
+        Err(e) => return Response::json(400, err_body(&format!("{e:#}"))),
+    };
+    let key = program_key(&parsed.graph, &parsed.cfg, &parsed.opts);
+    let cluster_name = parsed.cfg.name.clone();
+    let worker_state = state.clone();
+    let result = match run_on_pool(state, move || {
+        worker_state
+            .cache
+            .get_or_insert_with(key, || compile(&parsed.graph, &parsed.cfg, &parsed.opts))
+    }) {
+        Ok(r) => r,
+        Err(resp) => return resp,
+    };
+    match result {
+        Ok((cp, hit)) => {
+            let body = Value::object([
+                ("key", Value::from(format!("{key:016x}"))),
+                ("cached", Value::from(hit)),
+                ("net", Value::from(cp.graph.name.as_str())),
+                ("cluster", Value::from(cluster_name)),
+                ("mode", Value::from(mode_name(&cp.options))),
+                ("inferences", Value::from(cp.options.n_inferences)),
+                ("n_instrs", Value::from(cp.program.n_instrs())),
+                ("n_cores", Value::from(cp.program.n_cores())),
+                (
+                    "layers",
+                    Value::Arr(
+                        cp.program
+                            .layer_names
+                            .iter()
+                            .map(|n| Value::from(n.as_str()))
+                            .collect(),
+                    ),
+                ),
+            ]);
+            Response::json(200, body.to_json())
+                .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" })
+        }
+        Err(e) => Response::json(422, err_body(&format!("compilation failed: {e:#}"))),
+    }
+}
+
+fn handle_simulate(state: &Arc<AppState>, req: &Request) -> Response {
+    let parsed = match parse_sim_request(&req.body) {
+        Ok(p) => p,
+        Err(e) => return Response::json(400, err_body(&format!("{e:#}"))),
+    };
+    if parsed.detach {
+        return handle_simulate_detached(state, parsed);
+    }
+    let worker_state = state.clone();
+    let result = match run_on_pool(state, move || simulate_once(&worker_state, &parsed)) {
+        Ok(r) => r,
+        Err(resp) => return resp,
+    };
+    match result {
+        Ok((body, hit)) => Response::json(200, body)
+            .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" }),
+        // Compile failures are client-input errors (bad net/config
+        // combination) — same 422 as POST /compile; only simulator
+        // failures are server-side 500s.
+        Err(SimError::Compile(e)) => {
+            Response::json(422, err_body(&format!("compilation failed: {e:#}")))
+        }
+        Err(SimError::Run(e)) => Response::json(500, err_body(&format!("{e:#}"))),
+    }
+}
+
+fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Response {
+    let id = state.jobs.create();
+    let worker_state = state.clone();
+    let submitted = state.pool.submit(Box::new(move || {
+        worker_state.jobs.set(id, JobState::Running);
+        // The pool survives panicking jobs; a detached one must also
+        // leave a terminal state behind or pollers would see "running"
+        // forever (and the entry would never be pruned).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            simulate_once(&worker_state, &parsed)
+        }));
+        match outcome {
+            Ok(Ok((body, _hit))) => worker_state.jobs.set(id, JobState::Done(body)),
+            Ok(Err(e)) => {
+                worker_state.jobs.set(id, JobState::Failed(format!("{:#}", e.into_inner())))
+            }
+            Err(_) => worker_state.jobs.set(id, JobState::Failed("job panicked".into())),
+        }
+    }));
+    match submitted {
+        Ok(()) => {
+            let body = Value::object([
+                ("job", Value::from(id)),
+                ("state", Value::from("queued")),
+                ("status_url", Value::from(format!("/jobs/{id}"))),
+            ]);
+            Response::json(202, body.to_json())
+        }
+        Err(e) => {
+            state.jobs.remove(id);
+            Response::json(503, err_body(&e.to_string()))
+        }
+    }
+}
+
+/// Which stage of a simulate job failed — compile errors are the
+/// client's fault (422), simulator errors are ours (500).
+enum SimError {
+    Compile(anyhow::Error),
+    Run(anyhow::Error),
+}
+
+impl SimError {
+    fn into_inner(self) -> anyhow::Error {
+        match self {
+            SimError::Compile(e) | SimError::Run(e) => e,
+        }
+    }
+}
+
+/// One compile(+cache)+simulate job. Returns the rendered report and
+/// whether the compilation came from the cache.
+fn simulate_once(state: &AppState, req: &SimRequest) -> Result<(String, bool), SimError> {
+    let key = program_key(&req.graph, &req.cfg, &req.opts);
+    let (cp, hit) = state
+        .cache
+        .get_or_insert_with(key, || compile(&req.graph, &req.cfg, &req.opts))
+        .map_err(SimError::Compile)?;
+    let report = Cluster::new(&req.cfg)
+        .run(&cp.program)
+        .context("simulating workload")
+        .map_err(SimError::Run)?;
+    Ok((render_report(&cp, &req.cfg, &report), hit))
+}
+
+fn handle_job(state: &Arc<AppState>, path: &str) -> Response {
+    let id_str = &path["/jobs/".len()..];
+    let Ok(id) = id_str.parse::<u64>() else {
+        return Response::json(400, err_body(&format!("bad job id '{id_str}'")));
+    };
+    match state.jobs.status_body(id) {
+        Some(body) => Response::json(200, body),
+        None => Response::json(404, err_body(&format!("no job {id} (unknown or expired)"))),
+    }
+}
+
+fn handle_healthz(state: &Arc<AppState>) -> Response {
+    let body = Value::object([
+        ("status", Value::from(if state.shutting_down() { "draining" } else { "ok" })),
+        ("uptime_ms", Value::from(state.started.elapsed().as_millis() as u64)),
+        ("workers", Value::from(state.server_cfg.workers)),
+        ("queue_depth", Value::from(state.pool.queue_depth())),
+        ("queued_jobs", Value::from(state.pool.queue_len())),
+        ("pending_detached_jobs", Value::from(state.jobs.pending())),
+        ("cache_entries", Value::from(state.cache.len())),
+        ("jobs_executed", Value::from(state.pool.executed())),
+    ]);
+    Response::json(200, body.to_json())
+}
+
+fn handle_metrics(state: &Arc<AppState>) -> Response {
+    use std::fmt::Write;
+    let mut out = String::with_capacity(4096);
+    let _ = writeln!(out, "# HELP snax_requests_total Requests served, by endpoint and status class.");
+    let _ = writeln!(out, "# TYPE snax_requests_total counter");
+    for (i, name) in ENDPOINT_NAMES.iter().enumerate() {
+        let s = &state.metrics.endpoints[i];
+        for (class, counter) in
+            [("2xx", &s.class_2xx), ("4xx", &s.class_4xx), ("5xx", &s.class_5xx)]
+        {
+            let _ = writeln!(
+                out,
+                "snax_requests_total{{endpoint=\"{name}\",class=\"{class}\"}} {}",
+                counter.load(Ordering::Relaxed)
+            );
+        }
+    }
+    let _ = writeln!(out, "# HELP snax_request_latency_us Request latency histogram (microseconds).");
+    let _ = writeln!(out, "# TYPE snax_request_latency_us histogram");
+    for (i, name) in ENDPOINT_NAMES.iter().enumerate() {
+        let s = &state.metrics.endpoints[i];
+        let mut cumulative = 0u64;
+        for (b, &le) in LATENCY_BUCKETS_US.iter().enumerate() {
+            cumulative += s.buckets[b].load(Ordering::Relaxed);
+            let _ = writeln!(
+                out,
+                "snax_request_latency_us_bucket{{endpoint=\"{name}\",le=\"{le}\"}} {cumulative}"
+            );
+        }
+        cumulative += s.buckets[LATENCY_BUCKETS_US.len()].load(Ordering::Relaxed);
+        let _ = writeln!(
+            out,
+            "snax_request_latency_us_bucket{{endpoint=\"{name}\",le=\"+Inf\"}} {cumulative}"
+        );
+        let _ = writeln!(
+            out,
+            "snax_request_latency_us_sum{{endpoint=\"{name}\"}} {}",
+            s.latency_sum_us.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "snax_request_latency_us_count{{endpoint=\"{name}\"}} {cumulative}");
+    }
+    let singles: [(&str, &str, u64); 8] = [
+        ("snax_cache_hits_total", "counter", state.cache.hits()),
+        ("snax_cache_misses_total", "counter", state.cache.misses()),
+        ("snax_cache_insertions_total", "counter", state.cache.insertions()),
+        ("snax_cache_evictions_total", "counter", state.cache.evictions()),
+        ("snax_cache_entries", "gauge", state.cache.len() as u64),
+        ("snax_jobs_executed_total", "counter", state.pool.executed()),
+        ("snax_jobs_panicked_total", "counter", state.pool.panicked()),
+        ("snax_queue_length", "gauge", state.pool.queue_len() as u64),
+    ];
+    for (name, kind, value) in singles {
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        let _ = writeln!(out, "{name} {value}");
+    }
+    let _ = writeln!(out, "# TYPE snax_uptime_seconds gauge");
+    let _ = writeln!(out, "snax_uptime_seconds {}", state.started.elapsed().as_secs());
+    Response::text(200, &out)
+}
+
+// ---------------------------------------------------------------------------
+// Report rendering
+// ---------------------------------------------------------------------------
+
+fn mode_name(opts: &CompileOptions) -> String {
+    format!("{:?}", opts.mode).to_lowercase()
+}
+
+/// Render a simulation report as deterministic JSON, reusing the
+/// [`crate::metrics`] report types and the energy model. Field order is
+/// fixed (BTreeMap) and everything derives from the deterministic
+/// simulation, so identical requests produce byte-identical bodies.
+pub fn render_report(cp: &CompiledProgram, cfg: &ClusterConfig, report: &SimReport) -> String {
+    let e = energy::energy(report, cfg);
+    let c = &report.counters;
+    let units: Vec<Value> = report
+        .units
+        .iter()
+        .map(|u| {
+            Value::object([
+                ("name", Value::from(u.name.as_str())),
+                ("active_cycles", Value::from(u.active_cycles)),
+                ("compute_cycles", Value::from(u.compute_cycles)),
+                ("stall_input_cycles", Value::from(u.stall_input_cycles)),
+                ("stall_output_cycles", Value::from(u.stall_output_cycles)),
+                ("utilization", Value::from(u.utilization())),
+                ("jobs", Value::from(u.jobs)),
+            ])
+        })
+        .collect();
+    let layers: Vec<Value> = report
+        .layers
+        .iter()
+        .map(|(id, l)| {
+            Value::object([
+                ("id", Value::from(*id as u64)),
+                ("name", Value::from(l.name.as_str())),
+                ("busy_cycles", Value::from(l.busy_cycles)),
+                ("span_cycles", Value::from(l.span())),
+            ])
+        })
+        .collect();
+    let key = program_key(&cp.graph, cfg, &cp.options);
+    Value::object([
+        ("net", Value::from(cp.graph.name.as_str())),
+        ("cluster", Value::from(cfg.name.as_str())),
+        ("mode", Value::from(mode_name(&cp.options))),
+        ("inferences", Value::from(cp.options.n_inferences)),
+        ("key", Value::from(format!("{key:016x}"))),
+        ("total_cycles", Value::from(report.total_cycles)),
+        ("ms", Value::from(report.seconds(cfg.freq_mhz) * 1e3)),
+        (
+            "counters",
+            Value::object([
+                ("gemm_compute_cycles", Value::from(c.gemm_compute_cycles)),
+                ("pool_compute_cycles", Value::from(c.pool_compute_cycles)),
+                ("other_accel_cycles", Value::from(c.other_accel_cycles)),
+                ("bank_reads", Value::from(c.bank_reads)),
+                ("bank_writes", Value::from(c.bank_writes)),
+                ("bank_conflict_cycles", Value::from(c.bank_conflict_cycles)),
+                ("axi_beats", Value::from(c.axi_beats)),
+                ("csr_writes", Value::from(c.csr_writes)),
+                ("barrier_events", Value::from(c.barrier_events)),
+                ("macs_retired", Value::from(c.macs_retired)),
+                ("elem_ops_retired", Value::from(c.elem_ops_retired)),
+                (
+                    "core_busy_cycles",
+                    Value::Arr(c.core_busy_cycles.iter().map(|&v| Value::from(v)).collect()),
+                ),
+            ]),
+        ),
+        ("units", Value::Arr(units)),
+        ("layers", Value::Arr(layers)),
+        (
+            "energy",
+            Value::object([
+                ("total_uj", Value::from(e.total_uj())),
+                ("avg_power_mw", Value::from(e.avg_power_mw())),
+            ]),
+        ),
+    ])
+    .to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> Arc<AppState> {
+        Arc::new(AppState::new(&ServerConfig {
+            port: 0,
+            workers: 2,
+            cache_capacity: 8,
+            queue_depth: 16,
+        }))
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            query: String::new(),
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            query: String::new(),
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    #[test]
+    fn request_parsing_validates_fields() {
+        assert!(parse_sim_request(b"not json").is_err());
+        assert!(parse_sim_request(b"{}").is_err());
+        assert!(parse_sim_request(br#"{"net":"nope"}"#).is_err());
+        assert!(parse_sim_request(br#"{"net":"fig6a","cluster":"fig9z"}"#).is_err());
+        assert!(parse_sim_request(br#"{"net":"fig6a","inferences":0}"#).is_err());
+        let ok = parse_sim_request(br#"{"net":"fig6a"}"#).unwrap();
+        assert_eq!(ok.cfg.name, "fig6d");
+        assert_eq!(ok.opts.n_inferences, 1);
+        assert!(!ok.detach);
+        let pip =
+            parse_sim_request(br#"{"net":"dae","pipelined":true,"inferences":4}"#).unwrap();
+        assert_eq!(pip.opts.n_inferences, 4);
+        assert_eq!(mode_name(&pip.opts), "pipelined");
+    }
+
+    #[test]
+    fn inline_toml_cluster_is_accepted() {
+        let toml = ClusterConfig::fig6c().to_toml();
+        let body = Value::object([
+            ("net", Value::from("fig6a")),
+            ("cluster", Value::from(toml)),
+        ])
+        .to_json();
+        let parsed = parse_sim_request(body.as_bytes()).unwrap();
+        assert_eq!(parsed.cfg.name, "fig6c");
+        assert_eq!(parsed.cfg.accelerators.len(), 1);
+    }
+
+    #[test]
+    fn routes_dispatch_and_record_metrics() {
+        let st = state();
+        assert_eq!(route(&st, &get("/healthz")).status, 200);
+        assert_eq!(route(&st, &get("/nope")).status, 404);
+        assert_eq!(route(&st, &get("/simulate")).status, 405);
+        assert_eq!(route(&st, &post("/simulate", "garbage")).status, 400);
+        assert_eq!(st.metrics.requests(Endpoint::Healthz), 1);
+        assert_eq!(st.metrics.requests(Endpoint::Simulate), 1);
+        assert_eq!(st.metrics.requests(Endpoint::Other), 2);
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn simulate_roundtrip_hits_cache_on_second_call() {
+        let st = state();
+        let body = r#"{"net":"fig6a","cluster":"fig6c"}"#;
+        let first = route(&st, &post("/simulate", body));
+        assert_eq!(first.status, 200, "{}", String::from_utf8_lossy(&first.body));
+        let second = route(&st, &post("/simulate", body));
+        assert_eq!(second.status, 200);
+        assert_eq!(first.body, second.body, "reports must be byte-identical");
+        let cache_status = |r: &Response| {
+            r.headers.iter().find(|(k, _)| k == "X-Snax-Cache").map(|(_, v)| v.clone())
+        };
+        assert_eq!(cache_status(&first).as_deref(), Some("miss"));
+        assert_eq!(cache_status(&second).as_deref(), Some("hit"));
+        assert_eq!(st.cache.hits(), 1);
+        // The body is valid JSON with the expected top-level fields.
+        let v = json::parse(std::str::from_utf8(&first.body).unwrap()).unwrap();
+        assert_eq!(v.get("net").unwrap().as_str(), Some("fig6a"));
+        assert_eq!(v.get("cluster").unwrap().as_str(), Some("fig6c"));
+        assert!(v.get("total_cycles").unwrap().as_u64().unwrap() > 0);
+        assert!(v.get("energy").unwrap().get("total_uj").unwrap().as_f64().unwrap() > 0.0);
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn compile_endpoint_reports_program_shape() {
+        let st = state();
+        let resp = route(&st, &post("/compile", r#"{"net":"fig6a"}"#));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(v.get("n_instrs").unwrap().as_u64().unwrap() > 0);
+        assert_eq!(v.get("cached").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("key").unwrap().as_str().unwrap().len(), 16);
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn detached_job_lifecycle() {
+        let st = state();
+        let resp = route(&st, &post("/simulate", r#"{"net":"fig6a","detach":true}"#));
+        assert_eq!(resp.status, 202);
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let id = v.get("job").unwrap().as_u64().unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            let poll = route(&st, &get(&format!("/jobs/{id}")));
+            assert_eq!(poll.status, 200);
+            let pv = json::parse(std::str::from_utf8(&poll.body).unwrap()).unwrap();
+            match pv.get("state").unwrap().as_str().unwrap() {
+                "done" => {
+                    assert!(
+                        pv.get("report").unwrap().get("total_cycles").unwrap().as_u64()
+                            .unwrap()
+                            > 0
+                    );
+                    break;
+                }
+                "failed" => panic!("job failed: {pv:?}"),
+                _ => std::thread::sleep(std::time::Duration::from_millis(10)),
+            }
+            assert!(Instant::now() < deadline, "job did not finish in time");
+        }
+        assert_eq!(route(&st, &get("/jobs/999999")).status, 404);
+        assert_eq!(route(&st, &get("/jobs/banana")).status, 400);
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn metrics_render_in_prometheus_text_shape() {
+        let st = state();
+        let _ = route(&st, &get("/healthz"));
+        let resp = route(&st, &get("/metrics"));
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body).unwrap();
+        assert!(text.contains("snax_requests_total{endpoint=\"healthz\",class=\"2xx\"} 1"));
+        assert!(text.contains("snax_request_latency_us_bucket{endpoint=\"healthz\",le=\"+Inf\"} 1"));
+        assert!(text.contains("snax_cache_hits_total 0"));
+        assert!(text.contains("snax_cache_misses_total 0"));
+        st.pool.shutdown();
+    }
+}

@@ -1,0 +1,279 @@
+//! Sharded, content-addressed compiled-program cache.
+//!
+//! Keys are [`crate::compiler::program_key`] FNV-1a fingerprints of the
+//! `(workload graph, cluster config, compile options)` triple, so a
+//! repeat simulation of an identical workload skips the compiler
+//! entirely and goes straight to [`crate::sim::Cluster::run`] with the
+//! shared [`Arc<CompiledProgram>`].
+//!
+//! Sharding bounds lock contention: each shard is an independent
+//! `Mutex<HashMap>` selected by the low key bits (FNV-1a mixes well, so
+//! low bits spread uniformly), and eviction is least-recently-used per
+//! shard via a monotonic per-shard tick. Hit/miss/eviction counters are
+//! lock-free and feed the `/metrics` endpoint.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::compiler::CompiledProgram;
+
+struct Entry {
+    program: Arc<CompiledProgram>,
+    last_used: u64,
+}
+
+struct Shard {
+    entries: HashMap<u64, Entry>,
+    tick: u64,
+}
+
+pub struct ProgramCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ProgramCache {
+    /// A cache of roughly `capacity` entries over 16 shards.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_shards(capacity, 16)
+    }
+
+    /// Explicit shard count (tests use one shard for deterministic
+    /// eviction). When the requested capacity is below the shard count,
+    /// the shard count shrinks to match so the total never exceeds the
+    /// request; otherwise capacity is divided across shards rounding
+    /// *up*, so at least the requested number of entries fit overall
+    /// (per-shard LRU can still evict early on skewed key
+    /// distributions).
+    pub fn with_shards(capacity: usize, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1).min(capacity.max(1));
+        let per_shard_capacity = capacity.max(1).div_ceil(n_shards);
+        Self {
+            shards: (0..n_shards)
+                .map(|_| Mutex::new(Shard { entries: HashMap::new(), tick: 0 }))
+                .collect(),
+            per_shard_capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a compiled program, counting a hit or miss and bumping
+    /// LRU recency on hit.
+    pub fn get(&self, key: u64) -> Option<Arc<CompiledProgram>> {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.entries.get_mut(&key) {
+            Some(entry) => {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.program.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) a compiled program, evicting the shard's LRU
+    /// entry when at capacity.
+    pub fn insert(&self, key: u64, program: Arc<CompiledProgram>) {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        if shard.entries.len() >= self.per_shard_capacity && !shard.entries.contains_key(&key) {
+            let victim =
+                shard.entries.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
+            if let Some(victim) = victim {
+                shard.entries.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.entries.insert(key, Entry { program, last_used: tick });
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `get` or compile-and-insert. Returns the shared program and
+    /// whether it was a cache hit. Concurrent misses on the same key
+    /// may both compile (last insert wins); compilation is deterministic
+    /// so either result is valid — see DESIGN.md §6.3.
+    pub fn get_or_insert_with(
+        &self,
+        key: u64,
+        build: impl FnOnce() -> Result<CompiledProgram>,
+    ) -> Result<(Arc<CompiledProgram>, bool)> {
+        if let Some(p) = self.get(key) {
+            return Ok((p, true));
+        }
+        let program = Arc::new(build()?);
+        self.insert(key, program.clone());
+        Ok((program, false))
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn insertions(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, program_key, CompileOptions, Graph};
+    use crate::config::ClusterConfig;
+
+    /// A tiny CPU-only workload parameterized by name/seed so tests can
+    /// mint distinct cache keys cheaply.
+    fn tiny(name: &str, seed: u64) -> (Graph, ClusterConfig, CompileOptions) {
+        let mut g = Graph::new(name);
+        let x = g.add_input("x", &[8, 8], seed);
+        let d = g.dense("fc", x, 8, false, 0, true, seed + 1).unwrap();
+        g.mark_output(d);
+        (g, ClusterConfig::fig6b(), CompileOptions::sequential())
+    }
+
+    fn compiled(name: &str, seed: u64) -> (u64, Arc<CompiledProgram>) {
+        let (g, cfg, opts) = tiny(name, seed);
+        let key = program_key(&g, &cfg, &opts);
+        (key, Arc::new(compile(&g, &cfg, &opts).unwrap()))
+    }
+
+    #[test]
+    fn hit_after_miss_and_counters() {
+        let cache = ProgramCache::new(8);
+        let (key, cp) = compiled("a", 1);
+        assert!(cache.get(key).is_none());
+        cache.insert(key, cp.clone());
+        let got = cache.get(key).unwrap();
+        assert!(Arc::ptr_eq(&got, &cp), "cache must share, not copy");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn hash_stability_across_clone_hits_the_same_entry() {
+        let cache = ProgramCache::new(8);
+        let (g, cfg, opts) = tiny("stable", 7);
+        let key1 = program_key(&g, &cfg, &opts);
+        let (g2, cfg2, opts2) = (g.clone(), cfg.clone(), opts.clone());
+        let key2 = program_key(&g2, &cfg2, &opts2);
+        assert_eq!(key1, key2);
+        cache.insert(key1, Arc::new(compile(&g, &cfg, &opts).unwrap()));
+        assert!(cache.get(key2).is_some());
+    }
+
+    #[test]
+    fn lru_eviction_on_single_shard() {
+        // Capacity 2, one shard -> inserting a third entry evicts the
+        // least recently *used* one.
+        let cache = ProgramCache::with_shards(2, 1);
+        let (ka, a) = compiled("a", 10);
+        let (kb, b) = compiled("b", 20);
+        let (kc, c) = compiled("c", 30);
+        cache.insert(ka, a);
+        cache.insert(kb, b);
+        // Touch `a` so `b` becomes LRU.
+        assert!(cache.get(ka).is_some());
+        cache.insert(kc, c);
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(ka).is_some(), "recently used entry survived");
+        assert!(cache.get(kb).is_none(), "LRU entry evicted");
+        assert!(cache.get(kc).is_some());
+    }
+
+    #[test]
+    fn reinsert_at_capacity_does_not_evict_others() {
+        let cache = ProgramCache::with_shards(2, 1);
+        let (ka, a) = compiled("a", 40);
+        let (kb, b) = compiled("b", 50);
+        cache.insert(ka, a.clone());
+        cache.insert(kb, b);
+        cache.insert(ka, a); // replace in place
+        assert_eq!(cache.evictions(), 0);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn tiny_capacity_is_honored_not_inflated_by_sharding() {
+        // capacity 1 over the default 16 shards must not quietly hold
+        // 16 entries.
+        let cache = ProgramCache::new(1);
+        let (ka, a) = compiled("cap-a", 80);
+        let (kb, b) = compiled("cap-b", 90);
+        cache.insert(ka, a);
+        cache.insert(kb, b);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn get_or_insert_with_compiles_once_per_key() {
+        let cache = ProgramCache::new(8);
+        let (g, cfg, opts) = tiny("lazy", 60);
+        let key = program_key(&g, &cfg, &opts);
+        let (p1, hit1) =
+            cache.get_or_insert_with(key, || compile(&g, &cfg, &opts)).unwrap();
+        let (p2, hit2) = cache
+            .get_or_insert_with(key, || panic!("second lookup must not compile"))
+            .unwrap();
+        assert!(!hit1);
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn concurrent_access_is_safe_and_counts() {
+        let cache = Arc::new(ProgramCache::new(8));
+        let (key, cp) = compiled("conc", 70);
+        cache.insert(key, cp);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let cache = cache.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        assert!(cache.get(key).is_some());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.hits(), 800);
+    }
+}

@@ -1,0 +1,399 @@
+//! Minimal HTTP/1.1 framing — request parsing and response
+//! serialization over any `BufRead`/`Write`, so the whole layer unit
+//! tests against in-memory cursors without sockets (no hyper/axum in
+//! this vendored environment; the service shape follows the same
+//! health/metrics/graceful-shutdown conventions).
+//!
+//! Supported subset: request line + headers + `Content-Length` bodies,
+//! keep-alive by default (HTTP/1.1 semantics), explicit `Connection:
+//! close`. Chunked transfer encoding is rejected with 400. Hard limits
+//! bound header and body sizes so a misbehaving client cannot balloon
+//! memory.
+
+use std::io::{BufRead, Read, Write};
+
+/// Upper bound on the total header section (request line included).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Upper bound on a request body.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Socket-level failure (reset, timeout): close the connection
+    /// quietly.
+    Io(std::io::Error),
+    /// Protocol violation: answer 400 and close.
+    Malformed(String),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Io(e) => write!(f, "i/o error: {e}"),
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> Self {
+        HttpError::Io(e)
+    }
+}
+
+fn malformed(msg: impl Into<String>) -> HttpError {
+    HttpError::Malformed(msg.into())
+}
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query string (empty when absent).
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive; only an explicit
+    /// `Connection: close` opts out.
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"), Some(c) if c.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Read one line (through `\n`) in bulk via the read buffer, bounded by
+/// [`MAX_HEADER_BYTES`]. Returns the line without the trailing CRLF/LF,
+/// or `None` at EOF before any byte.
+fn read_line<R: BufRead>(r: &mut R) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let n = r
+        .by_ref()
+        .take(MAX_HEADER_BYTES as u64 + 2)
+        .read_until(b'\n', &mut buf)
+        .map_err(HttpError::Io)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    }
+    if buf.len() > MAX_HEADER_BYTES {
+        return Err(malformed("header line too long"));
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| malformed("non-UTF-8 header"))
+}
+
+/// Read the header block (until the blank line): lowercased names,
+/// trimmed values, total size bounded. Shared by the server-side
+/// request reader and the client-side response reader.
+fn read_headers<R: BufRead>(r: &mut R) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    let mut total_bytes = 0usize;
+    loop {
+        let line = read_line(r)?.ok_or_else(|| malformed("eof inside headers"))?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        total_bytes += line.len();
+        if total_bytes > MAX_HEADER_BYTES {
+            return Err(malformed("header section too large"));
+        }
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| malformed(format!("bad header '{line}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+}
+
+fn content_length(headers: &[(String, String)]) -> Result<usize, HttpError> {
+    match headers.iter().find(|(k, _)| k == "content-length") {
+        Some((_, v)) => {
+            v.parse::<usize>().map_err(|_| malformed(format!("bad content-length '{v}'")))
+        }
+        None => Ok(0),
+    }
+}
+
+/// Read the next request off `r`. `Ok(None)` means the peer closed the
+/// connection cleanly between requests.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, HttpError> {
+    let Some(request_line) = read_line(r)? else {
+        return Ok(None);
+    };
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| malformed("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| malformed("missing request target"))?;
+    let version = parts.next().ok_or_else(|| malformed("missing HTTP version"))?;
+    if parts.next().is_some() || !version.starts_with("HTTP/1.") {
+        return Err(malformed(format!("bad request line '{request_line}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let headers = read_headers(r)?;
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        return Err(malformed("chunked transfer encoding is not supported"));
+    }
+    let body_len = content_length(&headers)?;
+    if body_len > MAX_BODY_BYTES {
+        return Err(malformed(format!("body of {body_len} bytes exceeds limit")));
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+/// A response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    /// Extra headers beyond Content-Type/Content-Length.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Self {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, status_text(self.status))?;
+        write!(w, "Content-Type: {}\r\n", self.content_type)?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side — used by the loopback integration tests and the
+// serve_loadgen example (and handy for manual poking from other tools).
+// ---------------------------------------------------------------------------
+
+/// Write one client request. An empty body still sends
+/// `Content-Length: 0` so the server never waits for more bytes.
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(w, "{method} {path} HTTP/1.1\r\n")?;
+    w.write_all(b"Host: snax\r\n")?;
+    if !keep_alive {
+        w.write_all(b"Connection: close\r\n")?;
+    }
+    if !body.is_empty() {
+        w.write_all(b"Content-Type: application/json\r\n")?;
+    }
+    write!(w, "Content-Length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one response: `(status, headers, body)`. Header names are
+/// lowercased, bodies are framed by `Content-Length` (the only framing
+/// [`Response::write_to`] emits).
+#[allow(clippy::type_complexity)]
+pub fn read_response<R: BufRead>(
+    r: &mut R,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>), HttpError> {
+    let status_line = read_line(r)?.ok_or_else(|| malformed("eof before status line"))?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().ok_or_else(|| malformed("empty status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(malformed(format!("bad status line '{status_line}'")));
+    }
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| malformed("bad status code"))?;
+    let headers = read_headers(r)?;
+    let mut body = vec![0u8; content_length(&headers)?];
+    r.read_exact(&mut body)?;
+    Ok((status, headers, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.query, "");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn parses_post_with_content_length_body() {
+        let req = parse(
+            "POST /simulate?x=1 HTTP/1.1\r\nContent-Length: 4\r\nConnection: close\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/simulate");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.keep_alive());
+    }
+
+    #[test]
+    fn header_names_are_case_insensitive() {
+        let req = parse("GET / HTTP/1.1\r\nX-Thing: Value\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.header("x-thing"), Some("Value"));
+        assert_eq!(req.header("X-THING"), Some("Value"));
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_tolerated() {
+        let req = parse("GET / HTTP/1.1\nHost: x\n\n").unwrap().unwrap();
+        assert_eq!(req.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn eof_between_requests_is_clean_close() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        for raw in [
+            "GET\r\n\r\n",                                    // no target
+            "GET /\r\n\r\n",                                  // no version
+            "GET / SPDY/9\r\n\r\n",                           // wrong protocol
+            "GET / HTTP/1.1 extra\r\n\r\n",                   // trailing junk
+            "GET / HTTP/1.1\r\nBadHeader\r\n\r\n",            // no colon
+            "POST / HTTP/1.1\r\nContent-Length: pony\r\n\r\n", // bad length
+            "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", // chunked
+            "GET / HTTP/1.1\r\nHost: x\r\n",                  // eof inside headers
+        ] {
+            let err = parse(raw).unwrap_err();
+            assert!(matches!(err, HttpError::Malformed(_)), "{raw:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let err = parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap_err();
+        assert!(matches!(err, HttpError::Io(_)), "{err}");
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_up_front() {
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let err = parse(&raw).unwrap_err();
+        assert!(matches!(err, HttpError::Malformed(_)), "{err}");
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_reader() {
+        let resp = Response::json(200, "{\"ok\":true}".into()).with_header("X-Snax-Cache", "hit");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let (status, headers, body) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+        assert_eq!(
+            headers.iter().find(|(k, _)| k == "x-snax-cache").map(|(_, v)| v.as_str()),
+            Some("hit")
+        );
+        assert_eq!(
+            headers.iter().find(|(k, _)| k == "content-type").map(|(_, v)| v.as_str()),
+            Some("application/json")
+        );
+    }
+
+    #[test]
+    fn request_writer_frames_empty_and_nonempty_bodies() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "GET", "/metrics", b"", false).unwrap();
+        let req = read_request(&mut Cursor::new(wire)).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert!(!req.keep_alive());
+
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/simulate", b"{}", true).unwrap();
+        let req = read_request(&mut Cursor::new(wire)).unwrap().unwrap();
+        assert_eq!(req.body, b"{}");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn two_pipelined_requests_parse_sequentially() {
+        let raw = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes().to_vec());
+        let a = read_request(&mut cur).unwrap().unwrap();
+        let b = read_request(&mut cur).unwrap().unwrap();
+        assert_eq!((a.path.as_str(), b.path.as_str()), ("/a", "/b"));
+        assert!(read_request(&mut cur).unwrap().is_none());
+    }
+}

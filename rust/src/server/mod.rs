@@ -1,0 +1,253 @@
+//! `snax serve` — the concurrent compile-and-simulate service layer.
+//!
+//! The single-shot CLI couples one workload to one process; this module
+//! turns the same compiler + simulator into a long-running service so
+//! many clients can submit workloads concurrently (DESIGN.md §6):
+//!
+//! * [`http`] — dependency-light HTTP/1.1 framing over
+//!   `std::net::TcpListener` (no hyper/axum in this environment);
+//! * [`api`] — the endpoints: `POST /compile`, `POST /simulate`,
+//!   `GET /jobs/:id`, `GET /healthz`, `GET /metrics`;
+//! * [`cache`] — sharded content-addressed compiled-program cache keyed
+//!   by [`crate::compiler::program_key`], so repeat simulations skip
+//!   the compiler entirely;
+//! * [`pool`] — bounded worker pool executing compile+simulate jobs
+//!   across cores with 503 backpressure and graceful drain.
+//!
+//! Threading model: one cheap thread per connection parses requests and
+//! writes responses; every heavy job runs on the fixed-size worker pool
+//! (one simulation per worker). SIGINT/SIGTERM (or
+//! [`Server::shutdown`]) flip a shutdown flag: the acceptor stops,
+//! keep-alive connections end after their in-flight response, and the
+//! pool drains queued jobs before the process exits.
+
+pub mod api;
+pub mod cache;
+pub mod http;
+pub mod pool;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServerConfig;
+
+use api::AppState;
+
+pub use api::render_report;
+
+/// How long an idle keep-alive connection may sit between requests.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Acceptor poll interval (the listener is non-blocking so shutdown is
+/// observed promptly).
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// A running service instance. Bind with [`Server::start`], stop with
+/// [`Server::shutdown`] (tests and the load generator run it
+/// in-process; the CLI wraps it in [`run_blocking`]).
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    state: Arc<AppState>,
+}
+
+impl Server {
+    /// Bind 127.0.0.1:`cfg.port` (0 = ephemeral) and start serving.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(AppState::new(&cfg));
+        let accept_state = state.clone();
+        let accept_shutdown = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("snax-accept".into())
+            .spawn(move || accept_loop(listener, accept_state, accept_shutdown))
+            .context("spawning acceptor thread")?;
+        Ok(Server { addr, shutdown, accept_thread: Some(accept_thread), state })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    /// Shared application state (metrics, cache) for in-process
+    /// inspection by tests and the load generator.
+    pub fn state(&self) -> &Arc<AppState> {
+        &self.state
+    }
+
+    /// Graceful shutdown: stop accepting, end keep-alive connections
+    /// after their in-flight response, drain queued jobs, join workers.
+    /// (Dropping a `Server` does the same; this name just makes call
+    /// sites read as intent.)
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    fn teardown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept_thread.take() {
+            let _ = handle.join();
+        }
+        self.state.begin_drain();
+        self.state.pool.shutdown();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<AppState>, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn_state = state.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("snax-conn".into())
+                    .spawn(move || handle_connection(stream, conn_state));
+                if spawned.is_err() {
+                    // Out of threads: back off instead of spinning.
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: Arc<AppState>) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match http::read_request(&mut reader) {
+            Ok(Some(request)) => {
+                let keep_alive = request.keep_alive();
+                let response = api::route(&state, &request);
+                if response.write_to(&mut writer).is_err() {
+                    return;
+                }
+                if !keep_alive || state.shutting_down() {
+                    return;
+                }
+            }
+            // Clean close between requests.
+            Ok(None) => return,
+            Err(http::HttpError::Malformed(msg)) => {
+                let _ = http::Response::text(400, &format!("bad request: {msg}\n"))
+                    .write_to(&mut writer);
+                return;
+            }
+            // Timeout / reset: nothing sensible to send.
+            Err(http::HttpError::Io(_)) => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI entry point: blocking serve with signal-driven shutdown
+// ---------------------------------------------------------------------------
+
+static GOT_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    // No libc crate in this environment; bind the libc `signal` symbol
+    // directly. The handler only flips an atomic flag, which is
+    // async-signal-safe; the run loop below does the actual work.
+    extern "C" fn on_signal(_signum: i32) {
+        GOT_SIGNAL.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler = on_signal as extern "C" fn(i32);
+    unsafe {
+        signal(SIGINT, handler as usize);
+        signal(SIGTERM, handler as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Run the service until SIGINT/SIGTERM, then shut down gracefully.
+/// This is `snax serve`.
+pub fn run_blocking(cfg: ServerConfig) -> Result<()> {
+    install_signal_handlers();
+    let server = Server::start(cfg)?;
+    println!(
+        "snax serve listening on http://{} ({} workers, cache {} entries, queue depth {})",
+        server.addr(),
+        server.state().server_cfg.workers,
+        server.state().server_cfg.cache_capacity,
+        server.state().server_cfg.queue_depth,
+    );
+    while !GOT_SIGNAL.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("signal received — draining jobs and shutting down");
+    server.shutdown();
+    println!("snax serve stopped");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_config() -> ServerConfig {
+        ServerConfig { port: 0, workers: 2, cache_capacity: 8, queue_depth: 16 }
+    }
+
+    #[test]
+    fn starts_on_ephemeral_port_and_shuts_down() {
+        let server = Server::start(test_config()).unwrap();
+        assert_ne!(server.port(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let bad = ServerConfig { workers: 0, ..test_config() };
+        assert!(Server::start(bad).is_err());
+    }
+
+    #[test]
+    fn drop_without_explicit_shutdown_is_clean() {
+        let server = Server::start(test_config()).unwrap();
+        drop(server);
+    }
+
+    #[test]
+    fn two_servers_bind_distinct_ports() {
+        let a = Server::start(test_config()).unwrap();
+        let b = Server::start(test_config()).unwrap();
+        assert_ne!(a.port(), b.port());
+        a.shutdown();
+        b.shutdown();
+    }
+}

@@ -1,0 +1,230 @@
+//! Fixed worker thread pool with a bounded job queue.
+//!
+//! Connection threads are cheap and numerous; the heavy work
+//! (compile + cycle-accurate simulation) must not be. The pool caps
+//! concurrent simulations at the configured worker count so the service
+//! runs one job per core instead of thrashing, and the bounded queue
+//! turns overload into immediate backpressure ([`SubmitError::Full`] →
+//! HTTP 503) rather than unbounded memory growth.
+//!
+//! Shutdown is graceful: [`WorkerPool::shutdown`] stops accepting new
+//! work, lets workers drain everything already queued, then joins them.
+//! A panicking job is caught and counted — it must not take a worker
+//! (and every later job on that worker) down with it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+pub type Task = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity — shed load.
+    Full,
+    /// Pool is shutting down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full => write!(f, "job queue is full"),
+            SubmitError::ShuttingDown => write!(f, "worker pool is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+struct Inner {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    depth: usize,
+    executed: AtomicU64,
+    panicked: AtomicU64,
+}
+
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize, queue_depth: usize) -> Self {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            depth: queue_depth.max(1),
+            executed: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("snax-worker-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        Self { inner, handles: Mutex::new(handles) }
+    }
+
+    /// Enqueue a job, or refuse immediately under backpressure.
+    pub fn submit(&self, task: Task) -> Result<(), SubmitError> {
+        {
+            let mut queue = self.inner.queue.lock().unwrap();
+            // Checked under the queue lock: workers only exit while
+            // holding it (empty queue + flag), so a task accepted here
+            // is guaranteed to be drained — never enqueued into a pool
+            // whose workers are already gone.
+            if self.inner.shutdown.load(Ordering::SeqCst) {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if queue.len() >= self.inner.depth {
+                return Err(SubmitError::Full);
+            }
+            queue.push_back(task);
+        }
+        self.inner.available.notify_one();
+        Ok(())
+    }
+
+    /// Jobs currently waiting (not counting ones being executed).
+    pub fn queue_len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.depth
+    }
+
+    /// Jobs completed (including ones that panicked).
+    pub fn executed(&self) -> u64 {
+        self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    pub fn panicked(&self) -> u64 {
+        self.inner.panicked.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: refuse new submissions, drain the queue, join
+    /// every worker. Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.available.notify_all();
+        let mut handles = self.handles.lock().unwrap();
+        for handle in handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let task = {
+            let mut queue = inner.queue.lock().unwrap();
+            loop {
+                if let Some(task) = queue.pop_front() {
+                    break Some(task);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                queue = inner.available.wait(queue).unwrap();
+            }
+        };
+        let Some(task) = task else { return };
+        // A panic in one job must not kill the worker: the pool would
+        // silently lose capacity for the rest of the process lifetime.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_err() {
+            inner.panicked.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.executed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    #[test]
+    fn executes_submitted_tasks() {
+        let pool = WorkerPool::new(2, 16);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..10 {
+            let counter = counter.clone();
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            }))
+            .unwrap();
+        }
+        for _ in 0..10 {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        let pool = WorkerPool::new(1, 1);
+        // Block the single worker...
+        let (block_tx, block_rx) = mpsc::channel::<()>();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        pool.submit(Box::new(move || {
+            started_tx.send(()).unwrap();
+            let _ = block_rx.recv();
+        }))
+        .unwrap();
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        // ...fill the queue...
+        pool.submit(Box::new(|| {})).unwrap();
+        // ...and the next submission bounces.
+        assert_eq!(pool.submit(Box::new(|| {})).unwrap_err(), SubmitError::Full);
+        block_tx.send(()).unwrap();
+        pool.shutdown();
+        assert_eq!(pool.executed(), 2);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work() {
+        let pool = WorkerPool::new(1, 64);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let counter = counter.clone();
+            pool.submit(Box::new(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }))
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+        assert_eq!(pool.executed(), 20);
+        assert_eq!(pool.submit(Box::new(|| {})).unwrap_err(), SubmitError::ShuttingDown);
+    }
+
+    #[test]
+    fn panicking_task_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1, 16);
+        pool.submit(Box::new(|| panic!("job blew up"))).unwrap();
+        let (tx, rx) = mpsc::channel();
+        pool.submit(Box::new(move || tx.send(()).unwrap())).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(pool.panicked(), 1);
+    }
+}

@@ -1001,6 +1001,24 @@ mod tests {
     }
 
     #[test]
+    fn simulation_types_cross_threads() {
+        // The `snax serve` worker pool runs one full compile+simulate
+        // per job on its own thread: the cluster, the shared compiled
+        // program, and the report all have to be Send (and the shared
+        // program Sync, since many workers simulate the same Arc'd
+        // compilation concurrently). Compile-time proof:
+        fn assert_send<T: Send>() {}
+        fn assert_sync<T: Sync>() {}
+        assert_send::<Cluster>();
+        assert_sync::<Cluster>();
+        assert_send::<SimReport>();
+        assert_send::<Program>();
+        assert_sync::<Program>();
+        assert_send::<crate::compiler::CompiledProgram>();
+        assert_sync::<crate::compiler::CompiledProgram>();
+    }
+
+    #[test]
     fn deadlock_detection() {
         let cfg = ClusterConfig::fig6c();
         // Two cores, each waiting on a different barrier -> deadlock.

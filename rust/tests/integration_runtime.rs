@@ -1,7 +1,9 @@
 //! Integration: the PJRT runtime against `artifacts/` (requires
-//! `make artifacts`). Verifies the cross-language contract: the AOT
-//! JAX/Pallas artifacts compute bit-identically to the Rust datapath
-//! twin for every entry point.
+//! `make artifacts` and a `--features pjrt` build; the whole suite is
+//! compiled out otherwise). Verifies the cross-language contract: the
+//! AOT JAX/Pallas artifacts compute bit-identically to the Rust
+//! datapath twin for every entry point.
+#![cfg(feature = "pjrt")]
 
 use snax::models::lcg::lcg_i8;
 use snax::runtime::{ArtifactStore, DType, Tensor};

@@ -1,0 +1,210 @@
+//! Loopback integration for `snax serve`: start the service on an
+//! ephemeral port, drive it over real sockets, and hold it to the
+//! service contract —
+//!
+//! * concurrent `POST /simulate` requests return reports byte-identical
+//!   to the direct library path (compile + `Cluster::run` in-process);
+//! * a repeat request for the same `(net, cluster, options)` triple is
+//!   served from the content-addressed program cache (visible in the
+//!   `X-Snax-Cache` header and the `/metrics` hit counter);
+//! * health, job, and error endpoints behave.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::{ClusterConfig, ServerConfig};
+use snax::runtime::json;
+use snax::server::{http, render_report, Server};
+use snax::sim::Cluster;
+
+fn start_server() -> Server {
+    Server::start(ServerConfig { port: 0, workers: 4, cache_capacity: 16, queue_depth: 64 })
+        .expect("server starts on an ephemeral port")
+}
+
+/// One request over a fresh connection: `(status, headers, body)`.
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    http::write_request(&mut writer, method, path, body.as_bytes(), false).unwrap();
+    http::read_response(&mut reader).expect("response")
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn body_str(body: &[u8]) -> &str {
+    std::str::from_utf8(body).expect("utf-8 body")
+}
+
+#[test]
+fn concurrent_simulations_match_library_path_and_share_cache() {
+    let server = start_server();
+    let addr = server.addr();
+
+    // Direct library path: same triple the requests below will ask for.
+    let graph = snax::models::fig6a_graph();
+    let cfg = ClusterConfig::fig6d();
+    let opts = CompileOptions::sequential();
+    let compiled = compile(&graph, &cfg, &opts).unwrap();
+    let report = Cluster::new(&cfg).run(&compiled.program).unwrap();
+    let expected = render_report(&compiled, &cfg, &report);
+
+    // >= 4 concurrent identical simulations over real sockets.
+    let body = r#"{"net":"fig6a","cluster":"fig6d"}"#;
+    let workers: Vec<_> = (0..4)
+        .map(|_| std::thread::spawn(move || request(addr, "POST", "/simulate", body)))
+        .collect();
+    for handle in workers {
+        let (status, headers, resp) = handle.join().unwrap();
+        assert_eq!(status, 200, "simulate failed: {}", body_str(&resp));
+        assert_eq!(
+            body_str(&resp),
+            expected,
+            "service report != direct library report"
+        );
+        assert!(header(&headers, "x-snax-cache").is_some());
+    }
+
+    // A fifth identical request must come from the program cache.
+    let (status, headers, resp) = request(addr, "POST", "/simulate", body);
+    assert_eq!(status, 200);
+    assert_eq!(body_str(&resp), expected);
+    assert_eq!(header(&headers, "x-snax-cache"), Some("hit"));
+
+    // ...and the /metrics hit counter agrees.
+    let (status, _, metrics) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let text = body_str(&metrics);
+    let hits: u64 = text
+        .lines()
+        .find(|l| l.split_whitespace().next() == Some("snax_cache_hits_total"))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no snax_cache_hits_total in:\n{text}"));
+    assert!(hits >= 1, "expected >=1 cache hit, got {hits}:\n{text}");
+    assert!(text.contains("snax_request_latency_us_bucket{endpoint=\"simulate\""));
+
+    server.shutdown();
+}
+
+#[test]
+fn distinct_options_get_distinct_cached_programs() {
+    let server = start_server();
+    let addr = server.addr();
+    let (s1, _, b1) =
+        request(addr, "POST", "/simulate", r#"{"net":"fig6a","cluster":"fig6c"}"#);
+    let (s2, _, b2) = request(
+        addr,
+        "POST",
+        "/simulate",
+        r#"{"net":"fig6a","cluster":"fig6c","pipelined":true,"inferences":4}"#,
+    );
+    assert_eq!((s1, s2), (200, 200));
+    let v1 = json::parse(body_str(&b1)).unwrap();
+    let v2 = json::parse(body_str(&b2)).unwrap();
+    assert_ne!(
+        v1.get("key").unwrap().as_str(),
+        v2.get("key").unwrap().as_str(),
+        "different options must fingerprint differently"
+    );
+    assert_eq!(v2.get("mode").unwrap().as_str(), Some("pipelined"));
+    assert!(
+        v2.get("total_cycles").unwrap().as_u64().unwrap()
+            > v1.get("total_cycles").unwrap().as_u64().unwrap(),
+        "4 pipelined inferences should cost more total cycles than 1"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn healthz_compile_and_error_paths() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let (status, _, body) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let v = json::parse(body_str(&body)).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(v.get("workers").unwrap().as_u64(), Some(4));
+
+    let (status, headers, body) =
+        request(addr, "POST", "/compile", r#"{"net":"dae","cluster":"fig6d"}"#);
+    assert_eq!(status, 200, "{}", body_str(&body));
+    let v = json::parse(body_str(&body)).unwrap();
+    assert!(v.get("n_instrs").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(header(&headers, "x-snax-cache"), Some("miss"));
+
+    // Malformed JSON, unknown net, unknown path, wrong method.
+    assert_eq!(request(addr, "POST", "/simulate", "{oops").0, 400);
+    assert_eq!(request(addr, "POST", "/simulate", r#"{"net":"vgg16"}"#).0, 400);
+    assert_eq!(request(addr, "GET", "/nope", "").0, 404);
+    assert_eq!(request(addr, "GET", "/simulate", "").0, 405);
+
+    server.shutdown();
+}
+
+#[test]
+fn detached_jobs_poll_to_completion_over_sockets() {
+    let server = start_server();
+    let addr = server.addr();
+    let (status, _, body) =
+        request(addr, "POST", "/simulate", r#"{"net":"fig6a","detach":true}"#);
+    assert_eq!(status, 202, "{}", body_str(&body));
+    let v = json::parse(body_str(&body)).unwrap();
+    let id = v.get("job").unwrap().as_u64().unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let report = loop {
+        let (status, _, poll) = request(addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(status, 200);
+        let pv = json::parse(body_str(&poll)).unwrap();
+        match pv.get("state").unwrap().as_str().unwrap() {
+            "done" => break pv,
+            "failed" => panic!("detached job failed: {}", body_str(&poll)),
+            _ => std::thread::sleep(Duration::from_millis(20)),
+        }
+        assert!(Instant::now() < deadline, "detached job never finished");
+    };
+    assert!(
+        report.get("report").unwrap().get("total_cycles").unwrap().as_u64().unwrap() > 0
+    );
+    assert_eq!(request(addr, "GET", "/jobs/999999", "").0, 404);
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_connection_serves_many_requests() {
+    let server = start_server();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut last_body = None;
+    for _ in 0..3 {
+        http::write_request(
+            &mut writer,
+            "POST",
+            "/simulate",
+            br#"{"net":"fig6a","cluster":"fig6b"}"#,
+            true,
+        )
+        .unwrap();
+        let (status, _, body) = http::read_response(&mut reader).unwrap();
+        assert_eq!(status, 200);
+        if let Some(prev) = last_body.replace(body.clone()) {
+            assert_eq!(prev, body, "keep-alive responses must stay identical");
+        }
+    }
+    server.shutdown();
+}
