@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt serve serve-smoke bench artifacts
+.PHONY: build test fmt serve serve-smoke bench bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -25,7 +25,18 @@ serve: build
 serve-smoke:
 	cargo test -q --test integration_server
 
+# Simulator-throughput bench: runs both engines on every leg and
+# rewrites BENCH_sim_speed.json (the cross-PR perf trajectory record).
 bench:
+	cargo bench --bench sim_speed
+
+# Fast CI variant: 2 reps, fail below the checked-in floor
+# (rust/benches/sim_speed_floor.json).
+bench-smoke:
+	SNAX_BENCH_REPS=2 SNAX_BENCH_ENFORCE_FLOOR=1 cargo bench --bench sim_speed
+
+# Every figure/table reproduction bench.
+bench-all:
 	cargo bench
 
 # AOT-lower the JAX/Pallas entry points to artifacts/ (build-time only;

@@ -1,64 +1,136 @@
 //! Simulator performance — the L3 hot path for the §Perf optimization
 //! pass. Measures wall-clock simulation throughput (simulated cycles
-//! per host second) on the two characteristic workload shapes:
+//! per host second) on the characteristic workload shapes, for BOTH
+//! engines (event-driven vs. the exact reference stepper):
 //!
-//! * memory-active: pipelined Fig. 6a (streamers + arbitration ticking
-//!   every cycle);
-//! * fast-forward: the RV32I-only baseline (dominated by Sw spans the
-//!   engine skips over).
+//! * memory-active: pipelined Fig. 6a (streamers + arbitration active
+//!   every cycle) — the leg that bounds `snax serve` throughput;
+//! * fast-forward: the RV32I-only baseline (dominated by Sw spans);
+//! * mixed / dma-heavy: resnet8 and the Deep AutoEncoder.
 //!
-//! Run: `cargo bench --bench sim_speed`
+//! Emits a machine-readable `BENCH_sim_speed.json` at the workspace
+//! root so the perf trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --bench sim_speed` (or `make bench`).
+//! Knobs: `SNAX_BENCH_REPS=N` (default 20),
+//! `SNAX_BENCH_ENFORCE_FLOOR=1` (CI: fail when the memory-active leg
+//! drops below `rust/benches/sim_speed_floor.json`).
 
 use std::time::Instant;
 
 use snax::compiler::{compile, CompileOptions};
 use snax::config::ClusterConfig;
+use snax::isa::Program;
 use snax::models;
-use snax::sim::Cluster;
+use snax::runtime::json::{parse, Value};
+use snax::sim::{Cluster, SimMode};
 
-fn bench<F: FnMut() -> u64>(name: &str, reps: u32, mut f: F) {
-    // Warm-up.
-    let cycles = f();
+struct Leg {
+    name: &'static str,
+    sim_cycles: u64,
+    event_mcycs: f64,
+    exact_mcycs: f64,
+}
+
+fn measure(cluster: &Cluster, program: &Program, mode: SimMode, reps: u32) -> (u64, f64) {
+    // Warm-up run (also yields the per-run cycle count).
+    let cycles = cluster.run_mode(program, mode).unwrap().total_cycles;
     let t0 = Instant::now();
-    let mut total_cycles = 0u64;
+    let mut total = 0u64;
     for _ in 0..reps {
-        total_cycles += f();
+        total += cluster.run_mode(program, mode).unwrap().total_cycles;
     }
-    let dt = t0.elapsed().as_secs_f64();
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    (cycles, total as f64 / dt / 1e6)
+}
+
+fn leg(name: &'static str, cluster: &Cluster, program: &Program, reps: u32) -> Leg {
+    let (sim_cycles, event_mcycs) = measure(cluster, program, SimMode::Event, reps);
+    let (_, exact_mcycs) = measure(cluster, program, SimMode::Exact, reps);
     println!(
-        "{name}: {cycles} sim-cycles/run, {reps} runs in {:.3}s -> {:.2} Mcyc/s, {:.2} ms/run",
-        dt,
-        total_cycles as f64 / dt / 1e6,
-        dt * 1e3 / reps as f64
+        "{name}: {sim_cycles} sim-cycles/run -> event {event_mcycs:.2} Mcyc/s, \
+         exact {exact_mcycs:.2} Mcyc/s ({:.2}x)",
+        event_mcycs / exact_mcycs.max(1e-9)
     );
+    Leg { name, sim_cycles, event_mcycs, exact_mcycs }
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
 }
 
 fn main() {
+    let reps: u32 = std::env::var("SNAX_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
     let g = models::fig6a_graph();
 
+    const MEMORY_ACTIVE: &str = "pipelined fig6a (memory-active)";
     let cfg = ClusterConfig::fig6d();
     let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
     let cluster = Cluster::new(&cfg);
-    bench("pipelined fig6a (memory-active)", 20, || {
-        cluster.run(&cp.program).unwrap().total_cycles
-    });
+    let mut legs = Vec::new();
+    legs.push(leg(MEMORY_ACTIVE, &cluster, &cp.program, reps));
 
     let cfg_b = ClusterConfig::fig6b();
     let cp_b = compile(&g, &cfg_b, &CompileOptions::sequential()).unwrap();
     let cluster_b = Cluster::new(&cfg_b);
-    bench("cpu-only fig6a (fast-forward)", 20, || {
-        cluster_b.run(&cp_b.program).unwrap().total_cycles
-    });
+    legs.push(leg("cpu-only fig6a (fast-forward)", &cluster_b, &cp_b.program, reps));
 
     let rn = models::resnet8_graph();
     let cp_r = compile(&rn, &cfg, &CompileOptions::sequential()).unwrap();
-    bench("resnet8 sequential (mixed)", 10, || {
-        cluster.run(&cp_r.program).unwrap().total_cycles
-    });
+    legs.push(leg("resnet8 sequential (mixed)", &cluster, &cp_r.program, reps.div_ceil(2)));
 
     let dae = models::dae_graph();
     let cp_d = compile(&dae, &cfg, &CompileOptions::sequential()).unwrap();
-    bench("dae sequential (dma-heavy)", 20, || {
-        cluster.run(&cp_d.program).unwrap().total_cycles
-    });
+    legs.push(leg("dae sequential (dma-heavy)", &cluster, &cp_d.program, reps));
+
+    // Machine-readable trajectory record at the workspace root.
+    let legs_json: Vec<Value> = legs
+        .iter()
+        .map(|l| {
+            Value::object([
+                ("name", Value::from(l.name)),
+                ("sim_cycles", Value::from(l.sim_cycles)),
+                ("event_mcyc_per_s", Value::from(round2(l.event_mcycs))),
+                ("exact_mcyc_per_s", Value::from(round2(l.exact_mcycs))),
+                ("speedup", Value::from(round2(l.event_mcycs / l.exact_mcycs.max(1e-9)))),
+            ])
+        })
+        .collect();
+    let doc = Value::object([
+        ("bench", Value::from("sim_speed")),
+        ("engine_default", Value::from("event")),
+        ("reps", Value::from(reps)),
+        ("legs", Value::from(legs_json)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_speed.json");
+    std::fs::write(out, doc.to_json()).expect("writing BENCH_sim_speed.json");
+    println!("wrote {out}");
+
+    // Regression floor (CI bench-smoke): a deliberately conservative
+    // ratchet — raise it as the trajectory accumulates.
+    let enforce = std::env::var("SNAX_BENCH_ENFORCE_FLOOR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if enforce {
+        let floor_path = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/sim_speed_floor.json");
+        let floor_raw = std::fs::read_to_string(floor_path).expect("reading sim_speed_floor.json");
+        let floor = parse(&floor_raw).expect("parsing sim_speed_floor.json");
+        let min = floor
+            .get("memory_active_event_mcyc_per_s_floor")
+            .and_then(|v| v.as_f64())
+            .expect("floor key missing");
+        let got = legs
+            .iter()
+            .find(|l| l.name == MEMORY_ACTIVE)
+            .expect("memory-active leg missing")
+            .event_mcycs;
+        if got < min {
+            eprintln!("FAIL: memory-active leg {got:.2} Mcyc/s below floor {min:.2} Mcyc/s");
+            std::process::exit(1);
+        }
+        println!("floor check ok: {got:.2} >= {min:.2} Mcyc/s");
+    }
 }

@@ -6,6 +6,8 @@
 //!
 //! ```text
 //! snax simulate --net fig6a --cluster fig6d [--pipelined] [--inferences N]
+//!               [--engine event|exact] (event-driven fast engine vs.
+//!               the exact per-cycle reference; identical reports)
 //! snax serve    [--port P] [--workers N] [--cache N] [--queue N]
 //! snax fig8     (the heterogeneous-acceleration cascade)
 //! snax roofline --tiles 16,32,64,96,128 [--baseline]
@@ -86,16 +88,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     } else {
         CompileOptions::sequential().with_inferences(n)
     };
+    let mode = match args.get("engine", "event").as_str() {
+        "event" => snax::sim::SimMode::Event,
+        "exact" => snax::sim::SimMode::Exact,
+        other => bail!("unknown engine '{other}' (expected event|exact)"),
+    };
     let cp = compile(&g, &cfg, &opts)?;
     let trace_path = args.flags.get("trace").cloned();
     let report = if let Some(path) = &trace_path {
-        let (report, trace) = Cluster::new(&cfg).run_traced(&cp.program)?;
+        let (report, trace) = Cluster::new(&cfg).run_traced_mode(&cp.program, mode)?;
         std::fs::write(path, trace.to_chrome_json())
             .with_context(|| format!("writing trace to {path}"))?;
         println!("wrote chrome trace ({} events) to {path}", trace.events.len());
         report
     } else {
-        Cluster::new(&cfg).run(&cp.program)?
+        Cluster::new(&cfg).run_mode(&cp.program, mode)?
     };
 
     println!(
@@ -301,6 +308,7 @@ fn help() {
          commands:\n\
          \u{20}  simulate --net fig6a|dae|resnet8 --cluster fig6b|fig6c|fig6d|file.toml\n\
          \u{20}           [--pipelined] [--inferences N] [--trace out.json]\n\
+         \u{20}           [--engine event|exact]\n\
          \u{20}  serve     [--port 8080] [--workers N] [--cache entries] [--queue depth]\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6)\n\
          \u{20}  fig8      (the heterogeneous-acceleration cascade)\n\

@@ -29,6 +29,30 @@ pub enum EmitRule {
     Prorated { total: u64 },
 }
 
+impl EmitRule {
+    /// True when an output beat is produced on every compute step (the
+    /// event engine's emit-every-cycle lockstep class: `EveryK(1)`, or
+    /// `Prorated` with one beat per step).
+    pub fn every_step(&self, steps: u64) -> bool {
+        match *self {
+            EmitRule::EveryK(k) => k == 1,
+            EmitRule::Prorated { total } => total == steps,
+        }
+    }
+
+    /// Number of compute steps starting from `steps_done` that are
+    /// guaranteed emission-free — the batching window the event engine
+    /// may advance without touching the write streamer. `None` for
+    /// rules without a closed-form window (prorated emission spreads
+    /// beats by integer rounding; every-step rules have no window).
+    pub fn emission_free_steps(&self, steps_done: u64) -> Option<u64> {
+        match *self {
+            EmitRule::EveryK(k) if k >= 2 => Some(k - 1 - steps_done % k),
+            _ => None,
+        }
+    }
+}
+
 /// One input stream: its dataflow plan plus how often the datapath pops
 /// a beat (every `consume_every` compute steps).
 #[derive(Debug, Clone)]
@@ -88,5 +112,28 @@ mod tests {
             assert_eq!(model_for(kind).kind(), kind);
             assert!(model_for(kind).n_csrs() > 0);
         }
+    }
+
+    #[test]
+    fn emission_windows_match_per_step_rule() {
+        // Reference: will_emit as computed by the per-cycle stepper.
+        let will_emit = |rule: &EmitRule, sd: u64, steps: u64, emitted: u64| match *rule {
+            EmitRule::EveryK(k) => (sd + 1) % k == 0,
+            EmitRule::Prorated { total } => emitted < ((sd + 1) * total) / steps.max(1),
+        };
+        let k18 = EmitRule::EveryK(18);
+        for sd in 0..40u64 {
+            let win = k18.emission_free_steps(sd).unwrap();
+            for j in 0..win {
+                assert!(!will_emit(&k18, sd + j, 180, 0), "sd={sd} j={j}");
+            }
+            assert!(will_emit(&k18, sd + win, 180, 0), "sd={sd}");
+        }
+        assert!(EmitRule::EveryK(1).every_step(64));
+        assert!(!EmitRule::EveryK(2).every_step(64));
+        assert!(EmitRule::Prorated { total: 64 }.every_step(64));
+        assert!(!EmitRule::Prorated { total: 16 }.every_step(64));
+        assert!(EmitRule::EveryK(1).emission_free_steps(5).is_none());
+        assert!(EmitRule::Prorated { total: 16 }.emission_free_steps(5).is_none());
     }
 }

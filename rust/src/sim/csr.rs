@@ -38,10 +38,9 @@ impl CsrFile {
     /// Attempt a staged-register write. Returns false (caller stalls) if
     /// the interface can't accept it this cycle.
     pub fn try_write(&mut self, reg: u16, val: u64, unit_busy: bool) -> bool {
-        if !self.double_buffer && (unit_busy || self.pending.is_some()) {
-            return false;
-        }
-        if self.pending.is_some() && !self.double_buffer {
+        // Keep this condition textually identical to `write_would_stall`
+        // — the event engine's span planner relies on the mirror.
+        if self.write_would_stall(unit_busy) {
             return false;
         }
         let Some(slot) = self.staged.get_mut(reg as usize) else {
@@ -57,12 +56,24 @@ impl CsrFile {
     /// the shadow slot is occupied (double-buffer full) or — without
     /// double buffering — the unit is still busy.
     pub fn try_launch(&mut self, layer: u16, unit_busy: bool) -> bool {
-        if self.pending.is_some() || (!self.double_buffer && unit_busy) {
+        if self.launch_would_stall(unit_busy) {
             self.launch_stall_cycles += 1;
             return false;
         }
         self.pending = Some(PendingJob { regs: self.staged.clone(), layer });
         true
+    }
+
+    /// Would [`try_write`](Self::try_write) stall this cycle? Pure query
+    /// for the event engine's span planner: the answer is stable for as
+    /// long as `unit_busy` and the shadow slot don't change.
+    pub fn write_would_stall(&self, unit_busy: bool) -> bool {
+        !self.double_buffer && (unit_busy || self.pending.is_some())
+    }
+
+    /// Would [`try_launch`](Self::try_launch) stall this cycle?
+    pub fn launch_would_stall(&self, unit_busy: bool) -> bool {
+        self.pending.is_some() || (!self.double_buffer && unit_busy)
     }
 
     /// Unit-side: take the pending job to start executing it.
@@ -102,6 +113,25 @@ mod tests {
         assert!(c.try_launch(0, false));
         // With a pending job staged writes also stall (single bank).
         assert!(!c.try_write(1, 9, false));
+    }
+
+    #[test]
+    fn stall_predicates_mirror_try_ops() {
+        for db in [true, false] {
+            for busy in [true, false] {
+                for pend in [true, false] {
+                    let mut c = CsrFile::new(4, db);
+                    if pend {
+                        // Stage a pending job (needs a write+launch window).
+                        assert!(c.try_write(0, 1, false));
+                        assert!(c.try_launch(0, false));
+                    }
+                    assert_eq!(!c.write_would_stall(busy), c.try_write(1, 2, busy));
+                    let predicted = !c.launch_would_stall(busy);
+                    assert_eq!(predicted, c.try_launch(0, busy));
+                }
+            }
+        }
     }
 
     #[test]

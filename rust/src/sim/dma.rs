@@ -10,13 +10,27 @@ use anyhow::{bail, Result};
 
 use crate::isa::{dma_csr as csr, dma_dir};
 
-use super::streamer::{AguLoop, BeatPattern, StreamPlan};
+use super::streamer::{AguLoop, BeatPattern, StreamPlan, Streamer};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DmaDir {
     ExtToSpm,
     SpmToExt,
     SpmToSpm,
+}
+
+/// A provably-uniform DMA regime (see [`DmaJob::steady_state`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DmaSteadyState {
+    /// Upper bound on uniform cycles from here. Per-beat bank
+    /// cleanliness is checked separately by the span planner.
+    pub max_cycles: u64,
+    /// The SPM read streamer issues + completes one beat per cycle.
+    pub read_streaming: bool,
+    /// The SPM write streamer issues + completes one beat per cycle.
+    pub write_streaming: bool,
+    /// Each cycle crosses the AXI boundary (bumps `Counters::axi_beats`).
+    pub axi: bool,
 }
 
 /// A decoded 2-D DMA descriptor.
@@ -81,6 +95,94 @@ impl DmaJob {
         self.make_plan(self.dst, self.dst_stride, port_bytes, word_bytes)
     }
 
+    /// Classify the engine's current state for the event-driven span
+    /// planner: `Some` means every following cycle (up to `max_cycles`,
+    /// and as long as each SPM beat is bank-clean) issues one SPM beat,
+    /// completes it, and moves one beat across the AXI/FIFO hop — with
+    /// no stalls and no FIFO-level drift, so the per-cycle deltas are
+    /// uniform and can be applied in closed form. `None` while ramping
+    /// up, draining, or recovering from a bank conflict; the caller
+    /// then steps exact cycles until the steady regime re-establishes.
+    pub fn steady_state(
+        &self,
+        reader: &Streamer,
+        writer: &Streamer,
+        axi_remaining: u64,
+    ) -> Option<DmaSteadyState> {
+        if axi_remaining == 0 {
+            return None; // drain phase
+        }
+        match self.dir {
+            DmaDir::ExtToSpm => {
+                // One AXI beat lands in the write FIFO per cycle; the
+                // SPM writer re-issues it the same cycle. Uniform iff a
+                // beat is buffered (fifo >= 1) and none is mid-flight.
+                if writer.busy() || writer.fifo == 0 || !writer.active() {
+                    return None;
+                }
+                let beats_left = writer.beats_total - writer.beat_idx;
+                if beats_left == 0 {
+                    return None;
+                }
+                Some(DmaSteadyState {
+                    max_cycles: axi_remaining.min(beats_left),
+                    read_streaming: false,
+                    write_streaming: true,
+                    axi: true,
+                })
+            }
+            DmaDir::SpmToExt => {
+                // The SPM reader fetches one beat per cycle; AXI drains
+                // one from the FIFO the same cycle (net level constant).
+                if reader.busy() || !reader.active() || reader.fifo >= reader.fifo_depth {
+                    return None;
+                }
+                let beats_left = reader.beats_total - reader.beat_idx;
+                if beats_left == 0 {
+                    return None;
+                }
+                // Reader-side retirement ignores the FIFO level, so in
+                // the fifo==0 regime (axi_remaining == beats_left) the
+                // job retires on the same cycle the last beat moves —
+                // that cycle must be stepped exactly, not spanned. With
+                // fifo >= 1 the trailing drain cycles guarantee the
+                // retire falls after the span.
+                let base = axi_remaining.min(beats_left);
+                let max_cycles = if reader.fifo == 0 { base.saturating_sub(1) } else { base };
+                if max_cycles == 0 {
+                    return None;
+                }
+                Some(DmaSteadyState {
+                    max_cycles,
+                    read_streaming: true,
+                    write_streaming: false,
+                    axi: true,
+                })
+            }
+            DmaDir::SpmToSpm => {
+                // Read beat and write beat per cycle, coupled through
+                // the internal FIFO hop (no AXI traffic).
+                if reader.busy() || writer.busy() || !reader.active() || !writer.active() {
+                    return None;
+                }
+                if reader.fifo >= reader.fifo_depth || writer.fifo == 0 {
+                    return None;
+                }
+                let r_left = reader.beats_total - reader.beat_idx;
+                let w_left = writer.beats_total - writer.beat_idx;
+                if r_left == 0 || w_left == 0 {
+                    return None;
+                }
+                Some(DmaSteadyState {
+                    max_cycles: axi_remaining.min(r_left).min(w_left),
+                    read_streaming: true,
+                    write_streaming: true,
+                    axi: false,
+                })
+            }
+        }
+    }
+
     fn make_plan(&self, base: u64, stride: i64, port_bytes: u64, word_bytes: u64) -> StreamPlan {
         let beats_per_row = self.row_bytes.div_ceil(port_bytes);
         StreamPlan {
@@ -136,5 +238,44 @@ mod tests {
     fn rejects_bad_descriptors() {
         assert!(DmaJob::from_csrs(&regs(7, 4, 128)).is_err());
         assert!(DmaJob::from_csrs(&regs(0, 0, 128)).is_err());
+    }
+
+    #[test]
+    fn steady_state_gates_on_fifo_and_progress() {
+        let j = DmaJob::from_csrs(&regs(dma_dir::EXT_TO_SPM, 4, 128)).unwrap();
+        let mut r = Streamer::new(512, 4, false, 32);
+        let mut w = Streamer::new(512, 4, true, 32);
+        w.configure(j.spm_plan(64, 8));
+        // Ramp: empty FIFO -> not steady.
+        assert!(j.steady_state(&r, &w, 8).is_none());
+        w.fifo = 1;
+        let ss = j.steady_state(&r, &w, 8).unwrap();
+        assert!(ss.write_streaming && !ss.read_streaming && ss.axi);
+        assert_eq!(ss.max_cycles, 8);
+        // Drain: no AXI beats left -> not steady.
+        assert!(j.steady_state(&r, &w, 0).is_none());
+        // Mid-flight beat -> not steady.
+        w.try_issue_beat(8, 32);
+        assert!(j.steady_state(&r, &w, 8).is_none());
+
+        // SpmToExt: the fifo==0 regime must stop one cycle short of the
+        // last beat (reader-side retirement fires on that very cycle).
+        let jr = DmaJob::from_csrs(&regs(dma_dir::SPM_TO_EXT, 4, 128)).unwrap();
+        let mut r2 = Streamer::new(512, 4, false, 32);
+        r2.configure(jr.spm_plan(64, 8));
+        let ss_r = jr.steady_state(&r2, &w, 8).unwrap();
+        assert!(ss_r.read_streaming && ss_r.axi);
+        assert_eq!(ss_r.max_cycles, 7);
+        r2.fifo = 2;
+        assert_eq!(jr.steady_state(&r2, &w, 8).unwrap().max_cycles, 8);
+
+        let j2 = DmaJob::from_csrs(&regs(dma_dir::SPM_TO_SPM, 2, 128)).unwrap();
+        r.configure(j2.spm_plan(64, 8));
+        let mut w2 = Streamer::new(512, 4, true, 32);
+        w2.configure(j2.spm_write_plan(64, 8));
+        assert!(j2.steady_state(&r, &w2, 4).is_none()); // write FIFO empty
+        w2.fifo = 1;
+        let ss2 = j2.steady_state(&r, &w2, 4).unwrap();
+        assert!(ss2.read_streaming && ss2.write_streaming && !ss2.axi);
     }
 }

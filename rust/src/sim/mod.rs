@@ -13,7 +13,8 @@
 //! * [`accel`] — accelerator timing models (GeMM, max-pool, vec-add)
 //! * [`job`] / [`functional`] — functional job descriptors + the
 //!   bit-exact int8 datapath twin
-//! * [`cluster`] — composition and the cycle loop
+//! * [`cluster`] — composition, the exact cycle loop, and the
+//!   event-driven span engine ([`SimMode`])
 //! * [`trace`] — counters, per-layer attribution, the [`SimReport`]
 
 pub mod accel;
@@ -27,6 +28,6 @@ pub mod mem;
 pub mod streamer;
 pub mod trace;
 
-pub use cluster::Cluster;
+pub use cluster::{Cluster, SimMode};
 pub use job::{OpDesc, Region};
 pub use trace::{Counters, LayerStat, SimReport, UnitStats};

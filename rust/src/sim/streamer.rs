@@ -83,6 +83,75 @@ impl StreamPlan {
     }
 }
 
+/// Incremental enumerator of successive beat base addresses.
+///
+/// [`StreamPlan::beat_base`] pays a div/mod per nested loop on every
+/// call; the event engine's span planner walks beats in order, so this
+/// keeps the loop digits as an odometer and advances in O(1) amortized.
+pub struct BeatWalker<'a> {
+    plan: &'a StreamPlan,
+    digits: [u64; MAX_LOOPS],
+    addr: i64,
+}
+
+impl<'a> BeatWalker<'a> {
+    pub fn new(plan: &'a StreamPlan, start_idx: u64) -> Self {
+        let mut digits = [0u64; MAX_LOOPS];
+        let mut rem = start_idx;
+        let mut addr = plan.base as i64;
+        for (i, l) in plan.loops.iter().enumerate() {
+            let c = l.count.max(1);
+            digits[i] = rem % c;
+            rem /= c;
+            addr += digits[i] as i64 * l.stride;
+        }
+        Self { plan, digits, addr }
+    }
+
+    /// Base address of the current beat; steps the odometer. Walking
+    /// past the final beat keeps yielding addresses — callers bound the
+    /// walk by the plan's remaining beat count.
+    pub fn next_base(&mut self) -> u64 {
+        let out = self.addr as u64;
+        for (i, l) in self.plan.loops.iter().enumerate() {
+            let c = l.count.max(1);
+            self.digits[i] += 1;
+            if self.digits[i] < c {
+                self.addr += l.stride;
+                return out;
+            }
+            self.digits[i] = 0;
+            self.addr -= (c - 1) as i64 * l.stride;
+        }
+        out
+    }
+}
+
+/// Bank-occupancy bitmask of one beat, or `None` if two of its words
+/// map to the same bank (the beat then needs more than one grant cycle
+/// and cannot be part of a lockstep span). Only valid for clusters with
+/// at most 64 banks; callers gate on that.
+pub fn beat_bank_mask(
+    base: u64,
+    pattern: &BeatPattern,
+    word_shift: u32,
+    n_banks: u32,
+) -> Option<u64> {
+    let mut mask = 0u64;
+    for r in 0..pattern.rows {
+        let row_addr = base as i64 + r as i64 * pattern.row_stride;
+        let row_word = (row_addr as u64) >> word_shift;
+        for w in 0..pattern.words_per_row as u64 {
+            let bit = 1u64 << super::mem::bank_of_word(row_word + w, n_banks);
+            if mask & bit != 0 {
+                return None;
+            }
+            mask |= bit;
+        }
+    }
+    Some(mask)
+}
+
 #[derive(Debug, Default, Clone, Copy)]
 pub struct StreamerStats {
     pub beats_done: u64,
@@ -115,6 +184,9 @@ pub struct Streamer {
     pub beats_total: u64,
     /// Outstanding bank-word requests, aggregated per bank.
     pub pending: Vec<u8>,
+    /// Bitmask of banks with `pending > 0` (bits for banks 0..64 only;
+    /// clusters with more banks fall back to scanning `pending`).
+    pub pending_mask: u64,
     pub pending_words: u32,
     /// Words remaining per in-flight beat, oldest first.
     inflight: std::collections::VecDeque<u32>,
@@ -132,6 +204,7 @@ impl Streamer {
             beat_idx: 0,
             beats_total: 0,
             pending: vec![0; n_banks as usize],
+            pending_mask: 0,
             pending_words: 0,
             inflight: Default::default(),
             stats: StreamerStats::default(),
@@ -145,6 +218,7 @@ impl Streamer {
         self.fifo = 0;
         self.inflight.clear();
         self.pending.iter_mut().for_each(|p| *p = 0);
+        self.pending_mask = 0;
         self.pending_words = 0;
     }
 
@@ -208,12 +282,40 @@ impl Streamer {
             for w in 0..plan.pattern.words_per_row as u64 {
                 let bank = super::mem::bank_of_word(row_word + w, n_banks) as usize;
                 self.pending[bank] += 1;
+                if bank < 64 {
+                    self.pending_mask |= 1u64 << bank;
+                }
                 words += 1;
             }
         }
         self.pending_words += words;
         self.inflight.push_back(words);
         self.beat_idx += 1;
+    }
+
+    /// Arbiter-side: consume one pending word request on bank `b`
+    /// (keeps the pending-bank bitmask coherent).
+    #[inline]
+    pub fn take_request(&mut self, b: usize) {
+        self.pending[b] -= 1;
+        if self.pending[b] == 0 && b < 64 {
+            self.pending_mask &= !(1u64 << b);
+        }
+    }
+
+    /// Event-engine span advance: `n` beats that each issued and fully
+    /// completed within a single cycle (clean and conflict-free). FIFO
+    /// levels are deliberately untouched — in a lockstep span every
+    /// completion pairs with a same-cycle consumption (reader) or
+    /// refill/emission (writer), so the level is invariant.
+    pub fn advance_clean_beats(&mut self, n: u64) {
+        self.beat_idx += n;
+        self.stats.beats_done += n;
+    }
+
+    /// Bank words per beat of the configured plan (0 when unconfigured).
+    pub fn words_per_beat(&self) -> u64 {
+        self.plan.as_ref().map(|p| p.pattern.words_per_beat() as u64).unwrap_or(0)
     }
 
     /// Called by the arbiter when `granted` bank-word requests completed
@@ -369,6 +471,56 @@ mod tests {
         // Third blocked: only 2 FIFO entries.
         s.try_issue_beat(8, 32);
         assert_eq!(s.inflight.len(), 2);
+    }
+
+    #[test]
+    fn beat_walker_matches_beat_base() {
+        let p = plan(1000, BeatPattern::contiguous(8), &[(4, 8), (2, 0), (3, 100)]);
+        for start in [0u64, 1, 5, 11, 23] {
+            let mut w = BeatWalker::new(&p, start);
+            for idx in start..p.total_beats() {
+                assert_eq!(w.next_base(), p.beat_base(idx), "start {start} idx {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn beat_bank_mask_detects_self_conflicts() {
+        // 8 consecutive words in one 32-word block: 8 distinct banks.
+        let m = beat_bank_mask(0, &BeatPattern::contiguous(8), 3, 32).unwrap();
+        assert_eq!(m.count_ones(), 8);
+        // Two rows with a zero stride alias every bank word.
+        let clash = BeatPattern { rows: 2, row_stride: 0, words_per_row: 4 };
+        assert!(beat_bank_mask(0, &clash, 3, 32).is_none());
+        // XOR-fold edge: words 508..=515 straddle the 512-word fold and
+        // collide (507*8 = byte 4064).
+        assert!(beat_bank_mask(508 * 8, &BeatPattern::contiguous(8), 3, 32).is_none());
+    }
+
+    #[test]
+    fn pending_mask_tracks_requests() {
+        let mut s = Streamer::new(512, 4, false, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(2, 64)]));
+        s.try_issue_beat(8, 32);
+        assert_eq!(s.pending_mask.count_ones(), 8);
+        for b in 0..32usize {
+            while s.pending[b] > 0 {
+                s.take_request(b);
+            }
+        }
+        assert_eq!(s.pending_mask, 0);
+    }
+
+    #[test]
+    fn advance_clean_beats_moves_cursor_only() {
+        let mut s = Streamer::new(512, 4, false, 32);
+        s.configure(plan(0, BeatPattern::contiguous(8), &[(10, 64)]));
+        s.fifo = 2;
+        s.advance_clean_beats(5);
+        assert_eq!(s.beat_idx, 5);
+        assert_eq!(s.stats.beats_done, 5);
+        assert_eq!(s.fifo, 2);
+        assert!(!s.busy());
     }
 
     #[test]

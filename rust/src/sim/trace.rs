@@ -5,12 +5,12 @@
 //! per-layer spans drive the cycle-distribution plots (Fig. 8).
 
 use std::collections::BTreeMap;
-
+use std::sync::Arc;
 
 use crate::isa::LayerClass;
 
 /// Activity event counters accumulated over one simulation.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct Counters {
     /// GeMM PE-array active cycles (each = 512 int8 MACs).
     pub gemm_compute_cycles: u64,
@@ -38,7 +38,7 @@ pub struct Counters {
 }
 
 /// Busy/stall accounting for one unit (accelerator or DMA).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct UnitStats {
     pub name: String,
     /// Cycles with a job active (from start to retire).
@@ -66,7 +66,7 @@ impl UnitStats {
 }
 
 /// Wall-clock interval attributed to a layer.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct LayerStat {
     pub name: String,
     pub class: Option<LayerClass>,
@@ -84,7 +84,11 @@ impl LayerStat {
 }
 
 /// The result of one simulation run.
-#[derive(Debug, Default)]
+///
+/// `PartialEq` is part of the engine contract: the event-driven and
+/// exact engines must produce *identical* reports (the equivalence
+/// suites compare whole `SimReport`s, including functional memory).
+#[derive(Debug, Default, PartialEq)]
 pub struct SimReport {
     pub total_cycles: u64,
     pub counters: Counters,
@@ -144,19 +148,23 @@ mod tests {
 // ---------------------------------------------------------------------------
 
 /// One busy interval on a hardware track (unit job or core kernel).
-#[derive(Debug, Clone)]
+///
+/// Track and label are shared `Arc<str>`s: the simulator precomputes
+/// one string per core/unit/layer and every event clones the pointer,
+/// keeping `format!` and heap traffic out of the per-event hot path.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TraceEvent {
     /// Track name ("gemm0", "dma", "core0"...).
-    pub track: String,
+    pub track: Arc<str>,
     /// Event label (layer name or instruction class).
-    pub name: String,
+    pub name: Arc<str>,
     pub start_cycle: u64,
     pub end_cycle: u64,
 }
 
 /// A recorded execution trace (opt-in via
 /// [`Cluster::run_traced`](super::cluster::Cluster::run_traced)).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct Trace {
     pub events: Vec<TraceEvent>,
 }
@@ -167,7 +175,7 @@ impl Trace {
     /// trace time = one simulated cycle.
     pub fn to_chrome_json(&self) -> String {
         use std::fmt::Write;
-        let mut tracks: Vec<&str> = self.events.iter().map(|e| e.track.as_str()).collect();
+        let mut tracks: Vec<&str> = self.events.iter().map(|e| &*e.track).collect();
         tracks.sort_unstable();
         tracks.dedup();
         let tid = |t: &str| tracks.iter().position(|x| *x == t).unwrap();

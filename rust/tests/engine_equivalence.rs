@@ -1,0 +1,79 @@
+//! Engine-equivalence golden suite: the event-driven engine must
+//! produce **identical** `SimReport`s (total cycles, every counter,
+//! unit/layer stats, and functional SPM/ext-mem bytes) to the exact
+//! per-cycle stepper on the full fig6/fig8/table1 workload matrix —
+//! the contract that lets `snax serve` run the fast engine without a
+//! fidelity caveat.
+
+use snax::compiler::{compile, CompileOptions};
+use snax::config::ClusterConfig;
+use snax::models;
+use snax::sim::{Cluster, SimMode};
+
+fn assert_engines_agree(tag: &str, cfg: &ClusterConfig, opts: &CompileOptions, graph_name: &str) {
+    let graph = models::graph_by_name(graph_name).unwrap();
+    let cp = compile(&graph, cfg, opts).unwrap();
+    let cluster = Cluster::new(cfg);
+    let exact = cluster.run_mode(&cp.program, SimMode::Exact).unwrap();
+    let event = cluster.run_mode(&cp.program, SimMode::Event).unwrap();
+    assert_eq!(
+        exact.total_cycles, event.total_cycles,
+        "{tag}: total_cycles diverged (exact {} vs event {})",
+        exact.total_cycles, event.total_cycles
+    );
+    assert_eq!(exact.counters, event.counters, "{tag}: counters diverged");
+    assert_eq!(exact.units, event.units, "{tag}: unit stats diverged");
+    assert_eq!(exact.layers, event.layers, "{tag}: layer stats diverged");
+    assert_eq!(exact.spm, event.spm, "{tag}: SPM bytes diverged");
+    assert_eq!(exact.ext_mem, event.ext_mem, "{tag}: ext-mem bytes diverged");
+    // Belt and braces: the whole report (PartialEq covers any field
+    // added later without a matching assert above).
+    assert_eq!(exact, event, "{tag}: reports diverged");
+}
+
+/// Fig. 8 cascade: the three sequential platforms.
+#[test]
+fn fig8_sequential_platforms() {
+    let seq = CompileOptions::sequential();
+    for preset in ["fig6b", "fig6c", "fig6d"] {
+        let cfg = ClusterConfig::preset(preset).unwrap();
+        assert_engines_agree(&format!("fig6a@{preset}/seq"), &cfg, &seq, "fig6a");
+    }
+}
+
+/// Fig. 6a pipelined on fig6d — the memory-active `snax serve` shape
+/// (the bench leg the ≥5x target is measured on).
+#[test]
+fn fig6a_pipelined_memory_active() {
+    let cfg = ClusterConfig::fig6d();
+    let opts = CompileOptions::pipelined().with_inferences(8);
+    assert_engines_agree("fig6a@fig6d/pipelined(8)", &cfg, &opts, "fig6a");
+}
+
+/// Table I workloads (MLPerf Tiny): ResNet-8 and the Deep AutoEncoder
+/// on the full fig6d platform.
+#[test]
+fn table1_mlperf_tiny_workloads() {
+    let cfg = ClusterConfig::fig6d();
+    let seq = CompileOptions::sequential();
+    assert_engines_agree("resnet8@fig6d/seq", &cfg, &seq, "resnet8");
+    assert_engines_agree("dae@fig6d/seq", &cfg, &seq, "dae");
+}
+
+/// DAE on the RV32I-only baseline: long software spans exercise the
+/// memory-idle fast-forward path under both engines.
+#[test]
+fn dae_cpu_only_baseline() {
+    let cfg = ClusterConfig::fig6b();
+    let seq = CompileOptions::sequential();
+    assert_engines_agree("dae@fig6b/seq", &cfg, &seq, "dae");
+}
+
+/// Pipelined DAE: DMA/compute overlap with launch-stalled cores — the
+/// span planner's poll/stall accounting under the heaviest interleave.
+#[test]
+fn dae_pipelined_overlap() {
+    let cfg = ClusterConfig::fig6d();
+    let opts = CompileOptions::pipelined().with_inferences(4);
+    assert_engines_agree("dae@fig6d/pipelined(4)", &cfg, &opts, "dae");
+}

@@ -180,6 +180,236 @@ fn prop_random_graphs_simulate_to_golden() {
 }
 
 // ---------------------------------------------------------------------------
+// Engine equivalence: the event-driven engine must produce IDENTICAL
+// SimReports (total_cycles, every Counters field, unit/layer stats,
+// functional memory) to the exact per-cycle stepper — on randomized raw
+// instruction programs and on randomized compiled graphs.
+// ---------------------------------------------------------------------------
+
+use snax::config::{AccelConfig, AccelKind};
+use snax::isa::{
+    dma_csr, dma_dir, gemm_csr, maxpool_csr, vecadd_csr, BarrierId, Instr, LayerClass, Program,
+    SwKernel, UnitId,
+};
+use snax::sim::SimMode;
+
+fn fig6d_with_vecadd() -> ClusterConfig {
+    let mut c = ClusterConfig::fig6d();
+    c.name = "fig6d-vecadd".into();
+    c.accelerators.push(AccelConfig {
+        name: "vecadd0".into(),
+        kind: AccelKind::VecAdd,
+        core: 1,
+        read_ports_bits: vec![512, 512],
+        write_ports_bits: vec![512],
+        fifo_depth: 4,
+        agu_loop_depth: 4,
+    });
+    c
+}
+
+fn emit_dma(stream: &mut Vec<Instr>, dma: UnitId, r: &mut Rng) {
+    let w = |reg, val| Instr::CsrWrite { unit: dma, reg, val };
+    let rows = r.range(1, 6);
+    let row_bytes = if r.chance(30) { r.range(1, 500) } else { r.range(1, 8) * 64 };
+    let stride = row_bytes + r.range(0, 3) * 64;
+    let dir = *r.pick(&[dma_dir::EXT_TO_SPM, dma_dir::SPM_TO_EXT, dma_dir::SPM_TO_SPM]);
+    let spm_a = r.range(0, 48) * 1024;
+    let spm_b = 49 * 1024 + r.range(0, 48) * 1024;
+    let ext = r.range(0, 8) * 4096;
+    let (src, dst) = match dir {
+        dma_dir::EXT_TO_SPM => (ext, spm_a),
+        dma_dir::SPM_TO_EXT => (spm_a, ext),
+        _ => (spm_a, spm_b),
+    };
+    stream.push(w(dma_csr::SRC, src));
+    stream.push(w(dma_csr::DST, dst));
+    stream.push(w(dma_csr::ROW_BYTES, row_bytes));
+    stream.push(w(dma_csr::ROWS, rows));
+    stream.push(w(dma_csr::SRC_STRIDE, stride));
+    stream.push(w(dma_csr::DST_STRIDE, stride));
+    stream.push(w(dma_csr::DIR, dir));
+    stream.push(Instr::Launch { unit: dma });
+    if r.chance(70) {
+        stream.push(Instr::AwaitIdle { unit: dma });
+    }
+}
+
+fn emit_gemm(stream: &mut Vec<Instr>, gemm: UnitId, r: &mut Rng) {
+    let w = |reg, val| Instr::CsrWrite { unit: gemm, reg, val };
+    let m = r.range(1, 4) * 8;
+    let k = r.range(1, 8) * 8;
+    let n = r.range(1, 4) * 8;
+    let i32_out = r.chance(50);
+    stream.push(w(gemm_csr::M, m));
+    stream.push(w(gemm_csr::K, k));
+    stream.push(w(gemm_csr::N, n));
+    stream.push(w(gemm_csr::PTR_A, r.range(0, 16) * 1024));
+    stream.push(w(gemm_csr::PTR_B, 100 * 1024));
+    stream.push(w(gemm_csr::PTR_C, 110 * 1024));
+    stream.push(w(gemm_csr::ROW_A, k));
+    stream.push(w(gemm_csr::ROW_B, n));
+    stream.push(w(gemm_csr::ROW_C, if i32_out { 4 * n } else { n }));
+    stream.push(w(gemm_csr::STRIDE_A0, 8));
+    stream.push(w(gemm_csr::STRIDE_A1, 0));
+    stream.push(w(gemm_csr::STRIDE_A2, 8 * k));
+    stream.push(w(gemm_csr::STRIDE_B0, 8 * n));
+    stream.push(w(gemm_csr::STRIDE_B1, 8));
+    stream.push(w(gemm_csr::STRIDE_B2, 0));
+    stream.push(w(gemm_csr::STRIDE_C0, 8 * 4));
+    stream.push(w(gemm_csr::STRIDE_C1, 8 * 4 * n));
+    stream.push(w(gemm_csr::SHIFT, if i32_out { 0 } else { 6 }));
+    stream.push(w(gemm_csr::FLAGS, if i32_out { 0b10 } else { 0 }));
+    stream.push(w(gemm_csr::DESC, 9999)); // out of table: timing only
+    stream.push(Instr::Launch { unit: gemm });
+    if r.chance(70) {
+        stream.push(Instr::AwaitIdle { unit: gemm });
+    }
+}
+
+fn emit_pool(stream: &mut Vec<Instr>, pool: UnitId, r: &mut Rng) {
+    let w = |reg, val| Instr::CsrWrite { unit: pool, reg, val };
+    let h = *r.pick(&[8u64, 16, 32]);
+    let wd = *r.pick(&[8u64, 16]);
+    let c = *r.pick(&[8u64, 16]);
+    let ks = *r.pick(&[2u64, 4]);
+    stream.push(w(maxpool_csr::H, h));
+    stream.push(w(maxpool_csr::W, wd));
+    stream.push(w(maxpool_csr::C, c));
+    stream.push(w(maxpool_csr::KERNEL, ks));
+    stream.push(w(maxpool_csr::STRIDE, ks));
+    stream.push(w(maxpool_csr::PTR_IN, r.range(0, 32) * 1024));
+    stream.push(w(maxpool_csr::PTR_OUT, 64 * 1024 + r.range(0, 16) * 1024));
+    stream.push(w(maxpool_csr::STRIDE_IN0, 64));
+    stream.push(w(maxpool_csr::STRIDE_OUT0, 64));
+    stream.push(w(maxpool_csr::DESC, 9999));
+    stream.push(Instr::Launch { unit: pool });
+    if r.chance(70) {
+        stream.push(Instr::AwaitIdle { unit: pool });
+    }
+}
+
+fn emit_vecadd(stream: &mut Vec<Instr>, va: UnitId, r: &mut Rng) {
+    let w = |reg, val| Instr::CsrWrite { unit: va, reg, val };
+    stream.push(w(vecadd_csr::LEN, r.range(1, 2000)));
+    stream.push(w(vecadd_csr::PTR_A, r.range(0, 16) * 1024));
+    stream.push(w(vecadd_csr::PTR_B, 32 * 1024));
+    stream.push(w(vecadd_csr::PTR_OUT, 64 * 1024));
+    stream.push(w(vecadd_csr::DESC, 9999));
+    stream.push(Instr::Launch { unit: va });
+    if r.chance(70) {
+        stream.push(Instr::AwaitIdle { unit: va });
+    }
+}
+
+fn emit_sw(stream: &mut Vec<Instr>, r: &mut Rng) {
+    stream.push(Instr::Sw {
+        kernel: SwKernel { cycles: r.range(1, 5000), class: LayerClass::Other, op: None },
+    });
+}
+
+#[test]
+fn prop_engines_agree_on_random_programs() {
+    for seed in 0..48u64 {
+        let mut r = Rng::new(11_000 + seed);
+        let mut cfg = match seed % 4 {
+            0 => ClusterConfig::fig6b(),
+            1 => ClusterConfig::fig6c(),
+            2 => ClusterConfig::fig6d(),
+            _ => fig6d_with_vecadd(),
+        };
+        if r.chance(25) {
+            cfg.csr_double_buffer = false; // ablation: write/launch stalls
+        }
+        let n_cores = cfg.cores.len();
+        let dma = UnitId(cfg.accelerators.len() as u8);
+        let unit_of = |kind: AccelKind| {
+            cfg.accelerators
+                .iter()
+                .position(|a| a.kind == kind)
+                .map(|i| UnitId(i as u8))
+        };
+        let (gemm, pool, va) =
+            (unit_of(AccelKind::Gemm), unit_of(AccelKind::MaxPool), unit_of(AccelKind::VecAdd));
+
+        let mut streams: Vec<Vec<Instr>> = vec![Vec::new(); n_cores];
+        let segs = r.range(3, 7);
+        for seg in 0..segs {
+            for (ci, stream) in streams.iter_mut().enumerate() {
+                // Static unit ownership mirrors the presets: core 0
+                // drives the DMA + pool, core 1 the GeMM + vec-add.
+                let mut kinds: Vec<u8> = vec![0];
+                if ci == 0 {
+                    kinds.push(1);
+                    if pool.is_some() {
+                        kinds.push(2);
+                    }
+                }
+                if ci == 1 {
+                    if gemm.is_some() {
+                        kinds.push(3);
+                    }
+                    if va.is_some() {
+                        kinds.push(4);
+                    }
+                }
+                match *r.pick(&kinds) {
+                    1 => emit_dma(stream, dma, &mut r),
+                    2 => emit_pool(stream, pool.unwrap(), &mut r),
+                    3 => emit_gemm(stream, gemm.unwrap(), &mut r),
+                    4 => emit_vecadd(stream, va.unwrap(), &mut r),
+                    _ => emit_sw(stream, &mut r),
+                }
+            }
+            if n_cores > 1 && r.chance(40) {
+                for stream in streams.iter_mut() {
+                    stream.push(Instr::Barrier {
+                        id: BarrierId(seg as u16),
+                        participants: n_cores as u8,
+                    });
+                }
+            }
+        }
+        let program = Program {
+            streams,
+            ext_mem_init: vec![(0, (0..4096u64).map(|i| (i * 7 + seed) as u8).collect())],
+            ..Default::default()
+        };
+        let cluster = Cluster::new(&cfg);
+        let exact = cluster.run_mode(&program, SimMode::Exact).unwrap();
+        let event = cluster.run_mode(&program, SimMode::Event).unwrap();
+        assert_eq!(
+            exact.total_cycles, event.total_cycles,
+            "seed {seed} on {}: total_cycles",
+            cfg.name
+        );
+        assert_eq!(exact.counters, event.counters, "seed {seed} on {}: counters", cfg.name);
+        assert_eq!(exact, event, "seed {seed} on {}: full report", cfg.name);
+    }
+}
+
+#[test]
+fn prop_engines_agree_on_compiled_graphs() {
+    for seed in 0..16u64 {
+        let mut r = Rng::new(13_000 + seed);
+        let g = random_graph(&mut r);
+        let cfg = ClusterConfig::preset(["fig6b", "fig6c", "fig6d"][(seed % 3) as usize]).unwrap();
+        let opts = if r.chance(35) && cfg.accelerators.len() > 1 {
+            CompileOptions::pipelined().with_inferences(3)
+        } else {
+            CompileOptions::sequential()
+        };
+        let Ok(cp) = compile(&g, &cfg, &opts) else {
+            continue; // legitimately too big for the preset
+        };
+        let cluster = Cluster::new(&cfg);
+        let exact = cluster.run_mode(&cp.program, SimMode::Exact).unwrap();
+        let event = cluster.run_mode(&cp.program, SimMode::Event).unwrap();
+        assert_eq!(exact, event, "seed {seed} on {} ({:?})", cfg.name, opts.mode);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Barrier: random arrival interleavings always release exactly when the
 // last participant arrives, and reset afterwards.
 // ---------------------------------------------------------------------------
