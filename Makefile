@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt serve serve-smoke bench bench-all bench-smoke artifacts
+.PHONY: build test fmt serve serve-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -30,10 +30,16 @@ serve-smoke:
 bench:
 	cargo bench --bench sim_speed
 
-# Fast CI variant: 2 reps, fail below the checked-in floor
-# (rust/benches/sim_speed_floor.json).
+# Functional-datapath bench: blocked int8 GEMM/conv microkernel vs the
+# naive oracle; rewrites BENCH_func_speed.json.
+bench-func:
+	cargo bench --bench func_speed
+
+# Fast CI variant: 2 reps, fail below the checked-in floors
+# (rust/benches/sim_speed_floor.json, rust/benches/func_speed_floor.json).
 bench-smoke:
 	SNAX_BENCH_REPS=2 SNAX_BENCH_ENFORCE_FLOOR=1 cargo bench --bench sim_speed
+	SNAX_BENCH_REPS=5 SNAX_BENCH_ENFORCE_FLOOR=1 cargo bench --bench func_speed
 
 # Every figure/table reproduction bench.
 bench-all:

@@ -1,0 +1,217 @@
+//! Functional-datapath throughput — the blocked int8 GEMM microkernel
+//! (+ parallel output-row bands) against the naive triple-loop oracle,
+//! on the conv/GEMM shapes that dominate the evaluation workloads:
+//!
+//! * conv legs: the Fig. 6a 3x3 conv and the MLPerf-Tiny ResNet-8
+//!   stem/stack shapes (the retire-path hot spot — conv2d alone was
+//!   ~25% of simulation wall-clock before the microkernel);
+//! * gemm legs: the Fig. 6a FC and a mid-size matmul.
+//!
+//! Every leg first asserts the blocked output is **byte-identical** to
+//! the oracle, then measures both. Emits `BENCH_func_speed.json` at the
+//! workspace root (the cross-PR perf trajectory record).
+//!
+//! Run: `cargo bench --bench func_speed` (or `make bench-func`).
+//! Knobs: `SNAX_BENCH_REPS=N` (default 20), `SNAX_THREADS=N`,
+//! `SNAX_BENCH_ENFORCE_FLOOR=1` (CI: fail when the minimum conv-leg
+//! speedup drops below `rust/benches/func_speed_floor.json`).
+
+use std::time::Instant;
+
+use snax::models::lcg::lcg_i8;
+use snax::parallel;
+use snax::runtime::json::{parse, Value};
+use snax::sim::functional;
+
+struct ConvShape {
+    name: &'static str,
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+}
+
+struct GemmShape {
+    name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+struct Leg {
+    name: &'static str,
+    kind: &'static str,
+    macs: u64,
+    naive_gmac_s: f64,
+    blocked_gmac_s: f64,
+    speedup: f64,
+}
+
+/// Median-of-reps wall time for `f`, in seconds.
+fn time_reps(reps: u32, mut f: impl FnMut()) -> f64 {
+    let mut samples = Vec::with_capacity(reps as usize);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2].max(1e-9)
+}
+
+fn conv_leg(s: &ConvShape, reps: u32) -> Leg {
+    let input = lcg_i8(11, s.n * s.h * s.w * s.cin);
+    let weights = lcg_i8(13, s.kh * s.kw * s.cin * s.cout);
+    let ho = (s.h + 2 * s.pad - s.kh) / s.stride + 1;
+    let wo = (s.w + 2 * s.pad - s.kw) / s.stride + 1;
+    let macs = (s.n * ho * wo * s.kh * s.kw * s.cin * s.cout) as u64;
+    let run_naive = || {
+        functional::conv2d_naive(
+            &input, &weights, s.n, s.h, s.w, s.cin, s.cout, s.kh, s.kw, s.stride, s.pad, 8,
+            true,
+        )
+    };
+    let run_blocked = || {
+        functional::conv2d(
+            &input, &weights, s.n, s.h, s.w, s.cin, s.cout, s.kh, s.kw, s.stride, s.pad, 8,
+            true,
+        )
+    };
+    assert_eq!(run_blocked(), run_naive(), "{}: blocked != oracle", s.name);
+    let tn = time_reps(reps, || std::hint::black_box(run_naive()).truncate(0));
+    let tb = time_reps(reps, || std::hint::black_box(run_blocked()).truncate(0));
+    Leg {
+        name: s.name,
+        kind: "conv",
+        macs,
+        naive_gmac_s: macs as f64 / tn / 1e9,
+        blocked_gmac_s: macs as f64 / tb / 1e9,
+        speedup: tn / tb,
+    }
+}
+
+fn gemm_leg(s: &GemmShape, reps: u32) -> Leg {
+    let a = lcg_i8(17, s.m * s.k);
+    let b = lcg_i8(19, s.k * s.n);
+    let macs = (s.m * s.k * s.n) as u64;
+    let run_naive = || functional::gemm_naive(&a, &b, s.m, s.k, s.n, 8, true, false);
+    let run_blocked = || functional::gemm(&a, &b, s.m, s.k, s.n, 8, true, false);
+    assert_eq!(run_blocked(), run_naive(), "{}: blocked != oracle", s.name);
+    let tn = time_reps(reps, || std::hint::black_box(run_naive()).truncate(0));
+    let tb = time_reps(reps, || std::hint::black_box(run_blocked()).truncate(0));
+    Leg {
+        name: s.name,
+        kind: "gemm",
+        macs,
+        naive_gmac_s: macs as f64 / tn / 1e9,
+        blocked_gmac_s: macs as f64 / tb / 1e9,
+        speedup: tn / tb,
+    }
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+fn main() {
+    let reps: u32 = std::env::var("SNAX_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
+    let threads = parallel::default_parallelism();
+
+    #[rustfmt::skip]
+    let conv_shapes = [
+        // The Fig. 6a workload conv (32x32x16 -> 16, 3x3/1/1), then the
+        // MLPerf-Tiny ResNet-8 shapes (stem + the three stack stages).
+        ConvShape { name: "fig6a conv 3x3 16->16 @32x32",
+            n: 1, h: 32, w: 32, cin: 16, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvShape { name: "resnet8 stem 3x3 8->16 @32x32",
+            n: 1, h: 32, w: 32, cin: 8, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvShape { name: "resnet8 s1 3x3 16->16 @32x32",
+            n: 1, h: 32, w: 32, cin: 16, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvShape { name: "resnet8 s2 3x3 16->32 s2 @32x32",
+            n: 1, h: 32, w: 32, cin: 16, cout: 32, kh: 3, kw: 3, stride: 2, pad: 1 },
+        ConvShape { name: "resnet8 s3 3x3 32->64 s2 @16x16",
+            n: 1, h: 16, w: 16, cin: 32, cout: 64, kh: 3, kw: 3, stride: 2, pad: 1 },
+    ];
+    let gemm_shapes = [
+        GemmShape { name: "fig6a fc 8x256x8", m: 8, k: 256, n: 8 },
+        GemmShape { name: "gemm 256x256x64", m: 256, k: 256, n: 64 },
+    ];
+
+    let mut legs = Vec::new();
+    for s in &conv_shapes {
+        legs.push(conv_leg(s, reps));
+    }
+    for s in &gemm_shapes {
+        legs.push(gemm_leg(s, reps));
+    }
+    for l in &legs {
+        println!(
+            "{}: {} MACs -> naive {:.2} Gmac/s, blocked {:.2} Gmac/s ({:.2}x)",
+            l.name, l.macs, l.naive_gmac_s, l.blocked_gmac_s, l.speedup
+        );
+    }
+
+    // Machine-readable trajectory record at the workspace root.
+    let legs_json: Vec<Value> = legs
+        .iter()
+        .map(|l| {
+            Value::object([
+                ("name", Value::from(l.name)),
+                ("kind", Value::from(l.kind)),
+                ("macs", Value::from(l.macs)),
+                ("naive_gmac_per_s", Value::from(round2(l.naive_gmac_s))),
+                ("blocked_gmac_per_s", Value::from(round2(l.blocked_gmac_s))),
+                ("speedup", Value::from(round2(l.speedup))),
+            ])
+        })
+        .collect();
+    let doc = Value::object([
+        ("bench", Value::from("func_speed")),
+        ("threads", Value::from(threads as u64)),
+        ("reps", Value::from(reps)),
+        ("legs", Value::from(legs_json)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_func_speed.json");
+    std::fs::write(out, doc.to_json()).expect("writing BENCH_func_speed.json");
+    println!("wrote {out}");
+
+    // Regression floor (CI bench-smoke): the minimum conv-leg speedup
+    // must stay above the checked-in ratchet.
+    let enforce = std::env::var("SNAX_BENCH_ENFORCE_FLOOR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if enforce {
+        let floor_path = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/func_speed_floor.json");
+        let floor_raw =
+            std::fs::read_to_string(floor_path).expect("reading func_speed_floor.json");
+        let floor = parse(&floor_raw).expect("parsing func_speed_floor.json");
+        let min_speedup = floor
+            .get("conv_speedup_floor")
+            .and_then(|v| v.as_f64())
+            .expect("floor key missing");
+        let worst = legs
+            .iter()
+            .filter(|l| l.kind == "conv")
+            .min_by(|a, b| a.speedup.total_cmp(&b.speedup))
+            .expect("no conv legs");
+        if worst.speedup < min_speedup {
+            eprintln!(
+                "FAIL: conv leg '{}' speedup {:.2}x below floor {:.2}x",
+                worst.name, worst.speedup, min_speedup
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "floor check ok: worst conv speedup {:.2}x >= {:.2}x",
+            worst.speedup, min_speedup
+        );
+    }
+}

@@ -345,7 +345,9 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        // One worker per core, same sizing rule (and `SNAX_THREADS`
+        // override) as the scoped data-parallel layer.
+        let workers = crate::parallel::default_parallelism();
         Self { port: 8080, workers, cache_capacity: 64, queue_depth: workers * 4 }
     }
 }

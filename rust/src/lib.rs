@@ -55,6 +55,7 @@ pub mod energy;
 pub mod isa;
 pub mod metrics;
 pub mod models;
+pub mod parallel;
 pub mod runtime;
 pub mod server;
 pub mod sim;

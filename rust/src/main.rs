@@ -8,6 +8,11 @@
 //! snax simulate --net fig6a --cluster fig6d [--pipelined] [--inferences N]
 //!               [--engine event|exact] (event-driven fast engine vs.
 //!               the exact per-cycle reference; identical reports)
+//! snax sweep    --nets fig6a,dae --clusters fig6b,fig6c,fig6d
+//!               [--pipelined] [--inferences N] [--engine event|exact]
+//!               [--threads N] [--json out.json]
+//!               (batch fan-out: every net x cluster combination
+//!               simulated concurrently, results in input order)
 //! snax serve    [--port P] [--workers N] [--cache N] [--queue N]
 //! snax fig8     (the heterogeneous-acceleration cascade)
 //! snax roofline --tiles 16,32,64,96,128 [--baseline]
@@ -79,9 +84,9 @@ fn cluster_for(args: &Args) -> Result<ClusterConfig> {
     }
 }
 
-fn cmd_simulate(args: &Args) -> Result<()> {
-    let cfg = cluster_for(args)?;
-    let g = graph_for(&args.get("net", "fig6a"))?;
+/// Shared `--pipelined` / `--inferences` / `--engine` parsing for the
+/// simulate and sweep subcommands.
+fn sim_options(args: &Args) -> Result<(CompileOptions, snax::sim::SimMode)> {
     let n: u32 = args.get("inferences", "1").parse()?;
     let opts = if args.has("pipelined") {
         CompileOptions::pipelined().with_inferences(n.max(2))
@@ -93,6 +98,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "exact" => snax::sim::SimMode::Exact,
         other => bail!("unknown engine '{other}' (expected event|exact)"),
     };
+    Ok((opts, mode))
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = cluster_for(args)?;
+    let g = graph_for(&args.get("net", "fig6a"))?;
+    let (opts, mode) = sim_options(args)?;
     let cp = compile(&g, &cfg, &opts)?;
     let trace_path = args.flags.get("trace").cloned();
     let report = if let Some(path) = &trace_path {
@@ -138,6 +150,135 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("{}", table(&["unit", "active", "compute", "util", "jobs"], &rows));
     let e = energy::energy(&report, &cfg);
     println!("energy: {:.2} uJ  avg power: {:.1} mW", e.total_uj(), e.avg_power_mw());
+    Ok(())
+}
+
+/// One row of sweep output (accumulated in job order).
+struct SweepRow {
+    net: String,
+    cluster: String,
+    cycles: u64,
+    ms: f64,
+    energy_uj: f64,
+    json: String,
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    // `--nets a,b` (falls back to `--net`) x `--clusters x,y` (falls
+    // back to `--cluster`; entries may be presets or .toml paths).
+    let nets: Vec<String> = args
+        .get("nets", &args.get("net", "fig6a"))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let cluster_specs: Vec<String> = args
+        .get("clusters", &args.get("cluster", "fig6b,fig6c,fig6d"))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if nets.is_empty() || cluster_specs.is_empty() {
+        bail!("sweep needs at least one net and one cluster");
+    }
+    let mut clusters = Vec::new();
+    for spec in &cluster_specs {
+        let cfg = if spec.ends_with(".toml") {
+            ClusterConfig::from_path(std::path::Path::new(spec))?
+        } else {
+            ClusterConfig::preset(spec)?
+        };
+        clusters.push(cfg);
+    }
+    let (opts, mode) = sim_options(args)?;
+    let threads: usize = match args.flags.get("threads") {
+        Some(t) => t.parse().context("bad --threads")?,
+        None => snax::parallel::default_parallelism(),
+    };
+
+    // Cross product in input order; `map_indexed` keeps result slot i
+    // bound to job i, so output order is deterministic at any thread
+    // count.
+    let jobs: Vec<(String, ClusterConfig)> = nets
+        .iter()
+        .flat_map(|net| clusters.iter().map(move |c| (net.clone(), c.clone())))
+        .collect();
+    let fan_out = threads.max(1).min(jobs.len().max(1));
+    // Split the core budget between job-level fan-out and per-retire
+    // band threads instead of multiplying them: with fan_out jobs in
+    // flight each job's kernels get cores/fan_out workers (and with a
+    // single job, full auto band parallelism).
+    let kernel_cap = (snax::parallel::default_parallelism() / fan_out).max(1);
+    let t0 = std::time::Instant::now();
+    let results = snax::parallel::map_indexed(jobs.len(), fan_out, |i| {
+        let (net, cfg) = &jobs[i];
+        let run = || -> Result<SweepRow> {
+            let g = graph_for(net)?;
+            let cp = compile(&g, cfg, &opts)?;
+            let mut cluster = Cluster::new(cfg);
+            if fan_out > 1 {
+                cluster = cluster.with_func_threads(kernel_cap);
+            }
+            let report = cluster.run_mode(&cp.program, mode)?;
+            let e = energy::energy(&report, cfg);
+            Ok(SweepRow {
+                net: net.clone(),
+                cluster: cfg.name.clone(),
+                cycles: report.total_cycles,
+                ms: report.seconds(cfg.freq_mhz) * 1e3,
+                energy_uj: e.total_uj(),
+                json: snax::server::render_report(&cp, cfg, &report),
+            })
+        };
+        run().with_context(|| format!("sweep job {i} ({net} on {})", cfg.name))
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    let mut errors = Vec::new();
+    let mut json_results = Vec::new();
+    for r in &results {
+        match r {
+            Ok(row) => {
+                rows.push(vec![
+                    row.net.clone(),
+                    row.cluster.clone(),
+                    cycles(row.cycles),
+                    format!("{:.3}", row.ms),
+                    format!("{:.2}", row.energy_uj),
+                ]);
+                json_results.push(row.json.clone());
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                json_results.push(
+                    snax::runtime::json::Value::object([(
+                        "error",
+                        snax::runtime::json::Value::from(msg.as_str()),
+                    )])
+                    .to_json(),
+                );
+                errors.push(msg);
+            }
+        }
+    }
+    println!(
+        "sweep: {} jobs ({} nets x {} clusters) on {} threads in {:.2}s",
+        jobs.len(),
+        nets.len(),
+        clusters.len(),
+        fan_out,
+        wall
+    );
+    println!("{}", table(&["net", "cluster", "cycles", "ms", "energy uJ"], &rows));
+    if let Some(path) = args.flags.get("json") {
+        let body = snax::server::render_sweep_body(&json_results);
+        std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
+        println!("wrote {} results to {path}", jobs.len());
+    }
+    if !errors.is_empty() {
+        bail!("{} sweep job(s) failed:\n  {}", errors.len(), errors.join("\n  "));
+    }
     Ok(())
 }
 
@@ -309,6 +450,10 @@ fn help() {
          \u{20}  simulate --net fig6a|dae|resnet8 --cluster fig6b|fig6c|fig6d|file.toml\n\
          \u{20}           [--pipelined] [--inferences N] [--trace out.json]\n\
          \u{20}           [--engine event|exact]\n\
+         \u{20}  sweep     --nets fig6a,dae --clusters fig6b,fig6c,fig6d\n\
+         \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\
+         \u{20}            [--threads N] [--json out.json]\n\
+         \u{20}            (parallel net x cluster fan-out, deterministic order)\n\
          \u{20}  serve     [--port 8080] [--workers N] [--cache entries] [--queue depth]\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6)\n\
          \u{20}  fig8      (the heterogeneous-acceleration cascade)\n\
@@ -323,6 +468,7 @@ fn main() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
         "roofline" => cmd_roofline(&args),
         "report" => cmd_report(&args),

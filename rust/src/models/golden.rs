@@ -30,7 +30,8 @@ pub fn evaluate(g: &Graph) -> Result<Vec<Vec<u8>>> {
             mem.write(Region(addr[ti]), &lcg_bytes(seed, t.bytes() as usize))?;
         }
     }
-    // Execute nodes in order.
+    // Execute nodes in order, reusing one scratch across the graph.
+    let mut scratch = functional::FnScratch::new();
     for node in &g.nodes {
         let a = addr[node.inputs[0].0];
         let out = addr[node.output.0];
@@ -107,7 +108,7 @@ pub fn evaluate(g: &Graph) -> Result<Vec<Vec<u8>>> {
                 rows: *rows,
             },
         };
-        functional::apply_op(&desc, &mut mem)
+        functional::apply_op_scratch(&desc, &mut mem, &mut scratch)
             .with_context(|| format!("evaluating node '{}'", node.name))?;
     }
     // Collect outputs.

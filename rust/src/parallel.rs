@@ -1,0 +1,209 @@
+//! Dependency-light scoped data parallelism (std only).
+//!
+//! Two consumers share this layer:
+//!
+//! * the functional datapath ([`crate::sim::functional`]) splits large
+//!   GEMM / conv retires into output-row bands and computes them on all
+//!   cores ([`for_each_chunk`]);
+//! * the sweep fan-out (`snax sweep`, `POST /sweep`) runs N independent
+//!   (config, program) simulations concurrently with deterministic
+//!   result ordering ([`map_indexed`]).
+//!
+//! The design deliberately mirrors the sizing and shutdown discipline
+//! of the service's [`crate::server::pool::WorkerPool`]:
+//!
+//! * **Sizing** — one thread per core by default
+//!   ([`default_parallelism`], shared with [`ServerConfig`]'s worker
+//!   count), overridable with `SNAX_THREADS`.
+//! * **Shutdown** — scoped: every helper runs under
+//!   [`std::thread::scope`], so workers are *always* joined before the
+//!   call returns (the scoped analogue of `WorkerPool::shutdown`'s
+//!   drain-then-join). No detached threads, no global state to drain.
+//! * **Work stealing** — tasks self-schedule off a shared atomic
+//!   cursor: a worker that finishes early immediately steals the next
+//!   unclaimed chunk instead of idling behind a static partition.
+//!
+//! Determinism: both helpers assign task `i` to a fixed output slot
+//! (band `i` of the output slice / index `i` of the result vector), so
+//! results are bit-identical regardless of thread count or scheduling
+//! order. Only *which worker* computes a task varies.
+//!
+//! [`ServerConfig`]: crate::config::ServerConfig
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Default worker count for parallel sections: `SNAX_THREADS` if set to
+/// a positive integer, otherwise the host's available parallelism.
+/// Cached after the first call (same sizing rule as
+/// [`crate::config::ServerConfig::default`]).
+pub fn default_parallelism() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Some(n) =
+            std::env::var("SNAX_THREADS").ok().and_then(|v| v.parse::<usize>().ok())
+        {
+            if n >= 1 {
+                return n;
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Covariant raw-pointer wrapper so worker threads can carve disjoint
+/// `&mut` sub-slices out of one buffer. Safety rests on the chunk
+/// cursor: `fetch_add` hands every chunk index to exactly one worker,
+/// and chunks `[i*chunk_len, (i+1)*chunk_len)` never overlap.
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Split `data` into contiguous chunks of `chunk_len` elements (the
+/// last may be short) and run `body(ctx, chunk_index, chunk)` over all
+/// of them on `ctxs.len()` scoped workers, each worker owning one
+/// per-thread context (scratch buffers, etc.).
+///
+/// Chunks self-schedule off an atomic cursor (work stealing); with one
+/// context or one chunk the loop runs inline on the caller's thread.
+/// Panics in `body` propagate to the caller after all workers joined.
+pub fn for_each_chunk<T, C, F>(data: &mut [T], chunk_len: usize, ctxs: &mut [C], body: F)
+where
+    T: Send,
+    C: Send,
+    F: Fn(&mut C, usize, &mut [T]) + Sync,
+{
+    assert!(!ctxs.is_empty(), "for_each_chunk needs at least one context");
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    if ctxs.len() == 1 || n_chunks <= 1 {
+        let ctx = &mut ctxs[0];
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            body(ctx, i, chunk);
+        }
+        return;
+    }
+    let len = data.len();
+    let base = SendPtr(data.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    let workers = ctxs.len().min(n_chunks);
+    std::thread::scope(|s| {
+        for ctx in ctxs.iter_mut().take(workers) {
+            let next = &next;
+            let body = &body;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_chunks {
+                    break;
+                }
+                let lo = i * chunk_len;
+                let hi = (lo + chunk_len).min(len);
+                // Safety: `i` is claimed by exactly one worker and the
+                // [lo, hi) ranges of distinct chunks are disjoint.
+                let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+                body(ctx, i, chunk);
+            });
+        }
+    });
+}
+
+/// Compute `f(0..n)` on up to `threads` scoped workers and return the
+/// results **in index order** — the parallel fan-out primitive for
+/// sweeps. Tasks self-schedule (work stealing); ordering is
+/// deterministic regardless of thread count because task `i` always
+/// fills slot `i`.
+pub fn map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let base = SendPtr(slots.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // Safety: slot `i` is written by exactly one worker.
+                unsafe { *base.0.add(i) = Some(v) };
+            });
+        }
+    });
+    slots.into_iter().map(|v| v.expect("every slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_the_slice_exactly_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let mut data = vec![0u32; 1037];
+            let mut ctxs = vec![(); threads];
+            for_each_chunk(&mut data, 64, &mut ctxs, |_, i, chunk| {
+                for v in chunk.iter_mut() {
+                    *v += 1 + i as u32; // also check the index mapping
+                }
+            });
+            for (pos, v) in data.iter().enumerate() {
+                assert_eq!(*v, 1 + (pos / 64) as u32, "pos {pos} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn contexts_are_private_per_worker() {
+        let mut data = vec![0u8; 4096];
+        let mut ctxs: Vec<Vec<usize>> = vec![Vec::new(); 4];
+        for_each_chunk(&mut data, 16, &mut ctxs, |seen, i, _| seen.push(i));
+        let mut all: Vec<usize> = ctxs.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..256).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_is_order_deterministic() {
+        let serial = map_indexed(97, 1, |i| i * i);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(map_indexed(97, threads, |i| i * i), serial, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn uneven_loads_still_complete() {
+        // Front-loaded work: stealing workers must drain the tail.
+        let out = map_indexed(40, 4, |i| {
+            if i < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            i as u64
+        });
+        assert_eq!(out, (0..40).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(map_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(map_indexed(1, 4, |i| i + 1), vec![1]);
+        let mut data: Vec<u8> = Vec::new();
+        let mut ctxs = vec![(); 2];
+        for_each_chunk(&mut data, 8, &mut ctxs, |_, _, _| panic!("no chunks expected"));
+    }
+}

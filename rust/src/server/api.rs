@@ -5,13 +5,18 @@
 //! * `POST /simulate` — compile (cached) + cycle-accurate simulation;
 //!   synchronous by default, `"detach": true` returns a job id for
 //!   `GET /jobs/:id` polling.
+//! * `POST /sweep`    — batch fan-out: N independent (config, program)
+//!   simulations run concurrently on the scoped parallel layer
+//!   ([`crate::parallel`]), results returned **in job order**
+//!   regardless of thread count or completion order.
 //! * `GET /jobs/:id`  — state/result of a detached job.
 //! * `GET /healthz`   — liveness + basic load info.
 //! * `GET /metrics`   — Prometheus text: per-endpoint request counters
 //!   and latency histograms, cache hit/miss/eviction counters, queue
 //!   and worker gauges.
 //!
-//! Request body (both POST endpoints):
+//! Request body (`/compile`, `/simulate`, and each element of
+//! `/sweep`'s `"jobs"` array):
 //!
 //! ```json
 //! {
@@ -20,6 +25,7 @@
 //!   "pipelined": false,
 //!   "inferences": 1,
 //!   "max_weight_slots": 2,
+//!   "engine": "event" | "exact",
 //!   "detach": false
 //! }
 //! ```
@@ -41,8 +47,9 @@ use crate::compiler::{compile, program_key, CompileOptions, CompiledProgram, Gra
 use crate::config::{ClusterConfig, ServerConfig};
 use crate::energy;
 use crate::models;
+use crate::parallel;
 use crate::runtime::json::{self, Value};
-use crate::sim::{Cluster, SimReport};
+use crate::sim::{Cluster, SimMode, SimReport};
 
 use super::cache::ProgramCache;
 use super::http::{Request, Response};
@@ -56,12 +63,19 @@ struct SimRequest {
     graph: Graph,
     cfg: ClusterConfig,
     opts: CompileOptions,
+    mode: SimMode,
     detach: bool,
 }
 
 fn parse_sim_request(body: &[u8]) -> Result<SimRequest> {
     let text = std::str::from_utf8(body).context("body must be UTF-8")?;
     let v = json::parse(text).context("body must be valid JSON")?;
+    parse_sim_value(&v)
+}
+
+/// Parse one simulation-request object (the whole `/compile` /
+/// `/simulate` body, or one element of `/sweep`'s `"jobs"` array).
+fn parse_sim_value(v: &Value) -> Result<SimRequest> {
     let net = v
         .get("net")
         .and_then(|x| x.as_str())
@@ -104,9 +118,48 @@ fn parse_sim_request(body: &[u8]) -> Result<SimRequest> {
         }
         opts.max_weight_slots = slots as usize;
     }
+    let mode = match v.get("engine") {
+        None => SimMode::Event,
+        Some(e) => match e.as_str() {
+            Some("event") => SimMode::Event,
+            Some("exact") => SimMode::Exact,
+            _ => bail!("'engine' must be \"event\" or \"exact\""),
+        },
+    };
     let detach = v.get("detach").and_then(|x| x.as_bool()).unwrap_or(false);
-    Ok(SimRequest { graph, cfg, opts, detach })
+    Ok(SimRequest { graph, cfg, opts, mode, detach })
 }
+
+/// Parse a `POST /sweep` body: `{"jobs": [<sim request>, ...]}`.
+fn parse_sweep_request(body: &[u8]) -> Result<Vec<SimRequest>> {
+    let text = std::str::from_utf8(body).context("body must be UTF-8")?;
+    let v = json::parse(text).context("body must be valid JSON")?;
+    let jobs = match v.get("jobs") {
+        Some(Value::Arr(jobs)) => jobs,
+        _ => bail!("missing array field 'jobs'"),
+    };
+    if jobs.is_empty() {
+        bail!("'jobs' must contain at least one entry");
+    }
+    if jobs.len() > MAX_SWEEP_JOBS {
+        bail!("'jobs' is limited to {MAX_SWEEP_JOBS} entries, got {}", jobs.len());
+    }
+    jobs.iter()
+        .enumerate()
+        .map(|(i, j)| {
+            let req =
+                parse_sim_value(j).with_context(|| format!("parsing jobs[{i}]"))?;
+            if req.detach {
+                bail!("jobs[{i}]: sweep jobs cannot set 'detach'");
+            }
+            Ok(req)
+        })
+        .collect()
+}
+
+/// Upper bound on one sweep's fan-out (bounds memory for the collected
+/// result bodies; larger explorations paginate client-side).
+const MAX_SWEEP_JOBS: usize = 128;
 
 // ---------------------------------------------------------------------------
 // Metrics
@@ -116,15 +169,16 @@ fn parse_sim_request(body: &[u8]) -> Result<SimRequest> {
 pub enum Endpoint {
     Compile = 0,
     Simulate = 1,
-    Jobs = 2,
-    Healthz = 3,
-    Metrics = 4,
-    Other = 5,
+    Sweep = 2,
+    Jobs = 3,
+    Healthz = 4,
+    Metrics = 5,
+    Other = 6,
 }
 
-const N_ENDPOINTS: usize = 6;
+const N_ENDPOINTS: usize = 7;
 const ENDPOINT_NAMES: [&str; N_ENDPOINTS] =
-    ["compile", "simulate", "jobs", "healthz", "metrics", "other"];
+    ["compile", "simulate", "sweep", "jobs", "healthz", "metrics", "other"];
 /// Histogram upper bounds in microseconds (+Inf bucket appended).
 const LATENCY_BUCKETS_US: [u64; 6] = [100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000];
 
@@ -295,13 +349,14 @@ pub fn route(state: &Arc<AppState>, req: &Request) -> Response {
     let (endpoint, response) = match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/compile") => (Endpoint::Compile, handle_compile(state, req)),
         ("POST", "/simulate") => (Endpoint::Simulate, handle_simulate(state, req)),
+        ("POST", "/sweep") => (Endpoint::Sweep, handle_sweep(state, req)),
         ("GET", "/healthz") => (Endpoint::Healthz, handle_healthz(state)),
         ("GET", "/metrics") => (Endpoint::Metrics, handle_metrics(state)),
         ("GET", path) if path.starts_with("/jobs/") => {
             (Endpoint::Jobs, handle_job(state, path))
         }
         ("GET", "/") => (Endpoint::Other, index()),
-        (_, "/compile" | "/simulate" | "/healthz" | "/metrics") => {
+        (_, "/compile" | "/simulate" | "/sweep" | "/healthz" | "/metrics") => {
             (Endpoint::Other, Response::text(405, "method not allowed\n"))
         }
         _ => (Endpoint::Other, Response::text(404, "not found\n")),
@@ -317,6 +372,8 @@ fn index() -> Response {
         "snax serve — compile-and-simulate service\n\
          POST /compile    {\"net\":\"fig6a\",\"cluster\":\"fig6d\",...}\n\
          POST /simulate   same body; add \"detach\":true for async jobs\n\
+         POST /sweep      {\"jobs\":[<simulate bodies>]} — parallel fan-out,\n\
+        \u{20}                results in job order\n\
          GET  /jobs/:id   detached job status/result\n\
          GET  /healthz    liveness\n\
          GET  /metrics    Prometheus metrics\n",
@@ -407,7 +464,7 @@ fn handle_simulate(state: &Arc<AppState>, req: &Request) -> Response {
         return handle_simulate_detached(state, parsed);
     }
     let worker_state = state.clone();
-    let result = match run_on_pool(state, move || simulate_once(&worker_state, &parsed)) {
+    let result = match run_on_pool(state, move || simulate_once(&worker_state, &parsed, None)) {
         Ok(r) => r,
         Err(resp) => return resp,
     };
@@ -433,7 +490,7 @@ fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Respon
         // leave a terminal state behind or pollers would see "running"
         // forever (and the entry would never be pruned).
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            simulate_once(&worker_state, &parsed)
+            simulate_once(&worker_state, &parsed, None)
         }));
         match outcome {
             Ok(Ok((body, _hit))) => worker_state.jobs.set(id, JobState::Done(body)),
@@ -475,18 +532,90 @@ impl SimError {
 }
 
 /// One compile(+cache)+simulate job. Returns the rendered report and
-/// whether the compilation came from the cache.
-fn simulate_once(state: &AppState, req: &SimRequest) -> Result<(String, bool), SimError> {
+/// whether the compilation came from the cache. `func_threads` caps the
+/// simulator's per-retire kernel parallelism (sweep jobs pass 1 — the
+/// job-level fan-out already saturates the cores); `None` sizes per op.
+fn simulate_once(
+    state: &AppState,
+    req: &SimRequest,
+    func_threads: Option<usize>,
+) -> Result<(String, bool), SimError> {
     let key = program_key(&req.graph, &req.cfg, &req.opts);
     let (cp, hit) = state
         .cache
         .get_or_insert_with(key, || compile(&req.graph, &req.cfg, &req.opts))
         .map_err(SimError::Compile)?;
-    let report = Cluster::new(&req.cfg)
-        .run(&cp.program)
+    let mut cluster = Cluster::new(&req.cfg);
+    if let Some(n) = func_threads {
+        cluster = cluster.with_func_threads(n);
+    }
+    let report = cluster
+        .run_mode(&cp.program, req.mode)
         .context("simulating workload")
         .map_err(SimError::Run)?;
     Ok((render_report(&cp, &req.cfg, &report), hit))
+}
+
+/// Batch fan-out: run every job of the sweep concurrently on the
+/// scoped parallel layer and return the rendered reports **in job
+/// order**. One sweep occupies one worker-pool slot (so `/simulate`
+/// traffic is not starved) and fans its jobs across
+/// `server_cfg.workers` scoped threads; [`parallel::map_indexed`]
+/// guarantees result slot `i` belongs to `jobs[i]` regardless of
+/// scheduling, so identical requests produce byte-identical bodies at
+/// any thread count. Per-job failures become inline `{"error": ...}`
+/// objects instead of failing the whole sweep.
+fn handle_sweep(state: &Arc<AppState>, req: &Request) -> Response {
+    let jobs = match parse_sweep_request(&req.body) {
+        Ok(jobs) => jobs,
+        Err(e) => return Response::json(400, err_body(&format!("{e:#}"))),
+    };
+    let worker_state = state.clone();
+    let results = match run_on_pool(state, move || {
+        let workers = worker_state.server_cfg.workers.max(1);
+        let threads = workers.min(jobs.len());
+        // Split the core budget between job-level fan-out and
+        // per-retire band threads instead of multiplying them
+        // (fan-out x bands = cores^2 oversubscription otherwise).
+        let kernel_cap =
+            if threads > 1 { Some((workers / threads).max(1)) } else { None };
+        parallel::map_indexed(jobs.len(), threads, |i| {
+            simulate_once(&worker_state, &jobs[i], kernel_cap)
+        })
+    }) {
+        Ok(r) => r,
+        Err(resp) => return resp,
+    };
+    // Cache status deliberately stays out of the fragments (as for
+    // /simulate) so repeat sweeps are byte-identical.
+    let fragments: Vec<String> = results
+        .into_iter()
+        .map(|r| match r {
+            Ok((report, _hit)) => report,
+            Err(e) => err_body(&format!("{:#}", e.into_inner())),
+        })
+        .collect();
+    Response::json(200, render_sweep_body(&fragments))
+}
+
+/// Assemble the sweep envelope from per-job JSON fragments (rendered
+/// reports or `{"error": ...}` objects), in job order. Shared by
+/// `POST /sweep` and `snax sweep --json` so the two outputs cannot
+/// drift.
+pub fn render_sweep_body(fragments: &[String]) -> String {
+    let mut body =
+        String::with_capacity(32 + fragments.iter().map(|f| f.len() + 1).sum::<usize>());
+    body.push_str("{\"count\":");
+    body.push_str(&fragments.len().to_string());
+    body.push_str(",\"results\":[");
+    for (i, f) in fragments.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(f);
+    }
+    body.push_str("]}");
+    body
 }
 
 fn handle_job(state: &Arc<AppState>, path: &str) -> Response {
@@ -799,6 +928,70 @@ mod tests {
         assert_eq!(route(&st, &get("/jobs/999999")).status, 404);
         assert_eq!(route(&st, &get("/jobs/banana")).status, 400);
         st.pool.shutdown();
+    }
+
+    #[test]
+    fn sweep_validation_rejects_bad_bodies() {
+        assert!(parse_sweep_request(b"not json").is_err());
+        assert!(parse_sweep_request(br#"{"net":"fig6a"}"#).is_err());
+        assert!(parse_sweep_request(br#"{"jobs":[]}"#).is_err());
+        assert!(parse_sweep_request(br#"{"jobs":[{"net":"nope"}]}"#).is_err());
+        // Job index surfaces in the error for multi-job bodies.
+        let err = parse_sweep_request(br#"{"jobs":[{"net":"fig6a"},{"net":"nope"}]}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("jobs[1]"), "{err:#}");
+        assert!(
+            parse_sweep_request(br#"{"jobs":[{"net":"fig6a","detach":true}]}"#).is_err()
+        );
+        let ok =
+            parse_sweep_request(br#"{"jobs":[{"net":"fig6a"},{"net":"fig6a","engine":"exact"}]}"#)
+                .unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok[1].mode, SimMode::Exact);
+    }
+
+    #[test]
+    fn sweep_results_are_order_deterministic_across_worker_counts() {
+        let body = r#"{"jobs":[
+            {"net":"fig6a","cluster":"fig6b"},
+            {"net":"fig6a","cluster":"fig6c"},
+            {"net":"fig6a","cluster":"fig6d"},
+            {"net":"fig6a","cluster":"fig6c","engine":"exact"}
+        ]}"#;
+        let mut bodies = Vec::new();
+        for workers in [1usize, 3] {
+            let st = Arc::new(AppState::new(&ServerConfig {
+                port: 0,
+                workers,
+                cache_capacity: 8,
+                queue_depth: 16,
+            }));
+            let resp = route(&st, &post("/sweep", body));
+            assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+            let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(v.get("count").unwrap().as_u64(), Some(4));
+            let results = match v.get("results").unwrap() {
+                Value::Arr(r) => r,
+                other => panic!("results not an array: {other:?}"),
+            };
+            assert_eq!(results.len(), 4);
+            // Slot i belongs to jobs[i]: the cluster names line up.
+            for (r, want) in results.iter().zip(["fig6b", "fig6c", "fig6d", "fig6c"]) {
+                assert_eq!(r.get("cluster").unwrap().as_str(), Some(want));
+            }
+            // Engine equivalence: exact-engine job 3 reports the same
+            // cycle count as event-engine job 1 on the same config.
+            assert_eq!(
+                results[3].get("total_cycles").unwrap().as_u64(),
+                results[1].get("total_cycles").unwrap().as_u64()
+            );
+            bodies.push(resp.body.clone());
+            st.pool.shutdown();
+        }
+        assert_eq!(
+            bodies[0], bodies[1],
+            "sweep bodies must be byte-identical at any worker count"
+        );
     }
 
     #[test]

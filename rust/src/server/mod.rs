@@ -7,7 +7,8 @@
 //! * [`http`] — dependency-light HTTP/1.1 framing over
 //!   `std::net::TcpListener` (no hyper/axum in this environment);
 //! * [`api`] — the endpoints: `POST /compile`, `POST /simulate`,
-//!   `GET /jobs/:id`, `GET /healthz`, `GET /metrics`;
+//!   `POST /sweep` (parallel batch fan-out with deterministic result
+//!   ordering), `GET /jobs/:id`, `GET /healthz`, `GET /metrics`;
 //! * [`cache`] — sharded content-addressed compiled-program cache keyed
 //!   by [`crate::compiler::program_key`], so repeat simulations skip
 //!   the compiler entirely;
@@ -38,7 +39,7 @@ use crate::config::ServerConfig;
 
 use api::AppState;
 
-pub use api::render_report;
+pub use api::{render_report, render_sweep_body};
 
 /// How long an idle keep-alive connection may sit between requests.
 const READ_TIMEOUT: Duration = Duration::from_secs(30);

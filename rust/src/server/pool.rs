@@ -11,6 +11,12 @@
 //! work, lets workers drain everything already queued, then joins them.
 //! A panicking job is caught and counted — it must not take a worker
 //! (and every later job on that worker) down with it.
+//!
+//! The scoped data-parallel layer ([`crate::parallel`]) shares this
+//! module's sizing and shutdown discipline for *borrowing* workloads
+//! (band-split kernels, sweep fan-out): same per-core sizing via
+//! [`crate::parallel::default_parallelism`], and scope-join-on-return
+//! as the structural analogue of drain-then-join.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

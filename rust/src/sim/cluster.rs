@@ -39,7 +39,7 @@ use super::accel::{model_for, AccelModel, CounterClass, EmitRule};
 use super::barrier::BarrierFile;
 use super::csr::CsrFile;
 use super::dma::{DmaDir, DmaJob};
-use super::functional::apply_op;
+use super::functional::{apply_op_scratch, FnScratch};
 use super::job::OpDesc;
 use super::mem::{ExtMem, Spm};
 use super::streamer::{beat_bank_mask, BeatWalker, Streamer};
@@ -129,11 +129,25 @@ struct SKey {
 /// any number of programs.
 pub struct Cluster {
     cfg: ClusterConfig,
+    /// Cap on worker threads for large functional retires (`None` =
+    /// size per op). See [`Cluster::with_func_threads`].
+    func_threads: Option<usize>,
 }
 
 impl Cluster {
     pub fn new(cfg: &ClusterConfig) -> Self {
-        Self { cfg: cfg.clone() }
+        Self { cfg: cfg.clone(), func_threads: None }
+    }
+
+    /// Cap the worker threads used for large functional retires
+    /// (`1` = fully serial kernels). Sweep fan-outs pass their share
+    /// of the core budget (`cores / fan_out`) so job-level and
+    /// band-level parallelism compose instead of multiplying into
+    /// `cores²` oversubscription. Reports and SPM contents are
+    /// byte-identical at any cap.
+    pub fn with_func_threads(mut self, n: usize) -> Self {
+        self.func_threads = Some(n.max(1));
+        self
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -188,7 +202,7 @@ impl Cluster {
                 self.cfg.cores.len()
             );
         }
-        SimState::new(&self.cfg, program)
+        SimState::new(&self.cfg, program, self.func_threads)
     }
 }
 
@@ -235,6 +249,9 @@ struct SimState<'p> {
     /// conflicted phases where no uniform span exists.
     next_plan_at: u64,
     plan_backoff: u64,
+    /// Reusable functional-retire buffers (operand staging, output, and
+    /// per-worker im2col packing) — no per-retire heap allocation.
+    scratch: FnScratch,
     cycle: u64,
 }
 
@@ -291,7 +308,11 @@ struct SpanPlan {
 }
 
 impl<'p> SimState<'p> {
-    fn new(cfg: &'p ClusterConfig, program: &'p Program) -> Result<Self> {
+    fn new(
+        cfg: &'p ClusterConfig,
+        program: &'p Program,
+        func_threads: Option<usize>,
+    ) -> Result<Self> {
         let word = cfg.bank_word_bytes();
         let banks = cfg.banks;
         let mut units = Vec::new();
@@ -406,6 +427,10 @@ impl<'p> SimState<'p> {
             mode: SimMode::Event,
             next_plan_at: 0,
             plan_backoff: 1,
+            scratch: match func_threads {
+                Some(cap) => FnScratch::with_max_threads(cap),
+                None => FnScratch::new(),
+            },
             group_base,
             group_of,
             groups,
@@ -831,7 +856,7 @@ impl<'p> SimState<'p> {
             // Retire a completed software kernel (functional effect).
             if let Some(sw) = self.cores[ci].pending_sw.take() {
                 if let Some(op) = &sw.op {
-                    apply_op(op, &mut self.spm)
+                    apply_op_scratch(op, &mut self.spm, &mut self.scratch)
                         .with_context(|| format!("sw kernel on core {ci}"))?;
                     self.counters.macs_retired += op.macs();
                     self.counters.elem_ops_retired += op.elem_ops();
@@ -1307,7 +1332,7 @@ impl<'p> SimState<'p> {
             if let Some(dj) = &job.dma {
                 self.dma_copy(dj)?;
             } else if let Some(desc) = &job.desc {
-                apply_op(desc, &mut self.spm)
+                apply_op_scratch(desc, &mut self.spm, &mut self.scratch)
                     .with_context(|| format!("retiring job on '{}'", self.units[ui].name))?;
                 self.counters.macs_retired += desc.macs();
                 self.counters.elem_ops_retired += desc.elem_ops();

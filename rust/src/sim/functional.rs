@@ -5,21 +5,64 @@
 //!
 //! Applied to scratchpad memory when a simulated job retires; verified
 //! against the AOT PJRT artifacts in the integration tests.
+//!
+//! ## Two implementations per matmul-class kernel
+//!
+//! The retire path is the simulator's functional hot spot (conv2d alone
+//! was ~25% of wall-clock before this pass), so GEMM and conv ship in
+//! two forms:
+//!
+//! * **naive oracles** ([`gemm_naive`], [`conv2d_naive`]) — the
+//!   original triple loops, kept as the bit-exactness reference for the
+//!   equivalence proptests and the `func_speed` bench;
+//! * **blocked microkernel** ([`gemm`], [`conv2d`], and the `_into`
+//!   zero-alloc variants) — a cache-blocked, packed int8 GEMM with i32
+//!   accumulators and an unrolled `cout`-innermost [`MR`]×[`NR`]
+//!   register tile that autovectorizes. `conv2d` lowers onto it via
+//!   *implicit im2col*: patch rows are packed on the fly into a small
+//!   reusable buffer (one per worker thread), never materializing the
+//!   full im2col matrix. Large ops additionally split across output-row
+//!   bands on the scoped work-stealing pool ([`crate::parallel`]).
+//!
+//! Both forms produce byte-identical output for every shape: integer
+//! accumulation is associative and commutative mod 2³², padding taps
+//! contribute exact zeros in either formulation, and the requantize /
+//! relu epilogue is shared. `rust/tests/proptests.rs` enforces this
+//! over randomized shapes and thread counts.
 
 use anyhow::Result;
+
+use crate::parallel;
 
 use super::job::{OpDesc, Region};
 use super::mem::Spm;
 
+/// Round-to-nearest right-shift with int8 saturation.
+///
+/// Computed in i64: the rounding bias `1 << (shift - 1)` overflows i32
+/// for `shift >= 32` (a debug-build panic / release UB-by-wrap), and
+/// `acc + bias` can overflow i32 even for small shifts. Shifts beyond
+/// 63 saturate to 63 — the result is already 0/-0 for any i32 input
+/// from shift 39 on, so the clamp is semantically free.
 #[inline]
 pub fn requantize(acc: i32, shift: u32) -> i8 {
-    let r = if shift > 0 { (acc + (1 << (shift - 1))) >> shift } else { acc };
+    let r = if shift > 0 {
+        let s = shift.min(63);
+        (acc as i64 + (1i64 << (s - 1))) >> s
+    } else {
+        acc as i64
+    };
     r.clamp(-128, 127) as i8
 }
 
-/// `C[M,N] = A[M,K] @ B[K,N]` over int8 with int32 accumulation.
-/// Output is int8 (requantized, optional relu) or raw int32.
-pub fn gemm(
+// ---------------------------------------------------------------------------
+// Naive oracles
+// ---------------------------------------------------------------------------
+
+/// `C[M,N] = A[M,K] @ B[K,N]` over int8 with int32 accumulation —
+/// the naive reference implementation (bit-exactness oracle for
+/// [`gemm`]). Output is int8 (requantized, optional relu) or raw int32.
+pub fn gemm_naive(
     a: &[i8],
     b: &[i8],
     m: usize,
@@ -51,9 +94,10 @@ pub fn gemm(
 }
 
 /// NHWC int8 conv (weights `[kh*kw*cin, cout]` row-major, i.e. the
-/// im2col layout the streamers feed the GeMM array).
+/// im2col layout the streamers feed the GeMM array) — the naive
+/// reference implementation (bit-exactness oracle for [`conv2d`]).
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d(
+pub fn conv2d_naive(
     input: &[i8],
     weights: &[i8],
     n: usize,
@@ -72,9 +116,7 @@ pub fn conv2d(
     let wo = (w + 2 * pad - kw) / stride + 1;
     let mut out = vec![0u8; n * ho * wo * cout];
     // Accumulate per output pixel with `oc` innermost: the weight row
-    // `[.., ic, 0..cout]` is contiguous, so the inner loop vectorizes
-    // (this function is ~25% of simulation wall-clock — see
-    // EXPERIMENTS.md §Perf).
+    // `[.., ic, 0..cout]` is contiguous, so the inner loop vectorizes.
     let mut acc = vec![0i32; cout];
     for b in 0..n {
         for oy in 0..ho {
@@ -118,8 +160,412 @@ pub fn conv2d(
     out
 }
 
-/// NHWC int8 max-pool.
-pub fn maxpool(
+// ---------------------------------------------------------------------------
+// Blocked microkernel
+// ---------------------------------------------------------------------------
+
+/// A-rows per register tile (packed-panel height).
+const MR: usize = 4;
+/// Accumulator lanes per j-strip (i32 lanes; 16 = four SSE vectors).
+const NR: usize = 16;
+
+/// Ops below this MAC count run single-threaded: scoped thread spawn
+/// (~tens of µs) must stay well under the band compute time.
+const PAR_MIN_MACS: u64 = 2 << 20;
+
+/// Worker count for one op of `macs` multiply-accumulates.
+fn par_threads(macs: u64) -> usize {
+    if macs >= PAR_MIN_MACS {
+        parallel::default_parallelism()
+    } else {
+        1
+    }
+}
+
+/// Output element handling shared by the gemm and conv kernels.
+#[derive(Clone, Copy)]
+struct Epilogue {
+    shift: u32,
+    relu: bool,
+    i32_out: bool,
+}
+
+impl Epilogue {
+    #[inline]
+    fn esize(&self) -> usize {
+        if self.i32_out {
+            4
+        } else {
+            1
+        }
+    }
+
+    #[inline]
+    fn write(&self, acc: i32, dst: &mut [u8]) {
+        if self.i32_out {
+            dst[..4].copy_from_slice(&acc.to_le_bytes());
+        } else {
+            let mut v = requantize(acc, self.shift);
+            if self.relu && v < 0 {
+                v = 0;
+            }
+            dst[0] = v as u8;
+        }
+    }
+}
+
+/// Compute `rows` (≤ [`MR`]) consecutive output rows of `C = A @ B`
+/// where the A rows are packed contiguously (`a[r*k .. (r+1)*k]`), and
+/// apply the epilogue into `out` (row stride `n * ep.esize()`).
+///
+/// The `rows == MR && jw == NR` fast path has compile-time trip counts
+/// on both register-tile loops, so the accumulator block lives in SIMD
+/// registers and the `cout`-innermost multiply autovectorizes; edge
+/// tiles (bottom rows, right columns) take the scalar-flexible path.
+fn gemm_row_block(
+    a: &[i8],
+    rows: usize,
+    k: usize,
+    b: &[i8],
+    n: usize,
+    ep: Epilogue,
+    out: &mut [u8],
+) {
+    let esize = ep.esize();
+    let ostride = n * esize;
+    let mut j0 = 0;
+    while j0 < n {
+        let jw = NR.min(n - j0);
+        let mut acc = [[0i32; NR]; MR];
+        if rows == MR && jw == NR {
+            let (a0, a1, a2, a3) =
+                (&a[..k], &a[k..2 * k], &a[2 * k..3 * k], &a[3 * k..4 * k]);
+            for p in 0..k {
+                // Widen the B strip once, reuse it for all MR rows.
+                let bb = &b[p * n + j0..p * n + j0 + NR];
+                let mut bw = [0i32; NR];
+                for (d, &s) in bw.iter_mut().zip(bb) {
+                    *d = s as i32;
+                }
+                let av = [a0[p] as i32, a1[p] as i32, a2[p] as i32, a3[p] as i32];
+                for r in 0..MR {
+                    for (jj, &bv) in bw.iter().enumerate() {
+                        acc[r][jj] += av[r] * bv;
+                    }
+                }
+            }
+        } else {
+            for p in 0..k {
+                let bb = &b[p * n + j0..p * n + j0 + jw];
+                for r in 0..rows {
+                    let av = a[r * k + p] as i32;
+                    let accr = &mut acc[r];
+                    for (jj, &bv) in bb.iter().enumerate() {
+                        accr[jj] += av * bv as i32;
+                    }
+                }
+            }
+        }
+        for r in 0..rows {
+            let orow = &mut out[r * ostride + j0 * esize..r * ostride + (j0 + jw) * esize];
+            for jj in 0..jw {
+                ep.write(acc[r][jj], &mut orow[jj * esize..]);
+            }
+        }
+        j0 += NR;
+    }
+}
+
+/// One contiguous band of GEMM output rows (A rows already packed —
+/// for plain GEMM the row-major A *is* the packed layout).
+fn gemm_band(a: &[i8], nrows: usize, k: usize, b: &[i8], n: usize, ep: Epilogue, out: &mut [u8]) {
+    let ostride = n * ep.esize();
+    let mut i0 = 0;
+    while i0 < nrows {
+        let rows = MR.min(nrows - i0);
+        gemm_row_block(
+            &a[i0 * k..(i0 + rows) * k],
+            rows,
+            k,
+            b,
+            n,
+            ep,
+            &mut out[i0 * ostride..],
+        );
+        i0 += MR;
+    }
+}
+
+/// Rows per work-stealing chunk: ~4 chunks per worker, rounded to whole
+/// [`MR`] row groups so only the final chunk has a partial tile.
+fn band_rows(total_rows: usize, threads: usize) -> usize {
+    total_rows.div_ceil(threads * 4).next_multiple_of(MR)
+}
+
+/// Blocked `C[M,N] = A[M,K] @ B[K,N]` into a caller-provided buffer
+/// (`out.len() == m * n * esize`), split across `threads` output-row
+/// bands. Byte-identical to [`gemm_naive`] for every shape and thread
+/// count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    shift: u32,
+    relu: bool,
+    i32_out: bool,
+    threads: usize,
+    out: &mut [u8],
+) {
+    let ep = Epilogue { shift, relu, i32_out };
+    let ostride = n * ep.esize();
+    assert_eq!(out.len(), m * ostride, "gemm output buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m.div_ceil(MR));
+    if threads == 1 {
+        gemm_band(a, m, k, b, n, ep, out);
+        return;
+    }
+    let rows_per_chunk = band_rows(m, threads);
+    let mut ctxs = vec![(); threads];
+    parallel::for_each_chunk(out, rows_per_chunk * ostride, &mut ctxs, |_, ci, chunk| {
+        let r0 = ci * rows_per_chunk;
+        let nrows = chunk.len() / ostride;
+        gemm_band(&a[r0 * k..(r0 + nrows) * k], nrows, k, b, n, ep, chunk);
+    });
+}
+
+/// `C[M,N] = A[M,K] @ B[K,N]` over int8 with int32 accumulation —
+/// blocked-microkernel implementation (see module docs). Output is int8
+/// (requantized, optional relu) or raw int32.
+pub fn gemm(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    shift: u32,
+    relu: bool,
+    i32_out: bool,
+) -> Vec<u8> {
+    let mut out = vec![0u8; m * n * if i32_out { 4 } else { 1 }];
+    let macs = m as u64 * k as u64 * n as u64;
+    gemm_into(a, b, m, k, n, shift, relu, i32_out, par_threads(macs), &mut out);
+    out
+}
+
+/// Pack one im2col patch row (`kh*kw*cin` bytes) for output pixel
+/// `(b, oy, ox)`, zero-filling padding taps. For each `ky` the `kw`
+/// taps cover a *contiguous* NHWC span of the input row, so the
+/// in-range middle is a single memcpy with zeroed edges.
+#[allow(clippy::too_many_arguments)]
+fn pack_patch(
+    dst: &mut [i8],
+    input: &[i8],
+    b: usize,
+    oy: usize,
+    ox: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let seg = kw * cin;
+    let ix0 = (ox * stride) as i64 - pad as i64;
+    // Clip the kx walk [ix0, ix0 + kw) to the valid [0, w).
+    let lo = (-ix0).max(0).min(kw as i64) as usize;
+    let hi = (w as i64 - ix0).clamp(0, kw as i64) as usize;
+    for ky in 0..kh {
+        let off = ky * seg;
+        let iy = (oy * stride + ky) as i64 - pad as i64;
+        if iy < 0 || iy >= h as i64 || lo >= hi {
+            dst[off..off + seg].fill(0);
+            continue;
+        }
+        dst[off..off + lo * cin].fill(0);
+        let ibase = ((b * h + iy as usize) * w + (ix0 + lo as i64) as usize) * cin;
+        dst[off + lo * cin..off + hi * cin]
+            .copy_from_slice(&input[ibase..ibase + (hi - lo) * cin]);
+        dst[off + hi * cin..off + seg].fill(0);
+    }
+}
+
+/// One contiguous band of conv output-pixel rows: packs [`MR`] implicit
+/// im2col rows at a time into `pack` (a per-worker reusable buffer) and
+/// feeds the shared GEMM row-block kernel.
+#[allow(clippy::too_many_arguments)]
+fn conv_band(
+    pack: &mut Vec<i8>,
+    input: &[i8],
+    weights: &[i8],
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+    ep: Epilogue,
+    row0: usize,
+    nrows: usize,
+    out: &mut [u8],
+) {
+    let kk = kh * kw * cin;
+    pack.clear();
+    pack.resize(MR * kk, 0);
+    let mut i0 = 0;
+    while i0 < nrows {
+        let rows = MR.min(nrows - i0);
+        for r in 0..rows {
+            let pix = row0 + i0 + r;
+            let b = pix / (ho * wo);
+            let rem = pix % (ho * wo);
+            pack_patch(
+                &mut pack[r * kk..(r + 1) * kk],
+                input,
+                b,
+                rem / wo,
+                rem % wo,
+                h,
+                w,
+                cin,
+                kh,
+                kw,
+                stride,
+                pad,
+            );
+        }
+        gemm_row_block(&pack[..rows * kk], rows, kk, weights, cout, ep, &mut out[i0 * cout..]);
+        i0 += MR;
+    }
+}
+
+/// Blocked NHWC conv into a caller-provided buffer via implicit im2col
+/// (weights `[kh*kw*cin, cout]` row-major), split across `threads`
+/// output-pixel bands with one packing buffer per worker. Byte-identical
+/// to [`conv2d_naive`] for every shape and thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into(
+    input: &[i8],
+    weights: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    shift: u32,
+    relu: bool,
+    threads: usize,
+    packs: &mut Vec<Vec<i8>>,
+    out: &mut [u8],
+) {
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let rows_total = n * ho * wo;
+    assert_eq!(out.len(), rows_total * cout, "conv output buffer size");
+    if rows_total == 0 || cout == 0 {
+        return;
+    }
+    let ep = Epilogue { shift, relu, i32_out: false };
+    let threads = threads.clamp(1, rows_total.div_ceil(MR));
+    if packs.len() < threads {
+        packs.resize_with(threads, Vec::new);
+    }
+    if threads == 1 {
+        conv_band(
+            &mut packs[0], input, weights, h, w, cin, cout, kh, kw, stride, pad, ho, wo, ep,
+            0, rows_total, out,
+        );
+        return;
+    }
+    let rows_per_chunk = band_rows(rows_total, threads);
+    parallel::for_each_chunk(out, rows_per_chunk * cout, &mut packs[..threads], |pack, ci, chunk| {
+        conv_band(
+            pack,
+            input,
+            weights,
+            h,
+            w,
+            cin,
+            cout,
+            kh,
+            kw,
+            stride,
+            pad,
+            ho,
+            wo,
+            ep,
+            ci * rows_per_chunk,
+            chunk.len() / cout,
+            chunk,
+        );
+    });
+}
+
+/// NHWC int8 conv (weights `[kh*kw*cin, cout]` row-major) —
+/// blocked-microkernel implementation (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    input: &[i8],
+    weights: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    shift: u32,
+    relu: bool,
+) -> Vec<u8> {
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let mut out = vec![0u8; n * ho * wo * cout];
+    let macs = (n * ho * wo) as u64 * (kh * kw * cin) as u64 * cout as u64;
+    let mut packs = Vec::new();
+    conv2d_into(
+        input,
+        weights,
+        n,
+        h,
+        w,
+        cin,
+        cout,
+        kh,
+        kw,
+        stride,
+        pad,
+        shift,
+        relu,
+        par_threads(macs),
+        &mut packs,
+        &mut out,
+    );
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise / pooling kernels
+// ---------------------------------------------------------------------------
+
+/// NHWC int8 max-pool into a caller-provided buffer.
+fn maxpool_into(
     input: &[i8],
     n: usize,
     h: usize,
@@ -127,10 +573,11 @@ pub fn maxpool(
     c: usize,
     k: usize,
     s: usize,
-) -> Vec<u8> {
+    out: &mut [u8],
+) {
     let ho = (h - k) / s + 1;
     let wo = (w - k) / s + 1;
-    let mut out = vec![0u8; n * ho * wo * c];
+    debug_assert_eq!(out.len(), n * ho * wo * c);
     for b in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -150,27 +597,49 @@ pub fn maxpool(
             }
         }
     }
+}
+
+/// NHWC int8 max-pool.
+pub fn maxpool(
+    input: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    s: usize,
+) -> Vec<u8> {
+    let ho = (h - k) / s + 1;
+    let wo = (w - k) / s + 1;
+    let mut out = vec![0u8; n * ho * wo * c];
+    maxpool_into(input, n, h, w, c, k, s, &mut out);
     out
+}
+
+/// Saturating int8 add with optional relu into a caller-provided buffer.
+fn vecadd_into(a: &[i8], b: &[i8], relu: bool, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), a.len());
+    for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+        let mut v = (x as i32 + y as i32).clamp(-128, 127) as i8;
+        if relu && v < 0 {
+            v = 0;
+        }
+        *o = v as u8;
+    }
 }
 
 /// Saturating int8 add with optional relu.
 pub fn vecadd(a: &[i8], b: &[i8], relu: bool) -> Vec<u8> {
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| {
-            let mut v = (x as i32 + y as i32).clamp(-128, 127) as i8;
-            if relu && v < 0 {
-                v = 0;
-            }
-            v as u8
-        })
-        .collect()
+    let mut out = vec![0u8; a.len()];
+    vecadd_into(a, b, relu, &mut out);
+    out
 }
 
-/// Global average pool NHWC -> [n, c], round-to-nearest integer mean.
-pub fn global_avgpool(input: &[i8], n: usize, h: usize, w: usize, c: usize) -> Vec<u8> {
+/// Global average pool NHWC -> [n, c], round-to-nearest integer mean,
+/// into a caller-provided buffer.
+fn global_avgpool_into(input: &[i8], n: usize, h: usize, w: usize, c: usize, out: &mut [u8]) {
     let cnt = (h * w) as i32;
-    let mut out = vec![0u8; n * c];
+    debug_assert_eq!(out.len(), n * c);
     for b in 0..n {
         for ch in 0..c {
             let mut s: i32 = 0;
@@ -182,6 +651,12 @@ pub fn global_avgpool(input: &[i8], n: usize, h: usize, w: usize, c: usize) -> V
             out[b * c + ch] = (((s + cnt / 2).div_euclid(cnt)).clamp(-128, 127)) as i8 as u8;
         }
     }
+}
+
+/// Global average pool NHWC -> [n, c], round-to-nearest integer mean.
+pub fn global_avgpool(input: &[i8], n: usize, h: usize, w: usize, c: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n * c];
+    global_avgpool_into(input, n, h, w, c, &mut out);
     out
 }
 
@@ -190,58 +665,153 @@ fn as_i8(bytes: &[u8]) -> &[i8] {
     unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
 }
 
+// ---------------------------------------------------------------------------
+// Retire-path application
+// ---------------------------------------------------------------------------
+
+/// Reusable buffers for the retire path: operand copies, the output
+/// staging buffer, and one im2col packing buffer per worker thread.
+/// Held in the simulator's state ([`crate::sim::Cluster`] runs) so the
+/// steady state performs **zero heap allocation per retired job** —
+/// every `Vec` here reaches its high-water capacity once and is reused.
+#[derive(Default)]
+pub struct FnScratch {
+    a: Vec<i8>,
+    b: Vec<i8>,
+    out: Vec<u8>,
+    packs: Vec<Vec<i8>>,
+    /// Cap on per-retire kernel workers (`None` = size by op). Sweep
+    /// fan-outs set this to their share of the core budget
+    /// (`cores / fan_out`) so job-level and band-level parallelism
+    /// compose instead of multiplying into oversubscription.
+    max_threads: Option<usize>,
+}
+
+impl FnScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch whose kernels never use more than `n` worker threads
+    /// (results are byte-identical at any cap — see module docs).
+    pub fn with_max_threads(n: usize) -> Self {
+        Self { max_threads: Some(n.max(1)), ..Self::default() }
+    }
+
+    /// Worker count for one op of `macs` multiply-accumulates under
+    /// this scratch's cap.
+    fn threads_for(&self, macs: u64) -> usize {
+        let auto = par_threads(macs);
+        match self.max_threads {
+            Some(cap) => auto.min(cap),
+            None => auto,
+        }
+    }
+}
+
 /// Apply a retired job's functional effect to scratchpad memory.
+///
+/// Allocates fresh scratch per call — convenient for tests and one-shot
+/// evaluation; the simulator's retire loop uses [`apply_op_scratch`]
+/// with persistent buffers instead.
 pub fn apply_op(desc: &OpDesc, spm: &mut Spm) -> Result<()> {
+    apply_op_scratch(desc, spm, &mut FnScratch::new())
+}
+
+/// Apply a retired job's functional effect to scratchpad memory,
+/// staging operands and results in `scratch` (no per-retire heap
+/// allocation once the buffers are warm). Large GEMM / conv ops run
+/// parallel across output-row bands; results are byte-identical to the
+/// naive single-threaded oracles regardless of thread count.
+pub fn apply_op_scratch(desc: &OpDesc, spm: &mut Spm, scratch: &mut FnScratch) -> Result<()> {
     match *desc {
         OpDesc::Gemm { a, b, c, m, k, n, shift, relu, i32_out } => {
             let (m, k, n) = (m as usize, k as usize, n as usize);
-            let av = as_i8(spm.read(a, m * k)?).to_vec();
-            let bv = as_i8(spm.read(b, k * n)?).to_vec();
-            let out = gemm(&av, &bv, m, k, n, shift, relu, i32_out);
-            spm.write(c, &out)
+            spm.read_i8_into(a, m * k, &mut scratch.a)?;
+            spm.read_i8_into(b, k * n, &mut scratch.b)?;
+            scratch.out.clear();
+            scratch.out.resize(m * n * if i32_out { 4 } else { 1 }, 0);
+            let threads = scratch.threads_for(desc.macs());
+            gemm_into(
+                &scratch.a, &scratch.b, m, k, n, shift, relu, i32_out, threads,
+                &mut scratch.out,
+            );
+            spm.write(c, &scratch.out)
         }
         OpDesc::Conv2d {
             input, weights, out, n, h, w, cin, cout, kh, kw, stride, pad, shift, relu,
         } => {
             let (n, h, w) = (n as usize, h as usize, w as usize);
             let (cin, cout, kh, kw) = (cin as usize, cout as usize, kh as usize, kw as usize);
-            let iv = as_i8(spm.read(input, n * h * w * cin)?).to_vec();
-            let wv = as_i8(spm.read(weights, kh * kw * cin * cout)?).to_vec();
-            let o = conv2d(
-                &iv, &wv, n, h, w, cin, cout, kh, kw, stride as usize, pad as usize, shift,
+            let (stride, pad) = (stride as usize, pad as usize);
+            let ho = (h + 2 * pad - kh) / stride + 1;
+            let wo = (w + 2 * pad - kw) / stride + 1;
+            spm.read_i8_into(input, n * h * w * cin, &mut scratch.a)?;
+            spm.read_i8_into(weights, kh * kw * cin * cout, &mut scratch.b)?;
+            scratch.out.clear();
+            scratch.out.resize(n * ho * wo * cout, 0);
+            let threads = scratch.threads_for(desc.macs());
+            conv2d_into(
+                &scratch.a,
+                &scratch.b,
+                n,
+                h,
+                w,
+                cin,
+                cout,
+                kh,
+                kw,
+                stride,
+                pad,
+                shift,
                 relu,
+                threads,
+                &mut scratch.packs,
+                &mut scratch.out,
             );
-            spm.write(out, &o)
+            spm.write(out, &scratch.out)
         }
         OpDesc::MaxPool { input, out, n, h, w, c, k, s } => {
             let (n, h, w, c) = (n as usize, h as usize, w as usize, c as usize);
-            let iv = as_i8(spm.read(input, n * h * w * c)?).to_vec();
-            let o = maxpool(&iv, n, h, w, c, k as usize, s as usize);
-            spm.write(out, &o)
+            let (k, s) = (k as usize, s as usize);
+            spm.read_i8_into(input, n * h * w * c, &mut scratch.a)?;
+            let ho = (h - k) / s + 1;
+            let wo = (w - k) / s + 1;
+            scratch.out.clear();
+            scratch.out.resize(n * ho * wo * c, 0);
+            maxpool_into(&scratch.a, n, h, w, c, k, s, &mut scratch.out);
+            spm.write(out, &scratch.out)
         }
         OpDesc::VecAdd { a, b, out, len, relu } => {
-            let av = as_i8(spm.read(a, len as usize)?).to_vec();
-            let bv = as_i8(spm.read(b, len as usize)?).to_vec();
-            let o = vecadd(&av, &bv, relu);
-            spm.write(out, &o)
+            spm.read_i8_into(a, len as usize, &mut scratch.a)?;
+            spm.read_i8_into(b, len as usize, &mut scratch.b)?;
+            scratch.out.clear();
+            scratch.out.resize(len as usize, 0);
+            vecadd_into(&scratch.a, &scratch.b, relu, &mut scratch.out);
+            spm.write(out, &scratch.out)
         }
         OpDesc::Relu { buf, len } => {
-            let v: Vec<u8> = as_i8(spm.read(buf, len as usize)?)
-                .iter()
-                .map(|&x| if x < 0 { 0 } else { x as u8 })
-                .collect();
-            spm.write(buf, &v)
+            spm.read_i8_into(buf, len as usize, &mut scratch.a)?;
+            scratch.out.clear();
+            scratch
+                .out
+                .extend(scratch.a.iter().map(|&x| if x < 0 { 0 } else { x as u8 }));
+            spm.write(buf, &scratch.out)
         }
         OpDesc::GlobalAvgPool { input, out, n, h, w, c } => {
             let (n, h, w, c) = (n as usize, h as usize, w as usize, c as usize);
-            let iv = as_i8(spm.read(input, n * h * w * c)?).to_vec();
-            let o = global_avgpool(&iv, n, h, w, c);
-            spm.write(out, &o)
+            spm.read_i8_into(input, n * h * w * c, &mut scratch.a)?;
+            scratch.out.clear();
+            scratch.out.resize(n * c, 0);
+            global_avgpool_into(&scratch.a, n, h, w, c, &mut scratch.out);
+            spm.write(out, &scratch.out)
         }
         OpDesc::TileRows { input, out, len, rows } => {
-            let row = spm.read(input, len as usize)?.to_vec();
+            let row = spm.read(input, len as usize)?;
+            scratch.out.clear();
+            scratch.out.extend_from_slice(row);
             for r in 0..rows as u64 {
-                spm.write(Region(out.0 + r * len as u64), &row)?;
+                spm.write(Region(out.0 + r * len as u64), &scratch.out)?;
             }
             Ok(())
         }
@@ -263,6 +833,23 @@ mod tests {
         }
         assert_eq!(requantize(1 << 20, 0), 127);
         assert_eq!(requantize(-(1 << 20), 0), -128);
+    }
+
+    #[test]
+    fn requantize_survives_large_shifts_and_extremes() {
+        // Regression: `1 << (shift - 1)` overflowed i32 for shift >= 32
+        // (debug-build panic), and `acc + bias` overflowed for acc near
+        // i32::MAX. Any i32 rounds to 0 from shift 32 on.
+        for shift in [32, 33, 40, 63, 64, 100, u32::MAX] {
+            assert_eq!(requantize(i32::MAX, shift), 0, "shift={shift}");
+            assert_eq!(requantize(i32::MIN, shift), 0, "shift={shift}");
+            assert_eq!(requantize(0, shift), 0, "shift={shift}");
+        }
+        // Bias addition must not wrap near the i32 extremes.
+        assert_eq!(requantize(i32::MAX, 1), 127);
+        assert_eq!(requantize(i32::MIN, 1), -128);
+        assert_eq!(requantize(i32::MAX, 31), 1);
+        assert_eq!(requantize(i32::MIN, 31), -1);
     }
 
     #[test]
@@ -292,6 +879,25 @@ mod tests {
     }
 
     #[test]
+    fn blocked_gemm_matches_naive_on_odd_shapes() {
+        // Deliberately off-tile shapes (m % MR != 0, n % NR != 0).
+        let (m, k, n) = (7, 19, 21);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i64 * 37 % 251 - 125) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| (i as i64 * 89 % 253 - 126) as i8).collect();
+        for (shift, relu, i32_out) in [(0, false, true), (4, true, false), (7, false, false)] {
+            assert_eq!(
+                gemm(&a, &b, m, k, n, shift, relu, i32_out),
+                gemm_naive(&a, &b, m, k, n, shift, relu, i32_out),
+                "shift={shift} relu={relu} i32_out={i32_out}"
+            );
+        }
+        // Explicit multi-threaded band split on the same shape.
+        let mut out = vec![0u8; m * n];
+        gemm_into(&a, &b, m, k, n, 4, true, false, 3, &mut out);
+        assert_eq!(out, gemm_naive(&a, &b, m, k, n, 4, true, false));
+    }
+
+    #[test]
     fn conv_zero_padding() {
         // 1x1x1 input through 3x3 kernel pad 1: only center tap fires.
         let input = [5i8];
@@ -299,6 +905,23 @@ mod tests {
         weights[4] = 3; // center tap, cin=cout=1
         let out = conv2d(&input, &weights, 1, 1, 1, 1, 1, 3, 3, 1, 1, 0, false);
         assert_eq!(out[0] as i8, 15);
+    }
+
+    #[test]
+    fn blocked_conv_matches_naive_with_pad_and_stride() {
+        let (n, h, w, cin, cout) = (2, 9, 7, 3, 5);
+        let input: Vec<i8> =
+            (0..n * h * w * cin).map(|i| (i as i64 * 53 % 255 - 127) as i8).collect();
+        for (kh, kw, stride, pad) in [(3, 3, 1, 1), (3, 3, 2, 1), (1, 1, 2, 0), (5, 3, 1, 2)] {
+            let weights: Vec<i8> = (0..kh * kw * cin * cout)
+                .map(|i| (i as i64 * 101 % 251 - 125) as i8)
+                .collect();
+            let fast = conv2d(&input, &weights, n, h, w, cin, cout, kh, kw, stride, pad, 5, true);
+            let slow = conv2d_naive(
+                &input, &weights, n, h, w, cin, cout, kh, kw, stride, pad, 5, true,
+            );
+            assert_eq!(fast, slow, "kh={kh} kw={kw} stride={stride} pad={pad}");
+        }
     }
 
     #[test]
@@ -349,5 +972,34 @@ mod tests {
         .unwrap();
         let out = spm.read(Region(128), 4).unwrap();
         assert_eq!(i32::from_le_bytes(out.try_into().unwrap()), 8 * 6);
+    }
+
+    #[test]
+    fn scratch_buffers_are_reused_across_ops() {
+        let mut spm = Spm::new(8192, 8, 8);
+        let mut scratch = FnScratch::new();
+        let desc = OpDesc::Gemm {
+            a: Region(0),
+            b: Region(256),
+            c: Region(1024),
+            m: 16,
+            k: 16,
+            n: 16,
+            shift: 3,
+            relu: true,
+            i32_out: false,
+        };
+        spm.write(Region(0), &vec![3u8; 256]).unwrap();
+        spm.write(Region(256), &vec![1u8; 256]).unwrap();
+        apply_op_scratch(&desc, &mut spm, &mut scratch).unwrap();
+        let first = spm.read(Region(1024), 256).unwrap().to_vec();
+        let cap = (scratch.a.capacity(), scratch.b.capacity(), scratch.out.capacity());
+        // Re-applying the same op must not grow any buffer.
+        apply_op_scratch(&desc, &mut spm, &mut scratch).unwrap();
+        assert_eq!(spm.read(Region(1024), 256).unwrap(), &first[..]);
+        assert_eq!(
+            (scratch.a.capacity(), scratch.b.capacity(), scratch.out.capacity()),
+            cap
+        );
     }
 }

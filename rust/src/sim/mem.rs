@@ -69,6 +69,21 @@ impl Spm {
         Ok(&self.data[start..start + len])
     }
 
+    /// Copy `len` bytes at `r` into a reusable i8 buffer (cleared, then
+    /// filled — steady-state zero-alloc once `dst` reaches capacity).
+    /// The retire path stages operands this way because the functional
+    /// kernels read several regions while the output write needs the
+    /// whole SPM mutably.
+    pub fn read_i8_into(&self, r: Region, len: usize, dst: &mut Vec<i8>) -> Result<()> {
+        let bytes = self.read(r, len)?;
+        // Safety: i8 and u8 have identical layout.
+        let signed =
+            unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) };
+        dst.clear();
+        dst.extend_from_slice(signed);
+        Ok(())
+    }
+
     pub fn write(&mut self, r: Region, bytes: &[u8]) -> Result<()> {
         let start = r.0 as usize;
         if start + bytes.len() > self.data.len() {

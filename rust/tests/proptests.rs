@@ -480,3 +480,134 @@ fn prop_csr_shadow_never_loses_jobs() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Blocked GEMM / implicit-im2col conv: byte-identical to the naive
+// oracles across randomized shapes (pad/stride edges, i32_out, odd
+// tile remainders) and across thread counts.
+// ---------------------------------------------------------------------------
+
+fn rand_i8s(r: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (r.next() % 256) as i64 as u8 as i8).collect()
+}
+
+#[test]
+fn prop_blocked_gemm_is_bitexact_vs_naive_oracle() {
+    use snax::sim::functional::{gemm, gemm_into, gemm_naive};
+    for seed in 0..80u64 {
+        let mut r = Rng::new(9000 + seed);
+        // Deliberately straddle the MR=4 / NR=16 tile boundaries.
+        let m = r.range(1, 21) as usize;
+        let k = r.range(1, 48) as usize;
+        let n = r.range(1, 40) as usize;
+        let a = rand_i8s(&mut r, m * k);
+        let b = rand_i8s(&mut r, k * n);
+        // Includes shift >= 32 (the widened-requantize regression zone).
+        let shift = *r.pick(&[0u32, 1, 4, 9, 15, 31, 34]);
+        let relu = r.chance(50);
+        let i32_out = r.chance(30);
+        let oracle = gemm_naive(&a, &b, m, k, n, shift, relu, i32_out);
+        let auto = gemm(&a, &b, m, k, n, shift, relu, i32_out);
+        assert_eq!(auto, oracle, "seed {seed} m={m} k={k} n={n} (auto threads)");
+        for threads in [1usize, 2, 5] {
+            let mut out = vec![0u8; oracle.len()];
+            gemm_into(&a, &b, m, k, n, shift, relu, i32_out, threads, &mut out);
+            assert_eq!(
+                out, oracle,
+                "seed {seed} m={m} k={k} n={n} shift={shift} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_conv_is_bitexact_vs_naive_oracle() {
+    use snax::sim::functional::{conv2d_into, conv2d_naive};
+    let mut cases = 0;
+    for seed in 0..120u64 {
+        let mut r = Rng::new(11_000 + seed);
+        let n = r.range(1, 2) as usize;
+        let h = r.range(1, 10) as usize;
+        let w = r.range(1, 10) as usize;
+        let cin = r.range(1, 5) as usize;
+        let cout = r.range(1, 36) as usize; // crosses the NR=16 strip edge
+        let kh = r.range(1, 4) as usize;
+        let kw = r.range(1, 4) as usize;
+        let stride = r.range(1, 3) as usize;
+        let pad = r.range(0, 2) as usize;
+        if h + 2 * pad < kh || w + 2 * pad < kw {
+            continue; // invalid geometry
+        }
+        cases += 1;
+        let input = rand_i8s(&mut r, n * h * w * cin);
+        let weights = rand_i8s(&mut r, kh * kw * cin * cout);
+        let shift = *r.pick(&[0u32, 3, 8, 33]);
+        let relu = r.chance(50);
+        let oracle = conv2d_naive(
+            &input, &weights, n, h, w, cin, cout, kh, kw, stride, pad, shift, relu,
+        );
+        for threads in [1usize, 3] {
+            let mut out = vec![0u8; oracle.len()];
+            let mut packs = Vec::new();
+            conv2d_into(
+                &input, &weights, n, h, w, cin, cout, kh, kw, stride, pad, shift, relu,
+                threads, &mut packs, &mut out,
+            );
+            assert_eq!(
+                out, oracle,
+                "seed {seed} n={n} h={h} w={w} cin={cin} cout={cout} kh={kh} kw={kw} \
+                 stride={stride} pad={pad} threads={threads}"
+            );
+        }
+    }
+    assert!(cases > 60, "geometry filter rejected too many cases: {cases}");
+}
+
+// ---------------------------------------------------------------------------
+// POST /sweep: randomized job lists produce byte-identical response
+// bodies regardless of the server's worker count.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sweep_bodies_identical_across_thread_counts() {
+    use snax::config::ServerConfig;
+    use snax::server::api::{route, AppState};
+    use snax::server::http::Request;
+    use std::sync::Arc;
+
+    for seed in 0..4u64 {
+        let mut r = Rng::new(20_000 + seed);
+        let n_jobs = r.range(2, 5);
+        let mut jobs = Vec::new();
+        for _ in 0..n_jobs {
+            let net = *r.pick(&["fig6a", "dae"]);
+            let cluster = *r.pick(&["fig6b", "fig6c", "fig6d"]);
+            let engine = *r.pick(&["event", "exact"]);
+            jobs.push(format!(
+                "{{\"net\":\"{net}\",\"cluster\":\"{cluster}\",\"engine\":\"{engine}\"}}"
+            ));
+        }
+        let body = format!("{{\"jobs\":[{}]}}", jobs.join(","));
+        let mut bodies: Vec<Vec<u8>> = Vec::new();
+        for workers in [1usize, 3] {
+            let st = Arc::new(AppState::new(&ServerConfig {
+                port: 0,
+                workers,
+                cache_capacity: 8,
+                queue_depth: 16,
+            }));
+            let req = Request {
+                method: "POST".into(),
+                path: "/sweep".into(),
+                query: String::new(),
+                headers: vec![],
+                body: body.clone().into_bytes(),
+            };
+            let resp = route(&st, &req);
+            assert_eq!(resp.status, 200, "seed {seed}: {}", String::from_utf8_lossy(&resp.body));
+            bodies.push(resp.body.clone());
+            st.pool.shutdown();
+        }
+        assert_eq!(bodies[0], bodies[1], "seed {seed}: body differs across worker counts");
+    }
+}
