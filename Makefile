@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt serve serve-smoke bench bench-func bench-all bench-smoke artifacts
+.PHONY: build test fmt clippy memo-equivalence serve serve-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -14,6 +14,16 @@ test:
 
 fmt:
 	cargo fmt --check
+
+# Lint gate (mirrors the CI clippy job).
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# Phase-memoization equivalence: memo-on vs memo-off vs exact, plus
+# shared-phase-cache replay determinism (mirrors the CI memo step).
+memo-equivalence:
+	cargo test -q --test engine_equivalence
+	cargo test -q memo_
 
 # Run the compile-and-simulate service (ctrl-c / SIGTERM for graceful
 # shutdown).

@@ -69,13 +69,16 @@ fn main() {
     const MEMORY_ACTIVE: &str = "pipelined fig6a (memory-active)";
     let cfg = ClusterConfig::fig6d();
     let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(8)).unwrap();
-    let cluster = Cluster::new(&cfg);
+    // Legacy engine legs run with memo OFF so `event_mcyc_per_s` keeps
+    // measuring (and floor-guarding) the raw event engine — phase
+    // replay gets its own dedicated memo-on/off leg below.
+    let cluster = Cluster::new(&cfg).with_memo(false);
     let mut legs = Vec::new();
     legs.push(leg(MEMORY_ACTIVE, &cluster, &cp.program, reps));
 
     let cfg_b = ClusterConfig::fig6b();
     let cp_b = compile(&g, &cfg_b, &CompileOptions::sequential()).unwrap();
-    let cluster_b = Cluster::new(&cfg_b);
+    let cluster_b = Cluster::new(&cfg_b).with_memo(false);
     legs.push(leg("cpu-only fig6a (fast-forward)", &cluster_b, &cp_b.program, reps));
 
     let rn = models::resnet8_graph();
@@ -86,8 +89,26 @@ fn main() {
     let cp_d = compile(&dae, &cfg, &CompileOptions::sequential()).unwrap();
     legs.push(leg("dae sequential (dma-heavy)", &cluster, &cp_d.program, reps));
 
+    // Phase-memoization legs: a deep pipelined multi-inference run (the
+    // DSE / server steady-state shape) with memo on vs off. Both use
+    // the default fresh per-run cache, so the measured speedup is pure
+    // within-run barrier-to-barrier phase replay.
+    const MEMO_LEG: &str = "pipelined fig6a x32 (memo on/off)";
+    let cp32 = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(32)).unwrap();
+    let memo_reps = reps.div_ceil(2).max(1);
+    let cluster_on = Cluster::new(&cfg); // memo on (the library default)
+    let (memo_cycles, memo_on_mcycs) =
+        measure(&cluster_on, &cp32.program, SimMode::Event, memo_reps);
+    let (_, memo_off_mcycs) =
+        measure(&cluster, &cp32.program, SimMode::Event, memo_reps);
+    let memo_speedup = memo_on_mcycs / memo_off_mcycs.max(1e-9);
+    println!(
+        "{MEMO_LEG}: {memo_cycles} sim-cycles/run -> memo-on {memo_on_mcycs:.2} Mcyc/s, \
+         memo-off {memo_off_mcycs:.2} Mcyc/s ({memo_speedup:.2}x)"
+    );
+
     // Machine-readable trajectory record at the workspace root.
-    let legs_json: Vec<Value> = legs
+    let mut legs_json: Vec<Value> = legs
         .iter()
         .map(|l| {
             Value::object([
@@ -99,6 +120,13 @@ fn main() {
             ])
         })
         .collect();
+    legs_json.push(Value::object([
+        ("name", Value::from(MEMO_LEG)),
+        ("sim_cycles", Value::from(memo_cycles)),
+        ("memo_on_mcyc_per_s", Value::from(round2(memo_on_mcycs))),
+        ("memo_off_mcyc_per_s", Value::from(round2(memo_off_mcycs))),
+        ("memo_speedup", Value::from(round2(memo_speedup))),
+    ]));
     let doc = Value::object([
         ("bench", Value::from("sim_speed")),
         ("engine_default", Value::from("event")),
@@ -132,5 +160,18 @@ fn main() {
             std::process::exit(1);
         }
         println!("floor check ok: {got:.2} >= {min:.2} Mcyc/s");
+        // Memo replay must beat memo-off on the pipelined
+        // multi-inference leg by the (deliberately conservative) floor.
+        let memo_floor = floor
+            .get("memo_on_over_off_pipelined_floor")
+            .and_then(|v| v.as_f64())
+            .expect("memo floor key missing");
+        if memo_speedup < memo_floor {
+            eprintln!(
+                "FAIL: memo-on/off speedup {memo_speedup:.2}x below floor {memo_floor:.2}x"
+            );
+            std::process::exit(1);
+        }
+        println!("memo floor check ok: {memo_speedup:.2}x >= {memo_floor:.2}x");
     }
 }

@@ -341,6 +341,11 @@ pub struct ServerConfig {
     /// Maximum queued jobs before the service sheds load with 503s
     /// (backpressure bound).
     pub queue_depth: usize,
+    /// Phase-memoization cache capacity in fingerprint slots, shared by
+    /// every simulation the service runs (repeat requests and sweep
+    /// jobs replay each other's barrier-to-barrier phases; see
+    /// DESIGN.md §8). `0` disables phase memoization entirely.
+    pub phase_cache_capacity: usize,
 }
 
 impl Default for ServerConfig {
@@ -348,7 +353,13 @@ impl Default for ServerConfig {
         // One worker per core, same sizing rule (and `SNAX_THREADS`
         // override) as the scoped data-parallel layer.
         let workers = crate::parallel::default_parallelism();
-        Self { port: 8080, workers, cache_capacity: 64, queue_depth: workers * 4 }
+        Self {
+            port: 8080,
+            workers,
+            cache_capacity: 64,
+            queue_depth: workers * 4,
+            phase_cache_capacity: 2048,
+        }
     }
 }
 

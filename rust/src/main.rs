@@ -84,9 +84,9 @@ fn cluster_for(args: &Args) -> Result<ClusterConfig> {
     }
 }
 
-/// Shared `--pipelined` / `--inferences` / `--engine` parsing for the
-/// simulate and sweep subcommands.
-fn sim_options(args: &Args) -> Result<(CompileOptions, snax::sim::SimMode)> {
+/// Shared `--pipelined` / `--inferences` / `--engine` / `--memo`
+/// parsing for the simulate and sweep subcommands.
+fn sim_options(args: &Args) -> Result<(CompileOptions, snax::sim::SimMode, bool)> {
     let n: u32 = args.get("inferences", "1").parse()?;
     let opts = if args.has("pipelined") {
         CompileOptions::pipelined().with_inferences(n.max(2))
@@ -98,23 +98,45 @@ fn sim_options(args: &Args) -> Result<(CompileOptions, snax::sim::SimMode)> {
         "exact" => snax::sim::SimMode::Exact,
         other => bail!("unknown engine '{other}' (expected event|exact)"),
     };
-    Ok((opts, mode))
+    let memo = match args.get("memo", "on").as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("unknown --memo '{other}' (expected on|off)"),
+    };
+    Ok((opts, mode, memo))
+}
+
+fn phase_stats_json(s: &snax::sim::PhaseCacheStats) -> snax::runtime::json::Value {
+    use snax::runtime::json::Value;
+    Value::object([
+        ("hits", Value::from(s.hits)),
+        ("misses", Value::from(s.misses)),
+        ("insertions", Value::from(s.insertions)),
+        ("evictions", Value::from(s.evictions)),
+        ("replayed_cycles", Value::from(s.replayed_cycles)),
+        ("entries", Value::from(s.entries)),
+    ])
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = cluster_for(args)?;
     let g = graph_for(&args.get("net", "fig6a"))?;
-    let (opts, mode) = sim_options(args)?;
+    let (opts, mode, memo) = sim_options(args)?;
     let cp = compile(&g, &cfg, &opts)?;
+    // Same sizing as the engine's default per-run cache — the explicit
+    // handle exists only so the CLI can report hit/miss stats.
+    let phase_cache = std::sync::Arc::new(snax::sim::PhaseCache::for_run());
+    let cluster =
+        Cluster::new(&cfg).with_memo(memo).with_phase_cache(phase_cache.clone());
     let trace_path = args.flags.get("trace").cloned();
     let report = if let Some(path) = &trace_path {
-        let (report, trace) = Cluster::new(&cfg).run_traced_mode(&cp.program, mode)?;
+        let (report, trace) = cluster.run_traced_mode(&cp.program, mode)?;
         std::fs::write(path, trace.to_chrome_json())
             .with_context(|| format!("writing trace to {path}"))?;
         println!("wrote chrome trace ({} events) to {path}", trace.events.len());
         report
     } else {
-        Cluster::new(&cfg).run_mode(&cp.program, mode)?
+        cluster.run_mode(&cp.program, mode)?
     };
 
     println!(
@@ -150,6 +172,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("{}", table(&["unit", "active", "compute", "util", "jobs"], &rows));
     let e = energy::energy(&report, &cfg);
     println!("energy: {:.2} uJ  avg power: {:.1} mW", e.total_uj(), e.avg_power_mw());
+    let ps = phase_cache.stats();
+    if memo && mode == snax::sim::SimMode::Event {
+        println!(
+            "phase cache: {} hits / {} misses, {} cycles replayed",
+            ps.hits, ps.misses, ps.replayed_cycles
+        );
+    }
+    if let Some(path) = args.flags.get("json") {
+        // Deterministic report JSON plus the (run-local, serial, hence
+        // also deterministic) phase-cache effectiveness counters.
+        let body = format!(
+            "{{\"report\":{},\"phase_cache\":{}}}",
+            snax::server::render_report(&cp, &cfg, &report),
+            phase_stats_json(&ps).to_json()
+        );
+        std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
+        println!("wrote report json to {path}");
+    }
     Ok(())
 }
 
@@ -190,11 +230,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         };
         clusters.push(cfg);
     }
-    let (opts, mode) = sim_options(args)?;
+    let (opts, mode, memo) = sim_options(args)?;
     let threads: usize = match args.flags.get("threads") {
         Some(t) => t.parse().context("bad --threads")?,
         None => snax::parallel::default_parallelism(),
     };
+    // One phase cache for the whole batch: jobs sharing a (net,
+    // cluster) control structure replay each other's barrier-to-barrier
+    // phases. Replay is byte-equivalent to simulation, so results stay
+    // deterministic at any worker count.
+    let phase_cache = std::sync::Arc::new(snax::sim::PhaseCache::new(4096));
 
     // Cross product in input order; `map_indexed` keeps result slot i
     // bound to job i, so output order is deterministic at any thread
@@ -215,7 +260,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let run = || -> Result<SweepRow> {
             let g = graph_for(net)?;
             let cp = compile(&g, cfg, &opts)?;
-            let mut cluster = Cluster::new(cfg);
+            let mut cluster = Cluster::new(cfg)
+                .with_memo(memo)
+                .with_phase_cache(phase_cache.clone());
             if fan_out > 1 {
                 cluster = cluster.with_func_threads(kernel_cap);
             }
@@ -271,6 +318,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         wall
     );
     println!("{}", table(&["net", "cluster", "cycles", "ms", "energy uJ"], &rows));
+    if memo && mode == snax::sim::SimMode::Event {
+        let ps = phase_cache.stats();
+        println!(
+            "phase cache: {} hits / {} misses, {} cycles replayed, {} records",
+            ps.hits, ps.misses, ps.replayed_cycles, ps.entries
+        );
+    }
     if let Some(path) = args.flags.get("json") {
         let body = snax::server::render_sweep_body(&json_results);
         std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
@@ -356,6 +410,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if args.has("queue") {
         cfg.queue_depth = args.get("queue", "1").parse().context("bad --queue")?;
+    }
+    if args.has("phase-cache") {
+        cfg.phase_cache_capacity =
+            args.get("phase-cache", "2048").parse().context("bad --phase-cache")?;
     }
     snax::server::run_blocking(cfg)
 }
@@ -449,12 +507,16 @@ fn help() {
          commands:\n\
          \u{20}  simulate --net fig6a|dae|resnet8 --cluster fig6b|fig6c|fig6d|file.toml\n\
          \u{20}           [--pipelined] [--inferences N] [--trace out.json]\n\
-         \u{20}           [--engine event|exact]\n\
+         \u{20}           [--engine event|exact] [--memo on|off] [--json out.json]\n\
+         \u{20}           (--memo: barrier-delimited phase replay; identical reports,\n\
+         \u{20}            --json includes phase-cache hit/miss counters)\n\
          \u{20}  sweep     --nets fig6a,dae --clusters fig6b,fig6c,fig6d\n\
          \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\
-         \u{20}            [--threads N] [--json out.json]\n\
-         \u{20}            (parallel net x cluster fan-out, deterministic order)\n\
+         \u{20}            [--memo on|off] [--threads N] [--json out.json]\n\
+         \u{20}            (parallel net x cluster fan-out, deterministic order,\n\
+         \u{20}             shared phase cache across the batch)\n\
          \u{20}  serve     [--port 8080] [--workers N] [--cache entries] [--queue depth]\n\
+         \u{20}            [--phase-cache slots] (0 disables phase memoization)\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6)\n\
          \u{20}  fig8      (the heterogeneous-acceleration cascade)\n\
          \u{20}  roofline  [--tiles 16,32,64] [--baseline]\n\

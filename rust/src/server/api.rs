@@ -49,7 +49,7 @@ use crate::energy;
 use crate::models;
 use crate::parallel;
 use crate::runtime::json::{self, Value};
-use crate::sim::{Cluster, SimMode, SimReport};
+use crate::sim::{Cluster, PhaseCache, SimMode, SimReport};
 
 use super::cache::ProgramCache;
 use super::http::{Request, Response};
@@ -313,6 +313,11 @@ impl JobTable {
 pub struct AppState {
     pub server_cfg: ServerConfig,
     pub cache: ProgramCache,
+    /// Process-wide phase-memoization cache: repeat requests and sweep
+    /// jobs replay each other's barrier-to-barrier timing phases
+    /// (DESIGN.md §8). `None` when disabled via
+    /// `phase_cache_capacity = 0`.
+    pub phase_cache: Option<Arc<PhaseCache>>,
     pub pool: WorkerPool,
     pub metrics: Metrics,
     jobs: JobTable,
@@ -325,6 +330,8 @@ impl AppState {
         Self {
             server_cfg: cfg.clone(),
             cache: ProgramCache::new(cfg.cache_capacity),
+            phase_cache: (cfg.phase_cache_capacity > 0)
+                .then(|| Arc::new(PhaseCache::new(cfg.phase_cache_capacity))),
             pool: WorkerPool::new(cfg.workers, cfg.queue_depth),
             metrics: Metrics::default(),
             jobs: JobTable::default(),
@@ -546,6 +553,10 @@ fn simulate_once(
         .get_or_insert_with(key, || compile(&req.graph, &req.cfg, &req.opts))
         .map_err(SimError::Compile)?;
     let mut cluster = Cluster::new(&req.cfg);
+    match &state.phase_cache {
+        Some(pc) => cluster = cluster.with_phase_cache(pc.clone()),
+        None => cluster = cluster.with_memo(false),
+    }
     if let Some(n) = func_threads {
         cluster = cluster.with_func_threads(n);
     }
@@ -684,12 +695,19 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         );
         let _ = writeln!(out, "snax_request_latency_us_count{{endpoint=\"{name}\"}} {cumulative}");
     }
-    let singles: [(&str, &str, u64); 8] = [
+    let phase = state.phase_cache.as_ref().map(|p| p.stats()).unwrap_or_default();
+    let singles: [(&str, &str, u64); 14] = [
         ("snax_cache_hits_total", "counter", state.cache.hits()),
         ("snax_cache_misses_total", "counter", state.cache.misses()),
         ("snax_cache_insertions_total", "counter", state.cache.insertions()),
         ("snax_cache_evictions_total", "counter", state.cache.evictions()),
         ("snax_cache_entries", "gauge", state.cache.len() as u64),
+        ("snax_phase_cache_hits_total", "counter", phase.hits),
+        ("snax_phase_cache_misses_total", "counter", phase.misses),
+        ("snax_phase_cache_insertions_total", "counter", phase.insertions),
+        ("snax_phase_cache_evictions_total", "counter", phase.evictions),
+        ("snax_phase_cache_replayed_cycles_total", "counter", phase.replayed_cycles),
+        ("snax_phase_cache_entries", "gauge", phase.entries),
         ("snax_jobs_executed_total", "counter", state.pool.executed()),
         ("snax_jobs_panicked_total", "counter", state.pool.panicked()),
         ("snax_queue_length", "gauge", state.pool.queue_len() as u64),
@@ -797,6 +815,7 @@ mod tests {
             workers: 2,
             cache_capacity: 8,
             queue_depth: 16,
+            phase_cache_capacity: 256,
         }))
     }
 
@@ -959,12 +978,13 @@ mod tests {
             {"net":"fig6a","cluster":"fig6c","engine":"exact"}
         ]}"#;
         let mut bodies = Vec::new();
-        for workers in [1usize, 3] {
+        for workers in [1usize, 2, 4] {
             let st = Arc::new(AppState::new(&ServerConfig {
                 port: 0,
                 workers,
                 cache_capacity: 8,
                 queue_depth: 16,
+                phase_cache_capacity: 256,
             }));
             let resp = route(&st, &post("/sweep", body));
             assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
@@ -988,10 +1008,13 @@ mod tests {
             bodies.push(resp.body.clone());
             st.pool.shutdown();
         }
-        assert_eq!(
-            bodies[0], bodies[1],
-            "sweep bodies must be byte-identical at any worker count"
-        );
+        for b in &bodies[1..] {
+            assert_eq!(
+                &bodies[0], b,
+                "sweep bodies must be byte-identical at any worker count \
+                 (shared phase cache included)"
+            );
+        }
     }
 
     #[test]
@@ -1005,6 +1028,37 @@ mod tests {
         assert!(text.contains("snax_request_latency_us_bucket{endpoint=\"healthz\",le=\"+Inf\"} 1"));
         assert!(text.contains("snax_cache_hits_total 0"));
         assert!(text.contains("snax_cache_misses_total 0"));
+        assert!(text.contains("snax_phase_cache_hits_total 0"));
+        assert!(text.contains("snax_phase_cache_misses_total 0"));
+        assert!(text.contains("snax_phase_cache_entries 0"));
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn repeat_simulations_replay_phases_and_move_phase_metrics() {
+        let st = state();
+        // Distinct bodies compile distinct programs but identical
+        // (net, cluster) control structure on repeat: the second
+        // simulation replays the first one's phases end to end.
+        let body = r#"{"net":"fig6a","cluster":"fig6c"}"#;
+        let first = route(&st, &post("/simulate", body));
+        assert_eq!(first.status, 200, "{}", String::from_utf8_lossy(&first.body));
+        let pc = st.phase_cache.as_ref().expect("phase cache enabled by default");
+        let hits_before = pc.hits();
+        // Force a re-simulation of the same cached program: /simulate
+        // always re-runs the simulator (only compilation is cached), so
+        // the phase cache is what makes the repeat cheap.
+        let second = route(&st, &post("/simulate", body));
+        assert_eq!(second.status, 200);
+        assert_eq!(first.body, second.body);
+        assert!(
+            pc.hits() > hits_before,
+            "repeat request must replay phases: {:?}",
+            pc.stats()
+        );
+        let metrics = route(&st, &get("/metrics"));
+        let text = String::from_utf8(metrics.body).unwrap();
+        assert!(!text.contains("snax_phase_cache_hits_total 0"), "{text}");
         st.pool.shutdown();
     }
 }

@@ -221,7 +221,13 @@ mod tests {
     use super::*;
 
     fn test_config() -> ServerConfig {
-        ServerConfig { port: 0, workers: 2, cache_capacity: 8, queue_depth: 16 }
+        ServerConfig {
+            port: 0,
+            workers: 2,
+            cache_capacity: 8,
+            queue_depth: 16,
+            phase_cache_capacity: 64,
+        }
     }
 
     #[test]

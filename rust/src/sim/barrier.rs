@@ -41,6 +41,25 @@ impl BarrierFile {
             .map(|(mask, _)| mask & (1 << core_idx) != 0)
             .unwrap_or(false)
     }
+
+    /// In-flight entries `(id, arrived mask, participants)`, sorted by
+    /// id (phase-memo snapshot; see [`crate::sim::phase`]).
+    pub(crate) fn snapshot(&self) -> Vec<(u16, u64, u8)> {
+        let mut v: Vec<(u16, u64, u8)> =
+            self.state.iter().map(|(&id, &(mask, parts))| (id, mask, parts)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Phase-memo restore of the in-flight entry set. The `events`
+    /// accumulator is left alone (report-visible barrier counts live in
+    /// `Counters::barrier_events`).
+    pub(crate) fn restore(&mut self, entries: &[(u16, u64, u8)]) {
+        self.state.clear();
+        for &(id, mask, parts) in entries {
+            self.state.insert(id, (mask, parts));
+        }
+    }
 }
 
 #[cfg(test)]

@@ -28,12 +28,13 @@
 //!   `tick()`. Both engines produce identical [`SimReport`]s; the
 //!   equivalence suites (unit, property, and integration) enforce it.
 
+use std::collections::{BTreeMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::ClusterConfig;
-use crate::isa::{Instr, LayerClass, Program, SwKernel, POLL_INTERVAL};
+use crate::config::{AccelKind, ClusterConfig};
+use crate::isa::{dma_csr, Instr, LayerClass, Program, SwKernel, POLL_INTERVAL};
 
 use super::accel::{model_for, AccelModel, CounterClass, EmitRule};
 use super::barrier::BarrierFile;
@@ -42,6 +43,11 @@ use super::dma::{DmaDir, DmaJob};
 use super::functional::{apply_op_scratch, FnScratch};
 use super::job::OpDesc;
 use super::mem::{ExtMem, Spm};
+use super::phase::{
+    self, CtrlSnap, EntryAddrClass, FnEffect, LayerDelta, PhaseCache, PhaseRecord,
+    ReplayMaps, SnapCore, SnapDma, SnapJob, SnapPending, SnapStreamer, SnapSw, SnapUnit,
+    StreamDelta, UnitDelta, UnitMeta, WinInstr, MIN_PHASE_CYCLES, WINDOW_CAP,
+};
 use super::streamer::{beat_bank_mask, BeatWalker, Streamer};
 use super::trace::{Counters, LayerStat, SimReport, Trace, TraceEvent, UnitStats};
 
@@ -114,7 +120,6 @@ struct Core {
     barrier_arrived: bool,
     done: bool,
     layer: Option<(u16, LayerClass)>,
-    busy: u64,
 }
 
 /// Streamer addressing key for the arbitration tables.
@@ -132,11 +137,39 @@ pub struct Cluster {
     /// Cap on worker threads for large functional retires (`None` =
     /// size per op). See [`Cluster::with_func_threads`].
     func_threads: Option<usize>,
+    /// Barrier-delimited phase memoization (DESIGN.md §8). On by
+    /// default for [`SimMode::Event`]; [`SimMode::Exact`] never
+    /// memoizes.
+    memo: bool,
+    /// Shared phase cache (sweep batches, `snax serve`). `None` = a
+    /// private per-run cache.
+    phase_cache: Option<Arc<PhaseCache>>,
 }
 
 impl Cluster {
     pub fn new(cfg: &ClusterConfig) -> Self {
-        Self { cfg: cfg.clone(), func_threads: None }
+        Self { cfg: cfg.clone(), func_threads: None, memo: true, phase_cache: None }
+    }
+
+    /// Enable/disable barrier-delimited phase memoization for the event
+    /// engine (`snax simulate --memo on|off`). Reports are byte-
+    /// identical either way — the switch exists for benchmarking and as
+    /// a belt-and-braces escape hatch.
+    pub fn with_memo(mut self, on: bool) -> Self {
+        self.memo = on;
+        self
+    }
+
+    /// Share a phase cache across runs: a `snax sweep` batch or the
+    /// `snax serve` process pass one [`PhaseCache`] so repeated
+    /// barrier-to-barrier phases replay across jobs and requests.
+    /// Records are keyed by a program+config identity seed, so distinct
+    /// workloads never cross-contaminate, and replay is byte-equivalent
+    /// to re-simulation, so results stay deterministic at any worker
+    /// count regardless of who populated an entry.
+    pub fn with_phase_cache(mut self, cache: Arc<PhaseCache>) -> Self {
+        self.phase_cache = Some(cache);
+        self
     }
 
     /// Cap the worker threads used for large functional retires
@@ -188,7 +221,7 @@ impl Cluster {
     ) -> Result<(SimReport, Trace)> {
         let mut st = self.state(program)?;
         st.mode = mode;
-        st.trace = Some(Trace::default());
+        st.enable_trace();
         let mut report = st.run()?;
         let trace = report.trace.take().unwrap_or_default();
         Ok((report, trace))
@@ -202,7 +235,10 @@ impl Cluster {
                 self.cfg.cores.len()
             );
         }
-        SimState::new(&self.cfg, program, self.func_threads)
+        let mut st = SimState::new(&self.cfg, program, self.func_threads)?;
+        st.memo_on = self.memo;
+        st.shared_phase_cache = self.phase_cache.clone();
+        Ok(st)
     }
 }
 
@@ -232,16 +268,18 @@ struct SimState<'p> {
     /// per priority group (lets the arbiter skip requestless banks and
     /// groups entirely).
     group_req: Vec<u64>,
-    /// Opt-in execution trace (unit jobs + core kernels).
-    trace: Option<Trace>,
-    /// Precomputed trace labels (one allocation per core/unit/layer,
-    /// cloned as refcounts per event).
-    core_tracks: Vec<Arc<str>>,
-    unit_tracks: Vec<Arc<str>>,
-    layer_labels: Vec<Arc<str>>,
-    sw_label: Arc<str>,
-    job_label: Arc<str>,
+    /// Opt-in execution trace context (events + interned labels). Built
+    /// only by [`SimState::enable_trace`]: non-traced runs record no
+    /// events and intern no `Arc<str>` labels at all.
+    trace: Option<Box<TraceCtx>>,
     mode: SimMode,
+    /// Phase memoization requested (event engine only); see
+    /// [`super::phase`].
+    memo_on: bool,
+    /// Cross-run phase cache, if the caller shares one.
+    shared_phase_cache: Option<Arc<PhaseCache>>,
+    /// Live memoization context (built at `run()` when engaged).
+    memo: Option<MemoCtx>,
     /// Span-planner backoff: after a failed plan, don't re-plan until
     /// this cycle (doubles up to [`PLAN_BACKOFF_MAX`] on consecutive
     /// failures, resets on success or on a job start/retire). Keeps the
@@ -305,6 +343,102 @@ struct SpanPlan {
     units: Vec<SpanUnit>,
     busy_cores: Vec<SpanBusyCore>,
     pollers: Vec<SpanPoller>,
+}
+
+/// Execution-trace context: the event list plus interned `Arc<str>`
+/// labels. Built only for traced runs ([`SimState::enable_trace`]) so
+/// the non-traced path allocates nothing for tracing.
+struct TraceCtx {
+    trace: Trace,
+    core_tracks: Vec<Arc<str>>,
+    unit_tracks: Vec<Arc<str>>,
+    layer_labels: Vec<Arc<str>>,
+    sw_label: Arc<str>,
+    job_label: Arc<str>,
+}
+
+#[cfg(test)]
+thread_local! {
+    /// Counts `TraceCtx` constructions on this thread — the zero-cost
+    /// contract of the non-traced path is asserted against it.
+    static TRACE_CTX_BUILDS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Where the value of a DMA `SRC`/`DST` register came from, relative to
+/// the recording phase: inherited from the entry state, or written at a
+/// specific `(core, pc)` site inside the phase window.
+#[derive(Debug, Clone, Copy, Default)]
+enum DmaSite {
+    #[default]
+    Entry,
+    Win(usize, usize),
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct DmaProv {
+    src: DmaSite,
+    dst: DmaSite,
+}
+
+/// In-flight recording of the current phase (entry snapshot, stat
+/// baselines, intercepted functional retires and layer attributions,
+/// and the DMA address-classification bookkeeping).
+struct Recording {
+    fp: u64,
+    start_cycle: u64,
+    entry: CtrlSnap,
+    pc_start: Vec<usize>,
+    counters_base: Counters,
+    unit_base: Vec<UnitDelta>,
+    stream_base: Vec<Vec<StreamDelta>>,
+    layers: BTreeMap<u16, LayerDelta>,
+    effects: Vec<FnEffect>,
+    trace_mark: usize,
+    /// Last in-phase writer of the DMA engine's SRC/DST regs, per unit.
+    prov: Vec<DmaProv>,
+    /// Window write sites whose value a launch consumed as an ext-side
+    /// (timing-irrelevant) address.
+    canon_sites: HashSet<(usize, usize)>,
+    /// Sites whose value some launch consumed as an SPM-side address —
+    /// these must match literally; overrides `canon_sites`.
+    lock_sites: HashSet<(usize, usize)>,
+    /// Same classification for values inherited from the entry state:
+    /// per unit `(src, dst)`.
+    entry_canon: Vec<(bool, bool)>,
+    entry_lock: Vec<(bool, bool)>,
+}
+
+/// Live phase-memoization state of one run.
+struct MemoCtx {
+    cache: Arc<PhaseCache>,
+    seed: u64,
+    /// `lcm` of arbitration group sizes: the arbiter's rotation period.
+    l_mod: u64,
+    at_boundary: bool,
+    last_barrier_events: u64,
+    meta: Vec<UnitMeta>,
+    rec: Option<Recording>,
+}
+
+fn desc_reg_of(kind: AccelKind) -> Option<u16> {
+    Some(match kind {
+        AccelKind::Gemm => crate::isa::gemm_csr::DESC,
+        AccelKind::MaxPool => crate::isa::maxpool_csr::DESC,
+        AccelKind::VecAdd => crate::isa::vecadd_csr::DESC,
+    })
+}
+
+fn snap_streamer(s: &Streamer) -> SnapStreamer {
+    SnapStreamer {
+        plan: s.plan.clone(),
+        beat_idx: s.beat_idx,
+        beats_total: s.beats_total,
+        fifo: s.fifo,
+        pending: s.pending.clone(),
+        pending_mask: s.pending_mask,
+        pending_words: s.pending_words,
+        inflight: s.inflight_snapshot(),
+    }
 }
 
 impl<'p> SimState<'p> {
@@ -388,9 +522,6 @@ impl<'p> SimState<'p> {
             ext.write(*addr, bytes);
         }
 
-        let unit_tracks: Vec<Arc<str>> =
-            units.iter().map(|u| Arc::from(u.name.as_str())).collect();
-
         Ok(Self {
             cfg,
             program,
@@ -405,7 +536,6 @@ impl<'p> SimState<'p> {
                     barrier_arrived: false,
                     done: false,
                     layer: None,
-                    busy: 0,
                 })
                 .collect(),
             barriers: BarrierFile::new(),
@@ -417,14 +547,10 @@ impl<'p> SimState<'p> {
             was_busy: vec![false; flat_keys.len()],
             group_req: vec![0; groups.len()],
             trace: None,
-            core_tracks: (0..cfg.cores.len())
-                .map(|i| Arc::from(format!("core{i}")))
-                .collect(),
-            unit_tracks,
-            layer_labels: program.layer_names.iter().map(|n| Arc::from(n.as_str())).collect(),
-            sw_label: Arc::from("sw"),
-            job_label: Arc::from("job"),
             mode: SimMode::Event,
+            memo_on: true,
+            shared_phase_cache: None,
+            memo: None,
             next_plan_at: 0,
             plan_backoff: 1,
             scratch: match func_threads {
@@ -440,8 +566,34 @@ impl<'p> SimState<'p> {
         })
     }
 
+    /// Build the trace context (event list + interned labels). The only
+    /// entry point to tracing: a run without this call performs no
+    /// trace work and no label interning at all.
+    fn enable_trace(&mut self) {
+        #[cfg(test)]
+        TRACE_CTX_BUILDS.with(|c| c.set(c.get() + 1));
+        self.trace = Some(Box::new(TraceCtx {
+            trace: Trace::default(),
+            core_tracks: (0..self.cfg.cores.len())
+                .map(|i| Arc::from(format!("core{i}")))
+                .collect(),
+            unit_tracks: self.units.iter().map(|u| Arc::from(u.name.as_str())).collect(),
+            layer_labels: self
+                .program
+                .layer_names
+                .iter()
+                .map(|n| Arc::from(n.as_str()))
+                .collect(),
+            sw_label: Arc::from("sw"),
+            job_label: Arc::from("job"),
+        }));
+    }
+
     fn run(mut self) -> Result<SimReport> {
         self.grants = vec![0; self.flat_keys.len()];
+        if self.mode == SimMode::Event && self.memo_on {
+            self.init_memo();
+        }
         loop {
             let units_idle = self.units.iter().all(|u| u.idle());
             let cores_done = self.cores.iter().all(|c| c.done);
@@ -450,6 +602,12 @@ impl<'p> SimState<'p> {
             }
             if self.cycle > CYCLE_LIMIT {
                 bail!("simulation exceeded {CYCLE_LIMIT} cycles — livelock?");
+            }
+            // Phase boundary: finalize the phase that just ended, then
+            // either replay a cached repeat in closed form or start
+            // recording the new phase.
+            if self.memo.as_ref().is_some_and(|m| m.at_boundary) && self.memo_boundary()? {
+                continue;
             }
             // Fast-forward across memory-idle spans: nothing ticks until
             // the earliest core wake-up.
@@ -491,8 +649,626 @@ impl<'p> SimState<'p> {
             }
             self.tick()?;
             self.cycle += 1;
+            // A barrier release ends the current phase; the boundary
+            // state is the top of the next iteration.
+            if let Some(m) = &mut self.memo {
+                if self.counters.barrier_events != m.last_barrier_events {
+                    m.last_barrier_events = self.counters.barrier_events;
+                    m.at_boundary = true;
+                }
+            }
+        }
+        // Program end closes the last phase: its record replays whole
+        // run tails (and, through a shared cache, whole repeat runs).
+        if self.memo.as_ref().is_some_and(|m| m.rec.is_some()) {
+            let snap = self.capture_snap();
+            if let Some(rec) = self.memo.as_mut().and_then(|m| m.rec.take()) {
+                self.finalize_record(rec, &snap);
+            }
         }
         Ok(self.into_report())
+    }
+
+    // -- phase memoization (DESIGN.md §8) -----------------------------------
+
+    fn init_memo(&mut self) {
+        let meta: Vec<UnitMeta> = self
+            .units
+            .iter()
+            .map(|u| match &u.kind {
+                UnitKind::Accel(model) => {
+                    UnitMeta { desc_reg: desc_reg_of(model.kind()), is_dma: false }
+                }
+                UnitKind::Dma => UnitMeta { desc_reg: None, is_dma: true },
+            })
+            .collect();
+        let l_mod = self
+            .groups
+            .iter()
+            .filter(|g| g.len() > 1)
+            .fold(1u64, |acc, g| phase::lcm(acc, g.len() as u64));
+        let cache = self
+            .shared_phase_cache
+            .clone()
+            .unwrap_or_else(|| Arc::new(PhaseCache::for_run()));
+        let seed = phase::phase_seed(self.cfg, self.program, self.trace.is_some());
+        self.memo = Some(MemoCtx {
+            cache,
+            seed,
+            l_mod,
+            at_boundary: true,
+            last_barrier_events: self.counters.barrier_events,
+            meta,
+            rec: None,
+        });
+    }
+
+    /// Snapshot the full timing-relevant control state, boundary-
+    /// relative (see [`CtrlSnap`]).
+    fn capture_snap(&self) -> CtrlSnap {
+        let cyc = self.cycle;
+        let meta = &self.memo.as_ref().expect("memo engaged").meta;
+        let cores = self
+            .cores
+            .iter()
+            .map(|c| SnapCore {
+                pc: c.pc,
+                wake_rel: c.wake_at.saturating_sub(cyc),
+                barrier_arrived: c.barrier_arrived,
+                done: c.done,
+                layer: c.layer,
+                sw: c.pending_sw.as_ref().map(|k| SnapSw {
+                    cycles: k.cycles,
+                    class: k.class,
+                    op: k.op.clone(),
+                }),
+            })
+            .collect();
+        let units = self
+            .units
+            .iter()
+            .enumerate()
+            .map(|(ui, u)| {
+                let resolve = |regs: &[u64]| {
+                    meta[ui].desc_reg.map(|dr| {
+                        self.program.descs.get(regs[dr as usize] as usize).cloned()
+                    })
+                };
+                SnapUnit {
+                    staged: u.csr.staged_regs().to_vec(),
+                    staged_desc: resolve(u.csr.staged_regs()),
+                    pending: u.csr.pending_snapshot().map(|(regs, layer)| SnapPending {
+                        regs: regs.to_vec(),
+                        desc: resolve(regs),
+                        layer,
+                    }),
+                    job: u.job.as_ref().map(|j| SnapJob {
+                        steps: j.steps,
+                        steps_done: j.steps_done,
+                        emit: j.emit,
+                        emitted: j.emitted,
+                        consume_every: j.consume_every.clone(),
+                        class: j.class,
+                        desc: j.desc.clone(),
+                        layer: j.layer,
+                        start_rel: cyc - j.start,
+                        dma: j.dma.as_ref().map(SnapDma::of),
+                        axi_remaining: j.axi_remaining,
+                    }),
+                    readers: u.readers.iter().map(snap_streamer).collect(),
+                    writers: u.writers.iter().map(snap_streamer).collect(),
+                }
+            })
+            .collect();
+        CtrlSnap {
+            cores,
+            units,
+            barriers: self.barriers.snapshot(),
+            traced: self.trace.is_some(),
+        }
+    }
+
+    /// Handle one phase boundary: finalize the ended phase, then replay
+    /// a validated cached repeat (returns `true`) or start recording.
+    fn memo_boundary(&mut self) -> Result<bool> {
+        let snap = self.capture_snap();
+        if let Some(rec) = self.memo.as_mut().and_then(|m| m.rec.take()) {
+            self.finalize_record(rec, &snap);
+        }
+        let (key, cache, l_mod) = {
+            let m = self.memo.as_ref().expect("memo engaged");
+            (phase::snap_key(m.seed, &snap, &m.meta), m.cache.clone(), m.l_mod)
+        };
+        for rec in cache.candidates(key) {
+            let maps = {
+                let m = self.memo.as_ref().expect("memo engaged");
+                phase::match_record(
+                    &rec,
+                    &snap,
+                    m.seed,
+                    &self.program.streams,
+                    &self.program.descs,
+                    &m.meta,
+                    self.cycle,
+                    l_mod,
+                )
+            };
+            if let Some(maps) = maps {
+                cache.note_hit(rec.len);
+                self.apply_replay(&rec, &maps)?;
+                let events = self.counters.barrier_events;
+                let m = self.memo.as_mut().expect("memo engaged");
+                m.last_barrier_events = events;
+                m.at_boundary = true; // chain into the next phase
+                return Ok(true);
+            }
+        }
+        cache.note_miss();
+        self.start_recording(key, snap);
+        Ok(false)
+    }
+
+    fn start_recording(&mut self, fp: u64, entry: CtrlSnap) {
+        let pc_start = self.cores.iter().map(|c| c.pc).collect();
+        let counters_base = self.counters.clone();
+        let unit_base = self
+            .units
+            .iter()
+            .map(|u| UnitDelta {
+                active: u.stats.active_cycles,
+                compute: u.stats.compute_cycles,
+                stall_input: u.stats.stall_input_cycles,
+                stall_output: u.stats.stall_output_cycles,
+                jobs: u.stats.jobs,
+            })
+            .collect();
+        let stream_base = self
+            .units
+            .iter()
+            .map(|u| {
+                u.readers
+                    .iter()
+                    .chain(u.writers.iter())
+                    .map(|s| {
+                        (s.stats.beats_done, s.stats.conflict_cycles, s.stats.fifo_stall_cycles)
+                    })
+                    .collect()
+            })
+            .collect();
+        let trace_mark = self.trace.as_ref().map(|t| t.trace.events.len()).unwrap_or(0);
+        let n_units = self.units.len();
+        let start_cycle = self.cycle;
+        let m = self.memo.as_mut().expect("memo engaged");
+        m.at_boundary = false;
+        m.rec = Some(Recording {
+            fp,
+            start_cycle,
+            entry,
+            pc_start,
+            counters_base,
+            unit_base,
+            stream_base,
+            layers: BTreeMap::new(),
+            effects: Vec::new(),
+            trace_mark,
+            prov: vec![DmaProv::default(); n_units],
+            canon_sites: HashSet::new(),
+            lock_sites: HashSet::new(),
+            entry_canon: vec![(false, false); n_units],
+            entry_lock: vec![(false, false); n_units],
+        });
+    }
+
+    /// Close a recording at the boundary whose snapshot is `end` and
+    /// store it (unless the phase is too short or its windows too large
+    /// to be worth caching).
+    fn finalize_record(&mut self, rec: Recording, end: &CtrlSnap) {
+        let len = self.cycle - rec.start_cycle;
+        if len < MIN_PHASE_CYCLES {
+            return;
+        }
+        let meta_snapshot: Vec<UnitMeta> =
+            self.memo.as_ref().expect("memo engaged").meta.clone();
+        let mut windows = Vec::with_capacity(self.cores.len());
+        let mut pc_delta = Vec::with_capacity(self.cores.len());
+        for (ci, c) in self.cores.iter().enumerate() {
+            let start = rec.pc_start[ci];
+            let end_pc = c.pc;
+            if end_pc - start > WINDOW_CAP {
+                return; // phase too large to cache
+            }
+            pc_delta.push(end_pc - start);
+            let stream = &self.program.streams[ci];
+            // The window covers every instruction the core examined:
+            // executed ones plus the (possibly blocking) one at the
+            // final pc — or the observed end-of-stream.
+            let hi = (end_pc + 1).min(stream.len());
+            let mut win = Vec::with_capacity(hi.saturating_sub(start) + 1);
+            for pc in start..hi {
+                win.push(self.win_instr(&meta_snapshot, &rec, ci, pc, &stream[pc]));
+            }
+            if end_pc >= stream.len() {
+                win.push(WinInstr::End);
+            }
+            windows.push(win);
+        }
+        let trace_segs = match &self.trace {
+            Some(tc) => tc.trace.events[rec.trace_mark..]
+                .iter()
+                .map(|e| phase::TraceSeg {
+                    track: e.track.clone(),
+                    name: e.name.clone(),
+                    start_rel: e.start_cycle as i64 - rec.start_cycle as i64,
+                    end_rel: e.end_cycle as i64 - rec.start_cycle as i64,
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        let m = self.memo.as_ref().expect("memo engaged");
+        // Entry SRC/DST classification: a consumed value is Canon or
+        // Literal by how launches used it; an unconsumed value that was
+        // overwritten in-phase is Dead (provably unobserved); an
+        // untouched value survives into the end state and must match
+        // literally.
+        let classify = |canon: bool, lock: bool, site: DmaSite| {
+            if lock {
+                EntryAddrClass::Literal
+            } else if canon {
+                EntryAddrClass::Canon
+            } else if matches!(site, DmaSite::Win(..)) {
+                EntryAddrClass::Dead
+            } else {
+                EntryAddrClass::Literal
+            }
+        };
+        let entry_dma_class = (0..self.units.len())
+            .map(|ui| {
+                (
+                    classify(rec.entry_canon[ui].0, rec.entry_lock[ui].0, rec.prov[ui].src),
+                    classify(rec.entry_canon[ui].1, rec.entry_lock[ui].1, rec.prov[ui].dst),
+                )
+            })
+            .collect();
+        let record = PhaseRecord {
+            approx_bytes: 0, // sized by the cache at insert
+            seed: m.seed,
+            len,
+            // No cycle in the phase deferred a bank grant, so the
+            // arbiter's absolute-cycle rotation never chose between
+            // contenders: the phase replays at any offset.
+            relocatable: self.counters.bank_conflict_cycles
+                == rec.counters_base.bank_conflict_cycles,
+            start_mod: if m.l_mod <= 1 { 0 } else { rec.start_cycle % m.l_mod },
+            traced: rec.entry.traced,
+            entry_dma_class,
+            windows,
+            pc_delta,
+            end: end.clone(),
+            counters: phase::counters_sub(&self.counters, &rec.counters_base),
+            unit_deltas: self
+                .units
+                .iter()
+                .zip(&rec.unit_base)
+                .map(|(u, b)| UnitDelta {
+                    active: u.stats.active_cycles - b.active,
+                    compute: u.stats.compute_cycles - b.compute,
+                    stall_input: u.stats.stall_input_cycles - b.stall_input,
+                    stall_output: u.stats.stall_output_cycles - b.stall_output,
+                    jobs: u.stats.jobs - b.jobs,
+                })
+                .collect(),
+            stream_deltas: self
+                .units
+                .iter()
+                .zip(&rec.stream_base)
+                .map(|(u, bases)| {
+                    u.readers
+                        .iter()
+                        .chain(u.writers.iter())
+                        .zip(bases)
+                        .map(|(s, b)| {
+                            (
+                                s.stats.beats_done - b.0,
+                                s.stats.conflict_cycles - b.1,
+                                s.stats.fifo_stall_cycles - b.2,
+                            )
+                        })
+                        .collect()
+                })
+                .collect(),
+            layers: rec.layers.into_iter().collect(),
+            effects: rec.effects,
+            trace_segs,
+            entry: rec.entry,
+        };
+        m.cache.insert(rec.fp, record);
+    }
+
+    fn win_instr(
+        &self,
+        meta: &[UnitMeta],
+        rec: &Recording,
+        ci: usize,
+        pc: usize,
+        instr: &Instr,
+    ) -> WinInstr {
+        match instr {
+            Instr::CsrWrite { unit, reg, val } => {
+                let ui = unit.0 as usize;
+                let m = &meta[ui];
+                if m.desc_reg == Some(*reg) {
+                    WinInstr::CsrDesc {
+                        unit: unit.0,
+                        reg: *reg,
+                        idx: *val,
+                        desc: self.program.descs.get(*val as usize).cloned(),
+                    }
+                } else if m.is_dma && (*reg == dma_csr::SRC || *reg == dma_csr::DST) {
+                    let canon = rec.canon_sites.contains(&(ci, pc))
+                        && !rec.lock_sites.contains(&(ci, pc));
+                    WinInstr::CsrDmaAddr { unit: unit.0, reg: *reg, val: *val, canon }
+                } else {
+                    WinInstr::Csr { unit: unit.0, reg: *reg, val: *val }
+                }
+            }
+            Instr::Launch { unit } => WinInstr::Launch { unit: unit.0 },
+            Instr::AwaitIdle { unit } => WinInstr::Await { unit: unit.0 },
+            Instr::Barrier { id, participants } => {
+                WinInstr::Barrier { id: id.0, participants: *participants }
+            }
+            Instr::Sw { kernel } => WinInstr::Sw {
+                cycles: kernel.cycles,
+                class: kernel.class,
+                op: kernel.op.clone(),
+            },
+            Instr::SpanBegin { layer, class } => {
+                WinInstr::SpanBegin { layer: *layer, class: *class }
+            }
+            Instr::SpanEnd { layer } => WinInstr::SpanEnd { layer: *layer },
+        }
+    }
+
+    /// Apply a validated phase record in closed form: stat/counter/
+    /// trace deltas, functional retires through the real datapath, then
+    /// the recorded end state shifted to the current time base.
+    fn apply_replay(&mut self, rec: &PhaseRecord, maps: &ReplayMaps) -> Result<()> {
+        let ps = self.cycle;
+        let pe = ps + rec.len;
+        phase::counters_add(&mut self.counters, &rec.counters);
+        for (u, d) in self.units.iter_mut().zip(&rec.unit_deltas) {
+            u.stats.active_cycles += d.active;
+            u.stats.compute_cycles += d.compute;
+            u.stats.stall_input_cycles += d.stall_input;
+            u.stats.stall_output_cycles += d.stall_output;
+            u.stats.jobs += d.jobs;
+        }
+        for (u, ds) in self.units.iter_mut().zip(&rec.stream_deltas) {
+            for (s, d) in u.readers.iter_mut().chain(u.writers.iter_mut()).zip(ds) {
+                s.stats.beats_done += d.0;
+                s.stats.conflict_cycles += d.1;
+                s.stats.fifo_stall_cycles += d.2;
+            }
+        }
+        for (layer, d) in &rec.layers {
+            if let Some((fr, er)) = d.attr {
+                let t_first = (ps as i64 + fr) as u64;
+                let t_end = (ps as i64 + er) as u64;
+                let busy = d.busy;
+                let stat = self.layer_stat(*layer);
+                // Same fold as the live attribution sites.
+                if stat.busy_cycles == 0 {
+                    stat.first_start = t_first;
+                } else {
+                    stat.first_start = stat.first_start.min(t_first);
+                }
+                stat.busy_cycles += busy;
+                stat.last_end = stat.last_end.max(t_end);
+            } else {
+                // Touched without attribution (span marker only): the
+                // stat still materializes in the report.
+                let _ = self.layer_stat(*layer);
+            }
+            if let Some(c) = d.class {
+                self.layer_stat(*layer).class.get_or_insert(c);
+            }
+        }
+        if let Some(tc) = self.trace.as_deref_mut() {
+            for seg in &rec.trace_segs {
+                tc.trace.events.push(TraceEvent {
+                    track: seg.track.clone(),
+                    name: seg.name.clone(),
+                    start_cycle: (ps as i64 + seg.start_rel) as u64,
+                    end_cycle: (ps as i64 + seg.end_rel) as u64,
+                });
+            }
+        }
+        // Functional retires run for real, in retirement order — tensor
+        // bytes are computed through the blocked datapath, never cached.
+        for e in &rec.effects {
+            match e {
+                FnEffect::Op(desc) => {
+                    apply_op_scratch(desc, &mut self.spm, &mut self.scratch)
+                        .context("replaying functional retire")?;
+                }
+                FnEffect::Dma(d) => {
+                    let dj = d.to_job(&maps.dma);
+                    self.dma_copy(&dj)?;
+                }
+            }
+        }
+        // Restore the recorded end state at the new time base.
+        for (ci, ec) in rec.end.cores.iter().enumerate() {
+            let c = &mut self.cores[ci];
+            c.pc += rec.pc_delta[ci];
+            c.wake_at = pe + ec.wake_rel;
+            c.barrier_arrived = ec.barrier_arrived;
+            c.done = ec.done;
+            c.layer = ec.layer;
+            c.pending_sw = ec.sw.as_ref().map(|s| SwKernel {
+                cycles: s.cycles,
+                class: s.class,
+                op: s.op.clone(),
+            });
+        }
+        let entries: Vec<(u16, u64, u8)> = rec
+            .end
+            .barriers
+            .iter()
+            .map(|&(id, mask, p)| (maps.barrier.get(&id).copied().unwrap_or(id), mask, p))
+            .collect();
+        self.barriers.restore(&entries);
+        let meta: Vec<UnitMeta> = self.memo.as_ref().expect("memo engaged").meta.clone();
+        for (ui, eu) in rec.end.units.iter().enumerate() {
+            let m = meta[ui];
+            let translate_regs = |regs: &[u64]| -> Vec<u64> {
+                regs.iter()
+                    .enumerate()
+                    .map(|(i, &v)| {
+                        let reg = i as u16;
+                        if m.desc_reg == Some(reg) {
+                            maps.desc.get(&v).copied().unwrap_or(v)
+                        } else if m.is_dma && (reg == dma_csr::SRC || reg == dma_csr::DST) {
+                            maps.dma.get(&v).copied().unwrap_or(v)
+                        } else {
+                            v
+                        }
+                    })
+                    .collect()
+            };
+            let u = &mut self.units[ui];
+            u.csr.restore(
+                translate_regs(&eu.staged),
+                eu.pending.as_ref().map(|p| (translate_regs(&p.regs), p.layer)),
+            );
+            u.job = eu.job.as_ref().map(|j| RunningJob {
+                steps: j.steps,
+                steps_done: j.steps_done,
+                emit: j.emit,
+                emitted: j.emitted,
+                consume_every: j.consume_every.clone(),
+                class: j.class,
+                desc: j.desc.clone(),
+                layer: j.layer,
+                // Bounded: the entry match pinned the job's age, so the
+                // current run is at least `start_rel - len` cycles in.
+                start: pe - j.start_rel,
+                dma: j.dma.as_ref().map(|d| d.to_job(&maps.dma)),
+                axi_remaining: j.axi_remaining,
+            });
+            for (s, es) in u
+                .readers
+                .iter_mut()
+                .chain(u.writers.iter_mut())
+                .zip(eu.readers.iter().chain(eu.writers.iter()))
+            {
+                s.plan = es.plan.clone();
+                s.beat_idx = es.beat_idx;
+                s.beats_total = es.beats_total;
+                s.fifo = es.fifo;
+                s.pending = es.pending.clone();
+                s.pending_mask = es.pending_mask;
+                s.pending_words = es.pending_words;
+                s.restore_inflight(&es.inflight);
+            }
+        }
+        self.cycle = pe;
+        self.next_plan_at = pe;
+        self.plan_backoff = 1;
+        Ok(())
+    }
+
+    #[inline]
+    fn memo_recording(&mut self) -> Option<&mut Recording> {
+        self.memo.as_mut().and_then(|m| m.rec.as_mut())
+    }
+
+    /// Record a layer attribution (and/or class touch) for the phase in
+    /// progress. `busy == 0` marks a touch without attribution.
+    fn memo_note_layer(
+        &mut self,
+        layer: u16,
+        class: Option<LayerClass>,
+        first: u64,
+        end: u64,
+        busy: u64,
+    ) {
+        let Some(m) = self.memo.as_mut() else { return };
+        let Some(rec) = m.rec.as_mut() else { return };
+        let d = rec.layers.entry(layer).or_default();
+        if let Some(c) = class {
+            d.class.get_or_insert(c);
+        }
+        if busy > 0 {
+            let fr = first as i64 - rec.start_cycle as i64;
+            let er = end as i64 - rec.start_cycle as i64;
+            match &mut d.attr {
+                None => d.attr = Some((fr, er)),
+                Some((mn, mx)) => {
+                    *mn = (*mn).min(fr);
+                    *mx = (*mx).max(er);
+                }
+            }
+            d.busy += busy;
+        }
+    }
+
+    /// A CSR write landed on the DMA engine's SRC/DST: remember the
+    /// site so the launch that consumes it can classify the value.
+    fn memo_note_dma_write(&mut self, ui: usize, reg: u16, ci: usize, pc: usize) {
+        let Some(m) = self.memo.as_mut() else { return };
+        if !m.meta[ui].is_dma || (reg != dma_csr::SRC && reg != dma_csr::DST) {
+            return;
+        }
+        let Some(rec) = m.rec.as_mut() else { return };
+        let p = &mut rec.prov[ui];
+        if reg == dma_csr::SRC {
+            p.src = DmaSite::Win(ci, pc);
+        } else {
+            p.dst = DmaSite::Win(ci, pc);
+        }
+    }
+
+    /// A launch committed the DMA engine's staged bank: classify the
+    /// consumed SRC/DST values as ext-side (relocatable) or SPM-side
+    /// (must match literally) by the committed direction.
+    fn memo_note_dma_launch(&mut self, ui: usize) {
+        // The launch snapshots the staged bank verbatim, so the staged
+        // DIR is the committed direction.
+        let (src_ext, dst_ext) =
+            phase::pending_ext_sides(self.units[ui].csr.staged_regs());
+        let Some(m) = self.memo.as_mut() else { return };
+        if !m.meta[ui].is_dma {
+            return;
+        }
+        let Some(rec) = m.rec.as_mut() else { return };
+        let prov = rec.prov[ui];
+        for (site, ext, is_src) in
+            [(prov.src, src_ext, true), (prov.dst, dst_ext, false)]
+        {
+            match site {
+                DmaSite::Entry => {
+                    let (canon, lock) =
+                        (&mut rec.entry_canon[ui], &mut rec.entry_lock[ui]);
+                    let (c, l) = if is_src {
+                        (&mut canon.0, &mut lock.0)
+                    } else {
+                        (&mut canon.1, &mut lock.1)
+                    };
+                    if ext {
+                        *c = true;
+                    } else {
+                        *l = true;
+                    }
+                }
+                DmaSite::Win(c, p) => {
+                    if ext {
+                        rec.canon_sites.insert((c, p));
+                    } else {
+                        rec.lock_sites.insert((c, p));
+                    }
+                }
+            }
+        }
     }
 
     // -- event-driven span engine -------------------------------------------
@@ -781,10 +1557,10 @@ impl<'p> SimState<'p> {
             return;
         }
         let total = count * width;
-        self.cores[ci].busy += total;
         self.counters.core_busy_cycles[ci] += total;
         if let Some((layer, class)) = self.cores[ci].layer {
             let t_last = t_first + (count - 1) * step;
+            self.memo_note_layer(layer, Some(class), t_first, t_last + width, total);
             let stat = self.layer_stat(layer);
             // Same min-semantics as `core_busy` — see the note there.
             if stat.busy_cycles == 0 {
@@ -812,10 +1588,10 @@ impl<'p> SimState<'p> {
     // -- cores ---------------------------------------------------------------
 
     fn core_busy(&mut self, ci: usize, cycles: u64) {
-        self.cores[ci].busy += cycles;
         self.counters.core_busy_cycles[ci] += cycles;
         if let Some((layer, class)) = self.cores[ci].layer {
             let cycle = self.cycle;
+            self.memo_note_layer(layer, Some(class), cycle, cycle + cycles, cycles);
             let stat = self.layer_stat(layer);
             // Min-semantics (not first-writer-wins) so batched span
             // application is order-independent; identical for per-cycle
@@ -856,6 +1632,9 @@ impl<'p> SimState<'p> {
             // Retire a completed software kernel (functional effect).
             if let Some(sw) = self.cores[ci].pending_sw.take() {
                 if let Some(op) = &sw.op {
+                    if let Some(rec) = self.memo_recording() {
+                        rec.effects.push(FnEffect::Op(op.clone()));
+                    }
                     apply_op_scratch(op, &mut self.spm, &mut self.scratch)
                         .with_context(|| format!("sw kernel on core {ci}"))?;
                     self.counters.macs_retired += op.macs();
@@ -863,13 +1642,15 @@ impl<'p> SimState<'p> {
                 }
             }
             loop {
-                let Some(instr) = program.streams[ci].get(self.cores[ci].pc) else {
+                let pc = self.cores[ci].pc;
+                let Some(instr) = program.streams[ci].get(pc) else {
                     self.cores[ci].done = true;
                     break;
                 };
                 match instr {
                     Instr::SpanBegin { layer, class } => {
                         let (layer, class) = (*layer, *class);
+                        self.memo_note_layer(layer, Some(class), 0, 0, 0);
                         self.cores[ci].layer = Some((layer, class));
                         self.layer_stat(layer).class.get_or_insert(class);
                         self.cores[ci].pc += 1;
@@ -881,21 +1662,26 @@ impl<'p> SimState<'p> {
                         continue;
                     }
                     Instr::CsrWrite { unit, reg, val } => {
-                        let u = &mut self.units[unit.0 as usize];
+                        let ui = unit.0 as usize;
+                        let u = &mut self.units[ui];
                         let busy = u.job.is_some();
-                        if u.csr.try_write(*reg, *val, busy) {
+                        let (reg, val) = (*reg, *val);
+                        if u.csr.try_write(reg, val, busy) {
                             self.cores[ci].pc += 1;
                             self.counters.csr_writes += 1;
+                            self.memo_note_dma_write(ui, reg, ci, pc);
                         }
                         self.core_busy(ci, 1);
                         break;
                     }
                     Instr::Launch { unit } => {
+                        let ui = unit.0 as usize;
                         let layer = self.cores[ci].layer.map(|(l, _)| l).unwrap_or(u16::MAX);
-                        let u = &mut self.units[unit.0 as usize];
+                        let u = &mut self.units[ui];
                         let busy = u.job.is_some();
                         if u.csr.try_launch(layer, busy) {
                             self.cores[ci].pc += 1;
+                            self.memo_note_dma_launch(ui);
                         }
                         self.core_busy(ci, 1);
                         break;
@@ -935,18 +1721,18 @@ impl<'p> SimState<'p> {
                         let cycles = kernel.cycles.max(1);
                         self.cores[ci].wake_at = self.cycle + cycles;
                         self.core_busy(ci, cycles);
-                        if self.trace.is_some() {
-                            let name = self.cores[ci]
-                                .layer
-                                .and_then(|(l, _)| self.layer_labels.get(l as usize).cloned())
-                                .unwrap_or_else(|| self.sw_label.clone());
-                            let ev = TraceEvent {
-                                track: self.core_tracks[ci].clone(),
+                        let layer = self.cores[ci].layer;
+                        let cycle = self.cycle;
+                        if let Some(tc) = self.trace.as_deref_mut() {
+                            let name = layer
+                                .and_then(|(l, _)| tc.layer_labels.get(l as usize).cloned())
+                                .unwrap_or_else(|| tc.sw_label.clone());
+                            tc.trace.events.push(TraceEvent {
+                                track: tc.core_tracks[ci].clone(),
                                 name,
-                                start_cycle: self.cycle,
-                                end_cycle: self.cycle + cycles,
-                            };
-                            self.trace.as_mut().expect("trace").events.push(ev);
+                                start_cycle: cycle,
+                                end_cycle: cycle + cycles,
+                            });
                         }
                         self.cores[ci].pending_sw = Some(kernel.clone());
                         self.cores[ci].pc += 1;
@@ -1311,27 +2097,32 @@ impl<'p> SimState<'p> {
             // launch/poll); re-plan promptly.
             self.next_plan_at = self.cycle;
             self.plan_backoff = 1;
-            if self.trace.is_some() {
+            if let Some(tc) = self.trace.as_deref_mut() {
                 let name = if job.layer != u16::MAX {
-                    self.layer_labels
+                    tc.layer_labels
                         .get(job.layer as usize)
                         .cloned()
                         .unwrap_or_else(|| Arc::from(format!("layer{}", job.layer)))
                 } else {
-                    self.job_label.clone()
+                    tc.job_label.clone()
                 };
-                let ev = TraceEvent {
-                    track: self.unit_tracks[ui].clone(),
+                tc.trace.events.push(TraceEvent {
+                    track: tc.unit_tracks[ui].clone(),
                     name,
                     start_cycle: job.start,
                     end_cycle: cycle + 1,
-                };
-                self.trace.as_mut().expect("trace").events.push(ev);
+                });
             }
             // Functional effect.
             if let Some(dj) = &job.dma {
+                if let Some(rec) = self.memo_recording() {
+                    rec.effects.push(FnEffect::Dma(SnapDma::of(dj)));
+                }
                 self.dma_copy(dj)?;
             } else if let Some(desc) = &job.desc {
+                if let Some(rec) = self.memo_recording() {
+                    rec.effects.push(FnEffect::Op(desc.clone()));
+                }
                 apply_op_scratch(desc, &mut self.spm, &mut self.scratch)
                     .with_context(|| format!("retiring job on '{}'", self.units[ui].name))?;
                 self.counters.macs_retired += desc.macs();
@@ -1340,6 +2131,7 @@ impl<'p> SimState<'p> {
             // Attribution.
             let span = cycle.saturating_sub(job.start) + 1;
             if job.layer != u16::MAX {
+                self.memo_note_layer(job.layer, None, job.start, cycle + 1, span);
                 let stat = self.layer_stat(job.layer);
                 if stat.busy_cycles == 0 {
                     stat.first_start = job.start;
@@ -1394,7 +2186,7 @@ impl<'p> SimState<'p> {
                 .sum();
         }
         SimReport {
-            trace: self.trace,
+            trace: self.trace.map(|tc| tc.trace),
             total_cycles: self.cycle,
             counters: self.counters,
             units: self.units.into_iter().map(|u| u.stats).collect(),
@@ -1658,6 +2450,130 @@ mod tests {
         assert_sync::<Program>();
         assert_send::<crate::compiler::CompiledProgram>();
         assert_sync::<crate::compiler::CompiledProgram>();
+    }
+
+    /// Two-core program repeating the same barrier-delimited DMA phase
+    /// `reps` times (barrier ids and DESC-free CSR programs repeat up
+    /// to canonicalization — the memo engine's bread and butter).
+    fn repeated_phase_program(reps: u16) -> Program {
+        let dma = UnitId(1); // fig6c: gemm0 is unit 0, dma is unit 1
+        let w = |reg, val| Instr::CsrWrite { unit: dma, reg, val };
+        let mut core0 = vec![];
+        let mut core1 = vec![];
+        for rep in 0..reps {
+            core0.extend([
+                w(dma_csr::SRC, 0),
+                w(dma_csr::DST, 0),
+                w(dma_csr::ROW_BYTES, 512),
+                w(dma_csr::ROWS, 2),
+                w(dma_csr::SRC_STRIDE, 512),
+                w(dma_csr::DST_STRIDE, 512),
+                w(dma_csr::DIR, dma_dir::EXT_TO_SPM),
+                Instr::Launch { unit: dma },
+                Instr::AwaitIdle { unit: dma },
+                Instr::Barrier { id: BarrierId(rep), participants: 2 },
+            ]);
+            core1.push(Instr::Barrier { id: BarrierId(rep), participants: 2 });
+        }
+        Program {
+            streams: vec![core0, core1],
+            ext_mem_init: vec![(0, (0..1024usize).map(|i| i as u8).collect())],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn memo_on_off_and_exact_agree() {
+        let cfg = ClusterConfig::fig6b();
+        let program = dma_program(16, 512);
+        let exact = Cluster::new(&cfg).run_exact(&program).unwrap();
+        let off = Cluster::new(&cfg).with_memo(false).run(&program).unwrap();
+        let on = Cluster::new(&cfg).run(&program).unwrap();
+        assert_eq!(exact, off);
+        assert_eq!(exact, on);
+    }
+
+    #[test]
+    fn memo_phase_cache_replays_repeated_phases() {
+        let cfg = ClusterConfig::fig6c();
+        let program = repeated_phase_program(6);
+        let cache = Arc::new(super::super::phase::PhaseCache::new(64));
+        let memo =
+            Cluster::new(&cfg).with_phase_cache(cache.clone()).run(&program).unwrap();
+        let exact = Cluster::new(&cfg).run_exact(&program).unwrap();
+        let off = Cluster::new(&cfg).with_memo(false).run(&program).unwrap();
+        assert_eq!(exact, off);
+        assert_eq!(exact, memo);
+        assert!(cache.hits() >= 3, "repeated phases must replay: {:?}", cache.stats());
+        assert!(cache.replayed_cycles() > 0);
+        // Cross-run reuse over the shared cache: a second run replays
+        // from its very first phase and still reproduces the report.
+        let hits0 = cache.hits();
+        let memo2 =
+            Cluster::new(&cfg).with_phase_cache(cache.clone()).run(&program).unwrap();
+        assert_eq!(exact, memo2);
+        assert!(cache.hits() > hits0, "second run must hit the shared cache");
+    }
+
+    #[test]
+    fn memo_replays_traces_identically() {
+        let cfg = ClusterConfig::fig6c();
+        let program = repeated_phase_program(5);
+        let cache = Arc::new(super::super::phase::PhaseCache::new(64));
+        let (r1, t1) = Cluster::new(&cfg)
+            .with_phase_cache(cache.clone())
+            .run_traced(&program)
+            .unwrap();
+        let (r2, t2) = Cluster::new(&cfg)
+            .with_phase_cache(cache.clone())
+            .run_traced(&program)
+            .unwrap();
+        let (r3, t3) =
+            Cluster::new(&cfg).with_memo(false).run_traced(&program).unwrap();
+        assert!(cache.hits() > 0);
+        assert_eq!(r1, r3);
+        assert_eq!(r2, r3);
+        assert_eq!(t1, t3, "replayed trace must match the live trace");
+        assert_eq!(t2, t3);
+    }
+
+    #[test]
+    fn untraced_records_never_serve_traced_runs() {
+        let cfg = ClusterConfig::fig6c();
+        let program = repeated_phase_program(4);
+        let cache = Arc::new(super::super::phase::PhaseCache::new(64));
+        let plain = Cluster::new(&cfg).with_phase_cache(cache.clone()).run(&program).unwrap();
+        // A traced run over the same cache must not replay untraced
+        // records (it would silently drop its events).
+        let (traced_report, trace) = Cluster::new(&cfg)
+            .with_phase_cache(cache.clone())
+            .run_traced(&program)
+            .unwrap();
+        assert!(!trace.events.is_empty());
+        assert_eq!(plain.total_cycles, traced_report.total_cycles);
+        assert_eq!(
+            trace.events.len(),
+            Cluster::new(&cfg).with_memo(false).run_traced(&program).unwrap().1.events.len()
+        );
+    }
+
+    #[test]
+    fn non_traced_runs_intern_no_labels_and_record_no_events() {
+        let cfg = ClusterConfig::fig6b();
+        let program = dma_program(4, 256);
+        let cluster = Cluster::new(&cfg);
+        let base = TRACE_CTX_BUILDS.with(|c| c.get());
+        let report = cluster.run(&program).unwrap();
+        assert!(report.trace.is_none(), "non-traced run must carry no trace");
+        assert_eq!(
+            TRACE_CTX_BUILDS.with(|c| c.get()),
+            base,
+            "non-traced path must not build a TraceCtx (no Arc<str> interning)"
+        );
+        // The traced path builds exactly one context and records events.
+        let (_, trace) = cluster.run_traced(&program).unwrap();
+        assert_eq!(TRACE_CTX_BUILDS.with(|c| c.get()), base + 1);
+        assert!(!trace.events.is_empty());
     }
 
     #[test]

@@ -84,6 +84,25 @@ impl CsrFile {
     pub fn has_pending(&self) -> bool {
         self.pending.is_some()
     }
+
+    /// Staged-bank contents (phase-memo snapshot; see
+    /// [`crate::sim::phase`]).
+    pub(crate) fn staged_regs(&self) -> &[u64] {
+        &self.staged
+    }
+
+    /// Pending-job contents `(regs, layer)`, if any.
+    pub(crate) fn pending_snapshot(&self) -> Option<(&[u64], u16)> {
+        self.pending.as_ref().map(|p| (p.regs.as_slice(), p.layer))
+    }
+
+    /// Phase-memo restore of staged + pending control state. The
+    /// `writes` / `launch_stall_cycles` accumulators are left alone —
+    /// they feed no report field and no control decision.
+    pub(crate) fn restore(&mut self, staged: Vec<u64>, pending: Option<(Vec<u64>, u16)>) {
+        self.staged = staged;
+        self.pending = pending.map(|(regs, layer)| PendingJob { regs, layer });
+    }
 }
 
 #[cfg(test)]

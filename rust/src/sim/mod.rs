@@ -25,9 +25,11 @@ pub mod dma;
 pub mod functional;
 pub mod job;
 pub mod mem;
+pub mod phase;
 pub mod streamer;
 pub mod trace;
 
 pub use cluster::{Cluster, SimMode};
 pub use job::{OpDesc, Region};
+pub use phase::{PhaseCache, PhaseCacheStats};
 pub use trace::{Counters, LayerStat, SimReport, UnitStats};

@@ -1,0 +1,1591 @@
+//! Barrier-delimited phase memoization (DESIGN.md §8).
+//!
+//! SNAX's hybrid coupling makes *timing* a pure function of control
+//! state: streamer loop nests, DMA descriptors, CSR programs, and bank
+//! geometry fully determine stalls and overlap, independent of the
+//! tensor bytes flowing through the datapath. The event engine exploits
+//! that invariant here: at every barrier-delimited phase boundary it
+//! fingerprints the architecturally visible control state and, on a
+//! repeat, *replays* the cached phase in O(events) — counters,
+//! [`UnitStats`](super::trace::UnitStats) and
+//! [`LayerStat`](super::trace::LayerStat) deltas, and time-shifted trace
+//! segments are applied in closed form, while the functional retires
+//! (the actual tensor math) still run through the real blocked datapath
+//! so SPM/ext-mem bytes stay bit-exact.
+//!
+//! A phase record matches only when its *entire* timing-relevant input
+//! matches, structurally (never by hash alone):
+//!
+//! * the entry control snapshot ([`CtrlSnap`]): per-core wake/barrier/
+//!   layer/software-kernel state, per-unit CSR banks (staged + shadow),
+//!   running jobs, and full streamer state (AGU plans, FIFO levels,
+//!   in-flight beats, per-bank pending requests);
+//! * the per-core *instruction windows* the phase consumed, compared up
+//!   to three canonicalizations that preserve timing semantics exactly:
+//!   barrier ids match modulo a consistent renaming (a bijection built
+//!   greedily during validation), `DESC` CSR values match by the
+//!   *content* of the descriptor they index (the index itself is an
+//!   opaque functional handle), and DMA `SRC`/`DST` values that were
+//!   consumed as *external-memory* addresses match via a value
+//!   correspondence map (AXI-side addresses never touch the banked
+//!   scratchpad, so they cannot affect timing). Every literal DMA
+//!   address site pins its value to identity in the same map, so a
+//!   value can never be translated inconsistently.
+//!
+//! Replay then restores the recorded end-state snapshot shifted to the
+//! current time base, translating barrier ids, descriptor indices, and
+//! external DMA addresses through the maps built during validation.
+//!
+//! One residual absolute-time dependence exists in the simulator: the
+//! round-robin arbiter rotates grant priority by `(i + cycle + bank) %
+//! group_len`. Phases that never had two streamers contending for one
+//! bank (bank-conflict-cycle delta of zero) are provably independent of
+//! that rotation and replay at any cycle offset; conflicted phases are
+//! additionally keyed on `cycle % lcm(group sizes)` so the rotation
+//! state at replay matches recording exactly.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compiler::fingerprint::Fnv1a;
+use crate::config::ClusterConfig;
+use crate::isa::{dma_csr, Instr, LayerClass, Program};
+
+use super::accel::{CounterClass, EmitRule};
+use super::dma::{DmaDir, DmaJob};
+use super::job::OpDesc;
+use super::streamer::StreamPlan;
+use super::trace::Counters;
+
+/// Phases shorter than this are not worth a cache entry (the snapshot
+/// and window clones would cost more than re-simulating).
+pub(crate) const MIN_PHASE_CYCLES: u64 = 16;
+/// Upper bound on one core's recorded instruction window; phases that
+/// consume more are simulated but never cached (bounds record memory).
+pub(crate) const WINDOW_CAP: usize = 8192;
+/// Variants kept per fingerprint slot (distinct windows / rotation
+/// residues); oldest is dropped beyond this.
+const MAX_VARIANTS: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Control-state snapshots
+// ---------------------------------------------------------------------------
+
+/// Static per-unit facts the canonicalizer needs: which CSR (if any) is
+/// the opaque functional `DESC` handle, and whether the unit is the DMA
+/// engine (whose `SRC`/`DST` registers may hold AXI-side addresses).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct UnitMeta {
+    pub desc_reg: Option<u16>,
+    pub is_dma: bool,
+}
+
+/// A core's software kernel, by content.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SnapSw {
+    pub cycles: u64,
+    pub class: LayerClass,
+    pub op: Option<OpDesc>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SnapCore {
+    /// Absolute pc at the snapshot. Excluded from state matching (the
+    /// instruction *windows* carry the control-flow identity); used as
+    /// the window anchor and the restore base.
+    pub pc: usize,
+    /// `wake_at - cycle`, saturating: only the future part of a sleep
+    /// is architecturally visible.
+    pub wake_rel: u64,
+    pub barrier_arrived: bool,
+    pub done: bool,
+    pub layer: Option<(u16, LayerClass)>,
+    pub sw: Option<SnapSw>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SnapStreamer {
+    pub plan: Option<StreamPlan>,
+    pub beat_idx: u64,
+    pub beats_total: u64,
+    pub fifo: u32,
+    pub pending: Vec<u8>,
+    pub pending_mask: u64,
+    pub pending_words: u32,
+    pub inflight: Vec<u32>,
+}
+
+/// A decoded DMA job (clone of [`DmaJob`], kept as plain data so the
+/// record type owns no simulator internals).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SnapDma {
+    pub dir: DmaDir,
+    pub src: u64,
+    pub dst: u64,
+    pub rows: u64,
+    pub row_bytes: u64,
+    pub src_stride: i64,
+    pub dst_stride: i64,
+}
+
+impl SnapDma {
+    pub(crate) fn of(j: &DmaJob) -> Self {
+        Self {
+            dir: j.dir,
+            src: j.src,
+            dst: j.dst,
+            rows: j.rows,
+            row_bytes: j.row_bytes,
+            src_stride: j.src_stride,
+            dst_stride: j.dst_stride,
+        }
+    }
+
+    /// Materialize as a live [`DmaJob`] with `SRC`/`DST` translated
+    /// through the DMA address correspondence map (identity for
+    /// scratchpad-side addresses, which are pinned `v -> v`).
+    pub(crate) fn to_job(&self, dma_map: &HashMap<u64, u64>) -> DmaJob {
+        DmaJob {
+            dir: self.dir,
+            src: dma_map.get(&self.src).copied().unwrap_or(self.src),
+            dst: dma_map.get(&self.dst).copied().unwrap_or(self.dst),
+            rows: self.rows,
+            row_bytes: self.row_bytes,
+            src_stride: self.src_stride,
+            dst_stride: self.dst_stride,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SnapJob {
+    pub steps: u64,
+    pub steps_done: u64,
+    pub emit: EmitRule,
+    pub emitted: u64,
+    pub consume_every: Vec<u64>,
+    pub class: CounterClass,
+    /// Resolved descriptor content (the index is an opaque handle).
+    pub desc: Option<OpDesc>,
+    pub layer: u16,
+    /// `cycle - job.start` at the snapshot (jobs may span boundaries).
+    pub start_rel: u64,
+    pub dma: Option<SnapDma>,
+    pub axi_remaining: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SnapPending {
+    pub regs: Vec<u64>,
+    /// `Some(resolved)` iff the unit has a DESC register.
+    pub desc: Option<Option<OpDesc>>,
+    pub layer: u16,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SnapUnit {
+    pub staged: Vec<u64>,
+    /// `Some(resolved)` iff the unit has a DESC register.
+    pub staged_desc: Option<Option<OpDesc>>,
+    pub pending: Option<SnapPending>,
+    pub job: Option<SnapJob>,
+    pub readers: Vec<SnapStreamer>,
+    pub writers: Vec<SnapStreamer>,
+}
+
+/// The full timing-relevant control state at a phase boundary, with all
+/// absolute times converted to boundary-relative form.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct CtrlSnap {
+    pub cores: Vec<SnapCore>,
+    pub units: Vec<SnapUnit>,
+    /// Barrier file entries `(id, arrived mask, participants)`, sorted
+    /// by id so canonical numbering is deterministic.
+    pub barriers: Vec<(u16, u64, u8)>,
+    pub traced: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Instruction windows
+// ---------------------------------------------------------------------------
+
+/// One canonicalized instruction of a phase window. DESC writes carry
+/// the resolved descriptor content; DMA `SRC`/`DST` writes carry the
+/// ext-address classification the recording proved by observing which
+/// side of each launched transfer the value fed.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum WinInstr {
+    Csr { unit: u8, reg: u16, val: u64 },
+    CsrDesc { unit: u8, reg: u16, idx: u64, desc: Option<OpDesc> },
+    CsrDmaAddr { unit: u8, reg: u16, val: u64, canon: bool },
+    Launch { unit: u8 },
+    Await { unit: u8 },
+    Barrier { id: u16, participants: u8 },
+    Sw { cycles: u64, class: LayerClass, op: Option<OpDesc> },
+    SpanBegin { layer: u16, class: LayerClass },
+    SpanEnd { layer: u16 },
+    /// The core observed end-of-stream during the phase.
+    End,
+}
+
+// ---------------------------------------------------------------------------
+// Recorded deltas
+// ---------------------------------------------------------------------------
+
+/// One functional retire, in global retirement order. Replay applies
+/// these through the real datapath (`apply_op_scratch` / `dma_copy`) so
+/// memory bytes are computed, never cached.
+#[derive(Debug, Clone)]
+pub(crate) enum FnEffect {
+    Op(OpDesc),
+    Dma(SnapDma),
+}
+
+/// Per-layer attribution delta, intercepted at the attribution sites so
+/// min/first and max/last fold exactly like the live updates.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct LayerDelta {
+    pub busy: u64,
+    /// `(min first_start, max last_end)` relative to phase start; only
+    /// present when busy cycles were attributed.
+    pub attr: Option<(i64, i64)>,
+    /// First class attributed in the phase (`get_or_insert` semantics).
+    pub class: Option<LayerClass>,
+}
+
+/// Additive unit-stat delta. `streamer_conflict_cycles` is excluded:
+/// it is recomputed from streamer stats in `into_report`.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct UnitDelta {
+    pub active: u64,
+    pub compute: u64,
+    pub stall_input: u64,
+    pub stall_output: u64,
+    pub jobs: u64,
+}
+
+/// Additive streamer-stat delta `(beats_done, conflict, fifo_stall)`.
+pub(crate) type StreamDelta = (u64, u64, u64);
+
+/// One trace interval relative to phase start (negative offsets occur
+/// when a job launched before the boundary retires inside the phase).
+#[derive(Debug, Clone)]
+pub(crate) struct TraceSeg {
+    pub track: Arc<str>,
+    pub name: Arc<str>,
+    pub start_rel: i64,
+    pub end_rel: i64,
+}
+
+/// A fully recorded phase: everything needed to (a) prove a later
+/// boundary state will evolve identically and (b) apply that evolution
+/// in closed form.
+#[derive(Debug)]
+pub(crate) struct PhaseRecord {
+    /// Approximate heap footprint (bytes) — the cache's eviction
+    /// accounting (see [`PhaseCache`]); computed once at insert.
+    pub approx_bytes: usize,
+    /// The program+config identity seed this record was made under,
+    /// compared *structurally* at match time: the seed folded into the
+    /// cache key is a bucket index only, so even a 64-bit digest
+    /// collision between two workloads can never replay a phase
+    /// recorded under a different program or cluster config.
+    pub seed: u64,
+    pub len: u64,
+    /// No cycle in the phase had two streamers contending for one bank,
+    /// so the arbiter rotation never mattered and the phase replays at
+    /// any cycle offset.
+    pub relocatable: bool,
+    /// `start_cycle % lcm(arbitration group sizes)` — gating residue
+    /// for non-relocatable phases.
+    pub start_mod: u64,
+    pub traced: bool,
+    pub entry: CtrlSnap,
+    /// Per unit: matching class of the entry-state staged `SRC`/`DST`
+    /// values (see [`EntryAddrClass`]).
+    pub entry_dma_class: Vec<(EntryAddrClass, EntryAddrClass)>,
+    pub windows: Vec<Vec<WinInstr>>,
+    /// `pc_end - pc_start` per core.
+    pub pc_delta: Vec<usize>,
+    pub end: CtrlSnap,
+    pub counters: Counters,
+    pub unit_deltas: Vec<UnitDelta>,
+    /// Per unit, readers then writers.
+    pub stream_deltas: Vec<Vec<StreamDelta>>,
+    pub layers: Vec<(u16, LayerDelta)>,
+    pub effects: Vec<FnEffect>,
+    pub trace_segs: Vec<TraceSeg>,
+}
+
+impl PhaseRecord {
+    /// Rough heap cost of this record, for byte-bounded eviction. Keeps
+    /// to cheap O(structure) estimates — per-item constants approximate
+    /// the enum/struct sizes plus allocator overhead.
+    pub(crate) fn estimate_bytes(&self) -> usize {
+        let snap = |s: &CtrlSnap| {
+            512 + s.cores.len() * 96
+                + s.barriers.len() * 16
+                + s
+                    .units
+                    .iter()
+                    .map(|u| {
+                        192 + u.staged.len() * 8
+                            + u.pending.as_ref().map_or(0, |p| 64 + p.regs.len() * 8)
+                            + (u.readers.len() + u.writers.len()) * 128
+                            + u.readers
+                                .iter()
+                                .chain(u.writers.iter())
+                                .map(|st| st.pending.len() + st.inflight.len() * 4)
+                                .sum::<usize>()
+                    })
+                    .sum::<usize>()
+        };
+        snap(&self.entry)
+            + snap(&self.end)
+            + self.windows.iter().map(|w| 32 + w.len() * 96).sum::<usize>()
+            + self.effects.len() * 96
+            + self.trace_segs.len() * 48
+            + self.layers.len() * 40
+            + self.stream_deltas.iter().map(|d| 16 + d.len() * 24).sum::<usize>()
+            + self.unit_deltas.len() * 40
+    }
+
+    /// Matching-relevant identity: two records with the same entry
+    /// state, windows, residue, and trace flag validate exactly the
+    /// same boundary states (and deltas are deterministic given those),
+    /// so one of them is redundant.
+    fn same_identity(&self, other: &PhaseRecord) -> bool {
+        self.seed == other.seed
+            && self.len == other.len
+            && self.relocatable == other.relocatable
+            && self.start_mod == other.start_mod
+            && self.traced == other.traced
+            && self.pc_delta == other.pc_delta
+            && self.entry == other.entry
+            && self.windows == other.windows
+    }
+}
+
+/// The correspondence maps a successful validation produces; replay
+/// translates the recorded end state and effects through them.
+#[derive(Debug, Default)]
+pub(crate) struct ReplayMaps {
+    /// Recorded barrier id -> current barrier id (bijection).
+    pub barrier: HashMap<u16, u16>,
+    barrier_rev: HashMap<u16, u16>,
+    /// Recorded DMA SRC/DST value -> current value. Literal (SPM-side)
+    /// sites pin `v -> v`; conflicting pairings fail the match.
+    pub dma: HashMap<u64, u64>,
+    /// Recorded DESC index -> current DESC index (content-checked).
+    pub desc: HashMap<u64, u64>,
+}
+
+impl ReplayMaps {
+    fn pair_barrier(&mut self, rec: u16, cur: u16) -> Option<()> {
+        match self.barrier.get(&rec) {
+            Some(&c) if c != cur => return None,
+            Some(_) => return Some(()),
+            None => {}
+        }
+        match self.barrier_rev.get(&cur) {
+            Some(&r) if r != rec => return None,
+            _ => {}
+        }
+        self.barrier.insert(rec, cur);
+        self.barrier_rev.insert(cur, rec);
+        Some(())
+    }
+
+    fn pair_dma(&mut self, rec: u64, cur: u64, canon: bool) -> Option<()> {
+        if !canon && rec != cur {
+            return None;
+        }
+        match self.dma.get(&rec) {
+            Some(&c) if c != cur => None,
+            Some(_) => Some(()),
+            None => {
+                self.dma.insert(rec, cur);
+                Some(())
+            }
+        }
+    }
+}
+
+/// Which of `(src, dst)` are AXI-side (timing-irrelevant) for a DMA
+/// direction.
+pub(crate) fn ext_sides(dir: DmaDir) -> (bool, bool) {
+    match dir {
+        DmaDir::ExtToSpm => (true, false),
+        DmaDir::SpmToExt => (false, true),
+        DmaDir::SpmToSpm => (false, false),
+    }
+}
+
+/// How an entry-state DMA `SRC`/`DST` value participates in matching,
+/// proven by the recording's dynamic consumption:
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum EntryAddrClass {
+    /// Consumed as an SPM-side address (or never overwritten, so it
+    /// survives into the end state verbatim): must match literally.
+    Literal,
+    /// Consumed only as an AXI-side address: matches via the DMA value
+    /// correspondence map.
+    Canon,
+    /// Never consumed by any launch and overwritten in-phase before the
+    /// boundary: the value is provably unobserved — skipped entirely.
+    /// (Pipelined codegen leaves the previous tick's per-inference ext
+    /// address staged here; without this class those dead leftovers
+    /// would block every cross-inference match.)
+    Dead,
+}
+
+/// Ext-side classification of pending-job `SRC`/`DST` regs from the
+/// snapshotted `DIR` value (complete by construction: `Launch` commits
+/// the whole bank atomically). Also used by the recorder at launch
+/// time — the single source of the DIR -> ext-side mapping.
+pub(crate) fn pending_ext_sides(regs: &[u64]) -> (bool, bool) {
+    match regs.get(dma_csr::DIR as usize) {
+        Some(&crate::isa::dma_dir::EXT_TO_SPM) => (true, false),
+        Some(&crate::isa::dma_dir::SPM_TO_EXT) => (false, true),
+        _ => (false, false),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matching
+// ---------------------------------------------------------------------------
+
+fn match_unit(
+    ui: usize,
+    ru: &SnapUnit,
+    cu: &SnapUnit,
+    rec: &PhaseRecord,
+    meta: &[UnitMeta],
+    maps: &mut ReplayMaps,
+) -> Option<()> {
+    let m = &meta[ui];
+    if ru.staged.len() != cu.staged.len() {
+        return None;
+    }
+    let (src_class, dst_class) = rec.entry_dma_class[ui];
+    for (i, (&rv, &cv)) in ru.staged.iter().zip(&cu.staged).enumerate() {
+        let reg = i as u16;
+        if m.desc_reg == Some(reg) {
+            if ru.staged_desc != cu.staged_desc {
+                return None;
+            }
+            maps.desc.insert(rv, cv);
+        } else if m.is_dma && (reg == dma_csr::SRC || reg == dma_csr::DST) {
+            let class = if reg == dma_csr::SRC { src_class } else { dst_class };
+            match class {
+                EntryAddrClass::Literal => maps.pair_dma(rv, cv, false)?,
+                EntryAddrClass::Canon => maps.pair_dma(rv, cv, true)?,
+                // Provably unobserved and overwritten before the next
+                // boundary: no constraint.
+                EntryAddrClass::Dead => {}
+            }
+        } else if rv != cv {
+            return None;
+        }
+    }
+    match (&ru.pending, &cu.pending) {
+        (None, None) => {}
+        (Some(rp), Some(cp)) => {
+            if rp.layer != cp.layer || rp.regs.len() != cp.regs.len() || rp.desc != cp.desc {
+                return None;
+            }
+            let (src_ext, dst_ext) =
+                if m.is_dma { pending_ext_sides(&rp.regs) } else { (false, false) };
+            for (i, (&rv, &cv)) in rp.regs.iter().zip(&cp.regs).enumerate() {
+                let reg = i as u16;
+                if m.desc_reg == Some(reg) {
+                    // Content equality established via `rp.desc` above.
+                    maps.desc.insert(rv, cv);
+                } else if m.is_dma && (reg == dma_csr::SRC || reg == dma_csr::DST) {
+                    let canon = if reg == dma_csr::SRC { src_ext } else { dst_ext };
+                    maps.pair_dma(rv, cv, canon)?;
+                } else if rv != cv {
+                    return None;
+                }
+            }
+        }
+        _ => return None,
+    }
+    match (&ru.job, &cu.job) {
+        (None, None) => {}
+        (Some(rj), Some(cj)) => {
+            if rj.steps != cj.steps
+                || rj.steps_done != cj.steps_done
+                || rj.emit != cj.emit
+                || rj.emitted != cj.emitted
+                || rj.consume_every != cj.consume_every
+                || rj.class != cj.class
+                || rj.desc != cj.desc
+                || rj.layer != cj.layer
+                || rj.start_rel != cj.start_rel
+                || rj.axi_remaining != cj.axi_remaining
+            {
+                return None;
+            }
+            match (&rj.dma, &cj.dma) {
+                (None, None) => {}
+                (Some(rd), Some(cd)) => {
+                    if rd.dir != cd.dir
+                        || rd.rows != cd.rows
+                        || rd.row_bytes != cd.row_bytes
+                        || rd.src_stride != cd.src_stride
+                        || rd.dst_stride != cd.dst_stride
+                    {
+                        return None;
+                    }
+                    let (src_ext, dst_ext) = ext_sides(rd.dir);
+                    maps.pair_dma(rd.src, cd.src, src_ext)?;
+                    maps.pair_dma(rd.dst, cd.dst, dst_ext)?;
+                }
+                _ => return None,
+            }
+        }
+        _ => return None,
+    }
+    if ru.readers != cu.readers || ru.writers != cu.writers {
+        return None;
+    }
+    Some(())
+}
+
+fn match_window_item(
+    item: &WinInstr,
+    instr: &Instr,
+    descs: &[OpDesc],
+    maps: &mut ReplayMaps,
+) -> Option<()> {
+    match (item, instr) {
+        (WinInstr::Csr { unit, reg, val }, Instr::CsrWrite { unit: u2, reg: r2, val: v2 }) => {
+            (*unit == u2.0 && reg == r2 && val == v2).then_some(())
+        }
+        (
+            WinInstr::CsrDesc { unit, reg, idx, desc },
+            Instr::CsrWrite { unit: u2, reg: r2, val: v2 },
+        ) => {
+            if *unit != u2.0 || reg != r2 {
+                return None;
+            }
+            if desc.as_ref() != descs.get(*v2 as usize) {
+                return None;
+            }
+            maps.desc.insert(*idx, *v2);
+            Some(())
+        }
+        (
+            WinInstr::CsrDmaAddr { unit, reg, val, canon },
+            Instr::CsrWrite { unit: u2, reg: r2, val: v2 },
+        ) => {
+            if *unit != u2.0 || reg != r2 {
+                return None;
+            }
+            maps.pair_dma(*val, *v2, *canon)
+        }
+        (WinInstr::Launch { unit }, Instr::Launch { unit: u2 }) => {
+            (*unit == u2.0).then_some(())
+        }
+        (WinInstr::Await { unit }, Instr::AwaitIdle { unit: u2 }) => {
+            (*unit == u2.0).then_some(())
+        }
+        (
+            WinInstr::Barrier { id, participants },
+            Instr::Barrier { id: i2, participants: p2 },
+        ) => {
+            if participants != p2 {
+                return None;
+            }
+            maps.pair_barrier(*id, i2.0)
+        }
+        (WinInstr::Sw { cycles, class, op }, Instr::Sw { kernel }) => {
+            (*cycles == kernel.cycles && *class == kernel.class && *op == kernel.op)
+                .then_some(())
+        }
+        (
+            WinInstr::SpanBegin { layer, class },
+            Instr::SpanBegin { layer: l2, class: c2 },
+        ) => (layer == l2 && class == c2).then_some(()),
+        (WinInstr::SpanEnd { layer }, Instr::SpanEnd { layer: l2 }) => {
+            (layer == l2).then_some(())
+        }
+        _ => None,
+    }
+}
+
+/// Every barrier id, descriptor index, and DMA address the end-state
+/// restore will translate must already be in the maps; a miss here
+/// means the record cannot be applied soundly, so the match fails
+/// before any state is mutated.
+fn end_translatable(rec: &PhaseRecord, maps: &ReplayMaps, meta: &[UnitMeta]) -> bool {
+    if rec.end.barriers.iter().any(|(id, _, _)| !maps.barrier.contains_key(id)) {
+        return false;
+    }
+    for (ui, u) in rec.end.units.iter().enumerate() {
+        let m = &meta[ui];
+        if let Some(dr) = m.desc_reg {
+            if !maps.desc.contains_key(&u.staged[dr as usize]) {
+                return false;
+            }
+            if let Some(p) = &u.pending {
+                if !maps.desc.contains_key(&p.regs[dr as usize]) {
+                    return false;
+                }
+            }
+        }
+        if m.is_dma {
+            let addr_ok = |regs: &[u64]| {
+                maps.dma.contains_key(&regs[dma_csr::SRC as usize])
+                    && maps.dma.contains_key(&regs[dma_csr::DST as usize])
+            };
+            if !addr_ok(&u.staged) {
+                return false;
+            }
+            if let Some(p) = &u.pending {
+                if !addr_ok(&p.regs) {
+                    return false;
+                }
+            }
+        }
+        if let Some(d) = u.job.as_ref().and_then(|j| j.dma.as_ref()) {
+            if !maps.dma.contains_key(&d.src) || !maps.dma.contains_key(&d.dst) {
+                return false;
+            }
+        }
+    }
+    rec.effects.iter().all(|e| match e {
+        FnEffect::Op(_) => true,
+        FnEffect::Dma(d) => {
+            maps.dma.contains_key(&d.src) && maps.dma.contains_key(&d.dst)
+        }
+    })
+}
+
+/// Validate a candidate record against the current boundary state.
+/// Returns the translation maps on success.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn match_record(
+    rec: &PhaseRecord,
+    cur: &CtrlSnap,
+    seed: u64,
+    streams: &[Vec<Instr>],
+    descs: &[OpDesc],
+    meta: &[UnitMeta],
+    cur_cycle: u64,
+    l_mod: u64,
+) -> Option<ReplayMaps> {
+    if rec.seed != seed {
+        return None; // cross-workload key collision — never replay
+    }
+    if !(rec.relocatable || l_mod <= 1 || cur_cycle % l_mod == rec.start_mod) {
+        return None;
+    }
+    if rec.traced != cur.traced
+        || rec.entry.cores.len() != cur.cores.len()
+        || rec.entry.units.len() != cur.units.len()
+        || rec.entry.barriers.len() != cur.barriers.len()
+    {
+        return None;
+    }
+    let mut maps = ReplayMaps::default();
+    for (&(rid, rmask, rp), &(cid, cmask, cp)) in
+        rec.entry.barriers.iter().zip(&cur.barriers)
+    {
+        if rmask != cmask || rp != cp {
+            return None;
+        }
+        maps.pair_barrier(rid, cid)?;
+    }
+    for (rc, cc) in rec.entry.cores.iter().zip(&cur.cores) {
+        // pc deliberately excluded: the windows carry control identity.
+        if rc.wake_rel != cc.wake_rel
+            || rc.barrier_arrived != cc.barrier_arrived
+            || rc.done != cc.done
+            || rc.layer != cc.layer
+            || rc.sw != cc.sw
+        {
+            return None;
+        }
+    }
+    for (ui, (ru, cu)) in rec.entry.units.iter().zip(&cur.units).enumerate() {
+        match_unit(ui, ru, cu, rec, meta, &mut maps)?;
+    }
+    for (ci, win) in rec.windows.iter().enumerate() {
+        let stream = &streams[ci];
+        let mut pos = cur.cores[ci].pc;
+        for item in win {
+            if matches!(item, WinInstr::End) {
+                if pos != stream.len() {
+                    return None;
+                }
+                continue;
+            }
+            let instr = stream.get(pos)?;
+            match_window_item(item, instr, descs, &mut maps)?;
+            pos += 1;
+        }
+    }
+    if !end_translatable(rec, &maps, meta) {
+        return None;
+    }
+    Some(maps)
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprinting (the cache key — a bucket index; matching stays
+// structural)
+// ---------------------------------------------------------------------------
+
+fn class_tag(c: LayerClass) -> u8 {
+    match c {
+        LayerClass::Conv => 0,
+        LayerClass::MaxPool => 1,
+        LayerClass::Dense => 2,
+        LayerClass::Elementwise => 3,
+        LayerClass::DataMove => 4,
+        LayerClass::Other => 5,
+    }
+}
+
+fn feed_opt_desc(h: &mut Fnv1a, d: &Option<OpDesc>) {
+    match d {
+        None => h.write_u8(0),
+        Some(d) => {
+            h.write_u8(1);
+            feed_opdesc(h, d);
+        }
+    }
+}
+
+fn feed_opdesc(h: &mut Fnv1a, d: &OpDesc) {
+    match *d {
+        OpDesc::Gemm { a, b, c, m, k, n, shift, relu, i32_out } => {
+            h.write_u8(0);
+            for v in [a.0, b.0, c.0] {
+                h.write_u64(v);
+            }
+            for v in [m, k, n, shift] {
+                h.write_u32(v);
+            }
+            h.write_bool(relu);
+            h.write_bool(i32_out);
+        }
+        OpDesc::Conv2d {
+            input,
+            weights,
+            out,
+            n,
+            h: ih,
+            w,
+            cin,
+            cout,
+            kh,
+            kw,
+            stride,
+            pad,
+            shift,
+            relu,
+        } => {
+            h.write_u8(1);
+            for v in [input.0, weights.0, out.0] {
+                h.write_u64(v);
+            }
+            for v in [n, ih, w, cin, cout, kh, kw, stride, pad, shift] {
+                h.write_u32(v);
+            }
+            h.write_bool(relu);
+        }
+        OpDesc::MaxPool { input, out, n, h: ih, w, c, k, s } => {
+            h.write_u8(2);
+            h.write_u64(input.0);
+            h.write_u64(out.0);
+            for v in [n, ih, w, c, k, s] {
+                h.write_u32(v);
+            }
+        }
+        OpDesc::VecAdd { a, b, out, len, relu } => {
+            h.write_u8(3);
+            for v in [a.0, b.0, out.0] {
+                h.write_u64(v);
+            }
+            h.write_u32(len);
+            h.write_bool(relu);
+        }
+        OpDesc::Relu { buf, len } => {
+            h.write_u8(4);
+            h.write_u64(buf.0);
+            h.write_u32(len);
+        }
+        OpDesc::GlobalAvgPool { input, out, n, h: ih, w, c } => {
+            h.write_u8(5);
+            h.write_u64(input.0);
+            h.write_u64(out.0);
+            for v in [n, ih, w, c] {
+                h.write_u32(v);
+            }
+        }
+        OpDesc::TileRows { input, out, len, rows } => {
+            h.write_u8(6);
+            h.write_u64(input.0);
+            h.write_u64(out.0);
+            h.write_u32(len);
+            h.write_u32(rows);
+        }
+    }
+}
+
+fn feed_plan(h: &mut Fnv1a, p: &Option<StreamPlan>) {
+    match p {
+        None => h.write_u8(0),
+        Some(p) => {
+            h.write_u8(1);
+            h.write_u64(p.base);
+            h.write_u32(p.pattern.rows);
+            h.write_u64(p.pattern.row_stride as u64);
+            h.write_u32(p.pattern.words_per_row);
+            for l in &p.loops {
+                h.write_u64(l.count);
+                h.write_u64(l.stride as u64);
+            }
+        }
+    }
+}
+
+fn feed_streamer(h: &mut Fnv1a, s: &SnapStreamer) {
+    feed_plan(h, &s.plan);
+    h.write_u64(s.beat_idx);
+    h.write_u64(s.beats_total);
+    h.write_u32(s.fifo);
+    h.write_u64(s.pending.len() as u64);
+    h.write_bytes(&s.pending);
+    h.write_u64(s.pending_mask);
+    h.write_u32(s.pending_words);
+    h.write_u64(s.inflight.len() as u64);
+    for &w in &s.inflight {
+        h.write_u32(w);
+    }
+}
+
+fn feed_regs(h: &mut Fnv1a, regs: &[u64], desc: &Option<Option<OpDesc>>, m: &UnitMeta) {
+    h.write_u64(regs.len() as u64);
+    for (i, &v) in regs.iter().enumerate() {
+        let reg = i as u16;
+        if m.desc_reg == Some(reg) {
+            h.write_u8(0x5d);
+            match desc {
+                Some(d) => feed_opt_desc(h, d),
+                None => h.write_u8(0xff),
+            }
+        } else if m.is_dma && (reg == dma_csr::SRC || reg == dma_csr::DST) {
+            // Masked: classification is per-record; validation decides.
+            h.write_u8(0x5a);
+        } else {
+            h.write_u64(v);
+        }
+    }
+}
+
+/// The cache key of a boundary state: a canonical FNV-1a digest over
+/// the seed (program + config identity) and the timing-relevant state
+/// with pc, barrier ids, DESC indices, and DMA `SRC`/`DST` values
+/// masked out. Purely a bucket index — collisions cost a failed
+/// structural validation, never a wrong replay.
+pub(crate) fn snap_key(seed: u64, snap: &CtrlSnap, meta: &[UnitMeta]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(seed);
+    h.write_bool(snap.traced);
+    h.write_u64(snap.cores.len() as u64);
+    for c in &snap.cores {
+        h.write_u64(c.wake_rel);
+        h.write_bool(c.barrier_arrived);
+        h.write_bool(c.done);
+        match c.layer {
+            None => h.write_u8(0),
+            Some((l, cl)) => {
+                h.write_u8(1);
+                h.write_u64(l as u64);
+                h.write_u8(class_tag(cl));
+            }
+        }
+        match &c.sw {
+            None => h.write_u8(0),
+            Some(sw) => {
+                h.write_u8(1);
+                h.write_u64(sw.cycles);
+                h.write_u8(class_tag(sw.class));
+                feed_opt_desc(&mut h, &sw.op);
+            }
+        }
+    }
+    h.write_u64(snap.barriers.len() as u64);
+    for &(_, mask, parts) in &snap.barriers {
+        h.write_u64(mask);
+        h.write_u8(parts);
+    }
+    h.write_u64(snap.units.len() as u64);
+    for (ui, u) in snap.units.iter().enumerate() {
+        let m = &meta[ui];
+        feed_regs(&mut h, &u.staged, &u.staged_desc, m);
+        match &u.pending {
+            None => h.write_u8(0),
+            Some(p) => {
+                h.write_u8(1);
+                feed_regs(&mut h, &p.regs, &p.desc, m);
+                h.write_u64(p.layer as u64);
+            }
+        }
+        match &u.job {
+            None => h.write_u8(0),
+            Some(j) => {
+                h.write_u8(1);
+                h.write_u64(j.steps);
+                h.write_u64(j.steps_done);
+                match j.emit {
+                    EmitRule::EveryK(k) => {
+                        h.write_u8(0);
+                        h.write_u64(k);
+                    }
+                    EmitRule::Prorated { total } => {
+                        h.write_u8(1);
+                        h.write_u64(total);
+                    }
+                }
+                h.write_u64(j.emitted);
+                h.write_u64(j.consume_every.len() as u64);
+                for &c in &j.consume_every {
+                    h.write_u64(c);
+                }
+                h.write_u8(match j.class {
+                    CounterClass::Gemm => 0,
+                    CounterClass::Pool => 1,
+                    CounterClass::Other => 2,
+                });
+                feed_opt_desc(&mut h, &j.desc);
+                h.write_u64(j.layer as u64);
+                h.write_u64(j.start_rel);
+                match &j.dma {
+                    None => h.write_u8(0),
+                    Some(d) => {
+                        h.write_u8(1);
+                        h.write_u8(match d.dir {
+                            DmaDir::ExtToSpm => 0,
+                            DmaDir::SpmToExt => 1,
+                            DmaDir::SpmToSpm => 2,
+                        });
+                        // src/dst masked (ext-side addresses are
+                        // canonicalized; spm-side re-checked
+                        // structurally).
+                        h.write_u64(d.rows);
+                        h.write_u64(d.row_bytes);
+                        h.write_u64(d.src_stride as u64);
+                        h.write_u64(d.dst_stride as u64);
+                    }
+                }
+                h.write_u64(j.axi_remaining);
+            }
+        }
+        h.write_u64(u.readers.len() as u64);
+        for s in &u.readers {
+            feed_streamer(&mut h, s);
+        }
+        h.write_u64(u.writers.len() as u64);
+        for s in &u.writers {
+            feed_streamer(&mut h, s);
+        }
+    }
+    h.finish()
+}
+
+/// Identity seed for one `(program, cluster config)` pair: phases are
+/// shareable across runs (sweep batches, server requests) only when
+/// this matches. `ext_mem_init` is deliberately excluded — it is pure
+/// data, and phase timing is data-independent by construction (the
+/// functional channel is replayed, never cached). The version tag
+/// invalidates every shared record when the record schema changes.
+pub(crate) fn phase_seed(cfg: &ClusterConfig, program: &Program, memo_traced: bool) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_str("snax-phase-v1");
+    // Config: every field the simulator's timing reads.
+    h.write_u32(cfg.spm_kb);
+    h.write_u32(cfg.banks);
+    h.write_u32(cfg.bank_width_bits);
+    h.write_u32(cfg.dma_bits);
+    h.write_bool(cfg.csr_double_buffer);
+    h.write_u64(cfg.cores.len() as u64);
+    h.write_u64(cfg.accelerators.len() as u64);
+    for a in &cfg.accelerators {
+        h.write_str(&a.name);
+        h.write_u8(match a.kind {
+            crate::config::AccelKind::Gemm => 0,
+            crate::config::AccelKind::MaxPool => 1,
+            crate::config::AccelKind::VecAdd => 2,
+        });
+        h.write_u64(a.read_ports_bits.len() as u64);
+        for &b in &a.read_ports_bits {
+            h.write_u32(b);
+        }
+        h.write_u64(a.write_ports_bits.len() as u64);
+        for &b in &a.write_ports_bits {
+            h.write_u32(b);
+        }
+        h.write_u32(a.fifo_depth);
+    }
+    // Program: instruction streams, descriptor table, layer names.
+    h.write_u64(program.streams.len() as u64);
+    for s in &program.streams {
+        h.write_u64(s.len() as u64);
+        for i in s {
+            feed_instr(&mut h, i);
+        }
+    }
+    h.write_u64(program.descs.len() as u64);
+    for d in &program.descs {
+        feed_opdesc(&mut h, d);
+    }
+    h.write_u64(program.layer_names.len() as u64);
+    for n in &program.layer_names {
+        h.write_str(n);
+    }
+    h.write_bool(memo_traced);
+    h.finish()
+}
+
+fn feed_instr(h: &mut Fnv1a, i: &Instr) {
+    match i {
+        Instr::CsrWrite { unit, reg, val } => {
+            h.write_u8(0);
+            h.write_u8(unit.0);
+            h.write_u64(*reg as u64);
+            h.write_u64(*val);
+        }
+        Instr::Launch { unit } => {
+            h.write_u8(1);
+            h.write_u8(unit.0);
+        }
+        Instr::AwaitIdle { unit } => {
+            h.write_u8(2);
+            h.write_u8(unit.0);
+        }
+        Instr::Barrier { id, participants } => {
+            h.write_u8(3);
+            h.write_u64(id.0 as u64);
+            h.write_u8(*participants);
+        }
+        Instr::Sw { kernel } => {
+            h.write_u8(4);
+            h.write_u64(kernel.cycles);
+            h.write_u8(class_tag(kernel.class));
+            feed_opt_desc(h, &kernel.op);
+        }
+        Instr::SpanBegin { layer, class } => {
+            h.write_u8(5);
+            h.write_u64(*layer as u64);
+            h.write_u8(class_tag(*class));
+        }
+        Instr::SpanEnd { layer } => {
+            h.write_u8(6);
+            h.write_u64(*layer as u64);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Counters arithmetic
+// ---------------------------------------------------------------------------
+
+pub(crate) fn counters_sub(now: &Counters, base: &Counters) -> Counters {
+    Counters {
+        gemm_compute_cycles: now.gemm_compute_cycles - base.gemm_compute_cycles,
+        pool_compute_cycles: now.pool_compute_cycles - base.pool_compute_cycles,
+        other_accel_cycles: now.other_accel_cycles - base.other_accel_cycles,
+        bank_reads: now.bank_reads - base.bank_reads,
+        bank_writes: now.bank_writes - base.bank_writes,
+        bank_conflict_cycles: now.bank_conflict_cycles - base.bank_conflict_cycles,
+        axi_beats: now.axi_beats - base.axi_beats,
+        csr_writes: now.csr_writes - base.csr_writes,
+        core_busy_cycles: now
+            .core_busy_cycles
+            .iter()
+            .zip(&base.core_busy_cycles)
+            .map(|(n, b)| n - b)
+            .collect(),
+        barrier_events: now.barrier_events - base.barrier_events,
+        macs_retired: now.macs_retired - base.macs_retired,
+        elem_ops_retired: now.elem_ops_retired - base.elem_ops_retired,
+    }
+}
+
+pub(crate) fn counters_add(acc: &mut Counters, d: &Counters) {
+    acc.gemm_compute_cycles += d.gemm_compute_cycles;
+    acc.pool_compute_cycles += d.pool_compute_cycles;
+    acc.other_accel_cycles += d.other_accel_cycles;
+    acc.bank_reads += d.bank_reads;
+    acc.bank_writes += d.bank_writes;
+    acc.bank_conflict_cycles += d.bank_conflict_cycles;
+    acc.axi_beats += d.axi_beats;
+    acc.csr_writes += d.csr_writes;
+    for (a, b) in acc.core_busy_cycles.iter_mut().zip(&d.core_busy_cycles) {
+        *a += b;
+    }
+    acc.barrier_events += d.barrier_events;
+    acc.macs_retired += d.macs_retired;
+    acc.elem_ops_retired += d.elem_ops_retired;
+}
+
+// ---------------------------------------------------------------------------
+// The cache
+// ---------------------------------------------------------------------------
+
+struct Slot {
+    variants: Vec<Arc<PhaseRecord>>,
+    last_used: u64,
+}
+
+struct Shard {
+    slots: HashMap<u64, Slot>,
+    tick: u64,
+    /// Approximate bytes held by this shard's records (eviction input).
+    bytes: usize,
+}
+
+/// Byte budget granted per fingerprint slot of capacity: records vary
+/// from ~1 KiB (short phases) to ~MB (whole-run windows), so the cache
+/// bounds *bytes*, not just slot count, shedding LRU slots when the
+/// estimate overflows.
+const SLOT_BYTE_BUDGET: usize = 64 * 1024;
+/// Hard per-shard byte ceiling (guards huge `capacity` values, e.g. the
+/// per-run cache's 2^16 slots).
+const SHARD_BYTE_CAP: usize = 256 << 20;
+
+/// Snapshot of the cache's effectiveness counters (surfaced on
+/// `/metrics` and `snax simulate --json`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Simulated cycles skipped by replay (sum of replayed phase
+    /// lengths).
+    pub replayed_cycles: u64,
+    pub entries: u64,
+}
+
+/// Sharded, bounded, LRU phase-record cache. One instance per run by
+/// default; shared across a `snax sweep` batch or a `snax serve`
+/// process via [`Cluster::with_phase_cache`](super::cluster::Cluster::with_phase_cache).
+///
+/// Capacity is counted in fingerprint *slots* (each holding up to a
+/// handful of window variants); eviction is least-recently-used per
+/// shard. All counters are lock-free. Results are deterministic at any
+/// thread count by construction: a replay is byte-equivalent to
+/// re-simulation, so it never matters which worker populated an entry.
+pub struct PhaseCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_capacity: usize,
+    per_shard_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    replayed_cycles: AtomicU64,
+}
+
+impl PhaseCache {
+    /// A shared cache of roughly `capacity` fingerprint slots over 8
+    /// shards.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_shards(capacity, 8)
+    }
+
+    /// Explicit shard count (tests use one shard for deterministic
+    /// eviction order).
+    pub fn with_shards(capacity: usize, n_shards: usize) -> Self {
+        let n_shards = n_shards.clamp(1, capacity.max(1));
+        let per_shard_capacity = capacity.max(1).div_ceil(n_shards);
+        Self {
+            shards: (0..n_shards)
+                .map(|_| Mutex::new(Shard { slots: HashMap::new(), tick: 0, bytes: 0 }))
+                .collect(),
+            per_shard_capacity,
+            per_shard_bytes: per_shard_capacity
+                .saturating_mul(SLOT_BYTE_BUDGET)
+                .min(SHARD_BYTE_CAP),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            replayed_cycles: AtomicU64::new(0),
+        }
+    }
+
+    /// Private per-run cache: one shard (uncontended), sized so a
+    /// single simulation effectively never evicts (the byte ceiling
+    /// still bounds pathological runs). Also the right choice for a
+    /// CLI invocation that wants a stats handle without changing the
+    /// engine's default caching behavior.
+    pub fn for_run() -> Self {
+        Self::with_shards(1 << 16, 1)
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// All window variants stored under `key` (cloned `Arc`s so
+    /// validation runs outside the shard lock). Does not count hit or
+    /// miss — the caller reports the *validated* outcome via
+    /// [`note_hit`](Self::note_hit) / [`note_miss`](Self::note_miss).
+    pub(crate) fn candidates(&self, key: u64) -> Vec<Arc<PhaseRecord>> {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.slots.get_mut(&key) {
+            Some(slot) => {
+                slot.last_used = tick;
+                slot.variants.clone()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Remove the least-recently-used slot other than `keep`; returns
+    /// false when nothing else is left to shed.
+    fn evict_lru(&self, shard: &mut Shard, keep: u64) -> bool {
+        let victim = shard
+            .slots
+            .iter()
+            .filter(|(&k, _)| k != keep)
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(&k, _)| k);
+        let Some(victim) = victim else { return false };
+        if let Some(s) = shard.slots.remove(&victim) {
+            let freed: usize = s.variants.iter().map(|r| r.approx_bytes).sum();
+            shard.bytes = shard.bytes.saturating_sub(freed);
+            self.evictions.fetch_add(s.variants.len() as u64, Ordering::Relaxed);
+        }
+        true
+    }
+
+    pub(crate) fn insert(&self, key: u64, rec: PhaseRecord) {
+        let mut rec = rec;
+        rec.approx_bytes = rec.estimate_bytes();
+        let cost = rec.approx_bytes;
+        let rec = Arc::new(rec);
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        if let Some(slot) = shard.slots.get_mut(&key) {
+            // Concurrent workers may record the same phase; keep one
+            // copy so duplicates never FIFO-evict distinct variants.
+            if slot.variants.iter().any(|v| v.same_identity(&rec)) {
+                slot.last_used = tick;
+                return;
+            }
+        }
+        if shard.slots.len() >= self.per_shard_capacity && !shard.slots.contains_key(&key) {
+            self.evict_lru(&mut shard, key);
+        }
+        let mut freed = 0usize;
+        let mut dropped = 0u64;
+        {
+            let slot = shard
+                .slots
+                .entry(key)
+                .or_insert_with(|| Slot { variants: Vec::new(), last_used: tick });
+            slot.last_used = tick;
+            if slot.variants.len() >= MAX_VARIANTS {
+                freed = slot.variants.remove(0).approx_bytes;
+                dropped = 1;
+            }
+            slot.variants.push(rec);
+        }
+        shard.bytes = shard.bytes.saturating_sub(freed) + cost;
+        self.evictions.fetch_add(dropped, Ordering::Relaxed);
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        // Byte budget: shed LRU slots (never the one just written)
+        // until the estimate fits again.
+        while shard.bytes > self.per_shard_bytes {
+            if !self.evict_lru(&mut shard, key) {
+                break;
+            }
+        }
+    }
+
+    pub(crate) fn note_hit(&self, replayed: u64) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.replayed_cycles.fetch_add(replayed, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn insertions(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn replayed_cycles(&self) -> u64 {
+        self.replayed_cycles.load(Ordering::Relaxed)
+    }
+
+    /// Stored record count across all shards (variants, not slots).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().slots.values().map(|v| v.variants.len()).sum::<usize>())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> PhaseCacheStats {
+        PhaseCacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            insertions: self.insertions(),
+            evictions: self.evictions(),
+            replayed_cycles: self.replayed_cycles(),
+            entries: self.len() as u64,
+        }
+    }
+}
+
+/// Least common multiple with saturation (group sizes are tiny; the
+/// clamp only guards pathological hand-built configs).
+pub(crate) fn lcm(a: u64, b: u64) -> u64 {
+    fn gcd(mut a: u64, mut b: u64) -> u64 {
+        while b != 0 {
+            let t = a % b;
+            a = b;
+            b = t;
+        }
+        a
+    }
+    if a == 0 || b == 0 {
+        return a.max(b).max(1);
+    }
+    (a / gcd(a, b)).saturating_mul(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::job::Region;
+
+    fn dummy_record(len: u64) -> PhaseRecord {
+        PhaseRecord {
+            approx_bytes: 0,
+            seed: 0,
+            len,
+            relocatable: true,
+            start_mod: 0,
+            traced: false,
+            entry: CtrlSnap { cores: vec![], units: vec![], barriers: vec![], traced: false },
+            entry_dma_class: vec![],
+            windows: vec![],
+            pc_delta: vec![],
+            end: CtrlSnap { cores: vec![], units: vec![], barriers: vec![], traced: false },
+            counters: Counters::default(),
+            unit_deltas: vec![],
+            stream_deltas: vec![],
+            layers: vec![],
+            effects: vec![],
+            trace_segs: vec![],
+        }
+    }
+
+    #[test]
+    fn cache_insert_lookup_and_counters() {
+        let c = PhaseCache::new(8);
+        assert!(c.candidates(42).is_empty());
+        c.insert(42, dummy_record(100));
+        c.insert(42, dummy_record(200));
+        let v = c.candidates(42);
+        assert_eq!(v.len(), 2);
+        assert_eq!(c.len(), 2);
+        c.note_hit(100);
+        c.note_miss();
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 2));
+        assert_eq!(s.replayed_cycles, 100);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn cache_lru_evicts_oldest_slot() {
+        let c = PhaseCache::with_shards(2, 1);
+        c.insert(1, dummy_record(1));
+        c.insert(2, dummy_record(2));
+        let _ = c.candidates(1); // touch 1 so 2 is LRU
+        c.insert(3, dummy_record(3));
+        assert_eq!(c.evictions(), 1);
+        assert!(!c.candidates(1).is_empty());
+        assert!(c.candidates(2).is_empty(), "LRU slot evicted");
+        assert!(!c.candidates(3).is_empty());
+    }
+
+    #[test]
+    fn cache_caps_variants_per_slot() {
+        let c = PhaseCache::new(8);
+        for i in 0..(MAX_VARIANTS as u64 + 4) {
+            c.insert(7, dummy_record(i));
+        }
+        let v = c.candidates(7);
+        assert_eq!(v.len(), MAX_VARIANTS);
+        // Oldest dropped: the first surviving record is variant 4.
+        assert_eq!(v[0].len, 4);
+        assert_eq!(c.evictions(), 4);
+    }
+
+    #[test]
+    fn cache_dedupes_identical_recordings() {
+        // Concurrent workers recording the same phase insert equivalent
+        // records; only one copy may occupy the variant FIFO.
+        let c = PhaseCache::new(8);
+        c.insert(5, dummy_record(30));
+        c.insert(5, dummy_record(30));
+        c.insert(5, dummy_record(31)); // genuinely different variant
+        assert_eq!(c.candidates(5).len(), 2);
+        assert_eq!(c.insertions(), 2);
+        assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn cache_sheds_lru_slots_over_byte_budget() {
+        // capacity 4, 1 shard => byte budget 4 * 64 KiB = 256 KiB.
+        let c = PhaseCache::with_shards(4, 1);
+        let big = |len: u64| {
+            let mut r = dummy_record(len);
+            // ~4000 * 96 B ≈ 384 KiB per record — over budget alone.
+            r.windows = vec![(0..4000).map(|_| WinInstr::End).collect()];
+            r
+        };
+        c.insert(1, big(10));
+        assert!(!c.candidates(1).is_empty(), "a lone oversized record is kept");
+        c.insert(2, big(20));
+        // The budget forces the older slot out even though the slot
+        // count (2) is under capacity (4).
+        assert!(c.candidates(1).is_empty(), "LRU slot shed on byte pressure");
+        assert!(!c.candidates(2).is_empty());
+        assert!(c.evictions() >= 1);
+    }
+
+    #[test]
+    fn replay_maps_enforce_barrier_bijection_and_dma_consistency() {
+        let mut m = ReplayMaps::default();
+        assert!(m.pair_barrier(1, 10).is_some());
+        assert!(m.pair_barrier(1, 10).is_some());
+        assert!(m.pair_barrier(1, 11).is_none(), "forward conflict");
+        assert!(m.pair_barrier(2, 10).is_none(), "reverse conflict");
+        assert!(m.pair_barrier(2, 20).is_some());
+
+        let mut m = ReplayMaps::default();
+        assert!(m.pair_dma(100, 200, true).is_some());
+        assert!(m.pair_dma(100, 200, true).is_some());
+        assert!(m.pair_dma(100, 300, true).is_none(), "value conflict");
+        // Literal site requires equality and pins identity.
+        assert!(m.pair_dma(50, 60, false).is_none());
+        assert!(m.pair_dma(50, 50, false).is_some());
+        // A value already canonically mapped cannot later be literal.
+        assert!(m.pair_dma(100, 100, false).is_none());
+    }
+
+    #[test]
+    fn snap_key_masks_desc_and_dma_addresses() {
+        let meta = [UnitMeta { desc_reg: None, is_dma: true }];
+        let unit = |src: u64, dst: u64| SnapUnit {
+            staged: vec![src, dst, 64, 1, 0, 0, 0],
+            staged_desc: None,
+            pending: None,
+            job: None,
+            readers: vec![],
+            writers: vec![],
+        };
+        let snap = |src, dst| CtrlSnap {
+            cores: vec![],
+            units: vec![unit(src, dst)],
+            barriers: vec![],
+            traced: false,
+        };
+        // SRC/DST are masked out of the key...
+        assert_eq!(
+            snap_key(1, &snap(0, 64), &meta),
+            snap_key(1, &snap(4096, 8192), &meta)
+        );
+        // ...but a timing-relevant register is not.
+        let mut other = snap(0, 64);
+        other.units[0].staged[2] = 128;
+        assert_ne!(snap_key(1, &snap(0, 64), &meta), snap_key(1, &other, &meta));
+        // And the seed separates programs.
+        assert_ne!(snap_key(1, &snap(0, 64), &meta), snap_key(2, &snap(0, 64), &meta));
+    }
+
+    #[test]
+    fn phase_seed_sees_program_and_config_but_not_data() {
+        use crate::isa::{Instr, UnitId};
+        let cfg = ClusterConfig::fig6c();
+        let mut p = Program {
+            streams: vec![vec![], vec![Instr::Launch { unit: UnitId(0) }]],
+            ..Default::default()
+        };
+        let base = phase_seed(&cfg, &p, false);
+        // Data is excluded: timing is data-independent.
+        p.ext_mem_init = vec![(0, vec![1, 2, 3])];
+        assert_eq!(base, phase_seed(&cfg, &p, false));
+        // Instructions are not.
+        p.streams[0].push(Instr::AwaitIdle { unit: UnitId(0) });
+        assert_ne!(base, phase_seed(&cfg, &p, false));
+        // Nor is the config.
+        assert_ne!(base, phase_seed(&ClusterConfig::fig6d(), &p, false));
+    }
+
+    #[test]
+    fn opdesc_feed_distinguishes_variants_and_fields() {
+        let d1 = OpDesc::Relu { buf: Region(0), len: 8 };
+        let d2 = OpDesc::Relu { buf: Region(0), len: 9 };
+        let hash = |d: &OpDesc| {
+            let mut h = Fnv1a::new();
+            feed_opdesc(&mut h, d);
+            h.finish()
+        };
+        assert_ne!(hash(&d1), hash(&d2));
+        let g = OpDesc::Gemm {
+            a: Region(0),
+            b: Region(0),
+            c: Region(0),
+            m: 8,
+            k: 8,
+            n: 8,
+            shift: 0,
+            relu: false,
+            i32_out: true,
+        };
+        assert_ne!(hash(&d1), hash(&g));
+    }
+
+    #[test]
+    fn lcm_basics() {
+        assert_eq!(lcm(1, 6), 6);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 5), 5);
+        assert_eq!(lcm(0, 0), 1);
+    }
+}

@@ -349,6 +349,18 @@ impl Streamer {
     pub fn beat_min_cycles(&self) -> u32 {
         self.pending.iter().copied().max().unwrap_or(0) as u32
     }
+
+    /// Words remaining per in-flight beat, oldest first (phase-memo
+    /// snapshot; see [`crate::sim::phase`]).
+    pub(crate) fn inflight_snapshot(&self) -> Vec<u32> {
+        self.inflight.iter().copied().collect()
+    }
+
+    /// Phase-memo restore of the in-flight beat queue.
+    pub(crate) fn restore_inflight(&mut self, inflight: &[u32]) {
+        self.inflight.clear();
+        self.inflight.extend(inflight.iter().copied());
+    }
 }
 
 #[cfg(test)]

@@ -174,12 +174,22 @@ impl Trace {
     /// chrome://tracing or https://ui.perfetto.dev). One microsecond of
     /// trace time = one simulated cycle.
     pub fn to_chrome_json(&self) -> String {
+        use std::collections::HashMap;
         use std::fmt::Write;
         let mut tracks: Vec<&str> = self.events.iter().map(|e| &*e.track).collect();
         tracks.sort_unstable();
         tracks.dedup();
-        let tid = |t: &str| tracks.iter().position(|x| *x == t).unwrap();
-        let mut s = String::from("{\"traceEvents\":[");
+        // O(1) track lookup (a linear `position()` per event made large
+        // trace exports quadratic in the event count).
+        let tid: HashMap<&str, usize> =
+            tracks.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+        // Pre-size the output: ~96 bytes per span plus name, ~80 per
+        // track metadata record.
+        let est = 24
+            + tracks.iter().map(|t| 80 + t.len()).sum::<usize>()
+            + self.events.iter().map(|e| 96 + e.name.len()).sum::<usize>();
+        let mut s = String::with_capacity(est);
+        s.push_str("{\"traceEvents\":[");
         let mut first = true;
         for (i, t) in tracks.iter().enumerate() {
             if !first {
@@ -197,7 +207,7 @@ impl Trace {
             let _ = write!(
                 s,
                 ",{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"ts\":{},\"dur\":{}}}",
-                tid(&e.track),
+                tid[&*e.track],
                 name,
                 e.start_cycle,
                 e.end_cycle.saturating_sub(e.start_cycle).max(1)

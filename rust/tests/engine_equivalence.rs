@@ -1,34 +1,60 @@
-//! Engine-equivalence golden suite: the event-driven engine must
-//! produce **identical** `SimReport`s (total cycles, every counter,
-//! unit/layer stats, and functional SPM/ext-mem bytes) to the exact
-//! per-cycle stepper on the full fig6/fig8/table1 workload matrix —
-//! the contract that lets `snax serve` run the fast engine without a
-//! fidelity caveat.
+//! Engine-equivalence golden suite: the event-driven engine — with
+//! phase memoization on (the default), with it off, and replaying from
+//! a shared cross-run phase cache — must produce **identical**
+//! `SimReport`s (total cycles, every counter, unit/layer stats, and
+//! functional SPM/ext-mem bytes) to the exact per-cycle stepper on the
+//! full fig6/fig8/table1 workload matrix — the contract that lets
+//! `snax serve` run the fast engine without a fidelity caveat.
+
+use std::sync::Arc;
 
 use snax::compiler::{compile, CompileOptions};
 use snax::config::ClusterConfig;
 use snax::models;
-use snax::sim::{Cluster, SimMode};
+use snax::sim::{Cluster, PhaseCache, SimMode, SimReport};
+
+fn assert_reports_equal(tag: &str, leg: &str, exact: &SimReport, got: &SimReport) {
+    assert_eq!(
+        exact.total_cycles, got.total_cycles,
+        "{tag}/{leg}: total_cycles diverged (exact {} vs {})",
+        exact.total_cycles, got.total_cycles
+    );
+    assert_eq!(exact.counters, got.counters, "{tag}/{leg}: counters diverged");
+    assert_eq!(exact.units, got.units, "{tag}/{leg}: unit stats diverged");
+    assert_eq!(exact.layers, got.layers, "{tag}/{leg}: layer stats diverged");
+    assert_eq!(exact.spm, got.spm, "{tag}/{leg}: SPM bytes diverged");
+    assert_eq!(exact.ext_mem, got.ext_mem, "{tag}/{leg}: ext-mem bytes diverged");
+    // Belt and braces: the whole report (PartialEq covers any field
+    // added later without a matching assert above).
+    assert_eq!(exact, got, "{tag}/{leg}: reports diverged");
+}
 
 fn assert_engines_agree(tag: &str, cfg: &ClusterConfig, opts: &CompileOptions, graph_name: &str) {
     let graph = models::graph_by_name(graph_name).unwrap();
     let cp = compile(&graph, cfg, opts).unwrap();
-    let cluster = Cluster::new(cfg);
-    let exact = cluster.run_mode(&cp.program, SimMode::Exact).unwrap();
-    let event = cluster.run_mode(&cp.program, SimMode::Event).unwrap();
-    assert_eq!(
-        exact.total_cycles, event.total_cycles,
-        "{tag}: total_cycles diverged (exact {} vs event {})",
-        exact.total_cycles, event.total_cycles
-    );
-    assert_eq!(exact.counters, event.counters, "{tag}: counters diverged");
-    assert_eq!(exact.units, event.units, "{tag}: unit stats diverged");
-    assert_eq!(exact.layers, event.layers, "{tag}: layer stats diverged");
-    assert_eq!(exact.spm, event.spm, "{tag}: SPM bytes diverged");
-    assert_eq!(exact.ext_mem, event.ext_mem, "{tag}: ext-mem bytes diverged");
-    // Belt and braces: the whole report (PartialEq covers any field
-    // added later without a matching assert above).
-    assert_eq!(exact, event, "{tag}: reports diverged");
+    let exact = Cluster::new(cfg).run_mode(&cp.program, SimMode::Exact).unwrap();
+    // Event engine, memo on (the default).
+    let memo_on = Cluster::new(cfg).run_mode(&cp.program, SimMode::Event).unwrap();
+    assert_reports_equal(tag, "event+memo", &exact, &memo_on);
+    // Event engine, memo off.
+    let memo_off = Cluster::new(cfg)
+        .with_memo(false)
+        .run_mode(&cp.program, SimMode::Event)
+        .unwrap();
+    assert_reports_equal(tag, "event-memo", &exact, &memo_off);
+    // Cross-run replay through a shared phase cache: the second run
+    // replays phases the first recorded (server/sweep reuse shape).
+    let shared = Arc::new(PhaseCache::new(1024));
+    let warm = Cluster::new(cfg)
+        .with_phase_cache(shared.clone())
+        .run_mode(&cp.program, SimMode::Event)
+        .unwrap();
+    assert_reports_equal(tag, "shared-cache warm", &exact, &warm);
+    let replayed = Cluster::new(cfg)
+        .with_phase_cache(shared.clone())
+        .run_mode(&cp.program, SimMode::Event)
+        .unwrap();
+    assert_reports_equal(tag, "shared-cache replay", &exact, &replayed);
 }
 
 /// Fig. 8 cascade: the three sequential platforms.
@@ -76,4 +102,54 @@ fn dae_pipelined_overlap() {
     let cfg = ClusterConfig::fig6d();
     let opts = CompileOptions::pipelined().with_inferences(4);
     assert_engines_agree("dae@fig6d/pipelined(4)", &cfg, &opts, "dae");
+}
+
+/// Deep pipelined run: with enough in-flight inferences the steady
+/// state repeats, so the memo engine must actually *replay* phases
+/// within one run — and the replays must reproduce the exact report.
+#[test]
+fn pipelined_multi_inference_replays_within_one_run() {
+    let cfg = ClusterConfig::fig6d();
+    let opts = CompileOptions::pipelined().with_inferences(16);
+    let graph = models::fig6a_graph();
+    let cp = compile(&graph, &cfg, &opts).unwrap();
+    let exact = Cluster::new(&cfg).run_mode(&cp.program, SimMode::Exact).unwrap();
+    let cache = Arc::new(PhaseCache::new(1024));
+    let memo = Cluster::new(&cfg)
+        .with_phase_cache(cache.clone())
+        .run_mode(&cp.program, SimMode::Event)
+        .unwrap();
+    assert_reports_equal("fig6a@fig6d/pipelined(16)", "event+memo", &exact, &memo);
+    assert!(
+        cache.hits() > 0,
+        "steady-state pipelined phases must replay within one run: {:?}",
+        cache.stats()
+    );
+}
+
+/// Sweep-shaped reuse: several (net, cluster) jobs sharing one phase
+/// cache — every report must match its exact-engine oracle no matter
+/// what the cache already holds, and a second pass must replay.
+#[test]
+fn sweep_batch_shares_phase_cache_soundly() {
+    let shared = Arc::new(PhaseCache::new(2048));
+    let jobs: Vec<(&str, ClusterConfig)> = vec![
+        ("fig6a", ClusterConfig::fig6c()),
+        ("fig6a", ClusterConfig::fig6d()),
+        ("dae", ClusterConfig::fig6d()),
+        ("fig6a", ClusterConfig::fig6c()), // repeat: cross-job replay
+    ];
+    for pass in 0..2 {
+        for (i, (net, cfg)) in jobs.iter().enumerate() {
+            let graph = models::graph_by_name(net).unwrap();
+            let cp = compile(&graph, cfg, &CompileOptions::sequential()).unwrap();
+            let exact = Cluster::new(cfg).run_mode(&cp.program, SimMode::Exact).unwrap();
+            let memo = Cluster::new(cfg)
+                .with_phase_cache(shared.clone())
+                .run_mode(&cp.program, SimMode::Event)
+                .unwrap();
+            assert_reports_equal(&format!("sweep pass {pass} job {i}"), "shared", &exact, &memo);
+        }
+    }
+    assert!(shared.hits() > 0, "repeat jobs must replay: {:?}", shared.stats());
 }

@@ -20,7 +20,13 @@ use snax::server::{http, render_report, Server};
 use snax::sim::Cluster;
 
 fn start_server() -> Server {
-    Server::start(ServerConfig { port: 0, workers: 4, cache_capacity: 16, queue_depth: 64 })
+    Server::start(ServerConfig {
+        port: 0,
+        workers: 4,
+        cache_capacity: 16,
+        queue_depth: 64,
+        phase_cache_capacity: 256,
+    })
         .expect("server starts on an ephemeral port")
 }
 

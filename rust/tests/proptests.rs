@@ -385,6 +385,25 @@ fn prop_engines_agree_on_random_programs() {
         );
         assert_eq!(exact.counters, event.counters, "seed {seed} on {}: counters", cfg.name);
         assert_eq!(exact, event, "seed {seed} on {}: full report", cfg.name);
+        // Memo-off event engine and a shared-phase-cache double run
+        // (cross-run replay, including end-of-stream windows) must all
+        // reproduce the exact report byte for byte.
+        let memo_off = Cluster::new(&cfg)
+            .with_memo(false)
+            .run_mode(&program, SimMode::Event)
+            .unwrap();
+        assert_eq!(exact, memo_off, "seed {seed} on {}: memo-off report", cfg.name);
+        let shared = std::sync::Arc::new(snax::sim::PhaseCache::new(512));
+        let first = Cluster::new(&cfg)
+            .with_phase_cache(shared.clone())
+            .run_mode(&program, SimMode::Event)
+            .unwrap();
+        let second = Cluster::new(&cfg)
+            .with_phase_cache(shared.clone())
+            .run_mode(&program, SimMode::Event)
+            .unwrap();
+        assert_eq!(exact, first, "seed {seed} on {}: shared-cache run 1", cfg.name);
+        assert_eq!(exact, second, "seed {seed} on {}: shared-cache run 2", cfg.name);
     }
 }
 
@@ -406,6 +425,15 @@ fn prop_engines_agree_on_compiled_graphs() {
         let exact = cluster.run_mode(&cp.program, SimMode::Exact).unwrap();
         let event = cluster.run_mode(&cp.program, SimMode::Event).unwrap();
         assert_eq!(exact, event, "seed {seed} on {} ({:?})", cfg.name, opts.mode);
+        let memo_off = Cluster::new(&cfg)
+            .with_memo(false)
+            .run_mode(&cp.program, SimMode::Event)
+            .unwrap();
+        assert_eq!(
+            exact, memo_off,
+            "seed {seed} on {} ({:?}): memo-off report",
+            cfg.name, opts.mode
+        );
     }
 }
 
@@ -589,12 +617,13 @@ fn prop_sweep_bodies_identical_across_thread_counts() {
         }
         let body = format!("{{\"jobs\":[{}]}}", jobs.join(","));
         let mut bodies: Vec<Vec<u8>> = Vec::new();
-        for workers in [1usize, 3] {
+        for workers in [1usize, 2, 4] {
             let st = Arc::new(AppState::new(&ServerConfig {
                 port: 0,
                 workers,
                 cache_capacity: 8,
                 queue_depth: 16,
+                phase_cache_capacity: 256,
             }));
             let req = Request {
                 method: "POST".into(),
@@ -608,6 +637,8 @@ fn prop_sweep_bodies_identical_across_thread_counts() {
             bodies.push(resp.body.clone());
             st.pool.shutdown();
         }
-        assert_eq!(bodies[0], bodies[1], "seed {seed}: body differs across worker counts");
+        for b in &bodies[1..] {
+            assert_eq!(&bodies[0], b, "seed {seed}: body differs across worker counts");
+        }
     }
 }
