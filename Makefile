@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt clippy memo-equivalence serve serve-smoke bench bench-func bench-all bench-smoke artifacts
+.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -12,7 +12,11 @@ build:
 test:
 	cargo test -q
 
+# Format in place; `fmt-check` is the non-mutating CI gate.
 fmt:
+	cargo fmt
+
+fmt-check:
 	cargo fmt --check
 
 # Lint gate (mirrors the CI clippy job).
@@ -24,6 +28,14 @@ clippy:
 memo-equivalence:
 	cargo test -q --test engine_equivalence
 	cargo test -q memo_
+
+# Multi-cluster system equivalence: system-of-1 byte identity against
+# the standalone cluster engine on the fig6/fig8/table1 matrix, plus
+# the multi-cluster SoC end-to-end suite (partition pass, shared-NoC
+# contention, handoff fidelity). Mirrors the CI system step.
+system-equivalence:
+	cargo test -q --test engine_equivalence system_of_one
+	cargo test -q --test system_soc
 
 # Run the compile-and-simulate service (ctrl-c / SIGTERM for graceful
 # shutdown).

@@ -1,0 +1,111 @@
+//! Multi-cluster SoC scaling & contention: how much does sharing one
+//! NoC link toward external memory cost, and what does partitioning
+//! buy?
+//!
+//! Legs:
+//! * isolated fig6d baseline (single-cluster reference);
+//! * soc2 data-parallel fig6a on a contended 1-grant/cycle link vs the
+//!   same SoC with the link widened to 2 grants (contention ablation);
+//! * soc2 pipeline-partitioned resnet8 (cross-cluster handoffs) vs the
+//!   single-cluster run of the same batch.
+//!
+//! Emits `BENCH_soc_scale.json` at the workspace root. No CI floor —
+//! this is a scenario-trajectory record, not a regression gate.
+//!
+//! Run: `cargo bench --bench soc_scale` (or `make bench-all`).
+
+use snax::compiler::{compile, compile_system, CompileOptions, PartitionStrategy};
+use snax::config::{ClusterConfig, SystemConfig};
+use snax::models;
+use snax::runtime::json::Value;
+use snax::sim::{Cluster, System};
+
+fn main() {
+    let n_inf = 4u32;
+    let seq = CompileOptions::sequential().with_inferences(n_inf);
+
+    // Single-cluster references.
+    let fig6a = models::fig6a_graph();
+    let fig6d = ClusterConfig::fig6d();
+    let cp_one = compile(&fig6a, &fig6d, &seq).unwrap();
+    let one = Cluster::new(&fig6d).run(&cp_one.program).unwrap();
+
+    // soc2 data-parallel fig6a: contended vs widened link.
+    let soc2 = SystemConfig::soc2();
+    let mut soc2w = SystemConfig::soc2();
+    soc2w.name = "soc2w".into();
+    soc2w.noc.grants_per_cycle = 2;
+    let cs_c = compile_system(&fig6a, &soc2, &seq, PartitionStrategy::DataParallel).unwrap();
+    let cs_w = compile_system(&fig6a, &soc2w, &seq, PartitionStrategy::DataParallel).unwrap();
+    let rep_c = System::new(&soc2).run(&cs_c.programs()).unwrap();
+    let rep_w = System::new(&soc2w).run(&cs_w.programs()).unwrap();
+
+    // soc2 pipeline resnet8 vs the single-cluster batch.
+    let rn = models::resnet8_graph();
+    let cp_rn = compile(&rn, &fig6d, &seq).unwrap();
+    let rn_one = Cluster::new(&fig6d).run(&cp_rn.program).unwrap();
+    let cs_p = compile_system(&rn, &soc2, &seq, PartitionStrategy::Pipeline).unwrap();
+    let rep_p = System::new(&soc2).run(&cs_p.programs()).unwrap();
+
+    let contention_overhead =
+        rep_c.total_cycles as f64 / rep_w.total_cycles.max(1) as f64;
+    let pipeline_speedup = rn_one.total_cycles as f64 / rep_p.total_cycles.max(1) as f64;
+    println!(
+        "fig6a x{n_inf}: single-fig6d {} cyc | soc2 data contended {} cyc \
+         (denied {}) | widened link {} cyc -> contention overhead {:.2}x",
+        one.total_cycles,
+        rep_c.total_cycles,
+        rep_c.noc.denied,
+        rep_w.total_cycles,
+        contention_overhead
+    );
+    println!(
+        "resnet8 x{n_inf}: single-fig6d {} cyc | soc2 pipeline {} cyc \
+         (handoffs {}, denied {}) -> speedup {:.2}x",
+        rn_one.total_cycles,
+        rep_p.total_cycles,
+        rep_p.noc.barrier_releases,
+        rep_p.noc.denied,
+        pipeline_speedup
+    );
+
+    let round2 = |x: f64| (x * 100.0).round() / 100.0;
+    let doc = Value::object([
+        ("bench", Value::from("soc_scale")),
+        ("inferences", Value::from(n_inf)),
+        (
+            "legs",
+            Value::Arr(vec![
+                Value::object([
+                    ("name", Value::from("fig6a single fig6d")),
+                    ("total_cycles", Value::from(one.total_cycles)),
+                ]),
+                Value::object([
+                    ("name", Value::from("fig6a soc2 data contended")),
+                    ("total_cycles", Value::from(rep_c.total_cycles)),
+                    ("noc_denied", Value::from(rep_c.noc.denied)),
+                    ("contention_overhead", Value::from(round2(contention_overhead))),
+                ]),
+                Value::object([
+                    ("name", Value::from("fig6a soc2 data widened")),
+                    ("total_cycles", Value::from(rep_w.total_cycles)),
+                    ("noc_denied", Value::from(rep_w.noc.denied)),
+                ]),
+                Value::object([
+                    ("name", Value::from("resnet8 single fig6d")),
+                    ("total_cycles", Value::from(rn_one.total_cycles)),
+                ]),
+                Value::object([
+                    ("name", Value::from("resnet8 soc2 pipeline")),
+                    ("total_cycles", Value::from(rep_p.total_cycles)),
+                    ("noc_denied", Value::from(rep_p.noc.denied)),
+                    ("handoff_releases", Value::from(rep_p.noc.barrier_releases)),
+                    ("pipeline_speedup", Value::from(round2(pipeline_speedup))),
+                ]),
+            ]),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_soc_scale.json");
+    std::fs::write(out, doc.to_json()).expect("writing BENCH_soc_scale.json");
+    println!("wrote {out}");
+}

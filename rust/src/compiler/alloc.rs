@@ -41,7 +41,15 @@ pub struct AllocMap {
     pub weight_mode: WeightMode,
     /// Per tensor: external-memory address (inputs, weights, outputs).
     pub ext_addr: Vec<Option<u64>>,
+    /// Per tensor: true when the ext address was **pinned** by the
+    /// system partition pass to another part's output region (a
+    /// cross-cluster handoff). Pinned tensors get no `ext_mem_init`
+    /// bytes (the producing part writes them at runtime) and their
+    /// input DMA reads the per-inference region the producer wrote.
+    pub ext_pinned: Vec<bool>,
     pub spm_used: u64,
+    /// End of this allocation's ext cursor (absolute — includes the
+    /// `ext_base` the partition pass assigned to this part).
     pub ext_used: u64,
     /// Whether activations are double-buffered (pipelined mode).
     pub double_buffered: bool,
@@ -54,6 +62,12 @@ impl AllocMap {
 
     pub fn ext(&self, t: TensorId) -> u64 {
         self.ext_addr[t.0].expect("tensor has ext address")
+    }
+
+    /// Was `t`'s ext address pinned to another part's region by the
+    /// system partition pass?
+    pub fn pinned(&self, t: TensorId) -> bool {
+        self.ext_pinned[t.0]
     }
 
     /// SPM address of node `i`'s weights (resident or its rotating slot).
@@ -149,6 +163,31 @@ pub fn allocate_with_slots(
     cfg: &ClusterConfig,
     double_buffer_activations: bool,
     max_weight_slots: usize,
+) -> Result<AllocMap> {
+    allocate_system(g, cfg, double_buffer_activations, max_weight_slots, 0, &[], 1)
+}
+
+/// The full allocator, as driven by the system partition pass: this
+/// part's external-memory layout starts at `ext_base` (parts of one
+/// system occupy disjoint regions of the shared memory), `ext_pins`
+/// force specific tensors onto absolute addresses inside *another*
+/// part's region — the producer-side output buffers of cross-cluster
+/// handoffs — and each output tensor reserves `out_rooms` per-inference
+/// regions (the `addr + inf * pitch` family the output store writes),
+/// so a part publishing several handoff tensors cannot alias inference
+/// `i+1` of one onto inference `i` of the next. The single-cluster path
+/// passes `out_rooms = 1` — its one output historically spills past the
+/// cursor into untracked memory, which is harmless with nothing
+/// allocated behind it and kept for layout stability.
+#[allow(clippy::too_many_arguments)]
+pub fn allocate_system(
+    g: &Graph,
+    cfg: &ClusterConfig,
+    double_buffer_activations: bool,
+    max_weight_slots: usize,
+    ext_base: u64,
+    ext_pins: &[(TensorId, u64)],
+    out_rooms: u32,
 ) -> Result<AllocMap> {
     let capacity = cfg.spm_bytes();
     let live = liveness(g);
@@ -255,15 +294,29 @@ pub fn allocate_with_slots(
         );
     };
 
-    // External memory layout: inputs, then weights, then output region.
+    // External memory layout: inputs, then weights, then output region
+    // — all offset by this part's base. Pinned tensors live in another
+    // part's region instead and consume no local cursor space.
     let mut ext_addr: Vec<Option<u64>> = vec![None; nt];
-    let mut ext_cursor = 0u64;
+    let mut ext_pinned: Vec<bool> = vec![false; nt];
+    for &(t, addr) in ext_pins {
+        ext_addr[t.0] = Some(addr);
+        ext_pinned[t.0] = true;
+    }
+    let mut ext_cursor = ext_base;
     for ti in 0..nt {
+        if ext_pinned[ti] {
+            continue;
+        }
         let t = g.tensor(TensorId(ti));
         match t.kind {
-            TensorKind::Input { .. } | TensorKind::Weight { .. } | TensorKind::Output => {
+            TensorKind::Input { .. } | TensorKind::Weight { .. } => {
                 ext_addr[ti] = Some(ext_cursor);
                 ext_cursor += align(t.bytes());
+            }
+            TensorKind::Output => {
+                ext_addr[ti] = Some(ext_cursor);
+                ext_cursor += align(t.bytes()) * out_rooms.max(1) as u64;
             }
             TensorKind::Intermediate => {}
         }
@@ -273,6 +326,7 @@ pub fn allocate_with_slots(
         spm_addr,
         weight_mode,
         ext_addr,
+        ext_pinned,
         spm_used: placer.high_water,
         ext_used: ext_cursor,
         double_buffered: double_buffer_activations,
@@ -374,6 +428,30 @@ mod tests {
         let c = g.conv2d("conv", x, 16, 3, 3, 1, 1, true, 8, 2).unwrap();
         g.mark_output(c);
         assert!(allocate(&g, &ClusterConfig::fig6d(), false).is_err());
+    }
+
+    #[test]
+    fn ext_base_and_pins_relocate_the_layout() {
+        let g = small_graph();
+        let cfg = ClusterConfig::fig6d();
+        let base = allocate(&g, &cfg, false).unwrap();
+        let input = g.inputs()[0];
+        let moved =
+            allocate_system(&g, &cfg, false, 2, 1 << 20, &[(input, 0x440)], 1).unwrap();
+        // Pinned input sits at the foreign address, untouched by the
+        // cursor; everything else shifted by the base.
+        assert!(moved.pinned(input));
+        assert_eq!(moved.ext(input), 0x440);
+        for (ti, t) in g.tensors.iter().enumerate() {
+            if ti == input.0 || base.ext_addr[ti].is_none() {
+                continue;
+            }
+            assert!(moved.ext_addr[ti].unwrap() >= 1 << 20, "{}", t.name);
+            assert!(!moved.ext_pinned[ti]);
+        }
+        assert!(moved.ext_used >= 1 << 20);
+        // SPM layout is unaffected by the external relocation.
+        assert_eq!(moved.spm_addr, base.spm_addr);
     }
 
     #[test]

@@ -42,6 +42,19 @@ pub enum Mode {
     Pipelined,
 }
 
+/// Cross-cluster synchronization contract of one pipeline-partitioned
+/// part (emitted by [`crate::compiler::partition`]): before each
+/// inference's input DMA the part waits on `wait_base + inf`, and after
+/// each inference's output store it signals `signal_base + inf`. All
+/// ids live in the [`crate::isa::SYS_BARRIER_BASE`] range and pair up
+/// with the neighboring stage's matching fence (participants = 2).
+#[derive(Debug, Clone, Copy)]
+pub struct PartSync {
+    pub wait_base: Option<u16>,
+    pub signal_base: Option<u16>,
+    pub participants: u8,
+}
+
 pub struct CodegenInput<'a> {
     pub graph: &'a Graph,
     pub cfg: &'a ClusterConfig,
@@ -50,6 +63,9 @@ pub struct CodegenInput<'a> {
     pub mode: Mode,
     /// Inferences to run back-to-back (pipelined throughput needs > 1).
     pub n_inferences: u32,
+    /// Cross-cluster handoff fences (None outside a partitioned
+    /// system).
+    pub sync: Option<PartSync>,
 }
 
 struct Ctx<'a> {
@@ -60,6 +76,7 @@ struct Ctx<'a> {
     streams: Vec<Vec<Instr>>,
     descs: Vec<OpDesc>,
     next_barrier: u16,
+    part_sync: Option<PartSync>,
 }
 
 impl<'a> Ctx<'a> {
@@ -72,8 +89,13 @@ impl<'a> Ctx<'a> {
     }
 
     fn sync(&mut self) {
+        // Local barrier ids wrap below the system-barrier range
+        // (ids >= SYS_BARRIER_BASE belong to cross-cluster fences).
+        // Reuse is safe: every sync involves all cores, so syncs are
+        // totally ordered and at most one id is ever in flight —
+        // 0x8000 distinct ids are a vast re-use window.
         let id = BarrierId(self.next_barrier);
-        self.next_barrier += 1;
+        self.next_barrier = (self.next_barrier + 1) % crate::isa::SYS_BARRIER_BASE;
         let participants = self.cfg.cores.len() as u8;
         if participants == 1 {
             return; // single core: program order is the barrier
@@ -428,21 +450,32 @@ impl<'a> Ctx<'a> {
     // -- data movement ---------------------------------------------------------
 
     /// DMA a network input from ext memory into its SPM buffer.
-    fn emit_input_load(&mut self, iter: u64) -> usize {
+    /// `iter` selects the double buffer; `inf` is the inference index —
+    /// pinned (handoff) inputs read the per-inference region the
+    /// producing part wrote, seeded inputs re-read the one static image.
+    fn emit_input_load(&mut self, iter: u64, inf: u64) -> usize {
         let dma_core = self.core_idx(crate::isa::CoreId(self.cfg.dma_core));
         let n_layers = self.g.nodes.len() as u16;
         self.push(dma_core, Instr::SpanBegin { layer: n_layers, class: LayerClass::DataMove });
         for t in self.g.inputs() {
             let td = self.g.tensor(t);
-            let src = self.alloc.ext(t);
+            let bytes = td.bytes();
+            let mut src = self.alloc.ext(t);
+            if self.alloc.pinned(t) {
+                // Same per-inference pitch as `emit_output_store` —
+                // producer and consumer address the handoff
+                // identically by construction.
+                src += inf * bytes.div_ceil(64) * 64;
+            }
             let dst = self.alloc.spm(t, iter);
-            self.emit_dma(dma_core, src, dst, 1, td.bytes(), 0, 0, dma_dir::EXT_TO_SPM);
+            self.emit_dma(dma_core, src, dst, 1, bytes, 0, 0, dma_dir::EXT_TO_SPM);
         }
         dma_core
     }
 
-    /// DMA network outputs back to ext memory (region per inference).
-    fn emit_output_store(&mut self, iter: u64) -> usize {
+    /// DMA network outputs back to ext memory (region per inference
+    /// `inf`; `iter` selects the double buffer).
+    fn emit_output_store(&mut self, iter: u64, inf: u64) -> usize {
         let dma_core = self.core_idx(crate::isa::CoreId(self.cfg.dma_core));
         let n_layers = self.g.nodes.len() as u16;
         self.push(
@@ -453,10 +486,19 @@ impl<'a> Ctx<'a> {
             let td = self.g.tensor(t);
             let bytes = td.bytes();
             let src = self.alloc.spm(t, iter);
-            let dst = self.alloc.ext(t) + iter * bytes.div_ceil(64) * 64;
+            let dst = self.alloc.ext(t) + inf * bytes.div_ceil(64) * 64;
             self.emit_dma(dma_core, src, dst, 1, bytes, 0, 0, dma_dir::SPM_TO_EXT);
         }
         dma_core
+    }
+
+    /// Arrive at a per-inference system barrier (cross-cluster fence).
+    fn emit_sys_fence(&mut self, base: u16, inf: u32, participants: u8) {
+        let dma_core = self.core_idx(crate::isa::CoreId(self.cfg.dma_core));
+        self.push(
+            dma_core,
+            Instr::Barrier { id: BarrierId(base + inf as u16), participants },
+        );
     }
 
     fn emit_weight_load(&mut self, ni: NodeId) {
@@ -483,10 +525,16 @@ impl<'a> Ctx<'a> {
     }
 }
 
-/// Build the external-memory image: inputs and weights from their seeds.
+/// Build the external-memory image: inputs and weights from their
+/// seeds. Pinned handoff inputs get no bytes — the producing part of
+/// the partitioned system writes them at runtime, fenced by the
+/// system barrier ahead of every read.
 fn ext_image(g: &Graph, alloc: &AllocMap) -> Vec<(u64, Vec<u8>)> {
     let mut init = Vec::new();
     for (ti, t) in g.tensors.iter().enumerate() {
+        if alloc.ext_pinned[ti] {
+            continue;
+        }
         let seed = match t.kind {
             TensorKind::Input { seed } | TensorKind::Weight { seed } => seed,
             _ => continue,
@@ -508,6 +556,7 @@ pub fn generate(input: &CodegenInput) -> Result<Program> {
         streams: vec![Vec::new(); input.cfg.cores.len()],
         descs: Vec::new(),
         next_barrier: 0,
+        part_sync: input.sync,
     };
     match input.mode {
         Mode::Sequential => sequential(&mut ctx, input.n_inferences)?,
@@ -532,9 +581,17 @@ fn sequential(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
     let two_slots = matches!(&ctx.alloc.weight_mode,
         WeightMode::Streamed { slots, .. } if slots.len() == 2);
     let n_nodes = ctx.g.nodes.len();
-    for _inf in 0..n_inferences {
+    let part_sync = ctx.part_sync;
+    for inf in 0..n_inferences {
+        // Cross-cluster handoff: wait until the producer part has
+        // published this inference's inputs before DMA-ing them in.
+        if let Some(ps) = &part_sync {
+            if let Some(wb) = ps.wait_base {
+                ctx.emit_sys_fence(wb, inf, ps.participants);
+            }
+        }
         // Inputs in. (Sequential mode uses buffer 0 everywhere.)
-        let dma_core = ctx.emit_input_load(0);
+        let dma_core = ctx.emit_input_load(0, inf as u64);
         // Preload first layer's weights behind the input transfer.
         if streamed {
             ctx.emit_weight_load(NodeId(0));
@@ -580,9 +637,16 @@ fn sequential(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
             ctx.sync();
         }
 
-        let dma_core = ctx.emit_output_store(0);
+        let dma_core = ctx.emit_output_store(0, inf as u64);
         ctx.await_dma(dma_core);
         ctx.end_dma_span(dma_core, true);
+        // Handoff publish: signal the consumer part that this
+        // inference's outputs are in external memory.
+        if let Some(ps) = &part_sync {
+            if let Some(sb) = ps.signal_base {
+                ctx.emit_sys_fence(sb, inf, ps.participants);
+            }
+        }
         ctx.sync();
     }
     Ok(())
@@ -592,6 +656,9 @@ fn sequential(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
 /// node 0, ..., node N-1, output DMA]; stage `s` handles inference
 /// `t - s` in tick `t`; all cores barrier between ticks.
 fn pipelined(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
+    if ctx.part_sync.is_some() {
+        bail!("cross-cluster handoff fences require sequential part programs");
+    }
     if matches!(ctx.alloc.weight_mode, WeightMode::Streamed { .. }) {
         bail!(
             "pipelined mode requires resident weights (per-layer weight \
@@ -626,7 +693,7 @@ fn pipelined(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
         let mut dma_busy = false;
         // Input DMA stage (s = 0) handles inference t.
         if t < n_inferences as u64 {
-            ctx.emit_input_load(t);
+            ctx.emit_input_load(t, t);
             dma_busy = true;
         }
         // Node stages s = 1..=n_nodes handle inference t - s.
@@ -658,7 +725,7 @@ fn pipelined(ctx: &mut Ctx, n_inferences: u32) -> Result<()> {
         // Output DMA stage (s = n_stages-1) handles inference t-s.
         let s_out = n_stages as u64 - 1;
         if t >= s_out && t - s_out < n_inferences as u64 {
-            ctx.emit_output_store(t - s_out);
+            ctx.emit_output_store(t - s_out, t - s_out);
             dma_busy = true;
         }
         // Phase B: awaits, then the tick barrier.

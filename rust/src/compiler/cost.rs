@@ -3,6 +3,8 @@
 //!
 //! Constants live in [`crate::energy::calib`] with their anchors.
 
+use crate::config::{AccelKind, ClusterConfig};
+
 use crate::energy::calib::*;
 
 use super::ir::{Graph, Node, OpKind};
@@ -31,6 +33,39 @@ pub fn cpu_cycles(g: &Graph, n: &Node) -> u64 {
     base + CPU_KERNEL_OVERHEAD
 }
 
+/// Estimated cycles for node `n` on cluster `cfg`, accounting for the
+/// accelerators it carries: GeMM-shaped ops collapse to one 8x8x8 PE
+/// step per 512 MACs when a GeMM unit exists, pooling to 8-lane steps,
+/// everything else (or any cluster without a matching unit) falls back
+/// to [`cpu_cycles`]. This is the partition pass's balance metric —
+/// the same figure of merit the placement pass optimizes, evaluated
+/// per candidate cluster.
+pub fn node_cost(g: &Graph, n: &Node, cfg: &ClusterConfig) -> u64 {
+    let out = g.tensor(n.output);
+    match n.kind {
+        OpKind::Conv2d { kh, kw, .. } if cfg.find_accel(AccelKind::Gemm).is_some() => {
+            let wd = g.tensor(n.inputs[1]);
+            let cin = (wd.dims[0] / (kh * kw)) as u64;
+            let macs = out.elems() * kh as u64 * kw as u64 * cin;
+            macs.div_ceil(512) + CPU_KERNEL_OVERHEAD
+        }
+        OpKind::Dense { .. } if cfg.find_accel(AccelKind::Gemm).is_some() => {
+            let wd = g.tensor(n.inputs[1]);
+            let macs = out.elems() * wd.dims[0] as u64;
+            macs.div_ceil(512) + CPU_KERNEL_OVERHEAD
+        }
+        OpKind::MaxPool2d { k, .. } if cfg.find_accel(AccelKind::MaxPool).is_some() => {
+            // k*k window reads per output element, 8 lanes wide (same
+            // window-area accounting as the CPU model).
+            (out.elems() * (k as u64 * k as u64)).div_ceil(8) + CPU_KERNEL_OVERHEAD
+        }
+        OpKind::ResidualAdd { .. } if cfg.find_accel(AccelKind::VecAdd).is_some() => {
+            out.elems().div_ceil(8) + CPU_KERNEL_OVERHEAD
+        }
+        _ => cpu_cycles(g, n),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -50,5 +85,22 @@ mod tests {
         let total: u64 = cycles.iter().sum();
         assert!(cycles[0] as f64 / total as f64 > 0.98, "conv share {:?}", cycles);
         assert!(cycles[1] > cycles[2], "pool should outweigh fc: {cycles:?}");
+    }
+
+    #[test]
+    fn accel_aware_cost_reflects_cluster_capabilities() {
+        let mut g = Graph::new("t");
+        let x = g.add_input("x", &[1, 16, 16, 8], 1);
+        let c = g.conv2d("conv", x, 8, 3, 3, 1, 1, true, 8, 2).unwrap();
+        let p = g.maxpool2d("pool", c, 2, 2).unwrap();
+        g.mark_output(p);
+        let b = crate::config::ClusterConfig::fig6b();
+        let d = crate::config::ClusterConfig::fig6d();
+        for n in &g.nodes {
+            // fig6b has no accelerators: node_cost == cpu_cycles.
+            assert_eq!(node_cost(&g, n, &b), cpu_cycles(&g, n), "{}", n.name);
+            // fig6d accelerates both ops: much cheaper than the CPU.
+            assert!(node_cost(&g, n, &d) < cpu_cycles(&g, n) / 4, "{}", n.name);
+        }
     }
 }

@@ -10,10 +10,11 @@
 //! variant) — a change to any field that can alter compiler output
 //! changes the key.
 
-use crate::config::{AccelKind, ClusterConfig};
+use crate::config::{AccelKind, ClusterConfig, SystemConfig};
 
 use super::codegen::Mode;
 use super::ir::{DType, Graph, OpKind, TensorKind};
+use super::partition::PartitionStrategy;
 use super::CompileOptions;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -205,6 +206,35 @@ pub fn program_key(g: &Graph, cfg: &ClusterConfig, opts: &CompileOptions) -> u64
     h.finish()
 }
 
+/// Content-addressed cache key for one **system** compilation: the
+/// graph, every member cluster (order matters — it is the partition
+/// order), the shared-NoC description, the partition strategy, and the
+/// compile options. Same guarantees as [`program_key`].
+pub fn system_key(
+    g: &Graph,
+    sys: &SystemConfig,
+    opts: &CompileOptions,
+    strategy: PartitionStrategy,
+) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_str("snax-system-v1");
+    feed_graph(&mut h, g);
+    h.write_str(&sys.name);
+    h.write_u64(sys.clusters.len() as u64);
+    for c in &sys.clusters {
+        feed_config(&mut h, c);
+    }
+    h.write_u32(sys.noc.link_bits);
+    h.write_u32(sys.noc.grants_per_cycle);
+    h.write_u8(match strategy {
+        PartitionStrategy::None => 0,
+        PartitionStrategy::Pipeline => 1,
+        PartitionStrategy::DataParallel => 2,
+    });
+    feed_options(&mut h, opts);
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +297,38 @@ mod tests {
         let mut tweaked = cfg.clone();
         tweaked.accelerators[0].fifo_depth = 8;
         assert_ne!(base, program_key(&g, &tweaked, &opts));
+    }
+
+    #[test]
+    fn system_key_separates_topologies_and_strategies() {
+        let g = models::fig6a_graph();
+        let opts = CompileOptions::sequential();
+        let sys = SystemConfig::soc2();
+        let base = system_key(&g, &sys, &opts, PartitionStrategy::Pipeline);
+        assert_ne!(
+            base,
+            system_key(&g, &sys, &opts, PartitionStrategy::DataParallel),
+            "strategy must separate keys"
+        );
+        assert_ne!(
+            base,
+            system_key(&g, &SystemConfig::soc4(), &opts, PartitionStrategy::Pipeline)
+        );
+        let mut tweaked = sys.clone();
+        tweaked.noc.grants_per_cycle = 2;
+        assert_ne!(base, system_key(&g, &tweaked, &opts, PartitionStrategy::Pipeline));
+        let mut swapped = sys.clone();
+        swapped.clusters.swap(0, 1);
+        assert_ne!(
+            base,
+            system_key(&g, &swapped, &opts, PartitionStrategy::Pipeline),
+            "cluster order is the partition order"
+        );
+        // Stable across clones.
+        assert_eq!(
+            base,
+            system_key(&g.clone(), &sys.clone(), &opts.clone(), PartitionStrategy::Pipeline)
+        );
     }
 
     #[test]

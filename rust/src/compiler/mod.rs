@@ -1,20 +1,25 @@
-//! SNAX-MLIR analogue — the four automated compiler passes of paper
-//! Fig. 5 over the tensor IR:
+//! SNAX-MLIR analogue — the automated compiler passes of paper Fig. 5
+//! over the tensor IR, grown by one SoC-level pass ahead of them:
 //!
+//! 0. [`partition`] — cross-cluster partitioning (pipeline stages or
+//!    data-parallel shards across a [`crate::config::SystemConfig`])
 //! 1. [`placement`] — device placement
 //! 2. [`alloc`] — static scratchpad allocation (+ double buffering)
 //! 3. + 4. [`codegen`] — asynchronous scheduling (pipeline unrolling,
 //!    barrier insertion) and device programming (CSR compute kernels +
 //!    streamer dataflow kernels)
 //!
-//! [`compile`] chains them and returns a [`CompiledProgram`] ready for
-//! [`crate::sim::Cluster::run`].
+//! [`compile`] chains passes 1-4 for one cluster and returns a
+//! [`CompiledProgram`] ready for [`crate::sim::Cluster::run`];
+//! [`compile_system`] runs pass 0 then compiles every part, returning
+//! a [`CompiledSystem`] for [`crate::sim::System::run`].
 
 pub mod alloc;
 pub mod codegen;
 pub mod cost;
 pub mod fingerprint;
 pub mod ir;
+pub mod partition;
 pub mod placement;
 
 use anyhow::{Context, Result};
@@ -24,8 +29,9 @@ use crate::isa::Program;
 use crate::sim::SimReport;
 
 pub use codegen::Mode;
-pub use fingerprint::{program_key, Fnv1a};
+pub use fingerprint::{program_key, system_key, Fnv1a};
 pub use ir::{Graph, NodeId, TensorId};
+pub use partition::{compile_system, CompiledSystem, PartitionPlan, PartitionStrategy};
 pub use placement::{Device, Placement, PlacementOverrides};
 
 /// A compiled program shared across threads (the `snax serve` cache
@@ -124,6 +130,7 @@ pub fn compile(
         alloc: &alloc,
         mode: options.mode,
         n_inferences: options.n_inferences,
+        sync: None,
     })
     .with_context(|| format!("generating code for '{}'", graph.name))?;
     Ok(CompiledProgram {

@@ -1,0 +1,742 @@
+//! Pass 0 — cross-cluster partitioning (the SoC-level pass ahead of
+//! Fig. 5's per-cluster pipeline).
+//!
+//! Splits one workload [`Graph`] across the clusters of a
+//! [`SystemConfig`], then runs the existing placement / allocation /
+//! codegen passes per part:
+//!
+//! * **Pipeline** — a contiguous layer range per cluster, balanced by
+//!   the accelerator-aware cost model ([`super::cost::node_cost`]).
+//!   Stage `k` hands its boundary tensors to stage `k+1` through
+//!   external memory: the producer's output store and the consumer's
+//!   input load address the *same* per-inference region (the consumer's
+//!   input tensor is ext-**pinned** to the producer's output address),
+//!   fenced by per-inference system barriers so the read can never
+//!   overtake the write. Stage `k` computes inference `i+1` while stage
+//!   `k+1` computes inference `i` — inference-level pipelining across
+//!   clusters.
+//! * **DataParallel** — every cluster runs the whole graph over its
+//!   share of the inference batch (batch sharding). No cross-cluster
+//!   data dependencies; clusters interact only through shared-NoC
+//!   contention.
+//!
+//! A system-of-1 (or [`PartitionStrategy::None`]) degenerates to the
+//! plain [`compile`] path, so the single-cluster flow is a strict
+//! subset of the system flow.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::SystemConfig;
+use crate::isa::{Program, SYS_BARRIER_BASE};
+use crate::sim::SystemReport;
+
+use super::alloc::allocate_system;
+use super::codegen::{self, CodegenInput, Mode, PartSync};
+use super::cost::node_cost;
+use super::ir::{DType, Graph, OpKind, TensorId, TensorKind};
+use super::placement;
+use super::{compile, CompileOptions, CompiledProgram};
+
+/// How to split a graph across the system's clusters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionStrategy {
+    /// No split — only valid for systems of one cluster.
+    #[default]
+    None,
+    /// Layer-pipelined: one contiguous stage per cluster, ext-mem
+    /// handoffs + system barriers between stages.
+    Pipeline,
+    /// Batch-sharded: each cluster runs the full graph over its share
+    /// of the inferences.
+    DataParallel,
+}
+
+impl PartitionStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(Self::None),
+            "pipeline" => Ok(Self::Pipeline),
+            "data" | "data-parallel" | "dp" => Ok(Self::DataParallel),
+            other => bail!("unknown partition strategy '{other}' (expected none|pipeline|data)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Pipeline => "pipeline",
+            Self::DataParallel => "data",
+        }
+    }
+
+    /// The sensible default for a system: pipeline when there is more
+    /// than one cluster, otherwise no split.
+    pub fn default_for(sys: &SystemConfig) -> Self {
+        if sys.n_clusters() > 1 {
+            Self::Pipeline
+        } else {
+            Self::None
+        }
+    }
+}
+
+/// Metadata of one compiled part.
+#[derive(Debug, Clone)]
+pub struct PartPlan {
+    pub cluster: String,
+    /// Original-graph node range this part covers.
+    pub node_range: (usize, usize),
+    pub n_inferences: u32,
+    /// First global inference this part handles (DataParallel).
+    pub inf_offset: u32,
+    /// Start of this part's region in the shared external memory.
+    pub ext_base: u64,
+}
+
+/// The partition decision, for reports and result lookup.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub strategy: PartitionStrategy,
+    pub parts: Vec<PartPlan>,
+}
+
+/// A workload compiled for a whole system: one [`CompiledProgram`] per
+/// cluster (system order) plus the partition plan.
+pub struct CompiledSystem {
+    /// Original (unpartitioned) workload name.
+    pub net: String,
+    pub system: SystemConfig,
+    pub parts: Vec<CompiledProgram>,
+    pub plan: PartitionPlan,
+}
+
+impl CompiledSystem {
+    /// Part programs in system order (the shape [`crate::sim::System::run`]
+    /// takes).
+    pub fn programs(&self) -> Vec<&Program> {
+        self.parts.iter().map(|p| &p.program).collect()
+    }
+
+    /// Total inferences the system executes (global batch).
+    pub fn n_inferences(&self) -> u32 {
+        match self.plan.strategy {
+            PartitionStrategy::DataParallel => {
+                self.plan.parts.iter().map(|p| p.n_inferences).sum()
+            }
+            _ => self.plan.parts.first().map(|p| p.n_inferences).unwrap_or(0),
+        }
+    }
+
+    /// Read the bytes of output tensor `idx` for global inference `inf`
+    /// from a finished system run's shared external memory.
+    pub fn read_output(&self, rep: &SystemReport, idx: usize, inf: u64) -> Vec<u8> {
+        let (part, local_inf) = match self.plan.strategy {
+            PartitionStrategy::DataParallel => {
+                let p = self
+                    .plan
+                    .parts
+                    .iter()
+                    .position(|p| {
+                        (p.inf_offset as u64..p.inf_offset as u64 + p.n_inferences as u64)
+                            .contains(&inf)
+                    })
+                    .expect("inference within the compiled batch");
+                (p, inf - self.plan.parts[p].inf_offset as u64)
+            }
+            // Pipeline / None: the last part produces the original
+            // graph outputs.
+            _ => (self.parts.len() - 1, inf),
+        };
+        let cp = &self.parts[part];
+        let t = cp.graph.outputs()[idx];
+        let bytes = cp.graph.tensor(t).bytes();
+        let addr = cp.alloc.ext(t) + local_inf * bytes.div_ceil(64) * 64;
+        rep.read_ext(addr, bytes as usize).to_vec()
+    }
+}
+
+/// Parts place their regions on 4 KiB boundaries of the shared memory.
+const EXT_BASE_ALIGN: u64 = 4096;
+
+/// Run pass 0 and compile every part.
+pub fn compile_system(
+    graph: &Graph,
+    sys: &SystemConfig,
+    options: &CompileOptions,
+    strategy: PartitionStrategy,
+) -> Result<CompiledSystem> {
+    sys.validate()?;
+    graph.validate().with_context(|| format!("validating graph '{}'", graph.name))?;
+    let n = sys.n_clusters();
+    if n == 1 {
+        if strategy != PartitionStrategy::None {
+            bail!(
+                "partition strategy '{}' needs a multi-cluster system — \
+                 '{}' has one cluster (drop the strategy or use none)",
+                strategy.name(),
+                sys.name
+            );
+        }
+        // Degenerate system-of-1: the plain single-cluster pipeline.
+        let cp = compile(graph, &sys.clusters[0], options)?;
+        let plan = PartitionPlan {
+            strategy: PartitionStrategy::None,
+            parts: vec![PartPlan {
+                cluster: sys.clusters[0].name.clone(),
+                node_range: (0, graph.nodes.len()),
+                n_inferences: options.n_inferences,
+                inf_offset: 0,
+                ext_base: 0,
+            }],
+        };
+        return Ok(CompiledSystem {
+            net: graph.name.clone(),
+            system: sys.clone(),
+            parts: vec![cp],
+            plan,
+        });
+    }
+    match strategy {
+        PartitionStrategy::Pipeline => pipeline_parts(graph, sys, options),
+        PartitionStrategy::DataParallel => data_parallel_parts(graph, sys, options),
+        PartitionStrategy::None => bail!(
+            "system '{}' has {n} clusters — pick a partition strategy (pipeline|data)",
+            sys.name
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline partitioning
+// ---------------------------------------------------------------------------
+
+/// Can the graph be cut between nodes `c-1` and `c`? Every tensor
+/// crossing the boundary must be int8 (handoff tensors become int8
+/// stage inputs).
+fn cut_feasible(g: &Graph, c: usize) -> bool {
+    g.nodes.iter().take(c).all(|node| {
+        let t = node.output;
+        let crosses = g.nodes[c..].iter().any(|n2| n2.inputs.contains(&t));
+        !crosses || g.tensor(t).dtype == DType::I8
+    })
+}
+
+/// Choose `n` contiguous stage ranges minimizing the maximum per-stage
+/// cost, where stage `k`'s cost is evaluated with cluster `k`'s
+/// accelerator-aware cost model. Exact DP over (stage, cut) — graphs
+/// here have tens of nodes, so O(n·m²) is trivial.
+fn balanced_cuts(g: &Graph, sys: &SystemConfig) -> Result<Vec<usize>> {
+    let n = sys.n_clusters();
+    let m = g.nodes.len();
+    ensure!(m >= n, "graph '{}' has {m} nodes — fewer than {n} pipeline stages", g.name);
+    let prefix: Vec<Vec<u64>> = sys
+        .clusters
+        .iter()
+        .map(|cfg| {
+            let mut p = vec![0u64; m + 1];
+            for (i, node) in g.nodes.iter().enumerate() {
+                p[i + 1] = p[i] + node_cost(g, node, cfg);
+            }
+            p
+        })
+        .collect();
+    let feasible: Vec<bool> = (0..=m).map(|c| cut_feasible(g, c)).collect();
+    const INF: u64 = u64::MAX;
+    let mut best = vec![vec![INF; m + 1]; n + 1];
+    let mut back = vec![vec![0usize; m + 1]; n + 1];
+    best[0][0] = 0;
+    for k in 1..=n {
+        for j in k..=m {
+            if j != m && !feasible[j] {
+                continue;
+            }
+            for i in (k - 1)..j {
+                if best[k - 1][i] == INF {
+                    continue;
+                }
+                let stage_cost = prefix[k - 1][j] - prefix[k - 1][i];
+                let v = best[k - 1][i].max(stage_cost);
+                if v < best[k][j] {
+                    best[k][j] = v;
+                    back[k][j] = i;
+                }
+            }
+        }
+    }
+    if best[n][m] == INF {
+        bail!(
+            "no feasible {n}-way pipeline cut of '{}' (an int32 tensor crosses \
+             every candidate boundary)",
+            g.name
+        );
+    }
+    let mut cuts = vec![m];
+    let mut j = m;
+    for k in (1..=n).rev() {
+        j = back[k][j];
+        cuts.push(j);
+    }
+    cuts.reverse();
+    Ok(cuts)
+}
+
+/// One extracted pipeline stage.
+struct Stage {
+    graph: Graph,
+    /// (stage input tensor, original tensor) for every cross-cut input
+    /// — these get ext-pinned to the producer stage's output region.
+    cross_inputs: Vec<(TensorId, TensorId)>,
+    /// (stage tensor, original tensor) for every tensor this stage
+    /// publishes to external memory (handoffs + original outputs).
+    out_map: Vec<(TensorId, TensorId)>,
+}
+
+fn stage_input(
+    sg: &mut Graph,
+    map: &mut HashMap<TensorId, TensorId>,
+    cross_inputs: &mut Vec<(TensorId, TensorId)>,
+    g: &Graph,
+    t: TensorId,
+) -> Result<TensorId> {
+    if let Some(&m) = map.get(&t) {
+        return Ok(m);
+    }
+    let td = g.tensor(t);
+    let nt = match td.kind {
+        // An original network input: rebuilt with its real seed (the
+        // part materializes the same deterministic bytes).
+        TensorKind::Input { seed } => sg.add_input(&td.name, &td.dims, seed),
+        // Produced by an earlier stage: becomes a pinned handoff input
+        // (seed 0 is never materialized — the producer writes the
+        // bytes at runtime).
+        TensorKind::Intermediate | TensorKind::Output => {
+            ensure!(
+                td.dtype == DType::I8,
+                "cannot hand off int32 tensor '{}' across clusters",
+                td.name
+            );
+            let nt = sg.add_input(&td.name, &td.dims, 0);
+            cross_inputs.push((nt, t));
+            nt
+        }
+        TensorKind::Weight { .. } => {
+            bail!("weight tensor '{}' used as activation", td.name)
+        }
+    };
+    map.insert(t, nt);
+    Ok(nt)
+}
+
+fn weight_seed(g: &Graph, t: TensorId) -> Result<u64> {
+    match g.tensor(t).kind {
+        TensorKind::Weight { seed } => Ok(seed),
+        _ => bail!("node weight input '{}' is not a weight tensor", g.tensor(t).name),
+    }
+}
+
+/// Rebuild nodes `lo..hi` of `g` as a standalone stage graph.
+fn extract_stage(g: &Graph, lo: usize, hi: usize, stage_idx: usize) -> Result<Stage> {
+    let mut sg = Graph::new(&format!("{}.p{stage_idx}", g.name));
+    let mut map: HashMap<TensorId, TensorId> = HashMap::new();
+    let mut cross_inputs = Vec::new();
+    for ni in lo..hi {
+        let node = &g.nodes[ni];
+        let x = stage_input(&mut sg, &mut map, &mut cross_inputs, g, node.inputs[0])?;
+        let out = match node.kind {
+            OpKind::Conv2d { kh, kw, stride, pad, relu, shift } => {
+                let wd = g.tensor(node.inputs[1]);
+                sg.conv2d(
+                    &node.name,
+                    x,
+                    wd.dims[1],
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    relu,
+                    shift,
+                    weight_seed(g, node.inputs[1])?,
+                )?
+            }
+            OpKind::Dense { relu, shift, logits } => {
+                let wd = g.tensor(node.inputs[1]);
+                sg.dense(
+                    &node.name,
+                    x,
+                    wd.dims[1],
+                    relu,
+                    shift,
+                    logits,
+                    weight_seed(g, node.inputs[1])?,
+                )?
+            }
+            OpKind::MaxPool2d { k, s } => sg.maxpool2d(&node.name, x, k, s)?,
+            OpKind::GlobalAvgPool => sg.global_avgpool(&node.name, x)?,
+            OpKind::ResidualAdd { relu } => {
+                let b = stage_input(&mut sg, &mut map, &mut cross_inputs, g, node.inputs[1])?;
+                sg.residual_add(&node.name, x, b, relu)?
+            }
+            OpKind::TileRows { rows } => sg.tile_rows(&node.name, x, rows)?,
+        };
+        let od = g.tensor(node.output);
+        ensure!(
+            sg.tensor(out).dims == od.dims && sg.tensor(out).dtype == od.dtype,
+            "stage rebuild of '{}' changed its output shape",
+            node.name
+        );
+        map.insert(node.output, out);
+    }
+    // Publish: original outputs produced here, plus every tensor a
+    // later stage consumes.
+    let mut out_map = Vec::new();
+    for ni in lo..hi {
+        let t = g.nodes[ni].output;
+        let consumed_later = g.nodes[hi..].iter().any(|n2| n2.inputs.contains(&t));
+        let is_output = matches!(g.tensor(t).kind, TensorKind::Output);
+        if consumed_later || is_output {
+            let st = map[&t];
+            sg.mark_output(st);
+            out_map.push((st, t));
+        }
+    }
+    sg.validate().with_context(|| format!("extracted stage {stage_idx}"))?;
+    Ok(Stage { graph: sg, cross_inputs, out_map })
+}
+
+/// Next part base: past this part's layout (which already reserves the
+/// per-inference output rooms), 4 KiB-aligned.
+fn next_ext_base(alloc_end: u64) -> u64 {
+    alloc_end.div_ceil(EXT_BASE_ALIGN) * EXT_BASE_ALIGN
+}
+
+fn pipeline_parts(
+    graph: &Graph,
+    sys: &SystemConfig,
+    options: &CompileOptions,
+) -> Result<CompiledSystem> {
+    if options.mode == Mode::Pipelined {
+        bail!(
+            "pipeline partitioning already pipelines across clusters; \
+             each stage compiles sequentially (drop --pipelined)"
+        );
+    }
+    let n = sys.n_clusters();
+    let n_inf = options.n_inferences.max(1);
+    let boundaries = (n - 1) as u64;
+    if boundaries * n_inf as u64 > (u16::MAX - SYS_BARRIER_BASE) as u64 + 1 {
+        bail!(
+            "pipeline needs {} system-barrier ids but only {} exist — \
+             reduce --inferences or stages",
+            boundaries * n_inf as u64,
+            (u16::MAX - SYS_BARRIER_BASE) as u64 + 1
+        );
+    }
+    let cuts = balanced_cuts(graph, sys)?;
+    let mut parts = Vec::with_capacity(n);
+    let mut plans = Vec::with_capacity(n);
+    let mut ext_base = 0u64;
+    // Original tensor -> absolute ext address of its published region.
+    let mut published: HashMap<TensorId, u64> = HashMap::new();
+    for k in 0..n {
+        let (lo, hi) = (cuts[k], cuts[k + 1]);
+        let stage = extract_stage(graph, lo, hi, k)?;
+        let pins: Vec<(TensorId, u64)> = stage
+            .cross_inputs
+            .iter()
+            .map(|&(st, orig)| {
+                published
+                    .get(&orig)
+                    .copied()
+                    .map(|addr| (st, addr))
+                    .with_context(|| {
+                        format!(
+                            "handoff tensor '{}' not published by an earlier stage",
+                            graph.tensor(orig).name
+                        )
+                    })
+            })
+            .collect::<Result<_>>()?;
+        let cfg = &sys.clusters[k];
+        let place = placement::place(&stage.graph, cfg, &options.overrides);
+        let alloc = allocate_system(
+            &stage.graph,
+            cfg,
+            false,
+            options.max_weight_slots,
+            ext_base,
+            &pins,
+            n_inf,
+        )
+        .with_context(|| format!("allocating stage {k} on '{}'", cfg.name))?;
+        for &(st, orig) in &stage.out_map {
+            published.insert(orig, alloc.ext(st));
+        }
+        let fence = |b: usize| SYS_BARRIER_BASE + (b as u16) * n_inf as u16;
+        let wait_base = if k > 0 { Some(fence(k - 1)) } else { None };
+        let signal_base = if k + 1 < n { Some(fence(k)) } else { None };
+        let sync = PartSync { wait_base, signal_base, participants: 2 };
+        let program = codegen::generate(&CodegenInput {
+            graph: &stage.graph,
+            cfg,
+            placement: &place,
+            alloc: &alloc,
+            mode: Mode::Sequential,
+            n_inferences: n_inf,
+            sync: Some(sync),
+        })
+        .with_context(|| format!("generating stage {k} for '{}'", cfg.name))?;
+        plans.push(PartPlan {
+            cluster: cfg.name.clone(),
+            node_range: (lo, hi),
+            n_inferences: n_inf,
+            inf_offset: 0,
+            ext_base,
+        });
+        ext_base = next_ext_base(alloc.ext_used);
+        let mut part_opts = options.clone();
+        part_opts.mode = Mode::Sequential;
+        part_opts.n_inferences = n_inf;
+        parts.push(CompiledProgram {
+            program,
+            placement: place,
+            alloc,
+            graph: stage.graph,
+            options: part_opts,
+        });
+    }
+    Ok(CompiledSystem {
+        net: graph.name.clone(),
+        system: sys.clone(),
+        parts,
+        plan: PartitionPlan { strategy: PartitionStrategy::Pipeline, parts: plans },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel partitioning
+// ---------------------------------------------------------------------------
+
+fn data_parallel_parts(
+    graph: &Graph,
+    sys: &SystemConfig,
+    options: &CompileOptions,
+) -> Result<CompiledSystem> {
+    let n = sys.n_clusters() as u32;
+    let total = options.n_inferences;
+    if total < n {
+        bail!(
+            "data-parallel partitioning needs at least one inference per cluster \
+             ({total} inferences over {n} clusters)"
+        );
+    }
+    let mut parts = Vec::with_capacity(n as usize);
+    let mut plans = Vec::with_capacity(n as usize);
+    let mut ext_base = 0u64;
+    let mut offset = 0u32;
+    for k in 0..n {
+        let share = total / n + u32::from(k < total % n);
+        let mut gk = graph.clone();
+        gk.name = format!("{}.d{k}", graph.name);
+        let cfg = &sys.clusters[k as usize];
+        let place = placement::place(&gk, cfg, &options.overrides);
+        let double_buffer = options.mode == Mode::Pipelined;
+        let alloc = allocate_system(
+            &gk,
+            cfg,
+            double_buffer,
+            options.max_weight_slots,
+            ext_base,
+            &[],
+            share,
+        )
+        .with_context(|| format!("allocating shard {k} on '{}'", cfg.name))?;
+        let program = codegen::generate(&CodegenInput {
+            graph: &gk,
+            cfg,
+            placement: &place,
+            alloc: &alloc,
+            mode: options.mode,
+            n_inferences: share,
+            sync: None,
+        })
+        .with_context(|| format!("generating shard {k} for '{}'", cfg.name))?;
+        plans.push(PartPlan {
+            cluster: cfg.name.clone(),
+            node_range: (0, graph.nodes.len()),
+            n_inferences: share,
+            inf_offset: offset,
+            ext_base,
+        });
+        ext_base = next_ext_base(alloc.ext_used);
+        offset += share;
+        let mut part_opts = options.clone();
+        part_opts.n_inferences = share;
+        parts.push(CompiledProgram {
+            program,
+            placement: place,
+            alloc,
+            graph: gk,
+            options: part_opts,
+        });
+    }
+    Ok(CompiledSystem {
+        net: graph.name.clone(),
+        system: sys.clone(),
+        parts,
+        plan: PartitionPlan { strategy: PartitionStrategy::DataParallel, parts: plans },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SystemConfig};
+    use crate::models;
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(PartitionStrategy::parse("none").unwrap(), PartitionStrategy::None);
+        assert_eq!(
+            PartitionStrategy::parse("pipeline").unwrap(),
+            PartitionStrategy::Pipeline
+        );
+        assert_eq!(
+            PartitionStrategy::parse("data").unwrap(),
+            PartitionStrategy::DataParallel
+        );
+        assert!(PartitionStrategy::parse("zig").is_err());
+        assert_eq!(
+            PartitionStrategy::default_for(&SystemConfig::soc2()),
+            PartitionStrategy::Pipeline
+        );
+        assert_eq!(
+            PartitionStrategy::default_for(&SystemConfig::preset("fig6d").unwrap()),
+            PartitionStrategy::None
+        );
+    }
+
+    #[test]
+    fn system_of_one_degenerates_to_plain_compile() {
+        let g = models::fig6a_graph();
+        let sys = SystemConfig::single(ClusterConfig::fig6d());
+        let opts = CompileOptions::sequential();
+        let cs = compile_system(&g, &sys, &opts, PartitionStrategy::None).unwrap();
+        let cp = compile(&g, &sys.clusters[0], &opts).unwrap();
+        assert_eq!(cs.parts.len(), 1);
+        assert_eq!(cs.parts[0].program.n_instrs(), cp.program.n_instrs());
+        assert_eq!(cs.parts[0].program.ext_mem_init, cp.program.ext_mem_init);
+        assert_eq!(cs.plan.strategy, PartitionStrategy::None);
+    }
+
+    #[test]
+    fn multi_cluster_requires_a_strategy() {
+        let g = models::fig6a_graph();
+        let sys = SystemConfig::soc2();
+        let err = compile_system(&g, &sys, &CompileOptions::sequential(), PartitionStrategy::None)
+            .unwrap_err();
+        assert!(err.to_string().contains("partition strategy"), "{err}");
+        // The converse is also explicit: a strategy on a system-of-1
+        // is an error, never a silent no-op.
+        let one = SystemConfig::preset("fig6d").unwrap();
+        let err = compile_system(
+            &g,
+            &one,
+            &CompileOptions::sequential(),
+            PartitionStrategy::Pipeline,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("multi-cluster"), "{err}");
+    }
+
+    #[test]
+    fn pipeline_cut_builds_fenced_handoff_parts() {
+        let g = models::resnet8_graph();
+        let sys = SystemConfig::soc2();
+        let opts = CompileOptions::sequential().with_inferences(2);
+        let cs = compile_system(&g, &sys, &opts, PartitionStrategy::Pipeline).unwrap();
+        assert_eq!(cs.parts.len(), 2);
+        // Contiguous full cover.
+        assert_eq!(cs.plan.parts[0].node_range.0, 0);
+        assert_eq!(cs.plan.parts[0].node_range.1, cs.plan.parts[1].node_range.0);
+        assert_eq!(cs.plan.parts[1].node_range.1, g.nodes.len());
+        // Disjoint ext regions.
+        assert!(cs.plan.parts[1].ext_base > 0);
+        assert!(cs.parts[0].alloc.ext_used <= cs.plan.parts[1].ext_base);
+        // Stage 1's handoff input is pinned into stage 0's region and
+        // carries no init bytes.
+        let p1 = &cs.parts[1];
+        let pinned: Vec<_> =
+            p1.graph.inputs().into_iter().filter(|&t| p1.alloc.pinned(t)).collect();
+        assert!(!pinned.is_empty(), "stage 1 must have a pinned handoff input");
+        for &t in &pinned {
+            assert!(p1.alloc.ext(t) < cs.plan.parts[1].ext_base);
+            let addr = p1.alloc.ext(t);
+            assert!(
+                !p1.program.ext_mem_init.iter().any(|(a, _)| *a == addr),
+                "pinned input must not be materialized in the image"
+            );
+        }
+        // The fences pair up: stage 0 signals the ids stage 1 awaits.
+        let ids = |p: &crate::isa::Program| -> Vec<u16> {
+            let mut v: Vec<u16> = p
+                .streams
+                .iter()
+                .flatten()
+                .filter_map(|i| match i {
+                    crate::isa::Instr::Barrier { id, .. } if id.0 >= SYS_BARRIER_BASE => {
+                        Some(id.0)
+                    }
+                    _ => None,
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        let s0 = ids(&cs.parts[0].program);
+        let s1 = ids(&cs.parts[1].program);
+        assert_eq!(s0, s1, "producer and consumer must share fence ids");
+        assert_eq!(s0.len(), 2, "one fence per inference per boundary");
+    }
+
+    #[test]
+    fn data_parallel_shards_the_batch() {
+        let g = models::fig6a_graph();
+        let sys = SystemConfig::soc4();
+        let opts = CompileOptions::sequential().with_inferences(6);
+        let cs = compile_system(&g, &sys, &opts, PartitionStrategy::DataParallel).unwrap();
+        assert_eq!(cs.parts.len(), 4);
+        let shares: Vec<u32> = cs.plan.parts.iter().map(|p| p.n_inferences).collect();
+        assert_eq!(shares, vec![2, 2, 1, 1]);
+        let offsets: Vec<u32> = cs.plan.parts.iter().map(|p| p.inf_offset).collect();
+        assert_eq!(offsets, vec![0, 2, 4, 5]);
+        assert_eq!(cs.n_inferences(), 6);
+        // Bases strictly increase and regions stay disjoint.
+        for w in cs.plan.parts.windows(2) {
+            assert!(w[0].ext_base < w[1].ext_base);
+        }
+        // Too few inferences is rejected.
+        let err = compile_system(
+            &g,
+            &sys,
+            &CompileOptions::sequential().with_inferences(2),
+            PartitionStrategy::DataParallel,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one inference"), "{err}");
+    }
+
+    #[test]
+    fn pipelined_mode_is_rejected_for_pipeline_strategy() {
+        let g = models::fig6a_graph();
+        let err = compile_system(
+            &g,
+            &SystemConfig::soc2(),
+            &CompileOptions::pipelined(),
+            PartitionStrategy::Pipeline,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--pipelined"), "{err}");
+    }
+}

@@ -28,7 +28,7 @@ pub enum AccelKind {
 }
 
 /// One accelerator instance.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AccelConfig {
     pub name: String,
     pub kind: AccelKind,
@@ -46,7 +46,7 @@ pub struct AccelConfig {
 
 
 /// One RISC-V management core (RV32I, single-issue, single-cycle).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CoreConfig {
     pub id: u8,
     /// Instruction memory size (area model input).
@@ -55,7 +55,7 @@ pub struct CoreConfig {
 
 
 /// The complete design-time description of a SNAX cluster.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClusterConfig {
     pub name: String,
     /// Shared scratchpad size in KiB (paper: 128).
@@ -321,6 +321,255 @@ impl ClusterConfig {
             bail!("duplicate accelerator names");
         }
         Ok(())
+    }
+}
+
+/// Shared external-memory interconnect of a multi-cluster SoC: the
+/// NoC/AXI path every cluster's DMA engine contends on toward DRAM
+/// (paper §II motivation: clusters composed into a heterogeneous SoC
+/// share the L2/AXI interconnect).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NocConfig {
+    /// Width of the shared link toward external memory, in bits (one
+    /// DMA beat per grant).
+    pub link_bits: u32,
+    /// DMA beats the shared link serves per cycle *across all
+    /// clusters*, handed out round-robin. A value `>= n_clusters`
+    /// makes contention impossible (every cluster gets its beat).
+    pub grants_per_cycle: u32,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        Self { link_bits: 512, grants_per_cycle: 1 }
+    }
+}
+
+impl NocConfig {
+    /// Grant slots one DMA beat of `beat_bits` consumes: a beat wider
+    /// than the link needs multiple slots (serialized link cycles).
+    pub fn beat_slots(&self, beat_bits: u32) -> u32 {
+        beat_bits.div_ceil(self.link_bits.max(1)).max(1)
+    }
+}
+
+/// An SoC-level system: an ordered set of named SNAX clusters plus the
+/// shared external-memory interconnect they contend on. A system of
+/// one cluster is the degenerate case — every single-cluster entry
+/// point ([`ClusterConfig::preset`], `snax simulate --cluster`, ...)
+/// is a thin wrapper over it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SystemConfig {
+    pub name: String,
+    /// Member clusters in system order (cluster index = position).
+    /// Names must be unique within the system.
+    pub clusters: Vec<ClusterConfig>,
+    pub noc: NocConfig,
+}
+
+impl SystemConfig {
+    /// Wrap one cluster as a system-of-1 (the degenerate case; the NoC
+    /// is uncontended by construction).
+    pub fn single(cluster: ClusterConfig) -> Self {
+        Self { name: cluster.name.clone(), clusters: vec![cluster], noc: NocConfig::default() }
+    }
+
+    /// `soc2`: a heterogeneous two-cluster SoC — the full fig6d cluster
+    /// next to the GeMM-only fig6c cluster — sharing one 512-bit link
+    /// with a single grant per cycle (contention enabled).
+    pub fn soc2() -> Self {
+        Self {
+            name: "soc2".into(),
+            clusters: vec![ClusterConfig::fig6d(), ClusterConfig::fig6c()],
+            noc: NocConfig::default(),
+        }
+    }
+
+    /// `soc4`: four fig6d clones (`fig6d0`..`fig6d3`) on one shared
+    /// link — the data-parallel scaling scenario.
+    pub fn soc4() -> Self {
+        let clusters = (0..4)
+            .map(|i| {
+                let mut c = ClusterConfig::fig6d();
+                c.name = format!("fig6d{i}");
+                c
+            })
+            .collect();
+        Self { name: "soc4".into(), clusters, noc: NocConfig::default() }
+    }
+
+    /// Preset lookup. Single-cluster preset names (`fig6b`/`fig6c`/
+    /// `fig6d`) resolve to systems-of-1, so every CLI/API surface can
+    /// take a system where it used to take a cluster.
+    pub fn preset(name: &str) -> Result<Self> {
+        match name {
+            "soc2" => Ok(Self::soc2()),
+            "soc4" => Ok(Self::soc4()),
+            other => {
+                let cluster = ClusterConfig::preset(other).map_err(|_| {
+                    anyhow::anyhow!(
+                        "unknown system preset '{other}' \
+                         (expected soc2/soc4 or a cluster preset fig6b/fig6c/fig6d)"
+                    )
+                })?;
+                Ok(Self::single(cluster))
+            }
+        }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Grant slots all clusters would need to each move one DMA beat
+    /// in the same cycle (beats wider than the link consume several).
+    pub fn total_link_demand(&self) -> u32 {
+        self.clusters.iter().map(|c| self.noc.beat_slots(c.dma_bits)).sum()
+    }
+
+    /// True when the shared link can actually be oversubscribed —
+    /// worst-case concurrent demand exceeds the per-cycle grant
+    /// budget. The **single** source of the contention predicate: the
+    /// NoC ledger and the span-gating rule both consume this.
+    pub fn contended(&self) -> bool {
+        self.clusters.len() > 1 && self.total_link_demand() > self.noc.grants_per_cycle
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clusters.is_empty() {
+            bail!("system needs at least one cluster");
+        }
+        if self.noc.grants_per_cycle == 0 {
+            bail!("NoC must serve at least one grant per cycle");
+        }
+        if self.noc.link_bits == 0 || self.noc.link_bits % 8 != 0 {
+            bail!("NoC link width must be a positive multiple of 8 bits");
+        }
+        let mut names: Vec<&str> = self.clusters.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.clusters.len() {
+            bail!("duplicate cluster names in system '{}'", self.name);
+        }
+        let freq = self.clusters[0].freq_mhz;
+        for c in &self.clusters {
+            c.validate().with_context(|| format!("cluster '{}'", c.name))?;
+            if self.noc.beat_slots(c.dma_bits) > self.noc.grants_per_cycle {
+                bail!(
+                    "cluster '{}': a {}-bit DMA beat needs {} slots of the {}-bit \
+                     link but only {} grants exist per cycle — the beat could never \
+                     be served",
+                    c.name,
+                    c.dma_bits,
+                    self.noc.beat_slots(c.dma_bits),
+                    self.noc.link_bits,
+                    self.noc.grants_per_cycle
+                );
+            }
+            if c.freq_mhz != freq {
+                bail!(
+                    "all clusters must share one clock domain: '{}' runs at {} MHz, \
+                     '{}' at {freq} MHz",
+                    c.name,
+                    c.freq_mhz,
+                    self.clusters[0].name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // -- serialization -----------------------------------------------------
+    //
+    // Same hand-rolled TOML subset as [`ClusterConfig`]: top-level
+    // system keys, then one `[[clusters]]` section per member whose
+    // subsections are spelled `[[clusters.cores]]` /
+    // `[[clusters.accelerators]]`.
+
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "name = \"{}\"", self.name);
+        let _ = writeln!(s, "noc_link_bits = {}", self.noc.link_bits);
+        let _ = writeln!(s, "noc_grants_per_cycle = {}", self.noc.grants_per_cycle);
+        for c in &self.clusters {
+            let _ = writeln!(s, "\n[[clusters]]");
+            for line in c.to_toml().lines() {
+                let mapped = match line.trim() {
+                    "[[cores]]" => "[[clusters.cores]]",
+                    "[[accelerators]]" => "[[clusters.accelerators]]",
+                    _ => line,
+                };
+                let _ = writeln!(s, "{mapped}");
+            }
+        }
+        s
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let mut name = String::new();
+        let mut noc = NocConfig::default();
+        let mut chunks: Vec<String> = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line == "[[clusters]]" {
+                chunks.push(String::new());
+                continue;
+            }
+            match chunks.last_mut() {
+                Some(chunk) => {
+                    // Member-cluster section: translate the nested
+                    // headers back into the flat cluster grammar.
+                    let mapped = match line {
+                        "[[clusters.cores]]" => "[[cores]]",
+                        "[[clusters.accelerators]]" => "[[accelerators]]",
+                        _ => line,
+                    };
+                    chunk.push_str(mapped);
+                    chunk.push('\n');
+                }
+                None => {
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let err_at = || format!("system config line {}: '{}'", ln + 1, raw.trim());
+                    let Some((key, val)) = line.split_once('=') else {
+                        bail!("expected key = value at {}", err_at());
+                    };
+                    let (key, val) = (key.trim(), val.trim());
+                    match key {
+                        "name" => {
+                            let v = val.trim();
+                            if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+                                name = v[1..v.len() - 1].to_string();
+                            } else {
+                                bail!("expected quoted string at {}", err_at());
+                            }
+                        }
+                        "noc_link_bits" => {
+                            noc.link_bits = val.parse().with_context(err_at)?;
+                        }
+                        "noc_grants_per_cycle" => {
+                            noc.grants_per_cycle = val.parse().with_context(err_at)?;
+                        }
+                        _ => bail!("unknown system key at {}", err_at()),
+                    }
+                }
+            }
+        }
+        let mut clusters = Vec::new();
+        for chunk in &chunks {
+            clusters.push(minitoml::parse(chunk).context("parsing [[clusters]] section")?);
+        }
+        let sys = Self { name, clusters, noc };
+        sys.validate()?;
+        Ok(sys)
+    }
+
+    pub fn from_path(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
     }
 }
 
@@ -617,6 +866,77 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = ServerConfig { cache_capacity: 0, ..ServerConfig::default() };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn system_presets_validate() {
+        for p in ["fig6b", "fig6c", "fig6d", "soc2", "soc4"] {
+            let sys = SystemConfig::preset(p).unwrap();
+            sys.validate().unwrap();
+            if matches!(p, "fig6b" | "fig6c" | "fig6d") {
+                assert_eq!(sys.n_clusters(), 1);
+                assert_eq!(sys.clusters[0], ClusterConfig::preset(p).unwrap());
+                assert!(!sys.contended());
+            }
+        }
+        assert_eq!(SystemConfig::soc2().n_clusters(), 2);
+        assert!(SystemConfig::soc2().contended());
+        assert_eq!(SystemConfig::soc4().n_clusters(), 4);
+        assert!(SystemConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn system_toml_roundtrip() {
+        for sys in [
+            SystemConfig::single(ClusterConfig::fig6d()),
+            SystemConfig::soc2(),
+            SystemConfig::soc4(),
+        ] {
+            let text = sys.to_toml();
+            let back = SystemConfig::from_toml(&text).unwrap();
+            assert_eq!(back, sys, "round-trip diverged for '{}'", sys.name);
+        }
+    }
+
+    #[test]
+    fn system_validation_rejects_bad_configs() {
+        let mut sys = SystemConfig::soc2();
+        sys.clusters[1].name = sys.clusters[0].name.clone();
+        assert!(sys.validate().is_err(), "duplicate names");
+
+        let mut sys = SystemConfig::soc2();
+        sys.clusters[1].freq_mhz = 400;
+        assert!(sys.validate().is_err(), "mixed clock domains");
+
+        let mut sys = SystemConfig::soc2();
+        sys.noc.grants_per_cycle = 0;
+        assert!(sys.validate().is_err(), "zero NoC bandwidth");
+
+        let sys = SystemConfig { name: "empty".into(), clusters: vec![], noc: NocConfig::default() };
+        assert!(sys.validate().is_err(), "no clusters");
+
+        // A link too narrow to ever serve one beat within a cycle's
+        // budget is rejected (the beat would starve forever).
+        let mut sys = SystemConfig::soc2();
+        sys.noc.link_bits = 64; // 512-bit beat needs 8 slots
+        sys.noc.grants_per_cycle = 4;
+        assert!(sys.validate().is_err(), "starving link width");
+    }
+
+    #[test]
+    fn noc_link_width_drives_contention() {
+        // Wide enough budget for both clusters' beats: uncontended.
+        let mut sys = SystemConfig::soc2();
+        sys.noc.grants_per_cycle = 2;
+        assert_eq!(sys.total_link_demand(), 2);
+        assert!(!sys.contended());
+        // Halving the link width doubles each beat's slot cost: the
+        // same grant budget is now oversubscribed again.
+        sys.noc.link_bits = 256;
+        assert_eq!(sys.noc.beat_slots(512), 2);
+        assert_eq!(sys.total_link_demand(), 4);
+        assert!(sys.contended());
+        sys.validate().unwrap();
     }
 
     #[test]

@@ -87,6 +87,14 @@ pub enum Instr {
 /// (a CSR read plus branch on the RV32I core).
 pub const POLL_INTERVAL: u64 = 4;
 
+/// Barrier ids at or above this value are **system barriers**: they
+/// synchronize cores across clusters of a multi-cluster
+/// [`crate::sim::System`] (the cross-cluster handoff fences emitted by
+/// the compiler's partition pass) instead of the cluster-local barrier
+/// file. Executing one under a standalone [`crate::sim::Cluster`] is an
+/// error — the program was compiled for a system.
+pub const SYS_BARRIER_BASE: u16 = 0x8000;
+
 /// A compiled multi-core program: one instruction stream per management
 /// core plus the external-memory image referenced by DMA descriptors.
 #[derive(Debug, Clone, Default)]

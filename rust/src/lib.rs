@@ -60,4 +60,4 @@ pub mod runtime;
 pub mod server;
 pub mod sim;
 
-pub use config::ClusterConfig;
+pub use config::{ClusterConfig, SystemConfig};

@@ -8,6 +8,9 @@
 //! snax simulate --net fig6a --cluster fig6d [--pipelined] [--inferences N]
 //!               [--engine event|exact] (event-driven fast engine vs.
 //!               the exact per-cycle reference; identical reports)
+//! snax simulate --net resnet8 --system soc2 --partition pipeline|data
+//!               (multi-cluster SoC: partition pass + shared-NoC
+//!               contention simulation)
 //! snax sweep    --nets fig6a,dae --clusters fig6b,fig6c,fig6d
 //!               [--pipelined] [--inferences N] [--engine event|exact]
 //!               [--threads N] [--json out.json]
@@ -23,15 +26,15 @@
 
 use anyhow::{bail, Context, Result};
 
-use snax::compiler::{compile, CompileOptions};
-use snax::config::ClusterConfig;
+use snax::compiler::{compile, compile_system, CompileOptions, PartitionStrategy};
+use snax::config::{ClusterConfig, SystemConfig};
 use snax::energy;
 use snax::metrics::report::{cycles, pct, ratio, table};
 use snax::metrics::roofline::RooflinePoint;
 use snax::models;
 use snax::models::matmul::{overlapped_program, serialized_program, MatmulWorkload};
 use snax::runtime::{ArtifactStore, Tensor};
-use snax::sim::Cluster;
+use snax::sim::{Cluster, System};
 
 struct Args {
     cmd: String,
@@ -118,7 +121,77 @@ fn phase_stats_json(s: &snax::sim::PhaseCacheStats) -> snax::runtime::json::Valu
     ])
 }
 
+/// Resolve `--system` (preset name or .toml path), falling back to a
+/// system-of-1 around `--cluster` when only `--partition` was given.
+fn system_for(args: &Args) -> Result<SystemConfig> {
+    match args.flags.get("system") {
+        Some(spec) if spec.ends_with(".toml") => {
+            SystemConfig::from_path(std::path::Path::new(spec))
+        }
+        Some(spec) => SystemConfig::preset(spec),
+        None => Ok(SystemConfig::single(cluster_for(args)?)),
+    }
+}
+
+/// `snax simulate --system ...`: compile through the partition pass and
+/// run the multi-cluster system simulator.
+fn cmd_simulate_system(args: &Args) -> Result<()> {
+    let sys = system_for(args)?;
+    let strategy = match args.flags.get("partition") {
+        Some(s) => PartitionStrategy::parse(s)?,
+        None => PartitionStrategy::default_for(&sys),
+    };
+    let g = graph_for(&args.get("net", "fig6a"))?;
+    let (opts, mode, memo) = sim_options(args)?;
+    let cs = compile_system(&g, &sys, &opts, strategy)?;
+    let rep = System::new(&sys).with_memo(memo).run_mode(&cs.programs(), mode)?;
+    let freq = sys.clusters[0].freq_mhz;
+    println!(
+        "net={} system={} partition={} clusters={} mode={:?} inferences={}",
+        cs.net,
+        sys.name,
+        cs.plan.strategy.name(),
+        sys.n_clusters(),
+        opts.mode,
+        cs.n_inferences()
+    );
+    println!(
+        "total: {} cycles = {:.3} ms @ {freq} MHz",
+        cycles(rep.total_cycles),
+        rep.seconds(freq) * 1e3
+    );
+    let mut rows = Vec::new();
+    for ((pp, r), cfg) in cs.plan.parts.iter().zip(&rep.clusters).zip(&sys.clusters) {
+        let e = energy::energy(r, cfg);
+        rows.push(vec![
+            pp.cluster.clone(),
+            format!("{}..{}", pp.node_range.0, pp.node_range.1),
+            format!("{}", pp.n_inferences),
+            cycles(r.total_cycles),
+            cycles(r.counters.noc_stall_cycles),
+            format!("{:.2}", e.total_uj()),
+        ]);
+    }
+    println!(
+        "{}",
+        table(&["cluster", "layers", "inf", "cycles", "noc stalls", "energy uJ"], &rows)
+    );
+    println!(
+        "noc: {} beats granted, {} denied (contention), {} barrier releases",
+        rep.noc.granted, rep.noc.denied, rep.noc.barrier_releases
+    );
+    if let Some(path) = args.flags.get("json") {
+        let body = snax::server::render_system_report(&cs, &rep);
+        std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
+        println!("wrote system report json to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
+    if args.has("system") || args.has("partition") {
+        return cmd_simulate_system(args);
+    }
     let cfg = cluster_for(args)?;
     let g = graph_for(&args.get("net", "fig6a"))?;
     let (opts, mode, memo) = sim_options(args)?;
@@ -444,12 +517,9 @@ fn cmd_verify(args: &Args) -> Result<()> {
         .clone();
     let in_shape = meta.inputs[0].0.clone();
     let n_in: usize = in_shape.iter().product();
-    let seed = match net.as_str() {
-        "fig6a" => 1000,
-        "dae" => 2000,
-        "resnet8" => 3000,
-        _ => bail!("no input seed for '{net}'"),
-    };
+    // One shared seed mapping (models::specs) — the same one the graph
+    // builders bake into their input tensors.
+    let seed = models::input_seed_by_name(&net)?;
     let x = Tensor::from_i8(&in_shape, &snax::models::lcg::lcg_i8(seed, n_in));
     let outs = store.execute(&net, &[x])?;
     // The artifact returns the first valid row; the graph output is the
@@ -469,21 +539,29 @@ fn cmd_config(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fig8(_args: &Args) -> Result<()> {
+fn cmd_fig8(args: &Args) -> Result<()> {
+    use snax::runtime::json::Value;
     let g = models::fig6a_graph();
     let seq = CompileOptions::sequential();
     let mut rows = Vec::new();
+    let mut json_rows: Vec<Value> = Vec::new();
     let mut prev: Option<u64> = None;
     for preset in ["fig6b", "fig6c", "fig6d"] {
         let cfg = ClusterConfig::preset(preset)?;
         let cp = compile(&g, &cfg, &seq)?;
         let r = Cluster::new(&cfg).run(&cp.program)?;
-        let speedup = prev.map(|p| ratio(p as f64 / r.total_cycles as f64));
+        let speedup = prev.map(|p| p as f64 / r.total_cycles as f64);
         rows.push(vec![
             preset.into(),
             cycles(r.total_cycles),
-            speedup.unwrap_or_else(|| "-".into()),
+            speedup.map(ratio).unwrap_or_else(|| "-".into()),
         ]);
+        json_rows.push(Value::object([
+            ("platform", Value::from(preset)),
+            ("cycles", Value::from(r.total_cycles)),
+            ("per_inference", Value::from(false)),
+            ("step_speedup", speedup.map(Value::from).unwrap_or(Value::Null)),
+        ]));
         prev = Some(r.total_cycles);
     }
     // Pipelined on fig6d.
@@ -492,12 +570,31 @@ fn cmd_fig8(_args: &Args) -> Result<()> {
     let cp = compile(&g, &cfg, &CompileOptions::pipelined().with_inferences(n))?;
     let r = Cluster::new(&cfg).run(&cp.program)?;
     let per_inf = r.total_cycles / n as u64;
+    let pipe_speedup = prev.unwrap() as f64 / per_inf as f64;
     rows.push(vec![
         "fig6d pipelined".into(),
         format!("{} /inf", cycles(per_inf)),
-        ratio(prev.unwrap() as f64 / per_inf as f64),
+        ratio(pipe_speedup),
     ]);
+    json_rows.push(Value::object([
+        ("platform", Value::from("fig6d pipelined")),
+        ("cycles", Value::from(per_inf)),
+        ("per_inference", Value::from(true)),
+        ("step_speedup", Value::from(pipe_speedup)),
+    ]));
     println!("{}", table(&["platform", "cycles", "step speedup"], &rows));
+    if let Some(path) = args.flags.get("json") {
+        // Same envelope shape as the simulate/sweep surfaces
+        // ({"count": N, "results": [...]}), so CI consumes the
+        // heterogeneous cascade like any other machine-readable run.
+        let body = Value::object([
+            ("count", Value::from(json_rows.len())),
+            ("results", Value::Arr(json_rows)),
+        ])
+        .to_json();
+        std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
+        println!("wrote fig8 json to {path}");
+    }
     Ok(())
 }
 
@@ -510,6 +607,9 @@ fn help() {
          \u{20}           [--engine event|exact] [--memo on|off] [--json out.json]\n\
          \u{20}           (--memo: barrier-delimited phase replay; identical reports,\n\
          \u{20}            --json includes phase-cache hit/miss counters)\n\
+         \u{20}           [--system soc2|soc4|preset|file.toml] [--partition none|pipeline|data]\n\
+         \u{20}           (multi-cluster SoC: cross-cluster partition pass, shared-NoC\n\
+         \u{20}            contention, per-cluster reports; single presets = system-of-1)\n\
          \u{20}  sweep     --nets fig6a,dae --clusters fig6b,fig6c,fig6d\n\
          \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\
          \u{20}            [--memo on|off] [--threads N] [--json out.json]\n\
@@ -518,7 +618,7 @@ fn help() {
          \u{20}  serve     [--port 8080] [--workers N] [--cache entries] [--queue depth]\n\
          \u{20}            [--phase-cache slots] (0 disables phase memoization)\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6)\n\
-         \u{20}  fig8      (the heterogeneous-acceleration cascade)\n\
+         \u{20}  fig8      [--json out.json] (the heterogeneous-acceleration cascade)\n\
          \u{20}  roofline  [--tiles 16,32,64] [--baseline]\n\
          \u{20}  report    (area breakdown per preset)\n\
          \u{20}  verify    --net fig6a (sim vs golden vs PJRT artifact)\n\

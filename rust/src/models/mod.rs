@@ -13,7 +13,7 @@ pub mod matmul;
 pub mod specs;
 
 pub use golden::evaluate;
-pub use specs::{dae_graph, fig6a_graph, resnet8_graph};
+pub use specs::{dae_graph, fig6a_graph, input_seed_by_name, resnet8_graph};
 
 /// Look up an evaluation workload by its CLI/API name (shared by the
 /// `snax` binary and the `snax serve` endpoints).

@@ -17,6 +17,19 @@ pub fn input_seed(net: u64) -> u64 {
     net * 1000
 }
 
+/// Input-tensor LCG seed for a net's CLI/API name — the **one**
+/// mapping shared by `snax verify`, the service layer, and the
+/// integration suites (previously three hardcoded copies that could
+/// drift).
+pub fn input_seed_by_name(name: &str) -> anyhow::Result<u64> {
+    match name {
+        "fig6a" => Ok(input_seed(NET_FIG6A)),
+        "dae" => Ok(input_seed(NET_DAE)),
+        "resnet8" => Ok(input_seed(NET_RESNET8)),
+        other => anyhow::bail!("no input seed for unknown net '{other}'"),
+    }
+}
+
 /// Requant shift: floor(log2(K))/2 + 5 (twin of python `shift_for_k`).
 pub fn shift_for_k(k: u32) -> u32 {
     (31 - k.leading_zeros()) / 2 + 5
@@ -155,6 +168,25 @@ mod tests {
         assert_eq!(shift_for_k(128), 8);
         assert_eq!(shift_for_k(144), 8);
         assert_eq!(shift_for_k(640), 9);
+    }
+
+    #[test]
+    fn input_seed_lookup_matches_graph_builders() {
+        // The by-name mapping must agree with the seed each builder
+        // actually bakes into its input tensor.
+        use crate::compiler::ir::TensorKind;
+        for (name, g) in [
+            ("fig6a", fig6a_graph()),
+            ("dae", dae_graph()),
+            ("resnet8", resnet8_graph()),
+        ] {
+            let input = g.inputs()[0];
+            let TensorKind::Input { seed } = g.tensor(input).kind else {
+                panic!("{name}: first input is not an Input tensor");
+            };
+            assert_eq!(input_seed_by_name(name).unwrap(), seed, "{name}");
+        }
+        assert!(input_seed_by_name("nope").is_err());
     }
 
     #[test]

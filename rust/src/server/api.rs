@@ -22,6 +22,8 @@
 //! {
 //!   "net": "fig6a" | "dae" | "resnet8",
 //!   "cluster": "fig6b" | "fig6c" | "fig6d" | "<inline TOML>",
+//!   "system": "soc2" | "soc4" | "<preset>" | "<inline system TOML>",
+//!   "partition": "none" | "pipeline" | "data",
 //!   "pipelined": false,
 //!   "inferences": 1,
 //!   "max_weight_slots": 2,
@@ -29,6 +31,12 @@
 //!   "detach": false
 //! }
 //! ```
+//!
+//! `"system"` targets a multi-cluster SoC instead of one cluster: the
+//! workload is split by the compiler's partition pass (`"partition"`,
+//! default pipeline for multi-cluster systems) and simulated with
+//! shared-NoC contention; the response carries the system envelope
+//! with one per-cluster report fragment each.
 //!
 //! Simulation responses are **deterministic**: the same `(net, cluster,
 //! options)` triple always yields byte-identical JSON (cache status
@@ -43,15 +51,18 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::compiler::{compile, program_key, CompileOptions, CompiledProgram, Graph};
-use crate::config::{ClusterConfig, ServerConfig};
+use crate::compiler::{
+    compile, compile_system, program_key, system_key, CompileOptions, CompiledProgram,
+    CompiledSystem, Graph, PartitionStrategy,
+};
+use crate::config::{ClusterConfig, ServerConfig, SystemConfig};
 use crate::energy;
 use crate::models;
 use crate::parallel;
 use crate::runtime::json::{self, Value};
-use crate::sim::{Cluster, PhaseCache, SimMode, SimReport};
+use crate::sim::{Cluster, PhaseCache, SimMode, SimReport, System, SystemReport};
 
-use super::cache::ProgramCache;
+use super::cache::{ProgramCache, SystemCache};
 use super::http::{Request, Response};
 use super::pool::{SubmitError, WorkerPool};
 
@@ -62,6 +73,11 @@ use super::pool::{SubmitError, WorkerPool};
 struct SimRequest {
     graph: Graph,
     cfg: ClusterConfig,
+    /// Multi-cluster target (takes precedence over `cfg` when set):
+    /// `"system"` names a preset (`soc2`, `soc4`, or a cluster preset
+    /// as a system-of-1) or carries inline system TOML; `"partition"`
+    /// picks the pass-0 strategy.
+    system: Option<(SystemConfig, PartitionStrategy)>,
     opts: CompileOptions,
     mode: SimMode,
     detach: bool,
@@ -91,6 +107,33 @@ fn parse_sim_value(v: &Value) -> Result<SimRequest> {
             } else {
                 ClusterConfig::preset(spec)?
             }
+        }
+    };
+    let system = match v.get("system") {
+        None => {
+            if v.get("partition").is_some() {
+                bail!("'partition' requires a 'system' target");
+            }
+            None
+        }
+        Some(s) => {
+            if v.get("cluster").is_some() {
+                bail!("'cluster' and 'system' are mutually exclusive");
+            }
+            let spec =
+                s.as_str().context("'system' must be a preset name or TOML text")?;
+            let sys = if spec.contains('=') || spec.contains('\n') {
+                SystemConfig::from_toml(spec).context("parsing inline system TOML")?
+            } else {
+                SystemConfig::preset(spec)?
+            };
+            let strategy = match v.get("partition") {
+                None => PartitionStrategy::default_for(&sys),
+                Some(p) => PartitionStrategy::parse(
+                    p.as_str().context("'partition' must be a string")?,
+                )?,
+            };
+            Some((sys, strategy))
         }
     };
     let pipelined = v.get("pipelined").and_then(|x| x.as_bool()).unwrap_or(false);
@@ -127,7 +170,7 @@ fn parse_sim_value(v: &Value) -> Result<SimRequest> {
         },
     };
     let detach = v.get("detach").and_then(|x| x.as_bool()).unwrap_or(false);
-    Ok(SimRequest { graph, cfg, opts, mode, detach })
+    Ok(SimRequest { graph, cfg, system, opts, mode, detach })
 }
 
 /// Parse a `POST /sweep` body: `{"jobs": [<sim request>, ...]}`.
@@ -313,6 +356,9 @@ impl JobTable {
 pub struct AppState {
     pub server_cfg: ServerConfig,
     pub cache: ProgramCache,
+    /// Whole-system compilations (multi-cluster requests), keyed by
+    /// [`crate::compiler::system_key`].
+    pub sys_cache: SystemCache,
     /// Process-wide phase-memoization cache: repeat requests and sweep
     /// jobs replay each other's barrier-to-barrier timing phases
     /// (DESIGN.md §8). `None` when disabled via
@@ -330,6 +376,7 @@ impl AppState {
         Self {
             server_cfg: cfg.clone(),
             cache: ProgramCache::new(cfg.cache_capacity),
+            sys_cache: SystemCache::new(cfg.cache_capacity),
             phase_cache: (cfg.phase_cache_capacity > 0)
                 .then(|| Arc::new(PhaseCache::new(cfg.phase_cache_capacity))),
             pool: WorkerPool::new(cfg.workers, cfg.queue_depth),
@@ -422,6 +469,9 @@ fn handle_compile(state: &Arc<AppState>, req: &Request) -> Response {
         Ok(p) => p,
         Err(e) => return Response::json(400, err_body(&format!("{e:#}"))),
     };
+    if parsed.system.is_some() {
+        return handle_compile_system(state, parsed);
+    }
     let key = program_key(&parsed.graph, &parsed.cfg, &parsed.opts);
     let cluster_name = parsed.cfg.name.clone();
     let worker_state = state.clone();
@@ -454,6 +504,51 @@ fn handle_compile(state: &Arc<AppState>, req: &Request) -> Response {
                             .collect(),
                     ),
                 ),
+            ]);
+            Response::json(200, body.to_json())
+                .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" })
+        }
+        Err(e) => Response::json(422, err_body(&format!("compilation failed: {e:#}"))),
+    }
+}
+
+/// `POST /compile` for a `"system"` target: compile through the system
+/// cache and report the partition shape.
+fn handle_compile_system(state: &Arc<AppState>, parsed: SimRequest) -> Response {
+    let (sys, strategy) = parsed.system.clone().expect("system request");
+    let key = system_key(&parsed.graph, &sys, &parsed.opts, strategy);
+    let worker_state = state.clone();
+    let result = match run_on_pool(state, move || {
+        worker_state.sys_cache.get_or_insert_with(key, || {
+            compile_system(&parsed.graph, &sys, &parsed.opts, strategy)
+        })
+    }) {
+        Ok(r) => r,
+        Err(resp) => return resp,
+    };
+    match result {
+        Ok((cs, hit)) => {
+            let parts: Vec<Value> = cs
+                .parts
+                .iter()
+                .zip(&cs.plan.parts)
+                .map(|(cp, pp)| {
+                    Value::object([
+                        ("cluster", Value::from(pp.cluster.as_str())),
+                        ("graph", Value::from(cp.graph.name.as_str())),
+                        ("n_instrs", Value::from(cp.program.n_instrs())),
+                        ("n_inferences", Value::from(pp.n_inferences)),
+                        ("ext_base", Value::from(pp.ext_base)),
+                    ])
+                })
+                .collect();
+            let body = Value::object([
+                ("key", Value::from(format!("{key:016x}"))),
+                ("cached", Value::from(hit)),
+                ("net", Value::from(cs.net.as_str())),
+                ("system", Value::from(cs.system.name.as_str())),
+                ("partition", Value::from(cs.plan.strategy.name())),
+                ("parts", Value::Arr(parts)),
             ]);
             Response::json(200, body.to_json())
                 .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" })
@@ -547,6 +642,9 @@ fn simulate_once(
     req: &SimRequest,
     func_threads: Option<usize>,
 ) -> Result<(String, bool), SimError> {
+    if req.system.is_some() {
+        return simulate_system_once(state, req, func_threads);
+    }
     let key = program_key(&req.graph, &req.cfg, &req.opts);
     let (cp, hit) = state
         .cache
@@ -565,6 +663,38 @@ fn simulate_once(
         .context("simulating workload")
         .map_err(SimError::Run)?;
     Ok((render_report(&cp, &req.cfg, &report), hit))
+}
+
+/// One system-level compile(+cache)+simulate job (multi-cluster
+/// request). Same determinism contract as [`simulate_once`].
+fn simulate_system_once(
+    state: &AppState,
+    req: &SimRequest,
+    func_threads: Option<usize>,
+) -> Result<(String, bool), SimError> {
+    let (sys, strategy) = req.system.as_ref().expect("system request");
+    let key = system_key(&req.graph, sys, &req.opts, *strategy);
+    let (cs, hit) = state
+        .sys_cache
+        .get_or_insert_with(key, || compile_system(&req.graph, sys, &req.opts, *strategy))
+        .map_err(SimError::Compile)?;
+    let mut system = System::new(sys);
+    if sys.n_clusters() == 1 {
+        // A system-of-1 keeps the standalone memoization behavior;
+        // multi-cluster members run memo-off regardless (DESIGN.md §9).
+        match &state.phase_cache {
+            Some(pc) => system = system.with_phase_cache(pc.clone()),
+            None => system = system.with_memo(false),
+        }
+    }
+    if let Some(n) = func_threads {
+        system = system.with_func_threads(n);
+    }
+    let rep = system
+        .run_mode(&cs.programs(), req.mode)
+        .context("simulating system")
+        .map_err(SimError::Run)?;
+    Ok((render_system_report(&cs, &rep), hit))
 }
 
 /// Batch fan-out: run every job of the sweep concurrently on the
@@ -782,6 +912,7 @@ pub fn render_report(cp: &CompiledProgram, cfg: &ClusterConfig, report: &SimRepo
                 ("bank_writes", Value::from(c.bank_writes)),
                 ("bank_conflict_cycles", Value::from(c.bank_conflict_cycles)),
                 ("axi_beats", Value::from(c.axi_beats)),
+                ("noc_stall_cycles", Value::from(c.noc_stall_cycles)),
                 ("csr_writes", Value::from(c.csr_writes)),
                 ("barrier_events", Value::from(c.barrier_events)),
                 ("macs_retired", Value::from(c.macs_retired)),
@@ -803,6 +934,49 @@ pub fn render_report(cp: &CompiledProgram, cfg: &ClusterConfig, report: &SimRepo
         ),
     ])
     .to_json()
+}
+
+/// Render a system run as deterministic JSON: the system envelope
+/// (partition, NoC contention, summed energy) plus one
+/// [`render_report`] fragment per member cluster in system order.
+/// Shared by `POST /simulate` (system targets) and
+/// `snax simulate --system --json` so the two outputs cannot drift.
+pub fn render_system_report(cs: &CompiledSystem, rep: &SystemReport) -> String {
+    let sys = &cs.system;
+    let freq = sys.clusters[0].freq_mhz;
+    let total_uj: f64 = rep
+        .clusters
+        .iter()
+        .zip(&sys.clusters)
+        .map(|(r, cfg)| energy::energy(r, cfg).total_uj())
+        .sum();
+    let head = Value::object([
+        ("net", Value::from(cs.net.as_str())),
+        ("system", Value::from(sys.name.as_str())),
+        ("partition", Value::from(cs.plan.strategy.name())),
+        ("n_clusters", Value::from(sys.n_clusters())),
+        ("inferences", Value::from(cs.n_inferences())),
+        ("total_cycles", Value::from(rep.total_cycles)),
+        ("ms", Value::from(rep.seconds(freq) * 1e3)),
+        (
+            "noc",
+            Value::object([
+                ("granted", Value::from(rep.noc.granted)),
+                ("denied", Value::from(rep.noc.denied)),
+                ("barrier_releases", Value::from(rep.noc.barrier_releases)),
+            ]),
+        ),
+        ("energy", Value::object([("total_uj", Value::from(total_uj))])),
+    ])
+    .to_json();
+    let members: Vec<String> = cs
+        .parts
+        .iter()
+        .zip(&rep.clusters)
+        .zip(&sys.clusters)
+        .map(|((cp, r), cfg)| render_report(cp, cfg, r))
+        .collect();
+    format!("{},\"clusters\":[{}]}}", &head[..head.len() - 1], members.join(","))
 }
 
 #[cfg(test)]
@@ -1015,6 +1189,70 @@ mod tests {
                  (shared phase cache included)"
             );
         }
+    }
+
+    #[test]
+    fn system_request_parsing_validates_fields() {
+        // partition without a system target is rejected.
+        assert!(parse_sim_request(br#"{"net":"fig6a","partition":"pipeline"}"#).is_err());
+        // cluster and system are mutually exclusive.
+        assert!(parse_sim_request(
+            br#"{"net":"fig6a","cluster":"fig6d","system":"soc2"}"#
+        )
+        .is_err());
+        assert!(parse_sim_request(br#"{"net":"fig6a","system":"socX"}"#).is_err());
+        assert!(
+            parse_sim_request(br#"{"net":"fig6a","system":"soc2","partition":"zig"}"#)
+                .is_err()
+        );
+        let ok = parse_sim_request(br#"{"net":"fig6a","system":"soc2"}"#).unwrap();
+        let (sys, strategy) = ok.system.expect("system parsed");
+        assert_eq!(sys.name, "soc2");
+        assert_eq!(strategy, PartitionStrategy::Pipeline, "multi-cluster default");
+        let one = parse_sim_request(br#"{"net":"fig6a","system":"fig6d"}"#).unwrap();
+        let (sys1, strategy1) = one.system.expect("system-of-1 parsed");
+        assert_eq!(sys1.n_clusters(), 1);
+        assert_eq!(strategy1, PartitionStrategy::None);
+    }
+
+    #[test]
+    fn system_simulate_roundtrip_shows_contention_and_caches() {
+        let st = state();
+        let body =
+            r#"{"net":"fig6a","system":"soc2","partition":"data","inferences":2}"#;
+        let first = route(&st, &post("/simulate", body));
+        assert_eq!(first.status, 200, "{}", String::from_utf8_lossy(&first.body));
+        let second = route(&st, &post("/simulate", body));
+        assert_eq!(second.status, 200);
+        assert_eq!(first.body, second.body, "system reports must be byte-identical");
+        assert_eq!(st.sys_cache.hits(), 1);
+        let v = json::parse(std::str::from_utf8(&first.body).unwrap()).unwrap();
+        assert_eq!(v.get("system").unwrap().as_str(), Some("soc2"));
+        assert_eq!(v.get("partition").unwrap().as_str(), Some("data"));
+        assert_eq!(v.get("n_clusters").unwrap().as_u64(), Some(2));
+        let clusters = v.get("clusters").unwrap().as_arr().unwrap();
+        assert_eq!(clusters.len(), 2);
+        assert_eq!(clusters[0].get("cluster").unwrap().as_str(), Some("fig6d"));
+        assert_eq!(clusters[1].get("cluster").unwrap().as_str(), Some("fig6c"));
+        // Concurrent shards over one grant/cycle: contention is visible.
+        assert!(v.get("noc").unwrap().get("denied").unwrap().as_u64().unwrap() > 0);
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn system_compile_endpoint_reports_partition_shape() {
+        let st = state();
+        let resp = route(
+            &st,
+            &post("/compile", r#"{"net":"resnet8","system":"soc2","inferences":2}"#),
+        );
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("partition").unwrap().as_str(), Some("pipeline"));
+        let parts = v.get("parts").unwrap().as_arr().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(parts[1].get("ext_base").unwrap().as_u64().unwrap() > 0);
+        st.pool.shutdown();
     }
 
     #[test]

@@ -1,10 +1,12 @@
-//! Sharded, content-addressed compiled-program cache.
+//! Sharded, content-addressed compilation cache.
 //!
-//! Keys are [`crate::compiler::program_key`] FNV-1a fingerprints of the
-//! `(workload graph, cluster config, compile options)` triple, so a
-//! repeat simulation of an identical workload skips the compiler
-//! entirely and goes straight to [`crate::sim::Cluster::run`] with the
-//! shared [`Arc<CompiledProgram>`].
+//! Generic over the cached artifact: [`ProgramCache`] holds
+//! single-cluster [`CompiledProgram`]s keyed by
+//! [`crate::compiler::program_key`], and [`SystemCache`] holds
+//! multi-cluster [`crate::compiler::CompiledSystem`]s keyed by
+//! [`crate::compiler::system_key`] — either way a repeat simulation of
+//! an identical workload skips the compiler entirely and goes straight
+//! to the simulator with the shared `Arc`.
 //!
 //! Sharding bounds lock contention: each shard is an independent
 //! `Mutex<HashMap>` selected by the low key bits (FNV-1a mixes well, so
@@ -18,20 +20,25 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::compiler::CompiledProgram;
+use crate::compiler::{CompiledProgram, CompiledSystem};
 
-struct Entry {
-    program: Arc<CompiledProgram>,
+/// Single-cluster compilations, keyed by [`crate::compiler::program_key`].
+pub type ProgramCache = ShardedCache<CompiledProgram>;
+/// Whole-system compilations, keyed by [`crate::compiler::system_key`].
+pub type SystemCache = ShardedCache<CompiledSystem>;
+
+struct Entry<T> {
+    program: Arc<T>,
     last_used: u64,
 }
 
-struct Shard {
-    entries: HashMap<u64, Entry>,
+struct Shard<T> {
+    entries: HashMap<u64, Entry<T>>,
     tick: u64,
 }
 
-pub struct ProgramCache {
-    shards: Vec<Mutex<Shard>>,
+pub struct ShardedCache<T> {
+    shards: Vec<Mutex<Shard<T>>>,
     per_shard_capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -39,7 +46,7 @@ pub struct ProgramCache {
     evictions: AtomicU64,
 }
 
-impl ProgramCache {
+impl<T> ShardedCache<T> {
     /// A cache of roughly `capacity` entries over 16 shards.
     pub fn new(capacity: usize) -> Self {
         Self::with_shards(capacity, 16)
@@ -67,13 +74,13 @@ impl ProgramCache {
         }
     }
 
-    fn shard(&self, key: u64) -> &Mutex<Shard> {
+    fn shard(&self, key: u64) -> &Mutex<Shard<T>> {
         &self.shards[(key % self.shards.len() as u64) as usize]
     }
 
     /// Look up a compiled program, counting a hit or miss and bumping
     /// LRU recency on hit.
-    pub fn get(&self, key: u64) -> Option<Arc<CompiledProgram>> {
+    pub fn get(&self, key: u64) -> Option<Arc<T>> {
         let mut shard = self.shard(key).lock().unwrap();
         shard.tick += 1;
         let tick = shard.tick;
@@ -92,7 +99,7 @@ impl ProgramCache {
 
     /// Insert (or replace) a compiled program, evicting the shard's LRU
     /// entry when at capacity.
-    pub fn insert(&self, key: u64, program: Arc<CompiledProgram>) {
+    pub fn insert(&self, key: u64, program: Arc<T>) {
         let mut shard = self.shard(key).lock().unwrap();
         shard.tick += 1;
         let tick = shard.tick;
@@ -115,8 +122,8 @@ impl ProgramCache {
     pub fn get_or_insert_with(
         &self,
         key: u64,
-        build: impl FnOnce() -> Result<CompiledProgram>,
-    ) -> Result<(Arc<CompiledProgram>, bool)> {
+        build: impl FnOnce() -> Result<T>,
+    ) -> Result<(Arc<T>, bool)> {
         if let Some(p) = self.get(key) {
             return Ok((p, true));
         }

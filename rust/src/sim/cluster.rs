@@ -34,7 +34,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{AccelKind, ClusterConfig};
-use crate::isa::{dma_csr, Instr, LayerClass, Program, SwKernel, POLL_INTERVAL};
+use crate::isa::{
+    dma_csr, Instr, LayerClass, Program, SwKernel, POLL_INTERVAL, SYS_BARRIER_BASE,
+};
 
 use super::accel::{model_for, AccelModel, CounterClass, EmitRule};
 use super::barrier::BarrierFile;
@@ -49,6 +51,7 @@ use super::phase::{
     StreamDelta, UnitDelta, UnitMeta, WinInstr, MIN_PHASE_CYCLES, WINDOW_CAP,
 };
 use super::streamer::{beat_bank_mask, BeatWalker, Streamer};
+use super::system::{NocLedger, SocShared};
 use super::trace::{Counters, LayerStat, SimReport, Trace, TraceEvent, UnitStats};
 
 /// Hard stop for runaway simulations.
@@ -79,6 +82,63 @@ pub enum SimMode {
 enum UnitKind {
     Accel(&'static dyn AccelModel),
     Dma,
+}
+
+/// One scheduling step of the engine, as seen by the multi-cluster
+/// system driver ([`super::system::System`]): a span, an idle
+/// fast-forward jump, one exact tick, or a memo replay each count as
+/// one quantum of progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Quantum {
+    /// The cluster advanced (possibly by zero cycles at a memo/phase
+    /// boundary) and can be stepped again.
+    Progress,
+    /// All cores retired and all units idle — the run is complete.
+    Done,
+    /// Every core is blocked on an unreleased **system** barrier and no
+    /// unit is active: only another cluster's arrival can unblock this
+    /// one. Unreachable outside a multi-cluster system.
+    SysBlocked,
+}
+
+/// Membership of a [`SimState`] in a multi-cluster system run.
+pub(crate) struct SysLink {
+    /// This cluster's index in the system (NoC arbitration identity).
+    pub(crate) idx: usize,
+    /// Shared SoC state (NoC grant ledger + system barrier file),
+    /// lent by the system driver around each quantum.
+    pub(crate) shared: Option<Box<SocShared>>,
+}
+
+/// Outcome of examining a system barrier in `step_cores`.
+enum SysBarStep {
+    Stall,
+    Cross,
+    Released,
+    Wait,
+}
+
+/// One shared-NoC grant decision: outside a system (or on an
+/// uncontended NoC) every beat is granted; under contention the ledger
+/// arbitrates (a beat of `beat_bits` consumes `ceil(beat/link)` grant
+/// slots) and a denial costs the cluster a stall cycle.
+fn noc_grant(
+    noc: &mut Option<&mut NocLedger>,
+    cycle: u64,
+    beat_bits: u32,
+    counters: &mut Counters,
+) -> bool {
+    match noc {
+        None => true,
+        Some(n) => {
+            if n.request(cycle, beat_bits) {
+                true
+            } else {
+                counters.noc_stall_cycles += 1;
+                false
+            }
+        }
+    }
 }
 
 struct RunningJob {
@@ -242,11 +302,13 @@ impl Cluster {
     }
 }
 
-struct SimState<'p> {
+pub(crate) struct SimState<'p> {
     cfg: &'p ClusterConfig,
     program: &'p Program,
     spm: Spm,
     ext: ExtMem,
+    /// Multi-cluster membership (None for a standalone cluster run).
+    sys: Option<SysLink>,
     units: Vec<Unit>,
     cores: Vec<Core>,
     barriers: BarrierFile,
@@ -442,7 +504,21 @@ fn snap_streamer(s: &Streamer) -> SnapStreamer {
 }
 
 impl<'p> SimState<'p> {
-    fn new(
+    pub(crate) fn new(
+        cfg: &'p ClusterConfig,
+        program: &'p Program,
+        func_threads: Option<usize>,
+    ) -> Result<Self> {
+        let mut st = Self::new_bare(cfg, program, func_threads)?;
+        st.ext.preload(&program.ext_mem_init);
+        Ok(st)
+    }
+
+    /// Like [`new`](Self::new) but without preloading the program's
+    /// external-memory image — multi-cluster members operate on the
+    /// system driver's shared memory instead, so a local copy would be
+    /// built only to be thrown away.
+    pub(crate) fn new_bare(
         cfg: &'p ClusterConfig,
         program: &'p Program,
         func_threads: Option<usize>,
@@ -517,16 +593,12 @@ impl<'p> SimState<'p> {
             group_of.extend(std::iter::repeat(gi).take(g.len()));
         }
 
-        let mut ext = ExtMem::new();
-        for (addr, bytes) in &program.ext_mem_init {
-            ext.write(*addr, bytes);
-        }
-
         Ok(Self {
             cfg,
             program,
             spm: Spm::new(cfg.spm_bytes(), banks, word),
-            ext,
+            ext: ExtMem::new(),
+            sys: None,
             units,
             cores: (0..cfg.cores.len())
                 .map(|_| Core {
@@ -590,83 +662,211 @@ impl<'p> SimState<'p> {
     }
 
     fn run(mut self) -> Result<SimReport> {
+        self.prepare();
+        loop {
+            match self.step_quantum()? {
+                Quantum::Done => break,
+                Quantum::Progress => {}
+                Quantum::SysBlocked => bail!(
+                    "system barrier blocked at cycle {} outside a multi-cluster System",
+                    self.cycle
+                ),
+            }
+        }
+        Ok(self.into_report())
+    }
+
+    /// One-time run setup (grant scratch + memo engagement). The
+    /// system driver calls this once before its first
+    /// [`step_quantum`](Self::step_quantum).
+    pub(crate) fn prepare(&mut self) {
         self.grants = vec![0; self.flat_keys.len()];
         if self.mode == SimMode::Event && self.memo_on {
             self.init_memo();
         }
-        loop {
-            let units_idle = self.units.iter().all(|u| u.idle());
-            let cores_done = self.cores.iter().all(|c| c.done);
-            if cores_done && units_idle {
-                break;
+    }
+
+    /// Advance the engine by one quantum: a memo replay, an idle
+    /// fast-forward jump, a uniform span, or one exact tick. The
+    /// standalone [`run`](Self::run) loop and the multi-cluster system
+    /// driver share this body, so a system-of-1 executes the exact
+    /// same schedule as a standalone cluster.
+    pub(crate) fn step_quantum(&mut self) -> Result<Quantum> {
+        let units_idle = self.units.iter().all(|u| u.idle());
+        let cores_done = self.cores.iter().all(|c| c.done);
+        if cores_done && units_idle {
+            // Program end closes the last phase: its record replays
+            // whole run tails (and, through a shared cache, whole
+            // repeat runs).
+            if self.memo.as_ref().is_some_and(|m| m.rec.is_some()) {
+                let snap = self.capture_snap();
+                if let Some(rec) = self.memo.as_mut().and_then(|m| m.rec.take()) {
+                    self.finalize_record(rec, &snap);
+                }
             }
-            if self.cycle > CYCLE_LIMIT {
-                bail!("simulation exceeded {CYCLE_LIMIT} cycles — livelock?");
-            }
-            // Phase boundary: finalize the phase that just ended, then
-            // either replay a cached repeat in closed form or start
-            // recording the new phase.
-            if self.memo.as_ref().is_some_and(|m| m.at_boundary) && self.memo_boundary()? {
-                continue;
-            }
-            // Fast-forward across memory-idle spans: nothing ticks until
-            // the earliest core wake-up.
-            if units_idle {
-                let mut min_wake = u64::MAX;
-                let mut any_ready = false;
-                for c in &self.cores {
-                    if c.done {
-                        continue;
-                    }
-                    if c.wake_at > self.cycle {
-                        min_wake = min_wake.min(c.wake_at);
-                    } else if !c.barrier_arrived {
+            return Ok(Quantum::Done);
+        }
+        if self.cycle > CYCLE_LIMIT {
+            bail!("simulation exceeded {CYCLE_LIMIT} cycles — livelock?");
+        }
+        // Phase boundary: finalize the phase that just ended, then
+        // either replay a cached repeat in closed form or start
+        // recording the new phase.
+        if self.memo.as_ref().is_some_and(|m| m.at_boundary) && self.memo_boundary()? {
+            return Ok(Quantum::Progress);
+        }
+        // Fast-forward across memory-idle spans: nothing ticks until
+        // the earliest core wake-up.
+        if units_idle {
+            let mut min_wake = u64::MAX;
+            let mut any_ready = false;
+            let mut sys_blocked = false;
+            for ci in 0..self.cores.len() {
+                let c = &self.cores[ci];
+                if c.done {
+                    continue;
+                }
+                if c.wake_at > self.cycle {
+                    min_wake = min_wake.min(c.wake_at);
+                } else if !c.barrier_arrived {
+                    any_ready = true;
+                } else if let Some(t_rel) = self.sys_release_for(ci) {
+                    // Released system barrier: crossable once the local
+                    // clock reaches the release time.
+                    if t_rel <= self.cycle {
                         any_ready = true;
+                    } else {
+                        min_wake = min_wake.min(t_rel);
                     }
+                } else if self.core_at_sys_barrier(ci) {
+                    sys_blocked = true;
                 }
-                if !any_ready {
-                    if min_wake == u64::MAX {
-                        bail!(
-                            "deadlock at cycle {}: all cores blocked on barriers, no unit active",
-                            self.cycle
-                        );
-                    }
-                    self.cycle = min_wake;
-                    continue;
-                }
-            } else if self.mode == SimMode::Event && self.cycle >= self.next_plan_at {
-                // Event-driven engine: advance a provably-uniform span in
-                // closed form when one exists; otherwise step exactly and
-                // back off the planner so its checks stay off the hot
-                // path while no span can exist.
-                if let Some(span) = self.plan_span() {
-                    self.apply_span(&span);
-                    self.plan_backoff = 1;
-                    continue;
-                }
-                self.next_plan_at = self.cycle + self.plan_backoff;
-                self.plan_backoff = (self.plan_backoff * 2).min(PLAN_BACKOFF_MAX);
             }
-            self.tick()?;
-            self.cycle += 1;
-            // A barrier release ends the current phase; the boundary
-            // state is the top of the next iteration.
-            if let Some(m) = &mut self.memo {
-                if self.counters.barrier_events != m.last_barrier_events {
-                    m.last_barrier_events = self.counters.barrier_events;
-                    m.at_boundary = true;
+            if !any_ready {
+                if min_wake == u64::MAX {
+                    if sys_blocked {
+                        return Ok(Quantum::SysBlocked);
+                    }
+                    bail!(
+                        "deadlock at cycle {}: all cores blocked on barriers, no unit active",
+                        self.cycle
+                    );
                 }
+                // While a core waits on an *unreleased* system barrier
+                // the release time is unknowable locally — creep one
+                // cycle per quantum so the system driver can interleave
+                // the other clusters' arrivals (DESIGN.md §9).
+                self.cycle =
+                    if sys_blocked { (self.cycle + 1).min(min_wake) } else { min_wake };
+                return Ok(Quantum::Progress);
+            }
+        } else if self.mode == SimMode::Event && self.cycle >= self.next_plan_at {
+            // Event-driven engine: advance a provably-uniform span in
+            // closed form when one exists; otherwise step exactly and
+            // back off the planner so its checks stay off the hot
+            // path while no span can exist.
+            if let Some(span) = self.plan_span() {
+                self.apply_span(&span);
+                self.plan_backoff = 1;
+                return Ok(Quantum::Progress);
+            }
+            self.next_plan_at = self.cycle + self.plan_backoff;
+            self.plan_backoff = (self.plan_backoff * 2).min(PLAN_BACKOFF_MAX);
+        }
+        self.tick()?;
+        self.cycle += 1;
+        // A barrier release ends the current phase; the boundary
+        // state is the top of the next quantum.
+        if let Some(m) = &mut self.memo {
+            if self.counters.barrier_events != m.last_barrier_events {
+                m.last_barrier_events = self.counters.barrier_events;
+                m.at_boundary = true;
             }
         }
-        // Program end closes the last phase: its record replays whole
-        // run tails (and, through a shared cache, whole repeat runs).
-        if self.memo.as_ref().is_some_and(|m| m.rec.is_some()) {
-            let snap = self.capture_snap();
-            if let Some(rec) = self.memo.as_mut().and_then(|m| m.rec.take()) {
-                self.finalize_record(rec, &snap);
-            }
+        Ok(Quantum::Progress)
+    }
+
+    // -- multi-cluster system hooks -----------------------------------------
+
+    /// Join a multi-cluster system as member `idx`: the shared external
+    /// memory lives with the driver (the local image is dropped), and
+    /// phase memoization is disabled — under shared-NoC contention a
+    /// cluster's timing is no longer independent of its neighbors, so
+    /// the phase fingerprint would be unsound (DESIGN.md §9).
+    pub(crate) fn attach_system(&mut self, idx: usize) {
+        self.sys = Some(SysLink { idx, shared: None });
+        self.memo_on = false;
+    }
+
+    pub(crate) fn set_mode(&mut self, mode: SimMode) {
+        self.mode = mode;
+    }
+
+    pub(crate) fn set_memo(&mut self, on: bool) {
+        self.memo_on = on;
+    }
+
+    pub(crate) fn set_phase_cache(&mut self, cache: Option<Arc<PhaseCache>>) {
+        self.shared_phase_cache = cache;
+    }
+
+    pub(crate) fn cur_cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Lend the shared SoC state for one quantum.
+    pub(crate) fn lend_shared(&mut self, shared: Box<SocShared>) {
+        self.sys.as_mut().expect("system member").shared = Some(shared);
+    }
+
+    /// Take the shared SoC state back after a quantum.
+    pub(crate) fn take_shared(&mut self) -> Option<Box<SocShared>> {
+        self.sys.as_mut().and_then(|l| l.shared.take())
+    }
+
+    /// Swap the (shared) external memory in or out around a quantum.
+    pub(crate) fn swap_ext(&mut self, ext: &mut ExtMem) {
+        std::mem::swap(&mut self.ext, ext);
+    }
+
+    pub(crate) fn finish(self) -> SimReport {
+        self.into_report()
+    }
+
+    /// Is the shared NoC actually contended (more members than per-
+    /// cycle grants)? Only then do AXI beats need per-cycle
+    /// arbitration.
+    fn sys_contended(&self) -> bool {
+        self.sys
+            .as_ref()
+            .and_then(|l| l.shared.as_ref())
+            .is_some_and(|sh| sh.noc.contended())
+    }
+
+    /// If core `ci` sits arrived at a **released** system barrier,
+    /// return the release time (on the shared clock).
+    fn sys_release_for(&self, ci: usize) -> Option<u64> {
+        let c = &self.cores[ci];
+        if !c.barrier_arrived {
+            return None;
         }
-        Ok(self.into_report())
+        let Some(Instr::Barrier { id, .. }) = self.program.streams[ci].get(c.pc) else {
+            return None;
+        };
+        if id.0 < SYS_BARRIER_BASE {
+            return None;
+        }
+        self.sys.as_ref()?.shared.as_ref()?.bars.release_time(id.0)
+    }
+
+    /// Is core `ci` arrived-and-waiting at a system barrier?
+    fn core_at_sys_barrier(&self, ci: usize) -> bool {
+        let c = &self.cores[ci];
+        c.barrier_arrived
+            && matches!(
+                self.program.streams[ci].get(c.pc),
+                Some(Instr::Barrier { id, .. }) if id.0 >= SYS_BARRIER_BASE
+            )
     }
 
     // -- phase memoization (DESIGN.md §8) -----------------------------------
@@ -1297,6 +1497,12 @@ impl<'p> SimState<'p> {
                 continue;
             };
             if let Some(dj) = &job.dma {
+                if dj.crosses_axi() && self.sys_contended() {
+                    // Shared-NoC beats need per-cycle arbitration
+                    // against the other clusters; no uniform span
+                    // exists while this transfer is in flight.
+                    return None;
+                }
                 let ss = dj.steady_state(&u.readers[0], &u.writers[0], job.axi_remaining)?;
                 n_max = n_max.min(ss.max_cycles);
                 if ss.read_streaming {
@@ -1698,6 +1904,58 @@ impl<'p> SimState<'p> {
                     }
                     Instr::Barrier { id, participants } => {
                         let (id, participants) = (*id, *participants);
+                        if id.0 >= SYS_BARRIER_BASE {
+                            // System barrier: synchronizes clusters
+                            // through the shared SoC barrier file.
+                            let cyc = self.cycle;
+                            let arrived = self.cores[ci].barrier_arrived;
+                            let idx = match &self.sys {
+                                Some(l) => l.idx,
+                                None => bail!(
+                                    "system barrier {} in a standalone cluster run \
+                                     (program was compiled for a multi-cluster system)",
+                                    id.0
+                                ),
+                            };
+                            let step = {
+                                let Some(shared) =
+                                    self.sys.as_mut().and_then(|l| l.shared.as_deref_mut())
+                                else {
+                                    bail!("system barrier {} without shared SoC state", id.0)
+                                };
+                                if arrived {
+                                    match shared.bars.release_time(id.0) {
+                                        // Unreleased, or released later
+                                        // on the shared clock: stall.
+                                        None => SysBarStep::Stall,
+                                        Some(t) if t > cyc => SysBarStep::Stall,
+                                        Some(_) => SysBarStep::Cross,
+                                    }
+                                } else if shared.bars.arrive(id.0, idx, participants, cyc) {
+                                    SysBarStep::Released
+                                } else {
+                                    SysBarStep::Wait
+                                }
+                            };
+                            match step {
+                                SysBarStep::Stall => {}
+                                SysBarStep::Cross => {
+                                    self.cores[ci].barrier_arrived = false;
+                                    self.cores[ci].pc += 1;
+                                    self.core_busy(ci, 1);
+                                }
+                                SysBarStep::Released => {
+                                    self.counters.barrier_events += 1;
+                                    self.cores[ci].pc += 1;
+                                    self.core_busy(ci, 1);
+                                }
+                                SysBarStep::Wait => {
+                                    self.cores[ci].barrier_arrived = true;
+                                    self.core_busy(ci, 1);
+                                }
+                            }
+                            break;
+                        }
                         if self.cores[ci].barrier_arrived {
                             if self.barriers.is_waiting(id, ci) {
                                 break; // still blocked (stall, not busy)
@@ -2037,6 +2295,15 @@ impl<'p> SimState<'p> {
     }
 
     fn step_dma(&mut self) {
+        let cycle = self.cycle;
+        let beat_bits = self.cfg.dma_bits;
+        // Shared-NoC arbitration (multi-cluster systems only): an AXI
+        // beat moves only when the shared link grants it this cycle.
+        let mut noc = self
+            .sys
+            .as_mut()
+            .and_then(|l| l.shared.as_deref_mut())
+            .map(|sh| &mut sh.noc);
         for u in &mut self.units {
             let Some(job) = u.job.as_mut() else { continue };
             let Some(dj) = &job.dma else { continue };
@@ -2045,7 +2312,10 @@ impl<'p> SimState<'p> {
                 DmaDir::ExtToSpm => {
                     // AXI delivers one beat/cycle into the write FIFO.
                     let w = &mut u.writers[0];
-                    if job.axi_remaining > 0 && w.fifo < w.fifo_depth {
+                    if job.axi_remaining > 0
+                        && w.fifo < w.fifo_depth
+                        && noc_grant(&mut noc, cycle, beat_bits, &mut self.counters)
+                    {
                         w.fifo += 1;
                         job.axi_remaining -= 1;
                         self.counters.axi_beats += 1;
@@ -2054,7 +2324,10 @@ impl<'p> SimState<'p> {
                 }
                 DmaDir::SpmToExt => {
                     let r = &mut u.readers[0];
-                    if job.axi_remaining > 0 && r.fifo > 0 {
+                    if job.axi_remaining > 0
+                        && r.fifo > 0
+                        && noc_grant(&mut noc, cycle, beat_bits, &mut self.counters)
+                    {
                         r.fifo -= 1;
                         job.axi_remaining -= 1;
                         self.counters.axi_beats += 1;

@@ -73,6 +73,13 @@ impl DmaJob {
         self.rows * self.row_bytes
     }
 
+    /// Whether this transfer crosses the AXI boundary (and therefore
+    /// contends for the shared NoC link in a multi-cluster system).
+    /// SPM-to-SPM moves stay inside the cluster.
+    pub fn crosses_axi(&self) -> bool {
+        self.dir != DmaDir::SpmToSpm
+    }
+
     /// Beats on the DMA port (`port_bytes` per beat, per-row rounding —
     /// rows are independent bursts).
     pub fn beats(&self, port_bytes: u64) -> u64 {

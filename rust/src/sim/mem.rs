@@ -121,6 +121,15 @@ impl ExtMem {
         self.data[start..start + bytes.len()].copy_from_slice(bytes);
     }
 
+    /// Apply a compiler-emitted memory image (the `ext_mem_init` of one
+    /// or more part programs — a multi-cluster system preloads every
+    /// part's image into its one shared memory).
+    pub fn preload(&mut self, image: &[(u64, Vec<u8>)]) {
+        for (addr, bytes) in image {
+            self.write(*addr, bytes);
+        }
+    }
+
     pub fn read(&mut self, addr: u64, len: usize) -> &[u8] {
         let start = addr as usize;
         self.ensure(start + len);

@@ -15,6 +15,9 @@
 //!   bit-exact int8 datapath twin
 //! * [`cluster`] — composition, the exact cycle loop, and the
 //!   event-driven span engine ([`SimMode`])
+//! * [`system`] — SoC-level multi-cluster composition: N cluster
+//!   engines against one shared external memory with NoC bandwidth
+//!   arbitration and cross-cluster system barriers
 //! * [`trace`] — counters, per-layer attribution, the [`SimReport`]
 
 pub mod accel;
@@ -27,9 +30,11 @@ pub mod job;
 pub mod mem;
 pub mod phase;
 pub mod streamer;
+pub mod system;
 pub mod trace;
 
 pub use cluster::{Cluster, SimMode};
 pub use job::{OpDesc, Region};
 pub use phase::{PhaseCache, PhaseCacheStats};
+pub use system::{NocStats, System, SystemReport};
 pub use trace::{Counters, LayerStat, SimReport, UnitStats};

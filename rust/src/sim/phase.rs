@@ -1105,6 +1105,7 @@ pub(crate) fn counters_sub(now: &Counters, base: &Counters) -> Counters {
         bank_writes: now.bank_writes - base.bank_writes,
         bank_conflict_cycles: now.bank_conflict_cycles - base.bank_conflict_cycles,
         axi_beats: now.axi_beats - base.axi_beats,
+        noc_stall_cycles: now.noc_stall_cycles - base.noc_stall_cycles,
         csr_writes: now.csr_writes - base.csr_writes,
         core_busy_cycles: now
             .core_busy_cycles
@@ -1126,6 +1127,7 @@ pub(crate) fn counters_add(acc: &mut Counters, d: &Counters) {
     acc.bank_writes += d.bank_writes;
     acc.bank_conflict_cycles += d.bank_conflict_cycles;
     acc.axi_beats += d.axi_beats;
+    acc.noc_stall_cycles += d.noc_stall_cycles;
     acc.csr_writes += d.csr_writes;
     for (a, b) in acc.core_busy_cycles.iter_mut().zip(&d.core_busy_cycles) {
         *a += b;

@@ -1,0 +1,602 @@
+//! SoC-level multi-cluster simulation: N per-cluster engines advanced
+//! against one shared external memory, with shared-NoC bandwidth
+//! arbitration and cross-cluster system barriers (DESIGN.md §9).
+//!
+//! ## Execution model
+//!
+//! Each member cluster keeps its own event engine ([`super::cluster`]),
+//! advanced in **quanta** (a span, an idle fast-forward, a tick). The
+//! driver always steps the cluster with the minimum local cycle (ties
+//! rotate round-robin by cycle), which yields three key properties:
+//!
+//! * **Shared-memory order** — all external-memory reads/writes happen
+//!   inside ticks, and a tick at cycle `c` only executes while the
+//!   cluster is at the global minimum time, so ext-mem effects are
+//!   applied in global cycle order. Cross-cluster data dependencies are
+//!   additionally fenced by system barriers, so handoff regions are
+//!   never racy.
+//! * **NoC causality** — a cluster requests a shared-link grant for
+//!   cycle `c` only while no other cluster is behind `c`, so grants are
+//!   never issued retroactively; the round-robin tie rotation makes the
+//!   per-cycle arbitration fair and deterministic.
+//! * **Degeneracy** — a system of one cluster takes none of these
+//!   paths: it runs the standalone engine's schedule verbatim, so its
+//!   `SimReport` is byte-identical to [`super::Cluster::run`]
+//!   (enforced by `tests/engine_equivalence.rs`).
+//!
+//! Phase memoization is **disabled** for multi-cluster members: under
+//! contention a cluster's barrier-to-barrier timing depends on its
+//! neighbors' traffic, which the phase fingerprint does not capture
+//! (the documented soundness rule — DESIGN.md §9).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{NocConfig, SystemConfig};
+use crate::isa::Program;
+
+use super::cluster::{Quantum, SimState};
+use super::mem::ExtMem;
+use super::phase::PhaseCache;
+use super::trace::SimReport;
+use super::SimMode;
+
+/// Per-cycle grant ledger of the shared NoC/AXI link toward external
+/// memory. `budget` beats are served per cycle across all clusters;
+/// a denied request costs the requesting cluster one stall cycle.
+pub(crate) struct NocLedger {
+    budget: u32,
+    link_bits: u32,
+    contended: bool,
+    /// Grant slots already handed out, by absolute cycle (pruned
+    /// behind the global minimum time).
+    ledger: BTreeMap<u64, u32>,
+    pub(crate) granted: u64,
+    pub(crate) denied: u64,
+}
+
+impl NocLedger {
+    /// `contended` is [`SystemConfig::contended`] — the config owns the
+    /// predicate; the ledger only executes it.
+    pub(crate) fn new(noc: &NocConfig, contended: bool) -> Self {
+        Self {
+            budget: noc.grants_per_cycle,
+            link_bits: noc.link_bits,
+            contended,
+            ledger: BTreeMap::new(),
+            granted: 0,
+            denied: 0,
+        }
+    }
+
+    /// Can the NoC be oversubscribed at all? When not, requests are
+    /// always granted and the ledger stays empty (clusters keep their
+    /// batch-span fast paths).
+    pub(crate) fn contended(&self) -> bool {
+        self.contended
+    }
+
+    /// Request one DMA beat of `beat_bits` at `cycle` — a beat wider
+    /// than the link consumes several of the cycle's grant slots.
+    /// First-come-first-served within the budget; the driver's
+    /// min-time scheduling with rotating tie-break makes "first"
+    /// round-robin across clusters. On an uncontended NoC nothing is
+    /// counted: the event engine batches those beats in spans without
+    /// per-beat requests, so ledger counters would otherwise differ
+    /// between engines.
+    pub(crate) fn request(&mut self, cycle: u64, beat_bits: u32) -> bool {
+        if !self.contended {
+            return true;
+        }
+        let slots = beat_bits.div_ceil(self.link_bits.max(1)).max(1);
+        let used = self.ledger.entry(cycle).or_insert(0);
+        if *used + slots <= self.budget {
+            *used += slots;
+            self.granted += 1;
+            true
+        } else {
+            self.denied += 1;
+            false
+        }
+    }
+
+    /// Drop ledger entries behind the global minimum time — no cluster
+    /// can ever request at those cycles again.
+    pub(crate) fn prune(&mut self, min_cycle: u64) {
+        if min_cycle == u64::MAX {
+            self.ledger.clear();
+        } else {
+            self.ledger = self.ledger.split_off(&min_cycle);
+        }
+    }
+}
+
+/// Cross-cluster barrier file: ids at or above
+/// [`crate::isa::SYS_BARRIER_BASE`] arrive here (one arrival per
+/// cluster), and release records the shared-clock release time so
+/// waiters on slower local clocks resume at the right cycle. Ids are
+/// never reused by the partition pass, so released entries are kept.
+#[derive(Default)]
+pub(crate) struct SysBarriers {
+    /// id -> (expected participants, arrived cluster bitmask).
+    pending: HashMap<u16, (u8, u64)>,
+    /// id -> release cycle (shared clock).
+    released: HashMap<u16, u64>,
+    pub(crate) release_events: u64,
+}
+
+impl SysBarriers {
+    /// Cluster `cluster` arrives at `id` expecting `participants`
+    /// clusters in total. Returns true when this arrival releases the
+    /// barrier (or it was already released).
+    pub(crate) fn arrive(
+        &mut self,
+        id: u16,
+        cluster: usize,
+        participants: u8,
+        cycle: u64,
+    ) -> bool {
+        if self.released.contains_key(&id) {
+            return true;
+        }
+        let e = self.pending.entry(id).or_insert((participants.max(1), 0));
+        e.1 |= 1 << cluster;
+        if e.1.count_ones() as u8 >= e.0 {
+            self.pending.remove(&id);
+            self.released.insert(id, cycle);
+            self.release_events += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The shared-clock cycle `id` released at, if it has.
+    pub(crate) fn release_time(&self, id: u16) -> Option<u64> {
+        self.released.get(&id).copied()
+    }
+}
+
+/// Shared SoC state lent to whichever cluster is being stepped.
+pub(crate) struct SocShared {
+    pub(crate) noc: NocLedger,
+    pub(crate) bars: SysBarriers,
+}
+
+/// Shared-interconnect statistics of one system run.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct NocStats {
+    /// AXI beats granted on the shared link.
+    pub granted: u64,
+    /// Beat requests denied because the cycle's budget was already
+    /// consumed by other clusters — each denial is one cycle of
+    /// measurable shared-NoC contention.
+    pub denied: u64,
+    /// System-barrier releases (cross-cluster handoffs).
+    pub barrier_releases: u64,
+}
+
+/// The result of one system run: per-cluster reports plus the shared
+/// state. For a system-of-1 `clusters[0]` is byte-identical to the
+/// standalone [`super::Cluster::run`] report.
+#[derive(Debug, PartialEq)]
+pub struct SystemReport {
+    /// Wall-clock of the whole system (max over members).
+    pub total_cycles: u64,
+    /// Per-member reports, in system order. In multi-cluster runs the
+    /// members' `ext_mem` is empty — the shared image lives in
+    /// [`SystemReport::ext_mem`].
+    pub clusters: Vec<SimReport>,
+    pub noc: NocStats,
+    /// Final shared external-memory contents.
+    pub ext_mem: Vec<u8>,
+}
+
+impl SystemReport {
+    /// Seconds at the (validated-uniform) system clock.
+    pub fn seconds(&self, freq_mhz: u32) -> f64 {
+        self.total_cycles as f64 / (freq_mhz as f64 * 1e6)
+    }
+
+    /// Read a region of the final shared external memory.
+    pub fn read_ext(&self, addr: u64, len: usize) -> &[u8] {
+        &self.ext_mem[addr as usize..addr as usize + len]
+    }
+}
+
+/// The system simulator: construct once per [`SystemConfig`], run any
+/// number of compiled part-program sets against it.
+pub struct System {
+    cfg: SystemConfig,
+    memo: bool,
+    phase_cache: Option<Arc<PhaseCache>>,
+    func_threads: Option<usize>,
+}
+
+impl System {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self { cfg: cfg.clone(), memo: true, phase_cache: None, func_threads: None }
+    }
+
+    /// Phase-memoization switch. Only effective for systems-of-1:
+    /// multi-cluster members always run memo-off (the §9 soundness
+    /// rule), so reports are identical either way.
+    pub fn with_memo(mut self, on: bool) -> Self {
+        self.memo = on;
+        self
+    }
+
+    /// Share a phase cache (system-of-1 runs only; see
+    /// [`Self::with_memo`]).
+    pub fn with_phase_cache(mut self, cache: Arc<PhaseCache>) -> Self {
+        self.phase_cache = Some(cache);
+        self
+    }
+
+    /// Cap functional-retire worker threads per member cluster.
+    pub fn with_func_threads(mut self, n: usize) -> Self {
+        self.func_threads = Some(n.max(1));
+        self
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Execute one compiled program per member cluster to completion
+    /// (event-driven engines).
+    pub fn run(&self, programs: &[&Program]) -> Result<SystemReport> {
+        self.run_mode(programs, SimMode::Event)
+    }
+
+    /// [`run`](Self::run) under an explicit engine.
+    pub fn run_mode(&self, programs: &[&Program], mode: SimMode) -> Result<SystemReport> {
+        self.cfg.validate()?;
+        if programs.len() != self.cfg.clusters.len() {
+            bail!(
+                "system '{}' has {} clusters but {} part programs were supplied",
+                self.cfg.name,
+                self.cfg.clusters.len(),
+                programs.len()
+            );
+        }
+        for (i, p) in programs.iter().enumerate() {
+            if p.streams.len() != self.cfg.clusters[i].cores.len() {
+                bail!(
+                    "part {} has {} core streams but cluster '{}' has {} cores",
+                    i,
+                    p.streams.len(),
+                    self.cfg.clusters[i].name,
+                    self.cfg.clusters[i].cores.len()
+                );
+            }
+        }
+        if programs.len() == 1 {
+            return self.run_single(programs[0], mode);
+        }
+        self.run_multi(programs, mode)
+    }
+
+    /// Degenerate system-of-1: the standalone engine's schedule,
+    /// verbatim (same quantum loop [`super::Cluster::run`] uses), so
+    /// the member report is byte-identical to a standalone run.
+    fn run_single(&self, program: &Program, mode: SimMode) -> Result<SystemReport> {
+        let mut st = SimState::new(&self.cfg.clusters[0], program, self.func_threads)?;
+        st.set_mode(mode);
+        st.set_memo(self.memo);
+        st.set_phase_cache(self.phase_cache.clone());
+        st.prepare();
+        loop {
+            match st.step_quantum()? {
+                Quantum::Done => break,
+                Quantum::Progress => {}
+                Quantum::SysBlocked => {
+                    bail!("system barrier blocked in a system-of-1 run")
+                }
+            }
+        }
+        let report = st.finish();
+        Ok(SystemReport {
+            total_cycles: report.total_cycles,
+            noc: NocStats::default(),
+            ext_mem: report.ext_mem.clone(),
+            clusters: vec![report],
+        })
+    }
+
+    fn run_multi(&self, programs: &[&Program], mode: SimMode) -> Result<SystemReport> {
+        let n = programs.len();
+        // One shared external memory, preloaded with every part's
+        // image (disjoint regions by the partition pass's base layout).
+        let mut shared_ext = ExtMem::new();
+        for p in programs {
+            shared_ext.preload(&p.ext_mem_init);
+        }
+        let mut shared: Option<Box<SocShared>> = Some(Box::new(SocShared {
+            noc: NocLedger::new(&self.cfg.noc, self.cfg.contended()),
+            bars: SysBarriers::default(),
+        }));
+        let mut states = Vec::with_capacity(n);
+        for (i, &p) in programs.iter().enumerate() {
+            // `new_bare`: members never own an image — they operate on
+            // the shared memory swapped in around each quantum.
+            let mut st = SimState::new_bare(&self.cfg.clusters[i], p, self.func_threads)?;
+            st.set_mode(mode);
+            st.attach_system(i);
+            st.prepare();
+            states.push(st);
+        }
+        let mut done = vec![false; n];
+        let mut blocked = vec![false; n];
+        let mut releases_seen = 0u64;
+        let mut rounds_since_prune = 0u32;
+        loop {
+            // Min-time scheduling: pick the least-advanced runnable
+            // cluster; ties rotate by cycle so same-cycle NoC grants
+            // and barrier arrivals are served round-robin.
+            let min_cycle = (0..n)
+                .filter(|&i| !done[i] && !blocked[i])
+                .map(|i| states[i].cur_cycle())
+                .min();
+            let Some(min_cycle) = min_cycle else {
+                if done.iter().all(|&d| d) {
+                    break;
+                }
+                bail!(
+                    "system deadlock: every live cluster is blocked on an \
+                     unreleased system barrier"
+                );
+            };
+            let start = (min_cycle % n as u64) as usize;
+            let i = (0..n)
+                .filter(|&i| {
+                    !done[i] && !blocked[i] && states[i].cur_cycle() == min_cycle
+                })
+                .min_by_key(|&i| (i + n - start) % n)
+                .expect("a min-cycle cluster exists");
+            // Lend the shared SoC state for exactly one quantum.
+            let st = &mut states[i];
+            st.swap_ext(&mut shared_ext);
+            st.lend_shared(shared.take().expect("shared state present"));
+            let q = st.step_quantum();
+            shared = st.take_shared();
+            st.swap_ext(&mut shared_ext);
+            match q? {
+                Quantum::Done => done[i] = true,
+                Quantum::Progress => {}
+                Quantum::SysBlocked => blocked[i] = true,
+            }
+            let sh = shared.as_mut().expect("shared state present");
+            // Any release may unblock frozen clusters; let them
+            // re-examine their barriers.
+            if sh.bars.release_events != releases_seen {
+                releases_seen = sh.bars.release_events;
+                blocked.iter_mut().for_each(|b| *b = false);
+            }
+            rounds_since_prune += 1;
+            if rounds_since_prune >= 4096 {
+                rounds_since_prune = 0;
+                let global_min = (0..n)
+                    .filter(|&i| !done[i])
+                    .map(|i| states[i].cur_cycle())
+                    .min()
+                    .unwrap_or(u64::MAX);
+                sh.noc.prune(global_min);
+            }
+        }
+        let sh = shared.expect("shared state present");
+        let reports: Vec<SimReport> = states.into_iter().map(|st| st.finish()).collect();
+        Ok(SystemReport {
+            total_cycles: reports.iter().map(|r| r.total_cycles).max().unwrap_or(0),
+            noc: NocStats {
+                granted: sh.noc.granted,
+                denied: sh.noc.denied,
+                barrier_releases: sh.bars.release_events,
+            },
+            clusters: reports,
+            ext_mem: shared_ext.into_raw(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::isa::{dma_csr, dma_dir, BarrierId, Instr, UnitId, SYS_BARRIER_BASE};
+    use crate::sim::Cluster;
+
+    /// Single-core fig6b program: one ext->SPM DMA of `rows x row_bytes`
+    /// from ext `src` to SPM 0, then await.
+    fn dma_in_program(src: u64, rows: u64, row_bytes: u64) -> Program {
+        let dma = UnitId(0);
+        let w = |reg, val| Instr::CsrWrite { unit: dma, reg, val };
+        Program {
+            streams: vec![vec![
+                w(dma_csr::SRC, src),
+                w(dma_csr::DST, 0),
+                w(dma_csr::ROW_BYTES, row_bytes),
+                w(dma_csr::ROWS, rows),
+                w(dma_csr::SRC_STRIDE, row_bytes),
+                w(dma_csr::DST_STRIDE, row_bytes),
+                w(dma_csr::DIR, dma_dir::EXT_TO_SPM),
+                Instr::Launch { unit: dma },
+                Instr::AwaitIdle { unit: dma },
+            ]],
+            ext_mem_init: vec![(
+                src,
+                (0..(rows * row_bytes) as usize).map(|i| i as u8).collect(),
+            )],
+            ..Default::default()
+        }
+    }
+
+    fn two_fig6b_system(grants: u32) -> SystemConfig {
+        let mut a = ClusterConfig::fig6b();
+        a.name = "a".into();
+        let mut b = ClusterConfig::fig6b();
+        b.name = "b".into();
+        let mut sys = SystemConfig {
+            name: "test2".into(),
+            clusters: vec![a, b],
+            noc: Default::default(),
+        };
+        sys.noc.grants_per_cycle = grants;
+        sys
+    }
+
+    #[test]
+    fn system_of_one_matches_standalone_cluster() {
+        let cfg = ClusterConfig::fig6b();
+        let program = dma_in_program(0, 8, 512);
+        for mode in [SimMode::Event, SimMode::Exact] {
+            let standalone = Cluster::new(&cfg).run_mode(&program, mode).unwrap();
+            let sys = System::new(&SystemConfig::single(cfg.clone()))
+                .run_mode(&[&program], mode)
+                .unwrap();
+            assert_eq!(sys.clusters.len(), 1);
+            assert_eq!(sys.clusters[0], standalone);
+            assert_eq!(sys.total_cycles, standalone.total_cycles);
+            assert_eq!(sys.noc, NocStats::default());
+        }
+    }
+
+    #[test]
+    fn contended_noc_slows_concurrent_dma_and_engines_agree() {
+        let pa = dma_in_program(0, 8, 512);
+        let pb = dma_in_program(8192, 8, 512);
+        let cfg = two_fig6b_system(1);
+        let isolated = Cluster::new(&cfg.clusters[0]).run(&pa).unwrap().total_cycles;
+
+        let event = System::new(&cfg).run(&[&pa, &pb]).unwrap();
+        let exact =
+            System::new(&cfg).run_mode(&[&pa, &pb], SimMode::Exact).unwrap();
+        assert_eq!(event, exact, "system engines diverged");
+
+        // Both clusters stream concurrently over one grant/cycle:
+        // denials must occur and each member must run longer than the
+        // isolated ideal (shared-NoC cycles > sum-of-isolated ideal).
+        assert!(event.noc.denied > 0, "no contention observed: {:?}", event.noc);
+        for r in &event.clusters {
+            assert!(
+                r.total_cycles > isolated,
+                "member not slowed: {} <= {isolated}",
+                r.total_cycles
+            );
+            assert!(r.counters.noc_stall_cycles > 0);
+        }
+        // Functional outcome intact despite arbitration.
+        assert_eq!(event.clusters[0].read_spm(0, 4), &[0, 1, 2, 3]);
+        assert_eq!(event.clusters[1].read_spm(0, 4), &[0, 1, 2, 3]);
+        // Total data still crossed the link.
+        assert_eq!(event.noc.granted, 128);
+    }
+
+    #[test]
+    fn uncontended_noc_runs_members_at_isolated_speed() {
+        let pa = dma_in_program(0, 8, 512);
+        let pb = dma_in_program(8192, 8, 512);
+        let cfg = two_fig6b_system(2); // budget >= clusters: no contention
+        let isolated = Cluster::new(&cfg.clusters[0]).run(&pa).unwrap().total_cycles;
+        let rep = System::new(&cfg).run(&[&pa, &pb]).unwrap();
+        assert_eq!(rep.noc.denied, 0);
+        for r in &rep.clusters {
+            assert_eq!(r.total_cycles, isolated);
+            assert_eq!(r.counters.noc_stall_cycles, 0);
+        }
+    }
+
+    #[test]
+    fn sys_barrier_orders_cross_cluster_handoff() {
+        // Cluster a: DMA SPM->ext at 16384, then signal. Cluster b:
+        // wait, then DMA ext(16384)->SPM. The barrier fences the
+        // handoff, so b reads a's bytes.
+        let dma = UnitId(0);
+        let w = |reg, val| Instr::CsrWrite { unit: dma, reg, val };
+        let sb = BarrierId(SYS_BARRIER_BASE);
+        let pa = Program {
+            streams: vec![vec![
+                // Preload SPM from ext 0, then store it to 16384.
+                w(dma_csr::SRC, 0),
+                w(dma_csr::DST, 0),
+                w(dma_csr::ROW_BYTES, 256),
+                w(dma_csr::ROWS, 1),
+                w(dma_csr::DIR, dma_dir::EXT_TO_SPM),
+                Instr::Launch { unit: dma },
+                Instr::AwaitIdle { unit: dma },
+                w(dma_csr::SRC, 0),
+                w(dma_csr::DST, 16384),
+                w(dma_csr::ROW_BYTES, 256),
+                w(dma_csr::ROWS, 1),
+                w(dma_csr::DIR, dma_dir::SPM_TO_EXT),
+                Instr::Launch { unit: dma },
+                Instr::AwaitIdle { unit: dma },
+                Instr::Barrier { id: sb, participants: 2 },
+            ]],
+            ext_mem_init: vec![(0, (0..=255u8).collect())],
+            ..Default::default()
+        };
+        let pb = Program {
+            streams: vec![vec![
+                Instr::Barrier { id: sb, participants: 2 },
+                w(dma_csr::SRC, 16384),
+                w(dma_csr::DST, 1024),
+                w(dma_csr::ROW_BYTES, 256),
+                w(dma_csr::ROWS, 1),
+                w(dma_csr::DIR, dma_dir::EXT_TO_SPM),
+                Instr::Launch { unit: dma },
+                Instr::AwaitIdle { unit: dma },
+            ]],
+            ..Default::default()
+        };
+        let cfg = two_fig6b_system(1);
+        let event = System::new(&cfg).run(&[&pa, &pb]).unwrap();
+        let exact = System::new(&cfg).run_mode(&[&pa, &pb], SimMode::Exact).unwrap();
+        assert_eq!(event, exact);
+        assert_eq!(event.noc.barrier_releases, 1);
+        assert_eq!(event.clusters[1].read_spm(1024, 4), &[0, 1, 2, 3]);
+        assert_eq!(event.clusters[1].read_spm(1024 + 255, 1), &[255]);
+        // The waiter cannot finish before the producer's store.
+        assert!(event.clusters[1].total_cycles >= event.clusters[0].total_cycles / 2);
+    }
+
+    #[test]
+    fn unmatched_sys_barrier_deadlocks_cleanly() {
+        let pa = Program {
+            streams: vec![vec![Instr::Barrier {
+                id: BarrierId(SYS_BARRIER_BASE + 7),
+                participants: 2,
+            }]],
+            ..Default::default()
+        };
+        let pb = Program { streams: vec![vec![]], ..Default::default() };
+        let cfg = two_fig6b_system(1);
+        let err = System::new(&cfg).run(&[&pa, &pb]).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn sys_barrier_outside_system_is_rejected() {
+        let cfg = ClusterConfig::fig6b();
+        let program = Program {
+            streams: vec![vec![Instr::Barrier {
+                id: BarrierId(SYS_BARRIER_BASE),
+                participants: 1,
+            }]],
+            ..Default::default()
+        };
+        let err = Cluster::new(&cfg).run(&program).unwrap_err();
+        assert!(err.to_string().contains("standalone"), "{err}");
+    }
+
+    #[test]
+    fn part_program_shape_mismatch_rejected() {
+        let cfg = two_fig6b_system(1);
+        let p = dma_in_program(0, 1, 64);
+        assert!(System::new(&cfg).run(&[&p]).is_err(), "part count mismatch");
+        let two_core = Program { streams: vec![vec![], vec![]], ..Default::default() };
+        assert!(System::new(&cfg).run(&[&p, &two_core]).is_err(), "core count mismatch");
+    }
+}

@@ -25,6 +25,10 @@ pub struct Counters {
     pub bank_conflict_cycles: u64,
     /// AXI bus beats (64 B each).
     pub axi_beats: u64,
+    /// Cycles a ready DMA beat was denied the shared NoC link by
+    /// another cluster's traffic (always 0 outside a multi-cluster
+    /// [`crate::sim::System`] — the standalone cluster owns its link).
+    pub noc_stall_cycles: u64,
     /// CSR register writes issued by cores.
     pub csr_writes: u64,
     /// Per-core busy (non-idle) cycles.

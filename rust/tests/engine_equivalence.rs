@@ -8,10 +8,10 @@
 
 use std::sync::Arc;
 
-use snax::compiler::{compile, CompileOptions};
-use snax::config::ClusterConfig;
+use snax::compiler::{compile, compile_system, CompileOptions, PartitionStrategy};
+use snax::config::{ClusterConfig, SystemConfig};
 use snax::models;
-use snax::sim::{Cluster, PhaseCache, SimMode, SimReport};
+use snax::sim::{Cluster, PhaseCache, SimMode, SimReport, System};
 
 fn assert_reports_equal(tag: &str, leg: &str, exact: &SimReport, got: &SimReport) {
     assert_eq!(
@@ -125,6 +125,58 @@ fn pipelined_multi_inference_replays_within_one_run() {
         "steady-state pipelined phases must replay within one run: {:?}",
         cache.stats()
     );
+}
+
+/// System-of-1 byte identity: wrapping a cluster as a [`System`] (via
+/// the partition pass's degenerate path) must produce a **byte-
+/// identical** `SimReport` — full `PartialEq`, counters + functional
+/// memory — to the legacy `Cluster::run` path, in both engines, across
+/// the fig6/fig8/table1 matrix. This is the refactor's no-regression
+/// contract: every single-cluster entry point is now a thin wrapper
+/// over the system path.
+fn assert_system_of_one_identity(tag: &str, cfg: &ClusterConfig, opts: &CompileOptions, net: &str) {
+    let graph = models::graph_by_name(net).unwrap();
+    let sys = SystemConfig::single(cfg.clone());
+    let cs = compile_system(&graph, &sys, opts, PartitionStrategy::None).unwrap();
+    let cp = compile(&graph, cfg, opts).unwrap();
+    for mode in [SimMode::Event, SimMode::Exact] {
+        let legacy = Cluster::new(cfg).run_mode(&cp.program, mode).unwrap();
+        let sys_rep = System::new(&sys).run_mode(&cs.programs(), mode).unwrap();
+        assert_eq!(sys_rep.clusters.len(), 1);
+        assert_reports_equal(tag, &format!("system-of-1 {mode:?}"), &legacy, &sys_rep.clusters[0]);
+        assert_eq!(sys_rep.total_cycles, legacy.total_cycles, "{tag}/{mode:?}");
+        assert_eq!(sys_rep.ext_mem, legacy.ext_mem, "{tag}/{mode:?}: shared ext diverged");
+        assert_eq!(sys_rep.noc.denied, 0, "{tag}: a system-of-1 cannot contend");
+        // The output-read helpers agree too.
+        assert_eq!(
+            cs.read_output(&sys_rep, 0, 0),
+            cp.read_output(&legacy, 0, 0),
+            "{tag}/{mode:?}: output lookup diverged"
+        );
+    }
+}
+
+#[test]
+fn system_of_one_fig8_matrix() {
+    let seq = CompileOptions::sequential();
+    for preset in ["fig6b", "fig6c", "fig6d"] {
+        let cfg = ClusterConfig::preset(preset).unwrap();
+        assert_system_of_one_identity(&format!("sys1 fig6a@{preset}"), &cfg, &seq, "fig6a");
+    }
+}
+
+#[test]
+fn system_of_one_pipelined_and_table1() {
+    let cfg = ClusterConfig::fig6d();
+    assert_system_of_one_identity(
+        "sys1 fig6a@fig6d/pipelined(8)",
+        &cfg,
+        &CompileOptions::pipelined().with_inferences(8),
+        "fig6a",
+    );
+    let seq = CompileOptions::sequential();
+    assert_system_of_one_identity("sys1 resnet8@fig6d", &cfg, &seq, "resnet8");
+    assert_system_of_one_identity("sys1 dae@fig6d", &cfg, &seq, "dae");
 }
 
 /// Sweep-shaped reuse: several (net, cluster) jobs sharing one phase

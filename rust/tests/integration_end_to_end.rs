@@ -15,7 +15,8 @@ use snax::models::{self, lcg::lcg_i8};
 use snax::runtime::{ArtifactStore, Tensor};
 use snax::sim::Cluster;
 
-fn three_way(name: &str, graph: snax::compiler::Graph, seed: u64) {
+fn three_way(name: &str, graph: snax::compiler::Graph) {
+    let seed = models::input_seed_by_name(name).unwrap();
     let cfg = ClusterConfig::fig6d();
     let golden = models::evaluate(&graph).unwrap();
 
@@ -40,17 +41,17 @@ fn three_way(name: &str, graph: snax::compiler::Graph, seed: u64) {
 
 #[test]
 fn fig6a_three_way() {
-    three_way("fig6a", models::fig6a_graph(), 1000);
+    three_way("fig6a", models::fig6a_graph());
 }
 
 #[test]
 fn dae_three_way() {
-    three_way("dae", models::dae_graph(), 2000);
+    three_way("dae", models::dae_graph());
 }
 
 #[test]
 fn resnet8_three_way() {
-    three_way("resnet8", models::resnet8_graph(), 3000);
+    three_way("resnet8", models::resnet8_graph());
 }
 
 #[test]

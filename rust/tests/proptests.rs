@@ -642,3 +642,92 @@ fn prop_sweep_bodies_identical_across_thread_counts() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Config serialization: `from_toml(to_toml(cfg)) == cfg` over
+// randomized valid cluster and system configurations (the hand-rolled
+// TOML-subset codec has no schema to lean on, so the round-trip is the
+// only structural check it gets).
+// ---------------------------------------------------------------------------
+
+use snax::config::{CoreConfig, NocConfig, SystemConfig};
+
+/// A random *valid* cluster: every constraint `validate()` enforces
+/// (power-of-two banks, SPM divisibility, port widths multiple of the
+/// bank width, wired cores, unique accelerator names) holds by
+/// construction.
+fn random_cluster(r: &mut Rng, name: &str, freq_mhz: u32) -> ClusterConfig {
+    let n_cores = r.range(1, 3);
+    let cores: Vec<CoreConfig> = (0..n_cores)
+        .map(|i| CoreConfig { id: i as u8, imem_kb: *r.pick(&[4u32, 8, 16]) })
+        .collect();
+    let kinds = [AccelKind::Gemm, AccelKind::MaxPool, AccelKind::VecAdd];
+    let n_accels = r.range(0, 3);
+    let accelerators: Vec<AccelConfig> = (0..n_accels)
+        .map(|i| {
+            let n_read = r.range(1, 2) as usize;
+            AccelConfig {
+                name: format!("acc{i}"),
+                kind: *r.pick(&kinds),
+                core: (r.range(0, n_cores - 1)) as u8,
+                read_ports_bits: (0..n_read).map(|_| *r.pick(&[64u32, 128, 512])).collect(),
+                write_ports_bits: vec![*r.pick(&[64u32, 512, 2048])],
+                fifo_depth: r.range(2, 8) as u32,
+                agu_loop_depth: r.range(2, 4) as u32,
+            }
+        })
+        .collect();
+    ClusterConfig {
+        name: name.into(),
+        spm_kb: *r.pick(&[64u32, 128, 256]),
+        banks: 1 << r.range(3, 5),
+        bank_width_bits: 64,
+        axi_bits: *r.pick(&[256u32, 512]),
+        dma_bits: *r.pick(&[256u32, 512]),
+        dma_core: (r.range(0, n_cores - 1)) as u8,
+        freq_mhz,
+        csr_double_buffer: r.chance(70),
+        cores,
+        accelerators,
+    }
+}
+
+#[test]
+fn prop_cluster_config_toml_roundtrip() {
+    for seed in 0..60u64 {
+        let mut r = Rng::new(7000 + seed);
+        let freq = *r.pick(&[400u32, 800]);
+        let cfg = random_cluster(&mut r, "rt", freq);
+        cfg.validate().unwrap_or_else(|e| panic!("seed {seed}: generator invalid: {e:#}"));
+        let text = cfg.to_toml();
+        let back = ClusterConfig::from_toml(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e:#}\n{text}"));
+        assert_eq!(back, cfg, "seed {seed}: round-trip diverged\n{text}");
+    }
+}
+
+#[test]
+fn prop_system_config_toml_roundtrip() {
+    for seed in 0..60u64 {
+        let mut r = Rng::new(8000 + seed);
+        // One clock domain across members (a validate() invariant).
+        let freq = *r.pick(&[400u32, 800]);
+        let n = r.range(1, 3);
+        let clusters: Vec<ClusterConfig> = (0..n)
+            .map(|i| random_cluster(&mut r, &format!("c{i}"), freq))
+            .collect();
+        let sys = SystemConfig {
+            name: format!("sys{seed}"),
+            clusters,
+            noc: NocConfig {
+                link_bits: *r.pick(&[256u32, 512, 1024]),
+                grants_per_cycle: r.range(1, 4) as u32,
+            },
+        };
+        sys.validate().unwrap_or_else(|e| panic!("seed {seed}: generator invalid: {e:#}"));
+        let text = sys.to_toml();
+        let back = SystemConfig::from_toml(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e:#}\n{text}"));
+        assert_eq!(back, sys, "seed {seed}: round-trip diverged\n{text}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Multi-cluster SoC end-to-end suite: the compiler's partition pass
+//! (pipeline and data-parallel) against the system simulator with
+//! shared-NoC contention.
+//!
+//! Contracts enforced here:
+//! * functional fidelity — a partitioned run produces byte-identical
+//!   network outputs to the single-cluster golden evaluator, for every
+//!   inference (the cross-cluster ext-mem handoff is exercised for
+//!   real);
+//! * engine equivalence — event and exact engines agree on the whole
+//!   `SystemReport` for multi-cluster runs;
+//! * memo soundness rule — multi-cluster members run memo-off
+//!   regardless of the flag (DESIGN.md §9), so memo-on and memo-off
+//!   system reports are equal;
+//! * measurable contention — with more clusters than NoC grants the
+//!   shared link denies beats, and relieving the bottleneck
+//!   (grants >= clusters) strictly helps.
+
+use snax::compiler::{compile, compile_system, CompileOptions, PartitionStrategy};
+use snax::config::{ClusterConfig, SystemConfig};
+use snax::models;
+use snax::sim::{Cluster, SimMode, System};
+
+#[test]
+fn pipeline_partition_preserves_resnet8_outputs() {
+    let g = models::resnet8_graph();
+    let golden = models::evaluate(&g).unwrap();
+    let sys = SystemConfig::soc2();
+    let opts = CompileOptions::sequential().with_inferences(2);
+    let cs = compile_system(&g, &sys, &opts, PartitionStrategy::Pipeline).unwrap();
+    assert_eq!(cs.parts.len(), 2);
+
+    let event = System::new(&sys).run(&cs.programs()).unwrap();
+    let exact = System::new(&sys).run_mode(&cs.programs(), SimMode::Exact).unwrap();
+    assert_eq!(event, exact, "system engines diverged on pipelined resnet8");
+
+    // Memo soundness rule: members run memo-off either way, so the
+    // flag cannot change a multi-cluster report.
+    let memo_off = System::new(&sys).with_memo(false).run(&cs.programs()).unwrap();
+    assert_eq!(event, memo_off, "memo flag changed a multi-cluster report");
+
+    // The cross-cluster handoff carried real data: every inference's
+    // final logits match the golden evaluator bit-for-bit.
+    for inf in 0..2u64 {
+        assert_eq!(
+            cs.read_output(&event, 0, inf),
+            golden[0],
+            "pipelined output diverged for inference {inf}"
+        );
+    }
+    // Handoffs actually synchronized (one fence per inference).
+    assert_eq!(event.noc.barrier_releases, 2);
+    // Both stages did work.
+    for (i, r) in event.clusters.iter().enumerate() {
+        assert!(r.counters.macs_retired > 0, "stage {i} retired no MACs");
+    }
+}
+
+#[test]
+fn data_parallel_partition_matches_single_cluster_outputs() {
+    let g = models::fig6a_graph();
+    let cfg = ClusterConfig::fig6d();
+    let single = compile(&g, &cfg, &CompileOptions::sequential()).unwrap();
+    let single_out = {
+        let r = Cluster::new(&cfg).run(&single.program).unwrap();
+        single.read_output(&r, 0, 0)
+    };
+
+    let sys = SystemConfig::soc2();
+    let opts = CompileOptions::sequential().with_inferences(3);
+    let cs = compile_system(&g, &sys, &opts, PartitionStrategy::DataParallel).unwrap();
+    let event = System::new(&sys).run(&cs.programs()).unwrap();
+    let exact = System::new(&sys).run_mode(&cs.programs(), SimMode::Exact).unwrap();
+    assert_eq!(event, exact, "system engines diverged on data-parallel fig6a");
+
+    // Every shard inference computes the same network: outputs equal
+    // the single-cluster result, wherever the batch placed them.
+    for inf in 0..3u64 {
+        assert_eq!(
+            cs.read_output(&event, 0, inf),
+            single_out,
+            "shard output diverged for inference {inf}"
+        );
+    }
+    // Two clusters streaming over one grant/cycle must contend.
+    assert!(event.noc.denied > 0, "no shared-NoC contention observed: {:?}", event.noc);
+    assert!(event.clusters.iter().any(|r| r.counters.noc_stall_cycles > 0));
+}
+
+#[test]
+fn relieving_the_noc_bottleneck_strictly_helps() {
+    let g = models::fig6a_graph();
+    let opts = CompileOptions::sequential().with_inferences(2);
+    let contended = SystemConfig::soc2(); // 1 grant/cycle
+    let mut relieved = SystemConfig::soc2();
+    relieved.noc.grants_per_cycle = 2; // >= clusters: contention-free
+    relieved.name = "soc2w".into();
+
+    let cs_c = compile_system(&g, &contended, &opts, PartitionStrategy::DataParallel).unwrap();
+    let cs_r = compile_system(&g, &relieved, &opts, PartitionStrategy::DataParallel).unwrap();
+    let rep_c = System::new(&contended).run(&cs_c.programs()).unwrap();
+    let rep_r = System::new(&relieved).run(&cs_r.programs()).unwrap();
+
+    assert!(rep_c.noc.denied > 0);
+    assert_eq!(rep_r.noc.denied, 0);
+    // Shared-NoC cycles exceed the uncontended ideal; doubling the
+    // link bandwidth removes the slowdown.
+    assert!(
+        rep_c.total_cycles > rep_r.total_cycles,
+        "contention did not slow the system: {} vs {}",
+        rep_c.total_cycles,
+        rep_r.total_cycles
+    );
+    // Functional results are identical either way.
+    for inf in 0..2u64 {
+        assert_eq!(cs_c.read_output(&rep_c, 0, inf), cs_r.read_output(&rep_r, 0, inf));
+    }
+}
+
+#[test]
+fn pipeline_overlaps_stages_across_inferences() {
+    // With enough inferences, stage 0 computing inference i+1 overlaps
+    // stage 1 computing inference i: the steady-state system is faster
+    // per inference than the cold 1-inference run end-to-end.
+    let g = models::resnet8_graph();
+    let sys = SystemConfig::soc2();
+    let one = compile_system(
+        &g,
+        &sys,
+        &CompileOptions::sequential().with_inferences(1),
+        PartitionStrategy::Pipeline,
+    )
+    .unwrap();
+    let four = compile_system(
+        &g,
+        &sys,
+        &CompileOptions::sequential().with_inferences(4),
+        PartitionStrategy::Pipeline,
+    )
+    .unwrap();
+    let r1 = System::new(&sys).run(&one.programs()).unwrap();
+    let r4 = System::new(&sys).run(&four.programs()).unwrap();
+    let per_inf_4 = r4.total_cycles / 4;
+    assert!(
+        per_inf_4 < r1.total_cycles,
+        "no cross-cluster pipelining: {per_inf_4} per-inf at depth 4 vs {} cold",
+        r1.total_cycles
+    );
+}
+
+#[test]
+fn system_toml_file_round_trips_through_compile_and_run() {
+    // The CLI's `--system file.toml` path: serialize soc2, reload it,
+    // and reproduce the preset's report exactly.
+    let sys = SystemConfig::soc2();
+    let dir = std::env::temp_dir().join(format!("snax-sys-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("soc2.toml");
+    std::fs::write(&path, sys.to_toml()).unwrap();
+    let loaded = SystemConfig::from_path(&path).unwrap();
+    assert_eq!(loaded, sys);
+
+    let g = models::fig6a_graph();
+    let opts = CompileOptions::sequential().with_inferences(2);
+    let a = compile_system(&g, &sys, &opts, PartitionStrategy::DataParallel).unwrap();
+    let b = compile_system(&g, &loaded, &opts, PartitionStrategy::DataParallel).unwrap();
+    let ra = System::new(&sys).run(&a.programs()).unwrap();
+    let rb = System::new(&loaded).run(&b.programs()).unwrap();
+    assert_eq!(ra, rb, "file-loaded system diverged from the preset");
+    std::fs::remove_dir_all(&dir).ok();
+}
