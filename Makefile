@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke bench bench-func bench-all bench-smoke artifacts
+.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -46,6 +46,16 @@ serve: build
 # concurrent POST /simulate, byte-identical-report + cache-hit checks.
 serve-smoke:
 	cargo test -q --test integration_server
+
+# Cycle-accounting profiler smoke (mirrors the CI profile step): run
+# `snax profile` on the single-cluster and multi-cluster shapes and
+# validate the JSON envelope schema + conservation invariant from the
+# outside (stdlib-only checker).
+profile-smoke: build
+	./target/release/snax profile --net fig6a --cluster fig6d --json /tmp/snax-profile-fig6a.json
+	python3 scripts/check_profile_json.py /tmp/snax-profile-fig6a.json
+	./target/release/snax profile --net resnet8 --system soc4 --pipelined --json /tmp/snax-profile-soc4.json
+	python3 scripts/check_profile_json.py /tmp/snax-profile-soc4.json --system
 
 # Simulator-throughput bench: runs both engines on every leg and
 # rewrites BENCH_sim_speed.json (the cross-PR perf trajectory record).

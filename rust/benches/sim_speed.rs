@@ -107,6 +107,25 @@ fn main() {
          memo-off {memo_off_mcycs:.2} Mcyc/s ({memo_speedup:.2}x)"
     );
 
+    // Profiler overhead leg (DESIGN.md §10): the cycle-accounting
+    // ledger must be zero-cost when off — `with_ledger(false)` runs
+    // the identical no-attribution path as a plain run, so the ratio
+    // against an adjacent baseline measurement guards the <2% contract.
+    // The ledger-on number is informational (attribution is opt-in).
+    const PROFILE_LEG: &str = "pipelined fig6a (profiler overhead)";
+    let (_, prof_base_mcycs) = measure(&cluster, &cp.program, SimMode::Event, reps);
+    let cluster_ledger_off = Cluster::new(&cfg).with_memo(false).with_ledger(false);
+    let (_, prof_off_mcycs) =
+        measure(&cluster_ledger_off, &cp.program, SimMode::Event, reps);
+    let cluster_ledger_on = Cluster::new(&cfg).with_memo(false).with_ledger(true);
+    let (_, prof_on_mcycs) =
+        measure(&cluster_ledger_on, &cp.program, SimMode::Event, reps);
+    let prof_off_ratio = prof_off_mcycs / prof_base_mcycs.max(1e-9);
+    println!(
+        "{PROFILE_LEG}: baseline {prof_base_mcycs:.2} Mcyc/s, ledger-off \
+         {prof_off_mcycs:.2} Mcyc/s ({prof_off_ratio:.3}x), ledger-on {prof_on_mcycs:.2} Mcyc/s"
+    );
+
     // Machine-readable trajectory record at the workspace root.
     let mut legs_json: Vec<Value> = legs
         .iter()
@@ -126,6 +145,13 @@ fn main() {
         ("memo_on_mcyc_per_s", Value::from(round2(memo_on_mcycs))),
         ("memo_off_mcyc_per_s", Value::from(round2(memo_off_mcycs))),
         ("memo_speedup", Value::from(round2(memo_speedup))),
+    ]));
+    legs_json.push(Value::object([
+        ("name", Value::from(PROFILE_LEG)),
+        ("baseline_mcyc_per_s", Value::from(round2(prof_base_mcycs))),
+        ("ledger_off_mcyc_per_s", Value::from(round2(prof_off_mcycs))),
+        ("ledger_on_mcyc_per_s", Value::from(round2(prof_on_mcycs))),
+        ("ledger_off_over_baseline", Value::from(round2(prof_off_ratio))),
     ]));
     let doc = Value::object([
         ("bench", Value::from("sim_speed")),
@@ -173,5 +199,18 @@ fn main() {
             std::process::exit(1);
         }
         println!("memo floor check ok: {memo_speedup:.2}x >= {memo_floor:.2}x");
+        // Ledger-off must stay within noise of the baseline (<2%
+        // overhead when disabled — the ledger's zero-cost-off contract).
+        let prof_floor = floor
+            .get("profiler_overhead_floor")
+            .and_then(|v| v.as_f64())
+            .expect("profiler floor key missing");
+        if prof_off_ratio < prof_floor {
+            eprintln!(
+                "FAIL: ledger-off/baseline ratio {prof_off_ratio:.3} below floor {prof_floor:.3}"
+            );
+            std::process::exit(1);
+        }
+        println!("profiler floor check ok: {prof_off_ratio:.3} >= {prof_floor:.3}");
     }
 }

@@ -16,6 +16,9 @@
 //!               [--threads N] [--json out.json]
 //!               (batch fan-out: every net x cluster combination
 //!               simulated concurrently, results in input order)
+//! snax profile  --net fig6a --cluster fig6d [--system soc2] [--json out.json]
+//!               (cycle-accounting ledger: stall-cause attribution per
+//!               unit, roofline placement, per-layer spans)
 //! snax serve    [--port P] [--workers N] [--cache N] [--queue N]
 //! snax fig8     (the heterogeneous-acceleration cascade)
 //! snax roofline --tiles 16,32,64,96,128 [--baseline]
@@ -262,6 +265,185 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
         std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
         println!("wrote report json to {path}");
+    }
+    Ok(())
+}
+
+/// Human-readable attribution table: one row per ledger row, with the
+/// exhaustive category split and the dominant bottleneck cause.
+fn ledger_table(lg: &snax::sim::LedgerReport) -> String {
+    use snax::sim::Cat;
+    let mut rows = Vec::new();
+    for r in &lg.rows {
+        let (cause, share) = match r.bottleneck() {
+            Some((c, v)) => (c.name().to_string(), pct(v as f64 / lg.total_cycles.max(1) as f64)),
+            None => ("-".into(), "-".into()),
+        };
+        let mut row = vec![r.name.clone()];
+        for c in Cat::ALL {
+            row.push(if r.get(c) == 0 { "-".into() } else { cycles(r.get(c)) });
+        }
+        row.push(cause);
+        row.push(share);
+        rows.push(row);
+    }
+    let mut header: Vec<&str> = vec!["row"];
+    header.extend(snax::sim::CAT_NAMES);
+    header.push("bottleneck");
+    header.push("share");
+    table(&header, &rows)
+}
+
+/// Roofline placement of one profiled run, derived from the retired-ops
+/// checksum counters and AXI traffic (reuses [`snax::metrics::roofline`]).
+fn roofline_json(cfg: &ClusterConfig, report: &snax::sim::SimReport) -> snax::runtime::json::Value {
+    use snax::metrics::roofline;
+    use snax::runtime::json::Value;
+    let c = &report.counters;
+    let ops = (2 * c.macs_retired + c.elem_ops_retired) as f64;
+    let bytes = (c.axi_beats as f64) * roofline::axi_bytes_per_cycle(cfg);
+    let intensity = if bytes > 0.0 { ops / bytes } else { 0.0 };
+    let achieved = ops / report.total_cycles.max(1) as f64;
+    let bound = roofline::roofline_bound(cfg, intensity);
+    Value::object([
+        ("intensity_ops_per_byte", Value::from(intensity)),
+        ("achieved_ops_per_cycle", Value::from(achieved)),
+        ("bound_ops_per_cycle", Value::from(bound)),
+        ("peak_ops_per_cycle", Value::from(roofline::peak_ops_per_cycle(cfg))),
+        ("utilization", Value::from(if bound > 0.0 { achieved / bound } else { 0.0 })),
+    ])
+}
+
+/// Print the bottleneck report of one profiled cluster run and return
+/// its JSON fragment: ledger rollup + per-layer spans + roofline
+/// placement.
+fn profile_cluster_fragment(
+    cfg: &ClusterConfig,
+    report: &snax::sim::SimReport,
+) -> Result<snax::runtime::json::Value> {
+    use snax::runtime::json::Value;
+    let lg = report.ledger.as_ref().expect("profiled run carries a ledger");
+    if let Some(err) = lg.conservation_error() {
+        bail!("cycle-accounting violation: {err}");
+    }
+    println!("{}", ledger_table(lg));
+    let rf = roofline_json(cfg, report);
+    println!(
+        "roofline: {:.1} ops/cyc achieved of {:.1} bound ({} at {:.2} ops/B)",
+        rf.get("achieved_ops_per_cycle").unwrap().as_f64().unwrap(),
+        rf.get("bound_ops_per_cycle").unwrap().as_f64().unwrap(),
+        pct(rf.get("utilization").unwrap().as_f64().unwrap()),
+        rf.get("intensity_ops_per_byte").unwrap().as_f64().unwrap(),
+    );
+    let layers: Vec<Value> = report
+        .layers
+        .iter()
+        .map(|(id, l)| {
+            Value::object([
+                ("id", Value::from(*id as u64)),
+                ("name", Value::from(l.name.as_str())),
+                ("busy_cycles", Value::from(l.busy_cycles)),
+                ("span_cycles", Value::from(l.span())),
+                (
+                    "span_share",
+                    Value::from(l.span() as f64 / report.total_cycles.max(1) as f64),
+                ),
+            ])
+        })
+        .collect();
+    Ok(Value::object([
+        ("cluster", Value::from(cfg.name.as_str())),
+        ("total_cycles", Value::from(report.total_cycles)),
+        ("ledger", snax::server::ledger_json(lg)),
+        ("layers", Value::Arr(layers)),
+        ("roofline", rf),
+    ]))
+}
+
+/// `snax profile`: run with the cycle-accounting ledger enabled and
+/// print where every unit's cycles went (DESIGN.md §10).
+fn cmd_profile(args: &Args) -> Result<()> {
+    use snax::runtime::json::Value;
+    let (opts, mode, memo) = sim_options(args)?;
+    let g = graph_for(&args.get("net", "fig6a"))?;
+    let envelope = if args.has("system") || args.has("partition") {
+        let sys = system_for(args)?;
+        let strategy = match args.flags.get("partition") {
+            Some(s) => PartitionStrategy::parse(s)?,
+            None => PartitionStrategy::default_for(&sys),
+        };
+        let cs = compile_system(&g, &sys, &opts, strategy)?;
+        let rep = System::new(&sys)
+            .with_memo(memo)
+            .with_ledger(true)
+            .run_mode(&cs.programs(), mode)?;
+        println!(
+            "profile: net={} system={} partition={} mode={:?} total {} cycles",
+            cs.net,
+            sys.name,
+            cs.plan.strategy.name(),
+            mode,
+            cycles(rep.total_cycles)
+        );
+        let mut members = Vec::new();
+        for (r, cfg) in rep.clusters.iter().zip(&sys.clusters) {
+            println!("-- cluster {}", cfg.name);
+            members.push(profile_cluster_fragment(cfg, r)?);
+        }
+        let noc_row = snax::sim::ledger::noc_row(rep.noc.busy_cycles, rep.total_cycles);
+        if sys.n_clusters() > 1 {
+            println!("-- shared noc");
+            println!(
+                "{}",
+                ledger_table(&snax::sim::LedgerReport {
+                    total_cycles: rep.total_cycles,
+                    rows: vec![noc_row.clone()],
+                })
+            );
+        }
+        Value::object([
+            ("net", Value::from(cs.net.as_str())),
+            ("system", Value::from(sys.name.as_str())),
+            ("partition", Value::from(cs.plan.strategy.name())),
+            ("mode", Value::from(format!("{mode:?}").to_lowercase())),
+            ("inferences", Value::from(cs.n_inferences())),
+            ("total_cycles", Value::from(rep.total_cycles)),
+            (
+                "noc_ledger",
+                snax::server::ledger_json(&snax::sim::LedgerReport {
+                    total_cycles: rep.total_cycles,
+                    rows: vec![noc_row],
+                }),
+            ),
+            ("clusters", Value::Arr(members)),
+        ])
+    } else {
+        let cfg = cluster_for(args)?;
+        let cp = compile(&g, &cfg, &opts)?;
+        let report = Cluster::new(&cfg)
+            .with_memo(memo)
+            .with_ledger(true)
+            .run_mode(&cp.program, mode)?;
+        println!(
+            "profile: net={} cluster={} mode={:?} total {} cycles",
+            g.name,
+            cfg.name,
+            mode,
+            cycles(report.total_cycles)
+        );
+        let fragment = profile_cluster_fragment(&cfg, &report)?;
+        Value::object([
+            ("net", Value::from(g.name.as_str())),
+            ("mode", Value::from(format!("{mode:?}").to_lowercase())),
+            ("inferences", Value::from(opts.n_inferences)),
+            ("total_cycles", Value::from(report.total_cycles)),
+            ("clusters", Value::Arr(vec![fragment])),
+        ])
+    };
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, envelope.to_json())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote profile json to {path}");
     }
     Ok(())
 }
@@ -618,6 +800,11 @@ fn help() {
          \u{20}  serve     [--port 8080] [--workers N] [--cache entries] [--queue depth]\n\
          \u{20}            [--phase-cache slots] (0 disables phase memoization)\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6)\n\
+         \u{20}  profile   --net fig6a --cluster fig6d [--system soc2|soc4]\n\
+         \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\
+         \u{20}            [--memo on|off] [--json out.json]\n\
+         \u{20}            (cycle-accounting ledger: per-unit stall-cause attribution,\n\
+         \u{20}             roofline placement, per-layer spans; see DESIGN.md §10)\n\
          \u{20}  fig8      [--json out.json] (the heterogeneous-acceleration cascade)\n\
          \u{20}  roofline  [--tiles 16,32,64] [--baseline]\n\
          \u{20}  report    (area breakdown per preset)\n\
@@ -630,6 +817,7 @@ fn main() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "simulate" => cmd_simulate(&args),
+        "profile" => cmd_profile(&args),
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
         "roofline" => cmd_roofline(&args),

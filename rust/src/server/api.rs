@@ -60,7 +60,10 @@ use crate::energy;
 use crate::models;
 use crate::parallel;
 use crate::runtime::json::{self, Value};
-use crate::sim::{Cluster, PhaseCache, SimMode, SimReport, System, SystemReport};
+use crate::sim::{
+    ledger, Cluster, LedgerReport, NocStats, PhaseCache, ProgressSink, SimMode, SimReport,
+    System, SystemReport,
+};
 
 use super::cache::{ProgramCache, SystemCache};
 use super::http::{Request, Response};
@@ -81,6 +84,10 @@ struct SimRequest {
     opts: CompileOptions,
     mode: SimMode,
     detach: bool,
+    /// Build the cycle-accounting attribution ledger (`"profile": true`)
+    /// — the report gains a `"ledger"` rollup, and detached jobs stream
+    /// phase-boundary ledger snapshots through `GET /jobs/:id`.
+    profile: bool,
 }
 
 fn parse_sim_request(body: &[u8]) -> Result<SimRequest> {
@@ -170,7 +177,8 @@ fn parse_sim_value(v: &Value) -> Result<SimRequest> {
         },
     };
     let detach = v.get("detach").and_then(|x| x.as_bool()).unwrap_or(false);
-    Ok(SimRequest { graph, cfg, system, opts, mode, detach })
+    let profile = v.get("profile").and_then(|x| x.as_bool()).unwrap_or(false);
+    Ok(SimRequest { graph, cfg, system, opts, mode, detach, profile })
 }
 
 /// Parse a `POST /sweep` body: `{"jobs": [<sim request>, ...]}`.
@@ -269,7 +277,10 @@ impl Metrics {
 
 enum JobState {
     Queued,
-    Running,
+    /// Running, with the live progress sink the engine publishes to
+    /// (cycles simulated, phase transitions, phase-boundary ledger
+    /// snapshots for profiled jobs).
+    Running(Arc<ProgressSink>),
     Done(String),
     Failed(String),
 }
@@ -322,9 +333,19 @@ impl JobTable {
                 Value::object([("id", Value::from(id)), ("state", Value::from("queued"))])
                     .to_json()
             }
-            JobState::Running => {
-                Value::object([("id", Value::from(id)), ("state", Value::from("running"))])
-                    .to_json()
+            JobState::Running(sink) => {
+                let lg = match sink.ledger() {
+                    Some(lg) => ledger_json(&lg).to_json(),
+                    None => "null".into(),
+                };
+                // Hand-assembled so the splice-in ledger keeps the same
+                // rendering as the final report's.
+                format!(
+                    "{{\"id\":{id},\"progress\":{{\"cycles\":{},\"ledger\":{lg},\
+                     \"phases\":{}}},\"state\":\"running\"}}",
+                    sink.cycles(),
+                    sink.phases()
+                )
             }
             // The report is already JSON — splice it in verbatim.
             JobState::Done(report) => {
@@ -344,7 +365,7 @@ impl JobTable {
         inner
             .map
             .values()
-            .filter(|s| matches!(s, JobState::Queued | JobState::Running))
+            .filter(|s| matches!(s, JobState::Queued | JobState::Running(_)))
             .count()
     }
 }
@@ -367,8 +388,20 @@ pub struct AppState {
     pub pool: WorkerPool,
     pub metrics: Metrics,
     jobs: JobTable,
+    /// Utilization / NoC gauges of the most recently completed
+    /// simulation, exported on `GET /metrics` (last writer wins).
+    run_gauges: Mutex<RunGauges>,
     draining: AtomicBool,
     started: Instant,
+}
+
+/// Per-cluster utilization and shared-NoC grant gauges sampled from the
+/// last completed simulation.
+#[derive(Default)]
+struct RunGauges {
+    /// (cluster index, unit name, utilization).
+    utilization: Vec<(usize, String, f64)>,
+    noc: NocStats,
 }
 
 impl AppState {
@@ -382,9 +415,23 @@ impl AppState {
             pool: WorkerPool::new(cfg.workers, cfg.queue_depth),
             metrics: Metrics::default(),
             jobs: JobTable::default(),
+            run_gauges: Mutex::new(RunGauges::default()),
             draining: AtomicBool::new(false),
             started: Instant::now(),
         }
+    }
+
+    /// Refresh the `GET /metrics` run gauges from a completed run.
+    fn store_run_gauges(&self, reports: &[&SimReport], noc: Option<&NocStats>) {
+        let utilization = reports
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, r)| {
+                r.units.iter().map(move |u| (ci, u.name.clone(), u.utilization()))
+            })
+            .collect();
+        *self.run_gauges.lock().unwrap() =
+            RunGauges { utilization, noc: noc.cloned().unwrap_or_default() };
     }
 
     /// Flag new keep-alive turns to stop (set before draining the pool).
@@ -566,10 +613,11 @@ fn handle_simulate(state: &Arc<AppState>, req: &Request) -> Response {
         return handle_simulate_detached(state, parsed);
     }
     let worker_state = state.clone();
-    let result = match run_on_pool(state, move || simulate_once(&worker_state, &parsed, None)) {
-        Ok(r) => r,
-        Err(resp) => return resp,
-    };
+    let result =
+        match run_on_pool(state, move || simulate_once(&worker_state, &parsed, None, None)) {
+            Ok(r) => r,
+            Err(resp) => return resp,
+        };
     match result {
         Ok((body, hit)) => Response::json(200, body)
             .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" }),
@@ -586,13 +634,14 @@ fn handle_simulate(state: &Arc<AppState>, req: &Request) -> Response {
 fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Response {
     let id = state.jobs.create();
     let worker_state = state.clone();
+    let sink = Arc::new(ProgressSink::new());
     let submitted = state.pool.submit(Box::new(move || {
-        worker_state.jobs.set(id, JobState::Running);
+        worker_state.jobs.set(id, JobState::Running(sink.clone()));
         // The pool survives panicking jobs; a detached one must also
         // leave a terminal state behind or pollers would see "running"
         // forever (and the entry would never be pruned).
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            simulate_once(&worker_state, &parsed, None)
+            simulate_once(&worker_state, &parsed, None, Some(sink.clone()))
         }));
         match outcome {
             Ok(Ok((body, _hit))) => worker_state.jobs.set(id, JobState::Done(body)),
@@ -641,16 +690,17 @@ fn simulate_once(
     state: &AppState,
     req: &SimRequest,
     func_threads: Option<usize>,
+    progress: Option<Arc<ProgressSink>>,
 ) -> Result<(String, bool), SimError> {
     if req.system.is_some() {
-        return simulate_system_once(state, req, func_threads);
+        return simulate_system_once(state, req, func_threads, progress);
     }
     let key = program_key(&req.graph, &req.cfg, &req.opts);
     let (cp, hit) = state
         .cache
         .get_or_insert_with(key, || compile(&req.graph, &req.cfg, &req.opts))
         .map_err(SimError::Compile)?;
-    let mut cluster = Cluster::new(&req.cfg);
+    let mut cluster = Cluster::new(&req.cfg).with_ledger(req.profile);
     match &state.phase_cache {
         Some(pc) => cluster = cluster.with_phase_cache(pc.clone()),
         None => cluster = cluster.with_memo(false),
@@ -658,10 +708,14 @@ fn simulate_once(
     if let Some(n) = func_threads {
         cluster = cluster.with_func_threads(n);
     }
+    if let Some(sink) = progress {
+        cluster = cluster.with_progress(sink);
+    }
     let report = cluster
         .run_mode(&cp.program, req.mode)
         .context("simulating workload")
         .map_err(SimError::Run)?;
+    state.store_run_gauges(&[&report], None);
     Ok((render_report(&cp, &req.cfg, &report), hit))
 }
 
@@ -671,6 +725,7 @@ fn simulate_system_once(
     state: &AppState,
     req: &SimRequest,
     func_threads: Option<usize>,
+    progress: Option<Arc<ProgressSink>>,
 ) -> Result<(String, bool), SimError> {
     let (sys, strategy) = req.system.as_ref().expect("system request");
     let key = system_key(&req.graph, sys, &req.opts, *strategy);
@@ -678,7 +733,10 @@ fn simulate_system_once(
         .sys_cache
         .get_or_insert_with(key, || compile_system(&req.graph, sys, &req.opts, *strategy))
         .map_err(SimError::Compile)?;
-    let mut system = System::new(sys);
+    let mut system = System::new(sys).with_ledger(req.profile);
+    if let Some(sink) = progress {
+        system = system.with_progress(sink);
+    }
     if sys.n_clusters() == 1 {
         // A system-of-1 keeps the standalone memoization behavior;
         // multi-cluster members run memo-off regardless (DESIGN.md §9).
@@ -694,6 +752,7 @@ fn simulate_system_once(
         .run_mode(&cs.programs(), req.mode)
         .context("simulating system")
         .map_err(SimError::Run)?;
+    state.store_run_gauges(&rep.clusters.iter().collect::<Vec<_>>(), Some(&rep.noc));
     Ok((render_system_report(&cs, &rep), hit))
 }
 
@@ -721,7 +780,7 @@ fn handle_sweep(state: &Arc<AppState>, req: &Request) -> Response {
         let kernel_cap =
             if threads > 1 { Some((workers / threads).max(1)) } else { None };
         parallel::map_indexed(jobs.len(), threads, |i| {
-            simulate_once(&worker_state, &jobs[i], kernel_cap)
+            simulate_once(&worker_state, &jobs[i], kernel_cap, None)
         })
     }) {
         Ok(r) => r,
@@ -826,28 +885,112 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         let _ = writeln!(out, "snax_request_latency_us_count{{endpoint=\"{name}\"}} {cumulative}");
     }
     let phase = state.phase_cache.as_ref().map(|p| p.stats()).unwrap_or_default();
-    let singles: [(&str, &str, u64); 14] = [
-        ("snax_cache_hits_total", "counter", state.cache.hits()),
-        ("snax_cache_misses_total", "counter", state.cache.misses()),
-        ("snax_cache_insertions_total", "counter", state.cache.insertions()),
-        ("snax_cache_evictions_total", "counter", state.cache.evictions()),
-        ("snax_cache_entries", "gauge", state.cache.len() as u64),
-        ("snax_phase_cache_hits_total", "counter", phase.hits),
-        ("snax_phase_cache_misses_total", "counter", phase.misses),
-        ("snax_phase_cache_insertions_total", "counter", phase.insertions),
-        ("snax_phase_cache_evictions_total", "counter", phase.evictions),
-        ("snax_phase_cache_replayed_cycles_total", "counter", phase.replayed_cycles),
-        ("snax_phase_cache_entries", "gauge", phase.entries),
-        ("snax_jobs_executed_total", "counter", state.pool.executed()),
-        ("snax_jobs_panicked_total", "counter", state.pool.panicked()),
-        ("snax_queue_length", "gauge", state.pool.queue_len() as u64),
+    let singles: [(&str, &str, &str, u64); 17] = [
+        ("snax_cache_hits_total", "counter", "Program-cache hits.", state.cache.hits()),
+        ("snax_cache_misses_total", "counter", "Program-cache misses.", state.cache.misses()),
+        (
+            "snax_cache_insertions_total",
+            "counter",
+            "Program-cache insertions.",
+            state.cache.insertions(),
+        ),
+        (
+            "snax_cache_evictions_total",
+            "counter",
+            "Program-cache evictions.",
+            state.cache.evictions(),
+        ),
+        ("snax_cache_entries", "gauge", "Program-cache entries.", state.cache.len() as u64),
+        ("snax_phase_cache_hits_total", "counter", "Phase-memo cache hits.", phase.hits),
+        ("snax_phase_cache_misses_total", "counter", "Phase-memo cache misses.", phase.misses),
+        (
+            "snax_phase_cache_insertions_total",
+            "counter",
+            "Phase-memo cache insertions.",
+            phase.insertions,
+        ),
+        (
+            "snax_phase_cache_evictions_total",
+            "counter",
+            "Phase-memo cache evictions.",
+            phase.evictions,
+        ),
+        (
+            "snax_phase_cache_replayed_cycles_total",
+            "counter",
+            "Simulated cycles served by phase replay.",
+            phase.replayed_cycles,
+        ),
+        ("snax_phase_cache_entries", "gauge", "Phase-memo cache entries.", phase.entries),
+        (
+            "snax_jobs_executed_total",
+            "counter",
+            "Worker-pool jobs executed.",
+            state.pool.executed(),
+        ),
+        (
+            "snax_jobs_panicked_total",
+            "counter",
+            "Worker-pool jobs that panicked.",
+            state.pool.panicked(),
+        ),
+        (
+            "snax_queue_length",
+            "gauge",
+            "Jobs currently waiting in the worker-pool queue.",
+            state.pool.queue_len() as u64,
+        ),
+        (
+            "snax_pool_queue_depth",
+            "gauge",
+            "Configured worker-pool queue capacity.",
+            state.pool.queue_depth() as u64,
+        ),
+        (
+            "snax_jobs_inflight",
+            "gauge",
+            "Detached jobs queued or running.",
+            state.jobs.pending() as u64,
+        ),
+        (
+            "snax_uptime_seconds",
+            "gauge",
+            "Seconds since the server started.",
+            state.started.elapsed().as_secs(),
+        ),
     ];
-    for (name, kind, value) in singles {
+    for (name, kind, help, value) in singles {
+        let _ = writeln!(out, "# HELP {name} {help}");
         let _ = writeln!(out, "# TYPE {name} {kind}");
         let _ = writeln!(out, "{name} {value}");
     }
-    let _ = writeln!(out, "# TYPE snax_uptime_seconds gauge");
-    let _ = writeln!(out, "snax_uptime_seconds {}", state.started.elapsed().as_secs());
+    // Gauges sampled from the most recently completed simulation.
+    let gauges = state.run_gauges.lock().unwrap();
+    let _ = writeln!(
+        out,
+        "# HELP snax_unit_utilization Datapath utilization per unit of the last completed run."
+    );
+    let _ = writeln!(out, "# TYPE snax_unit_utilization gauge");
+    for (ci, unit, util) in &gauges.utilization {
+        let _ = writeln!(
+            out,
+            "snax_unit_utilization{{cluster=\"{ci}\",unit=\"{unit}\"}} {util}"
+        );
+    }
+    let noc: [(&str, &str, u64); 3] = [
+        ("snax_noc_granted", "Shared-NoC beats granted in the last completed run.", gauges.noc.granted),
+        ("snax_noc_denied", "Shared-NoC beat denials in the last completed run.", gauges.noc.denied),
+        (
+            "snax_noc_busy_cycles",
+            "Shared-NoC link busy cycles in the last completed run.",
+            gauges.noc.busy_cycles,
+        ),
+    ];
+    for (name, help, value) in noc {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {value}");
+    }
     Response::text(200, &out)
 }
 
@@ -857,6 +1000,37 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
 
 fn mode_name(opts: &CompileOptions) -> String {
     format!("{:?}", opts.mode).to_lowercase()
+}
+
+/// Render an attribution ledger as JSON: per-row category cycles keyed
+/// by the stable [`ledger::CAT_NAMES`] wire names, plus the dominant
+/// non-compute bottleneck cause. Shared by the report envelopes, the
+/// `GET /jobs/:id` progress snapshots, and `snax profile --json` so
+/// the shapes cannot drift.
+pub fn ledger_json(lg: &LedgerReport) -> Value {
+    let rows: Vec<Value> = lg
+        .rows
+        .iter()
+        .map(|r| {
+            let cats: Vec<(&str, Value)> = ledger::CAT_NAMES
+                .iter()
+                .zip(r.cat.iter())
+                .map(|(&name, &v)| (name, Value::from(v)))
+                .collect();
+            Value::object([
+                ("name", Value::from(r.name.as_str())),
+                ("cats", Value::object(cats)),
+                (
+                    "bottleneck",
+                    r.bottleneck().map(|(c, _)| Value::from(c.name())).unwrap_or(Value::Null),
+                ),
+            ])
+        })
+        .collect();
+    Value::object([
+        ("total_cycles", Value::from(lg.total_cycles)),
+        ("rows", Value::Arr(rows)),
+    ])
 }
 
 /// Render a simulation report as deterministic JSON, reusing the
@@ -894,7 +1068,7 @@ pub fn render_report(cp: &CompiledProgram, cfg: &ClusterConfig, report: &SimRepo
         })
         .collect();
     let key = program_key(&cp.graph, cfg, &cp.options);
-    Value::object([
+    let mut fields = vec![
         ("net", Value::from(cp.graph.name.as_str())),
         ("cluster", Value::from(cfg.name.as_str())),
         ("mode", Value::from(mode_name(&cp.options))),
@@ -932,8 +1106,11 @@ pub fn render_report(cp: &CompiledProgram, cfg: &ClusterConfig, report: &SimRepo
                 ("avg_power_mw", Value::from(e.avg_power_mw())),
             ]),
         ),
-    ])
-    .to_json()
+    ];
+    if let Some(lg) = &report.ledger {
+        fields.push(("ledger", ledger_json(lg)));
+    }
+    Value::object(fields).to_json()
 }
 
 /// Render a system run as deterministic JSON: the system envelope
@@ -950,7 +1127,7 @@ pub fn render_system_report(cs: &CompiledSystem, rep: &SystemReport) -> String {
         .zip(&sys.clusters)
         .map(|(r, cfg)| energy::energy(r, cfg).total_uj())
         .sum();
-    let head = Value::object([
+    let mut fields = vec![
         ("net", Value::from(cs.net.as_str())),
         ("system", Value::from(sys.name.as_str())),
         ("partition", Value::from(cs.plan.strategy.name())),
@@ -964,11 +1141,21 @@ pub fn render_system_report(cs: &CompiledSystem, rep: &SystemReport) -> String {
                 ("granted", Value::from(rep.noc.granted)),
                 ("denied", Value::from(rep.noc.denied)),
                 ("barrier_releases", Value::from(rep.noc.barrier_releases)),
+                ("busy_cycles", Value::from(rep.noc.busy_cycles)),
             ]),
         ),
         ("energy", Value::object([("total_uj", Value::from(total_uj))])),
-    ])
-    .to_json();
+    ];
+    // Profiled runs get the shared link's own attribution row next to
+    // the per-member ledgers in the cluster fragments.
+    if rep.clusters.iter().any(|r| r.ledger.is_some()) {
+        let row = ledger::noc_row(rep.noc.busy_cycles, rep.total_cycles);
+        fields.push((
+            "noc_ledger",
+            ledger_json(&LedgerReport { total_cycles: rep.total_cycles, rows: vec![row] }),
+        ));
+    }
+    let head = Value::object(fields).to_json();
     let members: Vec<String> = cs
         .parts
         .iter()
@@ -1269,6 +1456,121 @@ mod tests {
         assert!(text.contains("snax_phase_cache_hits_total 0"));
         assert!(text.contains("snax_phase_cache_misses_total 0"));
         assert!(text.contains("snax_phase_cache_entries 0"));
+        st.pool.shutdown();
+    }
+
+    /// Minimal Prometheus text-format lint: every family is declared
+    /// by `# HELP` then `# TYPE` (once each, valid type), every sample
+    /// line parses as `name[{labels}] value`, and histogram suffixes
+    /// only extend declared histogram families.
+    fn lint_prometheus(text: &str) {
+        let mut help: std::collections::HashSet<String> = Default::default();
+        let mut types: HashMap<String, String> = HashMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split_whitespace().next().unwrap_or("");
+                assert!(!name.is_empty(), "line {ln}: HELP without a metric name");
+                assert!(help.insert(name.to_string()), "line {ln}: duplicate HELP {name}");
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().unwrap_or("");
+                let kind = it.next().unwrap_or("");
+                assert!(
+                    ["counter", "gauge", "histogram"].contains(&kind),
+                    "line {ln}: bad type '{kind}'"
+                );
+                assert!(
+                    help.contains(name),
+                    "line {ln}: TYPE for {name} without a preceding HELP"
+                );
+                assert!(
+                    types.insert(name.into(), kind.into()).is_none(),
+                    "line {ln}: duplicate TYPE {name}"
+                );
+                continue;
+            }
+            assert!(!line.starts_with('#'), "line {ln}: unknown comment '{line}'");
+            let (series, value) = line
+                .rsplit_once(' ')
+                .unwrap_or_else(|| panic!("line {ln}: no value in '{line}'"));
+            assert!(value.parse::<f64>().is_ok(), "line {ln}: bad value '{value}'");
+            let name = series.split('{').next().unwrap();
+            assert!(
+                !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "line {ln}: bad metric name '{name}'"
+            );
+            if series.contains('{') {
+                assert!(series.ends_with('}'), "line {ln}: unterminated labels '{series}'");
+            }
+            let family = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| {
+                    let base = name.strip_suffix(suf)?;
+                    (types.get(base).map(String::as_str) == Some("histogram"))
+                        .then(|| base.to_string())
+                })
+                .unwrap_or_else(|| name.to_string());
+            assert!(
+                types.contains_key(&family),
+                "line {ln}: sample '{name}' has no # TYPE declaration"
+            );
+        }
+        assert!(!types.is_empty(), "no metric families rendered");
+    }
+
+    #[test]
+    fn metrics_pass_prometheus_text_lint() {
+        let st = state();
+        let _ = route(&st, &get("/healthz"));
+        // A completed run populates the utilization / NoC gauges.
+        let sim = route(&st, &post("/simulate", r#"{"net":"fig6a","cluster":"fig6c"}"#));
+        assert_eq!(sim.status, 200, "{}", String::from_utf8_lossy(&sim.body));
+        let resp = route(&st, &get("/metrics"));
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body).unwrap();
+        lint_prometheus(&text);
+        assert!(text.contains("# HELP snax_pool_queue_depth"), "{text}");
+        assert!(text.contains("snax_pool_queue_depth 16"), "{text}");
+        assert!(text.contains("snax_jobs_inflight 0"), "{text}");
+        assert!(text.contains("snax_unit_utilization{cluster=\"0\",unit=\"gemm0\"}"), "{text}");
+        assert!(text.contains("snax_noc_granted 0"), "{text}");
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn profiled_simulate_reports_a_conserving_ledger() {
+        let st = state();
+        let body = r#"{"net":"fig6a","cluster":"fig6c","profile":true}"#;
+        let resp = route(&st, &post("/simulate", body));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let total = v.get("total_cycles").unwrap().as_u64().unwrap();
+        let lg = v.get("ledger").expect("profiled response must carry a ledger");
+        assert_eq!(lg.get("total_cycles").unwrap().as_u64(), Some(total));
+        let rows = lg.get("rows").unwrap().as_arr().unwrap();
+        assert!(!rows.is_empty());
+        for r in rows {
+            let cats = r.get("cats").unwrap();
+            let sum: u64 = ledger::CAT_NAMES
+                .iter()
+                .map(|&n| cats.get(n).unwrap().as_u64().unwrap())
+                .sum();
+            assert_eq!(sum, total, "envelope rows must conserve cycles");
+        }
+        // The plain body stays ledger-free (and byte-stable).
+        let plain =
+            route(&st, &post("/simulate", r#"{"net":"fig6a","cluster":"fig6c"}"#));
+        assert_eq!(plain.status, 200);
+        let pv = json::parse(std::str::from_utf8(&plain.body).unwrap()).unwrap();
+        assert!(pv.get("ledger").is_none(), "unprofiled response must not carry a ledger");
         st.pool.shutdown();
     }
 

@@ -39,7 +39,7 @@ use crate::config::ServerConfig;
 
 use api::AppState;
 
-pub use api::{render_report, render_sweep_body, render_system_report};
+pub use api::{ledger_json, render_report, render_sweep_body, render_system_report};
 
 /// How long an idle keep-alive connection may sit between requests.
 const READ_TIMEOUT: Duration = Duration::from_secs(30);

@@ -44,6 +44,7 @@ use super::csr::CsrFile;
 use super::dma::{DmaDir, DmaJob};
 use super::functional::{apply_op_scratch, FnScratch};
 use super::job::OpDesc;
+use super::ledger::{self, Cat, LedgerReport, LedgerRow, ProgressSink, NCATS};
 use super::mem::{ExtMem, Spm};
 use super::phase::{
     self, CtrlSnap, EntryAddrClass, FnEffect, LayerDelta, PhaseCache, PhaseRecord,
@@ -204,11 +205,41 @@ pub struct Cluster {
     /// Shared phase cache (sweep batches, `snax serve`). `None` = a
     /// private per-run cache.
     phase_cache: Option<Arc<PhaseCache>>,
+    /// Cycle-accounting attribution ledger (DESIGN.md §10). Off by
+    /// default: the off path constructs nothing.
+    ledger: bool,
+    /// Live progress sink for detached server jobs.
+    progress: Option<Arc<ProgressSink>>,
 }
 
 impl Cluster {
     pub fn new(cfg: &ClusterConfig) -> Self {
-        Self { cfg: cfg.clone(), func_threads: None, memo: true, phase_cache: None }
+        Self {
+            cfg: cfg.clone(),
+            func_threads: None,
+            memo: true,
+            phase_cache: None,
+            ledger: false,
+            progress: None,
+        }
+    }
+
+    /// Enable the cycle-accounting attribution ledger: the report gains
+    /// a [`LedgerReport`](super::ledger::LedgerReport) classifying every
+    /// unit's cycles into stall-cause categories under a conservation
+    /// invariant (DESIGN.md §10). Same zero-cost-off discipline as
+    /// tracing: without this call no ledger state is built.
+    pub fn with_ledger(mut self, on: bool) -> Self {
+        self.ledger = on;
+        self
+    }
+
+    /// Attach a live progress sink: the engine publishes cycles
+    /// simulated and phase transitions every quantum, plus ledger
+    /// snapshots at phase boundaries (when the ledger is enabled).
+    pub fn with_progress(mut self, sink: Arc<ProgressSink>) -> Self {
+        self.progress = Some(sink);
+        self
     }
 
     /// Enable/disable barrier-delimited phase memoization for the event
@@ -298,6 +329,10 @@ impl Cluster {
         let mut st = SimState::new(&self.cfg, program, self.func_threads)?;
         st.memo_on = self.memo;
         st.shared_phase_cache = self.phase_cache.clone();
+        if self.ledger {
+            st.enable_ledger();
+        }
+        st.progress = self.progress.clone();
         Ok(st)
     }
 }
@@ -334,6 +369,15 @@ pub(crate) struct SimState<'p> {
     /// only by [`SimState::enable_trace`]: non-traced runs record no
     /// events and intern no `Arc<str>` labels at all.
     trace: Option<Box<TraceCtx>>,
+    /// Opt-in cycle-accounting ledger (per-core category tallies +
+    /// attribution frontiers). Built only by
+    /// [`SimState::enable_ledger`] — the off path holds a `None` and
+    /// pays one branch per charge site.
+    ledger: Option<Box<LedgerCtx>>,
+    /// Live progress sink (detached server jobs); `None` elsewhere.
+    progress: Option<Arc<ProgressSink>>,
+    /// Barrier events already published to the progress sink.
+    progress_events: u64,
     mode: SimMode,
     /// Phase memoization requested (event engine only); see
     /// [`super::phase`].
@@ -424,6 +468,19 @@ thread_local! {
     /// Counts `TraceCtx` constructions on this thread — the zero-cost
     /// contract of the non-traced path is asserted against it.
     static TRACE_CTX_BUILDS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    /// Same contract for the attribution ledger.
+    static LEDGER_CTX_BUILDS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Live cycle-accounting state: per-core category tallies plus each
+/// core's attribution *frontier* — the next cycle not yet accounted.
+/// Charges always start exactly at the frontier (busy instructions
+/// charge as they execute; gaps behind an arrested core are swept at
+/// every clock advance), so per-core sums equal elapsed cycles by
+/// construction — the conservation invariant.
+struct LedgerCtx {
+    cores: Vec<[u64; NCATS]>,
+    frontier: Vec<u64>,
 }
 
 /// Where the value of a DMA `SRC`/`DST` register came from, relative to
@@ -468,6 +525,9 @@ struct Recording {
     /// per unit `(src, dst)`.
     entry_canon: Vec<(bool, bool)>,
     entry_lock: Vec<(bool, bool)>,
+    /// Per-core ledger tallies at phase entry (empty unless ledgered):
+    /// the finalized record stores end − base as additive deltas.
+    ledger_base: Vec<[u64; NCATS]>,
 }
 
 /// Live phase-memoization state of one run.
@@ -619,6 +679,9 @@ impl<'p> SimState<'p> {
             was_busy: vec![false; flat_keys.len()],
             group_req: vec![0; groups.len()],
             trace: None,
+            ledger: None,
+            progress: None,
+            progress_events: 0,
             mode: SimMode::Event,
             memo_on: true,
             shared_phase_cache: None,
@@ -661,6 +724,23 @@ impl<'p> SimState<'p> {
         }));
     }
 
+    /// Build the cycle-accounting ledger context. The only entry point:
+    /// a run without this call performs no attribution work at all
+    /// (same zero-cost-off contract as [`enable_trace`](Self::enable_trace)).
+    pub(crate) fn enable_ledger(&mut self) {
+        #[cfg(test)]
+        LEDGER_CTX_BUILDS.with(|c| c.set(c.get() + 1));
+        let n = self.cfg.cores.len();
+        self.ledger = Some(Box::new(LedgerCtx {
+            cores: vec![[0; NCATS]; n],
+            frontier: vec![0; n],
+        }));
+    }
+
+    pub(crate) fn set_progress(&mut self, sink: Option<Arc<ProgressSink>>) {
+        self.progress = sink;
+    }
+
     fn run(mut self) -> Result<SimReport> {
         self.prepare();
         loop {
@@ -692,6 +772,9 @@ impl<'p> SimState<'p> {
     /// driver share this body, so a system-of-1 executes the exact
     /// same schedule as a standalone cluster.
     pub(crate) fn step_quantum(&mut self) -> Result<Quantum> {
+        if let Some(sink) = self.progress.clone() {
+            self.publish_progress(&sink);
+        }
         let units_idle = self.units.iter().all(|u| u.idle());
         let cores_done = self.cores.iter().all(|c| c.done);
         if cores_done && units_idle {
@@ -758,6 +841,7 @@ impl<'p> SimState<'p> {
                 // the other clusters' arrivals (DESIGN.md §9).
                 self.cycle =
                     if sys_blocked { (self.cycle + 1).min(min_wake) } else { min_wake };
+                self.ledger_sweep();
                 return Ok(Quantum::Progress);
             }
         } else if self.mode == SimMode::Event && self.cycle >= self.next_plan_at {
@@ -768,6 +852,7 @@ impl<'p> SimState<'p> {
             if let Some(span) = self.plan_span() {
                 self.apply_span(&span);
                 self.plan_backoff = 1;
+                self.ledger_sweep();
                 return Ok(Quantum::Progress);
             }
             self.next_plan_at = self.cycle + self.plan_backoff;
@@ -775,6 +860,7 @@ impl<'p> SimState<'p> {
         }
         self.tick()?;
         self.cycle += 1;
+        self.ledger_sweep();
         // A barrier release ends the current phase; the boundary
         // state is the top of the next quantum.
         if let Some(m) = &mut self.memo {
@@ -869,6 +955,93 @@ impl<'p> SimState<'p> {
             )
     }
 
+    // -- cycle-accounting ledger (DESIGN.md §10) ----------------------------
+
+    /// Charge `cycles` of category `cat` to core `ci` starting at
+    /// `start`. Charges always begin exactly at the core's frontier
+    /// (sleep/poll charges pre-pay up to the wake time; gaps behind
+    /// arrested cores are closed by [`ledger_sweep`](Self::ledger_sweep)
+    /// before any further charge), so the tallies tile the timeline
+    /// with no overlap and no hole.
+    #[inline]
+    fn ledger_charge(&mut self, ci: usize, cat: Cat, start: u64, cycles: u64) {
+        if let Some(lg) = self.ledger.as_deref_mut() {
+            lg.cores[ci][cat as usize] += cycles;
+            lg.frontier[ci] = start + cycles;
+        }
+    }
+
+    /// Close attribution gaps up to the current cycle: any core whose
+    /// frontier lags was arrested the whole gap (done, or arrived at an
+    /// unreleased barrier) — classify those cycles now. Called at every
+    /// clock-advance point, which also guarantees phase-boundary
+    /// snapshots always see gap-free tallies (the memo-soundness
+    /// precondition for recording ledger deltas).
+    fn ledger_sweep(&mut self) {
+        let Some(lg) = self.ledger.as_deref_mut() else { return };
+        let cyc = self.cycle;
+        for (ci, c) in self.cores.iter().enumerate() {
+            let f = lg.frontier[ci];
+            if f >= cyc {
+                continue; // current, or pre-paid through a sleep/poll
+            }
+            let cat = if c.done {
+                Cat::Idle
+            } else if c.barrier_arrived {
+                match self.program.streams[ci].get(c.pc) {
+                    Some(Instr::Barrier { id, .. }) if id.0 >= SYS_BARRIER_BASE => {
+                        Cat::SysBarrierWait
+                    }
+                    _ => Cat::BarrierWait,
+                }
+            } else {
+                // A runnable core never skips a cycle in either engine;
+                // defensive only.
+                Cat::Idle
+            };
+            lg.cores[ci][cat as usize] += cyc - f;
+            lg.frontier[ci] = cyc;
+        }
+    }
+
+    /// Assemble the ledger report from the live tallies plus the
+    /// engine-identical unit stats: core rows carry the swept tallies,
+    /// accelerator and DMA rows are derived in closed form
+    /// (`ledger::accel_row` / `ledger::dma_row`).
+    fn build_ledger_report(&self, total: u64) -> LedgerReport {
+        let lg = self.ledger.as_deref().expect("ledger enabled");
+        let mut rows: Vec<LedgerRow> = lg
+            .cores
+            .iter()
+            .enumerate()
+            .map(|(ci, cat)| LedgerRow { name: format!("core{ci}"), cat: *cat })
+            .collect();
+        for u in &self.units {
+            rows.push(match u.kind {
+                UnitKind::Accel(_) => ledger::accel_row(&u.stats, total),
+                UnitKind::Dma => {
+                    ledger::dma_row(&u.stats, total, self.counters.noc_stall_cycles)
+                }
+            });
+        }
+        LedgerReport { total_cycles: total, rows }
+    }
+
+    /// Publish live progress: cycles every quantum, phase transitions
+    /// (barrier releases) as they happen, and — for ledgered runs — a
+    /// ledger snapshot at each phase boundary.
+    fn publish_progress(&mut self, sink: &Arc<ProgressSink>) {
+        sink.advance_cycles(self.cycle);
+        let ev = self.counters.barrier_events;
+        if ev != self.progress_events {
+            sink.add_phases(ev - self.progress_events);
+            self.progress_events = ev;
+            if self.ledger.is_some() {
+                sink.store_ledger(self.build_ledger_report(self.cycle));
+            }
+        }
+    }
+
     // -- phase memoization (DESIGN.md §8) -----------------------------------
 
     fn init_memo(&mut self) {
@@ -891,7 +1064,12 @@ impl<'p> SimState<'p> {
             .shared_phase_cache
             .clone()
             .unwrap_or_else(|| Arc::new(PhaseCache::for_run()));
-        let seed = phase::phase_seed(self.cfg, self.program, self.trace.is_some());
+        let seed = phase::phase_seed(
+            self.cfg,
+            self.program,
+            self.trace.is_some(),
+            self.ledger.is_some(),
+        );
         self.memo = Some(MemoCtx {
             cache,
             seed,
@@ -965,6 +1143,7 @@ impl<'p> SimState<'p> {
             units,
             barriers: self.barriers.snapshot(),
             traced: self.trace.is_some(),
+            ledgered: self.ledger.is_some(),
         }
     }
 
@@ -1056,6 +1235,11 @@ impl<'p> SimState<'p> {
             lock_sites: HashSet::new(),
             entry_canon: vec![(false, false); n_units],
             entry_lock: vec![(false, false); n_units],
+            ledger_base: self
+                .ledger
+                .as_deref()
+                .map(|lg| lg.cores.clone())
+                .unwrap_or_default(),
         });
     }
 
@@ -1140,6 +1324,7 @@ impl<'p> SimState<'p> {
                 == rec.counters_base.bank_conflict_cycles,
             start_mod: if m.l_mod <= 1 { 0 } else { rec.start_cycle % m.l_mod },
             traced: rec.entry.traced,
+            ledgered: rec.entry.ledgered,
             entry_dma_class,
             windows,
             pc_delta,
@@ -1179,6 +1364,23 @@ impl<'p> SimState<'p> {
             layers: rec.layers.into_iter().collect(),
             effects: rec.effects,
             trace_segs,
+            ledger_deltas: self
+                .ledger
+                .as_deref()
+                .map(|lg| {
+                    lg.cores
+                        .iter()
+                        .zip(&rec.ledger_base)
+                        .map(|(now, base)| {
+                            let mut d = [0u64; NCATS];
+                            for (i, v) in d.iter_mut().enumerate() {
+                                *v = now[i] - base[i];
+                            }
+                            d
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
             entry: rec.entry,
         };
         m.cache.insert(rec.fp, record);
@@ -1309,6 +1511,22 @@ impl<'p> SimState<'p> {
                 class: s.class,
                 op: s.op.clone(),
             });
+        }
+        // Re-attribute the phase's ledger deltas at the new time base.
+        // Attribution sums are position-independent (pure additive), and
+        // every charge ends exactly at the owning core's wake time (or
+        // at the boundary, gap-swept), so the restored frontier is the
+        // recorded end snapshot's wake offset — identical to what live
+        // simulation of the phase would have left behind.
+        if let Some(lg) = self.ledger.as_deref_mut() {
+            for (ci, (tal, d)) in
+                lg.cores.iter_mut().zip(&rec.ledger_deltas).enumerate()
+            {
+                for (i, v) in tal.iter_mut().enumerate() {
+                    *v += d[i];
+                }
+                lg.frontier[ci] = pe + rec.end.cores[ci].wake_rel;
+            }
         }
         let entries: Vec<(u16, u64, u8)> = rec
             .end
@@ -1743,13 +1961,20 @@ impl<'p> SimState<'p> {
             if let Some(u) = bc.launch_stall_unit {
                 self.units[u].csr.launch_stall_cycles += n;
             }
-            self.core_busy_batch(bc.core, self.cycle, 1, n, 1);
+            self.core_busy_batch(bc.core, self.cycle, 1, n, 1, Cat::LaunchStall);
         }
         let end = self.cycle + n;
         for p in &sp.pollers {
             if p.first_poll < end {
                 let polls = (end - 1 - p.first_poll) / POLL_INTERVAL + 1;
-                self.core_busy_batch(p.core, p.first_poll, POLL_INTERVAL, polls, POLL_INTERVAL);
+                self.core_busy_batch(
+                    p.core,
+                    p.first_poll,
+                    POLL_INTERVAL,
+                    polls,
+                    POLL_INTERVAL,
+                    Cat::Poll,
+                );
                 self.cores[p.core].wake_at = p.first_poll + polls * POLL_INTERVAL;
             }
         }
@@ -1758,12 +1983,24 @@ impl<'p> SimState<'p> {
 
     /// Batched [`core_busy`](Self::core_busy): `count` busy events of
     /// `width` cycles each, at times `t_first, t_first + step, ...`.
-    fn core_busy_batch(&mut self, ci: usize, t_first: u64, step: u64, count: u64, width: u64) {
+    /// At both call sites `step == width`, so the charges tile
+    /// `[t_first, t_first + count*step)` exactly — the ledger frontier
+    /// advances to that end.
+    fn core_busy_batch(
+        &mut self,
+        ci: usize,
+        t_first: u64,
+        step: u64,
+        count: u64,
+        width: u64,
+        cat: Cat,
+    ) {
         if count == 0 {
             return;
         }
         let total = count * width;
         self.counters.core_busy_cycles[ci] += total;
+        self.ledger_charge(ci, cat, t_first, total);
         if let Some((layer, class)) = self.cores[ci].layer {
             let t_last = t_first + (count - 1) * step;
             self.memo_note_layer(layer, Some(class), t_first, t_last + width, total);
@@ -1793,8 +2030,10 @@ impl<'p> SimState<'p> {
 
     // -- cores ---------------------------------------------------------------
 
-    fn core_busy(&mut self, ci: usize, cycles: u64) {
+    fn core_busy(&mut self, ci: usize, cycles: u64, cat: Cat) {
         self.counters.core_busy_cycles[ci] += cycles;
+        let start = self.cycle;
+        self.ledger_charge(ci, cat, start, cycles);
         if let Some((layer, class)) = self.cores[ci].layer {
             let cycle = self.cycle;
             self.memo_note_layer(layer, Some(class), cycle, cycle + cycles, cycles);
@@ -1872,12 +2111,13 @@ impl<'p> SimState<'p> {
                         let u = &mut self.units[ui];
                         let busy = u.job.is_some();
                         let (reg, val) = (*reg, *val);
-                        if u.csr.try_write(reg, val, busy) {
+                        let landed = u.csr.try_write(reg, val, busy);
+                        if landed {
                             self.cores[ci].pc += 1;
                             self.counters.csr_writes += 1;
                             self.memo_note_dma_write(ui, reg, ci, pc);
                         }
-                        self.core_busy(ci, 1);
+                        self.core_busy(ci, 1, if landed { Cat::Compute } else { Cat::LaunchStall });
                         break;
                     }
                     Instr::Launch { unit } => {
@@ -1885,20 +2125,21 @@ impl<'p> SimState<'p> {
                         let layer = self.cores[ci].layer.map(|(l, _)| l).unwrap_or(u16::MAX);
                         let u = &mut self.units[ui];
                         let busy = u.job.is_some();
-                        if u.csr.try_launch(layer, busy) {
+                        let landed = u.csr.try_launch(layer, busy);
+                        if landed {
                             self.cores[ci].pc += 1;
                             self.memo_note_dma_launch(ui);
                         }
-                        self.core_busy(ci, 1);
+                        self.core_busy(ci, 1, if landed { Cat::Compute } else { Cat::LaunchStall });
                         break;
                     }
                     Instr::AwaitIdle { unit } => {
                         if self.units[unit.0 as usize].idle() {
                             self.cores[ci].pc += 1;
-                            self.core_busy(ci, 1);
+                            self.core_busy(ci, 1, Cat::Compute);
                         } else {
                             self.cores[ci].wake_at = self.cycle + POLL_INTERVAL;
-                            self.core_busy(ci, POLL_INTERVAL);
+                            self.core_busy(ci, POLL_INTERVAL, Cat::Poll);
                         }
                         break;
                     }
@@ -1942,16 +2183,16 @@ impl<'p> SimState<'p> {
                                 SysBarStep::Cross => {
                                     self.cores[ci].barrier_arrived = false;
                                     self.cores[ci].pc += 1;
-                                    self.core_busy(ci, 1);
+                                    self.core_busy(ci, 1, Cat::Compute);
                                 }
                                 SysBarStep::Released => {
                                     self.counters.barrier_events += 1;
                                     self.cores[ci].pc += 1;
-                                    self.core_busy(ci, 1);
+                                    self.core_busy(ci, 1, Cat::Compute);
                                 }
                                 SysBarStep::Wait => {
                                     self.cores[ci].barrier_arrived = true;
-                                    self.core_busy(ci, 1);
+                                    self.core_busy(ci, 1, Cat::Compute);
                                 }
                             }
                             break;
@@ -1962,7 +2203,7 @@ impl<'p> SimState<'p> {
                             }
                             self.cores[ci].barrier_arrived = false;
                             self.cores[ci].pc += 1;
-                            self.core_busy(ci, 1);
+                            self.core_busy(ci, 1, Cat::Compute);
                             break;
                         }
                         let released = self.barriers.arrive(id, ci, participants);
@@ -1972,13 +2213,13 @@ impl<'p> SimState<'p> {
                         } else {
                             self.cores[ci].barrier_arrived = true;
                         }
-                        self.core_busy(ci, 1);
+                        self.core_busy(ci, 1, Cat::Compute);
                         break;
                     }
                     Instr::Sw { kernel } => {
                         let cycles = kernel.cycles.max(1);
                         self.cores[ci].wake_at = self.cycle + cycles;
-                        self.core_busy(ci, cycles);
+                        self.core_busy(ci, cycles, Cat::Compute);
                         let layer = self.cores[ci].layer;
                         let cycle = self.cycle;
                         if let Some(tc) = self.trace.as_deref_mut() {
@@ -2458,8 +2699,24 @@ impl<'p> SimState<'p> {
                 .map(|s| s.stats.conflict_cycles)
                 .sum();
         }
+        // Close the books: sweep any core still behind the final clock
+        // (e.g. a core that finished early idles to the end), then
+        // build the attribution report against the final cycle count.
+        let ledger = if self.ledger.is_some() {
+            self.ledger_sweep();
+            Some(self.build_ledger_report(self.cycle))
+        } else {
+            None
+        };
+        if let Some(sink) = self.progress.clone() {
+            sink.advance_cycles(self.cycle);
+            if let Some(lg) = &ledger {
+                sink.store_ledger(lg.clone());
+            }
+        }
         SimReport {
             trace: self.trace.map(|tc| tc.trace),
+            ledger,
             total_cycles: self.cycle,
             counters: self.counters,
             units: self.units.into_iter().map(|u| u.stats).collect(),
@@ -2847,6 +3104,83 @@ mod tests {
         let (_, trace) = cluster.run_traced(&program).unwrap();
         assert_eq!(TRACE_CTX_BUILDS.with(|c| c.get()), base + 1);
         assert!(!trace.events.is_empty());
+    }
+
+    #[test]
+    fn unledgered_runs_build_no_ledger_ctx() {
+        let cfg = ClusterConfig::fig6b();
+        let program = dma_program(4, 256);
+        let base = LEDGER_CTX_BUILDS.with(|c| c.get());
+        let plain = Cluster::new(&cfg).run(&program).unwrap();
+        assert!(plain.ledger.is_none(), "unledgered run must carry no ledger");
+        assert_eq!(
+            LEDGER_CTX_BUILDS.with(|c| c.get()),
+            base,
+            "off path must not build a LedgerCtx (zero-cost-off)"
+        );
+        let profiled = Cluster::new(&cfg).with_ledger(true).run(&program).unwrap();
+        assert_eq!(LEDGER_CTX_BUILDS.with(|c| c.get()), base + 1);
+        let lg = profiled.ledger.expect("profiled run must carry a ledger");
+        assert_eq!(lg.conservation_error(), None);
+        // The ledger rides along; everything else is untouched.
+        assert_eq!(plain.total_cycles, profiled.total_cycles);
+        assert_eq!(plain.counters, profiled.counters);
+    }
+
+    #[test]
+    fn ledger_conserves_and_agrees_across_engines_and_memo_replay() {
+        let cfg = ClusterConfig::fig6c();
+        let program = repeated_phase_program(6);
+        let cache = Arc::new(super::super::phase::PhaseCache::new(64));
+        let memo = Cluster::new(&cfg)
+            .with_ledger(true)
+            .with_phase_cache(cache.clone())
+            .run(&program)
+            .unwrap();
+        // Second run over the shared cache replays from the first
+        // phase, exercising the delta re-attribution path throughout.
+        let memo2 = Cluster::new(&cfg)
+            .with_ledger(true)
+            .with_phase_cache(cache.clone())
+            .run(&program)
+            .unwrap();
+        assert!(cache.hits() > 0, "replay must actually happen: {:?}", cache.stats());
+        let off =
+            Cluster::new(&cfg).with_ledger(true).with_memo(false).run(&program).unwrap();
+        let exact = Cluster::new(&cfg).with_ledger(true).run_exact(&program).unwrap();
+        // Whole-report equality covers the ledger (it is a PartialEq
+        // field): event == exact == memo-on == replayed, byte for byte.
+        assert_eq!(exact, off);
+        assert_eq!(exact, memo);
+        assert_eq!(exact, memo2);
+        let lg = exact.ledger.as_ref().unwrap();
+        assert_eq!(lg.conservation_error(), None);
+        assert_eq!(lg.total_cycles, exact.total_cycles);
+        // This workload polls and synchronizes: the attribution must
+        // actually see those causes, not lump everything into one bin.
+        let polled: u64 = lg.rows.iter().map(|r| r.get(Cat::Poll)).sum();
+        assert!(polled > 0, "AwaitIdle loops must attribute poll cycles");
+    }
+
+    #[test]
+    fn unledgered_records_never_serve_ledgered_runs() {
+        let cfg = ClusterConfig::fig6c();
+        let program = repeated_phase_program(4);
+        let cache = Arc::new(super::super::phase::PhaseCache::new(64));
+        let plain =
+            Cluster::new(&cfg).with_phase_cache(cache.clone()).run(&program).unwrap();
+        // A ledgered run over the same cache must not replay unledgered
+        // records (their deltas would be silently empty).
+        let profiled = Cluster::new(&cfg)
+            .with_ledger(true)
+            .with_phase_cache(cache.clone())
+            .run(&program)
+            .unwrap();
+        assert_eq!(plain.total_cycles, profiled.total_cycles);
+        let lg = profiled.ledger.expect("ledgered run must carry a ledger");
+        assert_eq!(lg.conservation_error(), None);
+        let exact = Cluster::new(&cfg).with_ledger(true).run_exact(&program).unwrap();
+        assert_eq!(exact.ledger.as_ref().unwrap(), &lg);
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Cycle-accounting attribution ledger (DESIGN.md §10).
+//!
+//! Every unit of a cluster — cores, accelerators, the DMA engine, and
+//! (at the system level) the shared NoC link — classifies each of its
+//! cycles into an exhaustive category set, under a hard **conservation
+//! invariant**: per row, the category sums equal the run's total
+//! cycles. Both engines produce byte-identical ledgers (the equivalence
+//! suites compare whole [`SimReport`](super::trace::SimReport)s,
+//! ledger included), and phase-memo replay re-attributes ledger deltas
+//! exactly as it does counters.
+//!
+//! Construction is opt-in ([`Cluster::with_ledger`](super::cluster::Cluster::with_ledger));
+//! the off path builds nothing — the same zero-cost discipline as the
+//! trace context.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::trace::UnitStats;
+
+/// Number of attribution categories.
+pub const NCATS: usize = 9;
+
+/// One attribution category. The set is exhaustive by construction:
+/// every simulated cycle of every row lands in exactly one bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Cat {
+    /// The row did architecturally useful work (core executed an
+    /// instruction or software kernel; accelerator datapath stepped;
+    /// DMA moved a beat; NoC link carried a grant).
+    Compute = 0,
+    /// Accelerator active cycles spent waiting for input beats (the
+    /// reader streamers had not delivered).
+    DmaWait = 1,
+    /// Cycles lost to scratchpad bank pressure: streamer arbitration
+    /// conflicts, output-FIFO backpressure, and end-of-job drain.
+    BankConflict = 2,
+    /// Core cycles arrested at an unreleased local barrier.
+    BarrierWait = 3,
+    /// Core cycles arrested at an unreleased cross-cluster (system)
+    /// barrier.
+    SysBarrierWait = 4,
+    /// DMA active cycles denied the shared NoC link by other clusters'
+    /// traffic (always 0 outside a contended multi-cluster system).
+    NocDenied = 5,
+    /// Core cycles re-executing a stalled CSR write or launch
+    /// handshake against a busy unit.
+    LaunchStall = 6,
+    /// Core cycles spent in `AwaitIdle` poll loops.
+    Poll = 7,
+    /// No job, no instruction, nothing pending.
+    Idle = 8,
+}
+
+impl Cat {
+    pub const ALL: [Cat; NCATS] = [
+        Cat::Compute,
+        Cat::DmaWait,
+        Cat::BankConflict,
+        Cat::BarrierWait,
+        Cat::SysBarrierWait,
+        Cat::NocDenied,
+        Cat::LaunchStall,
+        Cat::Poll,
+        Cat::Idle,
+    ];
+
+    pub fn name(self) -> &'static str {
+        CAT_NAMES[self as usize]
+    }
+}
+
+/// Stable wire names, indexed by `Cat as usize` (the `snax profile`
+/// JSON envelope and the server's ledger rollups key on these).
+pub const CAT_NAMES: [&str; NCATS] = [
+    "compute",
+    "dma-wait",
+    "bank-conflict",
+    "barrier-wait",
+    "sys-barrier-wait",
+    "noc-denied",
+    "launch-stall",
+    "poll",
+    "idle",
+];
+
+/// One row of the ledger: a unit's cycles split across the categories.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct LedgerRow {
+    pub name: String,
+    /// Cycles per category, indexed by `Cat as usize`.
+    pub cat: [u64; NCATS],
+}
+
+impl LedgerRow {
+    pub fn get(&self, c: Cat) -> u64 {
+        self.cat[c as usize]
+    }
+
+    /// Sum over categories — equals the run's total cycles when the
+    /// conservation invariant holds.
+    pub fn total(&self) -> u64 {
+        self.cat.iter().sum()
+    }
+
+    /// Fraction of this row's cycles in `c`.
+    pub fn share(&self, c: Cat) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.get(c) as f64 / t as f64
+        }
+    }
+
+    /// The dominant non-compute, non-idle category — the row's
+    /// bottleneck cause (None when the row only computed or idled).
+    pub fn bottleneck(&self) -> Option<(Cat, u64)> {
+        Cat::ALL
+            .iter()
+            .filter(|&&c| !matches!(c, Cat::Compute | Cat::Idle))
+            .map(|&c| (c, self.get(c)))
+            .filter(|&(_, v)| v > 0)
+            .max_by_key(|&(_, v)| v)
+    }
+}
+
+/// The per-run attribution ledger: core rows first (in core order),
+/// then unit rows (accelerators, then the DMA engine) — the same order
+/// as [`SimReport::units`](super::trace::SimReport::units).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct LedgerReport {
+    pub total_cycles: u64,
+    pub rows: Vec<LedgerRow>,
+}
+
+impl LedgerReport {
+    pub fn row(&self, name: &str) -> Option<&LedgerRow> {
+        self.rows.iter().find(|r| r.name == name)
+    }
+
+    /// First row violating the conservation invariant (category sums
+    /// == total cycles), if any. Tests assert `None`.
+    pub fn conservation_error(&self) -> Option<String> {
+        for r in &self.rows {
+            if r.total() != self.total_cycles {
+                return Some(format!(
+                    "ledger row '{}' sums to {} but the run took {} cycles",
+                    r.name,
+                    r.total(),
+                    self.total_cycles
+                ));
+            }
+        }
+        None
+    }
+}
+
+/// Derive an accelerator unit's ledger row from its (engine-identical)
+/// busy/stall stats. Active cycles decompose exactly:
+/// `active = compute + stall_input + stall_output + drain`; output
+/// stalls and end-of-job drain are both scratchpad-side backpressure,
+/// so they fold into [`Cat::BankConflict`].
+pub(crate) fn accel_row(u: &UnitStats, total: u64) -> LedgerRow {
+    let mut cat = [0u64; NCATS];
+    cat[Cat::Compute as usize] = u.compute_cycles;
+    cat[Cat::DmaWait as usize] = u.stall_input_cycles;
+    cat[Cat::BankConflict as usize] =
+        u.active_cycles - u.compute_cycles - u.stall_input_cycles;
+    cat[Cat::Idle as usize] = total - u.active_cycles;
+    LedgerRow { name: u.name.clone(), cat }
+}
+
+/// Derive the DMA engine's ledger row. `noc_denied` is the cluster's
+/// NoC-stall counter — the DMA engine is the only shared-link user, and
+/// each denial is one active non-compute cycle. The remaining active
+/// cycles are SPM-side backpressure (the banked scratchpad could not
+/// source or sink the beat), attributed to [`Cat::BankConflict`].
+pub(crate) fn dma_row(u: &UnitStats, total: u64, noc_denied: u64) -> LedgerRow {
+    let mut cat = [0u64; NCATS];
+    cat[Cat::Compute as usize] = u.compute_cycles;
+    cat[Cat::NocDenied as usize] = noc_denied;
+    cat[Cat::BankConflict as usize] = u.active_cycles - u.compute_cycles - noc_denied;
+    cat[Cat::Idle as usize] = total - u.active_cycles;
+    LedgerRow { name: u.name.clone(), cat }
+}
+
+/// Derive the shared NoC link's row from its grant ledger: a cycle is
+/// `compute` when at least one beat crossed, `idle` otherwise. Only
+/// meaningful under contention — an uncontended link is never
+/// arbitrated per-cycle and reads fully idle.
+pub fn noc_row(busy_cycles: u64, total: u64) -> LedgerRow {
+    let mut cat = [0u64; NCATS];
+    cat[Cat::Compute as usize] = busy_cycles;
+    cat[Cat::Idle as usize] = total.saturating_sub(busy_cycles);
+    LedgerRow { name: "noc".into(), cat }
+}
+
+// ---------------------------------------------------------------------------
+// Live job progress
+// ---------------------------------------------------------------------------
+
+/// Shared progress sink for an in-flight simulation: the engine stores
+/// cycles simulated and phase (barrier-release) transitions every
+/// quantum, and refreshes a ledger snapshot at phase granularity when
+/// the ledger is enabled. `snax serve` hands one of these to detached
+/// jobs so `GET /jobs/:id` can report live progress.
+///
+/// All updates are monotone (`fetch_max` / transition counting), so
+/// multi-cluster members sharing one sink never move progress
+/// backwards.
+#[derive(Debug, Default)]
+pub struct ProgressSink {
+    cycles: AtomicU64,
+    phases: AtomicU64,
+    ledger: Mutex<Option<LedgerReport>>,
+}
+
+impl ProgressSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cycles simulated so far (max over members for system runs).
+    pub fn cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    /// Barrier-delimited phase transitions observed so far.
+    pub fn phases(&self) -> u64 {
+        self.phases.load(Ordering::Relaxed)
+    }
+
+    /// Most recent phase-boundary ledger snapshot (ledgered runs only).
+    /// Mid-run rows may pre-charge a sleeping core slightly past
+    /// `total_cycles`; exact conservation holds at run end.
+    pub fn ledger(&self) -> Option<LedgerReport> {
+        self.ledger.lock().unwrap().clone()
+    }
+
+    pub(crate) fn advance_cycles(&self, cycle: u64) {
+        self.cycles.fetch_max(cycle, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_phases(&self, n: u64) {
+        self.phases.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn store_ledger(&self, report: LedgerReport) {
+        *self.ledger.lock().unwrap() = Some(report);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_math_and_bottleneck() {
+        let mut r = LedgerRow { name: "gemm0".into(), cat: [0; NCATS] };
+        r.cat[Cat::Compute as usize] = 70;
+        r.cat[Cat::DmaWait as usize] = 20;
+        r.cat[Cat::Idle as usize] = 10;
+        assert_eq!(r.total(), 100);
+        assert!((r.share(Cat::Compute) - 0.7).abs() < 1e-12);
+        assert_eq!(r.bottleneck(), Some((Cat::DmaWait, 20)));
+        let idle_only = LedgerRow { name: "x".into(), cat: [0; NCATS] };
+        assert_eq!(idle_only.bottleneck(), None);
+    }
+
+    #[test]
+    fn conservation_error_pinpoints_the_row() {
+        let good = LedgerRow {
+            name: "core0".into(),
+            cat: {
+                let mut c = [0; NCATS];
+                c[Cat::Compute as usize] = 100;
+                c
+            },
+        };
+        let mut bad = good.clone();
+        bad.name = "core1".into();
+        bad.cat[Cat::Idle as usize] = 5; // sums to 105
+        let rep = LedgerReport { total_cycles: 100, rows: vec![good, bad] };
+        let err = rep.conservation_error().unwrap();
+        assert!(err.contains("core1"), "{err}");
+        assert!(err.contains("105"), "{err}");
+    }
+
+    #[test]
+    fn derived_unit_rows_conserve() {
+        let accel = UnitStats {
+            name: "gemm0".into(),
+            active_cycles: 80,
+            compute_cycles: 60,
+            stall_input_cycles: 12,
+            stall_output_cycles: 5,
+            ..Default::default()
+        };
+        let row = accel_row(&accel, 100);
+        assert_eq!(row.total(), 100);
+        assert_eq!(row.get(Cat::BankConflict), 8); // stall_out 5 + drain 3
+        let dma = UnitStats {
+            name: "dma".into(),
+            active_cycles: 50,
+            compute_cycles: 40,
+            ..Default::default()
+        };
+        let row = dma_row(&dma, 100, 6);
+        assert_eq!(row.total(), 100);
+        assert_eq!(row.get(Cat::NocDenied), 6);
+        assert_eq!(row.get(Cat::BankConflict), 4);
+        let noc = noc_row(30, 100);
+        assert_eq!(noc.total(), 100);
+    }
+
+    #[test]
+    fn progress_sink_is_monotone() {
+        let s = ProgressSink::new();
+        s.advance_cycles(10);
+        s.advance_cycles(5); // a member behind the max must not regress it
+        assert_eq!(s.cycles(), 10);
+        s.add_phases(2);
+        assert_eq!(s.phases(), 2);
+        assert!(s.ledger().is_none());
+        s.store_ledger(LedgerReport { total_cycles: 10, rows: vec![] });
+        assert_eq!(s.ledger().unwrap().total_cycles, 10);
+    }
+
+    #[test]
+    fn cat_names_cover_every_category() {
+        for c in Cat::ALL {
+            assert_eq!(CAT_NAMES[c as usize], c.name());
+        }
+        assert_eq!(Cat::ALL.len(), NCATS);
+    }
+}

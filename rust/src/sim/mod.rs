@@ -27,6 +27,7 @@ pub mod csr;
 pub mod dma;
 pub mod functional;
 pub mod job;
+pub mod ledger;
 pub mod mem;
 pub mod phase;
 pub mod streamer;
@@ -35,6 +36,7 @@ pub mod trace;
 
 pub use cluster::{Cluster, SimMode};
 pub use job::{OpDesc, Region};
+pub use ledger::{Cat, LedgerReport, LedgerRow, ProgressSink, CAT_NAMES, NCATS};
 pub use phase::{PhaseCache, PhaseCacheStats};
 pub use system::{NocStats, System, SystemReport};
 pub use trace::{Counters, LayerStat, SimReport, UnitStats};

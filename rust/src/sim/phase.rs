@@ -55,6 +55,7 @@ use crate::isa::{dma_csr, Instr, LayerClass, Program};
 use super::accel::{CounterClass, EmitRule};
 use super::dma::{DmaDir, DmaJob};
 use super::job::OpDesc;
+use super::ledger::NCATS;
 use super::streamer::StreamPlan;
 use super::trace::Counters;
 
@@ -204,6 +205,11 @@ pub(crate) struct CtrlSnap {
     /// by id so canonical numbering is deterministic.
     pub barriers: Vec<(u16, u64, u8)>,
     pub traced: bool,
+    /// Whether the run carries a cycle-accounting ledger. Folded into
+    /// the snapshot for the same reason as `traced`: a record made
+    /// without ledger deltas must never serve a ledgered run (and the
+    /// converse wastes delta memory).
+    pub ledgered: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -301,6 +307,7 @@ pub(crate) struct PhaseRecord {
     /// for non-relocatable phases.
     pub start_mod: u64,
     pub traced: bool,
+    pub ledgered: bool,
     pub entry: CtrlSnap,
     /// Per unit: matching class of the entry-state staged `SRC`/`DST`
     /// values (see [`EntryAddrClass`]).
@@ -316,6 +323,10 @@ pub(crate) struct PhaseRecord {
     pub layers: Vec<(u16, LayerDelta)>,
     pub effects: Vec<FnEffect>,
     pub trace_segs: Vec<TraceSeg>,
+    /// Per-core ledger category deltas (empty unless `ledgered`).
+    /// Replay adds these verbatim — attribution sums are pure additive
+    /// functions of the entry snapshot, so time-shifting is free.
+    pub ledger_deltas: Vec<[u64; NCATS]>,
 }
 
 impl PhaseRecord {
@@ -349,6 +360,7 @@ impl PhaseRecord {
             + self.layers.len() * 40
             + self.stream_deltas.iter().map(|d| 16 + d.len() * 24).sum::<usize>()
             + self.unit_deltas.len() * 40
+            + self.ledger_deltas.len() * (NCATS * 8 + 8)
     }
 
     /// Matching-relevant identity: two records with the same entry
@@ -361,6 +373,7 @@ impl PhaseRecord {
             && self.relocatable == other.relocatable
             && self.start_mod == other.start_mod
             && self.traced == other.traced
+            && self.ledgered == other.ledgered
             && self.pc_delta == other.pc_delta
             && self.entry == other.entry
             && self.windows == other.windows
@@ -684,6 +697,7 @@ pub(crate) fn match_record(
         return None;
     }
     if rec.traced != cur.traced
+        || rec.ledgered != cur.ledgered
         || rec.entry.cores.len() != cur.cores.len()
         || rec.entry.units.len() != cur.units.len()
         || rec.entry.barriers.len() != cur.barriers.len()
@@ -897,6 +911,7 @@ pub(crate) fn snap_key(seed: u64, snap: &CtrlSnap, meta: &[UnitMeta]) -> u64 {
     let mut h = Fnv1a::new();
     h.write_u64(seed);
     h.write_bool(snap.traced);
+    h.write_bool(snap.ledgered);
     h.write_u64(snap.cores.len() as u64);
     for c in &snap.cores {
         h.write_u64(c.wake_rel);
@@ -1005,9 +1020,14 @@ pub(crate) fn snap_key(seed: u64, snap: &CtrlSnap, meta: &[UnitMeta]) -> u64 {
 /// data, and phase timing is data-independent by construction (the
 /// functional channel is replayed, never cached). The version tag
 /// invalidates every shared record when the record schema changes.
-pub(crate) fn phase_seed(cfg: &ClusterConfig, program: &Program, memo_traced: bool) -> u64 {
+pub(crate) fn phase_seed(
+    cfg: &ClusterConfig,
+    program: &Program,
+    memo_traced: bool,
+    memo_ledgered: bool,
+) -> u64 {
     let mut h = Fnv1a::new();
-    h.write_str("snax-phase-v1");
+    h.write_str("snax-phase-v2");
     // Config: every field the simulator's timing reads.
     h.write_u32(cfg.spm_kb);
     h.write_u32(cfg.banks);
@@ -1050,6 +1070,7 @@ pub(crate) fn phase_seed(cfg: &ClusterConfig, program: &Program, memo_traced: bo
         h.write_str(n);
     }
     h.write_bool(memo_traced);
+    h.write_bool(memo_ledgered);
     h.finish()
 }
 
@@ -1400,17 +1421,31 @@ mod tests {
             relocatable: true,
             start_mod: 0,
             traced: false,
-            entry: CtrlSnap { cores: vec![], units: vec![], barriers: vec![], traced: false },
+            ledgered: false,
+            entry: CtrlSnap {
+                cores: vec![],
+                units: vec![],
+                barriers: vec![],
+                traced: false,
+                ledgered: false,
+            },
             entry_dma_class: vec![],
             windows: vec![],
             pc_delta: vec![],
-            end: CtrlSnap { cores: vec![], units: vec![], barriers: vec![], traced: false },
+            end: CtrlSnap {
+                cores: vec![],
+                units: vec![],
+                barriers: vec![],
+                traced: false,
+                ledgered: false,
+            },
             counters: Counters::default(),
             unit_deltas: vec![],
             stream_deltas: vec![],
             layers: vec![],
             effects: vec![],
             trace_segs: vec![],
+            ledger_deltas: vec![],
         }
     }
 
@@ -1526,6 +1561,7 @@ mod tests {
             units: vec![unit(src, dst)],
             barriers: vec![],
             traced: false,
+            ledgered: false,
         };
         // SRC/DST are masked out of the key...
         assert_eq!(
@@ -1548,15 +1584,20 @@ mod tests {
             streams: vec![vec![], vec![Instr::Launch { unit: UnitId(0) }]],
             ..Default::default()
         };
-        let base = phase_seed(&cfg, &p, false);
+        let base = phase_seed(&cfg, &p, false, false);
         // Data is excluded: timing is data-independent.
         p.ext_mem_init = vec![(0, vec![1, 2, 3])];
-        assert_eq!(base, phase_seed(&cfg, &p, false));
+        assert_eq!(base, phase_seed(&cfg, &p, false, false));
         // Instructions are not.
         p.streams[0].push(Instr::AwaitIdle { unit: UnitId(0) });
-        assert_ne!(base, phase_seed(&cfg, &p, false));
+        assert_ne!(base, phase_seed(&cfg, &p, false, false));
         // Nor is the config.
-        assert_ne!(base, phase_seed(&ClusterConfig::fig6d(), &p, false));
+        assert_ne!(base, phase_seed(&ClusterConfig::fig6d(), &p, false, false));
+        // The ledger flag separates seeds like the trace flag does.
+        assert_ne!(
+            phase_seed(&cfg, &p, false, false),
+            phase_seed(&cfg, &p, false, true)
+        );
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::config::{NocConfig, SystemConfig};
 use crate::isa::Program;
 
 use super::cluster::{Quantum, SimState};
+use super::ledger::ProgressSink;
 use super::mem::ExtMem;
 use super::phase::PhaseCache;
 use super::trace::SimReport;
@@ -55,6 +56,11 @@ pub(crate) struct NocLedger {
     ledger: BTreeMap<u64, u32>,
     pub(crate) granted: u64,
     pub(crate) denied: u64,
+    /// Distinct cycles with at least one grant — the link's busy time,
+    /// feeding the NoC row of the attribution ledger. Counted only on
+    /// a contended NoC (uncontended beats are span-batched without
+    /// per-beat requests, so they are not observable here).
+    pub(crate) busy_cycles: u64,
 }
 
 impl NocLedger {
@@ -68,6 +74,7 @@ impl NocLedger {
             ledger: BTreeMap::new(),
             granted: 0,
             denied: 0,
+            busy_cycles: 0,
         }
     }
 
@@ -93,6 +100,9 @@ impl NocLedger {
         let slots = beat_bits.div_ceil(self.link_bits.max(1)).max(1);
         let used = self.ledger.entry(cycle).or_insert(0);
         if *used + slots <= self.budget {
+            if *used == 0 {
+                self.busy_cycles += 1;
+            }
             *used += slots;
             self.granted += 1;
             true
@@ -176,6 +186,9 @@ pub struct NocStats {
     pub denied: u64,
     /// System-barrier releases (cross-cluster handoffs).
     pub barrier_releases: u64,
+    /// Distinct shared-clock cycles with at least one grant (link busy
+    /// time; 0 on an uncontended NoC, whose beats are span-batched).
+    pub busy_cycles: u64,
 }
 
 /// The result of one system run: per-cluster reports plus the shared
@@ -213,11 +226,34 @@ pub struct System {
     memo: bool,
     phase_cache: Option<Arc<PhaseCache>>,
     func_threads: Option<usize>,
+    ledger: bool,
+    progress: Option<Arc<ProgressSink>>,
 }
 
 impl System {
     pub fn new(cfg: &SystemConfig) -> Self {
-        Self { cfg: cfg.clone(), memo: true, phase_cache: None, func_threads: None }
+        Self {
+            cfg: cfg.clone(),
+            memo: true,
+            phase_cache: None,
+            func_threads: None,
+            ledger: false,
+            progress: None,
+        }
+    }
+
+    /// Build the cycle-accounting attribution ledger for every member
+    /// (DESIGN.md §10). Off by default — the off path is zero-cost.
+    pub fn with_ledger(mut self, on: bool) -> Self {
+        self.ledger = on;
+        self
+    }
+
+    /// Publish live progress (cycles, phases, ledger snapshots) to
+    /// `sink` while running — feeds `GET /jobs/:id` on the server.
+    pub fn with_progress(mut self, sink: Arc<ProgressSink>) -> Self {
+        self.progress = Some(sink);
+        self
     }
 
     /// Phase-memoization switch. Only effective for systems-of-1:
@@ -287,6 +323,10 @@ impl System {
         st.set_mode(mode);
         st.set_memo(self.memo);
         st.set_phase_cache(self.phase_cache.clone());
+        if self.ledger {
+            st.enable_ledger();
+        }
+        st.set_progress(self.progress.clone());
         st.prepare();
         loop {
             match st.step_quantum()? {
@@ -325,6 +365,10 @@ impl System {
             let mut st = SimState::new_bare(&self.cfg.clusters[i], p, self.func_threads)?;
             st.set_mode(mode);
             st.attach_system(i);
+            if self.ledger {
+                st.enable_ledger();
+            }
+            st.set_progress(self.progress.clone());
             st.prepare();
             states.push(st);
         }
@@ -394,6 +438,7 @@ impl System {
                 granted: sh.noc.granted,
                 denied: sh.noc.denied,
                 barrier_releases: sh.bars.release_events,
+                busy_cycles: sh.noc.busy_cycles,
             },
             clusters: reports,
             ext_mem: shared_ext.into_raw(),
@@ -492,6 +537,30 @@ mod tests {
         assert_eq!(event.clusters[1].read_spm(0, 4), &[0, 1, 2, 3]);
         // Total data still crossed the link.
         assert_eq!(event.noc.granted, 128);
+    }
+
+    #[test]
+    fn contended_system_ledger_conserves_per_member() {
+        let pa = dma_in_program(0, 8, 512);
+        let pb = dma_in_program(8192, 8, 512);
+        let cfg = two_fig6b_system(1);
+        let event = System::new(&cfg).with_ledger(true).run(&[&pa, &pb]).unwrap();
+        let exact = System::new(&cfg)
+            .with_ledger(true)
+            .run_mode(&[&pa, &pb], SimMode::Exact)
+            .unwrap();
+        assert_eq!(event, exact, "ledgered system engines diverged");
+        assert!(event.noc.busy_cycles > 0, "contended link must log busy time");
+        assert!(event.noc.busy_cycles <= event.total_cycles);
+        for r in &event.clusters {
+            let lg = r.ledger.as_ref().expect("member must carry a ledger");
+            assert_eq!(lg.conservation_error(), None);
+            assert_eq!(lg.total_cycles, r.total_cycles);
+        }
+        // Plain run is byte-identical apart from the ledgers.
+        let plain = System::new(&cfg).run(&[&pa, &pb]).unwrap();
+        assert_eq!(plain.total_cycles, event.total_cycles);
+        assert_eq!(plain.noc, event.noc);
     }
 
     #[test]

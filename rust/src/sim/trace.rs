@@ -105,6 +105,11 @@ pub struct SimReport {
     pub ext_mem: Vec<u8>,
     /// Present only for [`Cluster::run_traced`](super::cluster::Cluster::run_traced) runs.
     pub trace: Option<Trace>,
+    /// Cycle-accounting attribution ledger, present only for profiled
+    /// runs ([`Cluster::with_ledger`](super::cluster::Cluster::with_ledger)).
+    /// Participates in `PartialEq`: both engines and memo replay must
+    /// attribute identically.
+    pub ledger: Option<super::ledger::LedgerReport>,
 }
 
 impl SimReport {

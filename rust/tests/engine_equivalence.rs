@@ -55,6 +55,36 @@ fn assert_engines_agree(tag: &str, cfg: &ClusterConfig, opts: &CompileOptions, g
         .run_mode(&cp.program, SimMode::Event)
         .unwrap();
     assert_reports_equal(tag, "shared-cache replay", &exact, &replayed);
+    // Ledgered legs (DESIGN.md §10): with cycle accounting on, the
+    // engines must still agree byte for byte — including the ledger
+    // itself (it participates in `SimReport`'s PartialEq) — and every
+    // row must conserve: category sums == total cycles. Memo replay
+    // re-attributes recorded deltas, so the memo-on leg exercises the
+    // time-shifted replay path.
+    let lx = Cluster::new(cfg)
+        .with_ledger(true)
+        .run_mode(&cp.program, SimMode::Exact)
+        .unwrap();
+    let lmemo = Cluster::new(cfg)
+        .with_ledger(true)
+        .run_mode(&cp.program, SimMode::Event)
+        .unwrap();
+    let loff = Cluster::new(cfg)
+        .with_ledger(true)
+        .with_memo(false)
+        .run_mode(&cp.program, SimMode::Event)
+        .unwrap();
+    assert_reports_equal(tag, "ledgered event+memo", &lx, &lmemo);
+    assert_reports_equal(tag, "ledgered event-memo", &lx, &loff);
+    // The ledger changes nothing about timing: same totals as the
+    // unledgered oracle.
+    assert_eq!(lx.total_cycles, exact.total_cycles, "{tag}: ledger perturbed timing");
+    assert_eq!(lx.counters, exact.counters, "{tag}: ledger perturbed counters");
+    let lg = lx.ledger.as_ref().expect("ledgered run must carry a ledger");
+    assert_eq!(lg.total_cycles, lx.total_cycles, "{tag}: ledger total");
+    if let Some(err) = lg.conservation_error() {
+        panic!("{tag}: conservation violated: {err}");
+    }
 }
 
 /// Fig. 8 cascade: the three sequential platforms.

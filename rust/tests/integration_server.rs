@@ -189,6 +189,80 @@ fn detached_jobs_poll_to_completion_over_sockets() {
     server.shutdown();
 }
 
+/// Live observability contract (DESIGN.md §10): while a detached
+/// profiled job is in flight, `GET /jobs/:id` exposes a `progress`
+/// object whose `cycles` and `phases` advance monotonically, and the
+/// finished report carries a conserving ledger rollup.
+#[test]
+fn detached_job_progress_advances_monotonically() {
+    let server = start_server();
+    let addr = server.addr();
+    // Exact engine keeps the job in flight long enough to observe
+    // several running polls (the same workload the equivalence suite
+    // already runs, so the duration is test-budget safe).
+    let (status, _, body) = request(
+        addr,
+        "POST",
+        "/simulate",
+        r#"{"net":"resnet8","engine":"exact","detach":true,"profile":true}"#,
+    );
+    assert_eq!(status, 202, "{}", body_str(&body));
+    let id = json::parse(body_str(&body)).unwrap().get("job").unwrap().as_u64().unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut running: Vec<(u64, u64)> = Vec::new();
+    let report = loop {
+        let (status, _, poll) = request(addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(status, 200);
+        let pv = json::parse(body_str(&poll)).unwrap();
+        match pv.get("state").unwrap().as_str().unwrap() {
+            "done" => break pv,
+            "failed" => panic!("detached job failed: {}", body_str(&poll)),
+            "running" => {
+                let p = pv.get("progress").unwrap_or_else(|| {
+                    panic!("running job without progress: {}", body_str(&poll))
+                });
+                let cycles = p.get("cycles").unwrap().as_u64().unwrap();
+                let phases = p.get("phases").unwrap().as_u64().unwrap();
+                assert!(p.get("ledger").is_some(), "progress must carry a ledger field");
+                if let Some(&(pc, pp)) = running.last() {
+                    assert!(cycles >= pc, "cycles went backwards: {pc} -> {cycles}");
+                    assert!(phases >= pp, "phases went backwards: {pp} -> {phases}");
+                }
+                running.push((cycles, phases));
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            other => panic!("unexpected job state '{other}'"),
+        }
+        assert!(Instant::now() < deadline, "detached job never finished");
+    };
+    assert!(
+        running.len() >= 2,
+        "expected to observe >=2 in-flight polls, saw {}",
+        running.len()
+    );
+    assert!(
+        running.last().unwrap().0 > running.first().unwrap().0,
+        "cycle progress never advanced across {} polls: {:?}...",
+        running.len(),
+        &running[..running.len().min(4)]
+    );
+
+    // The finished envelope carries the ledger rollup, and it conserves.
+    let rep = report.get("report").unwrap();
+    let total = rep.get("total_cycles").unwrap().as_u64().unwrap();
+    let ledger = rep.get("ledger").unwrap_or_else(|| {
+        panic!("profiled job report has no ledger rollup")
+    });
+    assert_eq!(ledger.get("total_cycles").unwrap().as_u64(), Some(total));
+    let rows = match ledger.get("rows").unwrap() {
+        json::Value::Arr(rows) => rows,
+        other => panic!("ledger rows not an array: {other:?}"),
+    };
+    assert!(!rows.is_empty());
+    server.shutdown();
+}
+
 #[test]
 fn keep_alive_connection_serves_many_requests() {
     let server = start_server();

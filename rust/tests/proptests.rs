@@ -308,73 +308,81 @@ fn emit_sw(stream: &mut Vec<Instr>, r: &mut Rng) {
     });
 }
 
+/// One random raw multi-core program and the cluster it targets —
+/// shared by the engine-agreement and ledger-conservation suites so
+/// both cover the identical case distribution.
+fn random_raw_case(seed: u64) -> (ClusterConfig, Program) {
+    let mut r = Rng::new(11_000 + seed);
+    let mut cfg = match seed % 4 {
+        0 => ClusterConfig::fig6b(),
+        1 => ClusterConfig::fig6c(),
+        2 => ClusterConfig::fig6d(),
+        _ => fig6d_with_vecadd(),
+    };
+    if r.chance(25) {
+        cfg.csr_double_buffer = false; // ablation: write/launch stalls
+    }
+    let n_cores = cfg.cores.len();
+    let dma = UnitId(cfg.accelerators.len() as u8);
+    let unit_of = |kind: AccelKind| {
+        cfg.accelerators
+            .iter()
+            .position(|a| a.kind == kind)
+            .map(|i| UnitId(i as u8))
+    };
+    let (gemm, pool, va) =
+        (unit_of(AccelKind::Gemm), unit_of(AccelKind::MaxPool), unit_of(AccelKind::VecAdd));
+
+    let mut streams: Vec<Vec<Instr>> = vec![Vec::new(); n_cores];
+    let segs = r.range(3, 7);
+    for seg in 0..segs {
+        for (ci, stream) in streams.iter_mut().enumerate() {
+            // Static unit ownership mirrors the presets: core 0
+            // drives the DMA + pool, core 1 the GeMM + vec-add.
+            let mut kinds: Vec<u8> = vec![0];
+            if ci == 0 {
+                kinds.push(1);
+                if pool.is_some() {
+                    kinds.push(2);
+                }
+            }
+            if ci == 1 {
+                if gemm.is_some() {
+                    kinds.push(3);
+                }
+                if va.is_some() {
+                    kinds.push(4);
+                }
+            }
+            match *r.pick(&kinds) {
+                1 => emit_dma(stream, dma, &mut r),
+                2 => emit_pool(stream, pool.unwrap(), &mut r),
+                3 => emit_gemm(stream, gemm.unwrap(), &mut r),
+                4 => emit_vecadd(stream, va.unwrap(), &mut r),
+                _ => emit_sw(stream, &mut r),
+            }
+        }
+        if n_cores > 1 && r.chance(40) {
+            for stream in streams.iter_mut() {
+                stream.push(Instr::Barrier {
+                    id: BarrierId(seg as u16),
+                    participants: n_cores as u8,
+                });
+            }
+        }
+    }
+    let program = Program {
+        streams,
+        ext_mem_init: vec![(0, (0..4096u64).map(|i| (i * 7 + seed) as u8).collect())],
+        ..Default::default()
+    };
+    (cfg, program)
+}
+
 #[test]
 fn prop_engines_agree_on_random_programs() {
     for seed in 0..48u64 {
-        let mut r = Rng::new(11_000 + seed);
-        let mut cfg = match seed % 4 {
-            0 => ClusterConfig::fig6b(),
-            1 => ClusterConfig::fig6c(),
-            2 => ClusterConfig::fig6d(),
-            _ => fig6d_with_vecadd(),
-        };
-        if r.chance(25) {
-            cfg.csr_double_buffer = false; // ablation: write/launch stalls
-        }
-        let n_cores = cfg.cores.len();
-        let dma = UnitId(cfg.accelerators.len() as u8);
-        let unit_of = |kind: AccelKind| {
-            cfg.accelerators
-                .iter()
-                .position(|a| a.kind == kind)
-                .map(|i| UnitId(i as u8))
-        };
-        let (gemm, pool, va) =
-            (unit_of(AccelKind::Gemm), unit_of(AccelKind::MaxPool), unit_of(AccelKind::VecAdd));
-
-        let mut streams: Vec<Vec<Instr>> = vec![Vec::new(); n_cores];
-        let segs = r.range(3, 7);
-        for seg in 0..segs {
-            for (ci, stream) in streams.iter_mut().enumerate() {
-                // Static unit ownership mirrors the presets: core 0
-                // drives the DMA + pool, core 1 the GeMM + vec-add.
-                let mut kinds: Vec<u8> = vec![0];
-                if ci == 0 {
-                    kinds.push(1);
-                    if pool.is_some() {
-                        kinds.push(2);
-                    }
-                }
-                if ci == 1 {
-                    if gemm.is_some() {
-                        kinds.push(3);
-                    }
-                    if va.is_some() {
-                        kinds.push(4);
-                    }
-                }
-                match *r.pick(&kinds) {
-                    1 => emit_dma(stream, dma, &mut r),
-                    2 => emit_pool(stream, pool.unwrap(), &mut r),
-                    3 => emit_gemm(stream, gemm.unwrap(), &mut r),
-                    4 => emit_vecadd(stream, va.unwrap(), &mut r),
-                    _ => emit_sw(stream, &mut r),
-                }
-            }
-            if n_cores > 1 && r.chance(40) {
-                for stream in streams.iter_mut() {
-                    stream.push(Instr::Barrier {
-                        id: BarrierId(seg as u16),
-                        participants: n_cores as u8,
-                    });
-                }
-            }
-        }
-        let program = Program {
-            streams,
-            ext_mem_init: vec![(0, (0..4096u64).map(|i| (i * 7 + seed) as u8).collect())],
-            ..Default::default()
-        };
+        let (cfg, program) = random_raw_case(seed);
         let cluster = Cluster::new(&cfg);
         let exact = cluster.run_mode(&program, SimMode::Exact).unwrap();
         let event = cluster.run_mode(&program, SimMode::Event).unwrap();
@@ -433,6 +441,66 @@ fn prop_engines_agree_on_compiled_graphs() {
             exact, memo_off,
             "seed {seed} on {} ({:?}): memo-off report",
             cfg.name, opts.mode
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cycle-accounting ledger (DESIGN.md §10): on any workload, per-row
+// category sums must equal total cycles (conservation), and the
+// ledgered reports — exact, event+memo, event memo-off — must stay
+// byte-identical.
+// ---------------------------------------------------------------------------
+
+fn assert_ledger_conserves(tag: &str, cfg: &ClusterConfig, program: &Program) {
+    let exact = Cluster::new(cfg)
+        .with_ledger(true)
+        .run_mode(program, SimMode::Exact)
+        .unwrap();
+    let memo_on = Cluster::new(cfg)
+        .with_ledger(true)
+        .run_mode(program, SimMode::Event)
+        .unwrap();
+    let memo_off = Cluster::new(cfg)
+        .with_ledger(true)
+        .with_memo(false)
+        .run_mode(program, SimMode::Event)
+        .unwrap();
+    assert_eq!(exact, memo_on, "{tag}: ledgered event+memo report");
+    assert_eq!(exact, memo_off, "{tag}: ledgered memo-off report");
+    let lg = exact.ledger.as_ref().expect("ledgered run must carry a ledger");
+    assert_eq!(lg.total_cycles, exact.total_cycles, "{tag}: ledger total");
+    if let Some(err) = lg.conservation_error() {
+        panic!("{tag}: conservation violated: {err}");
+    }
+}
+
+#[test]
+fn prop_ledger_conserves_on_random_programs() {
+    for seed in 0..24u64 {
+        let (cfg, program) = random_raw_case(seed);
+        assert_ledger_conserves(&format!("seed {seed} on {}", cfg.name), &cfg, &program);
+    }
+}
+
+#[test]
+fn prop_ledger_conserves_on_compiled_graphs() {
+    for seed in 0..8u64 {
+        let mut r = Rng::new(13_000 + seed);
+        let g = random_graph(&mut r);
+        let cfg = ClusterConfig::preset(["fig6b", "fig6c", "fig6d"][(seed % 3) as usize]).unwrap();
+        let opts = if r.chance(35) && cfg.accelerators.len() > 1 {
+            CompileOptions::pipelined().with_inferences(3)
+        } else {
+            CompileOptions::sequential()
+        };
+        let Ok(cp) = compile(&g, &cfg, &opts) else {
+            continue; // legitimately too big for the preset
+        };
+        assert_ledger_conserves(
+            &format!("graph seed {seed} on {} ({:?})", cfg.name, opts.mode),
+            &cfg,
+            &cp.program,
         );
     }
 }

@@ -148,6 +148,60 @@ fn pipeline_overlaps_stages_across_inferences() {
     );
 }
 
+/// Ledgered multi-cluster runs (DESIGN.md §10): cycle accounting must
+/// conserve per member, agree across engines byte for byte, and leave
+/// timing untouched relative to the unledgered run.
+fn assert_system_ledger_conserves(tag: &str, sys: &SystemConfig, strategy: PartitionStrategy) {
+    let g = models::resnet8_graph();
+    // One inference per member keeps every data-parallel shard busy.
+    let opts = CompileOptions::sequential().with_inferences(sys.n_clusters() as u32);
+    let cs = compile_system(&g, sys, &opts, strategy).unwrap();
+    let event = System::new(sys)
+        .with_ledger(true)
+        .run_mode(&cs.programs(), SimMode::Event)
+        .unwrap();
+    let exact = System::new(sys)
+        .with_ledger(true)
+        .run_mode(&cs.programs(), SimMode::Exact)
+        .unwrap();
+    assert_eq!(event, exact, "{tag}: ledgered system engines diverged");
+    for (i, r) in event.clusters.iter().enumerate() {
+        let lg = r.ledger.as_ref().unwrap_or_else(|| {
+            panic!("{tag}: member {i} of a ledgered system run has no ledger")
+        });
+        assert_eq!(lg.total_cycles, r.total_cycles, "{tag}: member {i} ledger total");
+        if let Some(err) = lg.conservation_error() {
+            panic!("{tag}: member {i} conservation violated: {err}");
+        }
+    }
+    // Shared-link accounting stays within the run: busy cycles cannot
+    // exceed the system span.
+    assert!(
+        event.noc.busy_cycles <= event.total_cycles,
+        "{tag}: noc busy {} > total {}",
+        event.noc.busy_cycles,
+        event.total_cycles
+    );
+    // Zero-cost-off cross-check: the ledger observes, never perturbs.
+    let plain = System::new(sys).run_mode(&cs.programs(), SimMode::Event).unwrap();
+    assert_eq!(plain.total_cycles, event.total_cycles, "{tag}: ledger perturbed timing");
+    assert_eq!(plain.noc, event.noc, "{tag}: ledger perturbed NoC stats");
+}
+
+#[test]
+fn soc2_ledger_conserves_per_member() {
+    let sys = SystemConfig::soc2();
+    assert_system_ledger_conserves("soc2/pipeline", &sys, PartitionStrategy::Pipeline);
+    assert_system_ledger_conserves("soc2/data", &sys, PartitionStrategy::DataParallel);
+}
+
+#[test]
+fn soc4_ledger_conserves_per_member() {
+    let sys = SystemConfig::preset("soc4").unwrap();
+    assert_system_ledger_conserves("soc4/pipeline", &sys, PartitionStrategy::Pipeline);
+    assert_system_ledger_conserves("soc4/data", &sys, PartitionStrategy::DataParallel);
+}
+
 #[test]
 fn system_toml_file_round_trips_through_compile_and_run() {
     // The CLI's `--system file.toml` path: serialize soc2, reload it,

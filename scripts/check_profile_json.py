@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Validate a `snax profile --json` envelope (stdlib only).
+
+Usage: check_profile_json.py out.json [--system]
+
+Checks the schema the CLI promises (DESIGN.md §10) and re-verifies the
+conservation invariant from the outside: per ledger row, the category
+cycle counts must sum to the ledger's total_cycles.
+"""
+
+import json
+import sys
+
+CATS = [
+    "compute",
+    "dma-wait",
+    "bank-conflict",
+    "barrier-wait",
+    "sys-barrier-wait",
+    "noc-denied",
+    "launch-stall",
+    "poll",
+    "idle",
+]
+
+
+def fail(msg):
+    print(f"profile-json check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_ledger(lg, where):
+    if not isinstance(lg, dict):
+        fail(f"{where}: ledger is not an object")
+    total = lg.get("total_cycles")
+    if not isinstance(total, int) or total <= 0:
+        fail(f"{where}: bad ledger total_cycles {total!r}")
+    rows = lg.get("rows")
+    if not isinstance(rows, list) or not rows:
+        fail(f"{where}: ledger rows missing or empty")
+    for row in rows:
+        name = row.get("name")
+        cats = row.get("cats")
+        if not isinstance(name, str) or not name:
+            fail(f"{where}: row without a name: {row!r}")
+        if not isinstance(cats, dict) or sorted(cats) != sorted(CATS):
+            fail(f"{where}/{name}: cats keys != category taxonomy: {sorted(cats or {})}")
+        if any(not isinstance(v, int) or v < 0 for v in cats.values()):
+            fail(f"{where}/{name}: non-natural category cycle count: {cats}")
+        if sum(cats.values()) != total:
+            fail(
+                f"{where}/{name}: conservation violated: "
+                f"sum {sum(cats.values())} != total {total}"
+            )
+        if "bottleneck" not in row:
+            fail(f"{where}/{name}: missing bottleneck field")
+    return total
+
+
+def check_cluster(c, where):
+    lg_total = check_ledger(c.get("ledger"), f"{where}/ledger")
+    if c.get("total_cycles") != lg_total:
+        fail(f"{where}: cluster total {c.get('total_cycles')} != ledger total {lg_total}")
+    layers = c.get("layers")
+    if not isinstance(layers, list) or not layers:
+        fail(f"{where}: layers missing or empty")
+    for l in layers:
+        for key in ("id", "name", "busy_cycles", "span_cycles", "span_share"):
+            if key not in l:
+                fail(f"{where}: layer missing {key}: {l!r}")
+    rf = c.get("roofline")
+    if not isinstance(rf, dict):
+        fail(f"{where}: roofline missing")
+    for key in (
+        "intensity_ops_per_byte",
+        "achieved_ops_per_cycle",
+        "bound_ops_per_cycle",
+        "peak_ops_per_cycle",
+        "utilization",
+    ):
+        if not isinstance(rf.get(key), (int, float)):
+            fail(f"{where}: roofline missing numeric {key}")
+    if rf["achieved_ops_per_cycle"] > rf["bound_ops_per_cycle"] * 1.0001:
+        fail(f"{where}: achieved exceeds the roofline bound: {rf}")
+
+
+def main():
+    if len(sys.argv) < 2:
+        fail("usage: check_profile_json.py out.json [--system]")
+    path, system = sys.argv[1], "--system" in sys.argv[2:]
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("net", "mode", "total_cycles", "clusters"):
+        if key not in doc:
+            fail(f"envelope missing {key}")
+    clusters = doc["clusters"]
+    if not isinstance(clusters, list) or not clusters:
+        fail("clusters missing or empty")
+    for i, c in enumerate(clusters):
+        check_cluster(c, f"clusters[{i}]")
+    if system:
+        if "system" not in doc or "partition" not in doc:
+            fail("system envelope missing system/partition")
+        noc = doc.get("noc_ledger")
+        check_ledger(noc, "noc_ledger")
+        if not any(r.get("name") == "noc" for r in noc["rows"]):
+            fail("noc_ledger has no 'noc' row")
+    print(f"profile-json check ok: {path} ({len(clusters)} cluster(s))")
+
+
+if __name__ == "__main__":
+    main()
