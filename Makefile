@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
+.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke chaos-smoke loadgen-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -46,6 +46,21 @@ serve: build
 # concurrent POST /simulate, byte-identical-report + cache-hit checks.
 serve-smoke:
 	cargo test -q --test integration_server
+
+# Chaos harness (DESIGN.md §11): drive the server under deterministic
+# fault injection (panic/slow/stall) and assert the fault-tolerance
+# contract — deadlines cut runs off with 504 + partial progress,
+# DELETE /jobs/:id cancels cooperatively, identical concurrent requests
+# coalesce onto one execution, the breaker opens and recovers, and no
+# worker slot is ever lost.
+chaos-smoke:
+	cargo test -q --test chaos
+
+# Closed-loop load generator against a loopback server: retrying
+# clients honoring Retry-After; rewrites BENCH_serve_loadgen.json and
+# (with the floor flag) enforces rust/benches/serve_loadgen_floor.json.
+loadgen-smoke:
+	SNAX_BENCH_ENFORCE_FLOOR=1 cargo run --release --example serve_loadgen
 
 # Cycle-accounting profiler smoke (mirrors the CI profile step): run
 # `snax profile` on the single-cluster and multi-cluster shapes and

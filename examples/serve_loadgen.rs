@@ -1,26 +1,145 @@
-//! Load generator for `snax serve` — the repo's first scale/throughput
-//! scenario: start the service in-process on an ephemeral port, hammer
-//! `POST /simulate` from N concurrent client threads over keep-alive
-//! connections, and report end-to-end throughput plus the program-cache
-//! hit rate scraped from `GET /metrics`.
+//! Closed-loop load generator for `snax serve` — the repo's
+//! scale/throughput scenario: start the service in-process on an
+//! ephemeral port, hammer `POST /simulate` from N concurrent client
+//! threads over keep-alive connections, and report end-to-end
+//! throughput, latency percentiles, and the shed/retry story.
+//!
+//! "Closed loop" means each client works through its request list and
+//! *finishes* it: a shed response (`429`/`503` from admission control)
+//! or a dropped connection is retried with exponential backoff,
+//! honoring the server's `Retry-After` header. That exercises the
+//! fault-tolerance surface (DESIGN.md §11) the way a well-behaved
+//! client would, and makes "every request eventually succeeds" an
+//! assertable invariant rather than luck.
 //!
 //! The payload mix rotates through a few distinct `(net, options)`
 //! triples so the content-addressed cache sees both misses (first
 //! touch) and a high hit rate (steady state) — the service's whole
 //! point: compile once, simulate many.
 //!
+//! Emits a machine-readable `BENCH_serve_loadgen.json` at the
+//! workspace root so the serving-path trajectory is tracked across
+//! PRs; with `SNAX_BENCH_ENFORCE_FLOOR=1` the run fails when it drops
+//! below `rust/benches/serve_loadgen_floor.json`.
+//!
 //! Run: `cargo run --release --example serve_loadgen [-- --clients 8 --requests 16]`
 
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use snax::config::ServerConfig;
+use snax::runtime::json::{parse, Value};
 use snax::server::{http, Server};
+
+/// Per-request retry budget: a closed-loop client keeps trying until
+/// the request lands or the budget is spent.
+const MAX_ATTEMPTS: u32 = 8;
+/// First backoff step; doubles per retry, capped below.
+const BACKOFF_BASE: Duration = Duration::from_millis(50);
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// One keep-alive client connection that can transparently reconnect.
+struct Conn {
+    addr: std::net::SocketAddr,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn connect(addr: std::net::SocketAddr) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn { addr, reader, writer: stream })
+    }
+
+    /// One request/response turn; any I/O or framing error surfaces as
+    /// `Err` and poisons the connection (the caller reconnects).
+    #[allow(clippy::type_complexity)]
+    fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+        http::write_request(&mut self.writer, method, path, body, true)?;
+        http::read_response(&mut self.reader)
+            .map_err(|e| std::io::Error::other(e.to_string()))
+    }
+
+    fn reconnect(&mut self) -> std::io::Result<()> {
+        *self = Conn::connect(self.addr)?;
+        Ok(())
+    }
+}
+
+/// Shared tallies across client threads.
+#[derive(Default)]
+struct Tally {
+    ok: AtomicU64,
+    failed: AtomicU64,
+    attempts: AtomicU64,
+    shed: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+fn retry_after(headers: &[(String, String)]) -> Option<Duration> {
+    headers
+        .iter()
+        .find(|(k, _)| k == "retry-after")
+        .and_then(|(_, v)| v.trim().parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
+/// Issue one logical request, retrying sheds and connection drops with
+/// exponential backoff. Returns the end-to-end latency on success.
+fn closed_loop_request(conn: &mut Conn, body: &str, tally: &Tally) -> Option<Duration> {
+    let t0 = Instant::now();
+    let mut backoff = BACKOFF_BASE;
+    for _attempt in 0..MAX_ATTEMPTS {
+        tally.attempts.fetch_add(1, Ordering::Relaxed);
+        match conn.request("POST", "/simulate", body.as_bytes()) {
+            Ok((200, _, _)) => return Some(t0.elapsed()),
+            Ok((429 | 503, headers, _)) => {
+                // Shed by admission control: honor Retry-After, with
+                // exponential backoff as the fallback pace.
+                tally.shed.fetch_add(1, Ordering::Relaxed);
+                let wait = retry_after(&headers).unwrap_or(backoff).max(backoff);
+                std::thread::sleep(wait.min(BACKOFF_CAP));
+            }
+            Ok((_status, _, _)) => {
+                // 4xx/5xx that is not backpressure (bad request, panic)
+                // will not improve with retries.
+                return None;
+            }
+            Err(_) => {
+                tally.reconnects.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(backoff.min(BACKOFF_CAP));
+                if conn.reconnect().is_err() {
+                    continue;
+                }
+            }
+        }
+        backoff = (backoff * 2).min(BACKOFF_CAP);
+    }
+    None
+}
+
+fn percentile_ms(sorted: &[u64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx] as f64 / 1000.0
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
 
 fn main() -> Result<()> {
     let mut clients = 8usize;
@@ -56,44 +175,34 @@ fn main() -> Result<()> {
         r#"{"net":"dae"}"#,
     ];
 
-    let ok = Arc::new(AtomicU64::new(0));
-    let failed = Arc::new(AtomicU64::new(0));
+    let tally = Arc::new(Tally::default());
+    let latencies_us = Arc::new(Mutex::new(Vec::<u64>::new()));
     let t0 = Instant::now();
     let threads: Vec<_> = (0..clients)
         .map(|c| {
-            let ok = ok.clone();
-            let failed = failed.clone();
+            let tally = tally.clone();
+            let latencies_us = latencies_us.clone();
             std::thread::spawn(move || {
-                // One keep-alive connection per client.
-                let Ok(stream) = TcpStream::connect(addr) else {
-                    failed.fetch_add(requests as u64, Ordering::Relaxed);
+                let Ok(mut conn) = Conn::connect(addr) else {
+                    tally.failed.fetch_add(requests as u64, Ordering::Relaxed);
                     return;
                 };
-                let Ok(read_half) = stream.try_clone() else { return };
-                let mut reader = BufReader::new(read_half);
-                let mut writer = stream;
+                let mut mine = Vec::with_capacity(requests);
                 for r in 0..requests {
                     let body = payloads[(c + r) % payloads.len()];
-                    let sent = http::write_request(
-                        &mut writer,
-                        "POST",
-                        "/simulate",
-                        body.as_bytes(),
-                        true,
-                    );
-                    if sent.is_err() {
-                        failed.fetch_add(1, Ordering::Relaxed);
-                        continue;
-                    }
-                    match http::read_response(&mut reader) {
-                        Ok((200, _, _)) => {
-                            ok.fetch_add(1, Ordering::Relaxed);
+                    match closed_loop_request(&mut conn, body, &tally) {
+                        Some(latency) => {
+                            tally.ok.fetch_add(1, Ordering::Relaxed);
+                            mine.push(
+                                u64::try_from(latency.as_micros()).unwrap_or(u64::MAX),
+                            );
                         }
-                        _ => {
-                            failed.fetch_add(1, Ordering::Relaxed);
+                        None => {
+                            tally.failed.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                 }
+                latencies_us.lock().unwrap().extend(mine);
             })
         })
         .collect();
@@ -102,12 +211,10 @@ fn main() -> Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
 
-    // Scrape the service's own metrics for the cache story.
-    let stream = TcpStream::connect(addr)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    http::write_request(&mut writer, "GET", "/metrics", b"", false)?;
-    let (_status, _headers, body) = http::read_response(&mut reader)
+    // Scrape the service's own metrics for the cache + shed story.
+    let mut conn = Conn::connect(addr)?;
+    let (_status, _headers, body) = conn
+        .request("GET", "/metrics", b"")
         .map_err(|e| anyhow::anyhow!("metrics scrape failed: {e}"))?;
     let text = String::from_utf8_lossy(&body);
     let scrape = |name: &str| -> f64 {
@@ -119,21 +226,95 @@ fn main() -> Result<()> {
     };
     let hits = scrape("snax_cache_hits_total");
     let misses = scrape("snax_cache_misses_total");
+    let coalesced = scrape("snax_coalesced_total");
     let lookups = hits + misses;
 
-    let total_ok = ok.load(Ordering::Relaxed);
-    let total_failed = failed.load(Ordering::Relaxed);
+    let total = (clients * requests) as u64;
+    let ok = tally.ok.load(Ordering::Relaxed);
+    let failed = tally.failed.load(Ordering::Relaxed);
+    let attempts = tally.attempts.load(Ordering::Relaxed);
+    let shed = tally.shed.load(Ordering::Relaxed);
+    let reconnects = tally.reconnects.load(Ordering::Relaxed);
+    let mut sorted = latencies_us.lock().unwrap().clone();
+    sorted.sort_unstable();
+    let p50_ms = percentile_ms(&sorted, 0.50);
+    let p99_ms = percentile_ms(&sorted, 0.99);
+    let throughput_rps = ok as f64 / dt.max(1e-9);
+    let shed_rate = shed as f64 / attempts.max(1) as f64;
+    let success_rate = ok as f64 / total.max(1) as f64;
+
     println!(
-        "{total_ok} ok, {total_failed} failed in {dt:.2}s -> {:.1} simulate req/s",
-        total_ok as f64 / dt
+        "{ok}/{total} ok ({failed} failed) in {dt:.2}s -> {throughput_rps:.1} req/s; \
+         p50 {p50_ms:.1} ms, p99 {p99_ms:.1} ms"
+    );
+    println!(
+        "{attempts} attempts, {shed} shed ({:.1}% shed rate), {reconnects} reconnects, \
+         {coalesced:.0} coalesced",
+        100.0 * shed_rate
     );
     println!(
         "program cache: {hits:.0} hits / {misses:.0} misses ({:.0}% hit rate)",
         if lookups > 0.0 { 100.0 * hits / lookups } else { 0.0 }
     );
 
+    let doc = Value::object([
+        ("bench", Value::from("serve_loadgen")),
+        ("clients", Value::from(clients as u64)),
+        ("requests_per_client", Value::from(requests as u64)),
+        ("ok", Value::from(ok)),
+        ("failed", Value::from(failed)),
+        ("attempts", Value::from(attempts)),
+        ("shed", Value::from(shed)),
+        ("reconnects", Value::from(reconnects)),
+        ("coalesced", Value::from(coalesced)),
+        ("success_rate", Value::from(round2(success_rate))),
+        ("shed_rate", Value::from(round2(shed_rate))),
+        ("throughput_rps", Value::from(round2(throughput_rps))),
+        ("p50_ms", Value::from(round2(p50_ms))),
+        ("p99_ms", Value::from(round2(p99_ms))),
+        ("cache_hits", Value::from(hits)),
+        ("cache_misses", Value::from(misses)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_loadgen.json");
+    std::fs::write(out, doc.to_json()).expect("writing BENCH_serve_loadgen.json");
+    println!("wrote {out}");
+
     server.shutdown();
-    anyhow::ensure!(total_failed == 0, "{total_failed} requests failed");
+
+    // Regression floor (CI): deliberately conservative — the closed
+    // loop must land every request, and throughput must not collapse.
+    let enforce = std::env::var("SNAX_BENCH_ENFORCE_FLOOR")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    if enforce {
+        let floor_path =
+            concat!(env!("CARGO_MANIFEST_DIR"), "/benches/serve_loadgen_floor.json");
+        let floor_raw =
+            std::fs::read_to_string(floor_path).expect("reading serve_loadgen_floor.json");
+        let floor = parse(&floor_raw).expect("parsing serve_loadgen_floor.json");
+        let want_success = floor
+            .get("success_rate_floor")
+            .and_then(|v| v.as_f64())
+            .expect("success_rate_floor missing");
+        anyhow::ensure!(
+            success_rate >= want_success,
+            "success rate {success_rate:.2} below floor {want_success:.2}"
+        );
+        let want_rps = floor
+            .get("throughput_rps_floor")
+            .and_then(|v| v.as_f64())
+            .expect("throughput_rps_floor missing");
+        anyhow::ensure!(
+            throughput_rps >= want_rps,
+            "throughput {throughput_rps:.2} req/s below floor {want_rps:.2}"
+        );
+        println!(
+            "floor check ok: success {success_rate:.2} >= {want_success:.2}, \
+             {throughput_rps:.2} >= {want_rps:.2} req/s"
+        );
+    }
+
+    anyhow::ensure!(failed == 0, "{failed} requests failed after retries");
     anyhow::ensure!(hits > 0.0, "expected cache hits under repeat load");
     println!("serve_loadgen OK");
     Ok(())

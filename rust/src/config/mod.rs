@@ -595,6 +595,26 @@ pub struct ServerConfig {
     /// jobs replay each other's barrier-to-barrier phases; see
     /// DESIGN.md §8). `0` disables phase memoization entirely.
     pub phase_cache_capacity: usize,
+    /// Server-default deadline applied to every simulate/sweep request
+    /// that does not carry its own `"deadline_ms"` (`0` = no default:
+    /// requests without a deadline run to completion).
+    pub default_deadline_ms: u64,
+    /// Three-state circuit breaker (closed/open/half-open) shedding
+    /// heavy endpoints with `503 + Retry-After` when the failure rate
+    /// or queue occupancy says the pool is unhealthy (DESIGN.md §11).
+    pub breaker: bool,
+    /// How long an opened breaker sheds before probing half-open.
+    pub breaker_open_ms: u64,
+    /// Per-client token-bucket quota in requests/second, keyed by the
+    /// `X-Snax-Client` header (`0` = no quota).
+    pub quota_rps: u32,
+    /// Token-bucket burst capacity (`0` = derived: `2 * quota_rps`).
+    pub quota_burst: u32,
+    /// Fault-injection spec for the chaos harness, e.g.
+    /// `"panic:0.2,slow:0.1,slow_ms:50,stall:0.05,first:8"` — test-only
+    /// knob; `None` falls back to the `SNAX_FAULT` environment
+    /// variable, and production deployments leave both unset.
+    pub fault_spec: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -608,6 +628,12 @@ impl Default for ServerConfig {
             cache_capacity: 64,
             queue_depth: workers * 4,
             phase_cache_capacity: 2048,
+            default_deadline_ms: 0,
+            breaker: true,
+            breaker_open_ms: 1000,
+            quota_rps: 0,
+            quota_burst: 0,
+            fault_spec: None,
         }
     }
 }
@@ -622,6 +648,13 @@ impl ServerConfig {
         }
         if self.cache_capacity == 0 {
             bail!("cache capacity must be at least 1 entry");
+        }
+        if self.breaker && self.breaker_open_ms == 0 {
+            bail!("breaker_open_ms must be at least 1 when the breaker is enabled");
+        }
+        if let Some(spec) = &self.fault_spec {
+            crate::server::fault::FaultPlan::parse(spec)
+                .with_context(|| format!("invalid fault_spec '{spec}'"))?;
         }
         Ok(())
     }
@@ -866,6 +899,20 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = ServerConfig { cache_capacity: 0, ..ServerConfig::default() };
         assert!(bad.validate().is_err());
+        let bad = ServerConfig { breaker_open_ms: 0, ..ServerConfig::default() };
+        assert!(bad.validate().is_err());
+        let ok = ServerConfig { breaker: false, breaker_open_ms: 0, ..ServerConfig::default() };
+        ok.validate().unwrap();
+        let bad = ServerConfig {
+            fault_spec: Some("panic:nope".into()),
+            ..ServerConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let ok = ServerConfig {
+            fault_spec: Some("panic:0.5,slow:0.25,slow_ms:20,first:4".into()),
+            ..ServerConfig::default()
+        };
+        ok.validate().unwrap();
     }
 
     #[test]

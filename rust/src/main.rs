@@ -20,6 +20,7 @@
 //!               (cycle-accounting ledger: stall-cause attribution per
 //!               unit, roofline placement, per-layer spans)
 //! snax serve    [--port P] [--workers N] [--cache N] [--queue N]
+//!               [--deadline-ms D] [--breaker on|off] [--quota-rps R]
 //! snax fig8     (the heterogeneous-acceleration cascade)
 //! snax roofline --tiles 16,32,64,96,128 [--baseline]
 //! snax report   (area summary for all presets)
@@ -670,6 +671,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.phase_cache_capacity =
             args.get("phase-cache", "2048").parse().context("bad --phase-cache")?;
     }
+    if args.has("deadline-ms") {
+        cfg.default_deadline_ms =
+            args.get("deadline-ms", "0").parse().context("bad --deadline-ms")?;
+    }
+    if args.has("breaker") {
+        cfg.breaker = match args.get("breaker", "on").as_str() {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => bail!("bad --breaker '{other}' (want on|off)"),
+        };
+    }
+    if args.has("quota-rps") {
+        cfg.quota_rps = args.get("quota-rps", "0").parse().context("bad --quota-rps")?;
+    }
     snax::server::run_blocking(cfg)
 }
 
@@ -799,7 +814,9 @@ fn help() {
          \u{20}             shared phase cache across the batch)\n\
          \u{20}  serve     [--port 8080] [--workers N] [--cache entries] [--queue depth]\n\
          \u{20}            [--phase-cache slots] (0 disables phase memoization)\n\
-         \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6)\n\
+         \u{20}            [--deadline-ms D] (default per-request wall deadline, 0=off)\n\
+         \u{20}            [--breaker on|off] [--quota-rps R] (admission control)\n\
+         \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6, §11)\n\
          \u{20}  profile   --net fig6a --cluster fig6d [--system soc2|soc4]\n\
          \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\
          \u{20}            [--memo on|off] [--json out.json]\n\

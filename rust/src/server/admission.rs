@@ -1,0 +1,435 @@
+//! Admission control for the heavy endpoints: per-client token-bucket
+//! quotas and a three-state circuit breaker (DESIGN.md §11).
+//!
+//! Both mechanisms shed *before* work reaches the pool, with a
+//! `Retry-After` hint so well-behaved clients back off instead of
+//! retry-storming:
+//!
+//! * **quota** (`429`) — a token bucket per `X-Snax-Client`, refilled
+//!   at `quota_rps`, capped at the burst size. Protects tenants from
+//!   each other.
+//! * **breaker** (`503`) — closed → open on a failure-rate window or a
+//!   queue-occupancy watermark; open → half-open after a cool-down;
+//!   half-open admits a couple of probe requests and either closes (all
+//!   probes succeed) or re-opens (any probe fails). Protects the
+//!   service from itself: when jobs are panicking or the queue is
+//!   drowning, fast 503s beat slow 500s.
+//!
+//! Exactly-once accounting contract: every request admitted past
+//! [`Admission::admit`] must call [`Admission::record_outcome`] exactly
+//! once (success = final HTTP status < 500). Half-open probe slots are
+//! reclaimed by that call, so a missed call would wedge the breaker in
+//! half-open.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerConfig;
+
+/// Sliding outcome-window length driving the failure-rate signal.
+const WINDOW: usize = 16;
+/// Minimum samples in the window before the failure rate can trip.
+const MIN_SAMPLES: usize = 8;
+/// Failure fraction at which the breaker opens.
+const FAIL_RATE: f64 = 0.5;
+/// Queue occupancy (len/depth) at which admission sheds and records a
+/// pressure failure — the breaker opens *before* the queue is full.
+const QUEUE_WATERMARK: f64 = 0.85;
+/// Probe requests admitted while half-open.
+const HALF_OPEN_PROBES: u32 = 2;
+/// Cap on tracked quota clients (drop-all reset beyond it; a client
+/// that was pruned just starts from a full bucket).
+const MAX_QUOTA_CLIENTS: usize = 4096;
+
+/// Why a request was shed. Carries the `Retry-After` hint in seconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// Per-client token bucket empty → 429.
+    Quota { retry_after_s: u64 },
+    /// Breaker open (or half-open probes exhausted) → 503.
+    Breaker { retry_after_s: u64 },
+    /// Queue occupancy past the watermark → 503.
+    Queue { retry_after_s: u64 },
+}
+
+impl Shed {
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Shed::Quota { .. } => "quota",
+            Shed::Breaker { .. } => "breaker",
+            Shed::Queue { .. } => "queue",
+        }
+    }
+
+    pub fn retry_after_s(&self) -> u64 {
+        match *self {
+            Shed::Quota { retry_after_s }
+            | Shed::Breaker { retry_after_s }
+            | Shed::Queue { retry_after_s } => retry_after_s,
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum BreakerState {
+    Closed,
+    Open { until: Instant },
+    HalfOpen { inflight: u32, successes: u32 },
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    /// Recent outcomes (true = success), newest at the back.
+    window: VecDeque<bool>,
+}
+
+struct Bucket {
+    tokens: f64,
+    last_refill: Instant,
+}
+
+struct QuotaInner {
+    buckets: HashMap<String, Bucket>,
+}
+
+/// The admission layer. One per [`super::api::AppState`].
+pub struct Admission {
+    quota_rps: u32,
+    quota_burst: f64,
+    open_for: Duration,
+    quota: Option<Mutex<QuotaInner>>,
+    breaker: Option<Mutex<BreakerInner>>,
+    shed_quota: AtomicU64,
+    shed_breaker: AtomicU64,
+    shed_queue: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(cfg: &ServerConfig) -> Self {
+        let quota = (cfg.quota_rps > 0)
+            .then(|| Mutex::new(QuotaInner { buckets: HashMap::new() }));
+        let breaker = cfg.breaker.then(|| {
+            Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                window: VecDeque::with_capacity(WINDOW),
+            })
+        });
+        let burst = if cfg.quota_burst > 0 {
+            cfg.quota_burst
+        } else {
+            cfg.quota_rps.saturating_mul(2).max(1)
+        };
+        Admission {
+            quota_rps: cfg.quota_rps,
+            quota_burst: f64::from(burst),
+            open_for: Duration::from_millis(cfg.breaker_open_ms.max(1)),
+            quota,
+            breaker,
+            shed_quota: AtomicU64::new(0),
+            shed_breaker: AtomicU64::new(0),
+            shed_queue: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit or shed one heavy request. `queue_len`/`queue_depth` feed
+    /// the occupancy watermark. On `Err` the shed counter has already
+    /// been bumped; on `Ok` the caller owes exactly one
+    /// [`record_outcome`](Self::record_outcome).
+    pub fn admit(
+        &self,
+        client: &str,
+        queue_len: usize,
+        queue_depth: usize,
+    ) -> Result<(), Shed> {
+        if let Some(quota) = &self.quota {
+            if let Some(shed) = self.check_quota(quota, client, Instant::now()) {
+                self.note_shed(&shed);
+                return Err(shed);
+            }
+        }
+        let Some(breaker) = &self.breaker else { return Ok(()) };
+        let mut b = breaker.lock().unwrap();
+        let now = Instant::now();
+        advance(&mut b, now);
+        match b.state {
+            BreakerState::Closed => {
+                let watermark =
+                    (queue_depth as f64 * QUEUE_WATERMARK).ceil().max(1.0) as usize;
+                if queue_len >= watermark {
+                    // Pressure shed counts as a failure: a sustained
+                    // near-full queue opens the breaker before the pool
+                    // saturates outright.
+                    push_outcome(&mut b, false, now, self.open_for);
+                    let shed = Shed::Queue { retry_after_s: 1 };
+                    drop(b);
+                    self.note_shed(&shed);
+                    return Err(shed);
+                }
+                Ok(())
+            }
+            BreakerState::Open { until } => {
+                let shed = Shed::Breaker {
+                    retry_after_s: retry_after(until, now),
+                };
+                drop(b);
+                self.note_shed(&shed);
+                Err(shed)
+            }
+            BreakerState::HalfOpen { inflight, successes } => {
+                if inflight >= HALF_OPEN_PROBES {
+                    let shed = Shed::Breaker { retry_after_s: 1 };
+                    drop(b);
+                    self.note_shed(&shed);
+                    return Err(shed);
+                }
+                b.state = BreakerState::HalfOpen {
+                    inflight: inflight + 1,
+                    successes,
+                };
+                Ok(())
+            }
+        }
+    }
+
+    /// Report the final status of an admitted request (success = the
+    /// response was not a 5xx). Required exactly once per `Ok` admit.
+    pub fn record_outcome(&self, success: bool) {
+        let Some(breaker) = &self.breaker else { return };
+        let mut b = breaker.lock().unwrap();
+        let now = Instant::now();
+        advance(&mut b, now);
+        match b.state {
+            BreakerState::HalfOpen { inflight, successes } => {
+                if !success {
+                    // A failed probe re-opens for a full cool-down.
+                    b.state = BreakerState::Open { until: now + self.open_for };
+                    b.window.clear();
+                } else if successes + 1 >= HALF_OPEN_PROBES {
+                    b.state = BreakerState::Closed;
+                    b.window.clear();
+                } else {
+                    b.state = BreakerState::HalfOpen {
+                        inflight: inflight.saturating_sub(1),
+                        successes: successes + 1,
+                    };
+                }
+            }
+            BreakerState::Closed => push_outcome(&mut b, success, now, self.open_for),
+            // Stragglers finishing after the breaker opened carry no
+            // new signal — the open window already decided.
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Breaker state as a metric value: 0 = closed (or breaker off),
+    /// 1 = open, 2 = half-open.
+    pub fn breaker_state(&self) -> u64 {
+        let Some(breaker) = &self.breaker else { return 0 };
+        let mut b = breaker.lock().unwrap();
+        advance(&mut b, Instant::now());
+        match b.state {
+            BreakerState::Closed => 0,
+            BreakerState::Open { .. } => 1,
+            BreakerState::HalfOpen { .. } => 2,
+        }
+    }
+
+    pub fn breaker_state_name(&self) -> &'static str {
+        match self.breaker_state() {
+            0 if self.breaker.is_none() => "off",
+            0 => "closed",
+            1 => "open",
+            _ => "half-open",
+        }
+    }
+
+    /// Shed counters by reason, for `/metrics`
+    /// (`snax_requests_shed_total{reason=...}`).
+    pub fn shed_counts(&self) -> [(&'static str, u64); 3] {
+        [
+            ("breaker", self.shed_breaker.load(Ordering::Relaxed)),
+            ("queue", self.shed_queue.load(Ordering::Relaxed)),
+            ("quota", self.shed_quota.load(Ordering::Relaxed)),
+        ]
+    }
+
+    /// Count a shed decided outside `admit` (the pool's own queue-full
+    /// 503 after admission raced new arrivals).
+    pub fn note_queue_shed(&self) {
+        self.shed_queue.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_shed(&self, shed: &Shed) {
+        match shed {
+            Shed::Quota { .. } => &self.shed_quota,
+            Shed::Breaker { .. } => &self.shed_breaker,
+            Shed::Queue { .. } => &self.shed_queue,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn check_quota(
+        &self,
+        quota: &Mutex<QuotaInner>,
+        client: &str,
+        now: Instant,
+    ) -> Option<Shed> {
+        let mut q = quota.lock().unwrap();
+        if q.buckets.len() > MAX_QUOTA_CLIENTS {
+            q.buckets.clear();
+        }
+        let bucket = q.buckets.entry(client.to_string()).or_insert(Bucket {
+            tokens: self.quota_burst,
+            last_refill: now,
+        });
+        let elapsed = now.saturating_duration_since(bucket.last_refill);
+        bucket.last_refill = now;
+        bucket.tokens = (bucket.tokens
+            + elapsed.as_secs_f64() * f64::from(self.quota_rps))
+        .min(self.quota_burst);
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            None
+        } else {
+            let deficit = 1.0 - bucket.tokens;
+            let wait_s = (deficit / f64::from(self.quota_rps.max(1))).ceil() as u64;
+            Some(Shed::Quota { retry_after_s: wait_s.max(1) })
+        }
+    }
+}
+
+/// Lazy state advance: an expired open window becomes half-open the
+/// next time anyone looks.
+fn advance(b: &mut BreakerInner, now: Instant) {
+    if let BreakerState::Open { until } = b.state {
+        if now >= until {
+            b.state = BreakerState::HalfOpen { inflight: 0, successes: 0 };
+        }
+    }
+}
+
+/// Record a closed-state outcome and trip to open when the window says
+/// the service is failing.
+fn push_outcome(b: &mut BreakerInner, success: bool, now: Instant, open_for: Duration) {
+    if b.window.len() >= WINDOW {
+        b.window.pop_front();
+    }
+    b.window.push_back(success);
+    let failures = b.window.iter().filter(|ok| !**ok).count();
+    if b.window.len() >= MIN_SAMPLES
+        && failures as f64 / b.window.len() as f64 >= FAIL_RATE
+    {
+        b.state = BreakerState::Open { until: now + open_for };
+    }
+}
+
+fn retry_after(until: Instant, now: Instant) -> u64 {
+    let remaining = until.saturating_duration_since(now);
+    (remaining.as_millis() as u64).div_ceil(1000).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(breaker: bool, quota_rps: u32) -> ServerConfig {
+        ServerConfig {
+            breaker,
+            breaker_open_ms: 50,
+            quota_rps,
+            ..ServerConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_admission_admits_everything() {
+        let adm = Admission::new(&cfg(false, 0));
+        for _ in 0..100 {
+            adm.admit("default", 0, 16).unwrap();
+            adm.record_outcome(false);
+        }
+        assert_eq!(adm.breaker_state(), 0);
+        assert_eq!(adm.breaker_state_name(), "off");
+    }
+
+    #[test]
+    fn quota_bucket_exhausts_and_refills() {
+        let adm = Admission::new(&cfg(false, 1000));
+        // Burst = 2 * rps = 2000 tokens available immediately.
+        let mut shed = None;
+        for _ in 0..2001 {
+            if let Err(s) = adm.admit("tenant-a", 0, 16) {
+                shed = Some(s);
+                break;
+            }
+        }
+        let shed = shed.expect("bucket must exhaust within burst+1 requests");
+        assert_eq!(shed.reason(), "quota");
+        assert!(shed.retry_after_s() >= 1);
+        // A different client has its own bucket.
+        adm.admit("tenant-b", 0, 16).unwrap();
+        adm.record_outcome(true);
+        // Refill at 1000 rps: ~10ms buys ~10 tokens.
+        std::thread::sleep(Duration::from_millis(20));
+        adm.admit("tenant-a", 0, 16).unwrap();
+        let [(_, _), (_, _), (_, quota_sheds)] = adm.shed_counts();
+        assert!(quota_sheds >= 1);
+    }
+
+    #[test]
+    fn breaker_trips_on_failures_and_recovers_via_half_open() {
+        let adm = Admission::new(&cfg(true, 0));
+        // MIN_SAMPLES consecutive failures trip it.
+        for _ in 0..MIN_SAMPLES {
+            adm.admit("default", 0, 16).unwrap();
+            adm.record_outcome(false);
+        }
+        assert_eq!(adm.breaker_state(), 1);
+        let shed = adm.admit("default", 0, 16).unwrap_err();
+        assert_eq!(shed.reason(), "breaker");
+        assert!(shed.retry_after_s() >= 1);
+        // After the cool-down: half-open, limited probes.
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(adm.breaker_state(), 2);
+        adm.admit("default", 0, 16).unwrap();
+        adm.admit("default", 0, 16).unwrap();
+        assert!(adm.admit("default", 0, 16).is_err(), "probe slots exhausted");
+        // Both probes succeed → closed.
+        adm.record_outcome(true);
+        adm.record_outcome(true);
+        assert_eq!(adm.breaker_state(), 0);
+        adm.admit("default", 0, 16).unwrap();
+        adm.record_outcome(true);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let adm = Admission::new(&cfg(true, 0));
+        for _ in 0..MIN_SAMPLES {
+            adm.admit("default", 0, 16).unwrap();
+            adm.record_outcome(false);
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        adm.admit("default", 0, 16).unwrap();
+        adm.record_outcome(false);
+        assert_eq!(adm.breaker_state(), 1, "failed probe must re-open");
+    }
+
+    #[test]
+    fn queue_watermark_sheds_and_feeds_the_breaker() {
+        let adm = Admission::new(&cfg(true, 0));
+        // 14/16 ≥ 85% occupancy: shed with reason "queue"...
+        let shed = adm.admit("default", 14, 16).unwrap_err();
+        assert_eq!(shed.reason(), "queue");
+        // ...and repeated pressure alone opens the breaker.
+        for _ in 0..MIN_SAMPLES {
+            let _ = adm.admit("default", 14, 16);
+        }
+        assert_eq!(adm.breaker_state(), 1);
+        let [(_, breaker_sheds), (_, queue_sheds), _] = adm.shed_counts();
+        assert!(queue_sheds >= MIN_SAMPLES as u64);
+        let _ = breaker_sheds;
+    }
+}

@@ -10,10 +10,20 @@
 //!   ([`crate::parallel`]), results returned **in job order**
 //!   regardless of thread count or completion order.
 //! * `GET /jobs/:id`  — state/result of a detached job.
+//! * `DELETE /jobs/:id` — cooperative cancel of a detached job (the
+//!   engine observes the token at quantum granularity).
 //! * `GET /healthz`   — liveness + basic load info.
 //! * `GET /metrics`   — Prometheus text: per-endpoint request counters
 //!   and latency histograms, cache hit/miss/eviction counters, queue
 //!   and worker gauges.
+//!
+//! Fault tolerance (DESIGN.md §11): heavy endpoints pass admission
+//! control (per-client quotas + circuit breaker → `429`/`503` with
+//! `Retry-After`), identical concurrent simulate/sweep requests
+//! coalesce onto one simulation, `"deadline_ms"` (or the server
+//! default) bounds a run's wall time (`504` with partial progress on
+//! expiry), and a panicking job becomes a `500` without losing its
+//! worker slot.
 //!
 //! Request body (`/compile`, `/simulate`, and each element of
 //! `/sweep`'s `"jobs"` array):
@@ -28,7 +38,8 @@
 //!   "inferences": 1,
 //!   "max_weight_slots": 2,
 //!   "engine": "event" | "exact",
-//!   "detach": false
+//!   "detach": false,
+//!   "deadline_ms": 250
 //! }
 //! ```
 //!
@@ -47,7 +58,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -61,11 +72,14 @@ use crate::models;
 use crate::parallel;
 use crate::runtime::json::{self, Value};
 use crate::sim::{
-    ledger, Cluster, LedgerReport, NocStats, PhaseCache, ProgressSink, SimMode, SimReport,
-    System, SystemReport,
+    ledger, CancelReason, CancelToken, Cancelled, Cluster, LedgerReport, NocStats,
+    PhaseCache, ProgressSink, SimMode, SimReport, System, SystemReport,
 };
 
+use super::admission::{Admission, Shed};
 use super::cache::{ProgramCache, SystemCache};
+use super::fault::FaultPlan;
+use super::flight::{mix_key, Flight, Join, Outcome};
 use super::http::{Request, Response};
 use super::pool::{SubmitError, WorkerPool};
 
@@ -88,6 +102,9 @@ struct SimRequest {
     /// — the report gains a `"ledger"` rollup, and detached jobs stream
     /// phase-boundary ledger snapshots through `GET /jobs/:id`.
     profile: bool,
+    /// Per-request wall deadline in milliseconds (`None` = the server
+    /// default, which may itself be "no deadline").
+    deadline_ms: Option<u64>,
 }
 
 fn parse_sim_request(body: &[u8]) -> Result<SimRequest> {
@@ -178,11 +195,29 @@ fn parse_sim_value(v: &Value) -> Result<SimRequest> {
     };
     let detach = v.get("detach").and_then(|x| x.as_bool()).unwrap_or(false);
     let profile = v.get("profile").and_then(|x| x.as_bool()).unwrap_or(false);
-    Ok(SimRequest { graph, cfg, system, opts, mode, detach, profile })
+    let deadline_ms = parse_deadline_ms(v)?;
+    Ok(SimRequest { graph, cfg, system, opts, mode, detach, profile, deadline_ms })
 }
 
-/// Parse a `POST /sweep` body: `{"jobs": [<sim request>, ...]}`.
-fn parse_sweep_request(body: &[u8]) -> Result<Vec<SimRequest>> {
+/// Optional `"deadline_ms"` field, bounded to one hour.
+fn parse_deadline_ms(v: &Value) -> Result<Option<u64>> {
+    match v.get("deadline_ms") {
+        None => Ok(None),
+        Some(x) => {
+            let ms = x.as_u64().context("'deadline_ms' must be a positive integer")?;
+            if !(1..=3_600_000).contains(&ms) {
+                bail!("'deadline_ms' must be in 1..=3600000, got {ms}");
+            }
+            Ok(Some(ms))
+        }
+    }
+}
+
+/// Parse a `POST /sweep` body:
+/// `{"jobs": [<sim request>, ...], "deadline_ms": <optional>}`.
+/// The deadline is sweep-wide (one token shared by every job), so
+/// per-job `deadline_ms` is rejected.
+fn parse_sweep_request(body: &[u8]) -> Result<(Vec<SimRequest>, Option<u64>)> {
     let text = std::str::from_utf8(body).context("body must be UTF-8")?;
     let v = json::parse(text).context("body must be valid JSON")?;
     let jobs = match v.get("jobs") {
@@ -195,7 +230,9 @@ fn parse_sweep_request(body: &[u8]) -> Result<Vec<SimRequest>> {
     if jobs.len() > MAX_SWEEP_JOBS {
         bail!("'jobs' is limited to {MAX_SWEEP_JOBS} entries, got {}", jobs.len());
     }
-    jobs.iter()
+    let deadline_ms = parse_deadline_ms(&v)?;
+    let parsed = jobs
+        .iter()
         .enumerate()
         .map(|(i, j)| {
             let req =
@@ -203,9 +240,13 @@ fn parse_sweep_request(body: &[u8]) -> Result<Vec<SimRequest>> {
             if req.detach {
                 bail!("jobs[{i}]: sweep jobs cannot set 'detach'");
             }
+            if req.deadline_ms.is_some() {
+                bail!("jobs[{i}]: set 'deadline_ms' at the sweep top level, not per job");
+            }
             Ok(req)
         })
-        .collect()
+        .collect::<Result<Vec<_>>>()?;
+    Ok((parsed, deadline_ms))
 }
 
 /// Upper bound on one sweep's fan-out (bounds memory for the collected
@@ -283,6 +324,15 @@ enum JobState {
     Running(Arc<ProgressSink>),
     Done(String),
     Failed(String),
+    /// Terminal: the job observed its cancel token (client `DELETE` or
+    /// deadline) and unwound cooperatively.
+    Cancelled(String),
+}
+
+impl JobState {
+    fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed(_) | JobState::Cancelled(_))
+    }
 }
 
 /// Finished jobs retained for polling before being pruned FIFO.
@@ -291,6 +341,8 @@ const MAX_FINISHED_JOBS: usize = 1024;
 #[derive(Default)]
 struct JobsInner {
     map: HashMap<u64, JobState>,
+    /// Cancel tokens of live jobs, dropped once the job is terminal.
+    tokens: HashMap<u64, Arc<CancelToken>>,
     finished: VecDeque<u64>,
 }
 
@@ -301,17 +353,20 @@ struct JobTable {
 }
 
 impl JobTable {
-    fn create(&self) -> u64 {
+    fn create(&self, token: Arc<CancelToken>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-        self.inner.lock().unwrap().map.insert(id, JobState::Queued);
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.insert(id, JobState::Queued);
+        inner.tokens.insert(id, token);
         id
     }
 
     fn set(&self, id: u64, state: JobState) {
-        let finished = matches!(state, JobState::Done(_) | JobState::Failed(_));
+        let finished = state.is_terminal();
         let mut inner = self.inner.lock().unwrap();
         inner.map.insert(id, state);
         if finished {
+            inner.tokens.remove(&id);
             inner.finished.push_back(id);
             while inner.finished.len() > MAX_FINISHED_JOBS {
                 if let Some(old) = inner.finished.pop_front() {
@@ -322,7 +377,24 @@ impl JobTable {
     }
 
     fn remove(&self, id: u64) {
-        self.inner.lock().unwrap().map.remove(&id);
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.remove(&id);
+        inner.tokens.remove(&id);
+    }
+
+    /// Request cancellation: `None` = unknown job, `Some(false)` =
+    /// already terminal (too late), `Some(true)` = token fired; the job
+    /// will observe it at its next quantum.
+    fn cancel(&self, id: u64) -> Option<bool> {
+        let inner = self.inner.lock().unwrap();
+        let state = inner.map.get(&id)?;
+        if state.is_terminal() {
+            return Some(false);
+        }
+        if let Some(token) = inner.tokens.get(&id) {
+            token.cancel();
+        }
+        Some(true)
     }
 
     /// Render the status body for a job, or `None` if unknown/expired.
@@ -357,6 +429,12 @@ impl JobTable {
                 ("state", Value::from("failed")),
             ])
             .to_json(),
+            JobState::Cancelled(why) => Value::object([
+                ("error", Value::from(why.as_str())),
+                ("id", Value::from(id)),
+                ("state", Value::from("cancelled")),
+            ])
+            .to_json(),
         })
     }
 
@@ -387,6 +465,20 @@ pub struct AppState {
     pub phase_cache: Option<Arc<PhaseCache>>,
     pub pool: WorkerPool,
     pub metrics: Metrics,
+    /// Singleflight table coalescing identical concurrent
+    /// simulate/sweep requests onto one execution (DESIGN.md §11).
+    pub flight: Flight,
+    /// Per-client quotas + circuit breaker in front of the pool.
+    pub admission: Admission,
+    /// Deterministic fault injection (tests/chaos only; `None` in
+    /// production).
+    fault: Option<FaultPlan>,
+    /// Monotonic job sequence — the fault plan's deterministic key.
+    job_seq: AtomicU64,
+    /// Panics caught at the API layer (sync `run_on_pool` + detached
+    /// jobs); added to the pool's own count for
+    /// `snax_job_panics_total`.
+    job_panics: AtomicU64,
     jobs: JobTable,
     /// Utilization / NoC gauges of the most recently completed
     /// simulation, exported on `GET /metrics` (last writer wins).
@@ -414,6 +506,11 @@ impl AppState {
                 .then(|| Arc::new(PhaseCache::new(cfg.phase_cache_capacity))),
             pool: WorkerPool::new(cfg.workers, cfg.queue_depth),
             metrics: Metrics::default(),
+            flight: Flight::default(),
+            admission: Admission::new(cfg),
+            fault: FaultPlan::from_config(cfg),
+            job_seq: AtomicU64::new(0),
+            job_panics: AtomicU64::new(0),
             jobs: JobTable::default(),
             run_gauges: Mutex::new(RunGauges::default()),
             draining: AtomicBool::new(false),
@@ -456,6 +553,9 @@ pub fn route(state: &Arc<AppState>, req: &Request) -> Response {
         ("GET", path) if path.starts_with("/jobs/") => {
             (Endpoint::Jobs, handle_job(state, path))
         }
+        ("DELETE", path) if path.starts_with("/jobs/") => {
+            (Endpoint::Jobs, handle_job_cancel(state, path))
+        }
         ("GET", "/") => (Endpoint::Other, index()),
         (_, "/compile" | "/simulate" | "/sweep" | "/healthz" | "/metrics") => {
             (Endpoint::Other, Response::text(405, "method not allowed\n"))
@@ -476,6 +576,7 @@ fn index() -> Response {
          POST /sweep      {\"jobs\":[<simulate bodies>]} — parallel fan-out,\n\
         \u{20}                results in job order\n\
          GET  /jobs/:id   detached job status/result\n\
+         DELETE /jobs/:id cancel a detached job\n\
          GET  /healthz    liveness\n\
          GET  /metrics    Prometheus metrics\n",
     )
@@ -486,24 +587,169 @@ fn err_body(msg: &str) -> String {
 }
 
 /// Run a closure on the worker pool and wait for its result.
-/// Backpressure and shutdown map to ready-made 503 responses.
+/// Backpressure and shutdown map to ready-made 503 responses; a
+/// panicking job is caught here so the caller gets a 500 (and the
+/// worker keeps its slot and its result channel) instead of a hang.
 fn run_on_pool<T: Send + 'static>(
     state: &Arc<AppState>,
     f: impl FnOnce() -> T + Send + 'static,
 ) -> Result<T, Response> {
-    let (tx, rx) = mpsc::sync_channel::<T>(1);
+    let (tx, rx) = mpsc::sync_channel(1);
     match state.pool.submit(Box::new(move || {
-        let _ = tx.send(f());
+        let _ = tx.send(std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)));
     })) {
-        Ok(()) => rx.recv().map_err(|_| {
-            Response::json(500, err_body("worker dropped the job (panicked?)"))
-        }),
+        Ok(()) => match rx.recv() {
+            Ok(Ok(value)) => Ok(value),
+            Ok(Err(payload)) => {
+                state.job_panics.fetch_add(1, Ordering::Relaxed);
+                Err(Response::json(
+                    500,
+                    err_body(&format!("job panicked: {}", panic_message(payload.as_ref()))),
+                ))
+            }
+            Err(_) => Err(Response::json(500, err_body("worker dropped the job"))),
+        },
         Err(SubmitError::Full) => {
-            Err(Response::json(503, err_body("job queue is full — retry later")))
+            state.admission.note_queue_shed();
+            Err(Response::json(503, err_body("job queue is full — retry later"))
+                .with_header("Retry-After", "1"))
         }
         Err(SubmitError::ShuttingDown) => {
             Err(Response::json(503, err_body("server is shutting down")))
         }
+    }
+}
+
+/// Best-effort text from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("<non-string panic payload>")
+}
+
+/// Admission identity: clients self-identify via `X-Snax-Client`
+/// (quotas are advisory fairness, not auth); everyone else shares one
+/// bucket.
+fn client_of(req: &Request) -> &str {
+    req.header("x-snax-client").unwrap_or("default")
+}
+
+/// Quota + breaker gate for the heavy endpoints. On `Ok` the caller
+/// owes the admission layer exactly one `record_outcome`.
+fn admit(state: &AppState, req: &Request) -> Result<(), Shed> {
+    state.admission.admit(client_of(req), state.pool.queue_len(), state.pool.queue_depth())
+}
+
+fn shed_response(shed: &Shed) -> Response {
+    let (status, msg) = match shed {
+        Shed::Quota { .. } => (429, "per-client quota exceeded — slow down"),
+        Shed::Breaker { .. } => (503, "circuit breaker open — shedding load"),
+        Shed::Queue { .. } => (503, "job queue is saturated — retry later"),
+    };
+    Response::json(status, err_body(msg))
+        .with_header("Retry-After", &shed.retry_after_s().to_string())
+}
+
+/// The wall deadline for a request: explicit `deadline_ms` wins, then
+/// the server default (0 = none).
+fn effective_deadline(state: &AppState, explicit_ms: Option<u64>) -> Option<Duration> {
+    explicit_ms
+        .or((state.server_cfg.default_deadline_ms > 0)
+            .then_some(state.server_cfg.default_deadline_ms))
+        .map(Duration::from_millis)
+}
+
+/// Flight key for one simulate job: the cache fingerprint (program or
+/// system) mixed with every request facet that changes the response
+/// bytes or lifetime. Identical key ⇒ identical body, which is what
+/// makes coalescing sound (DESIGN.md §11).
+fn simulate_flight_key(req: &SimRequest) -> u64 {
+    let base = match &req.system {
+        Some((sys, strategy)) => system_key(&req.graph, sys, &req.opts, *strategy),
+        None => program_key(&req.graph, &req.cfg, &req.opts),
+    };
+    mix_key(&[
+        0x73_69_6d, // "sim" tag — keeps /simulate and /sweep keys apart
+        base,
+        req.mode as u64,
+        u64::from(req.profile),
+        req.deadline_ms.unwrap_or(0),
+    ])
+}
+
+/// Render a shared flight outcome back into a per-connection response.
+fn outcome_response(out: &Outcome, coalesced: bool) -> Response {
+    let mut resp = Response::json(out.status, out.body.clone());
+    if let Some(cache) = out.cache {
+        resp = resp.with_header("X-Snax-Cache", cache);
+    }
+    if out.status == 503 {
+        resp = resp.with_header("Retry-After", "1");
+    }
+    if coalesced {
+        resp = resp.with_header("X-Snax-Coalesced", "1");
+    }
+    resp
+}
+
+/// Upper bound on a follower's wait when the request has no deadline.
+/// The [`super::flight::FlightGuard`] protocol guarantees the leader
+/// publishes even when it unwinds, so this is a belt-and-braces bound,
+/// not the normal exit path.
+const FOLLOWER_WAIT_CAP: Duration = Duration::from_secs(600);
+
+fn await_leader(
+    rx: mpsc::Receiver<Arc<Outcome>>,
+    deadline: Option<Duration>,
+) -> Arc<Outcome> {
+    let cap = match deadline {
+        // The leader shares our deadline (it is part of the key) and
+        // answers 504 itself on expiry; the grace second covers its
+        // quantum-granular detection latency.
+        Some(d) => d + Duration::from_secs(1),
+        None => FOLLOWER_WAIT_CAP,
+    };
+    match rx.recv_timeout(cap) {
+        Ok(out) => out,
+        Err(_) => Arc::new(Outcome {
+            status: 504,
+            body: err_body("deadline exceeded waiting for the coalesced leader"),
+            cache: None,
+        }),
+    }
+}
+
+/// 504 body for an expired run: the typed cancellation point plus the
+/// partial progress the sink captured before the engine unwound.
+fn cancelled_body(c: &Cancelled, sink: Option<&Arc<ProgressSink>>) -> String {
+    let progress = match sink {
+        Some(s) => {
+            let lg = match s.ledger() {
+                Some(lg) => ledger_json(&lg).to_json(),
+                None => "null".into(),
+            };
+            format!(
+                "{{\"cycles\":{},\"ledger\":{lg},\"phases\":{}}}",
+                s.cycles(),
+                s.phases()
+            )
+        }
+        None => "null".into(),
+    };
+    format!(
+        "{{\"at_cycle\":{},\"error\":\"{c}\",\"progress\":{progress},\"state\":\"expired\"}}",
+        c.at_cycle
+    )
+}
+
+/// Map a simulate-stage error to its outcome: cancellation → 504 with
+/// partial progress, anything else → 500.
+fn run_error_outcome(e: &anyhow::Error, sink: Option<&Arc<ProgressSink>>) -> Outcome {
+    match e.downcast_ref::<Cancelled>() {
+        Some(c) => Outcome { status: 504, body: cancelled_body(c, sink), cache: None },
+        None => Outcome { status: 500, body: err_body(&format!("{e:#}")), cache: None },
     }
 }
 
@@ -516,9 +762,20 @@ fn handle_compile(state: &Arc<AppState>, req: &Request) -> Response {
         Ok(p) => p,
         Err(e) => return Response::json(400, err_body(&format!("{e:#}"))),
     };
-    if parsed.system.is_some() {
-        return handle_compile_system(state, parsed);
+    if let Err(shed) = admit(state, req) {
+        return shed_response(&shed);
     }
+    let response = if parsed.system.is_some() {
+        compile_system_response(state, parsed)
+    } else {
+        compile_cluster_response(state, parsed)
+    };
+    // 4xx is the client's fault — only 5xx counts against the breaker.
+    state.admission.record_outcome(response.status < 500);
+    response
+}
+
+fn compile_cluster_response(state: &Arc<AppState>, parsed: SimRequest) -> Response {
     let key = program_key(&parsed.graph, &parsed.cfg, &parsed.opts);
     let cluster_name = parsed.cfg.name.clone();
     let worker_state = state.clone();
@@ -561,7 +818,7 @@ fn handle_compile(state: &Arc<AppState>, req: &Request) -> Response {
 
 /// `POST /compile` for a `"system"` target: compile through the system
 /// cache and report the partition shape.
-fn handle_compile_system(state: &Arc<AppState>, parsed: SimRequest) -> Response {
+fn compile_system_response(state: &Arc<AppState>, parsed: SimRequest) -> Response {
     let (sys, strategy) = parsed.system.clone().expect("system request");
     let key = system_key(&parsed.graph, &sys, &parsed.opts, strategy);
     let worker_state = state.clone();
@@ -609,30 +866,80 @@ fn handle_simulate(state: &Arc<AppState>, req: &Request) -> Response {
         Ok(p) => p,
         Err(e) => return Response::json(400, err_body(&format!("{e:#}"))),
     };
+    if let Err(shed) = admit(state, req) {
+        return shed_response(&shed);
+    }
     if parsed.detach {
+        // The detached path records its admission outcome when the job
+        // *completes* — a 202 says nothing about service health.
         return handle_simulate_detached(state, parsed);
     }
+    let deadline = effective_deadline(state, parsed.deadline_ms);
+    let key = simulate_flight_key(&parsed);
+    let (outcome, coalesced) = match state.flight.join(key) {
+        Join::Follower(rx) => (await_leader(rx, deadline), true),
+        Join::Leader(guard) => {
+            let outcome = Arc::new(run_simulate_leader(state, parsed, deadline));
+            guard.publish(outcome.clone());
+            (outcome, false)
+        }
+    };
+    state.admission.record_outcome(outcome.status < 500);
+    outcome_response(&outcome, coalesced)
+}
+
+/// Execute one `/simulate` request as the flight leader and fold every
+/// result path (success, 422, 504, 500, pool 503) into an [`Outcome`]
+/// that followers can share verbatim.
+fn run_simulate_leader(
+    state: &Arc<AppState>,
+    parsed: SimRequest,
+    deadline: Option<Duration>,
+) -> Outcome {
+    let token = deadline.map(|d| Arc::new(CancelToken::with_deadline(d)));
+    // A sink rides along whenever a deadline does, so an expired run
+    // can report how far it got.
+    let sink = token.as_ref().map(|_| Arc::new(ProgressSink::new()));
+    let seq = state.job_seq.fetch_add(1, Ordering::Relaxed);
     let worker_state = state.clone();
-    let result =
-        match run_on_pool(state, move || simulate_once(&worker_state, &parsed, None, None)) {
-            Ok(r) => r,
-            Err(resp) => return resp,
-        };
+    let job_token = token.clone();
+    let job_sink = sink.clone();
+    let result = run_on_pool(state, move || {
+        simulate_once(&worker_state, &parsed, None, job_sink, job_token, seq)
+    });
     match result {
-        Ok((body, hit)) => Response::json(200, body)
-            .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" }),
+        Ok(Ok((body, hit))) => Outcome {
+            status: 200,
+            body,
+            cache: Some(if hit { "hit" } else { "miss" }),
+        },
         // Compile failures are client-input errors (bad net/config
         // combination) — same 422 as POST /compile; only simulator
-        // failures are server-side 500s.
-        Err(SimError::Compile(e)) => {
-            Response::json(422, err_body(&format!("compilation failed: {e:#}")))
-        }
-        Err(SimError::Run(e)) => Response::json(500, err_body(&format!("{e:#}"))),
+        // failures are server-side 500s (or 504s when the deadline cut
+        // them off).
+        Ok(Err(SimError::Compile(e))) => Outcome {
+            status: 422,
+            body: err_body(&format!("compilation failed: {e:#}")),
+            cache: None,
+        },
+        Ok(Err(SimError::Run(e))) => run_error_outcome(&e, sink.as_ref()),
+        Err(resp) => Outcome {
+            status: resp.status,
+            body: String::from_utf8_lossy(&resp.body).into_owned(),
+            cache: None,
+        },
     }
 }
 
 fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Response {
-    let id = state.jobs.create();
+    // Every detached job carries a token — even without a deadline —
+    // so DELETE /jobs/:id always has something to fire.
+    let token = match effective_deadline(state, parsed.deadline_ms) {
+        Some(d) => Arc::new(CancelToken::with_deadline(d)),
+        None => Arc::new(CancelToken::new()),
+    };
+    let id = state.jobs.create(token.clone());
+    let seq = state.job_seq.fetch_add(1, Ordering::Relaxed);
     let worker_state = state.clone();
     let sink = Arc::new(ProgressSink::new());
     let submitted = state.pool.submit(Box::new(move || {
@@ -641,15 +948,51 @@ fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Respon
         // leave a terminal state behind or pollers would see "running"
         // forever (and the entry would never be pruned).
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            simulate_once(&worker_state, &parsed, None, Some(sink.clone()))
+            simulate_once(
+                &worker_state,
+                &parsed,
+                None,
+                Some(sink.clone()),
+                Some(token.clone()),
+                seq,
+            )
         }));
+        let healthy;
         match outcome {
-            Ok(Ok((body, _hit))) => worker_state.jobs.set(id, JobState::Done(body)),
-            Ok(Err(e)) => {
-                worker_state.jobs.set(id, JobState::Failed(format!("{:#}", e.into_inner())))
+            Ok(Ok((body, _hit))) => {
+                healthy = true;
+                worker_state.jobs.set(id, JobState::Done(body));
             }
-            Err(_) => worker_state.jobs.set(id, JobState::Failed("job panicked".into())),
+            Ok(Err(SimError::Compile(e))) => {
+                // Client-input error — not a service failure.
+                healthy = true;
+                worker_state.jobs.set(id, JobState::Failed(format!("{e:#}")));
+            }
+            Ok(Err(SimError::Run(e))) => match e.downcast_ref::<Cancelled>() {
+                Some(c) => {
+                    // A client DELETE is service working as intended; a
+                    // blown deadline counts against the breaker.
+                    healthy = c.reason == CancelReason::Client;
+                    worker_state.jobs.set(id, JobState::Cancelled(format!("{c}")));
+                }
+                None => {
+                    healthy = false;
+                    worker_state.jobs.set(id, JobState::Failed(format!("{e:#}")));
+                }
+            },
+            Err(payload) => {
+                healthy = false;
+                worker_state.job_panics.fetch_add(1, Ordering::Relaxed);
+                worker_state.jobs.set(
+                    id,
+                    JobState::Failed(format!(
+                        "job panicked: {}",
+                        panic_message(payload.as_ref())
+                    )),
+                );
+            }
         }
+        worker_state.admission.record_outcome(healthy);
     }));
     match submitted {
         Ok(()) => {
@@ -662,7 +1005,9 @@ fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Respon
         }
         Err(e) => {
             state.jobs.remove(id);
-            Response::json(503, err_body(&e.to_string()))
+            state.admission.record_outcome(false);
+            state.admission.note_queue_shed();
+            Response::json(503, err_body(&e.to_string())).with_header("Retry-After", "1")
         }
     }
 }
@@ -691,9 +1036,19 @@ fn simulate_once(
     req: &SimRequest,
     func_threads: Option<usize>,
     progress: Option<Arc<ProgressSink>>,
+    cancel: Option<Arc<CancelToken>>,
+    seq: u64,
 ) -> Result<(String, bool), SimError> {
+    // Chaos harness hook: deterministic injected faults, a single
+    // `None` branch when no plan is configured. An injected panic
+    // unwinds from here through the catch_unwind sites; a stall parks
+    // until the cancel token fires and the engine then observes the
+    // token at its first quantum.
+    if let Some(plan) = &state.fault {
+        plan.inject(seq, cancel.as_ref());
+    }
     if req.system.is_some() {
-        return simulate_system_once(state, req, func_threads, progress);
+        return simulate_system_once(state, req, func_threads, progress, cancel);
     }
     let key = program_key(&req.graph, &req.cfg, &req.opts);
     let (cp, hit) = state
@@ -711,6 +1066,9 @@ fn simulate_once(
     if let Some(sink) = progress {
         cluster = cluster.with_progress(sink);
     }
+    if let Some(token) = cancel {
+        cluster = cluster.with_cancel(token);
+    }
     let report = cluster
         .run_mode(&cp.program, req.mode)
         .context("simulating workload")
@@ -726,6 +1084,7 @@ fn simulate_system_once(
     req: &SimRequest,
     func_threads: Option<usize>,
     progress: Option<Arc<ProgressSink>>,
+    cancel: Option<Arc<CancelToken>>,
 ) -> Result<(String, bool), SimError> {
     let (sys, strategy) = req.system.as_ref().expect("system request");
     let key = system_key(&req.graph, sys, &req.opts, *strategy);
@@ -736,6 +1095,9 @@ fn simulate_system_once(
     let mut system = System::new(sys).with_ledger(req.profile);
     if let Some(sink) = progress {
         system = system.with_progress(sink);
+    }
+    if let Some(token) = cancel {
+        system = system.with_cancel(token);
     }
     if sys.n_clusters() == 1 {
         // A system-of-1 keeps the standalone memoization behavior;
@@ -766,11 +1128,46 @@ fn simulate_system_once(
 /// any thread count. Per-job failures become inline `{"error": ...}`
 /// objects instead of failing the whole sweep.
 fn handle_sweep(state: &Arc<AppState>, req: &Request) -> Response {
-    let jobs = match parse_sweep_request(&req.body) {
-        Ok(jobs) => jobs,
+    let (jobs, deadline_ms) = match parse_sweep_request(&req.body) {
+        Ok(parsed) => parsed,
         Err(e) => return Response::json(400, err_body(&format!("{e:#}"))),
     };
+    if let Err(shed) = admit(state, req) {
+        return shed_response(&shed);
+    }
+    let deadline = effective_deadline(state, deadline_ms);
+    // Coalesce identical concurrent sweeps exactly like /simulate:
+    // fold every job key (order matters — a sweep is its job list).
+    let mut words = vec![0x73_77_65_65_70, jobs.len() as u64]; // "sweep" tag
+    words.extend(jobs.iter().map(simulate_flight_key));
+    words.push(deadline_ms.unwrap_or(0));
+    let key = mix_key(&words);
+    let (outcome, coalesced) = match state.flight.join(key) {
+        Join::Follower(rx) => (await_leader(rx, deadline), true),
+        Join::Leader(guard) => {
+            let outcome = Arc::new(run_sweep_leader(state, jobs, deadline));
+            guard.publish(outcome.clone());
+            (outcome, false)
+        }
+    };
+    state.admission.record_outcome(outcome.status < 500);
+    outcome_response(&outcome, coalesced)
+}
+
+/// Execute a sweep as the flight leader. One shared cancel token bounds
+/// the whole batch; per-job cancellations render as inline error
+/// fragments and promote the envelope status to 504.
+fn run_sweep_leader(
+    state: &Arc<AppState>,
+    jobs: Vec<SimRequest>,
+    deadline: Option<Duration>,
+) -> Outcome {
+    let token = deadline.map(|d| Arc::new(CancelToken::with_deadline(d)));
+    // Sequence numbers are reserved as a block so every sweep job gets
+    // its own deterministic fault roll.
+    let seq0 = state.job_seq.fetch_add(jobs.len() as u64, Ordering::Relaxed);
     let worker_state = state.clone();
+    let job_token = token.clone();
     let results = match run_on_pool(state, move || {
         let workers = worker_state.server_cfg.workers.max(1);
         let threads = workers.min(jobs.len());
@@ -780,11 +1177,24 @@ fn handle_sweep(state: &Arc<AppState>, req: &Request) -> Response {
         let kernel_cap =
             if threads > 1 { Some((workers / threads).max(1)) } else { None };
         parallel::map_indexed(jobs.len(), threads, |i| {
-            simulate_once(&worker_state, &jobs[i], kernel_cap, None)
+            simulate_once(
+                &worker_state,
+                &jobs[i],
+                kernel_cap,
+                None,
+                job_token.clone(),
+                seq0 + i as u64,
+            )
         })
     }) {
         Ok(r) => r,
-        Err(resp) => return resp,
+        Err(resp) => {
+            return Outcome {
+                status: resp.status,
+                body: String::from_utf8_lossy(&resp.body).into_owned(),
+                cache: None,
+            }
+        }
     };
     // Cache status deliberately stays out of the fragments (as for
     // /simulate) so repeat sweeps are byte-identical.
@@ -795,7 +1205,13 @@ fn handle_sweep(state: &Arc<AppState>, req: &Request) -> Response {
             Err(e) => err_body(&format!("{:#}", e.into_inner())),
         })
         .collect();
-    Response::json(200, render_sweep_body(&fragments))
+    // If the shared deadline fired, the envelope is a 504 carrying
+    // whatever finished before the cutoff.
+    let status = match &token {
+        Some(t) if t.fired() == Some(CancelReason::Deadline) => 504,
+        _ => 200,
+    };
+    Outcome { status, body: render_sweep_body(&fragments), cache: None }
 }
 
 /// Assemble the sweep envelope from per-job JSON fragments (rendered
@@ -829,6 +1245,21 @@ fn handle_job(state: &Arc<AppState>, path: &str) -> Response {
     }
 }
 
+/// `DELETE /jobs/:id` — cooperative cancel. 202 because cancellation is
+/// asynchronous: the job observes the token at its next quantum and
+/// then transitions to the terminal `"cancelled"` state.
+fn handle_job_cancel(state: &Arc<AppState>, path: &str) -> Response {
+    let id_str = &path["/jobs/".len()..];
+    let Ok(id) = id_str.parse::<u64>() else {
+        return Response::json(400, err_body(&format!("bad job id '{id_str}'")));
+    };
+    match state.jobs.cancel(id) {
+        None => Response::json(404, err_body(&format!("no job {id} (unknown or expired)"))),
+        Some(false) => Response::json(409, err_body(&format!("job {id} already finished"))),
+        Some(true) => Response::json(202, format!("{{\"id\":{id},\"state\":\"cancelling\"}}")),
+    }
+}
+
 fn handle_healthz(state: &Arc<AppState>) -> Response {
     let body = Value::object([
         ("status", Value::from(if state.shutting_down() { "draining" } else { "ok" })),
@@ -839,6 +1270,7 @@ fn handle_healthz(state: &Arc<AppState>) -> Response {
         ("pending_detached_jobs", Value::from(state.jobs.pending())),
         ("cache_entries", Value::from(state.cache.len())),
         ("jobs_executed", Value::from(state.pool.executed())),
+        ("breaker", Value::from(state.admission.breaker_state_name())),
     ]);
     Response::json(200, body.to_json())
 }
@@ -885,7 +1317,7 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         let _ = writeln!(out, "snax_request_latency_us_count{{endpoint=\"{name}\"}} {cumulative}");
     }
     let phase = state.phase_cache.as_ref().map(|p| p.stats()).unwrap_or_default();
-    let singles: [(&str, &str, &str, u64); 17] = [
+    let singles: [(&str, &str, &str, u64); 19] = [
         ("snax_cache_hits_total", "counter", "Program-cache hits.", state.cache.hits()),
         ("snax_cache_misses_total", "counter", "Program-cache misses.", state.cache.misses()),
         (
@@ -929,10 +1361,22 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
             state.pool.executed(),
         ),
         (
-            "snax_jobs_panicked_total",
+            "snax_job_panics_total",
             "counter",
-            "Worker-pool jobs that panicked.",
-            state.pool.panicked(),
+            "Jobs that panicked (caught and isolated; the worker survives).",
+            state.pool.panicked() + state.job_panics.load(Ordering::Relaxed),
+        ),
+        (
+            "snax_coalesced_total",
+            "counter",
+            "Requests served as followers of an identical in-flight request.",
+            state.flight.coalesced(),
+        ),
+        (
+            "snax_breaker_state",
+            "gauge",
+            "Circuit breaker state (0=closed, 1=open, 2=half-open).",
+            state.admission.breaker_state(),
         ),
         (
             "snax_queue_length",
@@ -990,6 +1434,14 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         let _ = writeln!(out, "# HELP {name} {help}");
         let _ = writeln!(out, "# TYPE {name} gauge");
         let _ = writeln!(out, "{name} {value}");
+    }
+    let _ = writeln!(
+        out,
+        "# HELP snax_requests_shed_total Requests shed by admission control, by reason."
+    );
+    let _ = writeln!(out, "# TYPE snax_requests_shed_total counter");
+    for (reason, value) in state.admission.shed_counts() {
+        let _ = writeln!(out, "snax_requests_shed_total{{reason=\"{reason}\"}} {value}");
     }
     Response::text(200, &out)
 }
@@ -1170,14 +1622,19 @@ pub fn render_system_report(cs: &CompiledSystem, rep: &SystemReport) -> String {
 mod tests {
     use super::*;
 
-    fn state() -> Arc<AppState> {
-        Arc::new(AppState::new(&ServerConfig {
+    fn test_cfg() -> ServerConfig {
+        ServerConfig {
             port: 0,
             workers: 2,
             cache_capacity: 8,
             queue_depth: 16,
             phase_cache_capacity: 256,
-        }))
+            ..ServerConfig::default()
+        }
+    }
+
+    fn state() -> Arc<AppState> {
+        Arc::new(AppState::new(&test_cfg()))
     }
 
     fn post(path: &str, body: &str) -> Request {
@@ -1323,11 +1780,18 @@ mod tests {
         assert!(
             parse_sweep_request(br#"{"jobs":[{"net":"fig6a","detach":true}]}"#).is_err()
         );
-        let ok =
-            parse_sweep_request(br#"{"jobs":[{"net":"fig6a"},{"net":"fig6a","engine":"exact"}]}"#)
-                .unwrap();
+        // Deadlines live at the sweep top level, not per job.
+        assert!(parse_sweep_request(
+            br#"{"jobs":[{"net":"fig6a","deadline_ms":100}]}"#
+        )
+        .is_err());
+        let (ok, deadline) = parse_sweep_request(
+            br#"{"jobs":[{"net":"fig6a"},{"net":"fig6a","engine":"exact"}],"deadline_ms":5000}"#,
+        )
+        .unwrap();
         assert_eq!(ok.len(), 2);
         assert_eq!(ok[1].mode, SimMode::Exact);
+        assert_eq!(deadline, Some(5000));
     }
 
     #[test]
@@ -1340,13 +1804,7 @@ mod tests {
         ]}"#;
         let mut bodies = Vec::new();
         for workers in [1usize, 2, 4] {
-            let st = Arc::new(AppState::new(&ServerConfig {
-                port: 0,
-                workers,
-                cache_capacity: 8,
-                queue_depth: 16,
-                phase_cache_capacity: 256,
-            }));
+            let st = Arc::new(AppState::new(&ServerConfig { workers, ..test_cfg() }));
             let resp = route(&st, &post("/sweep", body));
             assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
             let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
@@ -1542,6 +2000,127 @@ mod tests {
         assert!(text.contains("snax_jobs_inflight 0"), "{text}");
         assert!(text.contains("snax_unit_utilization{cluster=\"0\",unit=\"gemm0\"}"), "{text}");
         assert!(text.contains("snax_noc_granted 0"), "{text}");
+        assert!(text.contains("snax_job_panics_total 0"), "{text}");
+        assert!(text.contains("snax_coalesced_total 0"), "{text}");
+        assert!(text.contains("snax_breaker_state 0"), "{text}");
+        assert!(text.contains("snax_requests_shed_total{reason=\"breaker\"} 0"), "{text}");
+        assert!(text.contains("snax_requests_shed_total{reason=\"quota\"} 0"), "{text}");
+        st.pool.shutdown();
+    }
+
+    fn delete(path: &str) -> Request {
+        Request {
+            method: "DELETE".into(),
+            path: path.into(),
+            query: String::new(),
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    #[test]
+    fn deadline_expiry_returns_504_with_partial_progress() {
+        // Every job stalls (up to the 2 s cap, polling its token), so a
+        // 150 ms deadline must cut the request off.
+        let st = Arc::new(AppState::new(&ServerConfig {
+            fault_spec: Some("stall:1.0".into()),
+            ..test_cfg()
+        }));
+        let t0 = Instant::now();
+        let resp = route(&st, &post("/simulate", r#"{"net":"fig6a","deadline_ms":150}"#));
+        assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "expired request must return promptly"
+        );
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("state").unwrap().as_str(), Some("expired"));
+        assert!(v.get("at_cycle").unwrap().as_u64().is_some());
+        assert!(v.get("progress").unwrap().get("cycles").unwrap().as_u64().is_some());
+        // Deadline expiry counts against the breaker as a failure, and
+        // the failure is visible in the 5xx class counter.
+        let metrics = route(&st, &get("/metrics"));
+        let text = String::from_utf8(metrics.body).unwrap();
+        assert!(
+            text.contains("snax_requests_total{endpoint=\"simulate\",class=\"5xx\"} 1"),
+            "{text}"
+        );
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn delete_cancels_a_detached_job() {
+        let st = Arc::new(AppState::new(&ServerConfig {
+            fault_spec: Some("stall:1.0".into()),
+            ..test_cfg()
+        }));
+        let resp = route(&st, &post("/simulate", r#"{"net":"fig6a","detach":true}"#));
+        assert_eq!(resp.status, 202);
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let id = v.get("job").unwrap().as_u64().unwrap();
+        assert_eq!(route(&st, &delete("/jobs/999999")).status, 404);
+        assert_eq!(route(&st, &delete("/jobs/banana")).status, 400);
+        let del = route(&st, &delete(&format!("/jobs/{id}")));
+        assert_eq!(del.status, 202, "{}", String::from_utf8_lossy(&del.body));
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            let poll = route(&st, &get(&format!("/jobs/{id}")));
+            let pv = json::parse(std::str::from_utf8(&poll.body).unwrap()).unwrap();
+            match pv.get("state").unwrap().as_str().unwrap() {
+                "cancelled" => {
+                    let why = pv.get("error").unwrap().as_str().unwrap();
+                    assert!(why.contains("cancelled by client"), "{why}");
+                    break;
+                }
+                "done" | "failed" => panic!("job must end cancelled, got {pv:?}"),
+                _ => std::thread::sleep(std::time::Duration::from_millis(5)),
+            }
+            assert!(Instant::now() < deadline, "cancel was never observed");
+        }
+        // Cancelling a terminal job is a conflict, not a repeat cancel.
+        assert_eq!(route(&st, &delete(&format!("/jobs/{id}"))).status, 409);
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn quota_exhaustion_sheds_with_429_and_retry_after() {
+        let st = Arc::new(AppState::new(&ServerConfig {
+            quota_rps: 1,
+            quota_burst: 1,
+            ..test_cfg()
+        }));
+        let body = r#"{"net":"fig6a","cluster":"fig6c"}"#;
+        let first = route(&st, &post("/simulate", body));
+        assert_eq!(first.status, 200, "{}", String::from_utf8_lossy(&first.body));
+        let shed = route(&st, &post("/simulate", body));
+        assert_eq!(shed.status, 429);
+        assert!(
+            shed.headers.iter().any(|(k, _)| k == "Retry-After"),
+            "shed responses must say when to come back"
+        );
+        let metrics = route(&st, &get("/metrics"));
+        let text = String::from_utf8(metrics.body).unwrap();
+        assert!(text.contains("snax_requests_shed_total{reason=\"quota\"} 1"), "{text}");
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn injected_panic_is_contained_as_a_500() {
+        let st = Arc::new(AppState::new(&ServerConfig {
+            workers: 1,
+            fault_spec: Some("panic:1.0,first:1".into()),
+            ..test_cfg()
+        }));
+        let body = r#"{"net":"fig6a","cluster":"fig6c"}"#;
+        let poisoned = route(&st, &post("/simulate", body));
+        assert_eq!(poisoned.status, 500, "{}", String::from_utf8_lossy(&poisoned.body));
+        assert!(String::from_utf8_lossy(&poisoned.body).contains("panicked"));
+        // The single worker survived and serves the next request.
+        let ok = route(&st, &post("/simulate", body));
+        assert_eq!(ok.status, 200, "{}", String::from_utf8_lossy(&ok.body));
+        let metrics = route(&st, &get("/metrics"));
+        let text = String::from_utf8(metrics.body).unwrap();
+        assert!(text.contains("snax_job_panics_total 1"), "{text}");
         st.pool.shutdown();
     }
 

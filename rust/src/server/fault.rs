@@ -1,0 +1,232 @@
+//! Deterministic fault injection for the chaos harness (DESIGN.md §11).
+//!
+//! A [`FaultPlan`] describes probabilities of three failure shapes —
+//! `panic` (the job unwinds), `slow` (the job sleeps before running),
+//! and `stall` (the job blocks until cancelled, bounded by a safety
+//! cap) — parsed from `ServerConfig::fault_spec` or the `SNAX_FAULT`
+//! environment variable. This is a *test-only* knob: production
+//! deployments leave both unset and the injection site is a single
+//! `None` branch.
+//!
+//! Rolls are deterministic: each job carries a monotonically-assigned
+//! sequence number, and the roll for (sequence, fault-kind) is a pure
+//! hash. The chaos tests rely on this — `panic:1.0,first:8` means
+//! *exactly* jobs 0..8 panic, so breaker-transition assertions are
+//! exact rather than statistical.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServerConfig;
+use crate::sim::CancelToken;
+
+/// Slices for interruptible sleeps, so cancellation and shutdown are
+/// observed promptly even while a fault is holding a worker.
+const SLEEP_SLICE: Duration = Duration::from_millis(5);
+/// Hard cap on an injected stall: a stall without a deadline must not
+/// wedge a test run (or CI) forever.
+const STALL_CAP: Duration = Duration::from_secs(2);
+
+/// Parsed fault-injection spec, e.g.
+/// `"panic:0.2,slow:0.1,slow_ms:50,stall:0.05,first:8"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Probability a job panics.
+    pub panic_p: f64,
+    /// Probability a job sleeps `slow_ms` before running.
+    pub slow_p: f64,
+    /// Probability a job stalls until cancelled (capped at [`STALL_CAP`]).
+    pub stall_p: f64,
+    /// Sleep duration for `slow` faults.
+    pub slow_ms: u64,
+    /// Only inject into the first N jobs (`0` = no limit). Lets a test
+    /// poison a known prefix and then assert recovery.
+    pub first_n: u64,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `key:value` spec. Keys: `panic`, `slow`,
+    /// `stall` (probabilities in `0..=1`), `slow_ms`, `first`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan {
+            panic_p: 0.0,
+            slow_p: 0.0,
+            stall_p: 0.0,
+            slow_ms: 50,
+            first_n: 0,
+        };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once(':')
+                .with_context(|| format!("fault spec entry '{part}' is not key:value"))?;
+            match key.trim() {
+                "panic" => plan.panic_p = probability(value)?,
+                "slow" => plan.slow_p = probability(value)?,
+                "stall" => plan.stall_p = probability(value)?,
+                "slow_ms" => {
+                    plan.slow_ms = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad slow_ms '{value}'"))?
+                }
+                "first" => {
+                    plan.first_n = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad first '{value}'"))?
+                }
+                other => bail!("unknown fault spec key '{other}'"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Resolve the active plan: `cfg.fault_spec` wins, then the
+    /// `SNAX_FAULT` environment variable, else no injection. A plan
+    /// with all probabilities zero is treated as absent.
+    pub fn from_config(cfg: &ServerConfig) -> Option<FaultPlan> {
+        let spec = cfg
+            .fault_spec
+            .clone()
+            .or_else(|| std::env::var("SNAX_FAULT").ok())?;
+        // Config validation already surfaced parse errors for
+        // `fault_spec`; a bad env var is ignored rather than crashing
+        // the server at startup.
+        let plan = FaultPlan::parse(&spec).ok()?;
+        let active = plan.panic_p > 0.0 || plan.slow_p > 0.0 || plan.stall_p > 0.0;
+        active.then_some(plan)
+    }
+
+    /// Inject the planned fault (if any) for job `seq`. Called at the
+    /// top of job execution on a pool worker. May panic (that is the
+    /// point — the pool and `catch_unwind` sites must contain it).
+    pub fn inject(&self, seq: u64, cancel: Option<&Arc<CancelToken>>) {
+        if self.first_n > 0 && seq >= self.first_n {
+            return;
+        }
+        if roll(seq, 1) < self.panic_p {
+            panic!("injected fault: panic (job seq {seq})");
+        }
+        if roll(seq, 2) < self.slow_p {
+            interruptible_sleep(Duration::from_millis(self.slow_ms), cancel);
+        }
+        if roll(seq, 3) < self.stall_p {
+            // Stall until the cancel token fires (deadline or client
+            // cancel), bounded by the safety cap.
+            interruptible_sleep(STALL_CAP, cancel);
+        }
+    }
+}
+
+fn probability(value: &str) -> Result<f64> {
+    let p: f64 = value
+        .trim()
+        .parse()
+        .with_context(|| format!("bad probability '{value}'"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("probability {p} outside 0..=1");
+    }
+    Ok(p)
+}
+
+/// Deterministic roll in `[0, 1)` for (job sequence, fault kind):
+/// splitmix64 finalizer over the salted sequence.
+fn roll(seq: u64, salt: u64) -> f64 {
+    let mut z = seq
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(salt.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+fn interruptible_sleep(total: Duration, cancel: Option<&Arc<CancelToken>>) {
+    let mut slept = Duration::ZERO;
+    while slept < total {
+        if cancel.is_some_and(|t| t.fired().is_some()) {
+            return;
+        }
+        let slice = SLEEP_SLICE.min(total - slept);
+        std::thread::sleep(slice);
+        slept += slice;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let plan = FaultPlan::parse("panic:0.2, slow:0.1, stall:0.05, slow_ms:75, first:8")
+            .unwrap();
+        assert_eq!(plan.panic_p, 0.2);
+        assert_eq!(plan.slow_p, 0.1);
+        assert_eq!(plan.stall_p, 0.05);
+        assert_eq!(plan.slow_ms, 75);
+        assert_eq!(plan.first_n, 8);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic:1.5").is_err());
+        assert!(FaultPlan::parse("panic:-0.1").is_err());
+        assert!(FaultPlan::parse("warp:0.5").is_err());
+        assert!(FaultPlan::parse("slow_ms:many").is_err());
+    }
+
+    #[test]
+    fn rolls_are_deterministic_and_spread() {
+        for seq in 0..64 {
+            for salt in 1..=3 {
+                let r = roll(seq, salt);
+                assert_eq!(r, roll(seq, salt));
+                assert!((0.0..1.0).contains(&r));
+            }
+        }
+        // Distinct salts decorrelate the fault kinds for one job.
+        assert_ne!(roll(7, 1), roll(7, 2));
+    }
+
+    #[test]
+    fn first_n_caps_injection() {
+        let plan = FaultPlan::parse("panic:1.0,first:2").unwrap();
+        let caught = std::panic::catch_unwind(|| plan.inject(0, None));
+        assert!(caught.is_err(), "seq 0 must panic under panic:1.0");
+        // Past the cap: no fault.
+        plan.inject(2, None);
+        plan.inject(1000, None);
+    }
+
+    #[test]
+    fn stall_unblocks_on_cancel() {
+        let plan = FaultPlan::parse("stall:1.0").unwrap();
+        let token = Arc::new(CancelToken::new());
+        token.cancel();
+        let start = std::time::Instant::now();
+        plan.inject(0, Some(&token));
+        assert!(start.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn from_config_prefers_explicit_spec() {
+        let cfg = ServerConfig {
+            fault_spec: Some("slow:1.0,slow_ms:1".into()),
+            ..ServerConfig::default()
+        };
+        let plan = FaultPlan::from_config(&cfg).unwrap();
+        assert_eq!(plan.slow_p, 1.0);
+        let quiet = ServerConfig::default();
+        if std::env::var("SNAX_FAULT").is_err() {
+            assert_eq!(FaultPlan::from_config(&quiet), None);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Singleflight request coalescing (DESIGN.md §11).
+//!
+//! Identical concurrent `/simulate` and `/sweep` requests should cost
+//! one simulation, not N. The flight table keys in-progress work by the
+//! same content fingerprints the caches use ([`crate::compiler::program_key`]
+//! / `system_key`, mixed with the request mode), so "identical" is
+//! *semantic* identity: the first arrival becomes the **leader** and
+//! runs the job; later arrivals become **followers** and wait on a
+//! channel for the leader's finished `(status, body)` — every coalesced
+//! response is byte-identical by construction because it *is* the same
+//! bytes behind a shared `Arc`.
+//!
+//! Crash safety: the leader holds a [`FlightGuard`]. Publishing the
+//! outcome consumes the guard; if the leader's handler unwinds instead,
+//! the guard's `Drop` publishes a 500 so followers can never hang on a
+//! dead leader.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+/// A finished request as shared between leader and followers.
+pub struct Outcome {
+    pub status: u16,
+    pub body: String,
+    /// `X-Snax-Cache` value when the simulate path produced one.
+    pub cache: Option<&'static str>,
+}
+
+/// Result of joining a flight: run the job or wait for whoever is.
+pub enum Join<'a> {
+    Leader(FlightGuard<'a>),
+    Follower(Receiver<Arc<Outcome>>),
+}
+
+/// In-flight table: key → followers waiting on the leader's outcome.
+#[derive(Default)]
+pub struct Flight {
+    inner: Mutex<HashMap<u64, Vec<SyncSender<Arc<Outcome>>>>>,
+    coalesced: AtomicU64,
+}
+
+impl Flight {
+    /// Join the flight for `key`: the first caller leads, the rest
+    /// follow. The leader *must* let its guard publish (explicitly or
+    /// by drop) or followers would wait out their deadlines.
+    pub fn join(&self, key: u64) -> Join<'_> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(waiters) = inner.get_mut(&key) {
+            let (tx, rx) = std::sync::mpsc::sync_channel(1);
+            waiters.push(tx);
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            Join::Follower(rx)
+        } else {
+            inner.insert(key, Vec::new());
+            Join::Leader(FlightGuard { flight: self, key, published: false })
+        }
+    }
+
+    /// Requests served as coalesced followers (`snax_coalesced_total`).
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    fn resolve(&self, key: u64, outcome: Arc<Outcome>) {
+        let waiters = self.inner.lock().unwrap().remove(&key);
+        for tx in waiters.into_iter().flatten() {
+            // A follower that gave up (deadline) dropped its receiver;
+            // that is its problem, not ours.
+            let _ = tx.send(outcome.clone());
+        }
+    }
+}
+
+/// Leadership of one flight key. Publish the outcome with
+/// [`FlightGuard::publish`]; dropping unpublished (leader unwound)
+/// publishes a 500 instead.
+pub struct FlightGuard<'a> {
+    flight: &'a Flight,
+    key: u64,
+    published: bool,
+}
+
+impl FlightGuard<'_> {
+    pub fn publish(mut self, outcome: Arc<Outcome>) {
+        self.published = true;
+        self.flight.resolve(self.key, outcome);
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.published {
+            self.flight.resolve(
+                self.key,
+                Arc::new(Outcome {
+                    status: 500,
+                    body: "{\"error\":\"coalesced leader failed before producing a response\"}"
+                        .to_string(),
+                    cache: None,
+                }),
+            );
+        }
+    }
+}
+
+/// FNV-1a over little-endian words — the flight key mixer. Callers
+/// fold the cache fingerprint with request facets (mode, profile,
+/// deadline) that change the response bytes.
+pub fn mix_key(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn leader_then_followers_share_one_outcome() {
+        let flight = Flight::default();
+        let Join::Leader(guard) = flight.join(7) else {
+            panic!("first join must lead")
+        };
+        let rx_a = match flight.join(7) {
+            Join::Follower(rx) => rx,
+            Join::Leader(_) => panic!("second join must follow"),
+        };
+        let rx_b = match flight.join(7) {
+            Join::Follower(rx) => rx,
+            Join::Leader(_) => panic!("third join must follow"),
+        };
+        assert_eq!(flight.coalesced(), 2);
+        guard.publish(Arc::new(Outcome {
+            status: 200,
+            body: "report".into(),
+            cache: Some("miss"),
+        }));
+        let a = rx_a.recv_timeout(Duration::from_secs(5)).unwrap();
+        let b = rx_b.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "followers share the same bytes");
+        assert_eq!((a.status, a.body.as_str(), a.cache), (200, "report", Some("miss")));
+        // The key is free again.
+        assert!(matches!(flight.join(7), Join::Leader(_)));
+    }
+
+    #[test]
+    fn dropped_guard_publishes_a_500_so_followers_never_hang() {
+        let flight = Flight::default();
+        let Join::Leader(guard) = flight.join(1) else { panic!() };
+        let Join::Follower(rx) = flight.join(1) else { panic!() };
+        drop(guard); // leader "panicked"
+        let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(out.status, 500);
+        assert!(out.body.contains("leader failed"));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let flight = Flight::default();
+        let Join::Leader(a) = flight.join(1) else { panic!() };
+        assert!(matches!(flight.join(2), Join::Leader(_)));
+        assert_eq!(flight.coalesced(), 0);
+        drop(a);
+    }
+
+    #[test]
+    fn mix_key_separates_facets() {
+        let base = 0x1234_5678_9abc_def0_u64;
+        let a = mix_key(&[base, 0, 0]);
+        let b = mix_key(&[base, 1, 0]);
+        let c = mix_key(&[base, 0, 250]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, mix_key(&[base, 0, 0]));
+    }
+}

@@ -13,7 +13,12 @@
 //!   by [`crate::compiler::program_key`], so repeat simulations skip
 //!   the compiler entirely;
 //! * [`pool`] — bounded worker pool executing compile+simulate jobs
-//!   across cores with 503 backpressure and graceful drain.
+//!   across cores with 503 backpressure and graceful drain;
+//! * [`admission`] — per-client token-bucket quotas and the three-state
+//!   circuit breaker shedding with `Retry-After` (DESIGN.md §11);
+//! * [`flight`] — singleflight coalescing of identical concurrent
+//!   requests onto one simulation;
+//! * [`fault`] — deterministic fault injection for the chaos harness.
 //!
 //! Threading model: one cheap thread per connection parses requests and
 //! writes responses; every heavy job runs on the fixed-size worker pool
@@ -22,16 +27,19 @@
 //! keep-alive connections end after their in-flight response, and the
 //! pool drains queued jobs before the process exits.
 
+pub mod admission;
 pub mod api;
 pub mod cache;
+pub mod fault;
+pub mod flight;
 pub mod http;
 pub mod pool;
 
-use std::io::BufReader;
+use std::io::{BufReader, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -43,9 +51,81 @@ pub use api::{ledger_json, render_report, render_sweep_body, render_system_repor
 
 /// How long an idle keep-alive connection may sit between requests.
 const READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Wall deadline for reading one complete request once its first byte
+/// has arrived. The per-read idle timeout alone does not bound a
+/// slowloris client that dribbles one byte per interval; this does.
+const REQUEST_READ_DEADLINE: Duration = Duration::from_secs(30);
+/// Socket write timeout: a client that stops draining its receive
+/// window must not pin a connection thread forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 /// Acceptor poll interval (the listener is non-blocking so shutdown is
 /// observed promptly).
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Per-connection I/O limits. `Default` is production sizing; the
+/// timeout tests shrink them to drive the cut-off paths quickly.
+#[derive(Clone, Copy)]
+struct ConnLimits {
+    /// Idle gap allowed while waiting for a request to start.
+    idle: Duration,
+    /// Wall deadline per request read (the slowloris bound).
+    request: Duration,
+    /// Socket write timeout.
+    write: Duration,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        ConnLimits {
+            idle: READ_TIMEOUT,
+            request: REQUEST_READ_DEADLINE,
+            write: WRITE_TIMEOUT,
+        }
+    }
+}
+
+/// Read half of a connection enforcing [`ConnLimits`]: while no request
+/// is in progress each read waits up to `idle`; the first byte of a
+/// request arms a wall deadline, after which every read is capped at
+/// the time remaining. A dribbling client therefore cannot hold the
+/// connection past `request` no matter how often it sends one byte.
+struct DeadlineStream {
+    stream: TcpStream,
+    limits: ConnLimits,
+    /// Wall deadline of the in-progress request, armed on first byte.
+    deadline: Option<Instant>,
+}
+
+impl DeadlineStream {
+    /// Called between requests: the next byte starts a fresh deadline.
+    fn begin_request(&mut self) {
+        self.deadline = None;
+    }
+}
+
+impl Read for DeadlineStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let timeout = match self.deadline {
+            None => self.limits.idle,
+            Some(deadline) => {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "request read exceeded the wall deadline",
+                    ));
+                }
+                remaining.min(self.limits.idle)
+            }
+        };
+        self.stream.set_read_timeout(Some(timeout))?;
+        let n = self.stream.read(buf)?;
+        if n > 0 && self.deadline.is_none() {
+            self.deadline = Some(Instant::now() + self.limits.request);
+        }
+        Ok(n)
+    }
+}
 
 /// A running service instance. Bind with [`Server::start`], stop with
 /// [`Server::shutdown`] (tests and the load generator run it
@@ -136,12 +216,18 @@ fn accept_loop(listener: TcpListener, state: Arc<AppState>, shutdown: Arc<Atomic
 }
 
 fn handle_connection(stream: TcpStream, state: Arc<AppState>) {
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    handle_connection_with(stream, state, ConnLimits::default());
+}
+
+fn handle_connection_with(stream: TcpStream, state: Arc<AppState>, limits: ConnLimits) {
+    let _ = stream.set_write_timeout(Some(limits.write));
     let _ = stream.set_nodelay(true);
     let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(read_half);
+    let mut reader =
+        BufReader::new(DeadlineStream { stream: read_half, limits, deadline: None });
     let mut writer = stream;
     loop {
+        reader.get_mut().begin_request();
         match http::read_request(&mut reader) {
             Ok(Some(request)) => {
                 let keep_alive = request.keep_alive();
@@ -200,12 +286,20 @@ fn install_signal_handlers() {}
 pub fn run_blocking(cfg: ServerConfig) -> Result<()> {
     install_signal_handlers();
     let server = Server::start(cfg)?;
+    let cfg = &server.state().server_cfg;
     println!(
-        "snax serve listening on http://{} ({} workers, cache {} entries, queue depth {})",
+        "snax serve listening on http://{} ({} workers, cache {} entries, queue depth {}, \
+         breaker {}, default deadline {})",
         server.addr(),
-        server.state().server_cfg.workers,
-        server.state().server_cfg.cache_capacity,
-        server.state().server_cfg.queue_depth,
+        cfg.workers,
+        cfg.cache_capacity,
+        cfg.queue_depth,
+        if cfg.breaker { "on" } else { "off" },
+        if cfg.default_deadline_ms == 0 {
+            "none".to_string()
+        } else {
+            format!("{}ms", cfg.default_deadline_ms)
+        },
     );
     while !GOT_SIGNAL.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(100));
@@ -227,6 +321,7 @@ mod tests {
             cache_capacity: 8,
             queue_depth: 16,
             phase_cache_capacity: 64,
+            ..ServerConfig::default()
         }
     }
 
@@ -256,5 +351,74 @@ mod tests {
         assert_ne!(a.port(), b.port());
         a.shutdown();
         b.shutdown();
+    }
+
+    /// Drive `handle_connection_with` directly over a loopback socket
+    /// with tiny limits; returns how long the handler ran.
+    fn run_handler_against(
+        limits: ConnLimits,
+        client_script: impl FnOnce(TcpStream) + Send + 'static,
+    ) -> Duration {
+        let state = Arc::new(AppState::new(&test_config()));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handler = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let start = Instant::now();
+            handle_connection_with(stream, state, limits);
+            start.elapsed()
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let client = std::thread::spawn(move || client_script(stream));
+        let elapsed = handler.join().unwrap();
+        client.join().unwrap();
+        elapsed
+    }
+
+    /// The slowloris bound: a client dribbling one byte at a time keeps
+    /// every individual read under the idle timeout, but the wall
+    /// deadline armed by the request's first byte still cuts it off.
+    #[test]
+    fn slowloris_dribble_is_cut_off_at_the_request_wall_deadline() {
+        use std::io::Write;
+        // Idle alone (2s) would never fire against a 50ms dribble; only
+        // the 300ms wall deadline explains a prompt cut-off.
+        let limits = ConnLimits {
+            idle: Duration::from_secs(2),
+            request: Duration::from_millis(300),
+            write: Duration::from_secs(5),
+        };
+        let elapsed = run_handler_against(limits, |mut stream| {
+            let _ = stream
+                .write_all(b"POST /simulate HTTP/1.1\r\ncontent-length: 1000\r\n\r\n");
+            for _ in 0..40 {
+                if stream.write_all(b"x").is_err() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        });
+        assert!(
+            elapsed < Duration::from_millis(1500),
+            "handler held a dribbling connection for {elapsed:?} (wall deadline is 300ms)"
+        );
+    }
+
+    #[test]
+    fn idle_connection_is_closed_by_the_idle_timeout() {
+        let limits = ConnLimits {
+            idle: Duration::from_millis(150),
+            request: Duration::from_secs(5),
+            write: Duration::from_secs(5),
+        };
+        // Client connects and sends nothing at all.
+        let elapsed = run_handler_against(limits, |stream| {
+            std::thread::sleep(Duration::from_millis(400));
+            drop(stream);
+        });
+        assert!(
+            elapsed < Duration::from_millis(1000),
+            "idle connection held for {elapsed:?} (idle timeout is 150ms)"
+        );
     }
 }

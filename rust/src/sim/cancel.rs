@@ -1,0 +1,192 @@
+//! Cooperative cancellation + deadlines for simulation runs.
+//!
+//! A [`CancelToken`] is shared between the party that wants a run to
+//! stop (HTTP handler, `DELETE /jobs/:id`, a server-side deadline) and
+//! the engine quantum loop that must stop it. Cancellation is
+//! *cooperative*: the engine polls the token at the top of every
+//! `step_quantum` — the same site that publishes live progress — so a
+//! run halts at quantum granularity, with its architectural state
+//! still consistent (DESIGN.md §11).
+//!
+//! Cost discipline (mirrors the tracer/ledger/progress contexts): the
+//! token rides as `Option<Arc<CancelToken>>` inside `SimState`; with no
+//! token attached the per-quantum cost is a single `None` branch. With
+//! a token attached, the cancelled flag is one relaxed atomic load per
+//! quantum, and the wall-clock deadline comparison (`Instant::now()`)
+//! is throttled to every [`DEADLINE_POLL_QUANTA`] quanta — except the
+//! very first quantum, which always polls so an already-expired
+//! deadline fails fast even on tiny or fully-memoized runs.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Poll the wall clock for the deadline once per this many quanta.
+pub(crate) const DEADLINE_POLL_QUANTA: u32 = 256;
+
+/// Why a run was cancelled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The client (or the server on its behalf) asked for the run to
+    /// stop: `DELETE /jobs/:id` or server shutdown.
+    Client,
+    /// The per-request (or server-default) deadline expired.
+    Deadline,
+}
+
+/// Shared cancellation + deadline signal, checked cooperatively by the
+/// engine quantum loop.
+pub struct CancelToken {
+    cancelled: AtomicBool,
+    /// Deadline as microseconds since `epoch`; `u64::MAX` = none.
+    deadline_us: AtomicU64,
+    epoch: Instant,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CancelToken {
+    /// A token with no deadline; fires only via [`CancelToken::cancel`].
+    pub fn new() -> Self {
+        CancelToken {
+            cancelled: AtomicBool::new(false),
+            deadline_us: AtomicU64::new(u64::MAX),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// A token that fires [`CancelReason::Deadline`] once `timeout` has
+    /// elapsed (measured from now).
+    pub fn with_deadline(timeout: Duration) -> Self {
+        let token = Self::new();
+        token.deadline_us.store(
+            timeout.as_micros().min(u64::MAX as u128 - 1) as u64,
+            Ordering::Relaxed,
+        );
+        token
+    }
+
+    /// Request cancellation ([`CancelReason::Client`]). Idempotent.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Has [`CancelToken::cancel`] been called? One relaxed load — this
+    /// is the cheap per-quantum check.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Has the deadline passed? Reads the wall clock — callers throttle
+    /// this (the engine polls every [`DEADLINE_POLL_QUANTA`] quanta).
+    pub fn deadline_passed(&self) -> bool {
+        let deadline_us = self.deadline_us.load(Ordering::Relaxed);
+        deadline_us != u64::MAX
+            && self.epoch.elapsed().as_micros() as u64 >= deadline_us
+    }
+
+    /// Which signal (if any) has fired. Client cancellation wins ties.
+    pub fn fired(&self) -> Option<CancelReason> {
+        if self.is_cancelled() {
+            Some(CancelReason::Client)
+        } else if self.deadline_passed() {
+            Some(CancelReason::Deadline)
+        } else {
+            None
+        }
+    }
+
+    /// Time left until the deadline (`None` when the token has no
+    /// deadline). Coalesced followers bound their wait on this.
+    pub fn remaining(&self) -> Option<Duration> {
+        let deadline_us = self.deadline_us.load(Ordering::Relaxed);
+        if deadline_us == u64::MAX {
+            return None;
+        }
+        let elapsed = self.epoch.elapsed().as_micros() as u64;
+        Some(Duration::from_micros(deadline_us.saturating_sub(elapsed)))
+    }
+}
+
+/// Typed error the engine returns when a [`CancelToken`] fires.
+/// Handlers downcast (`anyhow` searches the whole context chain) to map
+/// it onto HTTP 504 (deadline) or a `cancelled` job state (client).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled {
+    pub reason: CancelReason,
+    /// Simulated cycle at which the run stopped — the partial-progress
+    /// anchor reported back to the client.
+    pub at_cycle: u64,
+}
+
+impl fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.reason {
+            CancelReason::Client => {
+                write!(f, "cancelled by client at cycle {}", self.at_cycle)
+            }
+            CancelReason::Deadline => {
+                write!(f, "deadline exceeded at cycle {}", self.at_cycle)
+            }
+        }
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_has_not_fired() {
+        let token = CancelToken::new();
+        assert_eq!(token.fired(), None);
+        assert!(!token.is_cancelled());
+        assert!(!token.deadline_passed());
+        assert_eq!(token.remaining(), None);
+    }
+
+    #[test]
+    fn cancel_fires_client_reason() {
+        let token = CancelToken::new();
+        token.cancel();
+        assert_eq!(token.fired(), Some(CancelReason::Client));
+    }
+
+    #[test]
+    fn deadline_fires_after_elapsing() {
+        let token = CancelToken::with_deadline(Duration::from_millis(20));
+        assert_eq!(token.fired(), None);
+        assert!(token.remaining().unwrap() <= Duration::from_millis(20));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(token.fired(), Some(CancelReason::Deadline));
+        assert_eq!(token.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn client_cancel_wins_over_expired_deadline() {
+        let token = CancelToken::with_deadline(Duration::ZERO);
+        token.cancel();
+        assert_eq!(token.fired(), Some(CancelReason::Client));
+    }
+
+    #[test]
+    fn cancelled_error_downcasts_through_anyhow_context() {
+        use anyhow::Context;
+        let e: anyhow::Error = Cancelled {
+            reason: CancelReason::Deadline,
+            at_cycle: 42,
+        }
+        .into();
+        let e = e.context("simulating workload");
+        let c = e.downcast_ref::<Cancelled>().expect("downcast through chain");
+        assert_eq!(c.at_cycle, 42);
+        assert_eq!(c.reason, CancelReason::Deadline);
+        assert!(format!("{c}").contains("deadline exceeded at cycle 42"));
+    }
+}

@@ -40,6 +40,7 @@ use crate::isa::{
 
 use super::accel::{model_for, AccelModel, CounterClass, EmitRule};
 use super::barrier::BarrierFile;
+use super::cancel::{CancelReason, CancelToken, Cancelled, DEADLINE_POLL_QUANTA};
 use super::csr::CsrFile;
 use super::dma::{DmaDir, DmaJob};
 use super::functional::{apply_op_scratch, FnScratch};
@@ -210,6 +211,8 @@ pub struct Cluster {
     ledger: bool,
     /// Live progress sink for detached server jobs.
     progress: Option<Arc<ProgressSink>>,
+    /// Cooperative cancellation / deadline token for server jobs.
+    cancel: Option<Arc<CancelToken>>,
 }
 
 impl Cluster {
@@ -221,6 +224,7 @@ impl Cluster {
             phase_cache: None,
             ledger: false,
             progress: None,
+            cancel: None,
         }
     }
 
@@ -239,6 +243,15 @@ impl Cluster {
     /// snapshots at phase boundaries (when the ledger is enabled).
     pub fn with_progress(mut self, sink: Arc<ProgressSink>) -> Self {
         self.progress = Some(sink);
+        self
+    }
+
+    /// Attach a cooperative cancellation token: the quantum loop polls
+    /// it (piggybacking on the progress-publication site) and aborts
+    /// the run with a typed [`Cancelled`] error when it fires. Without
+    /// this call the per-quantum cost is a single `None` branch.
+    pub fn with_cancel(mut self, token: Arc<CancelToken>) -> Self {
+        self.cancel = Some(token);
         self
     }
 
@@ -333,6 +346,7 @@ impl Cluster {
             st.enable_ledger();
         }
         st.progress = self.progress.clone();
+        st.set_cancel(self.cancel.clone());
         Ok(st)
     }
 }
@@ -378,6 +392,12 @@ pub(crate) struct SimState<'p> {
     progress: Option<Arc<ProgressSink>>,
     /// Barrier events already published to the progress sink.
     progress_events: u64,
+    /// Cooperative cancellation token (server jobs); `None` elsewhere.
+    cancel: Option<Arc<CancelToken>>,
+    /// Quanta until the next wall-clock deadline poll. Starts at zero
+    /// so the first quantum always polls: an already-expired deadline
+    /// fails fast even on tiny or fully-memoized runs.
+    cancel_countdown: u32,
     mode: SimMode,
     /// Phase memoization requested (event engine only); see
     /// [`super::phase`].
@@ -682,6 +702,8 @@ impl<'p> SimState<'p> {
             ledger: None,
             progress: None,
             progress_events: 0,
+            cancel: None,
+            cancel_countdown: 0,
             mode: SimMode::Event,
             memo_on: true,
             shared_phase_cache: None,
@@ -741,6 +763,11 @@ impl<'p> SimState<'p> {
         self.progress = sink;
     }
 
+    pub(crate) fn set_cancel(&mut self, token: Option<Arc<CancelToken>>) {
+        self.cancel = token;
+        self.cancel_countdown = 0;
+    }
+
     fn run(mut self) -> Result<SimReport> {
         self.prepare();
         loop {
@@ -774,6 +801,31 @@ impl<'p> SimState<'p> {
     pub(crate) fn step_quantum(&mut self) -> Result<Quantum> {
         if let Some(sink) = self.progress.clone() {
             self.publish_progress(&sink);
+        }
+        // Cooperative cancellation, co-located with the progress
+        // publication: the cancelled flag is one relaxed load per
+        // quantum; the wall-clock deadline poll is throttled (but the
+        // first quantum always polls, so an expired deadline fails
+        // fast on tiny or fully-memoized runs). Off path: one branch.
+        if let Some(token) = &self.cancel {
+            if token.is_cancelled() {
+                return Err(Cancelled {
+                    reason: CancelReason::Client,
+                    at_cycle: self.cycle,
+                }
+                .into());
+            }
+            if self.cancel_countdown == 0 {
+                self.cancel_countdown = DEADLINE_POLL_QUANTA;
+                if token.deadline_passed() {
+                    return Err(Cancelled {
+                        reason: CancelReason::Deadline,
+                        at_cycle: self.cycle,
+                    }
+                    .into());
+                }
+            }
+            self.cancel_countdown -= 1;
         }
         let units_idle = self.units.iter().all(|u| u.idle());
         let cores_done = self.cores.iter().all(|c| c.done);

@@ -19,9 +19,12 @@
 //!   engines against one shared external memory with NoC bandwidth
 //!   arbitration and cross-cluster system barriers
 //! * [`trace`] — counters, per-layer attribution, the [`SimReport`]
+//! * [`cancel`] — cooperative cancellation + deadline tokens polled by
+//!   the quantum loop (service fault-tolerance, DESIGN.md §11)
 
 pub mod accel;
 pub mod barrier;
+pub mod cancel;
 pub mod cluster;
 pub mod csr;
 pub mod dma;
@@ -34,6 +37,7 @@ pub mod streamer;
 pub mod system;
 pub mod trace;
 
+pub use cancel::{CancelReason, CancelToken, Cancelled};
 pub use cluster::{Cluster, SimMode};
 pub use job::{OpDesc, Region};
 pub use ledger::{Cat, LedgerReport, LedgerRow, ProgressSink, CAT_NAMES, NCATS};

@@ -37,6 +37,7 @@ use anyhow::{bail, Result};
 use crate::config::{NocConfig, SystemConfig};
 use crate::isa::Program;
 
+use super::cancel::CancelToken;
 use super::cluster::{Quantum, SimState};
 use super::ledger::ProgressSink;
 use super::mem::ExtMem;
@@ -228,6 +229,7 @@ pub struct System {
     func_threads: Option<usize>,
     ledger: bool,
     progress: Option<Arc<ProgressSink>>,
+    cancel: Option<Arc<CancelToken>>,
 }
 
 impl System {
@@ -239,6 +241,7 @@ impl System {
             func_threads: None,
             ledger: false,
             progress: None,
+            cancel: None,
         }
     }
 
@@ -253,6 +256,13 @@ impl System {
     /// `sink` while running — feeds `GET /jobs/:id` on the server.
     pub fn with_progress(mut self, sink: Arc<ProgressSink>) -> Self {
         self.progress = Some(sink);
+        self
+    }
+
+    /// Attach a cooperative cancellation token, polled by every member
+    /// engine's quantum loop (see [`super::Cluster::with_cancel`]).
+    pub fn with_cancel(mut self, token: Arc<CancelToken>) -> Self {
+        self.cancel = Some(token);
         self
     }
 
@@ -327,6 +337,7 @@ impl System {
             st.enable_ledger();
         }
         st.set_progress(self.progress.clone());
+        st.set_cancel(self.cancel.clone());
         st.prepare();
         loop {
             match st.step_quantum()? {
@@ -369,6 +380,7 @@ impl System {
                 st.enable_ledger();
             }
             st.set_progress(self.progress.clone());
+            st.set_cancel(self.cancel.clone());
             st.prepare();
             states.push(st);
         }

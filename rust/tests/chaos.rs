@@ -1,0 +1,334 @@
+//! Chaos harness for `snax serve` (DESIGN.md §11): drive the service
+//! over real sockets while the deterministic fault injector
+//! (`ServerConfig::fault_spec`) panics, slows, and stalls jobs, and
+//! hold it to the fault-tolerance contract —
+//!
+//! * no request outlives its deadline by more than quantum-detection
+//!   slack (504 with partial progress, prompt return);
+//! * `DELETE /jobs/:id` cancels a detached job cooperatively;
+//! * identical concurrent requests coalesce onto one execution and get
+//!   byte-identical bodies;
+//! * the circuit breaker opens under a failure burst, sheds with
+//!   `Retry-After`, and recovers through half-open probes;
+//! * panicking jobs never cost a worker slot, and a chaos load of
+//!   retrying closed-loop clients lands every request;
+//! * shutdown stays graceful through all of it.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use snax::config::ServerConfig;
+use snax::runtime::json;
+use snax::server::{http, Server};
+use snax::sim::{CancelReason, CancelToken, Cancelled, Cluster};
+
+fn chaos_config() -> ServerConfig {
+    ServerConfig {
+        port: 0,
+        workers: 2,
+        cache_capacity: 16,
+        queue_depth: 16,
+        phase_cache_capacity: 256,
+        ..ServerConfig::default()
+    }
+}
+
+/// One request over a fresh connection: `(status, headers, body)`.
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    http::write_request(&mut writer, method, path, body.as_bytes(), false).unwrap();
+    http::read_response(&mut reader).expect("response")
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn body_str(body: &[u8]) -> &str {
+    std::str::from_utf8(body).expect("utf-8 body")
+}
+
+/// Scrape one sample from `/metrics` by its full series name
+/// (including labels, e.g. `snax_requests_shed_total{reason="breaker"}`).
+fn scrape(addr: SocketAddr, series: &str) -> u64 {
+    let (status, _, body) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let text = body_str(&body);
+    text.lines()
+        .find(|l| l.split_whitespace().next() == Some(series))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no series '{series}' in:\n{text}"))
+}
+
+#[test]
+fn library_cancel_token_stops_a_run_with_a_typed_error() {
+    let graph = snax::models::fig6a_graph();
+    let cfg = snax::config::ClusterConfig::fig6d();
+    let compiled = snax::compiler::compile(
+        &graph,
+        &cfg,
+        &snax::compiler::CompileOptions::sequential(),
+    )
+    .unwrap();
+    let token = Arc::new(CancelToken::new());
+    token.cancel();
+    let err = Cluster::new(&cfg)
+        .with_cancel(token)
+        .run(&compiled.program)
+        .expect_err("a pre-cancelled token must stop the run");
+    let cancelled = err
+        .downcast_ref::<Cancelled>()
+        .unwrap_or_else(|| panic!("error must downcast to Cancelled: {err:#}"));
+    assert_eq!(cancelled.reason, CancelReason::Client);
+}
+
+#[test]
+fn identical_concurrent_requests_coalesce_onto_one_execution() {
+    // Job seq 0 (the flight leader) runs 500 ms slow, holding the
+    // flight open while the followers arrive; later seqs are clean.
+    let server = Server::start(ServerConfig {
+        workers: 4,
+        fault_spec: Some("slow:1.0,slow_ms:500,first:1".into()),
+        ..chaos_config()
+    })
+    .unwrap();
+    let addr = server.addr();
+    const N: usize = 6;
+    let barrier = Arc::new(Barrier::new(N));
+    let body = r#"{"net":"fig6a","cluster":"fig6d"}"#;
+    let clients: Vec<_> = (0..N)
+        .map(|_| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                request(addr, "POST", "/simulate", body)
+            })
+        })
+        .collect();
+    let results: Vec<_> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    let mut coalesced_headers = 0;
+    for (status, headers, resp) in &results {
+        assert_eq!(*status, 200, "{}", body_str(resp));
+        assert_eq!(
+            body_str(resp),
+            body_str(&results[0].2),
+            "coalesced responses must be byte-identical"
+        );
+        if header(headers, "x-snax-coalesced").is_some() {
+            coalesced_headers += 1;
+        }
+    }
+    assert_eq!(
+        coalesced_headers,
+        N - 1,
+        "exactly one leader, everyone else coalesced"
+    );
+    assert_eq!(scrape(addr, "snax_coalesced_total"), (N - 1) as u64);
+    // One pool job total: the whole burst cost one simulation.
+    assert_eq!(scrape(addr, "snax_jobs_executed_total"), 1);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_expiry_returns_504_with_partial_progress_promptly() {
+    // Every job stalls (up to the injector's 2 s cap, polling its
+    // token); the 200 ms deadline must cut the request off.
+    let server = Server::start(ServerConfig {
+        fault_spec: Some("stall:1.0".into()),
+        ..chaos_config()
+    })
+    .unwrap();
+    let addr = server.addr();
+    let t0 = Instant::now();
+    let (status, _, body) =
+        request(addr, "POST", "/simulate", r#"{"net":"fig6a","deadline_ms":200}"#);
+    let elapsed = t0.elapsed();
+    assert_eq!(status, 504, "{}", body_str(&body));
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "expired request must return promptly, took {elapsed:?}"
+    );
+    let v = json::parse(body_str(&body)).unwrap();
+    assert_eq!(v.get("state").unwrap().as_str(), Some("expired"));
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("deadline exceeded"));
+    assert!(v.get("progress").unwrap().get("cycles").unwrap().as_u64().is_some());
+    // The worker slot came back: an un-deadlined request (the stall cap
+    // is 2 s) still completes.
+    let (status, _, body) = request(addr, "POST", "/simulate", r#"{"net":"fig6a"}"#);
+    assert_eq!(status, 200, "{}", body_str(&body));
+    server.shutdown();
+}
+
+#[test]
+fn delete_cancels_a_detached_job_cooperatively() {
+    let server = Server::start(ServerConfig {
+        fault_spec: Some("stall:1.0".into()),
+        ..chaos_config()
+    })
+    .unwrap();
+    let addr = server.addr();
+    let (status, _, body) =
+        request(addr, "POST", "/simulate", r#"{"net":"fig6a","detach":true}"#);
+    assert_eq!(status, 202, "{}", body_str(&body));
+    let id = json::parse(body_str(&body))
+        .unwrap()
+        .get("job")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+
+    assert_eq!(request(addr, "DELETE", "/jobs/999999", "").0, 404);
+    assert_eq!(request(addr, "DELETE", "/jobs/banana", "").0, 400);
+
+    let (status, _, body) = request(addr, "DELETE", &format!("/jobs/{id}"), "");
+    assert_eq!(status, 202, "{}", body_str(&body));
+    assert!(body_str(&body).contains("cancelling"));
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (status, _, body) = request(addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(status, 200);
+        let v = json::parse(body_str(&body)).unwrap();
+        match v.get("state").unwrap().as_str().unwrap() {
+            "cancelled" => {
+                assert!(
+                    v.get("error").unwrap().as_str().unwrap().contains("cancelled by client"),
+                    "{}",
+                    body_str(&body)
+                );
+                break;
+            }
+            "done" | "failed" => panic!("job must end cancelled: {}", body_str(&body)),
+            _ => std::thread::sleep(Duration::from_millis(10)),
+        }
+        assert!(Instant::now() < deadline, "cancellation was never observed");
+    }
+    // Terminal jobs conflict rather than double-cancel.
+    assert_eq!(request(addr, "DELETE", &format!("/jobs/{id}"), "").0, 409);
+    server.shutdown();
+}
+
+#[test]
+fn breaker_opens_on_a_failure_burst_and_recovers_via_half_open_probes() {
+    // Exactly jobs 0..8 panic; the breaker window needs 8 samples at
+    // >= 50% failures to trip, so the burst trips it exactly, and every
+    // later job is clean for the recovery probes.
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        fault_spec: Some("panic:1.0,first:8".into()),
+        breaker_open_ms: 400,
+        ..chaos_config()
+    })
+    .unwrap();
+    let addr = server.addr();
+    let body = r#"{"net":"fig6a","cluster":"fig6d"}"#;
+    for i in 0..8 {
+        let (status, _, resp) = request(addr, "POST", "/simulate", body);
+        assert_eq!(status, 500, "request {i}: {}", body_str(&resp));
+        assert!(body_str(&resp).contains("panicked"), "{}", body_str(&resp));
+    }
+    assert_eq!(scrape(addr, "snax_job_panics_total"), 8);
+
+    // Open: sheds without touching the pool, and says when to retry.
+    let (status, headers, resp) = request(addr, "POST", "/simulate", body);
+    assert_eq!(status, 503, "{}", body_str(&resp));
+    assert!(header(&headers, "retry-after").is_some(), "shed must carry Retry-After");
+    assert_eq!(scrape(addr, "snax_breaker_state"), 1, "breaker must be open");
+    assert!(scrape(addr, "snax_requests_shed_total{reason=\"breaker\"}") >= 1);
+
+    // After the open window the breaker half-opens and admits probes.
+    std::thread::sleep(Duration::from_millis(600));
+    assert_eq!(scrape(addr, "snax_breaker_state"), 2, "breaker must be half-open");
+    for _ in 0..2 {
+        let (status, _, resp) = request(addr, "POST", "/simulate", body);
+        assert_eq!(status, 200, "probe must succeed: {}", body_str(&resp));
+    }
+    assert_eq!(scrape(addr, "snax_breaker_state"), 0, "breaker must re-close");
+    let (status, _, _) = request(addr, "POST", "/simulate", body);
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn chaos_load_lands_every_request_and_drains_cleanly() {
+    // A mixed fault prefix (25% panics, 25% slow jobs over the first 40
+    // sequence numbers) under concurrent retrying clients: every
+    // logical request must eventually land, no worker slot may be lost,
+    // and shutdown must stay graceful.
+    let server = Server::start(ServerConfig {
+        fault_spec: Some("panic:0.25,slow:0.25,slow_ms:50,first:40".into()),
+        default_deadline_ms: 30_000,
+        breaker_open_ms: 200,
+        ..chaos_config()
+    })
+    .unwrap();
+    let addr = server.addr();
+    const CLIENTS: usize = 4;
+    const REQUESTS: usize = 6;
+    let payloads =
+        [r#"{"net":"fig6a"}"#, r#"{"net":"dae"}"#, r#"{"net":"fig6a","cluster":"fig6c"}"#];
+    let landed = Arc::new(AtomicU64::new(0));
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let landed = landed.clone();
+            std::thread::spawn(move || {
+                for r in 0..REQUESTS {
+                    let body = payloads[(c + r) % payloads.len()];
+                    let mut attempts = 0;
+                    loop {
+                        attempts += 1;
+                        assert!(attempts <= 25, "request never landed: {body}");
+                        let (status, headers, _) =
+                            request(addr, "POST", "/simulate", body);
+                        match status {
+                            200 => break,
+                            // Shed or poisoned: back off (honoring
+                            // Retry-After) and go again.
+                            429 | 500 | 503 | 504 => {
+                                let wait = header(&headers, "retry-after")
+                                    .and_then(|v| v.parse::<u64>().ok())
+                                    .map(Duration::from_secs)
+                                    .unwrap_or(Duration::from_millis(20));
+                                std::thread::sleep(wait.min(Duration::from_secs(1)));
+                            }
+                            other => panic!("unexpected status {other} for {body}"),
+                        }
+                    }
+                    landed.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread must not panic");
+    }
+    assert_eq!(landed.load(Ordering::Relaxed), (CLIENTS * REQUESTS) as u64);
+
+    // Past the fault prefix: both worker slots still serve plain
+    // requests back to back.
+    for _ in 0..3 {
+        let (status, _, resp) = request(addr, "POST", "/simulate", r#"{"net":"fig6a"}"#);
+        assert_eq!(status, 200, "{}", body_str(&resp));
+    }
+    let (status, _, health) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let v = json::parse(body_str(&health)).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+
+    // Graceful shutdown drains promptly even after the chaos run.
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(30), "shutdown must drain promptly");
+}

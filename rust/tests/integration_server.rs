@@ -26,8 +26,9 @@ fn start_server() -> Server {
         cache_capacity: 16,
         queue_depth: 64,
         phase_cache_capacity: 256,
+        ..ServerConfig::default()
     })
-        .expect("server starts on an ephemeral port")
+    .expect("server starts on an ephemeral port")
 }
 
 /// One request over a fresh connection: `(status, headers, body)`.

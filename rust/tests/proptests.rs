@@ -692,6 +692,7 @@ fn prop_sweep_bodies_identical_across_thread_counts() {
                 cache_capacity: 8,
                 queue_depth: 16,
                 phase_cache_capacity: 256,
+                ..ServerConfig::default()
             }));
             let req = Request {
                 method: "POST".into(),
