@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke chaos-smoke loadgen-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
+.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke chaos-smoke crash-smoke loadgen-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -55,6 +55,14 @@ serve-smoke:
 # worker slot is ever lost.
 chaos-smoke:
 	cargo test -q --test chaos
+
+# Crash-recovery smoke (DESIGN.md §12): run the real binary, kill it
+# mid-job with the deterministic `crash:p` fault, and assert the job
+# journal replays on restart — the orphaned job auto-resumes to a
+# report byte-identical to an uninterrupted run, and finished jobs stay
+# pollable without re-execution.
+crash-smoke:
+	cargo test -q --test crash_recovery
 
 # Closed-loop load generator against a loopback server: retrying
 # clients honoring Retry-After; rewrites BENCH_serve_loadgen.json and

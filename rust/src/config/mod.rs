@@ -615,6 +615,19 @@ pub struct ServerConfig {
     /// knob; `None` falls back to the `SNAX_FAULT` environment
     /// variable, and production deployments leave both unset.
     pub fault_spec: Option<String>,
+    /// Crash-safe job journal path (`--journal`). When set, detached
+    /// jobs are recorded durably, their checkpoints land under
+    /// `<path>.ckpts/`, and a restart replays the journal — reinstating
+    /// finished jobs and auto-resuming interrupted ones (DESIGN.md
+    /// §12). `None` keeps jobs volatile (the pre-durability behavior).
+    pub journal_path: Option<String>,
+    /// TTL in milliseconds for finished detached jobs: entries older
+    /// than this are evicted from the in-memory table (still in the
+    /// journal). `0` = no TTL; only `max_jobs` bounds growth.
+    pub job_ttl_ms: u64,
+    /// Maximum finished detached jobs retained for polling before FIFO
+    /// eviction.
+    pub max_jobs: usize,
 }
 
 impl Default for ServerConfig {
@@ -634,6 +647,9 @@ impl Default for ServerConfig {
             quota_rps: 0,
             quota_burst: 0,
             fault_spec: None,
+            journal_path: None,
+            job_ttl_ms: 0,
+            max_jobs: 1024,
         }
     }
 }
@@ -655,6 +671,9 @@ impl ServerConfig {
         if let Some(spec) = &self.fault_spec {
             crate::server::fault::FaultPlan::parse(spec)
                 .with_context(|| format!("invalid fault_spec '{spec}'"))?;
+        }
+        if self.max_jobs == 0 {
+            bail!("max_jobs must be at least 1");
         }
         Ok(())
     }

@@ -125,6 +125,43 @@ fn phase_stats_json(s: &snax::sim::PhaseCacheStats) -> snax::runtime::json::Valu
     ])
 }
 
+/// Shared `--checkpoint-dir` / `--checkpoint-every` / `--resume`
+/// parsing for the cluster and system simulate paths. `--resume`
+/// accepts a checkpoint file or a directory (the lexicographically
+/// latest `.ckpt` inside is picked, which is the newest — filenames
+/// embed the zero-padded cycle).
+fn checkpoint_args(
+    args: &Args,
+) -> Result<(Option<snax::sim::CheckpointPlan>, Option<snax::sim::Checkpoint>)> {
+    let plan = match args.flags.get("checkpoint-dir") {
+        Some(dir) => {
+            let every: u64 = args
+                .get("checkpoint-every", "8")
+                .parse()
+                .context("bad --checkpoint-every")?;
+            Some(snax::sim::CheckpointPlan::new(dir.as_str()).every(every))
+        }
+        None => None,
+    };
+    let resume = match args.flags.get("resume") {
+        Some(path) => {
+            let p = std::path::Path::new(path);
+            let file = if p.is_dir() {
+                snax::sim::checkpoint::latest_in_dir(p)?
+                    .with_context(|| format!("no checkpoint files in {path}"))?
+            } else {
+                p.to_path_buf()
+            };
+            let ck = snax::sim::checkpoint::load(&file)
+                .with_context(|| format!("loading checkpoint {}", file.display()))?;
+            println!("resuming from {} (cycle {})", file.display(), ck.cycle());
+            Some(ck)
+        }
+        None => None,
+    };
+    Ok((plan, resume))
+}
+
 /// Resolve `--system` (preset name or .toml path), falling back to a
 /// system-of-1 around `--cluster` when only `--partition` was given.
 fn system_for(args: &Args) -> Result<SystemConfig> {
@@ -147,8 +184,16 @@ fn cmd_simulate_system(args: &Args) -> Result<()> {
     };
     let g = graph_for(&args.get("net", "fig6a"))?;
     let (opts, mode, memo) = sim_options(args)?;
+    let (ckpt_plan, resume_ck) = checkpoint_args(args)?;
     let cs = compile_system(&g, &sys, &opts, strategy)?;
-    let rep = System::new(&sys).with_memo(memo).run_mode(&cs.programs(), mode)?;
+    let mut system = System::new(&sys).with_memo(memo);
+    if let Some(plan) = ckpt_plan {
+        system = system.with_checkpoint(plan);
+    }
+    let rep = match &resume_ck {
+        Some(ck) => system.resume_mode(&cs.programs(), mode, ck)?,
+        None => system.run_mode(&cs.programs(), mode)?,
+    };
     let freq = sys.clusters[0].freq_mhz;
     println!(
         "net={} system={} partition={} clusters={} mode={:?} inferences={}",
@@ -199,19 +244,30 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = cluster_for(args)?;
     let g = graph_for(&args.get("net", "fig6a"))?;
     let (opts, mode, memo) = sim_options(args)?;
+    let (ckpt_plan, resume_ck) = checkpoint_args(args)?;
     let cp = compile(&g, &cfg, &opts)?;
     // Same sizing as the engine's default per-run cache — the explicit
     // handle exists only so the CLI can report hit/miss stats.
     let phase_cache = std::sync::Arc::new(snax::sim::PhaseCache::for_run());
-    let cluster =
+    let mut cluster =
         Cluster::new(&cfg).with_memo(memo).with_phase_cache(phase_cache.clone());
+    if let Some(plan) = ckpt_plan {
+        cluster = cluster.with_checkpoint(plan);
+    }
     let trace_path = args.flags.get("trace").cloned();
     let report = if let Some(path) = &trace_path {
+        if resume_ck.is_some() {
+            // The trace covers the whole run by construction; a resumed
+            // run only re-executes the tail, so the two cannot compose.
+            bail!("--trace cannot be combined with --resume");
+        }
         let (report, trace) = cluster.run_traced_mode(&cp.program, mode)?;
         std::fs::write(path, trace.to_chrome_json())
             .with_context(|| format!("writing trace to {path}"))?;
         println!("wrote chrome trace ({} events) to {path}", trace.events.len());
         report
+    } else if let Some(ck) = &resume_ck {
+        cluster.resume_mode(&cp.program, mode, ck)?
     } else {
         cluster.run_mode(&cp.program, mode)?
     };
@@ -685,6 +741,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("quota-rps") {
         cfg.quota_rps = args.get("quota-rps", "0").parse().context("bad --quota-rps")?;
     }
+    if let Some(path) = args.flags.get("journal") {
+        cfg.journal_path = Some(path.clone());
+    }
+    if args.has("job-ttl-ms") {
+        cfg.job_ttl_ms =
+            args.get("job-ttl-ms", "0").parse().context("bad --job-ttl-ms")?;
+    }
+    if args.has("max-jobs") {
+        cfg.max_jobs = args.get("max-jobs", "1024").parse().context("bad --max-jobs")?;
+    }
+    if let Some(spec) = args.flags.get("fault") {
+        cfg.fault_spec = Some(spec.clone());
+    }
     snax::server::run_blocking(cfg)
 }
 
@@ -807,6 +876,9 @@ fn help() {
          \u{20}           [--system soc2|soc4|preset|file.toml] [--partition none|pipeline|data]\n\
          \u{20}           (multi-cluster SoC: cross-cluster partition pass, shared-NoC\n\
          \u{20}            contention, per-cluster reports; single presets = system-of-1)\n\
+         \u{20}           [--checkpoint-dir dir] [--checkpoint-every N] [--resume file|dir]\n\
+         \u{20}           (barrier-boundary checkpoints; a resumed run's report is\n\
+         \u{20}            byte-identical to an uninterrupted one; see DESIGN.md §12)\n\
          \u{20}  sweep     --nets fig6a,dae --clusters fig6b,fig6c,fig6d\n\
          \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\
          \u{20}            [--memo on|off] [--threads N] [--json out.json]\n\
@@ -816,6 +888,10 @@ fn help() {
          \u{20}            [--phase-cache slots] (0 disables phase memoization)\n\
          \u{20}            [--deadline-ms D] (default per-request wall deadline, 0=off)\n\
          \u{20}            [--breaker on|off] [--quota-rps R] (admission control)\n\
+         \u{20}            [--journal path] (crash-safe job journal: jobs survive\n\
+         \u{20}             restarts, interrupted ones auto-resume from checkpoints)\n\
+         \u{20}            [--job-ttl-ms T] [--max-jobs N] (finished-job retention)\n\
+         \u{20}            [--fault spec] (chaos injection, e.g. crash:1.0,first:1)\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6, §11)\n\
          \u{20}  profile   --net fig6a --cluster fig6d [--system soc2|soc4]\n\
          \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\

@@ -56,6 +56,7 @@
 //! direct library path.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -71,9 +72,10 @@ use crate::energy;
 use crate::models;
 use crate::parallel;
 use crate::runtime::json::{self, Value};
+use crate::sim::checkpoint::load as load_checkpoint;
 use crate::sim::{
-    ledger, CancelReason, CancelToken, Cancelled, Cluster, LedgerReport, NocStats,
-    PhaseCache, ProgressSink, SimMode, SimReport, System, SystemReport,
+    ledger, CancelReason, CancelToken, Cancelled, CheckpointPlan, Cluster, LedgerReport,
+    NocStats, PhaseCache, ProgressSink, SimMode, SimReport, System, SystemReport,
 };
 
 use super::admission::{Admission, Shed};
@@ -81,6 +83,7 @@ use super::cache::{ProgramCache, SystemCache};
 use super::fault::FaultPlan;
 use super::flight::{mix_key, Flight, Join, Outcome};
 use super::http::{Request, Response};
+use super::journal::{self, Journal, Record, TerminalState};
 use super::pool::{SubmitError, WorkerPool};
 
 // ---------------------------------------------------------------------------
@@ -327,37 +330,118 @@ enum JobState {
     /// Terminal: the job observed its cancel token (client `DELETE` or
     /// deadline) and unwound cooperatively.
     Cancelled(String),
+    /// Terminal: the process died (or drained on SIGTERM) while the job
+    /// was in flight. Resumable from its latest checkpoint via
+    /// `POST /jobs/:id/resume` (DESIGN.md §12).
+    Interrupted(String),
 }
 
 impl JobState {
     fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Done(_) | JobState::Failed(_) | JobState::Cancelled(_))
+        matches!(
+            self,
+            JobState::Done(_)
+                | JobState::Failed(_)
+                | JobState::Cancelled(_)
+                | JobState::Interrupted(_)
+        )
     }
 }
 
-/// Finished jobs retained for polling before being pruned FIFO.
-const MAX_FINISHED_JOBS: usize = 1024;
+/// Durable per-job metadata: the original request (to re-run or resume
+/// the job) plus checkpoint / retention bookkeeping.
+struct JobMeta {
+    /// Original request JSON, verbatim.
+    body: String,
+    /// Newest checkpoint file the engine wrote for this job.
+    last_ckpt: Option<PathBuf>,
+    /// When the job reached a terminal state (drives TTL eviction).
+    finished_at: Option<Instant>,
+}
+
+/// Outcome of a `POST /jobs/:id/resume` table transition.
+enum ResumeLookup {
+    /// Unknown (or already evicted) job → 404.
+    Missing,
+    /// Not in a resumable state → 409 with this reason.
+    Conflict(String),
+    /// The job was atomically moved back to `Queued`; re-run `body`,
+    /// restoring from `ckpt` when present.
+    Ready { body: String, ckpt: Option<PathBuf> },
+}
 
 #[derive(Default)]
 struct JobsInner {
     map: HashMap<u64, JobState>,
     /// Cancel tokens of live jobs, dropped once the job is terminal.
     tokens: HashMap<u64, Arc<CancelToken>>,
+    meta: HashMap<u64, JobMeta>,
     finished: VecDeque<u64>,
 }
 
-#[derive(Default)]
+impl JobsInner {
+    /// Enforce the retention bounds: TTL first (front of the FIFO is
+    /// oldest), then the max-count cap. The journal remains the durable
+    /// record of evicted jobs.
+    fn evict(&mut self, ttl: Option<Duration>, max_finished: usize) {
+        if let Some(ttl) = ttl {
+            while let Some(&old) = self.finished.front() {
+                let expired = self
+                    .meta
+                    .get(&old)
+                    .and_then(|m| m.finished_at)
+                    .map(|t| t.elapsed() > ttl)
+                    .unwrap_or(true);
+                // A reopened (resumed) job keeps its map entry; it only
+                // leaves the FIFO.
+                let stale = !self.map.get(&old).map(JobState::is_terminal).unwrap_or(false);
+                if !(expired || stale) {
+                    break;
+                }
+                self.finished.pop_front();
+                if !stale {
+                    self.map.remove(&old);
+                    self.meta.remove(&old);
+                }
+            }
+        }
+        while self.finished.len() > max_finished {
+            if let Some(old) = self.finished.pop_front() {
+                if self.map.get(&old).map(JobState::is_terminal).unwrap_or(false) {
+                    self.map.remove(&old);
+                    self.meta.remove(&old);
+                }
+            }
+        }
+    }
+}
+
 struct JobTable {
     inner: Mutex<JobsInner>,
     next_id: AtomicU64,
+    /// Terminal jobs older than this are evicted (`None` = keep until
+    /// the count cap prunes them).
+    ttl: Option<Duration>,
+    /// Finished jobs retained for polling before FIFO pruning.
+    max_finished: usize,
 }
 
 impl JobTable {
-    fn create(&self, token: Arc<CancelToken>) -> u64 {
+    fn new(ttl_ms: u64, max_finished: usize) -> Self {
+        Self {
+            inner: Mutex::new(JobsInner::default()),
+            next_id: AtomicU64::new(0),
+            ttl: (ttl_ms > 0).then(|| Duration::from_millis(ttl_ms)),
+            max_finished: max_finished.max(1),
+        }
+    }
+
+    fn create(&self, token: Arc<CancelToken>, body: String) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let mut inner = self.inner.lock().unwrap();
         inner.map.insert(id, JobState::Queued);
         inner.tokens.insert(id, token);
+        inner.meta.insert(id, JobMeta { body, last_ckpt: None, finished_at: None });
         id
     }
 
@@ -367,12 +451,35 @@ impl JobTable {
         inner.map.insert(id, state);
         if finished {
             inner.tokens.remove(&id);
-            inner.finished.push_back(id);
-            while inner.finished.len() > MAX_FINISHED_JOBS {
-                if let Some(old) = inner.finished.pop_front() {
-                    inner.map.remove(&old);
-                }
+            if let Some(m) = inner.meta.get_mut(&id) {
+                m.finished_at = Some(Instant::now());
             }
+            inner.finished.push_back(id);
+            inner.evict(self.ttl, self.max_finished);
+        }
+    }
+
+    /// Install a recovered job (journal replay at startup): terminal
+    /// state + metadata in one step, so pollers can still read results
+    /// from before the restart.
+    fn recover(&self, id: u64, state: JobState, body: String, last_ckpt: Option<PathBuf>) {
+        debug_assert!(state.is_terminal());
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.insert(id, state);
+        inner
+            .meta
+            .insert(id, JobMeta { body, last_ckpt, finished_at: Some(Instant::now()) });
+        inner.finished.push_back(id);
+        inner.evict(self.ttl, self.max_finished);
+        // Future ids must not collide with recovered ones.
+        self.next_id.fetch_max(id, Ordering::Relaxed);
+    }
+
+    /// Record a freshly-written checkpoint file for a live job.
+    fn note_checkpoint(&self, id: u64, path: &Path) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = inner.meta.get_mut(&id) {
+            m.last_ckpt = Some(path.to_path_buf());
         }
     }
 
@@ -380,6 +487,7 @@ impl JobTable {
         let mut inner = self.inner.lock().unwrap();
         inner.map.remove(&id);
         inner.tokens.remove(&id);
+        inner.meta.remove(&id);
     }
 
     /// Request cancellation: `None` = unknown job, `Some(false)` =
@@ -397,9 +505,73 @@ impl JobTable {
         Some(true)
     }
 
+    /// Fire every live job's cancel token (graceful drain): the engines
+    /// observe the tokens at their next quantum, write their final
+    /// checkpoints, and unwind.
+    fn cancel_all(&self) {
+        let inner = self.inner.lock().unwrap();
+        for token in inner.tokens.values() {
+            token.cancel();
+        }
+    }
+
+    /// Atomically transition a resumable terminal job back to `Queued`
+    /// and hand out what a re-run needs.
+    fn begin_resume(&self, id: u64, token: Arc<CancelToken>) -> ResumeLookup {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(state) = inner.map.get(&id) else { return ResumeLookup::Missing };
+        match state {
+            JobState::Cancelled(_) | JobState::Interrupted(_) => {}
+            JobState::Done(_) => {
+                return ResumeLookup::Conflict(format!("job {id} already completed"))
+            }
+            JobState::Failed(_) => {
+                return ResumeLookup::Conflict(format!(
+                    "job {id} failed — resubmit it instead of resuming"
+                ))
+            }
+            JobState::Queued | JobState::Running(_) => {
+                return ResumeLookup::Conflict(format!("job {id} is still in flight"))
+            }
+        }
+        let Some(m) = inner.meta.get_mut(&id) else {
+            return ResumeLookup::Conflict(format!(
+                "job {id} has no recorded request body to resume from"
+            ));
+        };
+        m.finished_at = None;
+        let body = m.body.clone();
+        let ckpt = m.last_ckpt.clone();
+        inner.map.insert(id, JobState::Queued);
+        inner.tokens.insert(id, token);
+        // Leave any stale FIFO entry in place; `evict` skips ids whose
+        // state is no longer terminal.
+        ResumeLookup::Ready { body, ckpt }
+    }
+
     /// Render the status body for a job, or `None` if unknown/expired.
     fn status_body(&self, id: u64) -> Option<String> {
         let inner = self.inner.lock().unwrap();
+        let ckpt_name = |inner: &JobsInner| {
+            inner.meta.get(&id).and_then(|m| {
+                m.last_ckpt
+                    .as_ref()
+                    .and_then(|p| p.file_name())
+                    .map(|n| n.to_string_lossy().into_owned())
+            })
+        };
+        // Terminal-but-resumable states surface the newest checkpoint
+        // so a poller knows `POST /jobs/:id/resume` will pick up there.
+        let resumable_fields = |why: &str, state: &str| {
+            let mut fields =
+                vec![("error", Value::from(why)), ("id", Value::from(id))];
+            if let Some(name) = ckpt_name(&inner) {
+                fields.push(("checkpoint", Value::from(name)));
+                fields.push(("resumable", Value::from(true)));
+            }
+            fields.push(("state", Value::from(state)));
+            Value::object(fields).to_json()
+        };
         inner.map.get(&id).map(|state| match state {
             JobState::Queued => {
                 Value::object([("id", Value::from(id)), ("state", Value::from("queued"))])
@@ -429,12 +601,8 @@ impl JobTable {
                 ("state", Value::from("failed")),
             ])
             .to_json(),
-            JobState::Cancelled(why) => Value::object([
-                ("error", Value::from(why.as_str())),
-                ("id", Value::from(id)),
-                ("state", Value::from("cancelled")),
-            ])
-            .to_json(),
+            JobState::Cancelled(why) => resumable_fields(why, "cancelled"),
+            JobState::Interrupted(why) => resumable_fields(why, "interrupted"),
         })
     }
 
@@ -445,6 +613,15 @@ impl JobTable {
             .values()
             .filter(|s| matches!(s, JobState::Queued | JobState::Running(_)))
             .count()
+    }
+
+    /// Total jobs currently retained in the table (the
+    /// `snax_jobs_retained` gauge). TTL eviction runs first so the
+    /// gauge never reports entries a poll could no longer see.
+    fn retained(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        inner.evict(self.ttl, self.max_finished);
+        inner.map.len()
     }
 }
 
@@ -480,6 +657,21 @@ pub struct AppState {
     /// `snax_job_panics_total`.
     job_panics: AtomicU64,
     jobs: JobTable,
+    /// Crash-safe job journal (`--journal <path>`); `None` = volatile
+    /// jobs, exactly the pre-durability behaviour.
+    pub journal: Option<Arc<Journal>>,
+    /// Directory detached-job checkpoints land in (`<journal>.ckpts/`);
+    /// set iff the journal is.
+    ckpt_root: Option<PathBuf>,
+    /// Checkpoint files written by detached jobs
+    /// (`snax_checkpoints_written_total`).
+    checkpoints_written: Arc<AtomicU64>,
+    /// Jobs resumed from a checkpoint or from scratch
+    /// (`snax_jobs_resumed_total`).
+    jobs_resumed: AtomicU64,
+    /// Journal records replayed at startup, drained by
+    /// [`recover_jobs`] once the pool is up.
+    recovered: Mutex<Vec<Record>>,
     /// Utilization / NoC gauges of the most recently completed
     /// simulation, exported on `GET /metrics` (last writer wins).
     run_gauges: Mutex<RunGauges>,
@@ -497,8 +689,19 @@ struct RunGauges {
 }
 
 impl AppState {
-    pub fn new(cfg: &ServerConfig) -> Self {
-        Self {
+    pub fn new(cfg: &ServerConfig) -> Result<Self> {
+        // Opening the journal replays it: torn tails are truncated and
+        // the surviving records stashed for [`recover_jobs`].
+        let (journal, recovered, ckpt_root) = match &cfg.journal_path {
+            Some(path) => {
+                let (j, records) = Journal::open(Path::new(path))
+                    .with_context(|| format!("opening job journal {path}"))?;
+                let root = PathBuf::from(format!("{path}.ckpts"));
+                (Some(Arc::new(j)), records, Some(root))
+            }
+            None => (None, Vec::new(), None),
+        };
+        Ok(Self {
             server_cfg: cfg.clone(),
             cache: ProgramCache::new(cfg.cache_capacity),
             sys_cache: SystemCache::new(cfg.cache_capacity),
@@ -511,11 +714,16 @@ impl AppState {
             fault: FaultPlan::from_config(cfg),
             job_seq: AtomicU64::new(0),
             job_panics: AtomicU64::new(0),
-            jobs: JobTable::default(),
+            jobs: JobTable::new(cfg.job_ttl_ms, cfg.max_jobs),
+            journal,
+            ckpt_root,
+            checkpoints_written: Arc::new(AtomicU64::new(0)),
+            jobs_resumed: AtomicU64::new(0),
+            recovered: Mutex::new(recovered),
             run_gauges: Mutex::new(RunGauges::default()),
             draining: AtomicBool::new(false),
             started: Instant::now(),
-        }
+        })
     }
 
     /// Refresh the `GET /metrics` run gauges from a completed run.
@@ -531,15 +739,77 @@ impl AppState {
             RunGauges { utilization, noc: noc.cloned().unwrap_or_default() };
     }
 
-    /// Flag new keep-alive turns to stop (set before draining the pool).
+    /// Flag new keep-alive turns to stop (set before draining the
+    /// pool), and fire every in-flight job's cancel token so the
+    /// engines write their final checkpoints and unwind — the jobs
+    /// land as `interrupted` (resumable) rather than being lost.
     pub fn begin_drain(&self) {
         self.draining.store(true, Ordering::SeqCst);
+        self.jobs.cancel_all();
     }
 
     pub fn shutting_down(&self) -> bool {
         self.draining.load(Ordering::SeqCst)
     }
+
+    /// Record a checkpoint file the engine just wrote for job `id`:
+    /// update the job's metadata and append (no fsync — a checkpoint is
+    /// an optimization, the simulation re-runs from scratch without it)
+    /// to the journal.
+    fn note_checkpoint(&self, id: u64, path: &Path) {
+        self.jobs.note_checkpoint(id, path);
+        if let Some(j) = &self.journal {
+            let _ = j.append(&Record::Checkpointed {
+                id,
+                path: path.to_string_lossy().into_owned(),
+            });
+        }
+    }
+
+    /// Append a record without fsync (submitted/started/checkpointed).
+    fn journal_append(&self, rec: &Record) {
+        if let Some(j) = &self.journal {
+            if let Err(e) = j.append(rec) {
+                eprintln!("journal append failed: {e:#}");
+            }
+        }
+    }
+
+    /// Append a terminal record, fsync'd: once the client can observe
+    /// the terminal state, a restart must reproduce it.
+    fn journal_terminal(&self, id: u64, state: TerminalState, body: &str) {
+        if let Some(j) = &self.journal {
+            let rec = Record::Terminal { id, state, body: body.to_string() };
+            if let Err(e) = j.append_sync(&rec) {
+                eprintln!("journal append failed: {e:#}");
+            }
+        }
+    }
+
+    /// Per-job checkpoint plan (when a journal is configured): each job
+    /// gets its own subdirectory so resumed runs can pick the
+    /// lexicographically-latest file without cross-job collisions.
+    fn checkpoint_plan(self: &Arc<Self>, id: u64) -> Option<CheckpointPlan> {
+        let root = self.ckpt_root.as_ref()?;
+        let hook = Arc::downgrade(self);
+        Some(
+            CheckpointPlan::new(root.join(format!("job{id}")))
+                .label(format!("job{id}"))
+                .every(JOB_CHECKPOINT_EVERY)
+                .counter(self.checkpoints_written.clone())
+                .on_write(Arc::new(move |p: &Path| {
+                    if let Some(state) = hook.upgrade() {
+                        state.note_checkpoint(id, p);
+                    }
+                })),
+        )
+    }
 }
+
+/// Barrier releases between automatic checkpoints of a detached job.
+/// Small enough that cancel/interrupt loses little work, large enough
+/// that checkpoint I/O stays invisible next to simulation time.
+const JOB_CHECKPOINT_EVERY: u64 = 8;
 
 /// Dispatch one request and record endpoint metrics.
 pub fn route(state: &Arc<AppState>, req: &Request) -> Response {
@@ -550,6 +820,9 @@ pub fn route(state: &Arc<AppState>, req: &Request) -> Response {
         ("POST", "/sweep") => (Endpoint::Sweep, handle_sweep(state, req)),
         ("GET", "/healthz") => (Endpoint::Healthz, handle_healthz(state)),
         ("GET", "/metrics") => (Endpoint::Metrics, handle_metrics(state)),
+        ("POST", path) if path.starts_with("/jobs/") && path.ends_with("/resume") => {
+            (Endpoint::Jobs, handle_job_resume(state, path))
+        }
         ("GET", path) if path.starts_with("/jobs/") => {
             (Endpoint::Jobs, handle_job(state, path))
         }
@@ -577,6 +850,7 @@ fn index() -> Response {
         \u{20}                results in job order\n\
          GET  /jobs/:id   detached job status/result\n\
          DELETE /jobs/:id cancel a detached job\n\
+         POST /jobs/:id/resume resume an expired/cancelled/interrupted job\n\
          GET  /healthz    liveness\n\
          GET  /metrics    Prometheus metrics\n",
     )
@@ -872,7 +1146,7 @@ fn handle_simulate(state: &Arc<AppState>, req: &Request) -> Response {
     if parsed.detach {
         // The detached path records its admission outcome when the job
         // *completes* — a 202 says nothing about service health.
-        return handle_simulate_detached(state, parsed);
+        return handle_simulate_detached(state, req, parsed);
     }
     let deadline = effective_deadline(state, parsed.deadline_ms);
     let key = simulate_flight_key(&parsed);
@@ -905,7 +1179,7 @@ fn run_simulate_leader(
     let job_token = token.clone();
     let job_sink = sink.clone();
     let result = run_on_pool(state, move || {
-        simulate_once(&worker_state, &parsed, None, job_sink, job_token, seq)
+        simulate_once(&worker_state, &parsed, None, job_sink, job_token, seq, None)
     });
     match result {
         Ok(Ok((body, hit))) => Outcome {
@@ -931,68 +1205,27 @@ fn run_simulate_leader(
     }
 }
 
-fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Response {
+fn handle_simulate_detached(
+    state: &Arc<AppState>,
+    req: &Request,
+    parsed: SimRequest,
+) -> Response {
     // Every detached job carries a token — even without a deadline —
     // so DELETE /jobs/:id always has something to fire.
     let token = match effective_deadline(state, parsed.deadline_ms) {
         Some(d) => Arc::new(CancelToken::with_deadline(d)),
         None => Arc::new(CancelToken::new()),
     };
-    let id = state.jobs.create(token.clone());
+    // The raw body is retained (and journalled) verbatim so a resume or
+    // a post-restart recovery can re-run exactly what was submitted.
+    let body = String::from_utf8_lossy(&req.body).into_owned();
+    let id = state.jobs.create(token.clone(), body.clone());
+    state.journal_append(&Record::Submitted { id, body });
     let seq = state.job_seq.fetch_add(1, Ordering::Relaxed);
     let worker_state = state.clone();
     let sink = Arc::new(ProgressSink::new());
     let submitted = state.pool.submit(Box::new(move || {
-        worker_state.jobs.set(id, JobState::Running(sink.clone()));
-        // The pool survives panicking jobs; a detached one must also
-        // leave a terminal state behind or pollers would see "running"
-        // forever (and the entry would never be pruned).
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            simulate_once(
-                &worker_state,
-                &parsed,
-                None,
-                Some(sink.clone()),
-                Some(token.clone()),
-                seq,
-            )
-        }));
-        let healthy;
-        match outcome {
-            Ok(Ok((body, _hit))) => {
-                healthy = true;
-                worker_state.jobs.set(id, JobState::Done(body));
-            }
-            Ok(Err(SimError::Compile(e))) => {
-                // Client-input error — not a service failure.
-                healthy = true;
-                worker_state.jobs.set(id, JobState::Failed(format!("{e:#}")));
-            }
-            Ok(Err(SimError::Run(e))) => match e.downcast_ref::<Cancelled>() {
-                Some(c) => {
-                    // A client DELETE is service working as intended; a
-                    // blown deadline counts against the breaker.
-                    healthy = c.reason == CancelReason::Client;
-                    worker_state.jobs.set(id, JobState::Cancelled(format!("{c}")));
-                }
-                None => {
-                    healthy = false;
-                    worker_state.jobs.set(id, JobState::Failed(format!("{e:#}")));
-                }
-            },
-            Err(payload) => {
-                healthy = false;
-                worker_state.job_panics.fetch_add(1, Ordering::Relaxed);
-                worker_state.jobs.set(
-                    id,
-                    JobState::Failed(format!(
-                        "job panicked: {}",
-                        panic_message(payload.as_ref())
-                    )),
-                );
-            }
-        }
-        worker_state.admission.record_outcome(healthy);
+        execute_detached(&worker_state, id, &parsed, sink, token, seq, None);
     }));
     match submitted {
         Ok(()) => {
@@ -1010,6 +1243,97 @@ fn handle_simulate_detached(state: &Arc<AppState>, parsed: SimRequest) -> Respon
             Response::json(503, err_body(&e.to_string())).with_header("Retry-After", "1")
         }
     }
+}
+
+/// Shared execution body for detached jobs — fresh submissions, client
+/// resumes, and startup auto-recovery all funnel through here so the
+/// terminal-state and journal transitions cannot drift between paths.
+///
+/// The pool survives panicking jobs; a detached one must also leave a
+/// terminal state behind or pollers would see "running" forever (and
+/// the entry would never be pruned).
+fn execute_detached(
+    worker_state: &Arc<AppState>,
+    id: u64,
+    parsed: &SimRequest,
+    sink: Arc<ProgressSink>,
+    token: Arc<CancelToken>,
+    seq: u64,
+    resume_from: Option<PathBuf>,
+) {
+    worker_state.jobs.set(id, JobState::Running(sink.clone()));
+    worker_state.journal_append(&Record::Started { id, seq });
+    let plan = worker_state.checkpoint_plan(id);
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        match &resume_from {
+            Some(path) => simulate_resume(
+                worker_state,
+                parsed,
+                path,
+                sink.clone(),
+                token.clone(),
+                seq,
+                plan,
+            ),
+            None => simulate_once(
+                worker_state,
+                parsed,
+                None,
+                Some(sink.clone()),
+                Some(token.clone()),
+                seq,
+                plan,
+            ),
+        }
+    }));
+    let healthy;
+    match outcome {
+        Ok(Ok((body, _hit))) => {
+            healthy = true;
+            worker_state.journal_terminal(id, TerminalState::Done, &body);
+            worker_state.jobs.set(id, JobState::Done(body));
+        }
+        Ok(Err(SimError::Compile(e))) => {
+            // Client-input error — not a service failure.
+            healthy = true;
+            let msg = format!("{e:#}");
+            worker_state.journal_terminal(id, TerminalState::Failed, &msg);
+            worker_state.jobs.set(id, JobState::Failed(msg));
+        }
+        Ok(Err(SimError::Run(e))) => match e.downcast_ref::<Cancelled>() {
+            Some(c) if worker_state.shutting_down() => {
+                // Graceful drain (SIGTERM): the engine wrote its final
+                // checkpoint on the way out; the job is resumable after
+                // restart, and an orderly shutdown is not a failure.
+                healthy = true;
+                let msg = format!("interrupted by shutdown after {c}");
+                worker_state.journal_terminal(id, TerminalState::Interrupted, &msg);
+                worker_state.jobs.set(id, JobState::Interrupted(msg));
+            }
+            Some(c) => {
+                // A client DELETE is service working as intended; a
+                // blown deadline counts against the breaker.
+                healthy = c.reason == CancelReason::Client;
+                let msg = format!("{c}");
+                worker_state.journal_terminal(id, TerminalState::Cancelled, &msg);
+                worker_state.jobs.set(id, JobState::Cancelled(msg));
+            }
+            None => {
+                healthy = false;
+                let msg = format!("{e:#}");
+                worker_state.journal_terminal(id, TerminalState::Failed, &msg);
+                worker_state.jobs.set(id, JobState::Failed(msg));
+            }
+        },
+        Err(payload) => {
+            healthy = false;
+            worker_state.job_panics.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("job panicked: {}", panic_message(payload.as_ref()));
+            worker_state.journal_terminal(id, TerminalState::Failed, &msg);
+            worker_state.jobs.set(id, JobState::Failed(msg));
+        }
+    }
+    worker_state.admission.record_outcome(healthy);
 }
 
 /// Which stage of a simulate job failed — compile errors are the
@@ -1038,6 +1362,7 @@ fn simulate_once(
     progress: Option<Arc<ProgressSink>>,
     cancel: Option<Arc<CancelToken>>,
     seq: u64,
+    ckpt: Option<CheckpointPlan>,
 ) -> Result<(String, bool), SimError> {
     // Chaos harness hook: deterministic injected faults, a single
     // `None` branch when no plan is configured. An injected panic
@@ -1048,7 +1373,7 @@ fn simulate_once(
         plan.inject(seq, cancel.as_ref());
     }
     if req.system.is_some() {
-        return simulate_system_once(state, req, func_threads, progress, cancel);
+        return simulate_system_once(state, req, func_threads, progress, cancel, ckpt);
     }
     let key = program_key(&req.graph, &req.cfg, &req.opts);
     let (cp, hit) = state
@@ -1069,6 +1394,9 @@ fn simulate_once(
     if let Some(token) = cancel {
         cluster = cluster.with_cancel(token);
     }
+    if let Some(plan) = ckpt {
+        cluster = cluster.with_checkpoint(plan);
+    }
     let report = cluster
         .run_mode(&cp.program, req.mode)
         .context("simulating workload")
@@ -1085,6 +1413,7 @@ fn simulate_system_once(
     func_threads: Option<usize>,
     progress: Option<Arc<ProgressSink>>,
     cancel: Option<Arc<CancelToken>>,
+    ckpt: Option<CheckpointPlan>,
 ) -> Result<(String, bool), SimError> {
     let (sys, strategy) = req.system.as_ref().expect("system request");
     let key = system_key(&req.graph, sys, &req.opts, *strategy);
@@ -1110,12 +1439,91 @@ fn simulate_system_once(
     if let Some(n) = func_threads {
         system = system.with_func_threads(n);
     }
+    if let Some(plan) = ckpt {
+        system = system.with_checkpoint(plan);
+    }
     let rep = system
         .run_mode(&cs.programs(), req.mode)
         .context("simulating system")
         .map_err(SimError::Run)?;
     state.store_run_gauges(&rep.clusters.iter().collect::<Vec<_>>(), Some(&rep.noc));
     Ok((render_system_report(&cs, &rep), hit))
+}
+
+/// Resume a previously checkpointed job: load the checkpoint file,
+/// compile the recorded request through the usual caches, and dispatch
+/// to the matching engine's `resume_mode`. Rendering shares
+/// [`render_report`]/[`render_system_report`] with the fresh path, and
+/// the engines guarantee the resumed report is byte-identical to an
+/// uninterrupted run (DESIGN.md §12) — so callers cannot tell a resumed
+/// result from a first-try one.
+fn simulate_resume(
+    state: &AppState,
+    req: &SimRequest,
+    from: &Path,
+    progress: Arc<ProgressSink>,
+    cancel: Arc<CancelToken>,
+    seq: u64,
+    ckpt: Option<CheckpointPlan>,
+) -> Result<(String, bool), SimError> {
+    // Same chaos hook as the fresh path — resumed jobs are not immune.
+    if let Some(plan) = &state.fault {
+        plan.inject(seq, Some(&cancel));
+    }
+    let ck = load_checkpoint(from)
+        .with_context(|| format!("loading checkpoint {}", from.display()))
+        .map_err(SimError::Run)?;
+    if req.system.is_some() {
+        let (sys, strategy) = req.system.as_ref().expect("system request");
+        let key = system_key(&req.graph, sys, &req.opts, *strategy);
+        let (cs, hit) = state
+            .sys_cache
+            .get_or_insert_with(key, || {
+                compile_system(&req.graph, sys, &req.opts, *strategy)
+            })
+            .map_err(SimError::Compile)?;
+        let mut system = System::new(sys)
+            .with_ledger(req.profile)
+            .with_progress(progress)
+            .with_cancel(cancel);
+        if sys.n_clusters() == 1 {
+            match &state.phase_cache {
+                Some(pc) => system = system.with_phase_cache(pc.clone()),
+                None => system = system.with_memo(false),
+            }
+        }
+        if let Some(plan) = ckpt {
+            system = system.with_checkpoint(plan);
+        }
+        let rep = system
+            .resume_mode(&cs.programs(), req.mode, &ck)
+            .context("resuming system simulation")
+            .map_err(SimError::Run)?;
+        state.store_run_gauges(&rep.clusters.iter().collect::<Vec<_>>(), Some(&rep.noc));
+        return Ok((render_system_report(&cs, &rep), hit));
+    }
+    let key = program_key(&req.graph, &req.cfg, &req.opts);
+    let (cp, hit) = state
+        .cache
+        .get_or_insert_with(key, || compile(&req.graph, &req.cfg, &req.opts))
+        .map_err(SimError::Compile)?;
+    let mut cluster = Cluster::new(&req.cfg)
+        .with_ledger(req.profile)
+        .with_progress(progress)
+        .with_cancel(cancel);
+    match &state.phase_cache {
+        Some(pc) => cluster = cluster.with_phase_cache(pc.clone()),
+        None => cluster = cluster.with_memo(false),
+    }
+    if let Some(plan) = ckpt {
+        cluster = cluster.with_checkpoint(plan);
+    }
+    let report = cluster
+        .resume_mode(&cp.program, req.mode, &ck)
+        .context("resuming workload")
+        .map_err(SimError::Run)?;
+    state.store_run_gauges(&[&report], None);
+    Ok((render_report(&cp, &req.cfg, &report), hit))
 }
 
 /// Batch fan-out: run every job of the sweep concurrently on the
@@ -1184,6 +1592,7 @@ fn run_sweep_leader(
                 None,
                 job_token.clone(),
                 seq0 + i as u64,
+                None,
             )
         })
     }) {
@@ -1260,6 +1669,125 @@ fn handle_job_cancel(state: &Arc<AppState>, path: &str) -> Response {
     }
 }
 
+/// `POST /jobs/:id/resume` — re-queue an expired/cancelled/interrupted
+/// job under its original id, restoring from its latest checkpoint when
+/// one exists (from scratch otherwise). 202 like DELETE: the resumed
+/// run is asynchronous; poll `GET /jobs/:id` as usual.
+fn handle_job_resume(state: &Arc<AppState>, path: &str) -> Response {
+    let id_str = &path["/jobs/".len()..path.len() - "/resume".len()];
+    let Ok(id) = id_str.parse::<u64>() else {
+        return Response::json(400, err_body(&format!("bad job id '{id_str}'")));
+    };
+    match start_resume(state, id) {
+        Ok(()) => Response::json(
+            202,
+            format!("{{\"id\":{id},\"state\":\"queued\",\"status_url\":\"/jobs/{id}\"}}"),
+        ),
+        Err((status, why)) => Response::json(status, err_body(&why)),
+    }
+}
+
+/// Core of `POST /jobs/:id/resume`, shared with startup auto-recovery:
+/// atomically transition the job back to `Queued` and submit its re-run
+/// to the pool. On `Err` the `(status, reason)` pair maps directly onto
+/// the HTTP response (404 unknown, 409 not resumable, 503 pool full).
+fn start_resume(state: &Arc<AppState>, id: u64) -> Result<(), (u16, String)> {
+    // A resumed run carries no implicit deadline: resuming is an
+    // explicit request to let the job finish (a deadline is what
+    // expired many of these jobs in the first place). DELETE /jobs/:id
+    // still cancels it through this fresh token.
+    let token = Arc::new(CancelToken::new());
+    let (body, ckpt) = match state.jobs.begin_resume(id, token.clone()) {
+        ResumeLookup::Missing => {
+            return Err((404, format!("no job {id} (unknown or expired)")))
+        }
+        ResumeLookup::Conflict(why) => return Err((409, why)),
+        ResumeLookup::Ready { body, ckpt } => (body, ckpt),
+    };
+    let parsed = match parse_sim_request(body.as_bytes()) {
+        Ok(p) => p,
+        Err(e) => {
+            // Possible only for recovered jobs whose Submitted record
+            // was lost to journal truncation (empty body).
+            let msg = format!("job {id} has no resumable request body: {e:#}");
+            state.journal_terminal(id, TerminalState::Failed, &msg);
+            state.jobs.set(id, JobState::Failed(msg.clone()));
+            return Err((409, msg));
+        }
+    };
+    let seq = state.job_seq.fetch_add(1, Ordering::Relaxed);
+    let sink = Arc::new(ProgressSink::new());
+    let worker_state = state.clone();
+    let submitted = state.pool.submit(Box::new(move || {
+        execute_detached(&worker_state, id, &parsed, sink, token, seq, ckpt);
+    }));
+    match submitted {
+        Ok(()) => {
+            state.jobs_resumed.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+        Err(e) => {
+            // Back to a resumable state so the client can retry later.
+            let msg = format!("resume not started: {e}");
+            state.journal_terminal(id, TerminalState::Interrupted, &msg);
+            state.jobs.set(id, JobState::Interrupted(msg.clone()));
+            Err((503, msg))
+        }
+    }
+}
+
+/// Fold the journal records replayed at startup into the job table:
+/// terminal jobs are reinstated for pollers, jobs that were in flight
+/// when the process died are marked `interrupted` (fsync'd back to the
+/// journal so a second restart agrees), and those orphans are
+/// auto-resumed from their latest checkpoint. Called by
+/// [`super::Server::start`] once the pool is accepting work.
+pub fn recover_jobs(state: &Arc<AppState>) {
+    let records = std::mem::take(&mut *state.recovered.lock().unwrap());
+    if records.is_empty() {
+        return;
+    }
+    let summaries = journal::replay(&records);
+    let mut orphans = Vec::new();
+    for (id, job) in &summaries {
+        let body = job.body.clone().unwrap_or_default();
+        let last_ckpt = job.checkpoints.last().map(PathBuf::from);
+        match &job.terminal {
+            Some((ts, tbody)) => {
+                let jstate = match ts {
+                    TerminalState::Done => JobState::Done(tbody.clone()),
+                    TerminalState::Failed => JobState::Failed(tbody.clone()),
+                    TerminalState::Cancelled => JobState::Cancelled(tbody.clone()),
+                    TerminalState::Interrupted => JobState::Interrupted(tbody.clone()),
+                };
+                state.jobs.recover(*id, jstate, body, last_ckpt);
+            }
+            None => {
+                let msg = "process died while the job was running".to_string();
+                state.jobs.recover(
+                    *id,
+                    JobState::Interrupted(msg.clone()),
+                    body,
+                    last_ckpt,
+                );
+                state.journal_terminal(*id, TerminalState::Interrupted, &msg);
+                orphans.push(*id);
+            }
+        }
+    }
+    eprintln!(
+        "journal replay: {} job(s) recovered, {} interrupted",
+        summaries.len(),
+        orphans.len()
+    );
+    for id in orphans {
+        match start_resume(state, id) {
+            Ok(()) => eprintln!("job {id}: auto-resuming from journal"),
+            Err((_, why)) => eprintln!("job {id}: not auto-resumed — {why}"),
+        }
+    }
+}
+
 fn handle_healthz(state: &Arc<AppState>) -> Response {
     let body = Value::object([
         ("status", Value::from(if state.shutting_down() { "draining" } else { "ok" })),
@@ -1317,7 +1845,7 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         let _ = writeln!(out, "snax_request_latency_us_count{{endpoint=\"{name}\"}} {cumulative}");
     }
     let phase = state.phase_cache.as_ref().map(|p| p.stats()).unwrap_or_default();
-    let singles: [(&str, &str, &str, u64); 19] = [
+    let singles: [(&str, &str, &str, u64); 23] = [
         ("snax_cache_hits_total", "counter", "Program-cache hits.", state.cache.hits()),
         ("snax_cache_misses_total", "counter", "Program-cache misses.", state.cache.misses()),
         (
@@ -1395,6 +1923,30 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
             "gauge",
             "Detached jobs queued or running.",
             state.jobs.pending() as u64,
+        ),
+        (
+            "snax_jobs_retained",
+            "gauge",
+            "Detached jobs retained in the table (live + finished awaiting poll).",
+            state.jobs.retained() as u64,
+        ),
+        (
+            "snax_checkpoints_written_total",
+            "counter",
+            "Checkpoint files written by detached jobs.",
+            state.checkpoints_written.load(Ordering::Relaxed),
+        ),
+        (
+            "snax_jobs_resumed_total",
+            "counter",
+            "Jobs resumed via POST /jobs/:id/resume or startup recovery.",
+            state.jobs_resumed.load(Ordering::Relaxed),
+        ),
+        (
+            "snax_journal_bytes",
+            "gauge",
+            "Size of the job journal in bytes (0 when journalling is off).",
+            state.journal.as_ref().map(|j| j.len_bytes()).unwrap_or(0),
         ),
         (
             "snax_uptime_seconds",
@@ -1634,7 +2186,7 @@ mod tests {
     }
 
     fn state() -> Arc<AppState> {
-        Arc::new(AppState::new(&test_cfg()))
+        Arc::new(AppState::new(&test_cfg()).unwrap())
     }
 
     fn post(path: &str, body: &str) -> Request {
@@ -1804,7 +2356,8 @@ mod tests {
         ]}"#;
         let mut bodies = Vec::new();
         for workers in [1usize, 2, 4] {
-            let st = Arc::new(AppState::new(&ServerConfig { workers, ..test_cfg() }));
+            let st =
+                Arc::new(AppState::new(&ServerConfig { workers, ..test_cfg() }).unwrap());
             let resp = route(&st, &post("/sweep", body));
             assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
             let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
@@ -2022,10 +2575,13 @@ mod tests {
     fn deadline_expiry_returns_504_with_partial_progress() {
         // Every job stalls (up to the 2 s cap, polling its token), so a
         // 150 ms deadline must cut the request off.
-        let st = Arc::new(AppState::new(&ServerConfig {
-            fault_spec: Some("stall:1.0".into()),
-            ..test_cfg()
-        }));
+        let st = Arc::new(
+            AppState::new(&ServerConfig {
+                fault_spec: Some("stall:1.0".into()),
+                ..test_cfg()
+            })
+            .unwrap(),
+        );
         let t0 = Instant::now();
         let resp = route(&st, &post("/simulate", r#"{"net":"fig6a","deadline_ms":150}"#));
         assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
@@ -2050,10 +2606,13 @@ mod tests {
 
     #[test]
     fn delete_cancels_a_detached_job() {
-        let st = Arc::new(AppState::new(&ServerConfig {
-            fault_spec: Some("stall:1.0".into()),
-            ..test_cfg()
-        }));
+        let st = Arc::new(
+            AppState::new(&ServerConfig {
+                fault_spec: Some("stall:1.0".into()),
+                ..test_cfg()
+            })
+            .unwrap(),
+        );
         let resp = route(&st, &post("/simulate", r#"{"net":"fig6a","detach":true}"#));
         assert_eq!(resp.status, 202);
         let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
@@ -2084,11 +2643,10 @@ mod tests {
 
     #[test]
     fn quota_exhaustion_sheds_with_429_and_retry_after() {
-        let st = Arc::new(AppState::new(&ServerConfig {
-            quota_rps: 1,
-            quota_burst: 1,
-            ..test_cfg()
-        }));
+        let st = Arc::new(
+            AppState::new(&ServerConfig { quota_rps: 1, quota_burst: 1, ..test_cfg() })
+                .unwrap(),
+        );
         let body = r#"{"net":"fig6a","cluster":"fig6c"}"#;
         let first = route(&st, &post("/simulate", body));
         assert_eq!(first.status, 200, "{}", String::from_utf8_lossy(&first.body));
@@ -2106,11 +2664,14 @@ mod tests {
 
     #[test]
     fn injected_panic_is_contained_as_a_500() {
-        let st = Arc::new(AppState::new(&ServerConfig {
-            workers: 1,
-            fault_spec: Some("panic:1.0,first:1".into()),
-            ..test_cfg()
-        }));
+        let st = Arc::new(
+            AppState::new(&ServerConfig {
+                workers: 1,
+                fault_spec: Some("panic:1.0,first:1".into()),
+                ..test_cfg()
+            })
+            .unwrap(),
+        );
         let body = r#"{"net":"fig6a","cluster":"fig6c"}"#;
         let poisoned = route(&st, &post("/simulate", body));
         assert_eq!(poisoned.status, 500, "{}", String::from_utf8_lossy(&poisoned.body));
@@ -2179,5 +2740,172 @@ mod tests {
         let text = String::from_utf8(metrics.body).unwrap();
         assert!(!text.contains("snax_phase_cache_hits_total 0"), "{text}");
         st.pool.shutdown();
+    }
+
+    /// Fresh scratch directory for journal/checkpoint tests.
+    fn scratch(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("snax-api-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn post_resume(id: u64) -> Request {
+        post(&format!("/jobs/{id}/resume"), "")
+    }
+
+    fn poll_until(st: &Arc<AppState>, id: u64, want: &str) -> Value {
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            let poll = route(st, &get(&format!("/jobs/{id}")));
+            let pv = json::parse(std::str::from_utf8(&poll.body).unwrap()).unwrap();
+            let got = pv.get("state").unwrap().as_str().unwrap().to_string();
+            if got == want {
+                return pv;
+            }
+            assert!(
+                !matches!(got.as_str(), "done" | "failed") || want == got,
+                "job {id} ended {got}, wanted {want}: {pv:?}"
+            );
+            assert!(Instant::now() < deadline, "job {id} never reached {want}");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn resume_rejects_unknown_and_non_resumable_jobs() {
+        let st = state();
+        assert_eq!(route(&st, &post_resume(999999)).status, 404);
+        assert_eq!(route(&st, &post("/jobs/banana/resume", "")).status, 400);
+        // A completed job conflicts (it has nothing left to resume).
+        let resp = route(&st, &post("/simulate", r#"{"net":"fig6a","detach":true}"#));
+        assert_eq!(resp.status, 202);
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let id = v.get("job").unwrap().as_u64().unwrap();
+        poll_until(&st, id, "done");
+        assert_eq!(route(&st, &post_resume(id)).status, 409);
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn cancelled_job_resumes_to_the_same_report_as_a_fresh_run() {
+        let dir = scratch("resume");
+        // Job seq 0 stalls until cancelled; the resumed run (seq 1)
+        // executes cleanly.
+        let st = Arc::new(
+            AppState::new(&ServerConfig {
+                fault_spec: Some("stall:1.0,first:1".into()),
+                journal_path: Some(dir.join("jobs.journal").to_string_lossy().into_owned()),
+                ..test_cfg()
+            })
+            .unwrap(),
+        );
+        let body = r#"{"net":"fig6a","cluster":"fig6c","detach":true}"#;
+        let resp = route(&st, &post("/simulate", body));
+        assert_eq!(resp.status, 202);
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let id = v.get("job").unwrap().as_u64().unwrap();
+        assert_eq!(route(&st, &delete(&format!("/jobs/{id}"))).status, 202);
+        poll_until(&st, id, "cancelled");
+        let resumed = route(&st, &post_resume(id));
+        assert_eq!(resumed.status, 202, "{}", String::from_utf8_lossy(&resumed.body));
+        poll_until(&st, id, "done");
+        // The resumed report must be byte-identical to an uninterrupted
+        // synchronous run of the same request: slice the spliced-in
+        // report out of the status body and compare raw bytes.
+        let golden =
+            route(&st, &post("/simulate", r#"{"net":"fig6a","cluster":"fig6c"}"#));
+        assert_eq!(golden.status, 200);
+        let raw = route(&st, &get(&format!("/jobs/{id}")));
+        let raw = String::from_utf8(raw.body).unwrap();
+        let report = raw
+            .strip_prefix(&format!("{{\"id\":{id},\"report\":"))
+            .and_then(|r| r.strip_suffix(",\"state\":\"done\"}"))
+            .unwrap_or_else(|| panic!("unexpected status body shape: {raw}"));
+        assert_eq!(report.as_bytes(), &golden.body[..]);
+        let metrics = route(&st, &get("/metrics"));
+        let text = String::from_utf8(metrics.body).unwrap();
+        assert!(text.contains("snax_jobs_resumed_total 1"), "{text}");
+        assert!(!text.contains("snax_journal_bytes 0"), "{text}");
+        st.pool.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_replay_reinstates_terminal_jobs_and_resumes_orphans() {
+        let dir = scratch("recover");
+        let journal_path = dir.join("jobs.journal");
+        // First "process lifetime": job 1 completed, job 2 was mid-run.
+        {
+            let (j, old) = Journal::open(&journal_path).unwrap();
+            assert!(old.is_empty());
+            j.append(&Record::Submitted { id: 1, body: r#"{"net":"fig6a"}"#.into() })
+                .unwrap();
+            j.append(&Record::Started { id: 1, seq: 0 }).unwrap();
+            j.append_sync(&Record::Terminal {
+                id: 1,
+                state: TerminalState::Done,
+                body: r#"{"total_cycles":42}"#.into(),
+            })
+            .unwrap();
+            j.append(&Record::Submitted {
+                id: 2,
+                body: r#"{"net":"fig6a","cluster":"fig6c","detach":true}"#.into(),
+            })
+            .unwrap();
+            j.append(&Record::Started { id: 2, seq: 1 }).unwrap();
+        }
+        // Restart: replay marks job 2 interrupted and auto-resumes it.
+        let st = Arc::new(
+            AppState::new(&ServerConfig {
+                journal_path: Some(journal_path.to_string_lossy().into_owned()),
+                ..test_cfg()
+            })
+            .unwrap(),
+        );
+        recover_jobs(&st);
+        let one = route(&st, &get("/jobs/1"));
+        assert_eq!(one.status, 200);
+        let ov = json::parse(std::str::from_utf8(&one.body).unwrap()).unwrap();
+        assert_eq!(ov.get("state").unwrap().as_str(), Some("done"));
+        assert_eq!(
+            ov.get("report").unwrap().get("total_cycles").unwrap().as_u64(),
+            Some(42)
+        );
+        let done = poll_until(&st, 2, "done");
+        assert!(
+            done.get("report").unwrap().get("total_cycles").unwrap().as_u64().unwrap()
+                > 0
+        );
+        // New submissions must not collide with recovered ids.
+        let resp = route(&st, &post("/simulate", r#"{"net":"fig6a","detach":true}"#));
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(v.get("job").unwrap().as_u64().unwrap() > 2);
+        st.pool.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn job_table_bounds_growth_by_count_and_ttl() {
+        // Count cap: 2 retained terminal jobs.
+        let table = JobTable::new(0, 2);
+        for _ in 0..4 {
+            let id = table.create(Arc::new(CancelToken::new()), "{}".into());
+            table.set(id, JobState::Done("{}".into()));
+        }
+        assert_eq!(table.retained(), 2);
+        // TTL: everything terminal evaporates once the clock passes.
+        let table = JobTable::new(1, 64);
+        let id = table.create(Arc::new(CancelToken::new()), "{}".into());
+        table.set(id, JobState::Done("{}".into()));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(table.retained(), 0);
+        assert!(table.status_body(id).is_none(), "evicted job must 404");
+        // Live jobs are never TTL'd.
+        let live = table.create(Arc::new(CancelToken::new()), "{}".into());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(table.retained(), 1);
+        assert!(table.status_body(live).is_some());
     }
 }

@@ -1,9 +1,11 @@
 //! Deterministic fault injection for the chaos harness (DESIGN.md §11).
 //!
-//! A [`FaultPlan`] describes probabilities of three failure shapes —
+//! A [`FaultPlan`] describes probabilities of four failure shapes —
 //! `panic` (the job unwinds), `slow` (the job sleeps before running),
-//! and `stall` (the job blocks until cancelled, bounded by a safety
-//! cap) — parsed from `ServerConfig::fault_spec` or the `SNAX_FAULT`
+//! `stall` (the job blocks until cancelled, bounded by a safety cap),
+//! and `crash` (the whole process `abort()`s at the job boundary, the
+//! shape the crash-recovery harness uses to exercise journal replay) —
+//! parsed from `ServerConfig::fault_spec` or the `SNAX_FAULT`
 //! environment variable. This is a *test-only* knob: production
 //! deployments leave both unset and the injection site is a single
 //! `None` branch.
@@ -39,6 +41,11 @@ pub struct FaultPlan {
     pub slow_p: f64,
     /// Probability a job stalls until cancelled (capped at [`STALL_CAP`]).
     pub stall_p: f64,
+    /// Probability the whole process aborts at the job boundary. An
+    /// abort is a *process* death, not a machine crash: data already
+    /// written to the job journal survives in the page cache, which is
+    /// exactly the failure the crash-recovery harness exercises.
+    pub crash_p: f64,
     /// Sleep duration for `slow` faults.
     pub slow_ms: u64,
     /// Only inject into the first N jobs (`0` = no limit). Lets a test
@@ -48,12 +55,13 @@ pub struct FaultPlan {
 
 impl FaultPlan {
     /// Parse a comma-separated `key:value` spec. Keys: `panic`, `slow`,
-    /// `stall` (probabilities in `0..=1`), `slow_ms`, `first`.
+    /// `stall`, `crash` (probabilities in `0..=1`), `slow_ms`, `first`.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan {
             panic_p: 0.0,
             slow_p: 0.0,
             stall_p: 0.0,
+            crash_p: 0.0,
             slow_ms: 50,
             first_n: 0,
         };
@@ -69,6 +77,7 @@ impl FaultPlan {
                 "panic" => plan.panic_p = probability(value)?,
                 "slow" => plan.slow_p = probability(value)?,
                 "stall" => plan.stall_p = probability(value)?,
+                "crash" => plan.crash_p = probability(value)?,
                 "slow_ms" => {
                     plan.slow_ms = value
                         .trim()
@@ -99,7 +108,10 @@ impl FaultPlan {
         // `fault_spec`; a bad env var is ignored rather than crashing
         // the server at startup.
         let plan = FaultPlan::parse(&spec).ok()?;
-        let active = plan.panic_p > 0.0 || plan.slow_p > 0.0 || plan.stall_p > 0.0;
+        let active = plan.panic_p > 0.0
+            || plan.slow_p > 0.0
+            || plan.stall_p > 0.0
+            || plan.crash_p > 0.0;
         active.then_some(plan)
     }
 
@@ -112,6 +124,14 @@ impl FaultPlan {
         }
         if roll(seq, 1) < self.panic_p {
             panic!("injected fault: panic (job seq {seq})");
+        }
+        if roll(seq, 4) < self.crash_p {
+            // Kill the whole process without unwinding or running exit
+            // handlers — the closest stand-in for `kill -9` that a test
+            // can trigger deterministically from inside. The journal's
+            // fsync policy is what recovery then depends on.
+            eprintln!("injected fault: crash (job seq {seq}) — aborting process");
+            std::process::abort();
         }
         if roll(seq, 2) < self.slow_p {
             interruptible_sleep(Duration::from_millis(self.slow_ms), cancel);
@@ -165,11 +185,13 @@ mod tests {
 
     #[test]
     fn parses_full_spec() {
-        let plan = FaultPlan::parse("panic:0.2, slow:0.1, stall:0.05, slow_ms:75, first:8")
-            .unwrap();
+        let plan =
+            FaultPlan::parse("panic:0.2, slow:0.1, stall:0.05, crash:0.01, slow_ms:75, first:8")
+                .unwrap();
         assert_eq!(plan.panic_p, 0.2);
         assert_eq!(plan.slow_p, 0.1);
         assert_eq!(plan.stall_p, 0.05);
+        assert_eq!(plan.crash_p, 0.01);
         assert_eq!(plan.slow_ms, 75);
         assert_eq!(plan.first_n, 8);
     }
@@ -186,7 +208,7 @@ mod tests {
     #[test]
     fn rolls_are_deterministic_and_spread() {
         for seq in 0..64 {
-            for salt in 1..=3 {
+            for salt in 1..=4 {
                 let r = roll(seq, salt);
                 assert_eq!(r, roll(seq, salt));
                 assert!((0.0..1.0).contains(&r));

@@ -1,0 +1,438 @@
+//! Crash-safe job journal for `snax serve` (DESIGN.md §12).
+//!
+//! The journal is an append-only record log that makes the detached-job
+//! table durable across process death. Every job transition appends one
+//! length-prefixed, checksummed record:
+//!
+//! ```text
+//! [u32 LE payload len][u64 LE FNV-1a(payload)][payload bytes]
+//! ```
+//!
+//! Record kinds (first payload byte):
+//!
+//! * `Submitted { id, body }` — the job was accepted; `body` is the
+//!   original request JSON, enough to re-run the job from scratch.
+//! * `Started { id, seq }` — a worker picked the job up (`seq` is its
+//!   fault-roll sequence number, recorded for post-mortem debugging).
+//! * `Checkpointed { id, path }` — the engine wrote a durable
+//!   barrier-boundary checkpoint for this job.
+//! * `Terminal { id, state, body }` — the job reached a terminal state
+//!   (`done`/`failed`/`cancelled`/`interrupted`) with its rendered
+//!   result or error.
+//!
+//! Fsync policy: terminal records are `fdatasync`'d so a completed
+//! job's outcome survives power loss; non-terminal records are only
+//! `write(2)`-durable (they survive *process* death — the page cache
+//! outlives the process — which is the failure mode the `crash:p`
+//! fault and the crash-recovery harness exercise).
+//!
+//! On startup [`Journal::open`] replays the log: records are decoded
+//! until the first bad checksum or truncated frame, the file is
+//! truncated back to the last good offset (a torn tail is dropped, not
+//! a panic), and the decoded records are handed to the server's
+//! recovery pass ([`replay`] folds them into per-job summaries).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::fingerprint::Fnv1a;
+use crate::sim::checkpoint::{Dec, Enc};
+
+/// Record kind tags (first payload byte).
+const TAG_SUBMITTED: u8 = 1;
+const TAG_STARTED: u8 = 2;
+const TAG_CHECKPOINTED: u8 = 3;
+const TAG_TERMINAL: u8 = 4;
+
+/// Bound on one record's payload (a rendered report body plus framing;
+/// a corrupt length prefix must not drive a multi-gigabyte allocation).
+const MAX_RECORD_BYTES: u32 = 64 * 1024 * 1024;
+
+/// Terminal state of a journaled job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TerminalState {
+    Done,
+    Failed,
+    Cancelled,
+    /// The process died (or drained on SIGTERM) while the job was in
+    /// flight; the job is resumable from its latest checkpoint.
+    Interrupted,
+}
+
+impl TerminalState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TerminalState::Done => "done",
+            TerminalState::Failed => "failed",
+            TerminalState::Cancelled => "cancelled",
+            TerminalState::Interrupted => "interrupted",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            TerminalState::Done => 0,
+            TerminalState::Failed => 1,
+            TerminalState::Cancelled => 2,
+            TerminalState::Interrupted => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => TerminalState::Done,
+            1 => TerminalState::Failed,
+            2 => TerminalState::Cancelled,
+            3 => TerminalState::Interrupted,
+            other => bail!("unknown terminal state tag {other}"),
+        })
+    }
+}
+
+/// One journal record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Record {
+    Submitted { id: u64, body: String },
+    Started { id: u64, seq: u64 },
+    Checkpointed { id: u64, path: String },
+    Terminal { id: u64, state: TerminalState, body: String },
+}
+
+impl Record {
+    fn encode(&self) -> Vec<u8> {
+        let mut e = Enc { buf: Vec::with_capacity(64) };
+        match self {
+            Record::Submitted { id, body } => {
+                e.u8(TAG_SUBMITTED);
+                e.u64(*id);
+                e.string(body);
+            }
+            Record::Started { id, seq } => {
+                e.u8(TAG_STARTED);
+                e.u64(*id);
+                e.u64(*seq);
+            }
+            Record::Checkpointed { id, path } => {
+                e.u8(TAG_CHECKPOINTED);
+                e.u64(*id);
+                e.string(path);
+            }
+            Record::Terminal { id, state, body } => {
+                e.u8(TAG_TERMINAL);
+                e.u64(*id);
+                e.u8(state.to_u8());
+                e.string(body);
+            }
+        }
+        e.buf
+    }
+
+    fn decode(payload: &[u8]) -> Result<Record> {
+        let mut d = Dec::new(payload);
+        let rec = match d.u8()? {
+            TAG_SUBMITTED => Record::Submitted { id: d.u64()?, body: d.string()? },
+            TAG_STARTED => Record::Started { id: d.u64()?, seq: d.u64()? },
+            TAG_CHECKPOINTED => Record::Checkpointed { id: d.u64()?, path: d.string()? },
+            TAG_TERMINAL => Record::Terminal {
+                id: d.u64()?,
+                state: TerminalState::from_u8(d.u8()?)?,
+                body: d.string()?,
+            },
+            other => bail!("unknown journal record tag {other}"),
+        };
+        d.finish()?;
+        Ok(rec)
+    }
+}
+
+fn checksum(payload: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_bytes(payload);
+    h.finish()
+}
+
+/// Decode framed records from `bytes`. Returns the records up to the
+/// first corrupt or truncated frame and the byte offset of the last
+/// good frame boundary — a torn tail is reported, never a panic.
+pub(crate) fn decode_all(bytes: &[u8]) -> (Vec<Record>, usize) {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let Some(header) = bytes.get(pos..pos + 12) else { break };
+        let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        if len > MAX_RECORD_BYTES {
+            break;
+        }
+        let sum = u64::from_le_bytes(header[4..12].try_into().unwrap());
+        let Some(payload) = bytes.get(pos + 12..pos + 12 + len as usize) else { break };
+        if checksum(payload) != sum {
+            break;
+        }
+        let Ok(rec) = Record::decode(payload) else { break };
+        records.push(rec);
+        pos += 12 + len as usize;
+    }
+    (records, pos)
+}
+
+/// The append-only journal file. Writes are serialized by an internal
+/// lock; the running byte length is exported as a metrics gauge.
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+    bytes: AtomicU64,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, replaying any existing
+    /// records. A corrupt or truncated tail — the signature of a crash
+    /// mid-append — is truncated away so subsequent appends extend a
+    /// clean log.
+    pub fn open(path: &Path) -> Result<(Journal, Vec<Record>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        let (records, good) = decode_all(&bytes);
+        if good < bytes.len() {
+            file.set_len(good as u64)
+                .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        }
+        file.seek(SeekFrom::Start(good as u64)).context("seeking journal end")?;
+        Ok((
+            Journal {
+                path: path.to_path_buf(),
+                file: Mutex::new(file),
+                bytes: AtomicU64::new(good as u64),
+            },
+            records,
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Current journal length in bytes (the `snax_journal_bytes` gauge).
+    pub fn len_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn write_record(&self, rec: &Record, sync: bool) -> Result<()> {
+        let payload = rec.encode();
+        let mut frame = Vec::with_capacity(12 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&checksum(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let mut file = self.file.lock().unwrap();
+        file.write_all(&frame)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        if sync {
+            file.sync_data()
+                .with_context(|| format!("syncing journal {}", self.path.display()))?;
+        }
+        self.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Append a non-terminal record (durable against process death —
+    /// the write reaches the page cache before the call returns).
+    pub fn append(&self, rec: &Record) -> Result<()> {
+        self.write_record(rec, false)
+    }
+
+    /// Append a terminal record and `fdatasync` it, so a job's outcome
+    /// also survives power loss (the fsync policy boundary).
+    pub fn append_sync(&self, rec: &Record) -> Result<()> {
+        self.write_record(rec, true)
+    }
+}
+
+/// Per-job summary folded from a replayed record stream.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct JobRecovery {
+    /// Original request JSON (from `Submitted`).
+    pub body: Option<String>,
+    /// Fault-roll sequence of the last `Started` (post-mortem info).
+    pub seq: Option<u64>,
+    /// Checkpoint files written, in order; the last is the newest.
+    pub checkpoints: Vec<String>,
+    /// Terminal outcome, if the job got one before the process died.
+    pub terminal: Option<(TerminalState, String)>,
+}
+
+/// Fold a replayed record stream into per-job summaries. A job whose
+/// summary has `body` but no `terminal` was in flight when the process
+/// died — the recovery pass marks it interrupted and auto-resumes it
+/// from `checkpoints.last()`.
+pub fn replay(records: &[Record]) -> BTreeMap<u64, JobRecovery> {
+    let mut jobs: BTreeMap<u64, JobRecovery> = BTreeMap::new();
+    for rec in records {
+        match rec {
+            Record::Submitted { id, body } => {
+                jobs.entry(*id).or_default().body = Some(body.clone());
+            }
+            Record::Started { id, seq } => {
+                let j = jobs.entry(*id).or_default();
+                j.seq = Some(*seq);
+                // A restart of a previously-terminal job (POST resume)
+                // reopens it: the old outcome no longer stands.
+                j.terminal = None;
+            }
+            Record::Checkpointed { id, path } => {
+                jobs.entry(*id).or_default().checkpoints.push(path.clone());
+            }
+            Record::Terminal { id, state, body } => {
+                jobs.entry(*id).or_default().terminal = Some((*state, body.clone()));
+            }
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("snax-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("jobs.journal")
+    }
+
+    fn sample_records() -> Vec<Record> {
+        vec![
+            Record::Submitted { id: 1, body: r#"{"net":"fig6a"}"#.into() },
+            Record::Started { id: 1, seq: 0 },
+            Record::Checkpointed { id: 1, path: "ckpts/job1/a.ckpt".into() },
+            Record::Terminal {
+                id: 1,
+                state: TerminalState::Done,
+                body: r#"{"total_cycles":42}"#.into(),
+            },
+            Record::Submitted { id: 2, body: r#"{"net":"dae"}"#.into() },
+            Record::Started { id: 2, seq: 1 },
+        ]
+    }
+
+    #[test]
+    fn roundtrips_records_across_reopen() {
+        let path = tmp("roundtrip");
+        let (journal, replayed) = Journal::open(&path).unwrap();
+        assert!(replayed.is_empty());
+        for rec in sample_records() {
+            journal.append(&rec).unwrap();
+        }
+        journal
+            .append_sync(&Record::Terminal {
+                id: 2,
+                state: TerminalState::Interrupted,
+                body: "drained".into(),
+            })
+            .unwrap();
+        let written = journal.len_bytes();
+        drop(journal);
+        let (journal2, replayed2) = Journal::open(&path).unwrap();
+        assert_eq!(replayed2.len(), 7);
+        assert_eq!(replayed2[..6], sample_records());
+        assert_eq!(journal2.len_bytes(), written);
+    }
+
+    #[test]
+    fn corrupted_tail_is_dropped_not_a_panic() {
+        let path = tmp("corrupt");
+        let (journal, _) = Journal::open(&path).unwrap();
+        for rec in sample_records() {
+            journal.append(&rec).unwrap();
+        }
+        let good_len = journal.len_bytes();
+        drop(journal);
+        // Flip a byte inside the last record's payload: its checksum no
+        // longer matches, so replay must drop it (and only it).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let (journal2, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), sample_records().len() - 1);
+        assert!(journal2.len_bytes() < good_len, "torn tail must be truncated");
+        // The log is clean again: appends after recovery replay fine.
+        journal2.append_sync(&Record::Started { id: 2, seq: 9 }).unwrap();
+        drop(journal2);
+        let (_, replayed3) = Journal::open(&path).unwrap();
+        assert_eq!(replayed3.last(), Some(&Record::Started { id: 2, seq: 9 }));
+    }
+
+    #[test]
+    fn truncated_tail_is_dropped_not_a_panic() {
+        let path = tmp("truncate");
+        let (journal, _) = Journal::open(&path).unwrap();
+        for rec in sample_records() {
+            journal.append(&rec).unwrap();
+        }
+        drop(journal);
+        // Cut the file mid-frame, as a crash mid-append would.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let (_, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), sample_records().len() - 1);
+        // Garbage-only file: zero records, no panic.
+        std::fs::write(&path, b"not a journal at all").unwrap();
+        let (_, replayed2) = Journal::open(&path).unwrap();
+        assert!(replayed2.is_empty());
+    }
+
+    #[test]
+    fn replay_folds_records_into_job_summaries() {
+        let mut records = sample_records();
+        records.push(Record::Checkpointed { id: 2, path: "ckpts/job2/b.ckpt".into() });
+        let jobs = replay(&records);
+        assert_eq!(jobs.len(), 2);
+        let j1 = &jobs[&1];
+        assert_eq!(j1.body.as_deref(), Some(r#"{"net":"fig6a"}"#));
+        assert_eq!(j1.terminal, Some((TerminalState::Done, r#"{"total_cycles":42}"#.into())));
+        let j2 = &jobs[&2];
+        assert_eq!(j2.seq, Some(1));
+        assert!(j2.terminal.is_none(), "job 2 was in flight — orphaned");
+        assert_eq!(j2.checkpoints, vec!["ckpts/job2/b.ckpt".to_string()]);
+    }
+
+    #[test]
+    fn started_after_terminal_reopens_a_job() {
+        // POST /jobs/:id/resume writes Started for a formerly-terminal
+        // job; replay must treat it as live again.
+        let records = vec![
+            Record::Submitted { id: 7, body: "{}".into() },
+            Record::Started { id: 7, seq: 0 },
+            Record::Terminal {
+                id: 7,
+                state: TerminalState::Interrupted,
+                body: "killed".into(),
+            },
+            Record::Started { id: 7, seq: 3 },
+        ];
+        let jobs = replay(&records);
+        assert!(jobs[&7].terminal.is_none());
+        assert_eq!(jobs[&7].seq, Some(3));
+    }
+}

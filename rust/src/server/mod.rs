@@ -18,7 +18,9 @@
 //!   circuit breaker shedding with `Retry-After` (DESIGN.md §11);
 //! * [`flight`] — singleflight coalescing of identical concurrent
 //!   requests onto one simulation;
-//! * [`fault`] — deterministic fault injection for the chaos harness.
+//! * [`fault`] — deterministic fault injection for the chaos harness;
+//! * [`journal`] — crash-safe append-only job journal replayed at
+//!   startup so detached jobs survive process death (DESIGN.md §12).
 //!
 //! Threading model: one cheap thread per connection parses requests and
 //! writes responses; every heavy job runs on the fixed-size worker pool
@@ -33,6 +35,7 @@ pub mod cache;
 pub mod fault;
 pub mod flight;
 pub mod http;
+pub mod journal;
 pub mod pool;
 
 use std::io::{BufReader, Read};
@@ -146,7 +149,11 @@ impl Server {
         listener.set_nonblocking(true).context("setting listener non-blocking")?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let state = Arc::new(AppState::new(&cfg));
+        let state = Arc::new(AppState::new(&cfg)?);
+        // Replay the job journal before accepting traffic: terminal
+        // jobs become pollable again and interrupted ones re-enter the
+        // pool from their latest checkpoint (DESIGN.md §12).
+        api::recover_jobs(&state);
         let accept_state = state.clone();
         let accept_shutdown = shutdown.clone();
         let accept_thread = std::thread::Builder::new()
@@ -301,6 +308,10 @@ pub fn run_blocking(cfg: ServerConfig) -> Result<()> {
             format!("{}ms", cfg.default_deadline_ms)
         },
     );
+    match &cfg.journal_path {
+        Some(path) => println!("job journal: {path} (jobs survive restarts)"),
+        None => println!("job journal: off (jobs are volatile; --journal <path> enables)"),
+    }
     while !GOT_SIGNAL.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(100));
     }
@@ -359,7 +370,7 @@ mod tests {
         limits: ConnLimits,
         client_script: impl FnOnce(TcpStream) + Send + 'static,
     ) -> Duration {
-        let state = Arc::new(AppState::new(&test_config()));
+        let state = Arc::new(AppState::new(&test_config()).unwrap());
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let handler = std::thread::spawn(move || {

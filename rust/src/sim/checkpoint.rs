@@ -1,0 +1,1556 @@
+//! Barrier-boundary checkpoint/restore: durable, resumable engine state
+//! (DESIGN.md §12).
+//!
+//! A checkpoint is a complete cut of one engine's state taken at the
+//! top of a quantum — the same site the phase memo snapshots its
+//! [`CtrlSnap`]s (DESIGN.md §8), so everything timing-relevant is
+//! either captured (control state, counters, stats, ledger tallies,
+//! trace events, SPM + external-memory images) or provably
+//! result-invariant and reset on restore (planner backoff, deadline
+//! poll countdown, in-flight memo recordings). A resumed run therefore
+//! produces a [`SimReport`](super::trace::SimReport) /
+//! [`SystemReport`](super::system::SystemReport) byte-identical to the
+//! uninterrupted run, in both engines, memo on or off — enforced by
+//! `tests/engine_equivalence.rs` and the property suite.
+//!
+//! ## File format
+//!
+//! Hand-rolled fixed-width little-endian fields (no serde — the crate
+//! is std-only), length-prefixed sequences, one tag byte per enum
+//! variant:
+//!
+//! ```text
+//! magic "SNAXCKP1" | kind u8 (1=cluster, 2=system) | payload_len u64
+//! | payload | fnv1a64(payload)
+//! ```
+//!
+//! Files are written atomically (tmp + fsync + rename), so a crash
+//! mid-write never corrupts the previous checkpoint. Corrupt or
+//! truncated files fail [`load`] with an error, never a panic.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::fingerprint::Fnv1a;
+use crate::isa::LayerClass;
+
+use super::accel::{CounterClass, EmitRule};
+use super::dma::DmaDir;
+use super::job::{OpDesc, Region};
+use super::ledger::NCATS;
+use super::phase::{
+    CtrlSnap, SnapCore, SnapDma, SnapJob, SnapPending, SnapStreamer, SnapSw, SnapUnit,
+};
+use super::streamer::{AguLoop, BeatPattern, StreamPlan, MAX_LOOPS};
+use super::trace::{Counters, LayerStat, TraceEvent, UnitStats};
+
+const MAGIC: &[u8; 8] = b"SNAXCKP1";
+const KIND_CLUSTER: u8 = 1;
+const KIND_SYSTEM: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// Checkpoint contents
+
+/// Full resumable state of one cluster engine, cut at the top of a
+/// quantum. Everything is absolute except the [`CtrlSnap`], whose
+/// offsets are relative to [`cycle`](Self::cycle) (the phase memo's
+/// boundary-relative convention, reused verbatim).
+pub struct ClusterCheckpoint {
+    /// Identity of `(config, program, traced, ledgered)` — the phase
+    /// seed of DESIGN.md §8. Resume refuses a mismatch.
+    pub(crate) seed: u64,
+    /// Fingerprint of the program's external-memory init image (not
+    /// part of the phase seed, but functionally load-bearing here).
+    pub(crate) ext_init_fp: u64,
+    pub(crate) cycle: u64,
+    pub(crate) snap: CtrlSnap,
+    pub(crate) counters: Counters,
+    pub(crate) units: Vec<UnitStats>,
+    /// Per unit, readers then writers: `(beats_done, conflict_cycles,
+    /// fifo_stall_cycles)`.
+    pub(crate) streamers: Vec<Vec<(u64, u64, u64)>>,
+    /// Materialized layer stats, by dense layer id.
+    pub(crate) layers: Vec<(u16, LayerStat)>,
+    /// Ledgered runs: per-core category tallies + attribution
+    /// frontiers (absolute cycles).
+    pub(crate) ledger: Option<(Vec<[u64; NCATS]>, Vec<u64>)>,
+    /// Traced runs: the event list so far (absolute cycles).
+    pub(crate) trace: Option<Vec<TraceEvent>>,
+    /// Scratchpad image (length fixed by the cluster geometry).
+    pub(crate) spm: Vec<u8>,
+    /// External-memory backing store, verbatim — including its
+    /// growth-policy length, so the final `ext_mem` bytes of a resumed
+    /// run match the uninterrupted run exactly.
+    pub(crate) ext: Vec<u8>,
+}
+
+impl ClusterCheckpoint {
+    /// The cycle the state was cut at.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+}
+
+/// Full resumable state of a multi-cluster system run: every member's
+/// cluster state (their local ext images are empty — the shared image
+/// lives here), the shared NoC grant ledger, and the system barrier
+/// file.
+pub struct SystemCheckpoint {
+    /// Identity over `(every member phase seed + ext image, NoC
+    /// shape)`; resume refuses a mismatch.
+    pub(crate) seed: u64,
+    pub(crate) members: Vec<ClusterCheckpoint>,
+    pub(crate) shared_ext: Vec<u8>,
+    /// NoC grant ledger: outstanding `(cycle, slots_used)` entries plus
+    /// the granted/denied/busy counters.
+    pub(crate) noc_ledger: Vec<(u64, u32)>,
+    pub(crate) noc_granted: u64,
+    pub(crate) noc_denied: u64,
+    pub(crate) noc_busy_cycles: u64,
+    /// System barriers: pending `(id, participants, arrived_mask)` and
+    /// released `(id, release_cycle)` entries.
+    pub(crate) bars_pending: Vec<(u16, u8, u64)>,
+    pub(crate) bars_released: Vec<(u16, u64)>,
+    pub(crate) bars_release_events: u64,
+    /// Driver flags, in member order.
+    pub(crate) done: Vec<bool>,
+    pub(crate) blocked: Vec<bool>,
+}
+
+impl SystemCheckpoint {
+    /// Max member cycle — the system wall clock at the cut.
+    pub fn cycle(&self) -> u64 {
+        self.members.iter().map(|m| m.cycle).max().unwrap_or(0)
+    }
+}
+
+/// A loaded checkpoint file of either kind.
+pub enum Checkpoint {
+    Cluster(ClusterCheckpoint),
+    System(SystemCheckpoint),
+}
+
+impl Checkpoint {
+    pub fn cycle(&self) -> u64 {
+        match self {
+            Checkpoint::Cluster(c) => c.cycle(),
+            Checkpoint::System(s) => s.cycle(),
+        }
+    }
+
+    /// Human-readable kind tag for CLI/server surfaces.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Checkpoint::Cluster(_) => "cluster",
+            Checkpoint::System(_) => "system",
+        }
+    }
+}
+
+/// Fingerprint of a program's `ext_mem_init` image. The phase seed
+/// deliberately excludes it (replay timing never depends on tensor
+/// bytes); checkpoint identity must include it, because restore trusts
+/// the serialized memory images.
+pub(crate) fn ext_init_fingerprint(image: &[(u64, Vec<u8>)]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_str("snax-ext-init-v1");
+    h.write_u64(image.len() as u64);
+    for (addr, bytes) in image {
+        h.write_u64(*addr);
+        h.write_u64(bytes.len() as u64);
+        h.write_bytes(bytes);
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint plan (the caller-facing configuration)
+
+/// Where and how often to write checkpoints. Attached via
+/// [`Cluster::with_checkpoint`](super::Cluster::with_checkpoint) /
+/// [`System::with_checkpoint`](super::System::with_checkpoint):
+/// one file per eligible barrier-release boundary (every `every`-th
+/// boundary), plus a final one when a cancellation or deadline cuts
+/// the run off.
+#[derive(Clone)]
+pub struct CheckpointPlan {
+    pub(crate) dir: PathBuf,
+    pub(crate) every: u64,
+    pub(crate) label: String,
+    /// Optional process-wide written-checkpoint counter (feeds the
+    /// server's `snax_checkpoints_written_total` metric).
+    pub(crate) counter: Option<Arc<AtomicU64>>,
+    /// Optional per-write hook (the server journals `checkpointed`
+    /// records from it).
+    pub(crate) on_write: Option<Arc<dyn Fn(&Path) + Send + Sync>>,
+}
+
+impl std::fmt::Debug for CheckpointPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CheckpointPlan")
+            .field("dir", &self.dir)
+            .field("every", &self.every)
+            .field("label", &self.label)
+            .finish_non_exhaustive()
+    }
+}
+
+impl CheckpointPlan {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            every: 1,
+            label: "run".into(),
+            counter: None,
+            on_write: None,
+        }
+    }
+
+    /// Checkpoint every `n`-th barrier-release boundary (min 1).
+    pub fn every(mut self, n: u64) -> Self {
+        self.every = n.max(1);
+        self
+    }
+
+    /// File-name stem (e.g. a server job id). Defaults to `run`.
+    pub fn label(mut self, s: impl Into<String>) -> Self {
+        self.label = s.into();
+        self
+    }
+
+    pub fn counter(mut self, c: Arc<AtomicU64>) -> Self {
+        self.counter = Some(c);
+        self
+    }
+
+    pub fn on_write(mut self, f: Arc<dyn Fn(&Path) + Send + Sync>) -> Self {
+        self.on_write = Some(f);
+        self
+    }
+
+    /// Zero-padded cycle in the name keeps lexicographic order equal to
+    /// cycle order — [`latest_in_dir`] relies on it.
+    pub(crate) fn file_path(&self, cycle: u64) -> PathBuf {
+        self.dir.join(format!("{}-{:020}.ckpt", self.label, cycle))
+    }
+}
+
+/// The newest checkpoint file in `dir` (lexicographically greatest
+/// `.ckpt` name — cycle order by construction). `Ok(None)` when the
+/// directory is missing or holds none.
+pub fn latest_in_dir(dir: &Path) -> Result<Option<PathBuf>> {
+    let Ok(rd) = fs::read_dir(dir) else { return Ok(None) };
+    let mut best: Option<PathBuf> = None;
+    for ent in rd.flatten() {
+        let p = ent.path();
+        if p.extension().and_then(|e| e.to_str()) != Some("ckpt") {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => p.file_name() > b.file_name(),
+        };
+        if better {
+            best = Some(p);
+        }
+    }
+    Ok(best)
+}
+
+// ---------------------------------------------------------------------------
+// File I/O
+
+/// Serialize and atomically write `ck` to `path` (tmp + fsync +
+/// rename).
+pub fn save(path: &Path, ck: &Checkpoint) -> Result<()> {
+    let mut e = Enc { buf: Vec::new() };
+    let kind = match ck {
+        Checkpoint::Cluster(c) => {
+            enc_cluster(&mut e, c);
+            KIND_CLUSTER
+        }
+        Checkpoint::System(s) => {
+            enc_system(&mut e, s);
+            KIND_SYSTEM
+        }
+    };
+    let payload = e.buf;
+    let mut h = Fnv1a::new();
+    h.write_bytes(&payload);
+    let sum = h.finish();
+    let mut out = Vec::with_capacity(payload.len() + 25);
+    out.extend_from_slice(MAGIC);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+
+    let tmp = {
+        let mut name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| "checkpoint".into());
+        name.push(".tmp");
+        path.with_file_name(name)
+    };
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint {}", tmp.display()))?;
+        f.write_all(&out)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Read and validate a checkpoint file. Truncation, a bad checksum, or
+/// malformed contents are errors — never panics.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let raw = fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    if raw.len() < MAGIC.len() + 1 + 8 + 8 || &raw[..MAGIC.len()] != MAGIC {
+        bail!("{} is not a snax checkpoint file", path.display());
+    }
+    let kind = raw[MAGIC.len()];
+    let len_at = MAGIC.len() + 1;
+    let len =
+        u64::from_le_bytes(raw[len_at..len_at + 8].try_into().unwrap()) as usize;
+    let body_at = len_at + 8;
+    if raw.len() != body_at + len + 8 {
+        bail!("checkpoint {} is truncated", path.display());
+    }
+    let payload = &raw[body_at..body_at + len];
+    let sum = u64::from_le_bytes(raw[body_at + len..].try_into().unwrap());
+    let mut h = Fnv1a::new();
+    h.write_bytes(payload);
+    if h.finish() != sum {
+        bail!("checkpoint {} failed its checksum", path.display());
+    }
+    let mut d = Dec::new(payload);
+    let ck = match kind {
+        KIND_CLUSTER => Checkpoint::Cluster(dec_cluster(&mut d)?),
+        KIND_SYSTEM => Checkpoint::System(dec_system(&mut d)?),
+        k => bail!("unknown checkpoint kind {k} in {}", path.display()),
+    };
+    d.finish()?;
+    Ok(ck)
+}
+
+// ---------------------------------------------------------------------------
+// Codec
+
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
+}
+
+impl Enc {
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub(crate) fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn flag(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+    pub(crate) fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+    pub(crate) fn string(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+}
+
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("checkpoint payload truncated");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub(crate) fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub(crate) fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub(crate) fn flag(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b} in checkpoint"),
+        }
+    }
+
+    /// Sequence length with a sanity bound: `n` items of at least
+    /// `min_item` bytes each must fit in the remaining payload, so
+    /// corrupt lengths fail instead of attempting huge allocations.
+    pub(crate) fn seq_len(&mut self, min_item: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        if n.saturating_mul(min_item.max(1)) > self.remaining() {
+            bail!("checkpoint sequence length {n} exceeds payload");
+        }
+        Ok(n)
+    }
+
+    pub(crate) fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.seq_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub(crate) fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).context("invalid UTF-8 in checkpoint")
+    }
+
+    pub(crate) fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("checkpoint has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn enc_layer_class(e: &mut Enc, c: LayerClass) {
+    e.u8(match c {
+        LayerClass::Conv => 0,
+        LayerClass::MaxPool => 1,
+        LayerClass::Dense => 2,
+        LayerClass::Elementwise => 3,
+        LayerClass::DataMove => 4,
+        LayerClass::Other => 5,
+    });
+}
+
+fn dec_layer_class(d: &mut Dec) -> Result<LayerClass> {
+    Ok(match d.u8()? {
+        0 => LayerClass::Conv,
+        1 => LayerClass::MaxPool,
+        2 => LayerClass::Dense,
+        3 => LayerClass::Elementwise,
+        4 => LayerClass::DataMove,
+        5 => LayerClass::Other,
+        t => bail!("invalid layer class tag {t}"),
+    })
+}
+
+fn enc_op(e: &mut Enc, d: &OpDesc) {
+    let r = |e: &mut Enc, r: Region| e.u64(r.0);
+    match *d {
+        OpDesc::Gemm { a, b, c, m, k, n, shift, relu, i32_out } => {
+            e.u8(0);
+            r(e, a);
+            r(e, b);
+            r(e, c);
+            e.u32(m);
+            e.u32(k);
+            e.u32(n);
+            e.u32(shift);
+            e.flag(relu);
+            e.flag(i32_out);
+        }
+        OpDesc::Conv2d {
+            input,
+            weights,
+            out,
+            n,
+            h,
+            w,
+            cin,
+            cout,
+            kh,
+            kw,
+            stride,
+            pad,
+            shift,
+            relu,
+        } => {
+            e.u8(1);
+            r(e, input);
+            r(e, weights);
+            r(e, out);
+            e.u32(n);
+            e.u32(h);
+            e.u32(w);
+            e.u32(cin);
+            e.u32(cout);
+            e.u32(kh);
+            e.u32(kw);
+            e.u32(stride);
+            e.u32(pad);
+            e.u32(shift);
+            e.flag(relu);
+        }
+        OpDesc::MaxPool { input, out, n, h, w, c, k, s } => {
+            e.u8(2);
+            r(e, input);
+            r(e, out);
+            e.u32(n);
+            e.u32(h);
+            e.u32(w);
+            e.u32(c);
+            e.u32(k);
+            e.u32(s);
+        }
+        OpDesc::VecAdd { a, b, out, len, relu } => {
+            e.u8(3);
+            r(e, a);
+            r(e, b);
+            r(e, out);
+            e.u32(len);
+            e.flag(relu);
+        }
+        OpDesc::Relu { buf, len } => {
+            e.u8(4);
+            r(e, buf);
+            e.u32(len);
+        }
+        OpDesc::GlobalAvgPool { input, out, n, h, w, c } => {
+            e.u8(5);
+            r(e, input);
+            r(e, out);
+            e.u32(n);
+            e.u32(h);
+            e.u32(w);
+            e.u32(c);
+        }
+        OpDesc::TileRows { input, out, len, rows } => {
+            e.u8(6);
+            r(e, input);
+            r(e, out);
+            e.u32(len);
+            e.u32(rows);
+        }
+    }
+}
+
+fn dec_op(d: &mut Dec) -> Result<OpDesc> {
+    let r = |d: &mut Dec| -> Result<Region> { Ok(Region(d.u64()?)) };
+    Ok(match d.u8()? {
+        0 => OpDesc::Gemm {
+            a: r(d)?,
+            b: r(d)?,
+            c: r(d)?,
+            m: d.u32()?,
+            k: d.u32()?,
+            n: d.u32()?,
+            shift: d.u32()?,
+            relu: d.flag()?,
+            i32_out: d.flag()?,
+        },
+        1 => OpDesc::Conv2d {
+            input: r(d)?,
+            weights: r(d)?,
+            out: r(d)?,
+            n: d.u32()?,
+            h: d.u32()?,
+            w: d.u32()?,
+            cin: d.u32()?,
+            cout: d.u32()?,
+            kh: d.u32()?,
+            kw: d.u32()?,
+            stride: d.u32()?,
+            pad: d.u32()?,
+            shift: d.u32()?,
+            relu: d.flag()?,
+        },
+        2 => OpDesc::MaxPool {
+            input: r(d)?,
+            out: r(d)?,
+            n: d.u32()?,
+            h: d.u32()?,
+            w: d.u32()?,
+            c: d.u32()?,
+            k: d.u32()?,
+            s: d.u32()?,
+        },
+        3 => OpDesc::VecAdd {
+            a: r(d)?,
+            b: r(d)?,
+            out: r(d)?,
+            len: d.u32()?,
+            relu: d.flag()?,
+        },
+        4 => OpDesc::Relu { buf: r(d)?, len: d.u32()? },
+        5 => OpDesc::GlobalAvgPool {
+            input: r(d)?,
+            out: r(d)?,
+            n: d.u32()?,
+            h: d.u32()?,
+            w: d.u32()?,
+            c: d.u32()?,
+        },
+        6 => OpDesc::TileRows {
+            input: r(d)?,
+            out: r(d)?,
+            len: d.u32()?,
+            rows: d.u32()?,
+        },
+        t => bail!("invalid OpDesc tag {t}"),
+    })
+}
+
+fn enc_opt_op(e: &mut Enc, d: &Option<OpDesc>) {
+    e.flag(d.is_some());
+    if let Some(op) = d {
+        enc_op(e, op);
+    }
+}
+
+fn dec_opt_op(d: &mut Dec) -> Result<Option<OpDesc>> {
+    Ok(if d.flag()? { Some(dec_op(d)?) } else { None })
+}
+
+fn enc_core(e: &mut Enc, c: &SnapCore) {
+    e.u64(c.pc as u64);
+    e.u64(c.wake_rel);
+    e.flag(c.barrier_arrived);
+    e.flag(c.done);
+    e.flag(c.layer.is_some());
+    if let Some((id, class)) = c.layer {
+        e.u16(id);
+        enc_layer_class(e, class);
+    }
+    e.flag(c.sw.is_some());
+    if let Some(sw) = &c.sw {
+        e.u64(sw.cycles);
+        enc_layer_class(e, sw.class);
+        enc_opt_op(e, &sw.op);
+    }
+}
+
+fn dec_core(d: &mut Dec) -> Result<SnapCore> {
+    Ok(SnapCore {
+        pc: d.u64()? as usize,
+        wake_rel: d.u64()?,
+        barrier_arrived: d.flag()?,
+        done: d.flag()?,
+        layer: if d.flag()? { Some((d.u16()?, dec_layer_class(d)?)) } else { None },
+        sw: if d.flag()? {
+            Some(SnapSw {
+                cycles: d.u64()?,
+                class: dec_layer_class(d)?,
+                op: dec_opt_op(d)?,
+            })
+        } else {
+            None
+        },
+    })
+}
+
+fn enc_plan(e: &mut Enc, p: &StreamPlan) {
+    e.u64(p.base);
+    e.u32(p.pattern.rows);
+    e.i64(p.pattern.row_stride);
+    e.u32(p.pattern.words_per_row);
+    for l in &p.loops {
+        e.u64(l.count);
+        e.i64(l.stride);
+    }
+}
+
+fn dec_plan(d: &mut Dec) -> Result<StreamPlan> {
+    let base = d.u64()?;
+    let pattern = BeatPattern {
+        rows: d.u32()?,
+        row_stride: d.i64()?,
+        words_per_row: d.u32()?,
+    };
+    let mut loops = [AguLoop::default(); MAX_LOOPS];
+    for l in &mut loops {
+        l.count = d.u64()?;
+        l.stride = d.i64()?;
+    }
+    Ok(StreamPlan { base, pattern, loops })
+}
+
+fn enc_streamer(e: &mut Enc, s: &SnapStreamer) {
+    e.flag(s.plan.is_some());
+    if let Some(p) = &s.plan {
+        enc_plan(e, p);
+    }
+    e.u64(s.beat_idx);
+    e.u64(s.beats_total);
+    e.u32(s.fifo);
+    e.bytes(&s.pending);
+    e.u64(s.pending_mask);
+    e.u32(s.pending_words);
+    e.u64(s.inflight.len() as u64);
+    for &w in &s.inflight {
+        e.u32(w);
+    }
+}
+
+fn dec_streamer(d: &mut Dec) -> Result<SnapStreamer> {
+    let plan = if d.flag()? { Some(dec_plan(d)?) } else { None };
+    let beat_idx = d.u64()?;
+    let beats_total = d.u64()?;
+    let fifo = d.u32()?;
+    let pending = d.bytes()?;
+    let pending_mask = d.u64()?;
+    let pending_words = d.u32()?;
+    let n = d.seq_len(4)?;
+    let mut inflight = Vec::with_capacity(n);
+    for _ in 0..n {
+        inflight.push(d.u32()?);
+    }
+    Ok(SnapStreamer {
+        plan,
+        beat_idx,
+        beats_total,
+        fifo,
+        pending,
+        pending_mask,
+        pending_words,
+        inflight,
+    })
+}
+
+fn enc_dma(e: &mut Enc, j: &SnapDma) {
+    e.u8(match j.dir {
+        DmaDir::ExtToSpm => 0,
+        DmaDir::SpmToExt => 1,
+        DmaDir::SpmToSpm => 2,
+    });
+    e.u64(j.src);
+    e.u64(j.dst);
+    e.u64(j.rows);
+    e.u64(j.row_bytes);
+    e.i64(j.src_stride);
+    e.i64(j.dst_stride);
+}
+
+fn dec_dma(d: &mut Dec) -> Result<SnapDma> {
+    let dir = match d.u8()? {
+        0 => DmaDir::ExtToSpm,
+        1 => DmaDir::SpmToExt,
+        2 => DmaDir::SpmToSpm,
+        t => bail!("invalid DMA direction tag {t}"),
+    };
+    Ok(SnapDma {
+        dir,
+        src: d.u64()?,
+        dst: d.u64()?,
+        rows: d.u64()?,
+        row_bytes: d.u64()?,
+        src_stride: d.i64()?,
+        dst_stride: d.i64()?,
+    })
+}
+
+fn enc_job(e: &mut Enc, j: &SnapJob) {
+    e.u64(j.steps);
+    e.u64(j.steps_done);
+    match j.emit {
+        EmitRule::EveryK(k) => {
+            e.u8(0);
+            e.u64(k);
+        }
+        EmitRule::Prorated { total } => {
+            e.u8(1);
+            e.u64(total);
+        }
+    }
+    e.u64(j.emitted);
+    e.u64(j.consume_every.len() as u64);
+    for &c in &j.consume_every {
+        e.u64(c);
+    }
+    e.u8(match j.class {
+        CounterClass::Gemm => 0,
+        CounterClass::Pool => 1,
+        CounterClass::Other => 2,
+    });
+    enc_opt_op(e, &j.desc);
+    e.u16(j.layer);
+    e.u64(j.start_rel);
+    e.flag(j.dma.is_some());
+    if let Some(dj) = &j.dma {
+        enc_dma(e, dj);
+    }
+    e.u64(j.axi_remaining);
+}
+
+fn dec_job(d: &mut Dec) -> Result<SnapJob> {
+    let steps = d.u64()?;
+    let steps_done = d.u64()?;
+    let emit = match d.u8()? {
+        0 => EmitRule::EveryK(d.u64()?),
+        1 => EmitRule::Prorated { total: d.u64()? },
+        t => bail!("invalid emit rule tag {t}"),
+    };
+    let emitted = d.u64()?;
+    let n = d.seq_len(8)?;
+    let mut consume_every = Vec::with_capacity(n);
+    for _ in 0..n {
+        consume_every.push(d.u64()?);
+    }
+    let class = match d.u8()? {
+        0 => CounterClass::Gemm,
+        1 => CounterClass::Pool,
+        2 => CounterClass::Other,
+        t => bail!("invalid counter class tag {t}"),
+    };
+    Ok(SnapJob {
+        steps,
+        steps_done,
+        emit,
+        emitted,
+        consume_every,
+        class,
+        desc: dec_opt_op(d)?,
+        layer: d.u16()?,
+        start_rel: d.u64()?,
+        dma: if d.flag()? { Some(dec_dma(d)?) } else { None },
+        axi_remaining: d.u64()?,
+    })
+}
+
+fn enc_regs(e: &mut Enc, regs: &[u64]) {
+    e.u64(regs.len() as u64);
+    for &v in regs {
+        e.u64(v);
+    }
+}
+
+fn dec_regs(d: &mut Dec) -> Result<Vec<u64>> {
+    let n = d.seq_len(8)?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(d.u64()?);
+    }
+    Ok(v)
+}
+
+/// `Option<Option<OpDesc>>`: outer = "unit has a descriptor register",
+/// inner = "the register held a valid descriptor index".
+fn enc_desc2(e: &mut Enc, v: &Option<Option<OpDesc>>) {
+    e.flag(v.is_some());
+    if let Some(inner) = v {
+        enc_opt_op(e, inner);
+    }
+}
+
+fn dec_desc2(d: &mut Dec) -> Result<Option<Option<OpDesc>>> {
+    Ok(if d.flag()? { Some(dec_opt_op(d)?) } else { None })
+}
+
+fn enc_unit(e: &mut Enc, u: &SnapUnit) {
+    enc_regs(e, &u.staged);
+    enc_desc2(e, &u.staged_desc);
+    e.flag(u.pending.is_some());
+    if let Some(p) = &u.pending {
+        enc_regs(e, &p.regs);
+        enc_desc2(e, &p.desc);
+        e.u16(p.layer);
+    }
+    e.flag(u.job.is_some());
+    if let Some(j) = &u.job {
+        enc_job(e, j);
+    }
+    e.u64(u.readers.len() as u64);
+    for s in &u.readers {
+        enc_streamer(e, s);
+    }
+    e.u64(u.writers.len() as u64);
+    for s in &u.writers {
+        enc_streamer(e, s);
+    }
+}
+
+fn dec_unit(d: &mut Dec) -> Result<SnapUnit> {
+    let staged = dec_regs(d)?;
+    let staged_desc = dec_desc2(d)?;
+    let pending = if d.flag()? {
+        Some(SnapPending { regs: dec_regs(d)?, desc: dec_desc2(d)?, layer: d.u16()? })
+    } else {
+        None
+    };
+    let job = if d.flag()? { Some(dec_job(d)?) } else { None };
+    let nr = d.seq_len(1)?;
+    let mut readers = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        readers.push(dec_streamer(d)?);
+    }
+    let nw = d.seq_len(1)?;
+    let mut writers = Vec::with_capacity(nw);
+    for _ in 0..nw {
+        writers.push(dec_streamer(d)?);
+    }
+    Ok(SnapUnit { staged, staged_desc, pending, job, readers, writers })
+}
+
+fn enc_snap(e: &mut Enc, s: &CtrlSnap) {
+    e.u64(s.cores.len() as u64);
+    for c in &s.cores {
+        enc_core(e, c);
+    }
+    e.u64(s.units.len() as u64);
+    for u in &s.units {
+        enc_unit(e, u);
+    }
+    e.u64(s.barriers.len() as u64);
+    for &(id, mask, p) in &s.barriers {
+        e.u16(id);
+        e.u64(mask);
+        e.u8(p);
+    }
+    e.flag(s.traced);
+    e.flag(s.ledgered);
+}
+
+fn dec_snap(d: &mut Dec) -> Result<CtrlSnap> {
+    let nc = d.seq_len(1)?;
+    let mut cores = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        cores.push(dec_core(d)?);
+    }
+    let nu = d.seq_len(1)?;
+    let mut units = Vec::with_capacity(nu);
+    for _ in 0..nu {
+        units.push(dec_unit(d)?);
+    }
+    let nb = d.seq_len(11)?;
+    let mut barriers = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        barriers.push((d.u16()?, d.u64()?, d.u8()?));
+    }
+    Ok(CtrlSnap { cores, units, barriers, traced: d.flag()?, ledgered: d.flag()? })
+}
+
+fn enc_counters(e: &mut Enc, c: &Counters) {
+    e.u64(c.gemm_compute_cycles);
+    e.u64(c.pool_compute_cycles);
+    e.u64(c.other_accel_cycles);
+    e.u64(c.bank_reads);
+    e.u64(c.bank_writes);
+    e.u64(c.bank_conflict_cycles);
+    e.u64(c.axi_beats);
+    e.u64(c.noc_stall_cycles);
+    e.u64(c.csr_writes);
+    e.u64(c.core_busy_cycles.len() as u64);
+    for &v in &c.core_busy_cycles {
+        e.u64(v);
+    }
+    e.u64(c.barrier_events);
+    e.u64(c.macs_retired);
+    e.u64(c.elem_ops_retired);
+}
+
+fn dec_counters(d: &mut Dec) -> Result<Counters> {
+    let gemm_compute_cycles = d.u64()?;
+    let pool_compute_cycles = d.u64()?;
+    let other_accel_cycles = d.u64()?;
+    let bank_reads = d.u64()?;
+    let bank_writes = d.u64()?;
+    let bank_conflict_cycles = d.u64()?;
+    let axi_beats = d.u64()?;
+    let noc_stall_cycles = d.u64()?;
+    let csr_writes = d.u64()?;
+    let n = d.seq_len(8)?;
+    let mut core_busy_cycles = Vec::with_capacity(n);
+    for _ in 0..n {
+        core_busy_cycles.push(d.u64()?);
+    }
+    Ok(Counters {
+        gemm_compute_cycles,
+        pool_compute_cycles,
+        other_accel_cycles,
+        bank_reads,
+        bank_writes,
+        bank_conflict_cycles,
+        axi_beats,
+        noc_stall_cycles,
+        csr_writes,
+        core_busy_cycles,
+        barrier_events: d.u64()?,
+        macs_retired: d.u64()?,
+        elem_ops_retired: d.u64()?,
+    })
+}
+
+fn enc_unit_stats(e: &mut Enc, u: &UnitStats) {
+    e.string(&u.name);
+    e.u64(u.active_cycles);
+    e.u64(u.compute_cycles);
+    e.u64(u.stall_input_cycles);
+    e.u64(u.stall_output_cycles);
+    e.u64(u.jobs);
+    e.u64(u.streamer_conflict_cycles);
+}
+
+fn dec_unit_stats(d: &mut Dec) -> Result<UnitStats> {
+    Ok(UnitStats {
+        name: d.string()?,
+        active_cycles: d.u64()?,
+        compute_cycles: d.u64()?,
+        stall_input_cycles: d.u64()?,
+        stall_output_cycles: d.u64()?,
+        jobs: d.u64()?,
+        streamer_conflict_cycles: d.u64()?,
+    })
+}
+
+fn enc_layer_stat(e: &mut Enc, s: &LayerStat) {
+    e.string(&s.name);
+    e.flag(s.class.is_some());
+    if let Some(c) = s.class {
+        enc_layer_class(e, c);
+    }
+    e.u64(s.busy_cycles);
+    e.u64(s.first_start);
+    e.u64(s.last_end);
+}
+
+fn dec_layer_stat(d: &mut Dec) -> Result<LayerStat> {
+    Ok(LayerStat {
+        name: d.string()?,
+        class: if d.flag()? { Some(dec_layer_class(d)?) } else { None },
+        busy_cycles: d.u64()?,
+        first_start: d.u64()?,
+        last_end: d.u64()?,
+    })
+}
+
+fn enc_cluster(e: &mut Enc, c: &ClusterCheckpoint) {
+    e.u64(c.seed);
+    e.u64(c.ext_init_fp);
+    e.u64(c.cycle);
+    enc_snap(e, &c.snap);
+    enc_counters(e, &c.counters);
+    e.u64(c.units.len() as u64);
+    for u in &c.units {
+        enc_unit_stats(e, u);
+    }
+    e.u64(c.streamers.len() as u64);
+    for ss in &c.streamers {
+        e.u64(ss.len() as u64);
+        for &(beats, conf, stall) in ss {
+            e.u64(beats);
+            e.u64(conf);
+            e.u64(stall);
+        }
+    }
+    e.u64(c.layers.len() as u64);
+    for (id, st) in &c.layers {
+        e.u16(*id);
+        enc_layer_stat(e, st);
+    }
+    e.flag(c.ledger.is_some());
+    if let Some((tallies, frontier)) = &c.ledger {
+        e.u64(tallies.len() as u64);
+        for row in tallies {
+            for &v in row.iter() {
+                e.u64(v);
+            }
+        }
+        e.u64(frontier.len() as u64);
+        for &f in frontier {
+            e.u64(f);
+        }
+    }
+    e.flag(c.trace.is_some());
+    if let Some(evs) = &c.trace {
+        e.u64(evs.len() as u64);
+        for ev in evs {
+            e.string(&ev.track);
+            e.string(&ev.name);
+            e.u64(ev.start_cycle);
+            e.u64(ev.end_cycle);
+        }
+    }
+    e.bytes(&c.spm);
+    e.bytes(&c.ext);
+}
+
+fn dec_cluster(d: &mut Dec) -> Result<ClusterCheckpoint> {
+    let seed = d.u64()?;
+    let ext_init_fp = d.u64()?;
+    let cycle = d.u64()?;
+    let snap = dec_snap(d)?;
+    let counters = dec_counters(d)?;
+    let nu = d.seq_len(1)?;
+    let mut units = Vec::with_capacity(nu);
+    for _ in 0..nu {
+        units.push(dec_unit_stats(d)?);
+    }
+    let ns = d.seq_len(8)?;
+    let mut streamers = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        let k = d.seq_len(24)?;
+        let mut ss = Vec::with_capacity(k);
+        for _ in 0..k {
+            ss.push((d.u64()?, d.u64()?, d.u64()?));
+        }
+        streamers.push(ss);
+    }
+    let nl = d.seq_len(2)?;
+    let mut layers = Vec::with_capacity(nl);
+    for _ in 0..nl {
+        layers.push((d.u16()?, dec_layer_stat(d)?));
+    }
+    let ledger = if d.flag()? {
+        let nt = d.seq_len(8 * NCATS)?;
+        let mut tallies = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let mut row = [0u64; NCATS];
+            for v in row.iter_mut() {
+                *v = d.u64()?;
+            }
+            tallies.push(row);
+        }
+        let nf = d.seq_len(8)?;
+        let mut frontier = Vec::with_capacity(nf);
+        for _ in 0..nf {
+            frontier.push(d.u64()?);
+        }
+        Some((tallies, frontier))
+    } else {
+        None
+    };
+    let trace = if d.flag()? {
+        let ne = d.seq_len(1)?;
+        let mut evs = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            let track: Arc<str> = Arc::from(d.string()?.as_str());
+            let name: Arc<str> = Arc::from(d.string()?.as_str());
+            evs.push(TraceEvent {
+                track,
+                name,
+                start_cycle: d.u64()?,
+                end_cycle: d.u64()?,
+            });
+        }
+        Some(evs)
+    } else {
+        None
+    };
+    Ok(ClusterCheckpoint {
+        seed,
+        ext_init_fp,
+        cycle,
+        snap,
+        counters,
+        units,
+        streamers,
+        layers,
+        ledger,
+        trace,
+        spm: d.bytes()?,
+        ext: d.bytes()?,
+    })
+}
+
+fn enc_system(e: &mut Enc, s: &SystemCheckpoint) {
+    e.u64(s.seed);
+    e.u64(s.members.len() as u64);
+    for m in &s.members {
+        enc_cluster(e, m);
+    }
+    e.bytes(&s.shared_ext);
+    e.u64(s.noc_ledger.len() as u64);
+    for &(cycle, used) in &s.noc_ledger {
+        e.u64(cycle);
+        e.u32(used);
+    }
+    e.u64(s.noc_granted);
+    e.u64(s.noc_denied);
+    e.u64(s.noc_busy_cycles);
+    e.u64(s.bars_pending.len() as u64);
+    for &(id, p, mask) in &s.bars_pending {
+        e.u16(id);
+        e.u8(p);
+        e.u64(mask);
+    }
+    e.u64(s.bars_released.len() as u64);
+    for &(id, t) in &s.bars_released {
+        e.u16(id);
+        e.u64(t);
+    }
+    e.u64(s.bars_release_events);
+    e.u64(s.done.len() as u64);
+    for &f in &s.done {
+        e.flag(f);
+    }
+    e.u64(s.blocked.len() as u64);
+    for &f in &s.blocked {
+        e.flag(f);
+    }
+}
+
+fn dec_system(d: &mut Dec) -> Result<SystemCheckpoint> {
+    let seed = d.u64()?;
+    let nm = d.seq_len(1)?;
+    let mut members = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        members.push(dec_cluster(d)?);
+    }
+    let shared_ext = d.bytes()?;
+    let nn = d.seq_len(12)?;
+    let mut noc_ledger = Vec::with_capacity(nn);
+    for _ in 0..nn {
+        noc_ledger.push((d.u64()?, d.u32()?));
+    }
+    let noc_granted = d.u64()?;
+    let noc_denied = d.u64()?;
+    let noc_busy_cycles = d.u64()?;
+    let np = d.seq_len(11)?;
+    let mut bars_pending = Vec::with_capacity(np);
+    for _ in 0..np {
+        bars_pending.push((d.u16()?, d.u8()?, d.u64()?));
+    }
+    let nr = d.seq_len(10)?;
+    let mut bars_released = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        bars_released.push((d.u16()?, d.u64()?));
+    }
+    let bars_release_events = d.u64()?;
+    let nd = d.seq_len(1)?;
+    let mut done = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        done.push(d.flag()?);
+    }
+    let nb = d.seq_len(1)?;
+    let mut blocked = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        blocked.push(d.flag()?);
+    }
+    Ok(SystemCheckpoint {
+        seed,
+        members,
+        shared_ext,
+        noc_ledger,
+        noc_granted,
+        noc_denied,
+        noc_busy_cycles,
+        bars_pending,
+        bars_released,
+        bars_release_events,
+        done,
+        blocked,
+    })
+}
+
+/// Re-sort a decoded NoC ledger into its `BTreeMap` form.
+pub(crate) fn noc_ledger_map(entries: &[(u64, u32)]) -> BTreeMap<u64, u32> {
+    entries.iter().copied().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("snax-ckpt-test-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_cluster() -> ClusterCheckpoint {
+        let snap = CtrlSnap {
+            cores: vec![
+                SnapCore {
+                    pc: 7,
+                    wake_rel: 3,
+                    barrier_arrived: false,
+                    done: false,
+                    layer: Some((2, LayerClass::Conv)),
+                    sw: Some(SnapSw {
+                        cycles: 99,
+                        class: LayerClass::Other,
+                        op: Some(OpDesc::Relu { buf: Region(64), len: 128 }),
+                    }),
+                },
+                SnapCore {
+                    pc: 0,
+                    wake_rel: 0,
+                    barrier_arrived: true,
+                    done: false,
+                    layer: None,
+                    sw: None,
+                },
+            ],
+            units: vec![SnapUnit {
+                staged: vec![1, 2, 3],
+                staged_desc: Some(Some(OpDesc::VecAdd {
+                    a: Region(0),
+                    b: Region(8),
+                    out: Region(16),
+                    len: 4,
+                    relu: true,
+                })),
+                pending: Some(SnapPending {
+                    regs: vec![9, 8],
+                    desc: Some(None),
+                    layer: 5,
+                }),
+                job: Some(SnapJob {
+                    steps: 100,
+                    steps_done: 40,
+                    emit: EmitRule::EveryK(4),
+                    emitted: 10,
+                    consume_every: vec![1, 2],
+                    class: CounterClass::Gemm,
+                    desc: None,
+                    layer: 3,
+                    start_rel: 41,
+                    dma: Some(SnapDma {
+                        dir: DmaDir::SpmToExt,
+                        src: 0,
+                        dst: 4096,
+                        rows: 8,
+                        row_bytes: 64,
+                        src_stride: 64,
+                        dst_stride: -64,
+                    }),
+                    axi_remaining: 12,
+                }),
+                readers: vec![SnapStreamer {
+                    plan: Some(StreamPlan {
+                        base: 128,
+                        pattern: BeatPattern {
+                            rows: 8,
+                            row_stride: -16,
+                            words_per_row: 2,
+                        },
+                        loops: [
+                            AguLoop { count: 4, stride: 8 },
+                            AguLoop { count: 2, stride: -32 },
+                            AguLoop::default(),
+                            AguLoop::default(),
+                        ],
+                    }),
+                    beat_idx: 3,
+                    beats_total: 8,
+                    fifo: 1,
+                    pending: vec![0xaa, 0xbb],
+                    pending_mask: 0b1010,
+                    pending_words: 2,
+                    inflight: vec![4, 5, 6],
+                }],
+                writers: vec![],
+            }],
+            barriers: vec![(1, 0b11, 2)],
+            traced: true,
+            ledgered: true,
+        };
+        ClusterCheckpoint {
+            seed: 0xdead_beef,
+            ext_init_fp: 0x1234,
+            cycle: 5000,
+            snap,
+            counters: Counters {
+                gemm_compute_cycles: 1,
+                pool_compute_cycles: 2,
+                other_accel_cycles: 3,
+                bank_reads: 4,
+                bank_writes: 5,
+                bank_conflict_cycles: 6,
+                axi_beats: 7,
+                noc_stall_cycles: 8,
+                csr_writes: 9,
+                core_busy_cycles: vec![10, 11],
+                barrier_events: 12,
+                macs_retired: 13,
+                elem_ops_retired: 14,
+            },
+            units: vec![UnitStats {
+                name: "gemm0".into(),
+                active_cycles: 1,
+                compute_cycles: 2,
+                stall_input_cycles: 3,
+                stall_output_cycles: 4,
+                jobs: 5,
+                streamer_conflict_cycles: 6,
+            }],
+            streamers: vec![vec![(1, 2, 3)]],
+            layers: vec![(
+                0,
+                LayerStat {
+                    name: "conv1".into(),
+                    class: Some(LayerClass::Conv),
+                    busy_cycles: 10,
+                    first_start: 1,
+                    last_end: 11,
+                },
+            )],
+            ledger: Some((vec![[1u64; NCATS], [2u64; NCATS]], vec![5000, 4999])),
+            trace: Some(vec![TraceEvent {
+                track: Arc::from("core0"),
+                name: Arc::from("conv1"),
+                start_cycle: 1,
+                end_cycle: 11,
+            }]),
+            spm: vec![1, 2, 3, 4],
+            ext: vec![9; 4096],
+        }
+    }
+
+    fn assert_cluster_eq(a: &ClusterCheckpoint, b: &ClusterCheckpoint) {
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.ext_init_fp, b.ext_init_fp);
+        assert_eq!(a.cycle, b.cycle);
+        assert_eq!(a.snap, b.snap);
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.units, b.units);
+        assert_eq!(a.streamers, b.streamers);
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.ledger, b.ledger);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.spm, b.spm);
+        assert_eq!(a.ext, b.ext);
+    }
+
+    #[test]
+    fn cluster_checkpoint_roundtrips_through_a_file() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("a.ckpt");
+        let ck = sample_cluster();
+        save(&path, &Checkpoint::Cluster(ck)).unwrap();
+        let Checkpoint::Cluster(back) = load(&path).unwrap() else {
+            panic!("wrong kind");
+        };
+        assert_cluster_eq(&sample_cluster(), &back);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn system_checkpoint_roundtrips_through_a_file() {
+        let dir = tmpdir("system");
+        let path = dir.join("s.ckpt");
+        let sys = SystemCheckpoint {
+            seed: 42,
+            members: vec![sample_cluster(), sample_cluster()],
+            shared_ext: vec![7; 8192],
+            noc_ledger: vec![(100, 1), (101, 2)],
+            noc_granted: 10,
+            noc_denied: 3,
+            noc_busy_cycles: 9,
+            bars_pending: vec![(1000, 2, 0b01)],
+            bars_released: vec![(1001, 77)],
+            bars_release_events: 1,
+            done: vec![false, true],
+            blocked: vec![true, false],
+        };
+        save(&path, &Checkpoint::System(sys)).unwrap();
+        let Checkpoint::System(back) = load(&path).unwrap() else {
+            panic!("wrong kind");
+        };
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.members.len(), 2);
+        assert_cluster_eq(&back.members[0], &sample_cluster());
+        assert_eq!(back.shared_ext, vec![7; 8192]);
+        assert_eq!(back.noc_ledger, vec![(100, 1), (101, 2)]);
+        assert_eq!(
+            (back.noc_granted, back.noc_denied, back.noc_busy_cycles),
+            (10, 3, 9)
+        );
+        assert_eq!(back.bars_pending, vec![(1000, 2, 0b01)]);
+        assert_eq!(back.bars_released, vec![(1001, 77)]);
+        assert_eq!(back.bars_release_events, 1);
+        assert_eq!(back.done, vec![false, true]);
+        assert_eq!(back.blocked, vec![true, false]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_or_truncated_checkpoints_fail_cleanly() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join("a.ckpt");
+        save(&path, &Checkpoint::Cluster(sample_cluster())).unwrap();
+        let good = fs::read(&path).unwrap();
+
+        // Flip one payload byte: checksum must catch it.
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xff;
+        let p2 = dir.join("bad.ckpt");
+        fs::write(&p2, &bad).unwrap();
+        let err = load(&p2).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // Truncate: must fail, not panic.
+        let p3 = dir.join("short.ckpt");
+        fs::write(&p3, &good[..good.len() / 2]).unwrap();
+        assert!(load(&p3).is_err());
+
+        // Not a checkpoint at all.
+        let p4 = dir.join("junk.ckpt");
+        fs::write(&p4, b"hello world").unwrap();
+        let err = load(&p4).unwrap_err();
+        assert!(err.to_string().contains("not a snax checkpoint"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_in_dir_orders_by_cycle() {
+        let dir = tmpdir("latest");
+        let plan = CheckpointPlan::new(&dir).label("job7");
+        for cycle in [5u64, 50000, 900] {
+            save(
+                &plan.file_path(cycle),
+                &Checkpoint::Cluster(sample_cluster()),
+            )
+            .unwrap();
+        }
+        let latest = latest_in_dir(&dir).unwrap().unwrap();
+        assert_eq!(
+            latest.file_name().unwrap().to_str().unwrap(),
+            format!("job7-{:020}.ckpt", 50000)
+        );
+        assert!(latest_in_dir(Path::new("/nonexistent-snax")).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ext_init_fingerprint_separates_images() {
+        let a = ext_init_fingerprint(&[(0, vec![1, 2, 3])]);
+        assert_eq!(a, ext_init_fingerprint(&[(0, vec![1, 2, 3])]));
+        assert_ne!(a, ext_init_fingerprint(&[(0, vec![1, 2, 4])]));
+        assert_ne!(a, ext_init_fingerprint(&[(8, vec![1, 2, 3])]));
+        assert_ne!(a, ext_init_fingerprint(&[]));
+    }
+}

@@ -28,7 +28,7 @@
 //!   `tick()`. Both engines produce identical [`SimReport`]s; the
 //!   equivalence suites (unit, property, and integration) enforce it.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -41,6 +41,7 @@ use crate::isa::{
 use super::accel::{model_for, AccelModel, CounterClass, EmitRule};
 use super::barrier::BarrierFile;
 use super::cancel::{CancelReason, CancelToken, Cancelled, DEADLINE_POLL_QUANTA};
+use super::checkpoint::{self, Checkpoint, CheckpointPlan, ClusterCheckpoint};
 use super::csr::CsrFile;
 use super::dma::{DmaDir, DmaJob};
 use super::functional::{apply_op_scratch, FnScratch};
@@ -213,6 +214,9 @@ pub struct Cluster {
     progress: Option<Arc<ProgressSink>>,
     /// Cooperative cancellation / deadline token for server jobs.
     cancel: Option<Arc<CancelToken>>,
+    /// Durable checkpointing plan (DESIGN.md §12); `None` = no
+    /// checkpoint work at all.
+    ckpt: Option<CheckpointPlan>,
 }
 
 impl Cluster {
@@ -225,6 +229,7 @@ impl Cluster {
             ledger: false,
             progress: None,
             cancel: None,
+            ckpt: None,
         }
     }
 
@@ -287,6 +292,16 @@ impl Cluster {
         self
     }
 
+    /// Write durable checkpoints at barrier-release boundaries (and a
+    /// final one when a cancellation or deadline cuts the run off), per
+    /// the plan's interval and directory. Resumes via
+    /// [`resume`](Self::resume) are byte-identical to uninterrupted
+    /// runs (DESIGN.md §12).
+    pub fn with_checkpoint(mut self, plan: CheckpointPlan) -> Self {
+        self.ckpt = Some(plan);
+        self
+    }
+
     pub fn config(&self) -> &ClusterConfig {
         &self.cfg
     }
@@ -331,6 +346,29 @@ impl Cluster {
         Ok((report, trace))
     }
 
+    /// Resume a checkpointed run to completion (event-driven engine).
+    /// The final [`SimReport`] is byte-identical to the uninterrupted
+    /// run's. Trace/ledger enablement rides in the checkpoint itself.
+    pub fn resume(&self, program: &Program, ck: &Checkpoint) -> Result<SimReport> {
+        self.resume_mode(program, SimMode::Event, ck)
+    }
+
+    /// [`resume`](Self::resume) under an explicit engine.
+    pub fn resume_mode(
+        &self,
+        program: &Program,
+        mode: SimMode,
+        ck: &Checkpoint,
+    ) -> Result<SimReport> {
+        let Checkpoint::Cluster(ck) = ck else {
+            bail!("checkpoint is a system checkpoint; resume it via System::resume");
+        };
+        let mut st = self.state(program)?;
+        st.mode = mode;
+        st.restore_checkpoint(ck)?;
+        st.run()
+    }
+
     fn state<'p2>(&'p2 self, program: &'p2 Program) -> Result<SimState<'p2>> {
         if program.streams.len() != self.cfg.cores.len() {
             bail!(
@@ -347,6 +385,7 @@ impl Cluster {
         }
         st.progress = self.progress.clone();
         st.set_cancel(self.cancel.clone());
+        st.set_checkpoint(self.ckpt.clone());
         Ok(st)
     }
 }
@@ -416,7 +455,22 @@ pub(crate) struct SimState<'p> {
     /// Reusable functional-retire buffers (operand staging, output, and
     /// per-worker im2col packing) — no per-retire heap allocation.
     scratch: FnScratch,
+    /// Durable checkpointing context (plan + boundary bookkeeping);
+    /// `None` = zero checkpoint work per quantum beyond one branch.
+    ckpt: Option<Box<CkptCtx>>,
     cycle: u64,
+}
+
+/// Live checkpointing state: the plan plus boundary bookkeeping
+/// (mirrors the memo's `last_barrier_events` convention so eligibility
+/// is one counter compare per quantum).
+struct CkptCtx {
+    plan: CheckpointPlan,
+    /// Barrier events already considered for checkpoint eligibility.
+    last_events: u64,
+    /// Boundaries seen since the last write (a multi-release quantum
+    /// advances this by more than one).
+    pending_boundaries: u64,
 }
 
 /// Ceiling for the span-planner retry backoff (cycles).
@@ -719,6 +773,7 @@ impl<'p> SimState<'p> {
             groups,
             grants: vec![0; flat_keys.len()],
             flat_keys,
+            ckpt: None,
             cycle: 0,
         })
     }
@@ -768,6 +823,19 @@ impl<'p> SimState<'p> {
         self.cancel_countdown = 0;
     }
 
+    /// Attach (or clear) the durable-checkpoint plan. Eligibility
+    /// starts counting from the *current* barrier count, so a resumed
+    /// state doesn't immediately re-write the checkpoint it came from.
+    pub(crate) fn set_checkpoint(&mut self, plan: Option<CheckpointPlan>) {
+        self.ckpt = plan.map(|p| {
+            Box::new(CkptCtx {
+                plan: p,
+                last_events: self.counters.barrier_events,
+                pending_boundaries: 0,
+            })
+        });
+    }
+
     fn run(mut self) -> Result<SimReport> {
         self.prepare();
         loop {
@@ -802,6 +870,24 @@ impl<'p> SimState<'p> {
         if let Some(sink) = self.progress.clone() {
             self.publish_progress(&sink);
         }
+        // Durable checkpointing, co-located with the progress/cancel
+        // polling: every top-of-quantum is a sound cut (DESIGN.md §12),
+        // and barrier-release boundaries gate eligibility so the write
+        // rate follows the plan's interval. Off path: one branch.
+        if self.ckpt.is_some() {
+            let due = {
+                let c = self.ckpt.as_deref_mut().expect("checked");
+                let ev = self.counters.barrier_events;
+                if ev != c.last_events {
+                    c.pending_boundaries += ev - c.last_events;
+                    c.last_events = ev;
+                }
+                c.pending_boundaries >= c.plan.every
+            };
+            if due {
+                self.write_checkpoint()?;
+            }
+        }
         // Cooperative cancellation, co-located with the progress
         // publication: the cancelled flag is one relaxed load per
         // quantum; the wall-clock deadline poll is throttled (but the
@@ -809,6 +895,11 @@ impl<'p> SimState<'p> {
         // fast on tiny or fully-memoized runs). Off path: one branch.
         if let Some(token) = &self.cancel {
             if token.is_cancelled() {
+                // Final checkpoint so the cancelled run is resumable
+                // (best-effort: the cancellation outcome wins).
+                if self.ckpt.is_some() {
+                    let _ = self.write_checkpoint();
+                }
                 return Err(Cancelled {
                     reason: CancelReason::Client,
                     at_cycle: self.cycle,
@@ -818,6 +909,9 @@ impl<'p> SimState<'p> {
             if self.cancel_countdown == 0 {
                 self.cancel_countdown = DEADLINE_POLL_QUANTA;
                 if token.deadline_passed() {
+                    if self.ckpt.is_some() {
+                        let _ = self.write_checkpoint();
+                    }
                     return Err(Cancelled {
                         reason: CancelReason::Deadline,
                         at_cycle: self.cycle,
@@ -1096,9 +1190,11 @@ impl<'p> SimState<'p> {
 
     // -- phase memoization (DESIGN.md §8) -----------------------------------
 
-    fn init_memo(&mut self) {
-        let meta: Vec<UnitMeta> = self
-            .units
+    /// Per-unit descriptor-register metadata, derivable from the unit
+    /// list alone (shared by the memo and the checkpoint writer, which
+    /// must also work with the memo disengaged).
+    fn unit_meta(&self) -> Vec<UnitMeta> {
+        self.units
             .iter()
             .map(|u| match &u.kind {
                 UnitKind::Accel(model) => {
@@ -1106,7 +1202,11 @@ impl<'p> SimState<'p> {
                 }
                 UnitKind::Dma => UnitMeta { desc_reg: None, is_dma: true },
             })
-            .collect();
+            .collect()
+    }
+
+    fn init_memo(&mut self) {
+        let meta = self.unit_meta();
         let l_mod = self
             .groups
             .iter()
@@ -1134,10 +1234,15 @@ impl<'p> SimState<'p> {
     }
 
     /// Snapshot the full timing-relevant control state, boundary-
-    /// relative (see [`CtrlSnap`]).
+    /// relative (see [`CtrlSnap`]). Works with or without the memo
+    /// engaged — the checkpoint writer snapshots exact-mode and
+    /// memo-off runs too.
     fn capture_snap(&self) -> CtrlSnap {
         let cyc = self.cycle;
-        let meta = &self.memo.as_ref().expect("memo engaged").meta;
+        let meta: Vec<UnitMeta> = match self.memo.as_ref() {
+            Some(m) => m.meta.clone(),
+            None => self.unit_meta(),
+        };
         let cores = self
             .cores
             .iter()
@@ -1197,6 +1302,247 @@ impl<'p> SimState<'p> {
             traced: self.trace.is_some(),
             ledgered: self.ledger.is_some(),
         }
+    }
+
+    // -- durable checkpoint/restore (DESIGN.md §12) -------------------------
+
+    /// Barrier events so far (the system driver's checkpoint-eligibility
+    /// feed).
+    pub(crate) fn barrier_events(&self) -> u64 {
+        self.counters.barrier_events
+    }
+
+    /// Full resumable state at the current top-of-quantum cut: the
+    /// memo's control snapshot plus everything the report folds in
+    /// (counters, unit/streamer/layer stats, ledger tallies, trace
+    /// events) and the functional memory images.
+    pub(crate) fn checkpoint_state(&self) -> ClusterCheckpoint {
+        ClusterCheckpoint {
+            seed: phase::phase_seed(
+                self.cfg,
+                self.program,
+                self.trace.is_some(),
+                self.ledger.is_some(),
+            ),
+            ext_init_fp: checkpoint::ext_init_fingerprint(&self.program.ext_mem_init),
+            cycle: self.cycle,
+            snap: self.capture_snap(),
+            counters: self.counters.clone(),
+            units: self.units.iter().map(|u| u.stats.clone()).collect(),
+            streamers: self
+                .units
+                .iter()
+                .map(|u| {
+                    u.readers
+                        .iter()
+                        .chain(u.writers.iter())
+                        .map(|s| {
+                            (
+                                s.stats.beats_done,
+                                s.stats.conflict_cycles,
+                                s.stats.fifo_stall_cycles,
+                            )
+                        })
+                        .collect()
+                })
+                .collect(),
+            layers: self
+                .layers
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| l.as_ref().map(|s| (i as u16, s.clone())))
+                .collect(),
+            ledger: self
+                .ledger
+                .as_deref()
+                .map(|lg| (lg.cores.clone(), lg.frontier.clone())),
+            trace: self.trace.as_deref().map(|tc| tc.trace.events.clone()),
+            spm: self.spm.raw().to_vec(),
+            ext: self.ext.raw().to_vec(),
+        }
+    }
+
+    /// Serialize the current top-of-quantum state and write it to the
+    /// plan's directory (atomic tmp + fsync + rename), then reset the
+    /// boundary budget.
+    fn write_checkpoint(&mut self) -> Result<()> {
+        let plan = {
+            let c = self.ckpt.as_deref_mut().expect("checkpoint plan attached");
+            c.pending_boundaries = 0;
+            c.plan.clone()
+        };
+        std::fs::create_dir_all(&plan.dir).with_context(|| {
+            format!("creating checkpoint directory {}", plan.dir.display())
+        })?;
+        let path = plan.file_path(self.cycle);
+        checkpoint::save(&path, &Checkpoint::Cluster(self.checkpoint_state()))?;
+        if let Some(ctr) = &plan.counter {
+            ctr.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        if let Some(hook) = &plan.on_write {
+            hook(&path);
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the checkpointed state onto this fresh engine. Must
+    /// run before [`prepare`](Self::prepare) so memo engagement reads
+    /// the restored barrier count. The cut invariants mirror
+    /// [`apply_replay`](Self::apply_replay): absolute stats/memories
+    /// are installed verbatim; boundary-relative control offsets
+    /// resolve against the checkpoint cycle; per-cycle scratch
+    /// (grants, `was_busy`, `group_req`) is rebuilt each arbitrate;
+    /// and the planner/deadline/progress cursors reset, which is
+    /// report-invariant by the event==exact contract.
+    pub(crate) fn restore_checkpoint(&mut self, ck: &ClusterCheckpoint) -> Result<()> {
+        // Re-enable the opt-in contexts the checkpointed run had. The
+        // phase seed folds both flags, so enable before the identity
+        // check.
+        if ck.snap.traced && self.trace.is_none() {
+            self.enable_trace();
+        }
+        if ck.snap.ledgered && self.ledger.is_none() {
+            self.enable_ledger();
+        }
+        let seed = phase::phase_seed(
+            self.cfg,
+            self.program,
+            self.trace.is_some(),
+            self.ledger.is_some(),
+        );
+        if seed != ck.seed {
+            bail!("checkpoint does not match this config/program (identity seed mismatch)");
+        }
+        if checkpoint::ext_init_fingerprint(&self.program.ext_mem_init) != ck.ext_init_fp
+        {
+            bail!("checkpoint does not match this program's external-memory image");
+        }
+        if ck.snap.cores.len() != self.cores.len()
+            || ck.snap.units.len() != self.units.len()
+            || ck.units.len() != self.units.len()
+            || ck.streamers.len() != self.units.len()
+            || ck.counters.core_busy_cycles.len() != self.cores.len()
+        {
+            bail!("checkpoint shape does not match this cluster");
+        }
+        let cyc = ck.cycle;
+
+        // Absolute accumulators, installed verbatim.
+        self.counters = ck.counters.clone();
+        for (u, stats) in self.units.iter_mut().zip(&ck.units) {
+            u.stats = stats.clone();
+        }
+        for (u, ss) in self.units.iter_mut().zip(&ck.streamers) {
+            if ss.len() != u.readers.len() + u.writers.len() {
+                bail!("checkpoint streamer-stat shape does not match this cluster");
+            }
+            for (s, &(beats, conf, stall)) in
+                u.readers.iter_mut().chain(u.writers.iter_mut()).zip(ss)
+            {
+                s.stats.beats_done = beats;
+                s.stats.conflict_cycles = conf;
+                s.stats.fifo_stall_cycles = stall;
+            }
+        }
+        for l in self.layers.iter_mut() {
+            *l = None;
+        }
+        for (id, stat) in &ck.layers {
+            let idx = *id as usize;
+            if idx >= self.layers.len() {
+                bail!("checkpoint layer id {id} out of range for this program");
+            }
+            self.layers[idx] = Some(stat.clone());
+        }
+        if let Some((tallies, frontier)) = &ck.ledger {
+            let lg = self.ledger.as_deref_mut().expect("ledger enabled above");
+            if tallies.len() != lg.cores.len() || frontier.len() != lg.frontier.len() {
+                bail!("checkpoint ledger shape does not match this cluster");
+            }
+            lg.cores.clone_from(tallies);
+            lg.frontier.clone_from(frontier);
+        }
+        if let Some(evs) = &ck.trace {
+            let tc = self.trace.as_deref_mut().expect("trace enabled above");
+            tc.trace.events = evs.clone();
+        }
+
+        // Control state: boundary-relative offsets resolved at `cyc`.
+        for (ci, ec) in ck.snap.cores.iter().enumerate() {
+            let c = &mut self.cores[ci];
+            c.pc = ec.pc;
+            c.wake_at = cyc + ec.wake_rel;
+            c.barrier_arrived = ec.barrier_arrived;
+            c.done = ec.done;
+            c.layer = ec.layer;
+            c.pending_sw = ec.sw.as_ref().map(|s| SwKernel {
+                cycles: s.cycles,
+                class: s.class,
+                op: s.op.clone(),
+            });
+        }
+        self.barriers.restore(&ck.snap.barriers);
+        // Checkpoints store literal register values and descriptors
+        // (unlike memo replay there is no site translation), so the
+        // DMA address map is the identity.
+        let no_map: HashMap<u64, u64> = HashMap::new();
+        for (ui, eu) in ck.snap.units.iter().enumerate() {
+            let u = &mut self.units[ui];
+            u.csr.restore(
+                eu.staged.clone(),
+                eu.pending.as_ref().map(|p| (p.regs.clone(), p.layer)),
+            );
+            u.job = eu.job.as_ref().map(|j| RunningJob {
+                steps: j.steps,
+                steps_done: j.steps_done,
+                emit: j.emit,
+                emitted: j.emitted,
+                consume_every: j.consume_every.clone(),
+                class: j.class,
+                desc: j.desc.clone(),
+                layer: j.layer,
+                start: cyc.saturating_sub(j.start_rel),
+                dma: j.dma.as_ref().map(|d| d.to_job(&no_map)),
+                axi_remaining: j.axi_remaining,
+            });
+            if eu.readers.len() != u.readers.len()
+                || eu.writers.len() != u.writers.len()
+            {
+                bail!("checkpoint streamer shape does not match this cluster");
+            }
+            for (s, es) in u
+                .readers
+                .iter_mut()
+                .chain(u.writers.iter_mut())
+                .zip(eu.readers.iter().chain(eu.writers.iter()))
+            {
+                s.plan = es.plan.clone();
+                s.beat_idx = es.beat_idx;
+                s.beats_total = es.beats_total;
+                s.fifo = es.fifo;
+                s.pending = es.pending.clone();
+                s.pending_mask = es.pending_mask;
+                s.pending_words = es.pending_words;
+                s.restore_inflight(&es.inflight);
+            }
+        }
+
+        // Functional memory, verbatim (the ext image keeps its
+        // checkpointed grow-on-demand length).
+        self.spm.restore_raw(&ck.spm)?;
+        self.ext.restore_raw(ck.ext.clone());
+
+        // Result-invariant cursors reset (see the doc comment).
+        self.cycle = cyc;
+        self.next_plan_at = cyc;
+        self.plan_backoff = 1;
+        self.cancel_countdown = 0;
+        self.progress_events = 0;
+        if let Some(c) = self.ckpt.as_deref_mut() {
+            c.last_events = self.counters.barrier_events;
+            c.pending_boundaries = 0;
+        }
+        Ok(())
     }
 
     /// Handle one phase boundary: finalize the ended phase, then replay

@@ -96,6 +96,21 @@ impl Spm {
     pub fn raw(&self) -> &[u8] {
         &self.data
     }
+
+    /// Overwrite the full scratchpad image from a checkpoint. The
+    /// length is fixed by the cluster geometry, so a mismatch means the
+    /// checkpoint belongs to a different configuration.
+    pub(crate) fn restore_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() != self.data.len() {
+            bail!(
+                "checkpoint SPM image is {} bytes, cluster has {}",
+                bytes.len(),
+                self.data.len()
+            );
+        }
+        self.data.copy_from_slice(bytes);
+        Ok(())
+    }
 }
 
 /// External (off-cluster, AXI-side) memory. Sparse-ish flat model: a
@@ -138,6 +153,17 @@ impl ExtMem {
 
     pub fn into_raw(self) -> Vec<u8> {
         self.data
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Adopt a checkpointed backing store verbatim — including its
+    /// grow-on-demand length, so a resumed run's final `ext_mem` bytes
+    /// (length included) match the uninterrupted run exactly.
+    pub(crate) fn restore_raw(&mut self, data: Vec<u8>) {
+        self.data = data;
     }
 }
 

@@ -21,10 +21,13 @@
 //! * [`trace`] — counters, per-layer attribution, the [`SimReport`]
 //! * [`cancel`] — cooperative cancellation + deadline tokens polled by
 //!   the quantum loop (service fault-tolerance, DESIGN.md §11)
+//! * [`checkpoint`] — durable barrier-boundary checkpoint/restore for
+//!   resumable simulations (DESIGN.md §12)
 
 pub mod accel;
 pub mod barrier;
 pub mod cancel;
+pub mod checkpoint;
 pub mod cluster;
 pub mod csr;
 pub mod dma;
@@ -38,6 +41,7 @@ pub mod system;
 pub mod trace;
 
 pub use cancel::{CancelReason, CancelToken, Cancelled};
+pub use checkpoint::{Checkpoint, CheckpointPlan};
 pub use cluster::{Cluster, SimMode};
 pub use job::{OpDesc, Region};
 pub use ledger::{Cat, LedgerReport, LedgerRow, ProgressSink, CAT_NAMES, NCATS};

@@ -32,16 +32,20 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::compiler::fingerprint::Fnv1a;
 use crate::config::{NocConfig, SystemConfig};
 use crate::isa::Program;
 
 use super::cancel::CancelToken;
+use super::checkpoint::{
+    self, Checkpoint, CheckpointPlan, ClusterCheckpoint, SystemCheckpoint,
+};
 use super::cluster::{Quantum, SimState};
 use super::ledger::ProgressSink;
 use super::mem::ExtMem;
-use super::phase::PhaseCache;
+use super::phase::{self, PhaseCache};
 use super::trace::SimReport;
 use super::SimMode;
 
@@ -122,6 +126,33 @@ impl NocLedger {
             self.ledger = self.ledger.split_off(&min_cycle);
         }
     }
+
+    /// Checkpoint view: outstanding `(cycle, slots_used)` grant entries
+    /// plus the counters (DESIGN.md §12).
+    pub(crate) fn snapshot(&self) -> (Vec<(u64, u32)>, u64, u64, u64) {
+        (
+            self.ledger.iter().map(|(&c, &u)| (c, u)).collect(),
+            self.granted,
+            self.denied,
+            self.busy_cycles,
+        )
+    }
+
+    /// Reinstall a checkpointed grant ledger; `budget`/`link_bits`/
+    /// `contended` are config-derived and already set by the
+    /// constructor.
+    pub(crate) fn restore(
+        &mut self,
+        entries: &[(u64, u32)],
+        granted: u64,
+        denied: u64,
+        busy_cycles: u64,
+    ) {
+        self.ledger = checkpoint::noc_ledger_map(entries);
+        self.granted = granted;
+        self.denied = denied;
+        self.busy_cycles = busy_cycles;
+    }
 }
 
 /// Cross-cluster barrier file: ids at or above
@@ -167,6 +198,29 @@ impl SysBarriers {
     /// The shared-clock cycle `id` released at, if it has.
     pub(crate) fn release_time(&self, id: u16) -> Option<u64> {
         self.released.get(&id).copied()
+    }
+
+    /// Checkpoint view: pending `(id, participants, arrived_mask)` and
+    /// released `(id, cycle)`, sorted for deterministic bytes.
+    pub(crate) fn snapshot(&self) -> (Vec<(u16, u8, u64)>, Vec<(u16, u64)>, u64) {
+        let mut pending: Vec<(u16, u8, u64)> =
+            self.pending.iter().map(|(&id, &(p, mask))| (id, p, mask)).collect();
+        pending.sort_unstable();
+        let mut released: Vec<(u16, u64)> =
+            self.released.iter().map(|(&id, &t)| (id, t)).collect();
+        released.sort_unstable();
+        (pending, released, self.release_events)
+    }
+
+    pub(crate) fn restore(
+        &mut self,
+        pending: &[(u16, u8, u64)],
+        released: &[(u16, u64)],
+        release_events: u64,
+    ) {
+        self.pending = pending.iter().map(|&(id, p, mask)| (id, (p, mask))).collect();
+        self.released = released.iter().copied().collect();
+        self.release_events = release_events;
     }
 }
 
@@ -230,6 +284,9 @@ pub struct System {
     ledger: bool,
     progress: Option<Arc<ProgressSink>>,
     cancel: Option<Arc<CancelToken>>,
+    /// Durable checkpointing plan (DESIGN.md §12); `None` = no
+    /// checkpoint work at all.
+    ckpt: Option<CheckpointPlan>,
 }
 
 impl System {
@@ -242,6 +299,7 @@ impl System {
             ledger: false,
             progress: None,
             cancel: None,
+            ckpt: None,
         }
     }
 
@@ -287,6 +345,17 @@ impl System {
         self
     }
 
+    /// Write durable checkpoints at barrier-release boundaries (system
+    /// barriers and members' local barriers both count), plus a final
+    /// one when a cancellation or deadline cuts the run off. A
+    /// system-of-1 writes cluster-kind checkpoints (its schedule *is*
+    /// the standalone engine's); multi-cluster runs write system-kind
+    /// ones capturing every member + the shared NoC/barrier state.
+    pub fn with_checkpoint(mut self, plan: CheckpointPlan) -> Self {
+        self.ckpt = Some(plan);
+        self
+    }
+
     pub fn config(&self) -> &SystemConfig {
         &self.cfg
     }
@@ -299,6 +368,53 @@ impl System {
 
     /// [`run`](Self::run) under an explicit engine.
     pub fn run_mode(&self, programs: &[&Program], mode: SimMode) -> Result<SystemReport> {
+        self.check_programs(programs)?;
+        if programs.len() == 1 {
+            return self.run_single_from(programs[0], mode, None);
+        }
+        self.run_multi_from(programs, mode, None)
+    }
+
+    /// Resume a checkpointed run to completion (event-driven engines).
+    /// The final [`SystemReport`] is byte-identical to the
+    /// uninterrupted run's (DESIGN.md §12).
+    pub fn resume(&self, programs: &[&Program], ck: &Checkpoint) -> Result<SystemReport> {
+        self.resume_mode(programs, SimMode::Event, ck)
+    }
+
+    /// [`resume`](Self::resume) under an explicit engine. Dispatches on
+    /// the checkpoint kind: cluster checkpoints resume systems-of-1,
+    /// system checkpoints resume multi-cluster runs.
+    pub fn resume_mode(
+        &self,
+        programs: &[&Program],
+        mode: SimMode,
+        ck: &Checkpoint,
+    ) -> Result<SystemReport> {
+        self.check_programs(programs)?;
+        match ck {
+            Checkpoint::Cluster(c) => {
+                if programs.len() != 1 {
+                    bail!(
+                        "cluster checkpoint cannot resume a {}-cluster system",
+                        programs.len()
+                    );
+                }
+                self.run_single_from(programs[0], mode, Some(c))
+            }
+            Checkpoint::System(s) => {
+                if programs.len() == 1 {
+                    bail!(
+                        "system checkpoint was taken from a multi-cluster run; \
+                         this system has one cluster"
+                    );
+                }
+                self.run_multi_from(programs, mode, Some(s))
+            }
+        }
+    }
+
+    fn check_programs(&self, programs: &[&Program]) -> Result<()> {
         self.cfg.validate()?;
         if programs.len() != self.cfg.clusters.len() {
             bail!(
@@ -319,16 +435,18 @@ impl System {
                 );
             }
         }
-        if programs.len() == 1 {
-            return self.run_single(programs[0], mode);
-        }
-        self.run_multi(programs, mode)
+        Ok(())
     }
 
     /// Degenerate system-of-1: the standalone engine's schedule,
     /// verbatim (same quantum loop [`super::Cluster::run`] uses), so
     /// the member report is byte-identical to a standalone run.
-    fn run_single(&self, program: &Program, mode: SimMode) -> Result<SystemReport> {
+    fn run_single_from(
+        &self,
+        program: &Program,
+        mode: SimMode,
+        from: Option<&ClusterCheckpoint>,
+    ) -> Result<SystemReport> {
         let mut st = SimState::new(&self.cfg.clusters[0], program, self.func_threads)?;
         st.set_mode(mode);
         st.set_memo(self.memo);
@@ -338,6 +456,10 @@ impl System {
         }
         st.set_progress(self.progress.clone());
         st.set_cancel(self.cancel.clone());
+        st.set_checkpoint(self.ckpt.clone());
+        if let Some(ck) = from {
+            st.restore_checkpoint(ck)?;
+        }
         st.prepare();
         loop {
             match st.step_quantum()? {
@@ -357,18 +479,54 @@ impl System {
         })
     }
 
-    fn run_multi(&self, programs: &[&Program], mode: SimMode) -> Result<SystemReport> {
+    fn run_multi_from(
+        &self,
+        programs: &[&Program],
+        mode: SimMode,
+        from: Option<&SystemCheckpoint>,
+    ) -> Result<SystemReport> {
         let n = programs.len();
+        let seed = system_seed(&self.cfg, programs, self.ledger);
         // One shared external memory, preloaded with every part's
-        // image (disjoint regions by the partition pass's base layout).
+        // image (disjoint regions by the partition pass's base layout)
+        // — or restored verbatim from the checkpoint.
         let mut shared_ext = ExtMem::new();
-        for p in programs {
-            shared_ext.preload(&p.ext_mem_init);
-        }
         let mut shared: Option<Box<SocShared>> = Some(Box::new(SocShared {
             noc: NocLedger::new(&self.cfg.noc, self.cfg.contended()),
             bars: SysBarriers::default(),
         }));
+        let mut done = vec![false; n];
+        let mut blocked = vec![false; n];
+        if let Some(ck) = from {
+            if ck.seed != seed {
+                bail!(
+                    "system checkpoint does not match this config/program set \
+                     (identity seed mismatch)"
+                );
+            }
+            if ck.members.len() != n || ck.done.len() != n || ck.blocked.len() != n {
+                bail!("system checkpoint member count does not match this system");
+            }
+            shared_ext.restore_raw(ck.shared_ext.clone());
+            let sh = shared.as_deref_mut().expect("shared state present");
+            sh.noc.restore(
+                &ck.noc_ledger,
+                ck.noc_granted,
+                ck.noc_denied,
+                ck.noc_busy_cycles,
+            );
+            sh.bars.restore(
+                &ck.bars_pending,
+                &ck.bars_released,
+                ck.bars_release_events,
+            );
+            done.clone_from(&ck.done);
+            blocked.clone_from(&ck.blocked);
+        } else {
+            for p in programs {
+                shared_ext.preload(&p.ext_mem_init);
+            }
+        }
         let mut states = Vec::with_capacity(n);
         for (i, &p) in programs.iter().enumerate() {
             // `new_bare`: members never own an image — they operate on
@@ -381,13 +539,21 @@ impl System {
             }
             st.set_progress(self.progress.clone());
             st.set_cancel(self.cancel.clone());
+            if let Some(ck) = from {
+                st.restore_checkpoint(&ck.members[i])?;
+            }
             st.prepare();
             states.push(st);
         }
-        let mut done = vec![false; n];
-        let mut blocked = vec![false; n];
-        let mut releases_seen = 0u64;
+        let mut releases_seen =
+            shared.as_ref().map(|sh| sh.bars.release_events).unwrap_or(0);
         let mut rounds_since_prune = 0u32;
+        // Checkpoint eligibility: total boundary count (members' local
+        // barrier releases + system-barrier releases), same interval
+        // discipline as the cluster engine's hook.
+        let mut ck_last_events: u64 =
+            states.iter().map(|s| s.barrier_events()).sum::<u64>() + releases_seen;
+        let mut ck_pending = 0u64;
         loop {
             // Min-time scheduling: pick the least-advanced runnable
             // cluster; ties rotate by cycle so same-cycle NoC grants
@@ -419,7 +585,23 @@ impl System {
             let q = st.step_quantum();
             shared = st.take_shared();
             st.swap_ext(&mut shared_ext);
-            match q? {
+            let q = match q {
+                Ok(q) => q,
+                Err(e) => {
+                    // Best-effort final checkpoint so a cancelled or
+                    // deadline-cut system run is resumable: the failed
+                    // quantum did not advance (cancellation is checked
+                    // at the top of the quantum), so every member sits
+                    // at a sound top-of-quantum cut.
+                    if let (Some(plan), Some(sh)) = (&self.ckpt, shared.as_deref()) {
+                        let _ = write_system_checkpoint(
+                            plan, seed, &states, &shared_ext, sh, &done, &blocked,
+                        );
+                    }
+                    return Err(e);
+                }
+            };
+            match q {
                 Quantum::Done => done[i] = true,
                 Quantum::Progress => {}
                 Quantum::SysBlocked => blocked[i] = true,
@@ -441,6 +623,23 @@ impl System {
                     .unwrap_or(u64::MAX);
                 sh.noc.prune(global_min);
             }
+            // Durable checkpointing at boundary advances (DESIGN.md
+            // §12): between quanta every member is at a top-of-quantum
+            // cut and the shared state is consistent with all of them.
+            if let Some(plan) = &self.ckpt {
+                let ev: u64 = states.iter().map(|s| s.barrier_events()).sum::<u64>()
+                    + sh.bars.release_events;
+                if ev != ck_last_events {
+                    ck_pending += ev - ck_last_events;
+                    ck_last_events = ev;
+                    if ck_pending >= plan.every {
+                        ck_pending = 0;
+                        write_system_checkpoint(
+                            plan, seed, &states, &shared_ext, sh, &done, &blocked,
+                        )?;
+                    }
+                }
+            }
         }
         let sh = shared.expect("shared state present");
         let reports: Vec<SimReport> = states.into_iter().map(|st| st.finish()).collect();
@@ -456,6 +655,65 @@ impl System {
             ext_mem: shared_ext.into_raw(),
         })
     }
+}
+
+/// Identity of one multi-cluster run for checkpoint matching: every
+/// member's phase seed + external-image fingerprint, plus the NoC
+/// shape (timing-relevant shared state). Resume refuses a mismatch.
+fn system_seed(cfg: &SystemConfig, programs: &[&Program], ledgered: bool) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_str("snax-system-ckpt-v1");
+    h.write_u64(programs.len() as u64);
+    for (i, p) in programs.iter().enumerate() {
+        h.write_u64(phase::phase_seed(&cfg.clusters[i], p, false, ledgered));
+        h.write_u64(checkpoint::ext_init_fingerprint(&p.ext_mem_init));
+    }
+    h.write_u32(cfg.noc.link_bits);
+    h.write_u32(cfg.noc.grants_per_cycle);
+    h.finish()
+}
+
+/// Capture every member + the shared NoC/barrier state and write a
+/// system-kind checkpoint file (atomic tmp + fsync + rename).
+fn write_system_checkpoint(
+    plan: &CheckpointPlan,
+    seed: u64,
+    states: &[SimState<'_>],
+    shared_ext: &ExtMem,
+    sh: &SocShared,
+    done: &[bool],
+    blocked: &[bool],
+) -> Result<()> {
+    let members: Vec<_> = states.iter().map(|st| st.checkpoint_state()).collect();
+    let (noc_ledger, noc_granted, noc_denied, noc_busy_cycles) = sh.noc.snapshot();
+    let (bars_pending, bars_released, bars_release_events) = sh.bars.snapshot();
+    let ck = SystemCheckpoint {
+        seed,
+        members,
+        shared_ext: shared_ext.raw().to_vec(),
+        noc_ledger,
+        noc_granted,
+        noc_denied,
+        noc_busy_cycles,
+        bars_pending,
+        bars_released,
+        bars_release_events,
+        done: done.to_vec(),
+        blocked: blocked.to_vec(),
+    };
+    std::fs::create_dir_all(&plan.dir).with_context(|| {
+        format!("creating checkpoint directory {}", plan.dir.display())
+    })?;
+    let cycle = ck.cycle();
+    let path = plan.file_path(cycle);
+    checkpoint::save(&path, &Checkpoint::System(ck))?;
+    if let Some(ctr) = &plan.counter {
+        ctr.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    if let Some(hook) = &plan.on_write {
+        hook(&path);
+    }
+    Ok(())
 }
 
 #[cfg(test)]

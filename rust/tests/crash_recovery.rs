@@ -1,0 +1,223 @@
+//! Crash-recovery smoke (DESIGN.md §12): run the real `snax` binary,
+//! crash it mid-job with the deterministic `crash:p` fault, and hold
+//! the journal to its durability contract —
+//!
+//! * the journal survives `std::process::abort()` (non-terminal
+//!   records only need write(2) durability, not fsync);
+//! * a restarted server replays the journal, marks the orphaned job
+//!   interrupted, and auto-resumes it to completion;
+//! * the recovered report is byte-identical to a fresh synchronous run
+//!   of the same request.
+//!
+//! Wired into CI as `make crash-smoke`.
+
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use snax::runtime::json;
+use snax::server::http;
+
+/// A spawned `snax serve` child plus its parsed listen address. Killed
+/// on drop so a failing assertion never leaks a server process.
+struct ServeChild {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_serve(journal: &std::path::Path, extra: &[&str]) -> ServeChild {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_snax"));
+    cmd.args(["serve", "--port", "0", "--workers", "1", "--journal"])
+        .arg(journal)
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .stdin(Stdio::null());
+    let mut child = cmd.spawn().expect("spawning snax serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut lines = BufReader::new(stdout).lines();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let addr = loop {
+        assert!(Instant::now() < deadline, "server never printed its banner");
+        let line = lines
+            .next()
+            .expect("server exited before printing its banner")
+            .expect("reading server stdout");
+        if let Some(rest) = line.strip_prefix("snax serve listening on http://") {
+            let addr = rest.split_whitespace().next().unwrap();
+            break addr.parse().expect("parsing listen address");
+        }
+    };
+    // Let the banner reader run on so the child never blocks on a full
+    // stdout pipe.
+    std::thread::spawn(move || for _ in lines {});
+    ServeChild { child, addr }
+}
+
+/// One request over a fresh connection: `(status, body)`. `Err` when
+/// the server died mid-exchange (expected around the crash).
+fn try_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, Vec<u8>)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    http::write_request(&mut writer, method, path, body.as_bytes(), false)?;
+    let (status, _, body) = http::read_response(&mut reader)
+        .map_err(|e| std::io::Error::other(format!("{e:#}")))?;
+    Ok((status, body))
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
+    try_request(addr, method, path, body).expect("request")
+}
+
+fn body_str(body: &[u8]) -> &str {
+    std::str::from_utf8(body).expect("utf-8 body")
+}
+
+fn scrape(addr: SocketAddr, series: &str) -> u64 {
+    let (status, body) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let text = body_str(&body);
+    text.lines()
+        .find(|l| l.split_whitespace().next() == Some(series))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no series '{series}' in:\n{text}"))
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("snax-crash-smoke-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn aborted_job_is_journaled_recovered_and_resumed_to_an_identical_report() {
+    let dir = scratch("abort");
+    let journal = dir.join("journal");
+    let sim = r#"{"net":"fig6a","cluster":"fig6d"}"#;
+    let detached = r#"{"net":"fig6a","cluster":"fig6d","detach":true}"#;
+
+    // Round 1: job seq 0 aborts the whole process mid-run.
+    let mut server = spawn_serve(&journal, &["--fault", "crash:1.0,first:1"]);
+    let addr = server.addr;
+    // The worker can abort before the 202 flushes (an Err here is
+    // fine); the journal, not the response, is the durability
+    // contract.
+    if let Ok((status, body)) = try_request(addr, "POST", "/simulate", detached) {
+        assert_eq!(status, 202, "{}", body_str(&body));
+        let v = json::parse(body_str(&body)).unwrap();
+        assert_eq!(v.get("job").unwrap().as_u64(), Some(1));
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let status = loop {
+        if let Some(status) = server.child.try_wait().expect("try_wait") {
+            break status;
+        }
+        assert!(Instant::now() < deadline, "crash fault never killed the server");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(!status.success(), "server must die by abort, got {status}");
+    drop(server); // the child is already reaped; the Drop kill is a no-op
+    assert!(journal.exists(), "journal must survive the abort");
+
+    // Round 2: restart on the same journal, WITHOUT the fault (the
+    // injector's sequence counter restarts at 0, so re-arming the
+    // fault would crash-loop the auto-resumed job forever).
+    let server = spawn_serve(&journal, &[]);
+    let addr = server.addr;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let report = loop {
+        let (status, body) = request(addr, "GET", "/jobs/1", "");
+        assert_eq!(status, 200, "recovered job must be pollable: {}", body_str(&body));
+        let v = json::parse(body_str(&body)).unwrap();
+        match v.get("state").unwrap().as_str().unwrap() {
+            "done" => {
+                let text = body_str(&body);
+                let report = text
+                    .strip_prefix("{\"id\":1,\"report\":")
+                    .and_then(|t| t.strip_suffix(",\"state\":\"done\"}"))
+                    .unwrap_or_else(|| panic!("unexpected status body shape: {text}"));
+                break report.to_string();
+            }
+            "failed" | "cancelled" => panic!("recovery failed: {}", body_str(&body)),
+            _ => std::thread::sleep(Duration::from_millis(20)),
+        }
+        assert!(Instant::now() < deadline, "auto-resume never finished");
+    };
+
+    // The resumed report matches a fresh synchronous run byte for byte.
+    let (status, golden) = request(addr, "POST", "/simulate", sim);
+    assert_eq!(status, 200, "{}", body_str(&golden));
+    assert_eq!(report.as_bytes(), &golden[..], "recovered report diverged from golden");
+
+    assert!(scrape(addr, "snax_jobs_resumed_total") >= 1, "recovery must count as a resume");
+    assert!(scrape(addr, "snax_journal_bytes") > 0);
+
+    // New submissions never reuse the recovered id.
+    let (status, body) = request(addr, "POST", "/simulate", detached);
+    assert_eq!(status, 202, "{}", body_str(&body));
+    let v = json::parse(body_str(&body)).unwrap();
+    assert!(v.get("job").unwrap().as_u64().unwrap() > 1);
+
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restart_reinstates_terminal_jobs_without_rerunning_them() {
+    let dir = scratch("terminal");
+    let journal = dir.join("journal");
+    let detached = r#"{"net":"fig6a","cluster":"fig6d","detach":true}"#;
+
+    // Round 1: a clean detached run lands in the journal as done.
+    let server = spawn_serve(&journal, &[]);
+    let addr = server.addr;
+    let (status, body) = request(addr, "POST", "/simulate", detached);
+    assert_eq!(status, 202, "{}", body_str(&body));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let first = loop {
+        let (status, body) = request(addr, "GET", "/jobs/1", "");
+        assert_eq!(status, 200);
+        if body_str(&body).contains("\"state\":\"done\"") {
+            break body;
+        }
+        assert!(Instant::now() < deadline, "job never finished");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let executed_before_restart = scrape(addr, "snax_jobs_executed_total");
+    drop(server);
+
+    // Round 2: the finished job is pollable with the same body, and
+    // replay did not re-execute it.
+    let server = spawn_serve(&journal, &[]);
+    let addr = server.addr;
+    let (status, body) = request(addr, "GET", "/jobs/1", "");
+    assert_eq!(status, 200, "{}", body_str(&body));
+    assert_eq!(body, first, "replayed terminal job must serve the same body");
+    assert!(executed_before_restart >= 1);
+    assert_eq!(
+        scrape(addr, "snax_jobs_executed_total"),
+        0,
+        "replaying a terminal job must not re-execute it"
+    );
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -6,12 +6,13 @@
 //! full fig6/fig8/table1 workload matrix — the contract that lets
 //! `snax serve` run the fast engine without a fidelity caveat.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use snax::compiler::{compile, compile_system, CompileOptions, PartitionStrategy};
 use snax::config::{ClusterConfig, SystemConfig};
 use snax::models;
-use snax::sim::{Cluster, PhaseCache, SimMode, SimReport, System};
+use snax::sim::{checkpoint, Cluster, CheckpointPlan, PhaseCache, SimMode, SimReport, System};
 
 fn assert_reports_equal(tag: &str, leg: &str, exact: &SimReport, got: &SimReport) {
     assert_eq!(
@@ -207,6 +208,180 @@ fn system_of_one_pipelined_and_table1() {
     let seq = CompileOptions::sequential();
     assert_system_of_one_identity("sys1 resnet8@fig6d", &cfg, &seq, "resnet8");
     assert_system_of_one_identity("sys1 dae@fig6d", &cfg, &seq, "dae");
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint/resume byte identity (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Fresh scratch directory for checkpoint files.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "snax-eqv-{}-{}",
+        tag.replace(['/', '@', '(', ')', ' '], "_"),
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Sorted checkpoint files written into `dir` (zero-padded cycle in the
+/// filename makes lexicographic order = cycle order).
+fn checkpoint_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "ckpt"))
+        .collect();
+    files.sort();
+    files
+}
+
+/// First / middle / last without duplicates — resuming from the
+/// earliest, a mid-run, and the final pre-completion cut covers the
+/// whole progress range without re-running per file.
+fn sample_points(files: &[PathBuf]) -> Vec<&PathBuf> {
+    let mut picks = vec![0, files.len() / 2, files.len() - 1];
+    picks.dedup();
+    picks.into_iter().map(|i| &files[i]).collect()
+}
+
+/// The §12 contract for one cluster workload: (1) a checkpointing run
+/// produces the same report as a plain one (observation changes
+/// nothing); (2) resuming from *any* written checkpoint reproduces the
+/// uninterrupted report **byte-identically** — full `SimReport`
+/// `PartialEq`, counters + functional memory — in both engines, memo on
+/// and off.
+fn assert_checkpoint_resume_identity(
+    tag: &str,
+    cfg: &ClusterConfig,
+    opts: &CompileOptions,
+    net: &str,
+) {
+    let graph = models::graph_by_name(net).unwrap();
+    let cp = compile(&graph, cfg, opts).unwrap();
+    let legs: [(SimMode, bool); 3] = [
+        (SimMode::Exact, true),
+        (SimMode::Event, true),
+        (SimMode::Event, false),
+    ];
+    for (mode, memo) in legs {
+        let leg = format!("{mode:?}/memo={memo}");
+        let baseline =
+            Cluster::new(cfg).with_memo(memo).run_mode(&cp.program, mode).unwrap();
+        let dir = scratch(&format!("{tag}-{leg}").replace('=', "-"));
+        let ckpt_run = Cluster::new(cfg)
+            .with_memo(memo)
+            .with_checkpoint(CheckpointPlan::new(&dir).every(2))
+            .run_mode(&cp.program, mode)
+            .unwrap();
+        assert_reports_equal(tag, &format!("{leg} checkpointing-run"), &baseline, &ckpt_run);
+        let files = checkpoint_files(&dir);
+        assert!(!files.is_empty(), "{tag}/{leg}: no checkpoints written");
+        for file in sample_points(&files) {
+            let ck = checkpoint::load(file).unwrap();
+            let resumed = Cluster::new(cfg)
+                .with_memo(memo)
+                .resume_mode(&cp.program, mode, &ck)
+                .unwrap();
+            assert_reports_equal(
+                tag,
+                &format!("{leg} resume@cycle{}", ck.cycle()),
+                &baseline,
+                &resumed,
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn checkpoint_resume_fig8_matrix() {
+    let seq = CompileOptions::sequential();
+    for preset in ["fig6b", "fig6c", "fig6d"] {
+        let cfg = ClusterConfig::preset(preset).unwrap();
+        assert_checkpoint_resume_identity(&format!("ckpt fig6a@{preset}"), &cfg, &seq, "fig6a");
+    }
+}
+
+#[test]
+fn checkpoint_resume_pipelined_and_table1() {
+    let cfg = ClusterConfig::fig6d();
+    assert_checkpoint_resume_identity(
+        "ckpt fig6a@fig6d/pipelined(8)",
+        &cfg,
+        &CompileOptions::pipelined().with_inferences(8),
+        "fig6a",
+    );
+    let seq = CompileOptions::sequential();
+    assert_checkpoint_resume_identity("ckpt resnet8@fig6d", &cfg, &seq, "resnet8");
+    assert_checkpoint_resume_identity("ckpt dae@fig6d", &cfg, &seq, "dae");
+}
+
+/// Same contract at SoC scope: resuming a multi-cluster system
+/// checkpoint (per-cluster engines + shared ext-mem + NoC ledger +
+/// system barriers) reproduces the uninterrupted `SystemReport`.
+fn assert_system_checkpoint_resume_identity(tag: &str, sys: &SystemConfig, net: &str) {
+    let graph = models::graph_by_name(net).unwrap();
+    let strategy = PartitionStrategy::default_for(sys);
+    let cs = compile_system(&graph, sys, &CompileOptions::sequential(), strategy).unwrap();
+    for mode in [SimMode::Event, SimMode::Exact] {
+        let baseline = System::new(sys).run_mode(&cs.programs(), mode).unwrap();
+        let dir = scratch(&format!("{tag}-{mode:?}"));
+        let ckpt_run = System::new(sys)
+            .with_checkpoint(CheckpointPlan::new(&dir).every(2))
+            .run_mode(&cs.programs(), mode)
+            .unwrap();
+        assert_eq!(baseline, ckpt_run, "{tag}/{mode:?}: checkpointing changed the run");
+        let files = checkpoint_files(&dir);
+        assert!(!files.is_empty(), "{tag}/{mode:?}: no checkpoints written");
+        for file in sample_points(&files) {
+            let ck = checkpoint::load(file).unwrap();
+            let resumed = System::new(sys).resume_mode(&cs.programs(), mode, &ck).unwrap();
+            assert_eq!(
+                baseline,
+                resumed,
+                "{tag}/{mode:?}: resume@cycle{} diverged",
+                ck.cycle()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn checkpoint_resume_soc2_and_soc4() {
+    for preset in ["soc2", "soc4"] {
+        let sys = SystemConfig::preset(preset).unwrap();
+        assert_system_checkpoint_resume_identity(&format!("ckpt fig6a@{preset}"), &sys, "fig6a");
+    }
+}
+
+/// A cluster checkpoint must refuse to resume on the wrong target: a
+/// different program/config fingerprint is an error, not silent
+/// corruption; a system checkpoint cannot resume through `Cluster`.
+#[test]
+fn checkpoint_rejects_mismatched_targets() {
+    let seq = CompileOptions::sequential();
+    let cfg = ClusterConfig::fig6d();
+    let graph = models::fig6a_graph();
+    let cp = compile(&graph, &cfg, &seq).unwrap();
+    let dir = scratch("mismatch");
+    Cluster::new(&cfg)
+        .with_checkpoint(CheckpointPlan::new(&dir).every(2))
+        .run(&cp.program)
+        .unwrap();
+    let files = checkpoint_files(&dir);
+    let ck = checkpoint::load(&files[0]).unwrap();
+    // Different program (dae) on the same cluster: fingerprint mismatch.
+    let other = compile(&models::dae_graph(), &cfg, &seq).unwrap();
+    assert!(Cluster::new(&cfg).resume(&other.program, &ck).is_err());
+    // Different cluster config: fingerprint mismatch again.
+    let small = ClusterConfig::fig6b();
+    let cp_small = compile(&graph, &small, &seq).unwrap();
+    assert!(Cluster::new(&small).resume(&cp_small.program, &ck).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Sweep-shaped reuse: several (net, cluster) jobs sharing one phase

@@ -686,14 +686,17 @@ fn prop_sweep_bodies_identical_across_thread_counts() {
         let body = format!("{{\"jobs\":[{}]}}", jobs.join(","));
         let mut bodies: Vec<Vec<u8>> = Vec::new();
         for workers in [1usize, 2, 4] {
-            let st = Arc::new(AppState::new(&ServerConfig {
-                port: 0,
-                workers,
-                cache_capacity: 8,
-                queue_depth: 16,
-                phase_cache_capacity: 256,
-                ..ServerConfig::default()
-            }));
+            let st = Arc::new(
+                AppState::new(&ServerConfig {
+                    port: 0,
+                    workers,
+                    cache_capacity: 8,
+                    queue_depth: 16,
+                    phase_cache_capacity: 256,
+                    ..ServerConfig::default()
+                })
+                .unwrap(),
+            );
             let req = Request {
                 method: "POST".into(),
                 path: "/sweep".into(),
@@ -773,6 +776,122 @@ fn prop_cluster_config_toml_roundtrip() {
             .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e:#}\n{text}"));
         assert_eq!(back, cfg, "seed {seed}: round-trip diverged\n{text}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint/resume (DESIGN.md §12): on randomized workloads, (a)
+// attaching a checkpoint plan never perturbs the report, and (b)
+// resuming from a randomly chosen barrier-boundary checkpoint yields a
+// report byte-identical to the uninterrupted run — both engines, memo
+// on and off.
+// ---------------------------------------------------------------------------
+
+use snax::sim::{checkpoint, CheckpointPlan};
+use std::path::{Path, PathBuf};
+
+fn ckpt_scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("snax-prop-ckpt-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn ckpt_files(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("ckpt"))
+                .collect()
+        })
+        .unwrap_or_default();
+    v.sort();
+    v
+}
+
+/// Runs the three engine legs for one workload; returns how many legs
+/// actually exercised a resume (workloads without barriers write no
+/// checkpoints, which is legitimate).
+fn assert_resume_identity(
+    tag: &str,
+    cfg: &ClusterConfig,
+    program: &Program,
+    r: &mut Rng,
+) -> usize {
+    let mut covered = 0;
+    for (mode, memo) in
+        [(SimMode::Exact, true), (SimMode::Event, true), (SimMode::Event, false)]
+    {
+        let baseline = Cluster::new(cfg)
+            .with_memo(memo)
+            .run_mode(program, mode)
+            .unwrap();
+        let dir = ckpt_scratch(&format!("{tag}-{mode:?}-memo{memo}"));
+        let ckpt_run = Cluster::new(cfg)
+            .with_memo(memo)
+            .with_checkpoint(CheckpointPlan::new(&dir).every(r.range(1, 3)))
+            .run_mode(program, mode)
+            .unwrap();
+        assert_eq!(
+            baseline, ckpt_run,
+            "{tag} {mode:?} memo={memo}: checkpointing perturbed the report"
+        );
+        let files = ckpt_files(&dir);
+        if !files.is_empty() {
+            let pick = &files[(r.next() % files.len() as u64) as usize];
+            let ck = checkpoint::load(pick).unwrap();
+            let resumed = Cluster::new(cfg)
+                .with_memo(memo)
+                .resume_mode(program, mode, &ck)
+                .unwrap();
+            assert_eq!(
+                baseline,
+                resumed,
+                "{tag} {mode:?} memo={memo}: resume from cycle {} diverged",
+                ck.cycle()
+            );
+            covered += 1;
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    covered
+}
+
+#[test]
+fn prop_checkpoint_resume_identical_on_random_programs() {
+    let mut covered = 0;
+    for seed in 0..10u64 {
+        let (cfg, program) = random_raw_case(seed);
+        let mut r = Rng::new(17_000 + seed);
+        covered += assert_resume_identity(&format!("raw{seed}"), &cfg, &program, &mut r);
+    }
+    // Most raw cases emit barriers; make sure the suite is not
+    // silently skipping every resume leg.
+    assert!(covered >= 6, "too few legs wrote a checkpoint: {covered}");
+}
+
+#[test]
+fn prop_checkpoint_resume_identical_on_compiled_graphs() {
+    let mut covered = 0;
+    for seed in 0..6u64 {
+        let mut r = Rng::new(13_000 + seed);
+        let g = random_graph(&mut r);
+        let cfg = ClusterConfig::preset(["fig6b", "fig6c", "fig6d"][(seed % 3) as usize]).unwrap();
+        let opts = if r.chance(35) && cfg.accelerators.len() > 1 {
+            CompileOptions::pipelined().with_inferences(3)
+        } else {
+            CompileOptions::sequential()
+        };
+        let Ok(cp) = compile(&g, &cfg, &opts) else {
+            continue; // legitimately too big for the preset
+        };
+        covered +=
+            assert_resume_identity(&format!("graph{seed}"), &cfg, &cp.program, &mut r);
+    }
+    // Compiled graphs always barrier between layers, so every
+    // non-skipped case must resume on all three legs.
+    assert!(covered >= 3, "too few legs wrote a checkpoint: {covered}");
 }
 
 #[test]
