@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke chaos-smoke crash-smoke loadgen-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
+.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke chaos-smoke crash-smoke fleet-smoke loadgen-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -64,11 +64,23 @@ chaos-smoke:
 crash-smoke:
 	cargo test -q --test crash_recovery
 
+# Fleet smoke (DESIGN.md §13): spawn real binaries as a consistent-hash
+# fleet and assert the sharing contract — remote cache hits are
+# byte-identical, a SIGKILL'd peer causes zero non-2xx on the
+# survivors, a restarted peer is probed back into service, and an
+# injected partition degrades to local-only with single-node bytes.
+fleet-smoke:
+	cargo test -q --test fleet
+
 # Closed-loop load generator against a loopback server: retrying
 # clients honoring Retry-After; rewrites BENCH_serve_loadgen.json and
 # (with the floor flag) enforces rust/benches/serve_loadgen_floor.json.
+# The --peers leg runs the same closed loop against a two-node fleet,
+# rewriting BENCH_serve_fleet.json (remote-hit rate, shed rate) floored
+# by rust/benches/serve_fleet_floor.json.
 loadgen-smoke:
 	SNAX_BENCH_ENFORCE_FLOOR=1 cargo run --release --example serve_loadgen
+	SNAX_BENCH_ENFORCE_FLOOR=1 cargo run --release --example serve_loadgen -- --peers
 
 # Cycle-accounting profiler smoke (mirrors the CI profile step): run
 # `snax profile` on the single-cluster and multi-cluster shapes and

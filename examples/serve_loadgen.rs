@@ -22,7 +22,14 @@
 //! PRs; with `SNAX_BENCH_ENFORCE_FLOOR=1` the run fails when it drops
 //! below `rust/benches/serve_loadgen_floor.json`.
 //!
-//! Run: `cargo run --release --example serve_loadgen [-- --clients 8 --requests 16]`
+//! With `--peers` the scenario becomes a two-node fleet (DESIGN.md
+//! §13): two in-process servers on reserved fixed ports share their
+//! body caches over the consistent-hash ring, clients alternate nodes,
+//! and the run reports the remote-hit rate alongside the latency
+//! percentiles — written to `BENCH_serve_fleet.json` and floored by
+//! `rust/benches/serve_fleet_floor.json`.
+//!
+//! Run: `cargo run --release --example serve_loadgen [-- --clients 8 --requests 16 --peers]`
 
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -144,6 +151,7 @@ fn round2(x: f64) -> f64 {
 fn main() -> Result<()> {
     let mut clients = 8usize;
     let mut requests = 16usize;
+    let mut fleet = false;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
     while i < args.len() {
@@ -156,15 +164,46 @@ fn main() -> Result<()> {
                 requests = args.get(i + 1).context("--requests needs a value")?.parse()?;
                 i += 2;
             }
-            other => anyhow::bail!("unknown flag '{other}' (--clients N, --requests N)"),
+            "--peers" => {
+                fleet = true;
+                i += 1;
+            }
+            other => anyhow::bail!(
+                "unknown flag '{other}' (--clients N, --requests N, --peers)"
+            ),
         }
     }
 
-    let server = Server::start(ServerConfig { port: 0, ..Default::default() })?;
-    let addr = server.addr();
+    // Fleet mode: reserve two fixed ports (the ring needs stable member
+    // ids before either node is up), then start both nodes pointing at
+    // each other. Single-node mode is the pre-fleet scenario unchanged.
+    let mut servers = Vec::new();
+    if fleet {
+        let listeners: Vec<std::net::TcpListener> = (0..2)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("reserving a port"))
+            .collect();
+        let ports: Vec<u16> =
+            listeners.iter().map(|l| l.local_addr().unwrap().port()).collect();
+        drop(listeners);
+        for i in 0..2 {
+            servers.push(Server::start(ServerConfig {
+                port: ports[i],
+                peers: vec![format!("127.0.0.1:{}", ports[1 - i])],
+                ..Default::default()
+            })?);
+        }
+    } else {
+        servers.push(Server::start(ServerConfig { port: 0, ..Default::default() })?);
+    }
+    let addrs: Vec<std::net::SocketAddr> = servers.iter().map(|s| s.addr()).collect();
     println!(
-        "serve_loadgen: {clients} clients x {requests} requests -> http://{addr} ({} workers)",
-        server.state().server_cfg.workers
+        "serve_loadgen: {clients} clients x {requests} requests -> {} ({} workers)",
+        addrs
+            .iter()
+            .map(|a| format!("http://{a}"))
+            .collect::<Vec<_>>()
+            .join(" + "),
+        servers[0].state().server_cfg.workers
     );
 
     // Three distinct compilations; everything after the first touch of
@@ -182,6 +221,9 @@ fn main() -> Result<()> {
         .map(|c| {
             let tally = tally.clone();
             let latencies_us = latencies_us.clone();
+            // Clients alternate nodes, so in fleet mode every payload
+            // is computed on one node and served remotely on the other.
+            let addr = addrs[c % addrs.len()];
             std::thread::spawn(move || {
                 let Ok(mut conn) = Conn::connect(addr) else {
                     tally.failed.fetch_add(requests as u64, Ordering::Relaxed);
@@ -211,22 +253,29 @@ fn main() -> Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
 
-    // Scrape the service's own metrics for the cache + shed story.
-    let mut conn = Conn::connect(addr)?;
-    let (_status, _headers, body) = conn
-        .request("GET", "/metrics", b"")
-        .map_err(|e| anyhow::anyhow!("metrics scrape failed: {e}"))?;
-    let text = String::from_utf8_lossy(&body);
+    // Scrape every node's metrics for the cache + shed story (fleet
+    // counters sum across nodes).
+    let mut texts = Vec::new();
+    for &addr in &addrs {
+        let mut conn = Conn::connect(addr)?;
+        let (_status, _headers, body) = conn
+            .request("GET", "/metrics", b"")
+            .map_err(|e| anyhow::anyhow!("metrics scrape failed: {e}"))?;
+        texts.push(String::from_utf8_lossy(&body).into_owned());
+    }
     let scrape = |name: &str| -> f64 {
-        text.lines()
-            .find(|l| l.split_whitespace().next() == Some(name))
-            .and_then(|l| l.split_whitespace().last())
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(0.0)
+        texts
+            .iter()
+            .flat_map(|t| t.lines())
+            .filter(|l| l.split_whitespace().next() == Some(name))
+            .filter_map(|l| l.split_whitespace().last())
+            .filter_map(|v| v.parse::<f64>().ok())
+            .sum()
     };
     let hits = scrape("snax_cache_hits_total");
     let misses = scrape("snax_cache_misses_total");
     let coalesced = scrape("snax_coalesced_total");
+    let remote_hits = scrape("snax_cache_remote_hits_total");
     let lookups = hits + misses;
 
     let total = (clients * requests) as u64;
@@ -242,6 +291,7 @@ fn main() -> Result<()> {
     let throughput_rps = ok as f64 / dt.max(1e-9);
     let shed_rate = shed as f64 / attempts.max(1) as f64;
     let success_rate = ok as f64 / total.max(1) as f64;
+    let remote_hit_rate = remote_hits / ok.max(1) as f64;
 
     println!(
         "{ok}/{total} ok ({failed} failed) in {dt:.2}s -> {throughput_rps:.1} req/s; \
@@ -256,9 +306,16 @@ fn main() -> Result<()> {
         "program cache: {hits:.0} hits / {misses:.0} misses ({:.0}% hit rate)",
         if lookups > 0.0 { 100.0 * hits / lookups } else { 0.0 }
     );
+    if fleet {
+        println!(
+            "fleet: {remote_hits:.0} remote hits ({:.0}% of ok responses)",
+            100.0 * remote_hit_rate
+        );
+    }
 
-    let doc = Value::object([
-        ("bench", Value::from("serve_loadgen")),
+    let mut fields = vec![
+        ("bench", Value::from(if fleet { "serve_fleet" } else { "serve_loadgen" })),
+        ("nodes", Value::from(addrs.len() as u64)),
         ("clients", Value::from(clients as u64)),
         ("requests_per_client", Value::from(requests as u64)),
         ("ok", Value::from(ok)),
@@ -274,24 +331,36 @@ fn main() -> Result<()> {
         ("p99_ms", Value::from(round2(p99_ms))),
         ("cache_hits", Value::from(hits)),
         ("cache_misses", Value::from(misses)),
-    ]);
-    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_loadgen.json");
-    std::fs::write(out, doc.to_json()).expect("writing BENCH_serve_loadgen.json");
+    ];
+    if fleet {
+        fields.push(("remote_hits", Value::from(remote_hits)));
+        fields.push(("remote_hit_rate", Value::from(round2(remote_hit_rate))));
+    }
+    let doc = Value::object(fields);
+    let out_name = if fleet { "BENCH_serve_fleet.json" } else { "BENCH_serve_loadgen.json" };
+    let out = format!("{}/../{}", env!("CARGO_MANIFEST_DIR"), out_name);
+    std::fs::write(&out, doc.to_json()).unwrap_or_else(|e| panic!("writing {out_name}: {e}"));
     println!("wrote {out}");
 
-    server.shutdown();
+    for server in servers {
+        server.shutdown();
+    }
 
     // Regression floor (CI): deliberately conservative — the closed
     // loop must land every request, and throughput must not collapse.
+    // The fleet leg additionally floors the remote-hit rate so the
+    // shared cache can't silently stop sharing.
     let enforce = std::env::var("SNAX_BENCH_ENFORCE_FLOOR")
         .map(|v| v == "1")
         .unwrap_or(false);
     if enforce {
-        let floor_path =
-            concat!(env!("CARGO_MANIFEST_DIR"), "/benches/serve_loadgen_floor.json");
-        let floor_raw =
-            std::fs::read_to_string(floor_path).expect("reading serve_loadgen_floor.json");
-        let floor = parse(&floor_raw).expect("parsing serve_loadgen_floor.json");
+        let floor_name =
+            if fleet { "serve_fleet_floor.json" } else { "serve_loadgen_floor.json" };
+        let floor_path = format!("{}/benches/{}", env!("CARGO_MANIFEST_DIR"), floor_name);
+        let floor_raw = std::fs::read_to_string(&floor_path)
+            .unwrap_or_else(|e| panic!("reading {floor_name}: {e}"));
+        let floor =
+            parse(&floor_raw).unwrap_or_else(|e| panic!("parsing {floor_name}: {e:#}"));
         let want_success = floor
             .get("success_rate_floor")
             .and_then(|v| v.as_f64())
@@ -308,6 +377,16 @@ fn main() -> Result<()> {
             throughput_rps >= want_rps,
             "throughput {throughput_rps:.2} req/s below floor {want_rps:.2}"
         );
+        if fleet {
+            let want_remote = floor
+                .get("remote_hit_rate_floor")
+                .and_then(|v| v.as_f64())
+                .expect("remote_hit_rate_floor missing");
+            anyhow::ensure!(
+                remote_hit_rate >= want_remote,
+                "remote-hit rate {remote_hit_rate:.2} below floor {want_remote:.2}"
+            );
+        }
         println!(
             "floor check ok: success {success_rate:.2} >= {want_success:.2}, \
              {throughput_rps:.2} >= {want_rps:.2} req/s"
@@ -315,7 +394,13 @@ fn main() -> Result<()> {
     }
 
     anyhow::ensure!(failed == 0, "{failed} requests failed after retries");
-    anyhow::ensure!(hits > 0.0, "expected cache hits under repeat load");
+    if fleet {
+        // Remote hits replace most program-cache hits: once a body is in
+        // the shared store, repeat requests never reach the simulator.
+        anyhow::ensure!(remote_hits > 0.0, "expected remote cache hits across the fleet");
+    } else {
+        anyhow::ensure!(hits > 0.0, "expected cache hits under repeat load");
+    }
     println!("serve_loadgen OK");
     Ok(())
 }

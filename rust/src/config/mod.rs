@@ -628,6 +628,19 @@ pub struct ServerConfig {
     /// Maximum finished detached jobs retained for polling before FIFO
     /// eviction.
     pub max_jobs: usize,
+    /// Journal size threshold in bytes: after a terminal append pushes
+    /// the live journal past this, it is compacted (evicted jobs'
+    /// records dropped, survivors' history folded; DESIGN.md §12).
+    pub journal_max_bytes: u64,
+    /// Fleet peers as `host:port` addresses (`--peers a:1,b:2`). Empty
+    /// = single-node mode, bit-for-bit the pre-fleet behavior. The
+    /// list may include this node's own id — handy for a symmetric
+    /// config shared by every node — which is filtered out.
+    pub peers: Vec<String>,
+    /// This node's identity on the consistent-hash ring. Must
+    /// byte-equal the address other nodes list in their `--peers`.
+    /// `None` defaults to `127.0.0.1:{port}` (requires a fixed port).
+    pub node_id: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -650,6 +663,9 @@ impl Default for ServerConfig {
             journal_path: None,
             job_ttl_ms: 0,
             max_jobs: 1024,
+            journal_max_bytes: 64 * 1024 * 1024,
+            peers: Vec::new(),
+            node_id: None,
         }
     }
 }
@@ -675,7 +691,41 @@ impl ServerConfig {
         if self.max_jobs == 0 {
             bail!("max_jobs must be at least 1");
         }
+        if self.journal_max_bytes == 0 {
+            bail!("journal_max_bytes must be at least 1");
+        }
+        for peer in &self.peers {
+            let port = peer
+                .rsplit_once(':')
+                .map(|(host, port)| (host, port.parse::<u16>()))
+                .filter(|(host, _)| !host.is_empty());
+            match port {
+                Some((_, Ok(_))) => {}
+                _ => bail!("peer '{peer}' is not a host:port address"),
+            }
+        }
+        if !self.peers.is_empty() && self.node_id.is_none() && self.port == 0 {
+            bail!(
+                "fleet mode on an ephemeral port needs an explicit node_id \
+                 (peers cannot guess which port the OS assigned)"
+            );
+        }
+        if let Some(id) = &self.node_id {
+            let ok = id
+                .rsplit_once(':')
+                .filter(|(host, _)| !host.is_empty())
+                .is_some_and(|(_, port)| port.parse::<u16>().is_ok());
+            if !ok {
+                bail!("node_id '{id}' is not a host:port address");
+            }
+        }
         Ok(())
+    }
+
+    /// This node's ring identity: the explicit `node_id`, else the
+    /// loopback address the server will bind.
+    pub fn fleet_node_id(&self) -> String {
+        self.node_id.clone().unwrap_or_else(|| format!("127.0.0.1:{}", self.port))
     }
 }
 
@@ -932,6 +982,46 @@ mod tests {
             ..ServerConfig::default()
         };
         ok.validate().unwrap();
+    }
+
+    #[test]
+    fn server_config_fleet_validation() {
+        let ok = ServerConfig {
+            peers: vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()],
+            ..ServerConfig::default()
+        };
+        ok.validate().unwrap();
+        assert_eq!(ok.fleet_node_id(), "127.0.0.1:8080");
+        let named = ServerConfig {
+            peers: vec!["127.0.0.1:9001".into()],
+            node_id: Some("127.0.0.1:9000".into()),
+            port: 0,
+            ..ServerConfig::default()
+        };
+        named.validate().unwrap();
+        assert_eq!(named.fleet_node_id(), "127.0.0.1:9000");
+        // Ephemeral port without an explicit identity: peers could
+        // never address this node.
+        let bad = ServerConfig {
+            peers: vec!["127.0.0.1:9001".into()],
+            port: 0,
+            ..ServerConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        for peer in ["no-port", "host:", ":9001", "host:pony"] {
+            let bad = ServerConfig {
+                peers: vec![peer.to_string()],
+                ..ServerConfig::default()
+            };
+            assert!(bad.validate().is_err(), "peer '{peer}' must be rejected");
+        }
+        let bad = ServerConfig {
+            node_id: Some("nope".into()),
+            ..ServerConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ServerConfig { journal_max_bytes: 0, ..ServerConfig::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

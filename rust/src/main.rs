@@ -754,6 +754,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(spec) = args.flags.get("fault") {
         cfg.fault_spec = Some(spec.clone());
     }
+    if args.has("journal-max-bytes") {
+        cfg.journal_max_bytes = args
+            .get("journal-max-bytes", "0")
+            .parse()
+            .context("bad --journal-max-bytes")?;
+    }
+    if let Some(peers) = args.flags.get("peers") {
+        cfg.peers = peers
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    if let Some(id) = args.flags.get("node-id") {
+        cfg.node_id = Some(id.clone());
+    }
     snax::server::run_blocking(cfg)
 }
 
@@ -891,7 +908,12 @@ fn help() {
          \u{20}            [--journal path] (crash-safe job journal: jobs survive\n\
          \u{20}             restarts, interrupted ones auto-resume from checkpoints)\n\
          \u{20}            [--job-ttl-ms T] [--max-jobs N] (finished-job retention)\n\
-         \u{20}            [--fault spec] (chaos injection, e.g. crash:1.0,first:1)\n\
+         \u{20}            [--journal-max-bytes B] (compact the journal past this size)\n\
+         \u{20}            [--fault spec] (chaos injection, e.g. crash:1.0,first:1;\n\
+         \u{20}             peer_drop:p / peer_slow:p,peer_slow_ms:n partition peers)\n\
+         \u{20}            [--peers host:port,...] [--node-id host:port] (fleet mode:\n\
+         \u{20}             consistent-hash shared caches with peer health and\n\
+         \u{20}             local-only degradation; see DESIGN.md §13)\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6, §11)\n\
          \u{20}  profile   --net fig6a --cluster fig6d [--system soc2|soc4]\n\
          \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\

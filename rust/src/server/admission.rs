@@ -37,8 +37,9 @@ const FAIL_RATE: f64 = 0.5;
 /// Queue occupancy (len/depth) at which admission sheds and records a
 /// pressure failure — the breaker opens *before* the queue is full.
 const QUEUE_WATERMARK: f64 = 0.85;
-/// Probe requests admitted while half-open.
-const HALF_OPEN_PROBES: u32 = 2;
+/// Probe requests admitted while half-open. Shared with the per-peer
+/// health trackers in [`super::peer`], which run the same machine.
+pub(crate) const HALF_OPEN_PROBES: u32 = 2;
 /// Cap on tracked quota clients (drop-all reset beyond it; a client
 /// that was pruned just starts from a full bucket).
 const MAX_QUOTA_CLIENTS: usize = 4096;
@@ -72,17 +73,30 @@ impl Shed {
     }
 }
 
+/// The three-state breaker. One instance guards the whole service
+/// (here); [`super::peer`] runs one per fleet peer so a flapping peer
+/// is ejected from the ring and lazily probed back — same transitions,
+/// different blast radius.
 #[derive(Clone, Copy)]
-enum BreakerState {
+pub(crate) enum BreakerState {
     Closed,
     Open { until: Instant },
     HalfOpen { inflight: u32, successes: u32 },
 }
 
-struct BreakerInner {
-    state: BreakerState,
+pub(crate) struct BreakerInner {
+    pub(crate) state: BreakerState,
     /// Recent outcomes (true = success), newest at the back.
-    window: VecDeque<bool>,
+    pub(crate) window: VecDeque<bool>,
+}
+
+impl BreakerInner {
+    pub(crate) fn new() -> Self {
+        BreakerInner {
+            state: BreakerState::Closed,
+            window: VecDeque::with_capacity(WINDOW),
+        }
+    }
 }
 
 struct Bucket {
@@ -110,12 +124,7 @@ impl Admission {
     pub fn new(cfg: &ServerConfig) -> Self {
         let quota = (cfg.quota_rps > 0)
             .then(|| Mutex::new(QuotaInner { buckets: HashMap::new() }));
-        let breaker = cfg.breaker.then(|| {
-            Mutex::new(BreakerInner {
-                state: BreakerState::Closed,
-                window: VecDeque::with_capacity(WINDOW),
-            })
-        });
+        let breaker = cfg.breaker.then(|| Mutex::new(BreakerInner::new()));
         let burst = if cfg.quota_burst > 0 {
             cfg.quota_burst
         } else {
@@ -302,7 +311,7 @@ impl Admission {
 
 /// Lazy state advance: an expired open window becomes half-open the
 /// next time anyone looks.
-fn advance(b: &mut BreakerInner, now: Instant) {
+pub(crate) fn advance(b: &mut BreakerInner, now: Instant) {
     if let BreakerState::Open { until } = b.state {
         if now >= until {
             b.state = BreakerState::HalfOpen { inflight: 0, successes: 0 };
@@ -311,8 +320,14 @@ fn advance(b: &mut BreakerInner, now: Instant) {
 }
 
 /// Record a closed-state outcome and trip to open when the window says
-/// the service is failing.
-fn push_outcome(b: &mut BreakerInner, success: bool, now: Instant, open_for: Duration) {
+/// the subject (the service here, one peer in [`super::peer`]) is
+/// failing.
+pub(crate) fn push_outcome(
+    b: &mut BreakerInner,
+    success: bool,
+    now: Instant,
+    open_for: Duration,
+) {
     if b.window.len() >= WINDOW {
         b.window.pop_front();
     }

@@ -84,6 +84,7 @@ use super::fault::FaultPlan;
 use super::flight::{mix_key, Flight, Join, Outcome};
 use super::http::{Request, Response};
 use super::journal::{self, Journal, Record, TerminalState};
+use super::peer::{self, Fleet};
 use super::pool::{SubmitError, WorkerPool};
 
 // ---------------------------------------------------------------------------
@@ -615,6 +616,14 @@ impl JobTable {
             .count()
     }
 
+    /// Ids currently retained in the table — the live set a journal
+    /// compaction must preserve (anything already evicted here can no
+    /// longer be polled, so its records are dead weight).
+    fn ids(&self) -> std::collections::HashSet<u64> {
+        let inner = self.inner.lock().unwrap();
+        inner.map.keys().copied().collect()
+    }
+
     /// Total jobs currently retained in the table (the
     /// `snax_jobs_retained` gauge). TTL eviction runs first so the
     /// gauge never reports entries a poll could no longer see.
@@ -650,6 +659,10 @@ pub struct AppState {
     /// Deterministic fault injection (tests/chaos only; `None` in
     /// production).
     fault: Option<FaultPlan>,
+    /// Fleet coordinator (`--peers`): consistent-hash shared body
+    /// caches with peer health tracking (DESIGN.md §13). `None` =
+    /// single-node, bit-for-bit the pre-fleet behaviour.
+    pub fleet: Option<Fleet>,
     /// Monotonic job sequence — the fault plan's deterministic key.
     job_seq: AtomicU64,
     /// Panics caught at the API layer (sync `run_on_pool` + detached
@@ -701,6 +714,16 @@ impl AppState {
             }
             None => (None, Vec::new(), None),
         };
+        let fault = FaultPlan::from_config(cfg);
+        // Fleet mode only when peers are configured: the coordinator
+        // shares the fault plan so chaos runs can partition peers with
+        // the same determinism as local faults.
+        let fleet = match cfg.peers.is_empty() {
+            true => None,
+            false => {
+                Some(Fleet::new(cfg, fault.clone()).context("initialising fleet mode")?)
+            }
+        };
         Ok(Self {
             server_cfg: cfg.clone(),
             cache: ProgramCache::new(cfg.cache_capacity),
@@ -711,7 +734,8 @@ impl AppState {
             metrics: Metrics::default(),
             flight: Flight::default(),
             admission: Admission::new(cfg),
-            fault: FaultPlan::from_config(cfg),
+            fault,
+            fleet,
             job_seq: AtomicU64::new(0),
             job_panics: AtomicU64::new(0),
             jobs: JobTable::new(cfg.job_ttl_ms, cfg.max_jobs),
@@ -776,12 +800,22 @@ impl AppState {
     }
 
     /// Append a terminal record, fsync'd: once the client can observe
-    /// the terminal state, a restart must reproduce it.
+    /// the terminal state, a restart must reproduce it. Terminal
+    /// appends are also the compaction trigger: they are the only
+    /// records that make earlier history redundant, so checking the
+    /// size cap anywhere else would never reclaim anything new.
     fn journal_terminal(&self, id: u64, state: TerminalState, body: &str) {
         if let Some(j) = &self.journal {
             let rec = Record::Terminal { id, state, body: body.to_string() };
             if let Err(e) = j.append_sync(&rec) {
                 eprintln!("journal append failed: {e:#}");
+            }
+            if j.len_bytes() > self.server_cfg.journal_max_bytes {
+                let keep = self.jobs.ids();
+                match j.compact(|id| keep.contains(&id)) {
+                    Ok(bytes) => eprintln!("journal compacted to {bytes} bytes"),
+                    Err(e) => eprintln!("journal compaction failed: {e:#}"),
+                }
             }
         }
     }
@@ -828,6 +862,12 @@ pub fn route(state: &Arc<AppState>, req: &Request) -> Response {
         }
         ("DELETE", path) if path.starts_with("/jobs/") => {
             (Endpoint::Jobs, handle_job_cancel(state, path))
+        }
+        ("GET", path) if path.starts_with("/internal/cache/") => {
+            (Endpoint::Other, handle_internal_cache_get(state, path))
+        }
+        ("PUT", path) if path.starts_with("/internal/cache/") => {
+            (Endpoint::Other, handle_internal_cache_put(state, req, path))
         }
         ("GET", "/") => (Endpoint::Other, index()),
         (_, "/compile" | "/simulate" | "/sweep" | "/healthz" | "/metrics") => {
@@ -953,6 +993,105 @@ fn simulate_flight_key(req: &SimRequest) -> u64 {
     ])
 }
 
+// ---------------------------------------------------------------------------
+// Fleet mode: shared body store (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Body kinds shareable across the fleet. Each kind tags its keys, so
+/// `/simulate`, `/sweep`, and `/compile` bodies can never collide even
+/// for the same underlying workload fingerprint.
+const FLEET_KINDS: [&str; 3] = ["sim", "sweep", "compile"];
+
+/// Fleet body key for one simulate job: like [`simulate_flight_key`]
+/// but **without** the deadline. A deadline changes a request's
+/// lifetime, never its success bytes, and only successful bodies enter
+/// the shared store — folding it in would shatter one shareable body
+/// across per-deadline keys.
+fn fleet_sim_key(req: &SimRequest) -> u64 {
+    let base = match &req.system {
+        Some((sys, strategy)) => system_key(&req.graph, sys, &req.opts, *strategy),
+        None => program_key(&req.graph, &req.cfg, &req.opts),
+    };
+    mix_key(&[
+        0x66_73_69_6d, // "fsim" tag
+        base,
+        req.mode as u64,
+        u64::from(req.profile),
+    ])
+}
+
+/// Fleet body key for a whole sweep: the ordered job-key list (a sweep
+/// *is* its job list), again deadline-free.
+fn fleet_sweep_key(jobs: &[SimRequest]) -> u64 {
+    let mut words = vec![0x66_73_77_70, jobs.len() as u64]; // "fswp" tag
+    words.extend(jobs.iter().map(fleet_sim_key));
+    mix_key(&words)
+}
+
+/// Fleet body key for a `/compile` response, derived from the
+/// program/system cache fingerprint.
+fn fleet_compile_key(cache_key: u64, system: bool) -> u64 {
+    mix_key(&[0x66_63_6d_70, cache_key, u64::from(system)]) // "fcmp" tag
+}
+
+/// Parse `/internal/cache/:kind/:key` into its validated parts. The
+/// kind is redundant with the key's embedded tag but keeps peer traffic
+/// self-describing in logs and rules out cross-kind probes.
+fn parse_internal_cache_path(path: &str) -> Option<(&'static str, u64)> {
+    let rest = path.strip_prefix("/internal/cache/")?;
+    let (kind, key_hex) = rest.split_once('/')?;
+    let kind = FLEET_KINDS.iter().find(|k| **k == kind)?;
+    let key = u64::from_str_radix(key_hex, 16).ok()?;
+    Some((kind, key))
+}
+
+/// `GET /internal/cache/:kind/:key` — peer-to-peer body fetch. Serves
+/// **only** this node's local shard and never simulates, so a ring of
+/// nodes can never recurse through each other; a miss is a clean 404
+/// the caller treats as healthy. The body travels length-prefixed and
+/// FNV-checksummed ([`peer::encode_frame`]), the journal's framing
+/// discipline applied to the wire.
+fn handle_internal_cache_get(state: &Arc<AppState>, path: &str) -> Response {
+    let Some(fleet) = &state.fleet else {
+        return Response::json(404, err_body("fleet mode is not enabled"));
+    };
+    let Some((_kind, key)) = parse_internal_cache_path(path) else {
+        return Response::json(400, err_body("bad internal cache path"));
+    };
+    match fleet.local_get(key) {
+        Some(body) => Response {
+            status: 200,
+            content_type: "application/octet-stream",
+            headers: Vec::new(),
+            body: peer::encode_frame(body.as_bytes()),
+        },
+        None => Response::json(404, err_body("cache miss")),
+    }
+}
+
+/// `PUT /internal/cache/:kind/:key` — a peer writing a freshly computed
+/// body back to its owner. Corrupt frames are rejected (400) rather
+/// than stored: a poisoned shared cache would propagate one node's
+/// corruption fleet-wide.
+fn handle_internal_cache_put(state: &Arc<AppState>, req: &Request, path: &str) -> Response {
+    let Some(fleet) = &state.fleet else {
+        return Response::json(404, err_body("fleet mode is not enabled"));
+    };
+    let Some((_kind, key)) = parse_internal_cache_path(path) else {
+        return Response::json(400, err_body("bad internal cache path"));
+    };
+    let payload = match peer::decode_frame(&req.body) {
+        Ok(p) => p,
+        Err(e) => return Response::json(400, err_body(&format!("bad frame: {e:#}"))),
+    };
+    let body = match String::from_utf8(payload) {
+        Ok(b) => b,
+        Err(_) => return Response::json(400, err_body("frame payload is not UTF-8")),
+    };
+    fleet.local_put(key, body);
+    Response::json(200, "{\"stored\":true}".to_string())
+}
+
 /// Render a shared flight outcome back into a per-connection response.
 fn outcome_response(out: &Outcome, coalesced: bool) -> Response {
     let mut resp = Response::json(out.status, out.body.clone());
@@ -1051,6 +1190,12 @@ fn handle_compile(state: &Arc<AppState>, req: &Request) -> Response {
 
 fn compile_cluster_response(state: &Arc<AppState>, parsed: SimRequest) -> Response {
     let key = program_key(&parsed.graph, &parsed.cfg, &parsed.opts);
+    let fleet_key = fleet_compile_key(key, false);
+    if let Some(fleet) = &state.fleet {
+        if let Some(body) = fleet.lookup("compile", fleet_key) {
+            return Response::json(200, body).with_header("X-Snax-Cache", "remote");
+        }
+    }
     let cluster_name = parsed.cfg.name.clone();
     let worker_state = state.clone();
     let result = match run_on_pool(state, move || {
@@ -1063,27 +1208,37 @@ fn compile_cluster_response(state: &Arc<AppState>, parsed: SimRequest) -> Respon
     };
     match result {
         Ok((cp, hit)) => {
-            let body = Value::object([
-                ("key", Value::from(format!("{key:016x}"))),
-                ("cached", Value::from(hit)),
-                ("net", Value::from(cp.graph.name.as_str())),
-                ("cluster", Value::from(cluster_name)),
-                ("mode", Value::from(mode_name(&cp.options))),
-                ("inferences", Value::from(cp.options.n_inferences)),
-                ("n_instrs", Value::from(cp.program.n_instrs())),
-                ("n_cores", Value::from(cp.program.n_cores())),
-                (
-                    "layers",
-                    Value::Arr(
-                        cp.program
-                            .layer_names
-                            .iter()
-                            .map(|n| Value::from(n.as_str()))
-                            .collect(),
+            let render = |cached: bool| {
+                Value::object([
+                    ("key", Value::from(format!("{key:016x}"))),
+                    ("cached", Value::from(cached)),
+                    ("net", Value::from(cp.graph.name.as_str())),
+                    ("cluster", Value::from(cluster_name.as_str())),
+                    ("mode", Value::from(mode_name(&cp.options))),
+                    ("inferences", Value::from(cp.options.n_inferences)),
+                    ("n_instrs", Value::from(cp.program.n_instrs())),
+                    ("n_cores", Value::from(cp.program.n_cores())),
+                    (
+                        "layers",
+                        Value::Arr(
+                            cp.program
+                                .layer_names
+                                .iter()
+                                .map(|n| Value::from(n.as_str()))
+                                .collect(),
+                        ),
                     ),
-                ),
-            ]);
-            Response::json(200, body.to_json())
+                ])
+                .to_json()
+            };
+            if let Some(fleet) = &state.fleet {
+                // The stored copy is the canonical `"cached":true`
+                // rendering: on every other node the artifact *is*
+                // cached, while the local response keeps its honest
+                // first-compile miss marker.
+                fleet.store("compile", fleet_key, &render(true));
+            }
+            Response::json(200, render(hit))
                 .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" })
         }
         Err(e) => Response::json(422, err_body(&format!("compilation failed: {e:#}"))),
@@ -1095,6 +1250,12 @@ fn compile_cluster_response(state: &Arc<AppState>, parsed: SimRequest) -> Respon
 fn compile_system_response(state: &Arc<AppState>, parsed: SimRequest) -> Response {
     let (sys, strategy) = parsed.system.clone().expect("system request");
     let key = system_key(&parsed.graph, &sys, &parsed.opts, strategy);
+    let fleet_key = fleet_compile_key(key, true);
+    if let Some(fleet) = &state.fleet {
+        if let Some(body) = fleet.lookup("compile", fleet_key) {
+            return Response::json(200, body).with_header("X-Snax-Cache", "remote");
+        }
+    }
     let worker_state = state.clone();
     let result = match run_on_pool(state, move || {
         worker_state.sys_cache.get_or_insert_with(key, || {
@@ -1106,29 +1267,37 @@ fn compile_system_response(state: &Arc<AppState>, parsed: SimRequest) -> Respons
     };
     match result {
         Ok((cs, hit)) => {
-            let parts: Vec<Value> = cs
-                .parts
-                .iter()
-                .zip(&cs.plan.parts)
-                .map(|(cp, pp)| {
-                    Value::object([
-                        ("cluster", Value::from(pp.cluster.as_str())),
-                        ("graph", Value::from(cp.graph.name.as_str())),
-                        ("n_instrs", Value::from(cp.program.n_instrs())),
-                        ("n_inferences", Value::from(pp.n_inferences)),
-                        ("ext_base", Value::from(pp.ext_base)),
-                    ])
-                })
-                .collect();
-            let body = Value::object([
-                ("key", Value::from(format!("{key:016x}"))),
-                ("cached", Value::from(hit)),
-                ("net", Value::from(cs.net.as_str())),
-                ("system", Value::from(cs.system.name.as_str())),
-                ("partition", Value::from(cs.plan.strategy.name())),
-                ("parts", Value::Arr(parts)),
-            ]);
-            Response::json(200, body.to_json())
+            let render = |cached: bool| {
+                let parts: Vec<Value> = cs
+                    .parts
+                    .iter()
+                    .zip(&cs.plan.parts)
+                    .map(|(cp, pp)| {
+                        Value::object([
+                            ("cluster", Value::from(pp.cluster.as_str())),
+                            ("graph", Value::from(cp.graph.name.as_str())),
+                            ("n_instrs", Value::from(cp.program.n_instrs())),
+                            ("n_inferences", Value::from(pp.n_inferences)),
+                            ("ext_base", Value::from(pp.ext_base)),
+                        ])
+                    })
+                    .collect();
+                Value::object([
+                    ("key", Value::from(format!("{key:016x}"))),
+                    ("cached", Value::from(cached)),
+                    ("net", Value::from(cs.net.as_str())),
+                    ("system", Value::from(cs.system.name.as_str())),
+                    ("partition", Value::from(cs.plan.strategy.name())),
+                    ("parts", Value::Arr(parts)),
+                ])
+                .to_json()
+            };
+            if let Some(fleet) = &state.fleet {
+                // Canonical `"cached":true` copy, as for the cluster
+                // variant: remotely the artifact is always a hit.
+                fleet.store("compile", fleet_key, &render(true));
+            }
+            Response::json(200, render(hit))
                 .with_header("X-Snax-Cache", if hit { "hit" } else { "miss" })
         }
         Err(e) => Response::json(422, err_body(&format!("compilation failed: {e:#}"))),
@@ -1170,6 +1339,16 @@ fn run_simulate_leader(
     parsed: SimRequest,
     deadline: Option<Duration>,
 ) -> Outcome {
+    // Fleet mode: a body another node already computed is the
+    // byte-identical answer here (reports render deterministically —
+    // module doc). Any peer failure inside `lookup` degrades to a plain
+    // miss, so this path can only ever *add* hits, never failures.
+    let fleet_key = state.fleet.as_ref().map(|_| fleet_sim_key(&parsed));
+    if let (Some(fleet), Some(fkey)) = (&state.fleet, fleet_key) {
+        if let Some(body) = fleet.lookup("sim", fkey) {
+            return Outcome { status: 200, body, cache: Some("remote") };
+        }
+    }
     let token = deadline.map(|d| Arc::new(CancelToken::with_deadline(d)));
     // A sink rides along whenever a deadline does, so an expired run
     // can report how far it got.
@@ -1182,11 +1361,12 @@ fn run_simulate_leader(
         simulate_once(&worker_state, &parsed, None, job_sink, job_token, seq, None)
     });
     match result {
-        Ok(Ok((body, hit))) => Outcome {
-            status: 200,
-            body,
-            cache: Some(if hit { "hit" } else { "miss" }),
-        },
+        Ok(Ok((body, hit))) => {
+            if let (Some(fleet), Some(fkey)) = (&state.fleet, fleet_key) {
+                fleet.store("sim", fkey, &body);
+            }
+            Outcome { status: 200, body, cache: Some(if hit { "hit" } else { "miss" }) }
+        }
         // Compile failures are client-input errors (bad net/config
         // combination) — same 422 as POST /compile; only simulator
         // failures are server-side 500s (or 504s when the deadline cut
@@ -1570,6 +1750,15 @@ fn run_sweep_leader(
     jobs: Vec<SimRequest>,
     deadline: Option<Duration>,
 ) -> Outcome {
+    // Fleet lookup before fan-out, exactly as for /simulate. Only
+    // complete 200 envelopes enter the shared store, so a remote hit is
+    // always a full, successful sweep body.
+    let fleet_key = state.fleet.as_ref().map(|_| fleet_sweep_key(&jobs));
+    if let (Some(fleet), Some(fkey)) = (&state.fleet, fleet_key) {
+        if let Some(body) = fleet.lookup("sweep", fkey) {
+            return Outcome { status: 200, body, cache: Some("remote") };
+        }
+    }
     let token = deadline.map(|d| Arc::new(CancelToken::with_deadline(d)));
     // Sequence numbers are reserved as a block so every sweep job gets
     // its own deterministic fault roll.
@@ -1620,7 +1809,15 @@ fn run_sweep_leader(
         Some(t) if t.fired() == Some(CancelReason::Deadline) => 504,
         _ => 200,
     };
-    Outcome { status, body: render_sweep_body(&fragments), cache: None }
+    let body = render_sweep_body(&fragments);
+    // A 504 envelope carries whatever partial set beat the deadline —
+    // never shareable; a faster node would have finished more of it.
+    if status == 200 {
+        if let (Some(fleet), Some(fkey)) = (&state.fleet, fleet_key) {
+            fleet.store("sweep", fkey, &body);
+        }
+    }
+    Outcome { status, body, cache: None }
 }
 
 /// Assemble the sweep envelope from per-job JSON fragments (rendered
@@ -1780,6 +1977,16 @@ pub fn recover_jobs(state: &Arc<AppState>) {
         summaries.len(),
         orphans.len()
     );
+    // Startup compaction: replay already proved which ids survive, so
+    // the rewritten journal keeps exactly their records (including the
+    // interrupted markers fsync'd just above) and drops dead history.
+    if let Some(j) = &state.journal {
+        let keep: std::collections::HashSet<u64> = summaries.keys().copied().collect();
+        match j.compact(|id| keep.contains(&id)) {
+            Ok(bytes) => eprintln!("journal compacted to {bytes} bytes"),
+            Err(e) => eprintln!("journal compaction failed: {e:#}"),
+        }
+    }
     for id in orphans {
         match start_resume(state, id) {
             Ok(()) => eprintln!("job {id}: auto-resuming from journal"),
@@ -1789,7 +1996,7 @@ pub fn recover_jobs(state: &Arc<AppState>) {
 }
 
 fn handle_healthz(state: &Arc<AppState>) -> Response {
-    let body = Value::object([
+    let mut fields = vec![
         ("status", Value::from(if state.shutting_down() { "draining" } else { "ok" })),
         ("uptime_ms", Value::from(state.started.elapsed().as_millis() as u64)),
         ("workers", Value::from(state.server_cfg.workers)),
@@ -1799,8 +2006,30 @@ fn handle_healthz(state: &Arc<AppState>) -> Response {
         ("cache_entries", Value::from(state.cache.len())),
         ("jobs_executed", Value::from(state.pool.executed())),
         ("breaker", Value::from(state.admission.breaker_state_name())),
-    ]);
-    Response::json(200, body.to_json())
+        (
+            "journal_bytes",
+            Value::from(state.journal.as_ref().map(|j| j.len_bytes()).unwrap_or(0)),
+        ),
+    ];
+    if let Some(fleet) = &state.fleet {
+        let peers: Vec<Value> = fleet
+            .peers()
+            .iter()
+            .map(|p| {
+                Value::object([
+                    ("addr", Value::from(p.addr())),
+                    ("state", Value::from(p.state_name())),
+                    (
+                        "last_probe_ms",
+                        p.last_probe_ms().map(Value::from).unwrap_or(Value::Null),
+                    ),
+                ])
+            })
+            .collect();
+        fields.push(("node", Value::from(fleet.node_id())));
+        fields.push(("peers", Value::Arr(peers)));
+    }
+    Response::json(200, Value::object(fields).to_json())
 }
 
 fn handle_metrics(state: &Arc<AppState>) -> Response {
@@ -1994,6 +2223,44 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
     let _ = writeln!(out, "# TYPE snax_requests_shed_total counter");
     for (reason, value) in state.admission.shed_counts() {
         let _ = writeln!(out, "snax_requests_shed_total{{reason=\"{reason}\"}} {value}");
+    }
+    // Fleet families render only in fleet mode, keeping single-node
+    // scrapes byte-compatible with the pre-fleet server.
+    if let Some(fleet) = &state.fleet {
+        let _ = writeln!(
+            out,
+            "# HELP snax_cache_remote_hits_total Bodies served from the fleet shared cache (peer fetch or local shard)."
+        );
+        let _ = writeln!(out, "# TYPE snax_cache_remote_hits_total counter");
+        let _ = writeln!(out, "snax_cache_remote_hits_total {}", fleet.remote_hits());
+        let _ = writeln!(
+            out,
+            "# HELP snax_ring_owned_keys Shared-cache bodies held in this node's local shard."
+        );
+        let _ = writeln!(out, "# TYPE snax_ring_owned_keys gauge");
+        let _ = writeln!(out, "snax_ring_owned_keys {}", fleet.owned_keys());
+        let _ = writeln!(
+            out,
+            "# HELP snax_peer_state Peer health state (0=closed/healthy, 1=open/ejected, 2=half-open/probing)."
+        );
+        let _ = writeln!(out, "# TYPE snax_peer_state gauge");
+        for p in fleet.peers() {
+            let _ = writeln!(out, "snax_peer_state{{peer=\"{}\"}} {}", p.addr(), p.state());
+        }
+        let _ = writeln!(
+            out,
+            "# HELP snax_peer_requests_total Peer cache RPCs, by peer and outcome."
+        );
+        let _ = writeln!(out, "# TYPE snax_peer_requests_total counter");
+        for p in fleet.peers() {
+            for (outcome, n) in p.counts() {
+                let _ = writeln!(
+                    out,
+                    "snax_peer_requests_total{{peer=\"{}\",outcome=\"{outcome}\"}} {n}",
+                    p.addr()
+                );
+            }
+        }
     }
     Response::text(200, &out)
 }
@@ -2559,6 +2826,137 @@ mod tests {
         assert!(text.contains("snax_requests_shed_total{reason=\"breaker\"} 0"), "{text}");
         assert!(text.contains("snax_requests_shed_total{reason=\"quota\"} 0"), "{text}");
         st.pool.shutdown();
+    }
+
+    /// A two-member ring whose peer address is never listened on: every
+    /// peer RPC fails fast, exercising the degrade-to-local paths
+    /// without real sockets.
+    fn fleet_cfg() -> ServerConfig {
+        ServerConfig {
+            node_id: Some("127.0.0.1:9400".to_string()),
+            peers: vec!["127.0.0.1:9401".to_string()],
+            ..test_cfg()
+        }
+    }
+
+    fn fleet_state() -> Arc<AppState> {
+        Arc::new(AppState::new(&fleet_cfg()).unwrap())
+    }
+
+    fn put(path: &str, body: Vec<u8>) -> Request {
+        Request {
+            method: "PUT".into(),
+            path: path.into(),
+            query: String::new(),
+            headers: vec![],
+            body,
+        }
+    }
+
+    #[test]
+    fn internal_cache_endpoints_roundtrip_and_reject_corruption() {
+        let st = fleet_state();
+        assert_eq!(route(&st, &get("/internal/cache/nope/00000000000000aa")).status, 400);
+        assert_eq!(route(&st, &get("/internal/cache/sim/xyz")).status, 400);
+        assert_eq!(route(&st, &get("/internal/cache/sim/00000000000000aa")).status, 404);
+        let body = r#"{"total_cycles":42}"#;
+        let framed = peer::encode_frame(body.as_bytes());
+        let resp = route(&st, &put("/internal/cache/sim/00000000000000aa", framed.clone()));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let got = route(&st, &get("/internal/cache/sim/00000000000000aa"));
+        assert_eq!(got.status, 200);
+        assert_eq!(peer::decode_frame(&got.body).unwrap(), body.as_bytes());
+        // A corrupt frame is rejected, not stored.
+        let mut corrupt = framed;
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0xff;
+        let rej = route(&st, &put("/internal/cache/sim/00000000000000bb", corrupt));
+        assert_eq!(rej.status, 400);
+        assert_eq!(route(&st, &get("/internal/cache/sim/00000000000000bb")).status, 404);
+        st.pool.shutdown();
+        // Single-node servers do not expose the peer protocol at all.
+        let single = state();
+        assert_eq!(route(&single, &get("/internal/cache/sim/00000000000000aa")).status, 404);
+        single.pool.shutdown();
+    }
+
+    #[test]
+    fn healthz_reports_fleet_peers_and_journal_bytes() {
+        let st = state();
+        let resp = route(&st, &get("/healthz"));
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("journal_bytes").unwrap().as_u64(), Some(0));
+        assert!(v.get("peers").is_none(), "single-node healthz must not list peers");
+        st.pool.shutdown();
+        let fst = fleet_state();
+        let resp = route(&fst, &get("/healthz"));
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("node").unwrap().as_str(), Some("127.0.0.1:9400"));
+        let peers = v.get("peers").unwrap().as_arr().unwrap();
+        assert_eq!(peers.len(), 1);
+        assert_eq!(peers[0].get("addr").unwrap().as_str(), Some("127.0.0.1:9401"));
+        assert_eq!(peers[0].get("state").unwrap().as_str(), Some("closed"));
+        fst.pool.shutdown();
+    }
+
+    #[test]
+    fn fleet_simulate_degrades_to_local_and_serves_remote_hits() {
+        let st = fleet_state();
+        let body = r#"{"net":"fig6a","cluster":"fig6c"}"#;
+        let first = route(&st, &post("/simulate", body));
+        assert_eq!(first.status, 200, "{}", String::from_utf8_lossy(&first.body));
+        let second = route(&st, &post("/simulate", body));
+        assert_eq!(second.status, 200);
+        assert_eq!(first.body, second.body, "shared-store bodies must be byte-identical");
+        let cache = |r: &Response| {
+            r.headers.iter().find(|(k, _)| k == "X-Snax-Cache").map(|(_, v)| v.clone())
+        };
+        assert_eq!(cache(&second).as_deref(), Some("remote"));
+        assert!(st.fleet.as_ref().unwrap().remote_hits() >= 1);
+        // /compile remote hits serve the canonical `"cached":true` copy.
+        let c1 = route(&st, &post("/compile", r#"{"net":"fig6a"}"#));
+        assert_eq!(c1.status, 200);
+        assert_eq!(cache(&c1).as_deref(), Some("miss"));
+        let c2 = route(&st, &post("/compile", r#"{"net":"fig6a"}"#));
+        assert_eq!(c2.status, 200);
+        assert_eq!(cache(&c2).as_deref(), Some("remote"));
+        let v = json::parse(std::str::from_utf8(&c2.body).unwrap()).unwrap();
+        assert_eq!(v.get("cached").unwrap().as_bool(), Some(true));
+        // /sweep envelopes share the same store.
+        let sweep = r#"{"jobs":[{"net":"fig6a","cluster":"fig6b"}]}"#;
+        let s1 = route(&st, &post("/sweep", sweep));
+        assert_eq!(s1.status, 200, "{}", String::from_utf8_lossy(&s1.body));
+        let s2 = route(&st, &post("/sweep", sweep));
+        assert_eq!(s2.status, 200);
+        assert_eq!(s1.body, s2.body);
+        assert_eq!(cache(&s2).as_deref(), Some("remote"));
+        st.pool.shutdown();
+    }
+
+    #[test]
+    fn fleet_metrics_pass_prometheus_text_lint() {
+        let st = fleet_state();
+        let sim = route(&st, &post("/simulate", r#"{"net":"fig6a","cluster":"fig6c"}"#));
+        assert_eq!(sim.status, 200, "{}", String::from_utf8_lossy(&sim.body));
+        let resp = route(&st, &get("/metrics"));
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body).unwrap();
+        lint_prometheus(&text);
+        assert!(text.contains("# TYPE snax_cache_remote_hits_total counter"), "{text}");
+        assert!(text.contains("# TYPE snax_ring_owned_keys gauge"), "{text}");
+        assert!(text.contains("snax_peer_state{peer=\"127.0.0.1:9401\"}"), "{text}");
+        assert!(
+            text.contains("snax_peer_requests_total{peer=\"127.0.0.1:9401\",outcome=\"error\"}"),
+            "{text}"
+        );
+        st.pool.shutdown();
+        // Single-node scrapes stay byte-compatible: no fleet families.
+        let single = state();
+        let text = String::from_utf8(route(&single, &get("/metrics")).body).unwrap();
+        assert!(!text.contains("snax_peer_state"), "{text}");
+        assert!(!text.contains("snax_cache_remote_hits_total"), "{text}");
+        assert!(!text.contains("snax_ring_owned_keys"), "{text}");
+        single.pool.shutdown();
     }
 
     fn delete(path: &str) -> Request {

@@ -26,6 +26,11 @@ use crate::compiler::{CompiledProgram, CompiledSystem};
 pub type ProgramCache = ShardedCache<CompiledProgram>;
 /// Whole-system compilations, keyed by [`crate::compiler::system_key`].
 pub type SystemCache = ShardedCache<CompiledSystem>;
+/// Rendered response bodies shared across a fleet, keyed by the fleet
+/// body key (kind tag + content fingerprint; DESIGN.md §13). Reports
+/// render deterministically, so a body computed on any node is the
+/// byte-identical answer on every node.
+pub type BodyCache = ShardedCache<String>;
 
 struct Entry<T> {
     program: Arc<T>,

@@ -27,19 +27,22 @@ use crate::sim::CancelToken;
 /// Slices for interruptible sleeps, so cancellation and shutdown are
 /// observed promptly even while a fault is holding a worker.
 const SLEEP_SLICE: Duration = Duration::from_millis(5);
-/// Hard cap on an injected stall: a stall without a deadline must not
-/// wedge a test run (or CI) forever.
-const STALL_CAP: Duration = Duration::from_secs(2);
+/// Default cap on an injected stall: a stall without a deadline must
+/// not wedge a test run (or CI) forever. Overridable via `stall_ms:n`
+/// so chaos legs can hold a stall well under their timeout budget.
+const DEFAULT_STALL_MS: u64 = 2_000;
 
 /// Parsed fault-injection spec, e.g.
-/// `"panic:0.2,slow:0.1,slow_ms:50,stall:0.05,first:8"`.
+/// `"panic:0.2,slow:0.1,slow_ms:50,stall:0.05,first:8"` (job faults) or
+/// `"peer_drop:0.5,peer_slow:0.2,peer_slow_ms:100"` (fleet peer-path
+/// faults — the partition-injecting chaos legs of DESIGN.md §13).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
     /// Probability a job panics.
     pub panic_p: f64,
     /// Probability a job sleeps `slow_ms` before running.
     pub slow_p: f64,
-    /// Probability a job stalls until cancelled (capped at [`STALL_CAP`]).
+    /// Probability a job stalls until cancelled (capped at `stall_ms`).
     pub stall_p: f64,
     /// Probability the whole process aborts at the job boundary. An
     /// abort is a *process* death, not a machine crash: data already
@@ -48,6 +51,16 @@ pub struct FaultPlan {
     pub crash_p: f64,
     /// Sleep duration for `slow` faults.
     pub slow_ms: u64,
+    /// Cap on an injected stall (`stall_ms:n`; default 2000).
+    pub stall_ms: u64,
+    /// Probability a peer RPC attempt is dropped before touching the
+    /// network — a partition as seen from this node's peer client.
+    pub peer_drop_p: f64,
+    /// Probability a peer RPC attempt is delayed `peer_slow_ms` first —
+    /// a degraded link that exercises the peer client's timeouts.
+    pub peer_slow_p: f64,
+    /// Delay for `peer_slow` faults.
+    pub peer_slow_ms: u64,
     /// Only inject into the first N jobs (`0` = no limit). Lets a test
     /// poison a known prefix and then assert recovery.
     pub first_n: u64,
@@ -55,7 +68,8 @@ pub struct FaultPlan {
 
 impl FaultPlan {
     /// Parse a comma-separated `key:value` spec. Keys: `panic`, `slow`,
-    /// `stall`, `crash` (probabilities in `0..=1`), `slow_ms`, `first`.
+    /// `stall`, `crash`, `peer_drop`, `peer_slow` (probabilities in
+    /// `0..=1`), `slow_ms`, `stall_ms`, `peer_slow_ms`, `first`.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan {
             panic_p: 0.0,
@@ -63,6 +77,10 @@ impl FaultPlan {
             stall_p: 0.0,
             crash_p: 0.0,
             slow_ms: 50,
+            stall_ms: DEFAULT_STALL_MS,
+            peer_drop_p: 0.0,
+            peer_slow_p: 0.0,
+            peer_slow_ms: 50,
             first_n: 0,
         };
         for part in spec.split(',') {
@@ -78,11 +96,25 @@ impl FaultPlan {
                 "slow" => plan.slow_p = probability(value)?,
                 "stall" => plan.stall_p = probability(value)?,
                 "crash" => plan.crash_p = probability(value)?,
+                "peer_drop" => plan.peer_drop_p = probability(value)?,
+                "peer_slow" => plan.peer_slow_p = probability(value)?,
                 "slow_ms" => {
                     plan.slow_ms = value
                         .trim()
                         .parse()
                         .with_context(|| format!("bad slow_ms '{value}'"))?
+                }
+                "stall_ms" => {
+                    plan.stall_ms = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad stall_ms '{value}'"))?
+                }
+                "peer_slow_ms" => {
+                    plan.peer_slow_ms = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad peer_slow_ms '{value}'"))?
                 }
                 "first" => {
                     plan.first_n = value
@@ -111,7 +143,9 @@ impl FaultPlan {
         let active = plan.panic_p > 0.0
             || plan.slow_p > 0.0
             || plan.stall_p > 0.0
-            || plan.crash_p > 0.0;
+            || plan.crash_p > 0.0
+            || plan.peer_drop_p > 0.0
+            || plan.peer_slow_p > 0.0;
         active.then_some(plan)
     }
 
@@ -139,8 +173,24 @@ impl FaultPlan {
         if roll(seq, 3) < self.stall_p {
             // Stall until the cancel token fires (deadline or client
             // cancel), bounded by the safety cap.
-            interruptible_sleep(STALL_CAP, cancel);
+            interruptible_sleep(Duration::from_millis(self.stall_ms), cancel);
         }
+    }
+
+    /// Inject the planned peer-path fault (if any) for peer-RPC attempt
+    /// `seq`. Called by the fleet peer client before each network
+    /// attempt. Returns `true` when the attempt must be dropped (the
+    /// injected partition); a `peer_slow` fault has already slept by
+    /// the time this returns. Distinct salts (5, 6) keep the peer rolls
+    /// decorrelated from the job-fault rolls for the same sequence.
+    pub fn inject_peer(&self, seq: u64) -> bool {
+        if self.first_n > 0 && seq >= self.first_n {
+            return false;
+        }
+        if roll(seq, 6) < self.peer_slow_p {
+            std::thread::sleep(Duration::from_millis(self.peer_slow_ms));
+        }
+        roll(seq, 5) < self.peer_drop_p
     }
 }
 
@@ -185,15 +235,35 @@ mod tests {
 
     #[test]
     fn parses_full_spec() {
-        let plan =
-            FaultPlan::parse("panic:0.2, slow:0.1, stall:0.05, crash:0.01, slow_ms:75, first:8")
-                .unwrap();
+        let plan = FaultPlan::parse(
+            "panic:0.2, slow:0.1, stall:0.05, crash:0.01, slow_ms:75, stall_ms:250, \
+             peer_drop:0.3, peer_slow:0.4, peer_slow_ms:9, first:8",
+        )
+        .unwrap();
         assert_eq!(plan.panic_p, 0.2);
         assert_eq!(plan.slow_p, 0.1);
         assert_eq!(plan.stall_p, 0.05);
         assert_eq!(plan.crash_p, 0.01);
         assert_eq!(plan.slow_ms, 75);
+        assert_eq!(plan.stall_ms, 250);
+        assert_eq!(plan.peer_drop_p, 0.3);
+        assert_eq!(plan.peer_slow_p, 0.4);
+        assert_eq!(plan.peer_slow_ms, 9);
         assert_eq!(plan.first_n, 8);
+    }
+
+    #[test]
+    fn stall_cap_defaults_and_overrides() {
+        assert_eq!(FaultPlan::parse("stall:1.0").unwrap().stall_ms, DEFAULT_STALL_MS);
+        let plan = FaultPlan::parse("stall:1.0,stall_ms:40").unwrap();
+        assert_eq!(plan.stall_ms, 40);
+        let start = std::time::Instant::now();
+        plan.inject(0, None);
+        let held = start.elapsed();
+        assert!(
+            held >= Duration::from_millis(40) && held < Duration::from_millis(500),
+            "configured stall cap must bound the stall (held {held:?})"
+        );
     }
 
     #[test]
@@ -203,6 +273,25 @@ mod tests {
         assert!(FaultPlan::parse("panic:-0.1").is_err());
         assert!(FaultPlan::parse("warp:0.5").is_err());
         assert!(FaultPlan::parse("slow_ms:many").is_err());
+        assert!(FaultPlan::parse("stall_ms:short").is_err());
+        assert!(FaultPlan::parse("peer_drop:2.0").is_err());
+        assert!(FaultPlan::parse("peer_slow_ms:soon").is_err());
+    }
+
+    #[test]
+    fn peer_faults_are_deterministic_and_capped_by_first_n() {
+        let plan = FaultPlan::parse("peer_drop:1.0,first:2").unwrap();
+        assert!(plan.inject_peer(0), "seq 0 must drop under peer_drop:1.0");
+        assert!(plan.inject_peer(1));
+        assert!(!plan.inject_peer(2), "past first:2 no peer fault fires");
+        let quiet = FaultPlan::parse("panic:1.0").unwrap();
+        assert!(!quiet.inject_peer(0), "job faults must not leak into the peer path");
+        // A peer-only spec keeps the plan active through from_config.
+        let cfg = ServerConfig {
+            fault_spec: Some("peer_drop:0.5".into()),
+            ..ServerConfig::default()
+        };
+        assert!(FaultPlan::from_config(&cfg).is_some());
     }
 
     #[test]

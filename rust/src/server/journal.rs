@@ -157,6 +157,17 @@ fn checksum(payload: &[u8]) -> u64 {
     h.finish()
 }
 
+/// Frame one record: `[u32 LE len][u64 LE FNV-1a][payload]`. The same
+/// discipline frames fleet peer-protocol bodies (`server/peer.rs`).
+fn frame(rec: &Record) -> Vec<u8> {
+    let payload = rec.encode();
+    let mut framed = Vec::with_capacity(12 + payload.len());
+    framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    framed.extend_from_slice(&checksum(&payload).to_le_bytes());
+    framed.extend_from_slice(&payload);
+    framed
+}
+
 /// Decode framed records from `bytes`. Returns the records up to the
 /// first corrupt or truncated frame and the byte offset of the last
 /// good frame boundary — a torn tail is reported, never a panic.
@@ -237,19 +248,15 @@ impl Journal {
     }
 
     fn write_record(&self, rec: &Record, sync: bool) -> Result<()> {
-        let payload = rec.encode();
-        let mut frame = Vec::with_capacity(12 + payload.len());
-        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&checksum(&payload).to_le_bytes());
-        frame.extend_from_slice(&payload);
+        let framed = frame(rec);
         let mut file = self.file.lock().unwrap();
-        file.write_all(&frame)
+        file.write_all(&framed)
             .with_context(|| format!("appending to journal {}", self.path.display()))?;
         if sync {
             file.sync_data()
                 .with_context(|| format!("syncing journal {}", self.path.display()))?;
         }
-        self.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.bytes.fetch_add(framed.len() as u64, Ordering::Relaxed);
         Ok(())
     }
 
@@ -263,6 +270,77 @@ impl Journal {
     /// also survives power loss (the fsync policy boundary).
     pub fn append_sync(&self, rec: &Record) -> Result<()> {
         self.write_record(rec, true)
+    }
+
+    /// Compact the journal: fold the current record stream into per-job
+    /// summaries ([`replay`]), drop every job `keep` rejects (evicted
+    /// jobs whose history only wastes replay time), and rewrite the
+    /// survivors' *essential* records — one `Submitted`, the last
+    /// `Started`, every `Checkpointed`, the `Terminal` if any — to a
+    /// fresh file that is fsync'd and atomically renamed over the old
+    /// one. By construction replaying the compacted log yields exactly
+    /// the same [`JobRecovery`] map restricted to the kept ids (the
+    /// summary *is* the source of the rewritten records).
+    ///
+    /// Runs under the file lock, so concurrent appends serialize either
+    /// entirely before (and are folded in) or entirely after (and
+    /// extend the fresh log). Returns the compacted length in bytes.
+    pub fn compact(&self, keep: impl Fn(u64) -> bool) -> Result<u64> {
+        let mut file = self.file.lock().unwrap();
+        let mut bytes = Vec::new();
+        file.seek(SeekFrom::Start(0)).context("seeking journal start")?;
+        file.read_to_end(&mut bytes)
+            .with_context(|| format!("re-reading journal {}", self.path.display()))?;
+        let (records, _) = decode_all(&bytes);
+        let jobs = replay(&records);
+
+        let tmp = self.path.with_extension("compacting");
+        let mut out = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut len = 0u64;
+        for (id, job) in &jobs {
+            if !keep(*id) {
+                continue;
+            }
+            let mut essential = Vec::new();
+            if let Some(body) = &job.body {
+                essential.push(Record::Submitted { id: *id, body: body.clone() });
+            }
+            if let Some(seq) = job.seq {
+                essential.push(Record::Started { id: *id, seq });
+            }
+            for path in &job.checkpoints {
+                essential.push(Record::Checkpointed { id: *id, path: path.clone() });
+            }
+            if let Some((state, body)) = &job.terminal {
+                essential.push(Record::Terminal {
+                    id: *id,
+                    state: *state,
+                    body: body.clone(),
+                });
+            }
+            for rec in &essential {
+                let framed = frame(rec);
+                out.write_all(&framed)
+                    .with_context(|| format!("writing {}", tmp.display()))?;
+                len += framed.len() as u64;
+            }
+        }
+        out.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), self.path.display())
+        })?;
+        // Swap the handle to the fresh file so subsequent appends
+        // extend the compacted log, not the unlinked old inode.
+        let mut fresh = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening compacted {}", self.path.display()))?;
+        fresh.seek(SeekFrom::End(0)).context("seeking compacted journal end")?;
+        *file = fresh;
+        self.bytes.store(len, Ordering::Relaxed);
+        Ok(len)
     }
 }
 
@@ -415,6 +493,69 @@ mod tests {
         assert_eq!(j2.seq, Some(1));
         assert!(j2.terminal.is_none(), "job 2 was in flight — orphaned");
         assert_eq!(j2.checkpoints, vec!["ckpts/job2/b.ckpt".to_string()]);
+    }
+
+    #[test]
+    fn compaction_replays_to_the_same_recovery_map() {
+        let path = tmp("compact");
+        let (journal, _) = Journal::open(&path).unwrap();
+        // Redundant history: duplicate submissions, a resume cycle, and
+        // checkpoints — compaction must fold it without changing what
+        // replay sees.
+        let noisy = vec![
+            Record::Submitted { id: 1, body: r#"{"net":"fig6a"}"#.into() },
+            Record::Started { id: 1, seq: 0 },
+            Record::Checkpointed { id: 1, path: "ckpts/job1/a.ckpt".into() },
+            Record::Checkpointed { id: 1, path: "ckpts/job1/b.ckpt".into() },
+            Record::Terminal {
+                id: 1,
+                state: TerminalState::Interrupted,
+                body: "killed".into(),
+            },
+            Record::Started { id: 1, seq: 5 }, // resume reopens the job
+            Record::Terminal {
+                id: 1,
+                state: TerminalState::Done,
+                body: r#"{"total_cycles":42}"#.into(),
+            },
+            Record::Submitted { id: 2, body: r#"{"net":"dae"}"#.into() },
+            Record::Started { id: 2, seq: 1 },
+            Record::Submitted { id: 3, body: "{}".into() },
+            Record::Terminal { id: 3, state: TerminalState::Failed, body: "boom".into() },
+        ];
+        for rec in &noisy {
+            journal.append(rec).unwrap();
+        }
+        let before_bytes = journal.len_bytes();
+        let before_map = replay(&noisy);
+
+        let after_bytes = journal.compact(|_| true).unwrap();
+        assert!(after_bytes < before_bytes, "folding history must shrink the log");
+        assert_eq!(journal.len_bytes(), after_bytes);
+        drop(journal);
+        let (journal2, compacted) = Journal::open(&path).unwrap();
+        assert_eq!(
+            replay(&compacted),
+            before_map,
+            "compacted journal must replay to the same JobRecovery map"
+        );
+
+        // Dropping evicted jobs removes exactly their entries.
+        journal2.compact(|id| id != 2).unwrap();
+        drop(journal2);
+        let (journal3, pruned) = Journal::open(&path).unwrap();
+        let pruned_map = replay(&pruned);
+        let mut expect = before_map.clone();
+        expect.remove(&2);
+        assert_eq!(pruned_map, expect);
+
+        // Appends after compaction extend the fresh file, not the
+        // unlinked old inode.
+        journal3.append_sync(&Record::Started { id: 3, seq: 9 }).unwrap();
+        drop(journal3);
+        let (_, reread) = Journal::open(&path).unwrap();
+        assert_eq!(reread.last(), Some(&Record::Started { id: 3, seq: 9 }));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 
     #[test]

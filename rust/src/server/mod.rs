@@ -20,7 +20,12 @@
 //!   requests onto one simulation;
 //! * [`fault`] — deterministic fault injection for the chaos harness;
 //! * [`journal`] — crash-safe append-only job journal replayed at
-//!   startup so detached jobs survive process death (DESIGN.md §12).
+//!   startup so detached jobs survive process death (DESIGN.md §12);
+//! * [`ring`] / [`peer`] — fleet mode (`--peers`): a consistent-hash
+//!   ring shards the content-addressed caches across peer servers, the
+//!   peer client wraps the internal cache protocol in timeouts,
+//!   retries, and per-peer breakers, and every peer failure degrades
+//!   gracefully to node-local behavior (DESIGN.md §13).
 //!
 //! Threading model: one cheap thread per connection parses requests and
 //! writes responses; every heavy job runs on the fixed-size worker pool
@@ -36,7 +41,9 @@ pub mod fault;
 pub mod flight;
 pub mod http;
 pub mod journal;
+pub mod peer;
 pub mod pool;
+pub mod ring;
 
 use std::io::{BufReader, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -311,6 +318,19 @@ pub fn run_blocking(cfg: ServerConfig) -> Result<()> {
     match &cfg.journal_path {
         Some(path) => println!("job journal: {path} (jobs survive restarts)"),
         None => println!("job journal: off (jobs are volatile; --journal <path> enables)"),
+    }
+    if let Some(fleet) = &server.state().fleet {
+        println!(
+            "fleet mode: node {} sharing caches with {} peer(s): {}",
+            fleet.node_id(),
+            fleet.peers().len(),
+            fleet
+                .peers()
+                .iter()
+                .map(|p| p.addr())
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
     }
     while !GOT_SIGNAL.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(100));

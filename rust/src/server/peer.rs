@@ -1,0 +1,606 @@
+//! Fleet peer client and coordinator (DESIGN.md §13).
+//!
+//! In fleet mode (`serve --peers host:port,...`) every node maps fleet
+//! body keys — FNV fingerprints of the request content — onto the
+//! consistent-hash [`Ring`] and consults the owning node's shared body
+//! store before simulating locally. The wire protocol is deliberately
+//! tiny: `GET /internal/cache/:kind/:key` answers 200 with a
+//! length-prefixed, FNV-checksummed body (the journal framing
+//! discipline) or 404 on miss; `PUT` stores one. The interesting part
+//! is the robustness envelope around it:
+//!
+//! * per-attempt connect and read timeouts, so a slow or partitioned
+//!   peer costs a bounded slice of latency, never a hang;
+//! * bounded retries with decorrelated-jitter exponential backoff, so
+//!   transient blips are absorbed without synchronized retry storms;
+//! * a per-peer three-state health tracker running the same breaker
+//!   machine as [`super::admission`] — a flapping peer is ejected from
+//!   the ring (its keys fall through to the next member, exactly as if
+//!   it had left) and lazily probed back in once the cool-down expires;
+//! * **every** peer-path failure degrades to a cache miss. The caller
+//!   falls back to the node-local cache and local simulation, so fleet
+//!   mode can never make a request fail that single-node mode would
+//!   have served — peer RPC errors are downgraded, never propagated.
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::compiler::fingerprint::Fnv1a;
+use crate::config::ServerConfig;
+
+use super::admission::{advance, push_outcome, BreakerInner, BreakerState, HALF_OPEN_PROBES};
+use super::cache::BodyCache;
+use super::fault::FaultPlan;
+use super::http;
+use super::ring::Ring;
+
+/// Per-attempt TCP connect timeout. Loopback fleets fail fast
+/// (ECONNREFUSED); a partitioned peer costs at most this per attempt.
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(250);
+/// Per-attempt socket read/write timeout once connected.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Attempts per peer RPC (1 initial + bounded retries).
+const MAX_ATTEMPTS: u32 = 3;
+/// Decorrelated-jitter backoff: `sleep = min(cap, base + rand(0, 3*prev))`.
+const BACKOFF_BASE: Duration = Duration::from_millis(5);
+const BACKOFF_CAP: Duration = Duration::from_millis(100);
+
+/// Outcome labels for `snax_peer_requests_total{peer,outcome}`.
+pub const OUTCOMES: [&str; 4] = ["hit", "miss", "put", "error"];
+
+const OUT_HIT: usize = 0;
+const OUT_MISS: usize = 1;
+const OUT_PUT: usize = 2;
+const OUT_ERROR: usize = 3;
+
+/// Frame a peer-protocol body: `[u32 LE len][u64 LE FNV-1a][payload]` —
+/// the same discipline the job journal uses, so a torn or corrupted
+/// transfer is detected by checksum, not trusted.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut h = Fnv1a::new();
+    h.write_bytes(payload);
+    let mut framed = Vec::with_capacity(12 + payload.len());
+    framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    framed.extend_from_slice(&h.finish().to_le_bytes());
+    framed.extend_from_slice(payload);
+    framed
+}
+
+/// Decode and verify one framed body. Any mismatch — short frame, bad
+/// length, bad checksum — is an error the caller treats as a miss.
+pub fn decode_frame(bytes: &[u8]) -> Result<Vec<u8>> {
+    if bytes.len() < 12 {
+        bail!("peer frame shorter than its 12-byte header");
+    }
+    let len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let sum = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+    if bytes.len() != 12 + len {
+        bail!("peer frame length {} != declared {}", bytes.len() - 12, len);
+    }
+    let payload = &bytes[12..];
+    let mut h = Fnv1a::new();
+    h.write_bytes(payload);
+    if h.finish() != sum {
+        bail!("peer frame checksum mismatch");
+    }
+    Ok(payload.to_vec())
+}
+
+/// Client for one fleet peer: transport, retries, and health.
+pub struct PeerClient {
+    addr: String,
+    open_for: Duration,
+    health: Mutex<BreakerInner>,
+    counts: [AtomicU64; 4],
+    last_probe: Mutex<Option<Instant>>,
+    jitter: AtomicU64,
+}
+
+impl PeerClient {
+    fn new(addr: String, open_for: Duration) -> PeerClient {
+        // Seed the jitter stream from the address so two nodes retrying
+        // against the same dead peer do not back off in lockstep.
+        let mut h = Fnv1a::new();
+        h.write_bytes(addr.as_bytes());
+        PeerClient {
+            addr,
+            open_for,
+            health: Mutex::new(BreakerInner::new()),
+            counts: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            last_probe: Mutex::new(None),
+            jitter: AtomicU64::new(h.finish() | 1),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Whether the ring may route to this peer right now: closed, or
+    /// half-open with a free probe slot. (Advisory — `begin` below is
+    /// the authoritative admission.)
+    fn available(&self) -> bool {
+        let mut b = self.health.lock().unwrap();
+        advance(&mut b, Instant::now());
+        match b.state {
+            BreakerState::Closed => true,
+            BreakerState::Open { .. } => false,
+            BreakerState::HalfOpen { inflight, .. } => inflight < HALF_OPEN_PROBES,
+        }
+    }
+
+    /// Admit one RPC against this peer's breaker. `true` obliges the
+    /// caller to `finish` exactly once (the half-open probe slot is
+    /// reclaimed there).
+    fn begin(&self) -> bool {
+        let mut b = self.health.lock().unwrap();
+        advance(&mut b, Instant::now());
+        match b.state {
+            BreakerState::Closed => true,
+            BreakerState::Open { .. } => false,
+            BreakerState::HalfOpen { inflight, successes } => {
+                if inflight >= HALF_OPEN_PROBES {
+                    return false;
+                }
+                b.state = BreakerState::HalfOpen { inflight: inflight + 1, successes };
+                true
+            }
+        }
+    }
+
+    /// Mirror of [`super::admission::Admission::record_outcome`] for
+    /// this peer: a failed probe re-opens, enough successful probes
+    /// close, closed-state outcomes feed the failure-rate window.
+    fn finish(&self, success: bool) {
+        let mut b = self.health.lock().unwrap();
+        let now = Instant::now();
+        advance(&mut b, now);
+        match b.state {
+            BreakerState::HalfOpen { inflight, successes } => {
+                if !success {
+                    b.state = BreakerState::Open { until: now + self.open_for };
+                    b.window.clear();
+                } else if successes + 1 >= HALF_OPEN_PROBES {
+                    b.state = BreakerState::Closed;
+                    b.window.clear();
+                } else {
+                    b.state = BreakerState::HalfOpen {
+                        inflight: inflight.saturating_sub(1),
+                        successes: successes + 1,
+                    };
+                }
+            }
+            BreakerState::Closed => push_outcome(&mut b, success, now, self.open_for),
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Health as a metric value: 0 = closed, 1 = open, 2 = half-open.
+    pub fn state(&self) -> u64 {
+        let mut b = self.health.lock().unwrap();
+        advance(&mut b, Instant::now());
+        match b.state {
+            BreakerState::Closed => 0,
+            BreakerState::Open { .. } => 1,
+            BreakerState::HalfOpen { .. } => 2,
+        }
+    }
+
+    pub fn state_name(&self) -> &'static str {
+        match self.state() {
+            0 => "closed",
+            1 => "open",
+            _ => "half-open",
+        }
+    }
+
+    /// Outcome counters in [`OUTCOMES`] order.
+    pub fn counts(&self) -> [(&'static str, u64); 4] {
+        let mut out = [("", 0); 4];
+        for (i, name) in OUTCOMES.iter().enumerate() {
+            out[i] = (*name, self.counts[i].load(Ordering::Relaxed));
+        }
+        out
+    }
+
+    /// Milliseconds since the last RPC attempt against this peer
+    /// (`None` if never attempted).
+    pub fn last_probe_ms(&self) -> Option<u64> {
+        self.last_probe
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_millis() as u64)
+    }
+
+    fn note(&self, outcome: usize) {
+        self.counts[outcome].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Next decorrelated-jitter pause given the previous one.
+    fn backoff(&self, prev: Duration) -> Duration {
+        let mut z = self.jitter.load(Ordering::Relaxed);
+        // xorshift64 step; racing updates just decorrelate further.
+        z ^= z << 13;
+        z ^= z >> 7;
+        z ^= z << 17;
+        self.jitter.store(z, Ordering::Relaxed);
+        let span_ms = (prev.as_millis() as u64).saturating_mul(3).max(1);
+        let sleep = BACKOFF_BASE + Duration::from_millis(z % span_ms);
+        sleep.min(BACKOFF_CAP)
+    }
+
+    fn connect(&self) -> std::io::Result<TcpStream> {
+        let addr = self
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| std::io::Error::other(format!("peer '{}' resolves to nothing", self.addr)))?;
+        let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    fn attempt(
+        &self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        fault: Option<&FaultPlan>,
+        fault_seq: u64,
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        if let Some(plan) = fault {
+            if plan.inject_peer(fault_seq) {
+                return Err(std::io::Error::other("injected fault: peer_drop"));
+            }
+        }
+        let stream = self.connect()?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        http::write_request(&mut writer, method, path, body, false)?;
+        let (status, _headers, resp) = http::read_response(&mut reader)
+            .map_err(|e| std::io::Error::other(format!("{e}")))?;
+        Ok((status, resp))
+    }
+
+    /// One RPC with bounded retries: `Some` on any completed HTTP
+    /// exchange (a clean 404 miss is a *healthy* peer), `None` when
+    /// every attempt failed at the transport level.
+    fn rpc(
+        &self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        fault: Option<&FaultPlan>,
+        fault_seq: u64,
+    ) -> Option<(u16, Vec<u8>)> {
+        *self.last_probe.lock().unwrap() = Some(Instant::now());
+        let mut pause = BACKOFF_BASE;
+        for attempt in 0..MAX_ATTEMPTS {
+            if attempt > 0 {
+                pause = self.backoff(pause);
+                std::thread::sleep(pause);
+            }
+            if let Ok(exchange) = self.attempt(method, path, body, fault, fault_seq) {
+                return Some(exchange);
+            }
+        }
+        None
+    }
+
+    /// Fetch `key` from this peer's body store. `None` on miss *or any
+    /// failure* — unhealthy transport, exhausted retries, checksum
+    /// mismatch — so the caller always has the local fallback.
+    pub fn get(
+        &self,
+        kind: &'static str,
+        key: u64,
+        fault: Option<&FaultPlan>,
+        fault_seq: u64,
+    ) -> Option<Vec<u8>> {
+        if !self.begin() {
+            return None;
+        }
+        let path = format!("/internal/cache/{kind}/{key:016x}");
+        match self.rpc("GET", &path, b"", fault, fault_seq) {
+            Some((200, body)) => match decode_frame(&body) {
+                Ok(payload) => {
+                    self.finish(true);
+                    self.note(OUT_HIT);
+                    Some(payload)
+                }
+                Err(_) => {
+                    // A peer answering 200 with a torn frame is not
+                    // healthy; the payload is discarded.
+                    self.finish(false);
+                    self.note(OUT_ERROR);
+                    None
+                }
+            },
+            Some((404, _)) => {
+                self.finish(true);
+                self.note(OUT_MISS);
+                None
+            }
+            // Unexpected status or exhausted transport retries: either
+            // way the peer is not serving this protocol correctly.
+            Some(_) | None => {
+                self.finish(false);
+                self.note(OUT_ERROR);
+                None
+            }
+        }
+    }
+
+    /// Best-effort write-back of `key` to this peer's body store.
+    /// Returns whether the peer acknowledged the store.
+    pub fn put(
+        &self,
+        kind: &'static str,
+        key: u64,
+        payload: &[u8],
+        fault: Option<&FaultPlan>,
+        fault_seq: u64,
+    ) -> bool {
+        if !self.begin() {
+            return false;
+        }
+        let path = format!("/internal/cache/{kind}/{key:016x}");
+        let framed = encode_frame(payload);
+        let resp = self.rpc("PUT", &path, &framed, fault, fault_seq);
+        let stored = matches!(resp, Some((200, _)));
+        self.finish(stored);
+        self.note(if stored { OUT_PUT } else { OUT_ERROR });
+        stored
+    }
+}
+
+/// The fleet coordinator owned by `AppState` when `--peers` is set:
+/// ring placement, peer clients, and this node's shard of the shared
+/// body store.
+pub struct Fleet {
+    node_id: String,
+    ring: Ring,
+    peers: Vec<PeerClient>,
+    bodies: BodyCache,
+    remote_hits: AtomicU64,
+    fault: Option<FaultPlan>,
+    rpc_seq: AtomicU64,
+}
+
+impl Fleet {
+    /// Build the fleet view from config. Never touches the network —
+    /// peers are contacted lazily, per request, under their breakers.
+    pub fn new(cfg: &ServerConfig, fault: Option<FaultPlan>) -> Result<Fleet> {
+        let node_id = cfg.fleet_node_id();
+        let open_for = Duration::from_millis(cfg.breaker_open_ms.max(1));
+        let mut members: Vec<String> = cfg.peers.clone();
+        members.push(node_id.clone());
+        let ring = Ring::new(members);
+        if ring.len() < 2 {
+            bail!("fleet mode needs at least one peer besides this node");
+        }
+        let peers = ring
+            .members()
+            .iter()
+            .filter(|m| **m != node_id)
+            .map(|m| PeerClient::new(m.clone(), open_for))
+            .collect();
+        Ok(Fleet {
+            node_id,
+            ring,
+            peers,
+            bodies: BodyCache::new(cfg.cache_capacity.max(1)),
+            remote_hits: AtomicU64::new(0),
+            fault,
+            rpc_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn node_id(&self) -> &str {
+        &self.node_id
+    }
+
+    pub fn peers(&self) -> &[PeerClient] {
+        &self.peers
+    }
+
+    /// Shared-body-store hits (local shard or via peer) — the
+    /// `snax_cache_remote_hits_total` counter.
+    pub fn remote_hits(&self) -> u64 {
+        self.remote_hits.load(Ordering::Relaxed)
+    }
+
+    /// Entries this node holds in the shared body store (≈ the keys it
+    /// owns on the ring; peers only write a key to its owner) — the
+    /// `snax_ring_owned_keys` gauge.
+    pub fn owned_keys(&self) -> u64 {
+        self.bodies.len() as u64
+    }
+
+    fn peer(&self, addr: &str) -> Option<&PeerClient> {
+        self.peers.iter().find(|p| p.addr() == addr)
+    }
+
+    /// The healthy owner of `key` right now: ejected (breaker-open)
+    /// peers are skipped exactly as if they had left the ring.
+    fn healthy_owner(&self, key: u64) -> Option<&str> {
+        self.ring.owner_where(key, |m| {
+            m == self.node_id || self.peer(m).is_some_and(|p| p.available())
+        })
+    }
+
+    /// Consult the fleet-shared body store for `key`. A `Some` answer
+    /// is a shared-cache hit (served with `X-Snax-Cache: remote`); any
+    /// peer failure along the way degrades to `None` — a miss — so the
+    /// caller simulates locally just as single-node mode would.
+    pub fn lookup(&self, kind: &'static str, key: u64) -> Option<String> {
+        let fault_seq = self.rpc_seq.fetch_add(1, Ordering::Relaxed);
+        let owner = self.healthy_owner(key).map(str::to_string);
+        if let Some(owner) = &owner {
+            if *owner != self.node_id {
+                if let Some(peer) = self.peer(owner) {
+                    if let Some(payload) = peer.get(kind, key, self.fault.as_ref(), fault_seq) {
+                        if let Ok(body) = String::from_utf8(payload) {
+                            self.remote_hits.fetch_add(1, Ordering::Relaxed);
+                            return Some(body);
+                        }
+                    }
+                }
+            }
+        }
+        // Local shard: we are the owner, the owner missed, or everyone
+        // else is ejected. Bodies are deterministic, so a locally held
+        // copy is always a correct answer.
+        let body = self.bodies.get(key).map(|b| (*b).clone());
+        if body.is_some() {
+            self.remote_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        body
+    }
+
+    /// Write a freshly computed body back to its owner: locally when
+    /// this node owns the key (or no peer is healthy), else a
+    /// best-effort PUT that falls back to the local shard on failure —
+    /// the value is never dropped on the floor.
+    pub fn store(&self, kind: &'static str, key: u64, body: &str) {
+        let fault_seq = self.rpc_seq.fetch_add(1, Ordering::Relaxed);
+        if let Some(owner) = self.healthy_owner(key) {
+            if owner != self.node_id {
+                if let Some(peer) = self.peer(owner) {
+                    if peer.put(kind, key, body.as_bytes(), self.fault.as_ref(), fault_seq) {
+                        return;
+                    }
+                }
+            }
+        }
+        self.bodies.insert(key, Arc::new(body.to_string()));
+    }
+
+    /// Serve `/internal/cache` GET from the local shard only — an
+    /// internal request never triggers simulation or further peer hops,
+    /// so there is no recursive fan-out.
+    pub fn local_get(&self, key: u64) -> Option<Arc<String>> {
+        self.bodies.get(key)
+    }
+
+    /// Store a peer's write-back into the local shard.
+    pub fn local_put(&self, key: u64, body: String) {
+        self.bodies.insert(key, Arc::new(body));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_and_corruption_detection() {
+        let payload = br#"{"total_cycles":42}"#;
+        let framed = encode_frame(payload);
+        assert_eq!(framed.len(), 12 + payload.len());
+        assert_eq!(decode_frame(&framed).unwrap(), payload);
+        // Flip a payload byte: checksum must catch it.
+        let mut torn = framed.clone();
+        let n = torn.len();
+        torn[n - 1] ^= 0xff;
+        assert!(decode_frame(&torn).is_err());
+        // Truncated and short frames are errors, not panics.
+        assert!(decode_frame(&framed[..framed.len() - 1]).is_err());
+        assert!(decode_frame(&framed[..5]).is_err());
+        // Empty payloads frame fine.
+        assert_eq!(decode_frame(&encode_frame(b"")).unwrap(), b"");
+    }
+
+    fn fleet_cfg(peers: Vec<String>) -> ServerConfig {
+        ServerConfig {
+            port: 0,
+            node_id: Some("127.0.0.1:9000".into()),
+            peers,
+            breaker_open_ms: 40,
+            ..ServerConfig::default()
+        }
+    }
+
+    #[test]
+    fn fleet_requires_a_peer_and_dedupes_self() {
+        assert!(Fleet::new(&fleet_cfg(vec![]), None).is_err());
+        // Listing the node's own id among --peers is tolerated (the
+        // symmetric config every node can share).
+        let fleet = Fleet::new(
+            &fleet_cfg(vec!["127.0.0.1:9000".into(), "127.0.0.1:9001".into()]),
+            None,
+        )
+        .unwrap();
+        assert_eq!(fleet.peers().len(), 1);
+        assert_eq!(fleet.peers()[0].addr(), "127.0.0.1:9001");
+        assert_eq!(fleet.node_id(), "127.0.0.1:9000");
+    }
+
+    /// A dead peer (nothing listens on the port) fails fast, opens its
+    /// breaker after enough failures, and every lookup degrades to a
+    /// local miss — never an error.
+    #[test]
+    fn dead_peer_is_ejected_and_lookups_degrade_to_local() {
+        // Reserve a port nobody is listening on.
+        let dead_port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let fleet =
+            Fleet::new(&fleet_cfg(vec![format!("127.0.0.1:{dead_port}")]), None).unwrap();
+        let peer_addr = fleet.peers()[0].addr().to_string();
+        // Find a key the dead peer owns, so lookups actually dial it.
+        let key = (0u64..10_000)
+            .find(|k| fleet.ring.owner(*k) == Some(peer_addr.as_str()))
+            .expect("some key must belong to the peer");
+        assert_eq!(fleet.lookup("sim", key), None, "dead peer must read as a miss");
+        // Hammer until the breaker opens (window needs MIN_SAMPLES).
+        for _ in 0..16 {
+            let _ = fleet.lookup("sim", key);
+        }
+        assert_eq!(fleet.peers()[0].state(), 1, "flapping peer must be ejected");
+        assert!(fleet.peers()[0].last_probe_ms().is_some());
+        let [_, _, _, (label, errors)] = fleet.peers()[0].counts();
+        assert_eq!(label, "error");
+        assert!(errors >= 1);
+        // Ejected: the store falls back to the local shard and the
+        // next lookup serves it as a shared-store hit.
+        fleet.store("sim", key, "{\"x\":1}");
+        assert_eq!(fleet.lookup("sim", key).as_deref(), Some("{\"x\":1}"));
+        assert!(fleet.remote_hits() >= 1);
+        assert_eq!(fleet.owned_keys(), 1);
+        // After the cool-down the tracker turns half-open (lazy probe).
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(fleet.peers()[0].state(), 2);
+    }
+
+    /// The injected `peer_drop` partition behaves like the real one:
+    /// misses, never errors, and local fallback keeps serving.
+    #[test]
+    fn injected_partition_degrades_identically() {
+        let plan = FaultPlan::parse("peer_drop:1.0").unwrap();
+        let fleet = Fleet::new(
+            &fleet_cfg(vec!["127.0.0.1:9001".into()]),
+            Some(plan),
+        )
+        .unwrap();
+        let key = (0u64..10_000)
+            .find(|k| fleet.ring.owner(*k) == Some("127.0.0.1:9001"))
+            .unwrap();
+        assert_eq!(fleet.lookup("sim", key), None);
+        fleet.store("sim", key, "body");
+        assert_eq!(fleet.lookup("sim", key).as_deref(), Some("body"));
+    }
+}

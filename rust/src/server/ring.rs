@@ -1,0 +1,230 @@
+//! Consistent-hash ring for fleet mode (DESIGN.md §13).
+//!
+//! Maps 64-bit content-addressed fingerprints (program/system keys and
+//! the fleet body keys derived from them) onto fleet members so every
+//! node agrees, without coordination, on which peer owns which cache
+//! entry. Each member contributes [`VNODES`] virtual points hashed from
+//! `member#replica` with the same FNV-1a used by the fingerprint layer,
+//! so placement is a pure function of the sorted member list — two
+//! nodes configured with the same `--peers` set compute identical
+//! ownership no matter the order the addresses were listed in.
+//!
+//! [`Ring::owner_where`] walks clockwise past members a health filter
+//! rejects, which gives the two properties the fleet layer leans on:
+//!
+//! * ejecting a member reassigns only the keys that member owned (the
+//!   survivors' keys do not move), and the reassignment is exactly what
+//!   a ring built without that member would have produced;
+//! * a member joining (or probing back in) claims only the keys it now
+//!   owns — everything else stays put, so rejoin is a cache-locality
+//!   event, not a correctness event.
+
+use crate::compiler::fingerprint::Fnv1a;
+
+/// Virtual points per member. 64 keeps the ownership split within a few
+/// percent of even for small fleets while the sorted point list stays
+/// tiny (a fleet of 16 nodes is 1024 points).
+const VNODES: u32 = 64;
+
+fn vnode_point(member: &str, replica: u32) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_bytes(member.as_bytes());
+    // Fixed-width replica suffix (with a separator byte outside UTF-8's
+    // single-byte range) so members that are prefixes of each other
+    // cannot alias points.
+    h.write_bytes(&[0xff]);
+    h.write_bytes(&replica.to_le_bytes());
+    h.finish()
+}
+
+/// Deterministic consistent-hash ring over member address strings.
+pub struct Ring {
+    /// Sorted, deduplicated member list; point indices refer into it.
+    members: Vec<String>,
+    /// `(point hash, member index)` sorted by hash (ties broken by
+    /// index, which is itself deterministic because members are sorted).
+    points: Vec<(u64, u32)>,
+}
+
+impl Ring {
+    /// Build a ring from member addresses. Order and duplicates do not
+    /// matter: the list is sorted and deduplicated so every node in a
+    /// fleet derives the same ring from the same membership set.
+    pub fn new(members: impl IntoIterator<Item = String>) -> Ring {
+        let mut members: Vec<String> = members.into_iter().collect();
+        members.sort();
+        members.dedup();
+        let mut points = Vec::with_capacity(members.len() * VNODES as usize);
+        for (idx, member) in members.iter().enumerate() {
+            for replica in 0..VNODES {
+                points.push((vnode_point(member, replica), idx as u32));
+            }
+        }
+        points.sort_unstable();
+        Ring { members, points }
+    }
+
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The member owning `key`: the first virtual point clockwise from
+    /// the key's position.
+    pub fn owner(&self, key: u64) -> Option<&str> {
+        self.owner_where(key, |_| true)
+    }
+
+    /// The first member clockwise from `key` that `alive` accepts.
+    /// Skipping a dead member lands on exactly the owner a ring built
+    /// without that member would pick, so ejection and rejoin move only
+    /// the ejected member's keys.
+    pub fn owner_where(&self, key: u64, alive: impl Fn(&str) -> bool) -> Option<&str> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let start = self.points.partition_point(|&(h, _)| h < key) % self.points.len();
+        let mut tried = vec![false; self.members.len()];
+        for offset in 0..self.points.len() {
+            let (_, idx) = self.points[(start + offset) % self.points.len()];
+            let idx = idx as usize;
+            if std::mem::replace(&mut tried[idx], true) {
+                continue;
+            }
+            let member = self.members[idx].as_str();
+            if alive(member) {
+                return Some(member);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random key stream (splitmix64 finalizer) so
+    /// the placement properties are checked over a spread of keys
+    /// without any external proptest machinery.
+    fn key(i: u64) -> u64 {
+        let mut z = i.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect()
+    }
+
+    const N_KEYS: u64 = 4096;
+
+    #[test]
+    fn placement_is_deterministic_and_order_independent() {
+        let forward = Ring::new(addrs(3));
+        let mut shuffled = addrs(3);
+        shuffled.reverse();
+        shuffled.push(shuffled[0].clone()); // duplicate must not matter
+        let backward = Ring::new(shuffled);
+        assert_eq!(forward.members(), backward.members());
+        for i in 0..N_KEYS {
+            let k = key(i);
+            assert_eq!(forward.owner(k), backward.owner(k));
+        }
+    }
+
+    #[test]
+    fn ownership_is_roughly_balanced() {
+        let ring = Ring::new(addrs(3));
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..N_KEYS {
+            *counts.entry(ring.owner(key(i)).unwrap().to_string()).or_insert(0u64) += 1;
+        }
+        assert_eq!(counts.len(), 3, "every member must own some keys");
+        for (member, n) in &counts {
+            let share = *n as f64 / N_KEYS as f64;
+            assert!(
+                share > 0.10,
+                "member {member} owns {share:.3} of keys — too imbalanced"
+            );
+        }
+    }
+
+    #[test]
+    fn join_moves_only_keys_claimed_by_the_new_member() {
+        let before = Ring::new(addrs(3));
+        let after = Ring::new(addrs(4));
+        let newcomer = "127.0.0.1:9003";
+        let mut moved = 0u64;
+        for i in 0..N_KEYS {
+            let k = key(i);
+            let owner_before = before.owner(k).unwrap();
+            let owner_after = after.owner(k).unwrap();
+            if owner_before != owner_after {
+                moved += 1;
+                assert_eq!(
+                    owner_after, newcomer,
+                    "a key may only move to the joining member"
+                );
+            }
+        }
+        let fraction = moved as f64 / N_KEYS as f64;
+        assert!(moved > 0, "the newcomer must claim some keys");
+        assert!(
+            fraction < 0.45,
+            "join moved {fraction:.3} of keys — expected ~1/4"
+        );
+    }
+
+    #[test]
+    fn leave_moves_only_the_leavers_keys() {
+        let before = Ring::new(addrs(4));
+        let leaver = "127.0.0.1:9003";
+        let after = Ring::new(addrs(3));
+        for i in 0..N_KEYS {
+            let k = key(i);
+            let owner_before = before.owner(k).unwrap();
+            if owner_before != leaver {
+                assert_eq!(
+                    after.owner(k),
+                    Some(owner_before),
+                    "a surviving member's key must not move on leave"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dead_owner_falls_through_to_the_shrunk_rings_owner() {
+        let full = Ring::new(addrs(3));
+        let dead = "127.0.0.1:9001";
+        let shrunk = Ring::new(vec!["127.0.0.1:9000".into(), "127.0.0.1:9002".into()]);
+        for i in 0..N_KEYS {
+            let k = key(i);
+            assert_eq!(
+                full.owner_where(k, |m| m != dead),
+                shrunk.owner(k),
+                "health filter must behave like removing the member"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_rings() {
+        assert_eq!(Ring::new(Vec::new()).owner(7), None);
+        let solo = Ring::new(vec!["127.0.0.1:9000".to_string()]);
+        for i in 0..64 {
+            assert_eq!(solo.owner(key(i)), Some("127.0.0.1:9000"));
+        }
+        // Everyone dead: no owner rather than a spin.
+        assert_eq!(solo.owner_where(3, |_| false), None);
+    }
+}

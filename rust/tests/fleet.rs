@@ -1,0 +1,263 @@
+//! Fleet-mode smoke (DESIGN.md §13): run real `snax serve` binaries as
+//! a consistent-hash fleet and hold fleet mode to its contract —
+//!
+//! * a body simulated on one node is a remote cache hit on another,
+//!   byte-identical and marked `X-Snax-Cache: remote`;
+//! * SIGKILLing a peer mid-load produces zero non-2xx responses, and
+//!   every survivor body stays byte-identical to a single-node golden;
+//! * a killed peer that restarts is probed back into the ring and
+//!   serves the shared bodies again;
+//! * an injected partition (`--fault peer_drop:1.0`) degrades to
+//!   local-only with the same bytes as a single-node server.
+//!
+//! Wired into CI as `make fleet-smoke`.
+
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use snax::runtime::json;
+use snax::server::http;
+
+/// A spawned `snax serve` child plus its parsed listen address. Killed
+/// on drop so a failing assertion never leaks a server process.
+struct ServeChild {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// One spawn attempt: `None` when the child exits before printing its
+/// banner (typically a bind failure while the port sits in TIME_WAIT
+/// after a SIGKILL) so the caller can retry.
+fn try_spawn(args: &[String]) -> Option<ServeChild> {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_snax"));
+    cmd.args(args).stdout(Stdio::piped()).stderr(Stdio::null()).stdin(Stdio::null());
+    let mut child = cmd.spawn().expect("spawning snax serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut lines = BufReader::new(stdout).lines();
+    loop {
+        let Some(Ok(line)) = lines.next() else {
+            let _ = child.kill();
+            let _ = child.wait();
+            return None;
+        };
+        if let Some(rest) = line.strip_prefix("snax serve listening on http://") {
+            let addr =
+                rest.split_whitespace().next().unwrap().parse().expect("listen address");
+            // Let the banner reader run on so the child never blocks on
+            // a full stdout pipe.
+            std::thread::spawn(move || for _ in lines {});
+            return Some(ServeChild { child, addr });
+        }
+    }
+}
+
+/// Spawn one fleet node on a fixed port (`0` = ephemeral, for the
+/// single-node golden server). An empty `peers` list spawns a plain
+/// single-node server.
+fn spawn_node(port: u16, peers: &[u16], extra: &[&str]) -> ServeChild {
+    let mut args: Vec<String> = ["serve", "--port"].iter().map(|s| s.to_string()).collect();
+    args.push(port.to_string());
+    args.extend(["--workers".to_string(), "1".to_string()]);
+    if !peers.is_empty() {
+        args.push("--peers".to_string());
+        args.push(
+            peers.iter().map(|p| format!("127.0.0.1:{p}")).collect::<Vec<_>>().join(","),
+        );
+    }
+    args.extend(extra.iter().map(|s| s.to_string()));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Some(server) = try_spawn(&args) {
+            return server;
+        }
+        assert!(Instant::now() < deadline, "node :{port} never came up");
+        std::thread::sleep(Duration::from_millis(500));
+    }
+}
+
+/// Reserve `n` distinct ports by binding ephemeral listeners, then
+/// release them for the children. Racy in principle, but the kernel
+/// walks the ephemeral range, so immediate reuse by a stranger is
+/// unlikely; `spawn_node` retries on bind failure regardless.
+fn reserve_ports(n: usize) -> Vec<u16> {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    listeners.iter().map(|l| l.local_addr().unwrap().port()).collect()
+}
+
+/// One request over a fresh connection: `(status, headers, body)`.
+/// Header names arrive lowercased.
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    http::write_request(&mut writer, method, path, body.as_bytes(), false).expect("write");
+    http::read_response(&mut reader).expect("read response")
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn body_str(body: &[u8]) -> &str {
+    std::str::from_utf8(body).expect("utf-8 body")
+}
+
+fn scrape(addr: SocketAddr, series: &str) -> u64 {
+    let (status, _, body) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let text = body_str(&body);
+    text.lines()
+        .find(|l| l.split_whitespace().next() == Some(series))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no series '{series}' in:\n{text}"))
+}
+
+/// The healthz `peers[].state` entry for one peer address.
+fn peer_state(addr: SocketAddr, peer: &str) -> String {
+    let (status, _, body) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let v = json::parse(body_str(&body)).unwrap();
+    let peers = v.get("peers").expect("fleet healthz lists peers").as_arr().unwrap();
+    peers
+        .iter()
+        .find(|p| p.get("addr").unwrap().as_str() == Some(peer))
+        .unwrap_or_else(|| panic!("peer {peer} missing from healthz: {}", body_str(&body)))
+        .get("state")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn a_body_simulated_on_one_node_is_a_remote_hit_on_the_other() {
+    let ports = reserve_ports(2);
+    let a = spawn_node(ports[0], &[ports[1]], &[]);
+    let b = spawn_node(ports[1], &[ports[0]], &[]);
+    let sim = r#"{"net":"fig6a","cluster":"fig6c"}"#;
+
+    let (status, _, first) = request(a.addr, "POST", "/simulate", sim);
+    assert_eq!(status, 200, "{}", body_str(&first));
+    let (status, headers, second) = request(b.addr, "POST", "/simulate", sim);
+    assert_eq!(status, 200, "{}", body_str(&second));
+    assert_eq!(first, second, "fleet bodies must be byte-identical across nodes");
+    assert_eq!(header(&headers, "x-snax-cache"), Some("remote"));
+    assert!(scrape(b.addr, "snax_cache_remote_hits_total") >= 1);
+
+    // Both nodes report a healthy view of each other.
+    assert_eq!(peer_state(a.addr, &format!("127.0.0.1:{}", ports[1])), "closed");
+    assert_eq!(peer_state(b.addr, &format!("127.0.0.1:{}", ports[0])), "closed");
+    drop((a, b));
+}
+
+#[test]
+fn killing_a_peer_mid_load_sheds_nothing_and_it_rejoins_after_restart() {
+    let ports = reserve_ports(3);
+    let peers_of = |i: usize| -> Vec<u16> {
+        ports.iter().enumerate().filter(|(j, _)| *j != i).map(|(_, p)| *p).collect()
+    };
+    let a = spawn_node(ports[0], &peers_of(0), &[]);
+    let b = spawn_node(ports[1], &peers_of(1), &[]);
+    let mut c = spawn_node(ports[2], &peers_of(2), &[]);
+
+    // Single-node golden bodies for the whole workload.
+    let golden_server = spawn_node(0, &[], &[]);
+    let sims: Vec<String> = ["fig6b", "fig6c", "fig6d"]
+        .iter()
+        .map(|cl| format!(r#"{{"net":"fig6a","cluster":"{cl}"}}"#))
+        .collect();
+    let goldens: Vec<Vec<u8>> = sims
+        .iter()
+        .map(|sim| {
+            let (status, _, body) = request(golden_server.addr, "POST", "/simulate", sim);
+            assert_eq!(status, 200, "{}", body_str(&body));
+            body
+        })
+        .collect();
+    drop(golden_server);
+
+    // Warm the fleet through node A; some bodies land on peer owners.
+    for (sim, golden) in sims.iter().zip(&goldens) {
+        let (status, _, body) = request(a.addr, "POST", "/simulate", sim);
+        assert_eq!(status, 200, "{}", body_str(&body));
+        assert_eq!(&body, golden, "fleet body diverged from single-node golden");
+    }
+
+    // SIGKILL one peer. Every subsequent request on the survivors must
+    // still return 200 with the golden bytes — peer failures degrade to
+    // node-local caches and local simulation, never to client errors.
+    c.child.kill().expect("killing node C");
+    let _ = c.child.wait();
+    for round in 0..2 {
+        for survivor in [&a, &b] {
+            for (sim, golden) in sims.iter().zip(&goldens) {
+                let (status, _, body) = request(survivor.addr, "POST", "/simulate", sim);
+                assert_eq!(status, 200, "round {round}: {}", body_str(&body));
+                assert_eq!(&body, golden, "round {round}: survivor body diverged");
+            }
+        }
+    }
+
+    // Restart C on its old port; survivor traffic lazily probes it back
+    // to healthy (half-open probes succeed, breaker closes).
+    let c2 = spawn_node(ports[2], &peers_of(2), &[]);
+    let c_id = format!("127.0.0.1:{}", ports[2]);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        for sim in &sims {
+            let (status, _, _) = request(a.addr, "POST", "/simulate", sim);
+            assert_eq!(status, 200);
+        }
+        if peer_state(a.addr, &c_id) == "closed" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "node C never probed back to healthy");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // The rejoined node serves the shared workload byte-identically.
+    for (sim, golden) in sims.iter().zip(&goldens) {
+        let (status, _, body) = request(c2.addr, "POST", "/simulate", sim);
+        assert_eq!(status, 200, "{}", body_str(&body));
+        assert_eq!(&body, golden, "rejoined node body diverged");
+    }
+    drop((a, b, c2));
+}
+
+#[test]
+fn injected_partition_degrades_to_local_with_identical_bodies() {
+    let ports = reserve_ports(2);
+    // Node A drops every peer RPC attempt before it dials (a persistent
+    // deterministic partition); its configured peer is never even
+    // spawned. Fleet mode must not surface any of that to clients.
+    let a = spawn_node(ports[0], &[ports[1]], &["--fault", "peer_drop:1.0"]);
+    let golden_server = spawn_node(0, &[], &[]);
+    let sim = r#"{"net":"fig6a","cluster":"fig6b"}"#;
+    let (status, _, golden) = request(golden_server.addr, "POST", "/simulate", sim);
+    assert_eq!(status, 200, "{}", body_str(&golden));
+    drop(golden_server);
+
+    for _ in 0..3 {
+        let (status, _, body) = request(a.addr, "POST", "/simulate", sim);
+        assert_eq!(status, 200, "{}", body_str(&body));
+        assert_eq!(body, golden, "partitioned node must serve the single-node bytes");
+    }
+    drop(a);
+}
