@@ -4,7 +4,7 @@
 # `artifacts` target needs the Python toolchain (JAX/Pallas) and is
 # only required for `--features pjrt` builds.
 
-.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence serve serve-smoke chaos-smoke crash-smoke fleet-smoke loadgen-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
+.PHONY: build test fmt fmt-check clippy memo-equivalence system-equivalence system-parallel-equivalence serve serve-smoke chaos-smoke crash-smoke fleet-smoke loadgen-smoke profile-smoke bench bench-func bench-all bench-smoke artifacts
 
 build:
 	cargo build --release
@@ -36,6 +36,15 @@ memo-equivalence:
 system-equivalence:
 	cargo test -q --test engine_equivalence system_of_one
 	cargo test -q --test system_soc
+
+# Conservative-PDES driver equivalence (DESIGN.md §14): SystemReports
+# must be byte-identical at any thread count — both engines, memo on or
+# off, ledgered or not — and memo-under-contention replays must match
+# memo-off bit for bit. Mirrors the CI system-parallel step.
+system-parallel-equivalence:
+	cargo test -q --test system_soc byte_identical_at_any_thread_count
+	cargo test -q --test system_soc memo_under_contention
+	cargo test -q --lib sim::system::tests
 
 # Run the compile-and-simulate service (ctrl-c / SIGTERM for graceful
 # shutdown).
@@ -102,11 +111,12 @@ bench:
 bench-func:
 	cargo bench --bench func_speed
 
-# Fast CI variant: 2 reps, fail below the checked-in floors
-# (rust/benches/sim_speed_floor.json, rust/benches/func_speed_floor.json).
+# Fast CI variant: few reps, fail below the checked-in floors
+# (rust/benches/{sim_speed,func_speed,soc_scale}_floor.json).
 bench-smoke:
 	SNAX_BENCH_REPS=2 SNAX_BENCH_ENFORCE_FLOOR=1 cargo bench --bench sim_speed
 	SNAX_BENCH_REPS=5 SNAX_BENCH_ENFORCE_FLOOR=1 cargo bench --bench func_speed
+	SNAX_BENCH_REPS=3 SNAX_BENCH_ENFORCE_FLOOR=1 cargo bench --bench soc_scale
 
 # Every figure/table reproduction bench.
 bench-all:

@@ -7,20 +7,46 @@
 //! * soc2 data-parallel fig6a on a contended 1-grant/cycle link vs the
 //!   same SoC with the link widened to 2 grants (contention ablation);
 //! * soc2 pipeline-partitioned resnet8 (cross-cluster handoffs) vs the
-//!   single-cluster run of the same batch.
+//!   single-cluster run of the same batch;
+//! * scale-out trajectory: soc8 / soc16 data-parallel fig6a on the
+//!   contended presets;
+//! * conservative-PDES driver (DESIGN.md §14): wall-clock of an
+//!   uncontended solo-eligible soc8 at 1 driver thread vs 8
+//!   (`parallel_over_sequential`);
+//! * memo under contention (DESIGN.md §14): repeated-phase soc4
+//!   data-parallel, memo-on vs memo-off wall-clock
+//!   (`memo_on_over_off_contended`).
 //!
-//! Emits `BENCH_soc_scale.json` at the workspace root. No CI floor —
-//! this is a scenario-trajectory record, not a regression gate.
+//! Emits `BENCH_soc_scale.json` at the workspace root. Knobs:
+//! `SNAX_BENCH_REPS=N` (default 5), `SNAX_BENCH_ENFORCE_FLOOR=1`
+//! (CI: fail when the wall-clock ratios drop below
+//! `rust/benches/soc_scale_floor.json`).
 //!
 //! Run: `cargo bench --bench soc_scale` (or `make bench-all`).
 
 use snax::compiler::{compile, compile_system, CompileOptions, PartitionStrategy};
 use snax::config::{ClusterConfig, SystemConfig};
 use snax::models;
-use snax::runtime::json::Value;
+use snax::runtime::json::{parse, Value};
 use snax::sim::{Cluster, System};
 
+/// Best-of-`reps` wall seconds of `f` (best-of suppresses scheduler
+/// noise, which matters for ratio floors on shared runners).
+fn time_runs<F: FnMut()>(reps: u32, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
 fn main() {
+    let reps: u32 = std::env::var("SNAX_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
     let n_inf = 4u32;
     let seq = CompileOptions::sequential().with_inferences(n_inf);
 
@@ -69,43 +95,179 @@ fn main() {
         pipeline_speedup
     );
 
+    // Scale-out trajectory: the contended presets, one shard inference
+    // per member.
+    let mut scale_legs = Vec::new();
+    for name in ["soc8", "soc16"] {
+        let sys = SystemConfig::preset(name).unwrap();
+        let n = sys.n_clusters() as u32;
+        let opts = CompileOptions::sequential().with_inferences(n);
+        let cs = compile_system(&fig6a, &sys, &opts, PartitionStrategy::DataParallel).unwrap();
+        let rep = System::new(&sys).run(&cs.programs()).unwrap();
+        println!(
+            "fig6a x{n}: {name} data contended {} cyc (denied {}, {} cyc/inf)",
+            rep.total_cycles,
+            rep.noc.denied,
+            rep.total_cycles / n as u64
+        );
+        scale_legs.push((name, n, rep));
+    }
+
+    // Conservative-PDES driver (DESIGN.md §14): widen soc8's link so
+    // its data-parallel shards are provably independent (solo-eligible)
+    // and compare wall-clock at 1 vs 8 driver threads. Reports are
+    // byte-identical either way — the ratio is pure wall-clock.
+    let mut soc8w = SystemConfig::preset("soc8").unwrap();
+    soc8w.name = "soc8w".into();
+    soc8w.noc.grants_per_cycle = soc8w.total_link_demand();
+    let opts8 = CompileOptions::sequential().with_inferences(8);
+    let cs8 =
+        compile_system(&fig6a, &soc8w, &opts8, PartitionStrategy::DataParallel).unwrap();
+    let progs8 = cs8.programs();
+    let sys_seq = System::new(&soc8w).with_threads(Some(1));
+    let sys_par = System::new(&soc8w).with_threads(Some(8));
+    let rep_seq = sys_seq.run(&progs8).unwrap();
+    let rep_par = sys_par.run(&progs8).unwrap();
+    assert_eq!(rep_seq, rep_par, "thread-count byte-identity violated");
+    let solo_members = sys_par.last_run_stats().parallel_members;
+    let t_seq = time_runs(reps, || {
+        sys_seq.run(&progs8).unwrap();
+    });
+    let t_par = time_runs(reps, || {
+        sys_par.run(&progs8).unwrap();
+    });
+    let parallel_over_sequential = t_seq / t_par.max(1e-9);
+    println!(
+        "soc8w data x8 (solo members {solo_members}/8): threads=1 {:.1} ms, \
+         threads=8 {:.1} ms -> parallel/sequential {:.2}x",
+        t_seq * 1e3,
+        t_par * 1e3,
+        parallel_over_sequential
+    );
+
+    // Memo under contention (DESIGN.md §14): repeated phases on the
+    // contended soc4 preset, memo-on (fresh per-run cache) vs memo-off.
+    let soc4 = SystemConfig::preset("soc4").unwrap();
+    let opts4 = CompileOptions::sequential().with_inferences(16);
+    let cs4 =
+        compile_system(&fig6a, &soc4, &opts4, PartitionStrategy::DataParallel).unwrap();
+    let progs4 = cs4.programs();
+    let sys_on = System::new(&soc4);
+    let sys_off = System::new(&soc4).with_memo(false);
+    let rep_on = sys_on.run(&progs4).unwrap();
+    let rep_off = sys_off.run(&progs4).unwrap();
+    assert_eq!(rep_on, rep_off, "memo under contention changed a report");
+    let t_on = time_runs(reps, || {
+        sys_on.run(&progs4).unwrap();
+    });
+    let t_off = time_runs(reps, || {
+        sys_off.run(&progs4).unwrap();
+    });
+    let memo_on_over_off = t_off / t_on.max(1e-9);
+    println!(
+        "soc4 data x16 contended: memo-on {:.1} ms, memo-off {:.1} ms -> \
+         memo-on/off {:.2}x (denied {})",
+        t_on * 1e3,
+        t_off * 1e3,
+        memo_on_over_off,
+        rep_on.noc.denied
+    );
+
     let round2 = |x: f64| (x * 100.0).round() / 100.0;
+    let mut legs = vec![
+        Value::object([
+            ("name", Value::from("fig6a single fig6d")),
+            ("total_cycles", Value::from(one.total_cycles)),
+        ]),
+        Value::object([
+            ("name", Value::from("fig6a soc2 data contended")),
+            ("total_cycles", Value::from(rep_c.total_cycles)),
+            ("noc_denied", Value::from(rep_c.noc.denied)),
+            ("contention_overhead", Value::from(round2(contention_overhead))),
+        ]),
+        Value::object([
+            ("name", Value::from("fig6a soc2 data widened")),
+            ("total_cycles", Value::from(rep_w.total_cycles)),
+            ("noc_denied", Value::from(rep_w.noc.denied)),
+        ]),
+        Value::object([
+            ("name", Value::from("resnet8 single fig6d")),
+            ("total_cycles", Value::from(rn_one.total_cycles)),
+        ]),
+        Value::object([
+            ("name", Value::from("resnet8 soc2 pipeline")),
+            ("total_cycles", Value::from(rep_p.total_cycles)),
+            ("noc_denied", Value::from(rep_p.noc.denied)),
+            ("handoff_releases", Value::from(rep_p.noc.barrier_releases)),
+            ("pipeline_speedup", Value::from(round2(pipeline_speedup))),
+        ]),
+    ];
+    for (name, n, rep) in &scale_legs {
+        legs.push(Value::object([
+            ("name", Value::from(format!("fig6a {name} data contended"))),
+            ("inferences", Value::from(*n)),
+            ("total_cycles", Value::from(rep.total_cycles)),
+            ("cycles_per_inference", Value::from(rep.total_cycles / *n as u64)),
+            ("noc_denied", Value::from(rep.noc.denied)),
+        ]));
+    }
+    legs.push(Value::object([
+        ("name", Value::from("fig6a soc8w data solo (pdes driver)")),
+        ("solo_members", Value::from(solo_members as u64)),
+        ("sequential_ms", Value::from(round2(t_seq * 1e3))),
+        ("parallel_ms", Value::from(round2(t_par * 1e3))),
+        ("parallel_over_sequential", Value::from(round2(parallel_over_sequential))),
+    ]));
+    legs.push(Value::object([
+        ("name", Value::from("fig6a soc4 data contended (memo on/off)")),
+        ("memo_on_ms", Value::from(round2(t_on * 1e3))),
+        ("memo_off_ms", Value::from(round2(t_off * 1e3))),
+        ("memo_on_over_off_contended", Value::from(round2(memo_on_over_off))),
+        ("noc_denied", Value::from(rep_on.noc.denied)),
+    ]));
     let doc = Value::object([
         ("bench", Value::from("soc_scale")),
         ("inferences", Value::from(n_inf)),
-        (
-            "legs",
-            Value::Arr(vec![
-                Value::object([
-                    ("name", Value::from("fig6a single fig6d")),
-                    ("total_cycles", Value::from(one.total_cycles)),
-                ]),
-                Value::object([
-                    ("name", Value::from("fig6a soc2 data contended")),
-                    ("total_cycles", Value::from(rep_c.total_cycles)),
-                    ("noc_denied", Value::from(rep_c.noc.denied)),
-                    ("contention_overhead", Value::from(round2(contention_overhead))),
-                ]),
-                Value::object([
-                    ("name", Value::from("fig6a soc2 data widened")),
-                    ("total_cycles", Value::from(rep_w.total_cycles)),
-                    ("noc_denied", Value::from(rep_w.noc.denied)),
-                ]),
-                Value::object([
-                    ("name", Value::from("resnet8 single fig6d")),
-                    ("total_cycles", Value::from(rn_one.total_cycles)),
-                ]),
-                Value::object([
-                    ("name", Value::from("resnet8 soc2 pipeline")),
-                    ("total_cycles", Value::from(rep_p.total_cycles)),
-                    ("noc_denied", Value::from(rep_p.noc.denied)),
-                    ("handoff_releases", Value::from(rep_p.noc.barrier_releases)),
-                    ("pipeline_speedup", Value::from(round2(pipeline_speedup))),
-                ]),
-            ]),
-        ),
+        ("reps", Value::from(reps)),
+        ("legs", Value::Arr(legs)),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_soc_scale.json");
     std::fs::write(out, doc.to_json()).expect("writing BENCH_soc_scale.json");
     println!("wrote {out}");
+
+    // Regression floors (CI bench-smoke): deliberately conservative
+    // wall-clock ratio ratchets — raise as the trajectory accumulates.
+    let enforce = std::env::var("SNAX_BENCH_ENFORCE_FLOOR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if enforce {
+        let floor_path = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/soc_scale_floor.json");
+        let floor_raw =
+            std::fs::read_to_string(floor_path).expect("reading soc_scale_floor.json");
+        let floor = parse(&floor_raw).expect("parsing soc_scale_floor.json");
+        let par_floor = floor
+            .get("parallel_over_sequential_floor")
+            .and_then(|v| v.as_f64())
+            .expect("parallel floor key missing");
+        if parallel_over_sequential < par_floor {
+            eprintln!(
+                "FAIL: parallel/sequential {parallel_over_sequential:.2}x below \
+                 floor {par_floor:.2}x"
+            );
+            std::process::exit(1);
+        }
+        println!("parallel floor check ok: {parallel_over_sequential:.2}x >= {par_floor:.2}x");
+        let memo_floor = floor
+            .get("memo_on_over_off_contended_floor")
+            .and_then(|v| v.as_f64())
+            .expect("memo floor key missing");
+        if memo_on_over_off < memo_floor {
+            eprintln!(
+                "FAIL: contended memo-on/off {memo_on_over_off:.2}x below \
+                 floor {memo_floor:.2}x"
+            );
+            std::process::exit(1);
+        }
+        println!("memo floor check ok: {memo_on_over_off:.2}x >= {memo_floor:.2}x");
+    }
 }

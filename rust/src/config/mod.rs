@@ -388,14 +388,31 @@ impl SystemConfig {
     /// `soc4`: four fig6d clones (`fig6d0`..`fig6d3`) on one shared
     /// link — the data-parallel scaling scenario.
     pub fn soc4() -> Self {
-        let clusters = (0..4)
+        Self::fig6d_clones("soc4", 4)
+    }
+
+    /// `soc8`: eight fig6d clones on one shared link — the first
+    /// scale-out rung past soc4 (DESIGN.md §14 benchmarks).
+    pub fn soc8() -> Self {
+        Self::fig6d_clones("soc8", 8)
+    }
+
+    /// `soc16`: sixteen fig6d clones on one shared link — the largest
+    /// checked-in scale-out preset.
+    pub fn soc16() -> Self {
+        Self::fig6d_clones("soc16", 16)
+    }
+
+    /// `n` fig6d clones (`fig6d0`..`fig6d{n-1}`) on the default NoC.
+    fn fig6d_clones(name: &str, n: usize) -> Self {
+        let clusters = (0..n)
             .map(|i| {
                 let mut c = ClusterConfig::fig6d();
                 c.name = format!("fig6d{i}");
                 c
             })
             .collect();
-        Self { name: "soc4".into(), clusters, noc: NocConfig::default() }
+        Self { name: name.into(), clusters, noc: NocConfig::default() }
     }
 
     /// Preset lookup. Single-cluster preset names (`fig6b`/`fig6c`/
@@ -405,11 +422,14 @@ impl SystemConfig {
         match name {
             "soc2" => Ok(Self::soc2()),
             "soc4" => Ok(Self::soc4()),
+            "soc8" => Ok(Self::soc8()),
+            "soc16" => Ok(Self::soc16()),
             other => {
                 let cluster = ClusterConfig::preset(other).map_err(|_| {
                     anyhow::anyhow!(
                         "unknown system preset '{other}' \
-                         (expected soc2/soc4 or a cluster preset fig6b/fig6c/fig6d)"
+                         (expected soc2/soc4/soc8/soc16 or a cluster preset \
+                         fig6b/fig6c/fig6d)"
                     )
                 })?;
                 Ok(Self::single(cluster))
@@ -1026,7 +1046,7 @@ mod tests {
 
     #[test]
     fn system_presets_validate() {
-        for p in ["fig6b", "fig6c", "fig6d", "soc2", "soc4"] {
+        for p in ["fig6b", "fig6c", "fig6d", "soc2", "soc4", "soc8", "soc16"] {
             let sys = SystemConfig::preset(p).unwrap();
             sys.validate().unwrap();
             if matches!(p, "fig6b" | "fig6c" | "fig6d") {
@@ -1038,7 +1058,12 @@ mod tests {
         assert_eq!(SystemConfig::soc2().n_clusters(), 2);
         assert!(SystemConfig::soc2().contended());
         assert_eq!(SystemConfig::soc4().n_clusters(), 4);
-        assert!(SystemConfig::preset("nope").is_err());
+        assert_eq!(SystemConfig::soc8().n_clusters(), 8);
+        assert_eq!(SystemConfig::soc16().n_clusters(), 16);
+        assert!(SystemConfig::soc8().contended());
+        assert!(SystemConfig::soc16().contended());
+        let err = SystemConfig::preset("nope").unwrap_err().to_string();
+        assert!(err.contains("soc8/soc16"), "error lists the scale-out presets: {err}");
     }
 
     #[test]
@@ -1047,6 +1072,8 @@ mod tests {
             SystemConfig::single(ClusterConfig::fig6d()),
             SystemConfig::soc2(),
             SystemConfig::soc4(),
+            SystemConfig::soc8(),
+            SystemConfig::soc16(),
         ] {
             let text = sys.to_toml();
             let back = SystemConfig::from_toml(&text).unwrap();

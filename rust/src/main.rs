@@ -9,14 +9,16 @@
 //!               [--engine event|exact] (event-driven fast engine vs.
 //!               the exact per-cycle reference; identical reports)
 //! snax simulate --net resnet8 --system soc2 --partition pipeline|data
-//!               (multi-cluster SoC: partition pass + shared-NoC
-//!               contention simulation)
+//!               [--threads N] (multi-cluster SoC: partition pass +
+//!               shared-NoC contention simulation; independent members
+//!               fan out over N driver threads, byte-identical reports)
 //! snax sweep    --nets fig6a,dae --clusters fig6b,fig6c,fig6d
 //!               [--pipelined] [--inferences N] [--engine event|exact]
 //!               [--threads N] [--json out.json]
 //!               (batch fan-out: every net x cluster combination
 //!               simulated concurrently, results in input order)
-//! snax profile  --net fig6a --cluster fig6d [--system soc2] [--json out.json]
+//! snax profile  --net fig6a --cluster fig6d [--system soc2] [--threads N]
+//!               [--json out.json]
 //!               (cycle-accounting ledger: stall-cause attribution per
 //!               unit, roofline placement, per-layer spans)
 //! snax serve    [--port P] [--workers N] [--cache N] [--queue N]
@@ -91,9 +93,16 @@ fn cluster_for(args: &Args) -> Result<ClusterConfig> {
     }
 }
 
-/// Shared `--pipelined` / `--inferences` / `--engine` / `--memo`
-/// parsing for the simulate and sweep subcommands.
-fn sim_options(args: &Args) -> Result<(CompileOptions, snax::sim::SimMode, bool)> {
+/// Shared `--pipelined` / `--inferences` / `--engine` / `--memo` /
+/// `--threads` parsing for the simulate, profile, and sweep
+/// subcommands. `--threads` caps *driver-level* fan-out (sweep jobs,
+/// system members); each consumer divides the same budget down to
+/// per-member functional-retire pools (`with_func_threads`) so nested
+/// parallelism never multiplies. Reports are byte-identical at any
+/// setting — threads change wall-clock only.
+fn sim_options(
+    args: &Args,
+) -> Result<(CompileOptions, snax::sim::SimMode, bool, Option<usize>)> {
     let n: u32 = args.get("inferences", "1").parse()?;
     let opts = if args.has("pipelined") {
         CompileOptions::pipelined().with_inferences(n.max(2))
@@ -110,7 +119,12 @@ fn sim_options(args: &Args) -> Result<(CompileOptions, snax::sim::SimMode, bool)
         "off" => false,
         other => bail!("unknown --memo '{other}' (expected on|off)"),
     };
-    Ok((opts, mode, memo))
+    let threads: Option<usize> = args
+        .flags
+        .get("threads")
+        .map(|t| t.parse().context("bad --threads"))
+        .transpose()?;
+    Ok((opts, mode, memo, threads))
 }
 
 fn phase_stats_json(s: &snax::sim::PhaseCacheStats) -> snax::runtime::json::Value {
@@ -183,10 +197,10 @@ fn cmd_simulate_system(args: &Args) -> Result<()> {
         None => PartitionStrategy::default_for(&sys),
     };
     let g = graph_for(&args.get("net", "fig6a"))?;
-    let (opts, mode, memo) = sim_options(args)?;
+    let (opts, mode, memo, threads) = sim_options(args)?;
     let (ckpt_plan, resume_ck) = checkpoint_args(args)?;
     let cs = compile_system(&g, &sys, &opts, strategy)?;
-    let mut system = System::new(&sys).with_memo(memo);
+    let mut system = System::new(&sys).with_memo(memo).with_threads(threads);
     if let Some(plan) = ckpt_plan {
         system = system.with_checkpoint(plan);
     }
@@ -243,7 +257,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     let cfg = cluster_for(args)?;
     let g = graph_for(&args.get("net", "fig6a"))?;
-    let (opts, mode, memo) = sim_options(args)?;
+    // Single-cluster runs have no driver-level fan-out; `--threads` is
+    // accepted (shared parser) and unused.
+    let (opts, mode, memo, _threads) = sim_options(args)?;
     let (ckpt_plan, resume_ck) = checkpoint_args(args)?;
     let cp = compile(&g, &cfg, &opts)?;
     // Same sizing as the engine's default per-run cache — the explicit
@@ -421,7 +437,7 @@ fn profile_cluster_fragment(
 /// print where every unit's cycles went (DESIGN.md §10).
 fn cmd_profile(args: &Args) -> Result<()> {
     use snax::runtime::json::Value;
-    let (opts, mode, memo) = sim_options(args)?;
+    let (opts, mode, memo, threads) = sim_options(args)?;
     let g = graph_for(&args.get("net", "fig6a"))?;
     let envelope = if args.has("system") || args.has("partition") {
         let sys = system_for(args)?;
@@ -432,6 +448,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
         let cs = compile_system(&g, &sys, &opts, strategy)?;
         let rep = System::new(&sys)
             .with_memo(memo)
+            .with_threads(threads)
             .with_ledger(true)
             .run_mode(&cs.programs(), mode)?;
         println!(
@@ -542,11 +559,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         };
         clusters.push(cfg);
     }
-    let (opts, mode, memo) = sim_options(args)?;
-    let threads: usize = match args.flags.get("threads") {
-        Some(t) => t.parse().context("bad --threads")?,
-        None => snax::parallel::default_parallelism(),
-    };
+    let (opts, mode, memo, threads_opt) = sim_options(args)?;
+    let threads: usize = threads_opt.unwrap_or_else(snax::parallel::default_parallelism);
     // One phase cache for the whole batch: jobs sharing a (net,
     // cluster) control structure replay each other's barrier-to-barrier
     // phases. Replay is byte-equivalent to simulation, so results stay
@@ -890,7 +904,10 @@ fn help() {
          \u{20}           [--engine event|exact] [--memo on|off] [--json out.json]\n\
          \u{20}           (--memo: barrier-delimited phase replay; identical reports,\n\
          \u{20}            --json includes phase-cache hit/miss counters)\n\
-         \u{20}           [--system soc2|soc4|preset|file.toml] [--partition none|pipeline|data]\n\
+         \u{20}           [--system soc2|soc4|soc8|soc16|preset|file.toml]\n\
+         \u{20}           [--partition none|pipeline|data] [--threads N]\n\
+         \u{20}           (--threads: driver fan-out for independent members; reports\n\
+         \u{20}            are byte-identical at any thread count, see DESIGN.md §14)\n\
          \u{20}           (multi-cluster SoC: cross-cluster partition pass, shared-NoC\n\
          \u{20}            contention, per-cluster reports; single presets = system-of-1)\n\
          \u{20}           [--checkpoint-dir dir] [--checkpoint-every N] [--resume file|dir]\n\
@@ -915,9 +932,9 @@ fn help() {
          \u{20}             consistent-hash shared caches with peer health and\n\
          \u{20}             local-only degradation; see DESIGN.md §13)\n\
          \u{20}            (concurrent compile+simulate HTTP service; see DESIGN.md §6, §11)\n\
-         \u{20}  profile   --net fig6a --cluster fig6d [--system soc2|soc4]\n\
+         \u{20}  profile   --net fig6a --cluster fig6d [--system soc2|soc4|soc8|soc16]\n\
          \u{20}            [--pipelined] [--inferences N] [--engine event|exact]\n\
-         \u{20}            [--memo on|off] [--json out.json]\n\
+         \u{20}            [--memo on|off] [--threads N] [--json out.json]\n\
          \u{20}            (cycle-accounting ledger: per-unit stall-cause attribution,\n\
          \u{20}             roofline placement, per-layer spans; see DESIGN.md §10)\n\
          \u{20}  fig8      [--json out.json] (the heterogeneous-acceleration cascade)\n\

@@ -76,6 +76,7 @@ use crate::sim::checkpoint::load as load_checkpoint;
 use crate::sim::{
     ledger, CancelReason, CancelToken, Cancelled, CheckpointPlan, Cluster, LedgerReport,
     NocStats, PhaseCache, ProgressSink, SimMode, SimReport, System, SystemReport,
+    SystemRunStats,
 };
 
 use super::admission::{Admission, Shed};
@@ -109,6 +110,10 @@ struct SimRequest {
     /// Per-request wall deadline in milliseconds (`None` = the server
     /// default, which may itself be "no deadline").
     deadline_ms: Option<u64>,
+    /// Driver worker threads for multi-cluster system runs
+    /// (`"threads"`, system bodies only). Reports are byte-identical
+    /// at any setting (DESIGN.md §14); `None` = auto.
+    threads: Option<usize>,
 }
 
 fn parse_sim_request(body: &[u8]) -> Result<SimRequest> {
@@ -200,7 +205,20 @@ fn parse_sim_value(v: &Value) -> Result<SimRequest> {
     let detach = v.get("detach").and_then(|x| x.as_bool()).unwrap_or(false);
     let profile = v.get("profile").and_then(|x| x.as_bool()).unwrap_or(false);
     let deadline_ms = parse_deadline_ms(v)?;
-    Ok(SimRequest { graph, cfg, system, opts, mode, detach, profile, deadline_ms })
+    let threads = match v.get("threads") {
+        None => None,
+        Some(x) => {
+            if system.is_none() {
+                bail!("'threads' applies to system requests only");
+            }
+            let t = x.as_u64().context("'threads' must be a positive integer")?;
+            if !(1..=256).contains(&t) {
+                bail!("'threads' must be in 1..=256, got {t}");
+            }
+            Some(t as usize)
+        }
+    };
+    Ok(SimRequest { graph, cfg, system, opts, mode, detach, profile, deadline_ms, threads })
 }
 
 /// Optional `"deadline_ms"` field, bounded to one hour.
@@ -699,6 +717,12 @@ struct RunGauges {
     /// (cluster index, unit name, utilization).
     utilization: Vec<(usize, String, f64)>,
     noc: NocStats,
+    /// Driver thread budget of the last system run
+    /// (`snax_system_threads`); 0 until a system run completes.
+    system_threads: u64,
+    /// Per-member quantum advances of the last system run
+    /// (`snax_cluster_quanta`).
+    member_quanta: Vec<u64>,
 }
 
 impl AppState {
@@ -751,7 +775,14 @@ impl AppState {
     }
 
     /// Refresh the `GET /metrics` run gauges from a completed run.
-    fn store_run_gauges(&self, reports: &[&SimReport], noc: Option<&NocStats>) {
+    /// `run_stats` is present for system runs only (driver thread
+    /// budget + per-member quantum advances, DESIGN.md §14).
+    fn store_run_gauges(
+        &self,
+        reports: &[&SimReport],
+        noc: Option<&NocStats>,
+        run_stats: Option<SystemRunStats>,
+    ) {
         let utilization = reports
             .iter()
             .enumerate()
@@ -759,8 +790,13 @@ impl AppState {
                 r.units.iter().map(move |u| (ci, u.name.clone(), u.utilization()))
             })
             .collect();
-        *self.run_gauges.lock().unwrap() =
-            RunGauges { utilization, noc: noc.cloned().unwrap_or_default() };
+        let stats = run_stats.unwrap_or_default();
+        *self.run_gauges.lock().unwrap() = RunGauges {
+            utilization,
+            noc: noc.cloned().unwrap_or_default(),
+            system_threads: stats.threads as u64,
+            member_quanta: stats.member_quanta,
+        };
     }
 
     /// Flag new keep-alive turns to stop (set before draining the
@@ -1581,7 +1617,7 @@ fn simulate_once(
         .run_mode(&cp.program, req.mode)
         .context("simulating workload")
         .map_err(SimError::Run)?;
-    state.store_run_gauges(&[&report], None);
+    state.store_run_gauges(&[&report], None, None);
     Ok((render_report(&cp, &req.cfg, &report), hit))
 }
 
@@ -1601,20 +1637,19 @@ fn simulate_system_once(
         .sys_cache
         .get_or_insert_with(key, || compile_system(&req.graph, sys, &req.opts, *strategy))
         .map_err(SimError::Compile)?;
-    let mut system = System::new(sys).with_ledger(req.profile);
+    let mut system =
+        System::new(sys).with_ledger(req.profile).with_threads(req.threads);
     if let Some(sink) = progress {
         system = system.with_progress(sink);
     }
     if let Some(token) = cancel {
         system = system.with_cancel(token);
     }
-    if sys.n_clusters() == 1 {
-        // A system-of-1 keeps the standalone memoization behavior;
-        // multi-cluster members run memo-off regardless (DESIGN.md §9).
-        match &state.phase_cache {
-            Some(pc) => system = system.with_phase_cache(pc.clone()),
-            None => system = system.with_memo(false),
-        }
+    // Members memoize under contention too (DESIGN.md §14): the server
+    // phase cache, when configured, is shared across every run shape.
+    match &state.phase_cache {
+        Some(pc) => system = system.with_phase_cache(pc.clone()),
+        None => system = system.with_memo(false),
     }
     if let Some(n) = func_threads {
         system = system.with_func_threads(n);
@@ -1626,7 +1661,11 @@ fn simulate_system_once(
         .run_mode(&cs.programs(), req.mode)
         .context("simulating system")
         .map_err(SimError::Run)?;
-    state.store_run_gauges(&rep.clusters.iter().collect::<Vec<_>>(), Some(&rep.noc));
+    state.store_run_gauges(
+        &rep.clusters.iter().collect::<Vec<_>>(),
+        Some(&rep.noc),
+        Some(system.last_run_stats()),
+    );
     Ok((render_system_report(&cs, &rep), hit))
 }
 
@@ -1664,13 +1703,12 @@ fn simulate_resume(
             .map_err(SimError::Compile)?;
         let mut system = System::new(sys)
             .with_ledger(req.profile)
+            .with_threads(req.threads)
             .with_progress(progress)
             .with_cancel(cancel);
-        if sys.n_clusters() == 1 {
-            match &state.phase_cache {
-                Some(pc) => system = system.with_phase_cache(pc.clone()),
-                None => system = system.with_memo(false),
-            }
+        match &state.phase_cache {
+            Some(pc) => system = system.with_phase_cache(pc.clone()),
+            None => system = system.with_memo(false),
         }
         if let Some(plan) = ckpt {
             system = system.with_checkpoint(plan);
@@ -1679,7 +1717,11 @@ fn simulate_resume(
             .resume_mode(&cs.programs(), req.mode, &ck)
             .context("resuming system simulation")
             .map_err(SimError::Run)?;
-        state.store_run_gauges(&rep.clusters.iter().collect::<Vec<_>>(), Some(&rep.noc));
+        state.store_run_gauges(
+            &rep.clusters.iter().collect::<Vec<_>>(),
+            Some(&rep.noc),
+            Some(system.last_run_stats()),
+        );
         return Ok((render_system_report(&cs, &rep), hit));
     }
     let key = program_key(&req.graph, &req.cfg, &req.opts);
@@ -1702,7 +1744,7 @@ fn simulate_resume(
         .resume_mode(&cp.program, req.mode, &ck)
         .context("resuming workload")
         .map_err(SimError::Run)?;
-    state.store_run_gauges(&[&report], None);
+    state.store_run_gauges(&[&report], None, None);
     Ok((render_report(&cp, &req.cfg, &report), hit))
 }
 
@@ -2218,6 +2260,20 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
     }
     let _ = writeln!(
         out,
+        "# HELP snax_system_threads Driver thread budget of the last completed system run (0 = no system run yet)."
+    );
+    let _ = writeln!(out, "# TYPE snax_system_threads gauge");
+    let _ = writeln!(out, "snax_system_threads {}", gauges.system_threads);
+    let _ = writeln!(
+        out,
+        "# HELP snax_cluster_quanta Per-member quantum advances of the last completed system run."
+    );
+    let _ = writeln!(out, "# TYPE snax_cluster_quanta gauge");
+    for (ci, q) in gauges.member_quanta.iter().enumerate() {
+        let _ = writeln!(out, "snax_cluster_quanta{{cluster=\"{ci}\"}} {q}");
+    }
+    let _ = writeln!(
+        out,
         "# HELP snax_requests_shed_total Requests shed by admission control, by reason."
     );
     let _ = writeln!(out, "# TYPE snax_requests_shed_total counter");
@@ -2705,6 +2761,38 @@ mod tests {
     }
 
     #[test]
+    fn system_threads_field_is_validated_and_exported_on_metrics() {
+        // "threads" is a system-only knob.
+        assert!(parse_sim_request(br#"{"net":"fig6a","cluster":"fig6d","threads":2}"#).is_err());
+        assert!(parse_sim_request(br#"{"net":"fig6a","system":"soc2","threads":0}"#).is_err());
+        let ok = parse_sim_request(br#"{"net":"fig6a","system":"soc2","threads":2}"#).unwrap();
+        assert_eq!(ok.threads, Some(2));
+
+        let st = state();
+        let base = r#"{"net":"fig6a","system":"soc2","partition":"data"}"#;
+        let one = route(&st, &post("/simulate", base));
+        assert_eq!(one.status, 200, "{}", String::from_utf8_lossy(&one.body));
+        let two = route(
+            &st,
+            &post("/simulate", r#"{"net":"fig6a","system":"soc2","partition":"data","threads":2}"#),
+        );
+        assert_eq!(two.status, 200, "{}", String::from_utf8_lossy(&two.body));
+        // The compile is cached but the simulation re-runs at threads=2;
+        // byte-identity at any thread count (DESIGN.md §14) makes the
+        // rendered bodies equal anyway.
+        assert_eq!(one.body, two.body, "system reports must not depend on threads");
+
+        let resp = route(&st, &get("/metrics"));
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body).unwrap();
+        lint_prometheus(&text);
+        assert!(text.contains("snax_system_threads 2"), "{text}");
+        assert!(text.contains("snax_cluster_quanta{cluster=\"0\"}"), "{text}");
+        assert!(text.contains("snax_cluster_quanta{cluster=\"1\"}"), "{text}");
+        st.pool.shutdown();
+    }
+
+    #[test]
     fn system_compile_endpoint_reports_partition_shape() {
         let st = state();
         let resp = route(
@@ -2820,6 +2908,9 @@ mod tests {
         assert!(text.contains("snax_jobs_inflight 0"), "{text}");
         assert!(text.contains("snax_unit_utilization{cluster=\"0\",unit=\"gemm0\"}"), "{text}");
         assert!(text.contains("snax_noc_granted 0"), "{text}");
+        // System-run families always render (0 / empty before any system run).
+        assert!(text.contains("snax_system_threads 0"), "{text}");
+        assert!(text.contains("# HELP snax_cluster_quanta"), "{text}");
         assert!(text.contains("snax_job_panics_total 0"), "{text}");
         assert!(text.contains("snax_coalesced_total 0"), "{text}");
         assert!(text.contains("snax_breaker_state 0"), "{text}");

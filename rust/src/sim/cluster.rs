@@ -111,6 +111,10 @@ pub(crate) struct SysLink {
     /// Shared SoC state (NoC grant ledger + system barrier file),
     /// lent by the system driver around each quantum.
     pub(crate) shared: Option<Box<SocShared>>,
+    /// Phase-seed salt identifying the system's contention shape, so
+    /// member records never collide with standalone records of the
+    /// same cluster/program (DESIGN.md §14).
+    pub(crate) salt: u64,
 }
 
 /// Outcome of examining a system barrier in `step_cores`.
@@ -602,6 +606,15 @@ struct Recording {
     /// Per-core ledger tallies at phase entry (empty unless ledgered):
     /// the finalized record stores end − base as additive deltas.
     ledger_base: Vec<[u64; NCATS]>,
+    /// The phase examined a system barrier (arrival, poll, or the idle
+    /// fast-forward consulting one). Such phases depend on neighbor
+    /// timing in ways no fingerprint can re-validate, so they are
+    /// discarded at finalize (DESIGN.md §14).
+    sys_taint: bool,
+    /// Shared-NoC grant decisions observed by this phase, as
+    /// `(absolute cycle, beat_bits, granted)` — made entry-relative in
+    /// the finalized record. Empty outside contended systems.
+    noc_pattern: Vec<(u64, u32, bool)>,
 }
 
 /// Live phase-memoization state of one run.
@@ -950,6 +963,7 @@ impl<'p> SimState<'p> {
             let mut min_wake = u64::MAX;
             let mut any_ready = false;
             let mut sys_blocked = false;
+            let mut sys_seen = false;
             for ci in 0..self.cores.len() {
                 let c = &self.cores[ci];
                 if c.done {
@@ -962,13 +976,23 @@ impl<'p> SimState<'p> {
                 } else if let Some(t_rel) = self.sys_release_for(ci) {
                     // Released system barrier: crossable once the local
                     // clock reaches the release time.
+                    sys_seen = true;
                     if t_rel <= self.cycle {
                         any_ready = true;
                     } else {
                         min_wake = min_wake.min(t_rel);
                     }
                 } else if self.core_at_sys_barrier(ci) {
+                    sys_seen = true;
                     sys_blocked = true;
+                }
+            }
+            // Consulting a system barrier's release time makes this
+            // phase's timing a function of neighbor arrivals: poison
+            // any in-flight recording (DESIGN.md §14).
+            if sys_seen {
+                if let Some(rec) = self.memo_recording() {
+                    rec.sys_taint = true;
                 }
             }
             if !any_ready {
@@ -1021,13 +1045,14 @@ impl<'p> SimState<'p> {
     // -- multi-cluster system hooks -----------------------------------------
 
     /// Join a multi-cluster system as member `idx`: the shared external
-    /// memory lives with the driver (the local image is dropped), and
-    /// phase memoization is disabled — under shared-NoC contention a
-    /// cluster's timing is no longer independent of its neighbors, so
-    /// the phase fingerprint would be unsound (DESIGN.md §9).
-    pub(crate) fn attach_system(&mut self, idx: usize) {
-        self.sys = Some(SysLink { idx, shared: None });
-        self.memo_on = false;
+    /// memory lives with the driver (the local image is dropped).
+    /// Phase memoization stays available — member phases fingerprint
+    /// the NoC grant pattern they observed and are only replayed when
+    /// the driver-provided lookahead horizon and a re-decided grant
+    /// pattern both match (DESIGN.md §14, retiring the §9.4 force-off
+    /// rule). `salt` keys member records apart from standalone ones.
+    pub(crate) fn attach_system(&mut self, idx: usize, salt: u64) {
+        self.sys = Some(SysLink { idx, shared: None, salt });
     }
 
     pub(crate) fn set_mode(&mut self, mode: SimMode) {
@@ -1216,12 +1241,21 @@ impl<'p> SimState<'p> {
             .shared_phase_cache
             .clone()
             .unwrap_or_else(|| Arc::new(PhaseCache::for_run()));
-        let seed = phase::phase_seed(
+        let mut seed = phase::phase_seed(
             self.cfg,
             self.program,
             self.trace.is_some(),
             self.ledger.is_some(),
         );
+        // Attached members mix in the system salt: a member's record
+        // carries NoC-pattern/horizon obligations a standalone run
+        // could neither produce nor re-validate.
+        if let Some(link) = &self.sys {
+            let mut h = crate::compiler::fingerprint::Fnv1a::new();
+            h.write_u64(seed);
+            h.write_u64(link.salt);
+            seed = h.finish();
+        }
         self.memo = Some(MemoCtx {
             cache,
             seed,
@@ -1571,6 +1605,13 @@ impl<'p> SimState<'p> {
                 )
             };
             if let Some(maps) = maps {
+                if !self.sys_replay_admissible(&rec) {
+                    // Contention environment differs (or the lookahead
+                    // horizon is too short to pin it down): a cache
+                    // miss, never a wrong replay. Fall through to the
+                    // next candidate / live simulation.
+                    continue;
+                }
                 cache.note_hit(rec.len);
                 self.apply_replay(&rec, &maps)?;
                 let events = self.counters.barrier_events;
@@ -1583,6 +1624,37 @@ impl<'p> SimState<'p> {
         cache.note_miss();
         self.start_recording(key, snap);
         Ok(false)
+    }
+
+    /// §14 admission test for replaying `rec` at the current cycle
+    /// inside a multi-cluster system. Standalone runs admit records
+    /// with no NoC obligations only (members' records are seed-salted
+    /// apart, so a pattern here means a stale cache — refuse).
+    ///
+    /// For a member, a replay spanning `[cycle, cycle + len)` is sound
+    /// iff no neighbor can interleave an observable effect inside the
+    /// span — guaranteed when the driver-computed lookahead horizon
+    /// (`others_min`, the minimum cycle any other live member sits at)
+    /// clears the span end — and, if the record carries a NoC grant
+    /// pattern, re-deciding every recorded request against the current
+    /// grant ledger reproduces the recorded outcomes exactly. Records
+    /// with no pattern and no ext-side DMA touch neither shared
+    /// resource and replay unconditionally.
+    fn sys_replay_admissible(&self, rec: &PhaseRecord) -> bool {
+        let Some(link) = &self.sys else {
+            return rec.noc_pattern.is_empty();
+        };
+        if rec.noc_pattern.is_empty() && !rec.ext_touch {
+            return true;
+        }
+        let Some(sh) = link.shared.as_deref() else { return false };
+        if sh.others_min < self.cycle + rec.len {
+            return false;
+        }
+        if rec.noc_pattern.is_empty() {
+            return true;
+        }
+        sh.noc.contended() && sh.noc.pattern_admissible(self.cycle, &rec.noc_pattern)
     }
 
     fn start_recording(&mut self, fp: u64, entry: CtrlSnap) {
@@ -1638,6 +1710,8 @@ impl<'p> SimState<'p> {
                 .as_deref()
                 .map(|lg| lg.cores.clone())
                 .unwrap_or_default(),
+            sys_taint: false,
+            noc_pattern: Vec::new(),
         });
     }
 
@@ -1647,6 +1721,13 @@ impl<'p> SimState<'p> {
     fn finalize_record(&mut self, rec: Recording, end: &CtrlSnap) {
         let len = self.cycle - rec.start_cycle;
         if len < MIN_PHASE_CYCLES {
+            return;
+        }
+        // A phase that examined a system barrier depends on neighbor
+        // arrival times no fingerprint can re-validate: never cache it
+        // (DESIGN.md §14). Recorded windows therefore never contain
+        // system-barrier instructions.
+        if rec.sys_taint {
             return;
         }
         let meta_snapshot: Vec<UnitMeta> =
@@ -1760,6 +1841,17 @@ impl<'p> SimState<'p> {
                 })
                 .collect(),
             layers: rec.layers.into_iter().collect(),
+            ext_touch: rec.effects.iter().any(|e| {
+                matches!(e, FnEffect::Dma(d) if {
+                    let (r, w) = phase::ext_sides(d.dir);
+                    r || w
+                })
+            }),
+            noc_pattern: rec
+                .noc_pattern
+                .iter()
+                .map(|&(c, b, g)| (c - rec.start_cycle, b, g))
+                .collect(),
             effects: rec.effects,
             trace_segs,
             ledger_deltas: self
@@ -1834,6 +1926,17 @@ impl<'p> SimState<'p> {
     fn apply_replay(&mut self, rec: &PhaseRecord, maps: &ReplayMaps) -> Result<()> {
         let ps = self.cycle;
         let pe = ps + rec.len;
+        // Re-book the phase's NoC grants/denials on the shared ledger
+        // so neighbors stepping later see the same per-cycle occupancy
+        // a live run would have produced (admission already re-decided
+        // each request, so every booking lands exactly as recorded).
+        if !rec.noc_pattern.is_empty() {
+            if let Some(sh) =
+                self.sys.as_mut().and_then(|l| l.shared.as_deref_mut())
+            {
+                sh.noc.apply_pattern(ps, &rec.noc_pattern);
+            }
+        }
         phase::counters_add(&mut self.counters, &rec.counters);
         for (u, d) in self.units.iter_mut().zip(&rec.unit_deltas) {
             u.stats.active_cycles += d.active;
@@ -2546,6 +2649,13 @@ impl<'p> SimState<'p> {
                         if id.0 >= SYS_BARRIER_BASE {
                             // System barrier: synchronizes clusters
                             // through the shared SoC barrier file.
+                            // Examining one (arrival, stall, or cross)
+                            // ties this phase's timing to neighbor
+                            // arrivals — poison any in-flight recording
+                            // (DESIGN.md §14).
+                            if let Some(rec) = self.memo_recording() {
+                                rec.sys_taint = true;
+                            }
                             let cyc = self.cycle;
                             let arrived = self.cores[ci].barrier_arrived;
                             let idx = match &self.sys {
@@ -2943,6 +3053,11 @@ impl<'p> SimState<'p> {
             .as_mut()
             .and_then(|l| l.shared.as_deref_mut())
             .map(|sh| &mut sh.noc);
+        // Under contention every grant decision becomes part of the
+        // phase's contention fingerprint (DESIGN.md §14). Uncontended
+        // requests are unconditional no-ops, so nothing is recorded.
+        let pat_on = noc.as_ref().is_some_and(|n| n.contended());
+        let mut rec = self.memo.as_mut().and_then(|m| m.rec.as_mut());
         for u in &mut self.units {
             let Some(job) = u.job.as_mut() else { continue };
             let Some(dj) = &job.dma else { continue };
@@ -2951,26 +3066,36 @@ impl<'p> SimState<'p> {
                 DmaDir::ExtToSpm => {
                     // AXI delivers one beat/cycle into the write FIFO.
                     let w = &mut u.writers[0];
-                    if job.axi_remaining > 0
-                        && w.fifo < w.fifo_depth
-                        && noc_grant(&mut noc, cycle, beat_bits, &mut self.counters)
-                    {
-                        w.fifo += 1;
-                        job.axi_remaining -= 1;
-                        self.counters.axi_beats += 1;
-                        u.stats.compute_cycles += 1;
+                    if job.axi_remaining > 0 && w.fifo < w.fifo_depth {
+                        let ok = noc_grant(&mut noc, cycle, beat_bits, &mut self.counters);
+                        if pat_on {
+                            if let Some(r) = rec.as_deref_mut() {
+                                r.noc_pattern.push((cycle, beat_bits, ok));
+                            }
+                        }
+                        if ok {
+                            w.fifo += 1;
+                            job.axi_remaining -= 1;
+                            self.counters.axi_beats += 1;
+                            u.stats.compute_cycles += 1;
+                        }
                     }
                 }
                 DmaDir::SpmToExt => {
                     let r = &mut u.readers[0];
-                    if job.axi_remaining > 0
-                        && r.fifo > 0
-                        && noc_grant(&mut noc, cycle, beat_bits, &mut self.counters)
-                    {
-                        r.fifo -= 1;
-                        job.axi_remaining -= 1;
-                        self.counters.axi_beats += 1;
-                        u.stats.compute_cycles += 1;
+                    if job.axi_remaining > 0 && r.fifo > 0 {
+                        let ok = noc_grant(&mut noc, cycle, beat_bits, &mut self.counters);
+                        if pat_on {
+                            if let Some(rr) = rec.as_deref_mut() {
+                                rr.noc_pattern.push((cycle, beat_bits, ok));
+                            }
+                        }
+                        if ok {
+                            r.fifo -= 1;
+                            job.axi_remaining -= 1;
+                            self.counters.axi_beats += 1;
+                            u.stats.compute_cycles += 1;
+                        }
                     }
                 }
                 DmaDir::SpmToSpm => {

@@ -159,6 +159,24 @@ impl ExtMem {
         &self.data
     }
 
+    /// Current backing-store length (grow-on-demand high-water mark).
+    pub(crate) fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Zero-extend the backing store to `len` bytes verbatim (no
+    /// power-of-two rounding — callers pass lengths that already came
+    /// out of [`ensure`](Self::ensure)). The system driver uses this to
+    /// merge the read-driven growth of members simulated on private
+    /// memories: `max` over already-rounded member lengths equals the
+    /// rounding of the global maximum touched address, so the merged
+    /// length is byte-identical to a fully interleaved run's.
+    pub(crate) fn grow_to(&mut self, len: usize) {
+        if self.data.len() < len {
+            self.data.resize(len, 0);
+        }
+    }
+
     /// Adopt a checkpointed backing store verbatim — including its
     /// grow-on-demand length, so a resumed run's final `ext_mem` bytes
     /// (length included) match the uninterrupted run exactly.

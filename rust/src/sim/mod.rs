@@ -46,5 +46,5 @@ pub use cluster::{Cluster, SimMode};
 pub use job::{OpDesc, Region};
 pub use ledger::{Cat, LedgerReport, LedgerRow, ProgressSink, CAT_NAMES, NCATS};
 pub use phase::{PhaseCache, PhaseCacheStats};
-pub use system::{NocStats, System, SystemReport};
+pub use system::{NocStats, System, SystemReport, SystemRunStats};
 pub use trace::{Counters, LayerStat, SimReport, UnitStats};

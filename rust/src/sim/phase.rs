@@ -327,6 +327,20 @@ pub(crate) struct PhaseRecord {
     /// Replay adds these verbatim — attribution sums are pure additive
     /// functions of the entry snapshot, so time-shifting is free.
     pub ledger_deltas: Vec<[u64; NCATS]>,
+    /// Contention fingerprint (DESIGN.md §14): every shared-NoC grant
+    /// decision the phase observed, as `(cycle - start, beat_bits,
+    /// granted)` in chronological request order. Empty for standalone
+    /// runs and for phases that never touched the shared link. A
+    /// replay is admitted only when re-deciding each request against
+    /// the *current* grant ledger reproduces the recorded outcome —
+    /// a mismatch is a cache miss, never a wrong replay.
+    pub noc_pattern: Vec<(u64, u32, bool)>,
+    /// The phase's functional effects touch external memory (any
+    /// AXI-crossing DMA retire). Inside a multi-cluster system such a
+    /// phase replays only once every neighbor has advanced past the
+    /// phase's whole span (the §14 lookahead horizon), because replay
+    /// applies the ext-mem effects at entry time.
+    pub ext_touch: bool,
 }
 
 impl PhaseRecord {
@@ -361,6 +375,7 @@ impl PhaseRecord {
             + self.stream_deltas.iter().map(|d| 16 + d.len() * 24).sum::<usize>()
             + self.unit_deltas.len() * 40
             + self.ledger_deltas.len() * (NCATS * 8 + 8)
+            + self.noc_pattern.len() * 16
     }
 
     /// Matching-relevant identity: two records with the same entry
@@ -375,6 +390,8 @@ impl PhaseRecord {
             && self.traced == other.traced
             && self.ledgered == other.ledgered
             && self.pc_delta == other.pc_delta
+            && self.noc_pattern == other.noc_pattern
+            && self.ext_touch == other.ext_touch
             && self.entry == other.entry
             && self.windows == other.windows
     }
@@ -610,6 +627,15 @@ fn match_window_item(
             Instr::Barrier { id: i2, participants: p2 },
         ) => {
             if participants != p2 {
+                return None;
+            }
+            // Barrier-id canonicalization pairs *local* barriers only:
+            // recorded windows never contain system barriers (any phase
+            // that examines one is discarded at finalize), so a current
+            // system-barrier instruction must never pair with a recorded
+            // local id — crossing it depends on neighbor clusters.
+            if (*id >= crate::isa::SYS_BARRIER_BASE) != (i2.0 >= crate::isa::SYS_BARRIER_BASE)
+            {
                 return None;
             }
             maps.pair_barrier(*id, i2.0)
@@ -1446,6 +1472,8 @@ mod tests {
             effects: vec![],
             trace_segs: vec![],
             ledger_deltas: vec![],
+            noc_pattern: vec![],
+            ext_touch: false,
         }
     }
 

@@ -24,10 +24,30 @@
 //!   `SimReport` is byte-identical to [`super::Cluster::run`]
 //!   (enforced by `tests/engine_equivalence.rs`).
 //!
-//! Phase memoization is **disabled** for multi-cluster members: under
-//! contention a cluster's barrier-to-barrier timing depends on its
-//! neighbors' traffic, which the phase fingerprint does not capture
-//! (the documented soundness rule — DESIGN.md §9).
+//! ## Conservative-PDES parallel driver (DESIGN.md §14)
+//!
+//! When the shared NoC cannot be oversubscribed and a member's program
+//! provably cannot interact with any neighbor — no system barriers and
+//! a statically race-free external-memory footprint — that member's
+//! lookahead horizon is infinite: the driver runs it to completion on
+//! its own engine (fanned out over [`crate::parallel`] worker threads)
+//! and merges its ext-mem writes afterwards. Members whose horizon is
+//! not infinite fall back to the sequential min-cycle loop above. Both
+//! paths execute the exact same per-member schedules at any thread
+//! count (including 1), so `SystemReport`s are byte-identical no
+//! matter how many threads run them — the same determinism discipline
+//! `crate::parallel` established for sweep fan-out.
+//!
+//! ## Phase memoization for members (DESIGN.md §14, retiring §9.4)
+//!
+//! Members memoize under contention by folding the observed shared-NoC
+//! grant/denial pattern into each phase record: a cached phase is
+//! admitted only when (a) every neighbor has already advanced past the
+//! phase's whole span, and (b) re-deciding each recorded request
+//! against the current grant ledger reproduces the recorded outcome.
+//! A mismatch is a cache miss (the phase simulates live), never a
+//! wrong replay. Phases that examine a system barrier are never
+//! recorded at all.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -102,7 +122,7 @@ impl NocLedger {
         if !self.contended {
             return true;
         }
-        let slots = beat_bits.div_ceil(self.link_bits.max(1)).max(1);
+        let slots = self.slots_for(beat_bits);
         let used = self.ledger.entry(cycle).or_insert(0);
         if *used + slots <= self.budget {
             if *used == 0 {
@@ -114,6 +134,56 @@ impl NocLedger {
         } else {
             self.denied += 1;
             false
+        }
+    }
+
+    /// Grant-slot cost of one beat of `beat_bits` (shared by the live
+    /// request path and pattern re-validation).
+    fn slots_for(&self, beat_bits: u32) -> u32 {
+        beat_bits.div_ceil(self.link_bits.max(1)).max(1)
+    }
+
+    /// Re-decide a recorded grant pattern against the current ledger
+    /// (DESIGN.md §14): walk the requests in recorded order, each
+    /// decided against ledger state *including the pattern's own
+    /// earlier grants*, and require every outcome to equal the
+    /// recorded one. Any divergence means the contention environment
+    /// changed — the caller must treat the phase as a cache miss.
+    pub(crate) fn pattern_admissible(&self, entry: u64, pat: &[(u64, u32, bool)]) -> bool {
+        let mut overlay: BTreeMap<u64, u32> = BTreeMap::new();
+        for &(rel, beat_bits, was_granted) in pat {
+            let cycle = entry + rel;
+            let slots = self.slots_for(beat_bits);
+            let used = self.ledger.get(&cycle).copied().unwrap_or(0)
+                + overlay.get(&cycle).copied().unwrap_or(0);
+            let grant = used + slots <= self.budget;
+            if grant != was_granted {
+                return false;
+            }
+            if grant {
+                *overlay.entry(cycle).or_insert(0) += slots;
+            }
+        }
+        true
+    }
+
+    /// Commit an admitted pattern: exactly the ledger/counter
+    /// mutations [`request`](Self::request) would have made live. The
+    /// member's own `noc_stall_cycles` are *not* touched here — the
+    /// replayed counter deltas already carry them.
+    pub(crate) fn apply_pattern(&mut self, entry: u64, pat: &[(u64, u32, bool)]) {
+        for &(rel, beat_bits, was_granted) in pat {
+            if !was_granted {
+                self.denied += 1;
+                continue;
+            }
+            let slots = self.slots_for(beat_bits);
+            let used = self.ledger.entry(entry + rel).or_insert(0);
+            if *used == 0 {
+                self.busy_cycles += 1;
+            }
+            *used += slots;
+            self.granted += 1;
         }
     }
 
@@ -228,6 +298,13 @@ impl SysBarriers {
 pub(crate) struct SocShared {
     pub(crate) noc: NocLedger,
     pub(crate) bars: SysBarriers,
+    /// Minimum local cycle over every *other* live member, written by
+    /// the driver before each lend (`u64::MAX` when all others are
+    /// done). This is the borrowing member's lookahead horizon
+    /// (DESIGN.md §14): neighbors can only issue NoC requests or
+    /// ext-mem accesses at cycles `>= others_min`, so any phase that
+    /// fits entirely below it sees a final contention environment.
+    pub(crate) others_min: u64,
 }
 
 /// Shared-interconnect statistics of one system run.
@@ -274,6 +351,22 @@ impl SystemReport {
     }
 }
 
+/// Observability snapshot of the most recent run on this [`System`]
+/// (feeds `snax_system_threads` / per-cluster quantum gauges on the
+/// server's `/metrics`). Deliberately *not* part of [`SystemReport`]:
+/// quantum counts depend on the parallel/sequential split, while
+/// reports must stay byte-identical at any thread count.
+#[derive(Debug, Default, Clone)]
+pub struct SystemRunStats {
+    /// Worker threads the driver was allowed to use.
+    pub threads: usize,
+    /// Members executed as independent parallel engines (infinite
+    /// lookahead horizon — DESIGN.md §14).
+    pub parallel_members: usize,
+    /// Quantum advances per member, in system order.
+    pub member_quanta: Vec<u64>,
+}
+
 /// The system simulator: construct once per [`SystemConfig`], run any
 /// number of compiled part-program sets against it.
 pub struct System {
@@ -281,12 +374,18 @@ pub struct System {
     memo: bool,
     phase_cache: Option<Arc<PhaseCache>>,
     func_threads: Option<usize>,
+    /// Driver worker threads ([`Self::with_threads`]); `None` = the
+    /// process default (`SNAX_THREADS` / available parallelism).
+    threads: Option<usize>,
     ledger: bool,
     progress: Option<Arc<ProgressSink>>,
     cancel: Option<Arc<CancelToken>>,
     /// Durable checkpointing plan (DESIGN.md §12); `None` = no
     /// checkpoint work at all.
     ckpt: Option<CheckpointPlan>,
+    /// Most recent run's observability snapshot (interior-mutable: the
+    /// run paths take `&self`).
+    run_stats: std::sync::Mutex<SystemRunStats>,
 }
 
 impl System {
@@ -296,10 +395,12 @@ impl System {
             memo: true,
             phase_cache: None,
             func_threads: None,
+            threads: None,
             ledger: false,
             progress: None,
             cancel: None,
             ckpt: None,
+            run_stats: std::sync::Mutex::new(SystemRunStats::default()),
         }
     }
 
@@ -324,16 +425,20 @@ impl System {
         self
     }
 
-    /// Phase-memoization switch. Only effective for systems-of-1:
-    /// multi-cluster members always run memo-off (the §9 soundness
-    /// rule), so reports are identical either way.
+    /// Phase-memoization switch (on by default). Multi-cluster members
+    /// memoize too: under contention every record carries the NoC
+    /// grant pattern it observed and replays only when the current
+    /// contention environment reproduces it (DESIGN.md §14, retiring
+    /// the former §9.4 force-off rule) — so reports are byte-identical
+    /// memo-on vs memo-off either way.
     pub fn with_memo(mut self, on: bool) -> Self {
         self.memo = on;
         self
     }
 
-    /// Share a phase cache (system-of-1 runs only; see
-    /// [`Self::with_memo`]).
+    /// Share a phase cache across runs (and across members — the
+    /// per-cluster identity seed keeps records from unrelated
+    /// program/config/system contexts apart).
     pub fn with_phase_cache(mut self, cache: Arc<PhaseCache>) -> Self {
         self.phase_cache = Some(cache);
         self
@@ -343,6 +448,27 @@ impl System {
     pub fn with_func_threads(mut self, n: usize) -> Self {
         self.func_threads = Some(n.max(1));
         self
+    }
+
+    /// Driver worker threads for the conservative-PDES parallel path
+    /// (DESIGN.md §14). `None` (the default) resolves to
+    /// `SNAX_THREADS` / the machine's available parallelism. Reports
+    /// are byte-identical at any setting — threads only change
+    /// wall-clock. When [`Self::with_func_threads`] is not set, the
+    /// per-member functional-retire pool is budgeted to
+    /// `threads / parallel_members` so nested parallelism never
+    /// multiplies (the sweep fan-out discipline).
+    pub fn with_threads(mut self, n: Option<usize>) -> Self {
+        self.threads = n.map(|n| n.max(1));
+        self
+    }
+
+    /// Observability snapshot of the most recent `run*`/`resume*` call
+    /// (thread count, parallel-member count, per-member quantum
+    /// advances). Not part of [`SystemReport`]: quantum counts depend
+    /// on the parallel/sequential split while reports must not.
+    pub fn last_run_stats(&self) -> SystemRunStats {
+        self.run_stats.lock().unwrap().clone()
     }
 
     /// Write durable checkpoints at barrier-release boundaries (system
@@ -461,16 +587,22 @@ impl System {
             st.restore_checkpoint(ck)?;
         }
         st.prepare();
+        let mut quanta = 0u64;
         loop {
             match st.step_quantum()? {
                 Quantum::Done => break,
-                Quantum::Progress => {}
+                Quantum::Progress => quanta += 1,
                 Quantum::SysBlocked => {
                     bail!("system barrier blocked in a system-of-1 run")
                 }
             }
         }
         let report = st.finish();
+        *self.run_stats.lock().unwrap() = SystemRunStats {
+            threads: self.threads.unwrap_or_else(crate::parallel::default_parallelism),
+            parallel_members: 0,
+            member_quanta: vec![quanta],
+        };
         Ok(SystemReport {
             total_cycles: report.total_cycles,
             noc: NocStats::default(),
@@ -494,6 +626,7 @@ impl System {
         let mut shared: Option<Box<SocShared>> = Some(Box::new(SocShared {
             noc: NocLedger::new(&self.cfg.noc, self.cfg.contended()),
             bars: SysBarriers::default(),
+            others_min: u64::MAX,
         }));
         let mut done = vec![false; n];
         let mut blocked = vec![false; n];
@@ -527,22 +660,151 @@ impl System {
                 shared_ext.preload(&p.ext_mem_init);
             }
         }
+        let threads = self
+            .threads
+            .unwrap_or_else(crate::parallel::default_parallelism)
+            .max(1);
+        // §14 independence analysis. Engages only for fresh runs with
+        // an unoversubscribable NoC and no checkpoint plan (checkpoint
+        // cuts need every member at a common top-of-quantum point, and
+        // resume must replay the checkpointed interleaving). Whether a
+        // member is solo depends only on config + programs — never on
+        // the thread count — so the member-to-path assignment, and with
+        // it every schedule, is identical at any `threads` setting.
+        let solo = if from.is_none() && self.ckpt.is_none() && !self.cfg.contended() {
+            let foots: Vec<ExtFootprint> = programs
+                .iter()
+                .enumerate()
+                .map(|(i, p)| ext_footprint(self.cfg.clusters[i].accelerators.len(), p))
+                .collect();
+            solo_members(&foots)
+        } else {
+            vec![false; n]
+        };
+        let solo_idx: Vec<usize> = (0..n).filter(|&i| solo[i]).collect();
+        let n_solo = solo_idx.len();
+        let mut quanta = vec![0u64; n];
+        let mut solo_reports: Vec<Option<SimReport>> = (0..n).map(|_| None).collect();
+        // On an uncontended NoC an attached member never touches the
+        // shared grant ledger ([`NocLedger::request`] is a no-op), so a
+        // solo member's quantum schedule equals the standalone
+        // engine's: run it detached, on a private external memory
+        // preloaded with every part's image (reads of neighbor-
+        // initialized regions see the same bytes the shared memory
+        // holds). Nested parallelism is budgeted like sweep fan-out:
+        // the per-member functional-retire pool shrinks so
+        // `members x func_threads <= threads`.
+        if n_solo > 0 {
+            let solo_fn_threads = match self.func_threads {
+                Some(t) => Some(t),
+                None if n_solo > 1 => Some((threads / n_solo.min(threads)).max(1)),
+                None => None,
+            };
+            let results = crate::parallel::map_indexed(n_solo, threads, |k| {
+                let i = solo_idx[k];
+                let run = || -> Result<(SimReport, ExtMem, u64)> {
+                    let mut st = SimState::new_bare(
+                        &self.cfg.clusters[i],
+                        programs[i],
+                        solo_fn_threads,
+                    )?;
+                    st.set_mode(mode);
+                    st.set_memo(self.memo);
+                    st.set_phase_cache(self.phase_cache.clone());
+                    if self.ledger {
+                        st.enable_ledger();
+                    }
+                    st.set_progress(self.progress.clone());
+                    st.set_cancel(self.cancel.clone());
+                    let mut ext = ExtMem::new();
+                    for p in programs {
+                        ext.preload(&p.ext_mem_init);
+                    }
+                    st.swap_ext(&mut ext);
+                    st.prepare();
+                    let mut q = 0u64;
+                    loop {
+                        match st.step_quantum()? {
+                            Quantum::Done => break,
+                            Quantum::Progress => q += 1,
+                            Quantum::SysBlocked => bail!(
+                                "solo member {i} reached a system barrier \
+                                 (independence analysis bug)"
+                            ),
+                        }
+                    }
+                    st.swap_ext(&mut ext);
+                    Ok((st.finish(), ext, q))
+                };
+                run().with_context(|| {
+                    format!("cluster '{}' (part {})", self.cfg.clusters[i].name, i)
+                })
+            });
+            let mut results: Vec<Option<Result<_>>> =
+                results.into_iter().map(Some).collect();
+            // Deterministic error choice: lowest member index wins.
+            for r in results.iter_mut() {
+                if r.as_ref().is_some_and(|r| r.is_err()) {
+                    return Err(r.take().unwrap().unwrap_err());
+                }
+            }
+            for (k, r) in results.into_iter().enumerate() {
+                let i = solo_idx[k];
+                let (report, priv_ext, q) = r.unwrap().unwrap();
+                quanta[i] = q;
+                // Merge: the member's statically proven write box holds
+                // exactly the bytes the interleaved run would have put
+                // there (nobody else writes inside it); read-driven
+                // growth merges as a running max, which reproduces the
+                // grow-on-demand length byte-for-byte (see
+                // [`ExtMem::grow_to`]).
+                if let Some((lo, hi)) = ext_footprint(
+                    self.cfg.clusters[i].accelerators.len(),
+                    programs[i],
+                )
+                .writes
+                {
+                    shared_ext.write(lo, &priv_ext.raw()[lo as usize..hi as usize]);
+                }
+                shared_ext.grow_to(priv_ext.len());
+                solo_reports[i] = Some(report);
+                done[i] = true;
+            }
+        }
+        // Member records are salted by the system's contention shape so
+        // the phase cache never conflates standalone and attached
+        // execution contexts (DESIGN.md §14).
+        let sys_salt = {
+            let mut h = Fnv1a::new();
+            h.write_str("snax-sys-member-v1");
+            h.write_u64(n as u64);
+            h.write_u32(self.cfg.noc.link_bits);
+            h.write_u32(self.cfg.noc.grants_per_cycle);
+            h.write_u64(u64::from(self.cfg.contended()));
+            h.finish()
+        };
         let mut states = Vec::with_capacity(n);
         for (i, &p) in programs.iter().enumerate() {
             // `new_bare`: members never own an image — they operate on
-            // the shared memory swapped in around each quantum.
+            // the shared memory swapped in around each quantum. Solo
+            // members get an unprepared placeholder so indices line up;
+            // they are already `done` and the loop never steps them.
             let mut st = SimState::new_bare(&self.cfg.clusters[i], p, self.func_threads)?;
-            st.set_mode(mode);
-            st.attach_system(i);
-            if self.ledger {
-                st.enable_ledger();
+            if !solo[i] {
+                st.set_mode(mode);
+                st.attach_system(i, sys_salt);
+                st.set_memo(self.memo);
+                st.set_phase_cache(self.phase_cache.clone());
+                if self.ledger {
+                    st.enable_ledger();
+                }
+                st.set_progress(self.progress.clone());
+                st.set_cancel(self.cancel.clone());
+                if let Some(ck) = from {
+                    st.restore_checkpoint(&ck.members[i])?;
+                }
+                st.prepare();
             }
-            st.set_progress(self.progress.clone());
-            st.set_cancel(self.cancel.clone());
-            if let Some(ck) = from {
-                st.restore_checkpoint(&ck.members[i])?;
-            }
-            st.prepare();
             states.push(st);
         }
         let mut releases_seen =
@@ -578,6 +840,21 @@ impl System {
                 })
                 .min_by_key(|&i| (i + n - start) % n)
                 .expect("a min-cycle cluster exists");
+            // Lookahead horizon for member `i`'s memo admission
+            // (DESIGN.md §14): no other live member can issue a NoC
+            // request or ext-mem effect before this cycle. Blocked
+            // members count — a release could wake them at their
+            // current cycle.
+            let others_min = (0..n)
+                .filter(|&j| j != i && !done[j])
+                .map(|j| states[j].cur_cycle())
+                .min()
+                .unwrap_or(u64::MAX);
+            {
+                let sh = shared.as_deref_mut().expect("shared state present");
+                sh.others_min = others_min;
+            }
+            quanta[i] += 1;
             // Lend the shared SoC state for exactly one quantum.
             let st = &mut states[i];
             st.swap_ext(&mut shared_ext);
@@ -642,7 +919,19 @@ impl System {
             }
         }
         let sh = shared.expect("shared state present");
-        let reports: Vec<SimReport> = states.into_iter().map(|st| st.finish()).collect();
+        let reports: Vec<SimReport> = states
+            .into_iter()
+            .zip(solo_reports)
+            .map(|(st, solo)| match solo {
+                Some(r) => r,
+                None => st.finish(),
+            })
+            .collect();
+        *self.run_stats.lock().unwrap() = SystemRunStats {
+            threads,
+            parallel_members: n_solo,
+            member_quanta: quanta,
+        };
         Ok(SystemReport {
             total_cycles: reports.iter().map(|r| r.total_cycles).max().unwrap_or(0),
             noc: NocStats {
@@ -655,6 +944,166 @@ impl System {
             ext_mem: shared_ext.into_raw(),
         })
     }
+}
+
+/// Statically derived external-memory footprint of one part program:
+/// union bounding boxes of every ext-side DMA access, plus whether the
+/// program arrives at system barriers. Feeds the §14 independence
+/// analysis — instruction streams are branch-free, so the static walk
+/// is exact, not an approximation of control flow (the boxes
+/// themselves over-approximate strided gaps, which is conservative).
+#[derive(Debug, Default, Clone, Copy)]
+struct ExtFootprint {
+    /// `[lo, hi)` over all ext-side DMA reads (`ext->SPM` sources).
+    reads: Option<(u64, u64)>,
+    /// `[lo, hi)` over all ext-side DMA writes (`SPM->ext` targets).
+    writes: Option<(u64, u64)>,
+    /// Any stream contains a system barrier.
+    sys_barriers: bool,
+    /// The walk proved a footprint. False when more than one core
+    /// drives the DMA engine (staged-register order would depend on
+    /// timing), a descriptor is malformed, or an address overflows —
+    /// all conservatively treated as "interacts with everyone".
+    analyzable: bool,
+}
+
+/// Walk one part program and extract its [`ExtFootprint`]. The DMA
+/// engine's staged CSR bank evolves in program order within a single
+/// core's stream, so tracking literal `CsrWrite`s and sampling at each
+/// `Launch` reproduces exactly what the engine will decode at runtime.
+fn ext_footprint(n_accels: usize, program: &Program) -> ExtFootprint {
+    use crate::isa::{dma_csr, dma_dir, Instr, SYS_BARRIER_BASE};
+    let dma = n_accels as u8;
+    let mut fp = ExtFootprint { analyzable: true, ..Default::default() };
+    let mut drivers: Vec<usize> = Vec::new();
+    for (ci, stream) in program.streams.iter().enumerate() {
+        let mut drives = false;
+        for i in stream {
+            match i {
+                Instr::Barrier { id, .. } if id.0 >= SYS_BARRIER_BASE => {
+                    fp.sys_barriers = true;
+                }
+                Instr::CsrWrite { unit, .. } | Instr::Launch { unit }
+                    if unit.0 == dma =>
+                {
+                    drives = true;
+                }
+                _ => {}
+            }
+        }
+        if drives {
+            drivers.push(ci);
+        }
+    }
+    if drivers.len() > 1 {
+        fp.analyzable = false;
+        return fp;
+    }
+    let Some(&ci) = drivers.first() else {
+        return fp; // no DMA at all: empty (provably private) footprint
+    };
+    let mut regs = [0u64; dma_csr::N_CONFIG_REGS as usize];
+    for i in &program.streams[ci] {
+        match i {
+            Instr::CsrWrite { unit, reg, val } if unit.0 == dma => {
+                match regs.get_mut(*reg as usize) {
+                    Some(r) => *r = *val,
+                    None => {
+                        fp.analyzable = false;
+                        return fp;
+                    }
+                }
+            }
+            Instr::Launch { unit } if unit.0 == dma => {
+                let rows = regs[dma_csr::ROWS as usize];
+                let row_bytes = regs[dma_csr::ROW_BYTES as usize];
+                if rows == 0 || row_bytes == 0 {
+                    // Would error at runtime: let the sequential driver
+                    // produce the identical error in the same order.
+                    fp.analyzable = false;
+                    return fp;
+                }
+                let (base, stride, is_write) = match regs[dma_csr::DIR as usize] {
+                    dma_dir::EXT_TO_SPM => (
+                        regs[dma_csr::SRC as usize],
+                        regs[dma_csr::SRC_STRIDE as usize] as i64,
+                        false,
+                    ),
+                    dma_dir::SPM_TO_EXT => (
+                        regs[dma_csr::DST as usize],
+                        regs[dma_csr::DST_STRIDE as usize] as i64,
+                        true,
+                    ),
+                    dma_dir::SPM_TO_SPM => continue,
+                    _ => {
+                        fp.analyzable = false;
+                        return fp;
+                    }
+                };
+                let Some(bx) = dma_box(base, rows, row_bytes, stride) else {
+                    fp.analyzable = false;
+                    return fp;
+                };
+                let slot = if is_write { &mut fp.writes } else { &mut fp.reads };
+                *slot = Some(match *slot {
+                    None => bx,
+                    Some((lo, hi)) => (lo.min(bx.0), hi.max(bx.1)),
+                });
+            }
+            _ => {}
+        }
+    }
+    fp
+}
+
+/// `[lo, hi)` bounding box of a 2-D strided transfer, `None` on a
+/// negative-running or overflowing walk (conservatively unanalyzable).
+fn dma_box(base: u64, rows: u64, row_bytes: u64, stride: i64) -> Option<(u64, u64)> {
+    let base = base as i128;
+    let last = base + (rows as i128 - 1) * stride as i128;
+    let lo = base.min(last);
+    let hi = base.max(last) + row_bytes as i128;
+    if lo < 0 || hi > (1i128 << 48) {
+        return None;
+    }
+    Some((lo as u64, hi as u64))
+}
+
+fn boxes_overlap(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> bool {
+    match (a, b) {
+        (Some((al, ah)), Some((bl, bh))) => al < bh && bl < ah,
+        _ => false,
+    }
+}
+
+/// Which members have an *infinite* lookahead horizon (DESIGN.md §14):
+/// no system barriers anywhere in their own program, a provable ext
+/// footprint, and no write/write, write/read, or read/write box
+/// conflict against any other member. Such a member's entire execution
+/// is independent of every neighbor, so the driver may run it to
+/// completion on a worker thread. Conservative by construction — any
+/// doubt keeps the member in the sequential min-cycle loop.
+fn solo_members(foots: &[ExtFootprint]) -> Vec<bool> {
+    let n = foots.len();
+    (0..n)
+        .map(|i| {
+            let f = &foots[i];
+            if !f.analyzable || f.sys_barriers {
+                return false;
+            }
+            (0..n).all(|j| {
+                if i == j {
+                    return true;
+                }
+                let g = &foots[j];
+                // An unanalyzable neighbor could touch anything.
+                g.analyzable
+                    && !boxes_overlap(f.writes, g.writes)
+                    && !boxes_overlap(f.writes, g.reads)
+                    && !boxes_overlap(f.reads, g.writes)
+            })
+        })
+        .collect()
 }
 
 /// Identity of one multi-cluster run for checkpoint matching: every
@@ -928,6 +1377,100 @@ mod tests {
         };
         let err = Cluster::new(&cfg).run(&program).unwrap_err();
         assert!(err.to_string().contains("standalone"), "{err}");
+    }
+
+    #[test]
+    fn noc_pattern_admission_re_decides_and_apply_mirrors_request() {
+        let sys = two_fig6b_system(1);
+        let bits = sys.noc.link_bits;
+        // Live history: four granted beats on consecutive cycles plus
+        // one oversubscribed (denied) beat at the last cycle.
+        let mut live = NocLedger::new(&sys.noc, true);
+        let mut pat = Vec::new();
+        for rel in 0..4u64 {
+            let ok = live.request(100 + rel, bits);
+            assert!(ok);
+            pat.push((rel, bits, ok));
+        }
+        let ok = live.request(103, bits);
+        assert!(!ok);
+        pat.push((3, bits, ok));
+
+        // Empty ledger at the same entry: every decision (grants *and*
+        // the denial, which the overlay reproduces) re-decides
+        // identically — admissible.
+        let fresh = NocLedger::new(&sys.noc, true);
+        assert!(fresh.pattern_admissible(100, &pat));
+        // A neighbor grant inside the window flips a recorded grant to
+        // a denial: the environment changed, the record is a miss.
+        let mut busy = NocLedger::new(&sys.noc, true);
+        assert!(busy.request(101, bits));
+        assert!(!busy.pattern_admissible(100, &pat));
+        // The other direction: a denial recorded under neighbor
+        // pressure cannot replay into a calm window.
+        let mut pressured = NocLedger::new(&sys.noc, true);
+        assert!(pressured.request(200, bits));
+        let denied = pressured.request(200, bits);
+        assert!(!denied);
+        let calm = NocLedger::new(&sys.noc, true);
+        assert!(!calm.pattern_admissible(200, &[(0u64, bits, denied)]));
+
+        // apply_pattern commits exactly the mutations request() made
+        // live: ledger slots, grant/denial counters, busy cycles.
+        let mut replay = NocLedger::new(&sys.noc, true);
+        replay.apply_pattern(100, &pat);
+        assert_eq!(replay.snapshot(), live.snapshot());
+    }
+
+    #[test]
+    fn independent_members_go_solo_and_match_any_thread_count() {
+        let pa = dma_in_program(0, 8, 512);
+        let pb = dma_in_program(8192, 8, 512);
+        // Uncontended link + disjoint ext footprints: both members are
+        // provably independent and take the solo parallel path.
+        let cfg = two_fig6b_system(2);
+        let one = System::new(&cfg).with_threads(Some(1));
+        let base = one.run(&[&pa, &pb]).unwrap();
+        assert_eq!(
+            one.last_run_stats().parallel_members,
+            2,
+            "disjoint DMA footprints must be solo-eligible"
+        );
+        for t in [2usize, 4, 8] {
+            let sys = System::new(&cfg).with_threads(Some(t));
+            let rep = sys.run(&[&pa, &pb]).unwrap();
+            assert_eq!(base, rep, "solo report diverged at threads={t}");
+            let stats = sys.last_run_stats();
+            assert_eq!(stats.threads, t);
+            assert_eq!(stats.parallel_members, 2, "solo split must not depend on threads");
+        }
+        // A contended link disqualifies everyone: the driver stays on
+        // the sequential min-cycle loop and reports still match.
+        let ccfg = two_fig6b_system(1);
+        let cbase = System::new(&ccfg).with_threads(Some(1)).run(&[&pa, &pb]).unwrap();
+        let par = System::new(&ccfg).with_threads(Some(4));
+        let crep = par.run(&[&pa, &pb]).unwrap();
+        assert_eq!(cbase, crep, "sequential fallback diverged across thread counts");
+        assert_eq!(par.last_run_stats().parallel_members, 0);
+        assert_eq!(par.last_run_stats().member_quanta.len(), 2);
+    }
+
+    #[test]
+    fn sys_barriers_disqualify_members_from_the_solo_path() {
+        // Programs with system barriers must never be classified solo,
+        // even on an uncontended link with disjoint footprints.
+        let sb = BarrierId(SYS_BARRIER_BASE);
+        let mut pa = dma_in_program(0, 8, 512);
+        pa.streams[0].push(Instr::Barrier { id: sb, participants: 2 });
+        let mut pb = dma_in_program(8192, 8, 512);
+        pb.streams[0].push(Instr::Barrier { id: sb, participants: 2 });
+        let cfg = two_fig6b_system(2);
+        let sys = System::new(&cfg).with_threads(Some(4));
+        let rep = sys.run(&[&pa, &pb]).unwrap();
+        assert_eq!(sys.last_run_stats().parallel_members, 0);
+        assert_eq!(rep.noc.barrier_releases, 1);
+        let seq = System::new(&cfg).with_threads(Some(1)).run(&[&pa, &pb]).unwrap();
+        assert_eq!(seq, rep);
     }
 
     #[test]

@@ -918,4 +918,14 @@ fn prop_system_config_toml_roundtrip() {
             .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e:#}\n{text}"));
         assert_eq!(back, sys, "seed {seed}: round-trip diverged\n{text}");
     }
+    // The scale-out presets round-trip too (their 8/16-member tables
+    // exercise wider cluster lists than the random generator).
+    for name in ["soc2", "soc4", "soc8", "soc16"] {
+        let sys = SystemConfig::preset(name).unwrap();
+        sys.validate().unwrap_or_else(|e| panic!("{name}: preset invalid: {e:#}"));
+        let text = sys.to_toml();
+        let back = SystemConfig::from_toml(&text)
+            .unwrap_or_else(|e| panic!("{name}: reparse failed: {e:#}\n{text}"));
+        assert_eq!(back, sys, "{name}: preset round-trip diverged");
+    }
 }

@@ -9,17 +9,23 @@
 //!   real);
 //! * engine equivalence — event and exact engines agree on the whole
 //!   `SystemReport` for multi-cluster runs;
-//! * memo soundness rule — multi-cluster members run memo-off
-//!   regardless of the flag (DESIGN.md §9), so memo-on and memo-off
-//!   system reports are equal;
+//! * memo soundness — members memoize under contention via the
+//!   grant-pattern fingerprint (DESIGN.md §14, retiring the former
+//!   §9.4 force-off rule), so memo-on and memo-off system reports are
+//!   byte-identical;
+//! * thread-count invariance — the conservative-PDES driver
+//!   (DESIGN.md §14) produces byte-identical `SystemReport`s at any
+//!   thread budget, for both engines, memo on or off, ledgered or not;
 //! * measurable contention — with more clusters than NoC grants the
 //!   shared link denies beats, and relieving the bottleneck
 //!   (grants >= clusters) strictly helps.
 
-use snax::compiler::{compile, compile_system, CompileOptions, PartitionStrategy};
+use std::sync::Arc;
+
+use snax::compiler::{compile, compile_system, CompileOptions, Graph, PartitionStrategy};
 use snax::config::{ClusterConfig, SystemConfig};
 use snax::models;
-use snax::sim::{Cluster, SimMode, System};
+use snax::sim::{Cluster, PhaseCache, SimMode, System};
 
 #[test]
 fn pipeline_partition_preserves_resnet8_outputs() {
@@ -34,8 +40,10 @@ fn pipeline_partition_preserves_resnet8_outputs() {
     let exact = System::new(&sys).run_mode(&cs.programs(), SimMode::Exact).unwrap();
     assert_eq!(event, exact, "system engines diverged on pipelined resnet8");
 
-    // Memo soundness rule: members run memo-off either way, so the
-    // flag cannot change a multi-cluster report.
+    // Memo soundness (DESIGN.md §14): members memoize with the
+    // grant-pattern fingerprint, and a replay only happens when it
+    // reproduces the live schedule — so the flag cannot change a
+    // multi-cluster report.
     let memo_off = System::new(&sys).with_memo(false).run(&cs.programs()).unwrap();
     assert_eq!(event, memo_off, "memo flag changed a multi-cluster report");
 
@@ -200,6 +208,124 @@ fn soc4_ledger_conserves_per_member() {
     let sys = SystemConfig::preset("soc4").unwrap();
     assert_system_ledger_conserves("soc4/pipeline", &sys, PartitionStrategy::Pipeline);
     assert_system_ledger_conserves("soc4/data", &sys, PartitionStrategy::DataParallel);
+}
+
+/// DESIGN.md §14 byte-identity: the full `SystemReport` must not depend
+/// on the driver thread budget. The solo-vs-sequential member split is
+/// a function of config + programs only, so every thread count — both
+/// engines, memo on or off — reproduces the threads=1 report exactly.
+fn assert_report_thread_invariant(
+    tag: &str,
+    sys: &SystemConfig,
+    g: &Graph,
+    strategy: PartitionStrategy,
+    inferences: u32,
+) {
+    let opts = CompileOptions::sequential().with_inferences(inferences);
+    let cs = compile_system(g, sys, &opts, strategy).unwrap();
+    let progs = cs.programs();
+    for mode in [SimMode::Event, SimMode::Exact] {
+        for memo in [true, false] {
+            let base = System::new(sys)
+                .with_memo(memo)
+                .with_threads(Some(1))
+                .run_mode(&progs, mode)
+                .unwrap();
+            for t in [2usize, 4, 8] {
+                let rep = System::new(sys)
+                    .with_memo(memo)
+                    .with_threads(Some(t))
+                    .run_mode(&progs, mode)
+                    .unwrap();
+                assert_eq!(
+                    base, rep,
+                    "{tag}: report diverged at threads={t} mode={mode:?} memo={memo}"
+                );
+            }
+        }
+    }
+    // Ledger re-attribution (§10) must survive the parallel driver too.
+    let l1 = System::new(sys)
+        .with_ledger(true)
+        .with_threads(Some(1))
+        .run(&progs)
+        .unwrap();
+    let l8 = System::new(sys)
+        .with_ledger(true)
+        .with_threads(Some(8))
+        .run(&progs)
+        .unwrap();
+    assert_eq!(l1, l8, "{tag}: ledgered report diverged at threads=8");
+}
+
+#[test]
+fn soc2_reports_byte_identical_at_any_thread_count() {
+    let sys = SystemConfig::soc2();
+    let resnet = models::resnet8_graph();
+    let fig6a = models::fig6a_graph();
+    assert_report_thread_invariant("soc2/pipeline", &sys, &resnet, PartitionStrategy::Pipeline, 2);
+    assert_report_thread_invariant("soc2/data", &sys, &fig6a, PartitionStrategy::DataParallel, 2);
+}
+
+#[test]
+fn soc4_reports_byte_identical_at_any_thread_count() {
+    let sys = SystemConfig::preset("soc4").unwrap();
+    let resnet = models::resnet8_graph();
+    let fig6a = models::fig6a_graph();
+    assert_report_thread_invariant("soc4/pipeline", &sys, &resnet, PartitionStrategy::Pipeline, 2);
+    assert_report_thread_invariant("soc4/data", &sys, &fig6a, PartitionStrategy::DataParallel, 4);
+}
+
+#[test]
+fn soc8_reports_byte_identical_at_any_thread_count() {
+    let sys = SystemConfig::preset("soc8").unwrap();
+    let resnet = models::resnet8_graph();
+    let fig6a = models::fig6a_graph();
+    assert_report_thread_invariant("soc8/pipeline", &sys, &resnet, PartitionStrategy::Pipeline, 1);
+    assert_report_thread_invariant("soc8/data", &sys, &fig6a, PartitionStrategy::DataParallel, 8);
+}
+
+#[test]
+fn soc16_reports_byte_identical_at_any_thread_count() {
+    // 16-stage pipelining exceeds the demo graphs' node counts, so the
+    // scale-out preset is exercised data-parallel (one shard inference
+    // per member keeps all 16 busy).
+    let sys = SystemConfig::preset("soc16").unwrap();
+    let fig6a = models::fig6a_graph();
+    assert_report_thread_invariant("soc16/data", &sys, &fig6a, PartitionStrategy::DataParallel, 16);
+}
+
+#[test]
+fn memo_under_contention_matches_memo_off_and_mismatches_miss() {
+    // soc2 data-parallel over one grant/cycle: both shards stream
+    // concurrently, so member phases record non-empty grant patterns.
+    let g = models::fig6a_graph();
+    let sys = SystemConfig::soc2();
+    let opts = CompileOptions::sequential().with_inferences(4);
+    let cs = compile_system(&g, &sys, &opts, PartitionStrategy::DataParallel).unwrap();
+    let progs = cs.programs();
+
+    let off = System::new(&sys).with_memo(false).run(&progs).unwrap();
+    assert!(off.noc.denied > 0, "leg requires real contention: {:?}", off.noc);
+
+    let cache = Arc::new(PhaseCache::new(1 << 14));
+    let on = System::new(&sys).with_phase_cache(cache.clone()).run(&progs).unwrap();
+    assert_eq!(off, on, "memo under contention changed a system report");
+    let cold = cache.stats();
+    assert!(cold.insertions > 0, "contended members recorded no phases: {cold:?}");
+
+    // Warm shared cache, identical run: a record replays only when its
+    // grant pattern re-decides identically against the live ledger
+    // (DESIGN.md §14). Any environment mismatch is a cache miss — the
+    // phase re-simulates — never a wrong replay, so the bytes cannot
+    // move either way.
+    let warm = System::new(&sys).with_phase_cache(cache.clone()).run(&progs).unwrap();
+    assert_eq!(off, warm, "warm-cache contended replay diverged");
+    let stats = cache.stats();
+    assert!(
+        stats.hits > cold.hits || stats.misses > cold.misses,
+        "second run never consulted the cache: {stats:?}"
+    );
 }
 
 #[test]
